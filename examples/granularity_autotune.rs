@@ -1,0 +1,66 @@
+//! The §III-D experiment as a library user would run it: autotune the
+//! thread granularity of every SqueezeNet layer for a chosen device,
+//! print the Fig.-10-style curve for a layer, and validate the plan on
+//! the real `conv_g` engine.
+//!
+//! ```sh
+//! cargo run --release --example granularity_autotune -- --device s7 --layer fire6_expand1
+//! ```
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use mobile_convnet::convnet::vectorized::{conv2d_g, hwc_to_chw4, valid_gs, VectorizedFilterBank};
+use mobile_convnet::coordinator::PlanCache;
+use mobile_convnet::model::SqueezeNet;
+use mobile_convnet::simulator::autotune::autotune_layer;
+use mobile_convnet::simulator::device::{DeviceProfile, Precision};
+use mobile_convnet::simulator::tables::short_label;
+use mobile_convnet::util::cli::Args;
+use mobile_convnet::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let device = DeviceProfile::by_id(args.get_or("device", "n5")).context("unknown device")?;
+    let layer = args.get_or("layer", "fire6_expand1").to_string();
+
+    let net = SqueezeNet::v1_0();
+    let spec = net.conv_by_name(&layer).with_context(|| format!("unknown layer {layer}"))?;
+
+    // 1. the model's curve (a Fig. 10 line)
+    println!("{} on {} — simulated time vs g:", short_label(&layer), device.name);
+    let curve = autotune_layer(spec, Precision::Precise, &device);
+    for (g, t) in &curve.points {
+        let marker = if *g == curve.optimal().0 { "  <-- optimal" } else { "" };
+        println!("  g={g:<3} {:>8.2} ms ({}-bound){marker}", t.total_ms(), t.bound());
+    }
+
+    // 2. the whole-network plan from the cache
+    let cache = PlanCache::new();
+    let plan: HashMap<String, usize> = cache.plan_map(&device, Precision::Precise);
+    println!("\nfull-network plan ({} layers):", plan.len());
+    for spec in net.table_i_layers() {
+        print!("{}=G{} ", short_label(&spec.name), plan[&spec.name]);
+    }
+    println!();
+
+    // 3. validate on the real conv_g engine at reduced scale
+    let small = SqueezeNet::with_input(56);
+    let sspec = small.conv_by_name(&layer).unwrap();
+    let mut rng = Rng::new(7);
+    let hwio = rng.vec_f32(sspec.k * sspec.k * sspec.cin * sspec.cout, -0.5, 0.5);
+    let bias = rng.vec_f32(sspec.cout, -0.1, 0.1);
+    let img = rng.vec_f32(sspec.hw_in * sspec.hw_in * sspec.cin, 0.0, 1.0);
+    let bank = VectorizedFilterBank::from_hwio(&hwio, sspec.k, sspec.cin, sspec.cout);
+    let input = hwc_to_chw4(&img, sspec.hw_in, sspec.hw_in, sspec.cin);
+    println!("\nreal conv_g wall-clock at 56px (shape comparison):");
+    for g in valid_gs(sspec.cout) {
+        let t0 = Instant::now();
+        for _ in 0..5 {
+            std::hint::black_box(conv2d_g(&input, &bank, &bias, sspec, g, true, false));
+        }
+        println!("  g={g:<3} {:>8.3} ms", t0.elapsed().as_secs_f64() * 1e3 / 5.0);
+    }
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Batch classification + the §IV-B imprecise-computing experiment:
+//! classify a synthetic corpus with both precisions and report top-1
+//! agreement (the paper found 10 000/10 000 identical predictions).
+//!
+//! ```sh
+//! cargo run --release --example image_classify -- --count 32
+//! ```
+
+use anyhow::Result;
+use mobile_convnet::coordinator::{Coordinator, CoordinatorConfig};
+use mobile_convnet::model::ImageCorpus;
+use mobile_convnet::runtime::artifacts;
+use mobile_convnet::simulator::device::Precision;
+use mobile_convnet::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let count = args.get_usize("count", 32).map_err(|e| anyhow::anyhow!(e))?;
+    let seed = args.get_u64("seed", 2012).map_err(|e| anyhow::anyhow!(e))?;
+
+    let dir = artifacts::default_dir();
+    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    let coordinator = Coordinator::start(CoordinatorConfig::new(dir))?;
+    let corpus = ImageCorpus::new(seed);
+
+    let mut agree = 0usize;
+    let mut precise_ms = 0.0;
+    let mut imprecise_ms = 0.0;
+    for i in 0..count as u64 {
+        let img = corpus.image(i);
+        let p = coordinator.infer(img.clone(), Precision::Precise, false)?;
+        let q = coordinator.infer(img, Precision::Imprecise, false)?;
+        precise_ms += p.latency.as_secs_f64() * 1e3;
+        imprecise_ms += q.latency.as_secs_f64() * 1e3;
+        if p.top1 == q.top1 {
+            agree += 1;
+        } else {
+            println!("image {i}: precise={} imprecise={} DIFFER", p.top1, q.top1);
+        }
+    }
+    println!(
+        "top-1 agreement: {agree}/{count} ({:.2}%)  [paper: 10000/10000 on ILSVRC-2012 val]",
+        100.0 * agree as f64 / count as f64
+    );
+    println!(
+        "mean latency on this host: precise {:.1} ms, imprecise {:.1} ms",
+        precise_ms / count as f64,
+        imprecise_ms / count as f64
+    );
+    Ok(())
+}

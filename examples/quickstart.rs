@@ -1,0 +1,47 @@
+//! Quickstart: load the AOT artifacts, run one real SqueezeNet
+//! inference through the PJRT runtime, and print the simulated
+//! mobile-device cost of the same inference.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use mobile_convnet::coordinator::{Coordinator, CoordinatorConfig};
+use mobile_convnet::model::ImageCorpus;
+use mobile_convnet::runtime::artifacts;
+use mobile_convnet::simulator::device::Precision;
+
+fn main() -> Result<()> {
+    let dir = artifacts::default_dir();
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    // Start the coordinator: compiles the HLO artifacts on the PJRT CPU
+    // client and uploads the weights once.
+    println!("starting coordinator (compiling artifacts)...");
+    let mut cfg = CoordinatorConfig::new(dir);
+    cfg.batches = vec![1];
+    let coordinator = Coordinator::start(cfg)?;
+
+    // One synthetic image (the stand-in for an ILSVRC photo).
+    let image = ImageCorpus::new(42).image(0);
+
+    for precision in [Precision::Precise, Precision::Imprecise] {
+        let resp = coordinator.infer(image.clone(), precision, true)?;
+        println!(
+            "\n{} inference: class {} (p={:.4}), {:.1} ms on this host",
+            precision.label(),
+            resp.top1,
+            resp.top5[0].1,
+            resp.latency.as_secs_f64() * 1e3
+        );
+        println!("  simulated on the paper's devices:");
+        for s in &resp.sim {
+            println!("    {:<10} {:>8.1} ms  {:>7.3} J", s.device, s.latency_ms, s.energy_j);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! **End-to-end driver** (EXPERIMENTS.md §E2E): start the full serving
+//! stack — PJRT runtime + dynamic batcher + TCP JSON-lines server —
+//! then run a closed-loop load generator against it and report
+//! latency/throughput and batch formation, exactly like a serving-paper
+//! evaluation.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve -- --requests 48 --clients 6
+//! ```
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+use mobile_convnet::coordinator::{server, Coordinator, CoordinatorConfig};
+use mobile_convnet::runtime::artifacts;
+use mobile_convnet::simulator::device::Precision;
+use mobile_convnet::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let requests = args.get_usize("requests", 48).map_err(|e| anyhow::anyhow!(e))?;
+    let clients = args.get_usize("clients", 6).map_err(|e| anyhow::anyhow!(e))?;
+
+    let dir = artifacts::default_dir();
+    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+
+    println!("compiling executables (precise+imprecise x batch 1,2,4,8)...");
+    let coordinator = Arc::new(Coordinator::start(CoordinatorConfig::new(dir))?);
+
+    // Start the TCP server on an ephemeral port.
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let srv_coord = coordinator.clone();
+    let srv_stop = stop.clone();
+    let server_handle = std::thread::spawn(move || {
+        server::serve(srv_coord, "127.0.0.1:0", srv_stop, move |addr| {
+            let _ = addr_tx.send(addr);
+        })
+    });
+    let addr = addr_rx.recv()?;
+    println!("server listening on {addr}");
+
+    // Closed-loop load generation over real TCP.
+    let per_client = requests / clients;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let addr = addr.to_string();
+        handles.push(std::thread::spawn(move || -> Result<Vec<f64>> {
+            let mut client = server::Client::connect(&addr)?;
+            let mut latencies = Vec::new();
+            for i in 0..per_client {
+                let reply = client.infer_seed(
+                    7,
+                    (c * per_client + i) as u64,
+                    Precision::Imprecise,
+                    false,
+                )?;
+                latencies.push(reply.latency_ms);
+            }
+            Ok(latencies)
+        }));
+    }
+    let mut all: Vec<f64> = Vec::new();
+    for h in handles {
+        all.extend(h.join().expect("client thread")?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| all[((all.len() - 1) as f64 * p) as usize];
+    println!(
+        "\n{} requests / {clients} clients in {wall:.2} s -> {:.1} req/s",
+        all.len(),
+        all.len() as f64 / wall
+    );
+    println!(
+        "server-side latency: p50 {:.1} ms  p95 {:.1} ms  p99 {:.1} ms",
+        pct(0.50),
+        pct(0.95),
+        pct(0.99)
+    );
+
+    // Telemetry from the server itself.
+    let mut client = server::Client::connect(&addr.to_string())?;
+    println!("\nserver telemetry:\n{}", client.stats()?);
+    client.quit()?;
+    let _ = server_handle.join();
+    Ok(())
+}

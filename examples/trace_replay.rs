@@ -1,0 +1,56 @@
+//! Open-loop trace replay against the live coordinator: generate a
+//! Poisson / bursty arrival trace, replay it on schedule, and report
+//! the latency distribution plus admission-control behaviour under
+//! overload.
+//!
+//! ```sh
+//! cargo run --release --example trace_replay -- --requests 40 --rate 15 --burst
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use mobile_convnet::coordinator::trace::{replay, Arrival, Trace};
+use mobile_convnet::coordinator::{Coordinator, CoordinatorConfig};
+use mobile_convnet::model::ImageCorpus;
+use mobile_convnet::runtime::artifacts;
+use mobile_convnet::util::cli::Args;
+use mobile_convnet::util::stats;
+
+fn main() -> Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let n = args.get_usize("requests", 40).map_err(|e| anyhow::anyhow!(e))?;
+    let rate = args.get_f64("rate", 15.0).map_err(|e| anyhow::anyhow!(e))?;
+    let bursty = args.flag("burst");
+
+    let dir = artifacts::default_dir();
+    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    println!("starting coordinator...");
+    let coordinator = Arc::new(Coordinator::start(CoordinatorConfig::new(dir))?);
+
+    let arrival = if bursty {
+        Arrival::Bursty { rate_per_s: rate, burst_every: 10, burst_len: 5, burst_mult: 4.0 }
+    } else {
+        Arrival::Poisson { rate_per_s: rate }
+    };
+    let trace = Trace::generate(n, arrival, 0.5, 77);
+    println!(
+        "trace: {} arrivals over {:.2} s (offered {:.1} req/s, 50% imprecise{})",
+        trace.entries.len(),
+        trace.span().as_secs_f64(),
+        trace.offered_rate(),
+        if bursty { ", bursty" } else { "" }
+    );
+
+    let corpus = ImageCorpus::new(13);
+    let report = replay(&coordinator, &trace, &corpus)?;
+    println!("\n{}", report.summary());
+    if let Some(s) = stats::summarize(&report.latencies_ms) {
+        println!(
+            "latency mean {:.1} ms (σ {:.1}), range [{:.1}, {:.1}] ms",
+            s.mean, s.std, s.min, s.max
+        );
+    }
+    println!("\ncoordinator telemetry:\n{}", coordinator.telemetry.report());
+    Ok(())
+}

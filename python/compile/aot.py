@@ -1,0 +1,197 @@
+"""AOT compile path: lower the L2 model to HLO **text** artifacts.
+
+Python runs exactly once (``make artifacts``); the Rust coordinator is
+self-contained afterwards.  The interchange format is HLO text, not
+``.serialize()``: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version behind the ``xla`` crate)
+rejects; the text parser reassigns ids and round-trips cleanly.
+
+Artifacts written to ``--out-dir`` (default ``../artifacts``):
+
+- ``squeezenet_xla_{precise,imprecise}_b{1,2,4,8}.hlo.txt`` — the hot-path
+  executables (pure-lax lowering; fast XLA-CPU compile).
+- ``squeezenet_pallas_precise_b1.hlo.txt`` — the same network lowered
+  through the Layer-1 Pallas kernels (interpret mode), proving the three
+  layers compose end to end.
+- ``conv1_pallas_b1.hlo.txt`` — a single Pallas conv1 layer, used by the
+  runtime micro-benchmarks.
+- ``weights.bin`` — the seeded synthetic parameters in argument order.
+- ``manifest.json`` — the shared contract: parameter order/shapes,
+  artifact descriptions, layer table, seed.
+
+Usage: ``python -m compile.aot [--out-dir DIR] [--seed N] [--skip-pallas]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import struct
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+HOT_PATH_BATCHES = (1, 2, 4, 8)
+WEIGHTS_MAGIC = b"MCNW"
+WEIGHTS_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_weights_bin(path: pathlib.Path, params: list[jax.Array]) -> None:
+    """Binary weight dump: magic, version, count, then per-parameter
+    ``u16 name_len | name | u8 ndim | u32 dims.. | f32 data`` (LE).
+    Parsed by ``rust/src/model/weights.rs``."""
+    specs = model.param_specs()
+    assert len(specs) == len(params)
+    with open(path, "wb") as f:
+        f.write(WEIGHTS_MAGIC)
+        f.write(struct.pack("<II", WEIGHTS_VERSION, len(params)))
+        for (name, shape), arr in zip(specs, params):
+            data = np.asarray(arr, dtype=np.float32)
+            assert data.shape == shape, (name, data.shape, shape)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", data.ndim))
+            for d in data.shape:
+                f.write(struct.pack("<I", d))
+            f.write(data.tobytes(order="C"))
+
+
+def lower_model(params, *, batch: int, impl: str, precision: str) -> str:
+    """Lower a batched forward pass; weights are runtime arguments so the
+    Rust side owns them (one HLO serves any weight set)."""
+
+    def fn(x, *flat_params):
+        return (model.forward(x, flat_params, impl=impl, precision=precision),)
+
+    x_spec = jax.ShapeDtypeStruct(
+        (batch, model.INPUT_HW, model.INPUT_HW, model.INPUT_CHANNELS), jnp.float32
+    )
+    p_specs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+    lowered = jax.jit(fn).lower(x_spec, *p_specs)
+    return to_hlo_text(lowered)
+
+
+def lower_conv1_pallas(params) -> str:
+    """Single Pallas conv1 layer (the paper's most expensive layer)."""
+    from .kernels import conv2d_nhwc
+
+    def fn(x, w, b):
+        return (
+            conv2d_nhwc(
+                x, w, b, stride=model.CONV1_STRIDE, padding=0, relu=True
+            ),
+        )
+
+    x_spec = jax.ShapeDtypeStruct(
+        (model.INPUT_HW, model.INPUT_HW, model.INPUT_CHANNELS), jnp.float32
+    )
+    w, b = params[0], params[1]
+    lowered = jax.jit(fn).lower(
+        x_spec,
+        jax.ShapeDtypeStruct(w.shape, w.dtype),
+        jax.ShapeDtypeStruct(b.shape, b.dtype),
+    )
+    return to_hlo_text(lowered)
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(compat) stamp file path")
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument(
+        "--skip-pallas",
+        action="store_true",
+        help="skip the (slow to lower) Pallas artifacts",
+    )
+    args = ap.parse_args(argv)
+    out_dir = pathlib.Path(args.out_dir)
+    if args.out:
+        out_dir = pathlib.Path(args.out).parent
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    params = model.init_params(args.seed)
+    write_weights_bin(out_dir / "weights.bin", params)
+    print(f"weights.bin: {len(params)} arrays, {model.num_params()} scalars")
+
+    artifacts = []
+
+    def emit(name: str, text: str, **meta):
+        path = out_dir / name
+        path.write_text(text)
+        artifacts.append(dict(file=name, bytes=len(text), **meta))
+        print(f"{name}: {len(text) / 1e6:.2f} MB")
+
+    for precision in ("precise", "imprecise"):
+        for batch in HOT_PATH_BATCHES:
+            t0 = time.time()
+            text = lower_model(params, batch=batch, impl="xla", precision=precision)
+            emit(
+                f"squeezenet_xla_{precision}_b{batch}.hlo.txt",
+                text,
+                impl="xla",
+                precision=precision,
+                batch=batch,
+                lower_s=round(time.time() - t0, 2),
+            )
+
+    if not args.skip_pallas:
+        t0 = time.time()
+        text = lower_model(params, batch=1, impl="pallas", precision="precise")
+        emit(
+            "squeezenet_pallas_precise_b1.hlo.txt",
+            text,
+            impl="pallas",
+            precision="precise",
+            batch=1,
+            lower_s=round(time.time() - t0, 2),
+        )
+        t0 = time.time()
+        emit(
+            "conv1_pallas_b1.hlo.txt",
+            lower_conv1_pallas(params),
+            impl="pallas",
+            precision="precise",
+            batch=1,
+            layer="conv1",
+            lower_s=round(time.time() - t0, 2),
+        )
+
+    manifest = dict(
+        seed=args.seed,
+        num_params=model.num_params(),
+        params=[dict(name=n, shape=list(s)) for n, s in model.param_specs()],
+        input_shape=[model.INPUT_HW, model.INPUT_HW, model.INPUT_CHANNELS],
+        num_classes=model.NUM_CLASSES,
+        hot_path_batches=list(HOT_PATH_BATCHES),
+        artifacts=artifacts,
+        layer_table=model.layer_table(),
+    )
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if args.out:
+        # Makefile stamp: the declared target file must exist and be newest.
+        pathlib.Path(args.out).write_text(
+            json.dumps({"generated": [a["file"] for a in artifacts]})
+        )
+    print(f"manifest.json: {len(artifacts)} artifacts")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,0 +1,28 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+The paper's RenderScript float4 convolution, re-thought for TPU:
+
+- the paper's channel-vectorized CHW4 layout generalizes to keeping the
+  channel dimension minor (the 128-wide lane axis of TPU vregs);
+- the paper's thread granularity ``g`` (outputs computed per thread)
+  becomes the output-channel block size ``block_m`` of the Pallas grid;
+- the paper's "zero-overhead vectorization" (each layer emits its output
+  already in the vectorized layout) becomes: every kernel writes tiles in
+  the exact layout the next layer's BlockSpec consumes, so the lowered
+  HLO contains no relayout ops between layers.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness target
+and real-TPU efficiency is estimated analytically (DESIGN.md §9).
+"""
+
+from .conv2d import conv2d_nhwc, default_block_m, valid_block_ms
+from .pool import avgpool_global, maxpool_nhwc
+
+__all__ = [
+    "conv2d_nhwc",
+    "default_block_m",
+    "valid_block_ms",
+    "maxpool_nhwc",
+    "avgpool_global",
+]

@@ -1,0 +1,170 @@
+"""Pallas channel-vectorized 2-D convolution (Layer 1).
+
+Maps the paper's parallel algorithm (§III) onto a Pallas grid:
+
+- **one grid step per output-channel block** — the analog of the paper's
+  ``conv_g`` thread that computes ``g`` output elements across output
+  layers.  Within a step, the input window is read once and reused for
+  every output channel in the block: exactly the data-reuse argument of
+  §III-D, expressed as VMEM residency instead of thread-local registers.
+- **kernel-position accumulation** — instead of materializing im2col, we
+  loop over the K×K taps; each tap contributes a (H·W, Cin) × (Cin, bm)
+  matmul that maps straight onto the MXU systolic array (the TPU
+  replacement for the float4 ``dot()`` SIMD built-in of §III-B).
+- **zero-overhead layout** (§III-C) — the output tile is written in NHWC
+  with channels minor, which is precisely the layout the next layer's
+  BlockSpec reads; no reorder pass exists anywhere in the network.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def valid_block_ms(num_out_channels: int, lane: int = 4) -> list[int]:
+    """Valid output-channel block sizes for a layer.
+
+    The paper (§III-D) requires ``numOutputLayers / g`` divisible by the
+    vector width; the Pallas analog is that ``block_m`` must divide the
+    channel count so the grid tiles it exactly, and stay a multiple of
+    the packing lane where possible.
+    """
+    out = [
+        bm
+        for bm in range(1, num_out_channels + 1)
+        if num_out_channels % bm == 0 and (bm % lane == 0 or bm == num_out_channels or bm < lane)
+    ]
+    return out
+
+
+def default_block_m(num_out_channels: int, cap: int = 128) -> int:
+    """Largest valid block size not exceeding ``cap``.
+
+    §Perf: the cap is 128 — the MXU systolic-array width — so wide
+    layers (expand3, conv10) present full-width tiles to the MXU; the
+    VMEM footprint of the largest resulting tile set is ~5 MB, well
+    inside the 16 MB budget with double-buffering headroom
+    (EXPERIMENTS.md §Perf-L1).
+    """
+    best = 1
+    for bm in valid_block_ms(num_out_channels):
+        if bm <= cap and bm > best:
+            best = bm
+    return best
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, stride, out_h, out_w, acc_dtype):
+    """One grid step: all spatial positions × one block of output channels.
+
+    x_ref: (H_pad, W_pad, Cin)   — full padded input (resident in VMEM)
+    w_ref: (kh, kw, Cin, bm)     — weight tile for this channel block
+    b_ref: (bm,)                 — bias tile
+    o_ref: (out_h, out_w, bm)    — output tile, written in consumable layout
+    """
+    cin = x_ref.shape[-1]
+    bm = o_ref.shape[-1]
+    x = x_ref[...]
+    acc = jnp.zeros((out_h * out_w, bm), dtype=acc_dtype)
+    # Kernel-position accumulation: K*K MXU matmuls, no im2col buffer.
+    for i in range(kh):
+        for j in range(kw):
+            window = jax.lax.slice(
+                x,
+                (i, j, 0),
+                (i + (out_h - 1) * stride + 1, j + (out_w - 1) * stride + 1, cin),
+                (stride, stride, 1),
+            )  # (out_h, out_w, cin)
+            lhs = window.reshape(out_h * out_w, cin)
+            acc = acc + jnp.dot(
+                lhs, w_ref[i, j], preferred_element_type=acc_dtype
+            )
+    acc = acc + b_ref[...].astype(acc_dtype)
+    o_ref[...] = acc.reshape(out_h, out_w, bm).astype(o_ref.dtype)
+
+
+def conv2d_nhwc(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+    block_m: int | None = None,
+    relu: bool = False,
+    acc_dtype=jnp.float32,
+    interpret: bool = True,
+) -> jax.Array:
+    """Channel-vectorized convolution for a single image.
+
+    Args:
+      x: input feature maps, ``(H, W, Cin)`` (channels minor — the CHW4
+        generalization).
+      w: filter bank, ``(K, K, Cin, M)``.
+      b: bias, ``(M,)``.
+      stride: spatial stride ``S`` of the sliding window.
+      padding: symmetric zero padding.
+      block_m: output channels per grid step — the granularity ``g``.
+        ``None`` picks :func:`default_block_m`.
+      relu: fuse a ReLU into the output write.
+      acc_dtype: accumulator dtype (f32 even for bf16 inputs — the MXU
+        analog of "precise accumulation").
+      interpret: must stay True on CPU PJRT (Mosaic custom-calls cannot
+        run there).
+
+    Returns:
+      ``(H_out, W_out, M)`` output feature maps, channels minor.
+    """
+    kh, kw, cin, m = w.shape
+    if x.ndim != 3:
+        raise ValueError(f"conv2d_nhwc expects (H, W, Cin), got {x.shape}")
+    if x.shape[-1] != cin:
+        raise ValueError(f"channel mismatch: x has {x.shape[-1]}, w has {cin}")
+    if b.shape != (m,):
+        raise ValueError(f"bias shape {b.shape} != ({m},)")
+    if stride < 1:
+        raise ValueError("stride must be >= 1")
+    bm = block_m if block_m is not None else default_block_m(m)
+    if m % bm != 0:
+        raise ValueError(f"block_m={bm} must divide num output channels {m}")
+
+    if padding:
+        x = jnp.pad(x, ((padding, padding), (padding, padding), (0, 0)))
+    h_pad, w_pad, _ = x.shape
+    out_h = (h_pad - kh) // stride + 1
+    out_w = (w_pad - kw) // stride + 1
+    if out_h < 1 or out_w < 1:
+        raise ValueError(
+            f"kernel {kh}x{kw} stride {stride} does not fit input {h_pad}x{w_pad}"
+        )
+
+    kernel = functools.partial(
+        _conv_kernel,
+        kh=kh,
+        kw=kw,
+        stride=stride,
+        out_h=out_h,
+        out_w=out_w,
+        acc_dtype=acc_dtype,
+    )
+    grid = (m // bm,)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # Full input resident per step: the paper's "load window once,
+            # reuse for every output layer in the granule".
+            pl.BlockSpec((h_pad, w_pad, cin), lambda i: (0, 0, 0)),
+            pl.BlockSpec((kh, kw, cin, bm), lambda i: (0, 0, 0, i)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((out_h, out_w, bm), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((out_h, out_w, m), x.dtype),
+        interpret=interpret,
+    )(x, w, b)
+    if relu:
+        out = jnp.maximum(out, 0)
+    return out

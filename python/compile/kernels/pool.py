@@ -1,0 +1,94 @@
+"""Pallas pooling kernels (Layer 1).
+
+The paper implements max/average pooling "analogous to convolution
+layers" with the vectorized ``fmax``/``sum`` built-ins (§III-E).  Here the
+same structure holds: a Pallas grid over channel blocks, window reduction
+by strided slicing, channels kept minor so the output feeds the next
+conv with zero relayout.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .conv2d import default_block_m
+
+
+def _maxpool_kernel(x_ref, o_ref, *, k, stride, out_h, out_w):
+    c = x_ref.shape[-1]
+    x = x_ref[...]
+    acc = jnp.full((out_h, out_w, c), -jnp.inf, dtype=x.dtype)
+    for i in range(k):
+        for j in range(k):
+            window = jax.lax.slice(
+                x,
+                (i, j, 0),
+                (i + (out_h - 1) * stride + 1, j + (out_w - 1) * stride + 1, c),
+                (stride, stride, 1),
+            )
+            acc = jnp.maximum(acc, window)
+    o_ref[...] = acc
+
+
+def maxpool_nhwc(
+    x: jax.Array,
+    *,
+    k: int = 3,
+    stride: int = 2,
+    block_c: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Max pooling over ``(H, W, C)`` with channels minor.
+
+    SqueezeNet uses the (ceil-mode-free) 3x3/2 variant; output size
+    follows the floor convention ``(H - k) // stride + 1``.
+    """
+    if x.ndim != 3:
+        raise ValueError(f"maxpool_nhwc expects (H, W, C), got {x.shape}")
+    h, w, c = x.shape
+    out_h = (h - k) // stride + 1
+    out_w = (w - k) // stride + 1
+    if out_h < 1 or out_w < 1:
+        raise ValueError(f"pool window {k}/{stride} does not fit input {h}x{w}")
+    bc = block_c if block_c is not None else default_block_m(c, cap=128)
+    if c % bc != 0:
+        raise ValueError(f"block_c={bc} must divide channels {c}")
+    kernel = functools.partial(
+        _maxpool_kernel, k=k, stride=stride, out_h=out_h, out_w=out_w
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(c // bc,),
+        in_specs=[pl.BlockSpec((h, w, bc), lambda i: (0, 0, i))],
+        out_specs=pl.BlockSpec((out_h, out_w, bc), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((out_h, out_w, c), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def _avgpool_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    h, w, _ = x.shape
+    o_ref[...] = jnp.sum(x, axis=(0, 1)) / jnp.asarray(h * w, dtype=x.dtype)
+
+
+def avgpool_global(x: jax.Array, *, block_c: int | None = None, interpret: bool = True) -> jax.Array:
+    """Global average pooling: ``(H, W, C) -> (C,)`` (SqueezeNet's head)."""
+    if x.ndim != 3:
+        raise ValueError(f"avgpool_global expects (H, W, C), got {x.shape}")
+    h, w, c = x.shape
+    bc = block_c if block_c is not None else default_block_m(c, cap=128)
+    if c % bc != 0:
+        raise ValueError(f"block_c={bc} must divide channels {c}")
+    return pl.pallas_call(
+        _avgpool_kernel,
+        grid=(c // bc,),
+        in_specs=[pl.BlockSpec((h, w, bc), lambda i: (0, 0, i))],
+        out_specs=pl.BlockSpec((bc,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((c,), x.dtype),
+        interpret=interpret,
+    )(x)

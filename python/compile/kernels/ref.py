@@ -1,0 +1,63 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is written with ``jax.lax`` primitives only — no Pallas —
+and serves as the numerical ground truth for ``python/tests`` and as the
+fast XLA execution path lowered for the Rust hot loop (the Pallas path is
+lowered separately to prove three-layer composition).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_nhwc_ref(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+    relu: bool = False,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """Reference conv over ``(H, W, Cin)`` with ``(K, K, Cin, M)`` filters."""
+    lhs = x[None].astype(x.dtype)  # (1, H, W, Cin)
+    out = jax.lax.conv_general_dilated(
+        lhs,
+        w,
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=acc_dtype,
+    )[0]
+    out = (out + b.astype(acc_dtype)).astype(x.dtype)
+    if relu:
+        out = jnp.maximum(out, 0)
+    return out
+
+
+def maxpool_nhwc_ref(x: jax.Array, *, k: int = 3, stride: int = 2) -> jax.Array:
+    """Reference max pool over ``(H, W, C)`` (floor output convention)."""
+    out = jax.lax.reduce_window(
+        x[None],
+        -jnp.inf if jnp.issubdtype(x.dtype, jnp.floating) else jnp.iinfo(x.dtype).min,
+        jax.lax.max,
+        window_dimensions=(1, k, k, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )[0]
+    return out.astype(x.dtype)
+
+
+def avgpool_global_ref(x: jax.Array) -> jax.Array:
+    """Reference global average pool: ``(H, W, C) -> (C,)``."""
+    return jnp.mean(x, axis=(0, 1))
+
+
+def softmax_ref(logits: jax.Array) -> jax.Array:
+    """Numerically-stable softmax over the last axis."""
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

@@ -1,0 +1,232 @@
+"""Layer-2: SqueezeNet v1.0 forward pass in JAX.
+
+The paper (§II, §IV) accelerates SqueezeNet: two plain convolutional
+layers (conv1, conv10), eight fire modules (fire2–fire9), three max-pool
+stages, global average pooling and softmax.  This module defines:
+
+- the architecture table (:data:`FIRE_SPECS`, :func:`layer_table`),
+- seeded synthetic parameter generation (:func:`init_params`) — the
+  paper's pretrained ILSVRC weights are not needed because every claim we
+  reproduce is about runtime/energy/numerics, not accuracy (DESIGN.md §2),
+- the forward pass (:func:`forward`) in two implementations
+  (``impl="xla"`` pure-lax oracle / hot path, ``impl="pallas"`` the
+  Layer-1 kernels) and two precisions (``precise`` f32, ``imprecise``
+  bf16 compute with f32 accumulation — the TPU analog of RenderScript's
+  relaxed/imprecise FP modes, §IV-B).
+
+Everything here is build-time only; ``aot.py`` lowers ``forward`` to HLO
+text for the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import avgpool_global, conv2d_nhwc, default_block_m, maxpool_nhwc
+from .kernels import ref
+
+# (squeeze_1x1, expand_1x1, expand_3x3) per fire module, fire2..fire9.
+FIRE_SPECS: tuple[tuple[int, int, int], ...] = (
+    (16, 64, 64),
+    (16, 64, 64),
+    (32, 128, 128),
+    (32, 128, 128),
+    (48, 192, 192),
+    (48, 192, 192),
+    (64, 256, 256),
+    (64, 256, 256),
+)
+
+INPUT_HW = 224
+INPUT_CHANNELS = 3
+NUM_CLASSES = 1000
+CONV1_FILTERS = 96
+CONV1_K = 7
+CONV1_STRIDE = 2
+POOL_AFTER = {"conv1", "fire4", "fire8"}  # 3x3/2 max pool after these
+
+
+def param_specs() -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list of every parameter — the AOT argument
+    order contract shared with the Rust side via ``manifest.json``."""
+    specs: list[tuple[str, tuple[int, ...]]] = [
+        ("conv1_w", (CONV1_K, CONV1_K, INPUT_CHANNELS, CONV1_FILTERS)),
+        ("conv1_b", (CONV1_FILTERS,)),
+    ]
+    cin = CONV1_FILTERS
+    for idx, (s, e1, e3) in enumerate(FIRE_SPECS, start=2):
+        specs += [
+            (f"fire{idx}_squeeze_w", (1, 1, cin, s)),
+            (f"fire{idx}_squeeze_b", (s,)),
+            (f"fire{idx}_expand1_w", (1, 1, s, e1)),
+            (f"fire{idx}_expand1_b", (e1,)),
+            (f"fire{idx}_expand3_w", (3, 3, s, e3)),
+            (f"fire{idx}_expand3_b", (e3,)),
+        ]
+        cin = e1 + e3
+    specs += [
+        ("conv10_w", (1, 1, cin, NUM_CLASSES)),
+        ("conv10_b", (NUM_CLASSES,)),
+    ]
+    return specs
+
+
+def num_params() -> int:
+    """Total scalar parameter count (~1.25M for SqueezeNet v1.0)."""
+    return sum(int(np.prod(shape)) for _, shape in param_specs())
+
+
+def init_params(seed: int = 42) -> list[jax.Array]:
+    """He-scaled seeded synthetic parameters, in :func:`param_specs` order."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for name, shape in param_specs():
+        if name.endswith("_b"):
+            arr = np.zeros(shape, dtype=np.float32)
+        else:
+            fan_in = int(np.prod(shape[:-1]))
+            arr = rng.standard_normal(shape).astype(np.float32) * np.sqrt(2.0 / fan_in)
+        params.append(jnp.asarray(arr))
+    return params
+
+
+def _conv(x, w, b, *, stride, padding, relu, impl, compute_dtype, block_m=None):
+    """One convolution in the selected implementation and precision."""
+    if compute_dtype != x.dtype:
+        x = x.astype(compute_dtype)
+    w = w.astype(compute_dtype)
+    b = b.astype(jnp.float32)
+    if impl == "pallas":
+        return conv2d_nhwc(
+            x, w, b, stride=stride, padding=padding, relu=relu,
+            block_m=block_m, acc_dtype=jnp.float32,
+        )
+    return ref.conv2d_nhwc_ref(
+        x, w, b, stride=stride, padding=padding, relu=relu, acc_dtype=jnp.float32
+    )
+
+
+def _maxpool(x, *, impl):
+    if impl == "pallas":
+        return maxpool_nhwc(x, k=3, stride=2)
+    return ref.maxpool_nhwc_ref(x, k=3, stride=2)
+
+
+def _avgpool(x, *, impl):
+    if impl == "pallas":
+        return avgpool_global(x)
+    return ref.avgpool_global_ref(x)
+
+
+def forward_single(
+    x: jax.Array,
+    params: Iterable[jax.Array],
+    *,
+    impl: str = "xla",
+    precision: str = "precise",
+    block_ms: dict[str, int] | None = None,
+) -> jax.Array:
+    """SqueezeNet forward for one ``(224, 224, 3)`` image → 1000 logits.
+
+    ``precision="imprecise"`` keeps activations/weights in bf16 between
+    layers (relaxed-FP pipeline) with f32 accumulation inside each dot —
+    mirroring how RenderScript's imprecise mode relaxes the arithmetic
+    but each dot still accumulates in a register.
+    """
+    if impl not in ("xla", "pallas"):
+        raise ValueError(f"unknown impl {impl!r}")
+    if precision not in ("precise", "imprecise"):
+        raise ValueError(f"unknown precision {precision!r}")
+    compute_dtype = jnp.float32 if precision == "precise" else jnp.bfloat16
+    block_ms = block_ms or {}
+    p = list(params)
+    it = iter(p)
+
+    def take():
+        return next(it)
+
+    def bm(name: str, m: int) -> int | None:
+        if impl != "pallas":
+            return None
+        return block_ms.get(name, default_block_m(m))
+
+    conv = functools.partial(_conv, impl=impl, compute_dtype=compute_dtype)
+
+    # conv1 + pool1
+    w, b = take(), take()
+    x = conv(x, w, b, stride=CONV1_STRIDE, padding=0, relu=True,
+             block_m=bm("conv1", CONV1_FILTERS))
+    x = _maxpool(x, impl=impl)
+
+    # fire2..fire9 (+ pools after fire4 / fire8)
+    for idx, (s, e1, e3) in enumerate(FIRE_SPECS, start=2):
+        sw, sb = take(), take()
+        e1w, e1b = take(), take()
+        e3w, e3b = take(), take()
+        sq = conv(x, sw, sb, stride=1, padding=0, relu=True,
+                  block_m=bm(f"fire{idx}_squeeze", s))
+        ex1 = conv(sq, e1w, e1b, stride=1, padding=0, relu=True,
+                   block_m=bm(f"fire{idx}_expand1", e1))
+        ex3 = conv(sq, e3w, e3b, stride=1, padding=1, relu=True,
+                   block_m=bm(f"fire{idx}_expand3", e3))
+        # channel-minor concat: stays in the vectorized layout, zero reorder
+        x = jnp.concatenate([ex1, ex3], axis=-1)
+        if f"fire{idx}" in POOL_AFTER:
+            x = _maxpool(x, impl=impl)
+
+    # conv10 + global average pool -> logits
+    w, b = take(), take()
+    x = conv(x, w, b, stride=1, padding=0, relu=True,
+             block_m=bm("conv10", NUM_CLASSES))
+    logits = _avgpool(x, impl=impl)
+    return logits.astype(jnp.float32)
+
+
+def forward(
+    x: jax.Array,
+    params: Iterable[jax.Array],
+    *,
+    impl: str = "xla",
+    precision: str = "precise",
+    block_ms: dict[str, int] | None = None,
+) -> jax.Array:
+    """Batched forward: ``(N, 224, 224, 3) -> (N, 1000)`` logits."""
+    params = list(params)
+    fn = functools.partial(
+        forward_single, impl=impl, precision=precision, block_ms=block_ms
+    )
+    return jax.vmap(lambda img: fn(img, params))(x)
+
+
+def layer_table() -> list[dict]:
+    """Shape/FLOP table of every convolutional layer, used by tests and
+    mirrored (independently re-derived) by ``rust/src/model/graph.rs``."""
+    rows = []
+    hw = INPUT_HW
+    cin = INPUT_CHANNELS
+
+    def add(name, k, stride, pad, cin, cout, hw_in):
+        hw_out = (hw_in + 2 * pad - k) // stride + 1
+        macs = hw_out * hw_out * cout * cin * k * k
+        rows.append(dict(name=name, k=k, stride=stride, pad=pad, cin=cin,
+                         cout=cout, hw_in=hw_in, hw_out=hw_out, macs=macs))
+        return hw_out
+
+    hw = add("conv1", CONV1_K, CONV1_STRIDE, 0, cin, CONV1_FILTERS, hw)
+    hw = (hw - 3) // 2 + 1  # pool1
+    cin = CONV1_FILTERS
+    for idx, (s, e1, e3) in enumerate(FIRE_SPECS, start=2):
+        add(f"fire{idx}_squeeze", 1, 1, 0, cin, s, hw)
+        add(f"fire{idx}_expand1", 1, 1, 0, s, e1, hw)
+        hw_new = add(f"fire{idx}_expand3", 3, 1, 1, s, e3, hw)
+        assert hw_new == hw
+        cin = e1 + e3
+        if f"fire{idx}" in POOL_AFTER:
+            hw = (hw - 3) // 2 + 1
+    add("conv10", 1, 1, 0, cin, NUM_CLASSES, hw)
+    return rows

@@ -1,0 +1,15 @@
+"""Shared pytest fixtures for the kernel/model test suite."""
+
+import sys
+import pathlib
+
+import numpy as np
+import pytest
+
+# Allow `from compile import ...` when pytest runs from python/.
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0xC0FFEE)

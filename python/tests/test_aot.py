@@ -1,0 +1,94 @@
+"""AOT path tests: weights.bin format, manifest contents, HLO text
+properties (the contract consumed by the Rust runtime)."""
+
+import json
+import pathlib
+import struct
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def out_dir(tmp_path_factory):
+    """A small AOT run (batch 1 only, no pallas) into a temp dir."""
+    d = tmp_path_factory.mktemp("artifacts")
+    old = aot.HOT_PATH_BATCHES
+    aot.HOT_PATH_BATCHES = (1,)
+    try:
+        aot.main(["--out-dir", str(d), "--seed", "7", "--skip-pallas"])
+    finally:
+        aot.HOT_PATH_BATCHES = old
+    return d
+
+
+class TestWeightsBin:
+    def test_header_and_count(self, out_dir):
+        raw = (out_dir / "weights.bin").read_bytes()
+        assert raw[:4] == b"MCNW"
+        version, count = struct.unpack_from("<II", raw, 4)
+        assert version == 1
+        assert count == len(model.param_specs())
+
+    def test_round_trip_first_param(self, out_dir):
+        raw = (out_dir / "weights.bin").read_bytes()
+        off = 12
+        (name_len,) = struct.unpack_from("<H", raw, off)
+        off += 2
+        name = raw[off : off + name_len].decode()
+        off += name_len
+        assert name == "conv1_w"
+        (ndim,) = struct.unpack_from("<B", raw, off)
+        off += 1
+        dims = struct.unpack_from(f"<{ndim}I", raw, off)
+        assert list(dims) == [7, 7, 3, 96]
+
+    def test_total_size(self, out_dir):
+        raw = (out_dir / "weights.bin").read_bytes()
+        # data alone is 4 bytes per scalar; header adds a bit
+        assert len(raw) > 4 * model.num_params()
+        assert len(raw) < 4 * model.num_params() + 4096
+
+
+class TestManifest:
+    def test_contract_fields(self, out_dir):
+        m = json.loads((out_dir / "manifest.json").read_text())
+        assert m["seed"] == 7
+        assert m["num_params"] == model.num_params()
+        assert m["input_shape"] == [224, 224, 3]
+        assert m["num_classes"] == 1000
+        names = [p["name"] for p in m["params"]]
+        assert names == [n for n, _ in model.param_specs()]
+
+    def test_artifacts_enumerated(self, out_dir):
+        m = json.loads((out_dir / "manifest.json").read_text())
+        files = {a["file"] for a in m["artifacts"]}
+        assert "squeezenet_xla_precise_b1.hlo.txt" in files
+        assert "squeezenet_xla_imprecise_b1.hlo.txt" in files
+        for a in m["artifacts"]:
+            assert (out_dir / a["file"]).exists()
+
+
+class TestHloText:
+    def test_parses_as_hlo_module(self, out_dir):
+        import re
+
+        text = (out_dir / "squeezenet_xla_precise_b1.hlo.txt").read_text()
+        assert text.startswith("HloModule")
+        # 52 weight params + 1 input = 53 distinct entry parameters
+        param_ids = set(re.findall(r"parameter\((\d+)\)", text))
+        assert len(param_ids) == 53
+        # tuple-rooted (return_tuple=True contract with the Rust loader)
+        assert "tuple(" in text
+
+    def test_imprecise_uses_bf16(self, out_dir):
+        precise = (out_dir / "squeezenet_xla_precise_b1.hlo.txt").read_text()
+        imprecise = (out_dir / "squeezenet_xla_imprecise_b1.hlo.txt").read_text()
+        assert "bf16" not in precise
+        assert "bf16" in imprecise
+
+    def test_convolutions_present(self, out_dir):
+        text = (out_dir / "squeezenet_xla_precise_b1.hlo.txt").read_text()
+        # 26 convolutional layers lower to convolution/dot ops
+        assert text.count("convolution") + text.count(" dot(") >= 26

@@ -1,0 +1,179 @@
+"""Layer-1 correctness: the Pallas kernels against the pure-jnp oracle.
+
+This is the core numerical signal of the reproduction: the paper's
+channel-vectorized convolution with output-channel granularity must be
+bit-comparable (to f32 tolerance) with the textbook convolution for
+every shape/stride/padding/granularity combination — including the
+zero-overhead layout property (output of layer N feeds layer N+1 with no
+relayout).
+
+Hypothesis drives the shape sweep.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    avgpool_global,
+    conv2d_nhwc,
+    default_block_m,
+    maxpool_nhwc,
+    valid_block_ms,
+)
+from compile.kernels.ref import (
+    avgpool_global_ref,
+    conv2d_nhwc_ref,
+    maxpool_nhwc_ref,
+    softmax_ref,
+)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+# ------------------------------------------------------------ conv2d
+
+
+class TestConvBasics:
+    def test_identity_1x1(self, rng):
+        x = _rand(rng, 5, 5, 4)
+        w = jnp.eye(4, dtype=jnp.float32).reshape(1, 1, 4, 4)
+        b = jnp.zeros(4, jnp.float32)
+        out = conv2d_nhwc(x, w, b, block_m=4)
+        np.testing.assert_allclose(out, x, rtol=1e-6)
+
+    def test_bias_and_relu(self, rng):
+        x = _rand(rng, 4, 4, 4)
+        w = jnp.zeros((1, 1, 4, 8), jnp.float32)
+        b = jnp.asarray([-1.0, 1.0] * 4, dtype=jnp.float32)
+        out = conv2d_nhwc(x, w, b, relu=True, block_m=8)
+        expect = np.tile([0.0, 1.0], 4)
+        np.testing.assert_allclose(out[0, 0], expect)
+
+    def test_matches_ref_conv1_shape(self, rng):
+        # The paper's most expensive layer at reduced spatial size.
+        x = _rand(rng, 31, 31, 3)
+        w = _rand(rng, 7, 7, 3, 8)
+        b = _rand(rng, 8)
+        got = conv2d_nhwc(x, w, b, stride=2, padding=0, relu=True, block_m=4)
+        want = conv2d_nhwc_ref(x, w, b, stride=2, padding=0, relu=True)
+        assert got.shape == (13, 13, 8)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_rejects_bad_args(self, rng):
+        x = _rand(rng, 5, 5, 4)
+        w = _rand(rng, 3, 3, 4, 8)
+        b = _rand(rng, 8)
+        with pytest.raises(ValueError):
+            conv2d_nhwc(x, w, b, block_m=3)  # does not divide 8
+        with pytest.raises(ValueError):
+            conv2d_nhwc(x, w, _rand(rng, 7))  # bad bias
+        with pytest.raises(ValueError):
+            conv2d_nhwc(x, _rand(rng, 3, 3, 5, 8), b)  # cin mismatch
+        with pytest.raises(ValueError):
+            conv2d_nhwc(x, w, b, stride=0)
+
+    def test_zero_overhead_chaining(self, rng):
+        # Output of one kernel call is directly the input of the next —
+        # the §III-C property. Compare a 2-layer chain against the ref.
+        x = _rand(rng, 9, 9, 4)
+        w1, b1 = _rand(rng, 3, 3, 4, 8), _rand(rng, 8)
+        w2, b2 = _rand(rng, 1, 1, 8, 12), _rand(rng, 12)
+        got = conv2d_nhwc(
+            conv2d_nhwc(x, w1, b1, padding=1, relu=True, block_m=4),
+            w2, b2, relu=True, block_m=4,
+        )
+        want = conv2d_nhwc_ref(
+            conv2d_nhwc_ref(x, w1, b1, padding=1, relu=True), w2, b2, relu=True
+        )
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+class TestBlockSizes:
+    def test_valid_block_ms_rule(self):
+        assert 4 in valid_block_ms(64)
+        assert 64 in valid_block_ms(64)
+        assert 3 not in valid_block_ms(64)
+        # every entry divides the channel count
+        for bm in valid_block_ms(96):
+            assert 96 % bm == 0
+
+    def test_default_block_m_caps(self):
+        # §Perf: cap is the MXU width (128)
+        assert default_block_m(1000) <= 128
+        assert 1000 % default_block_m(1000) == 0
+        assert default_block_m(16) == 16
+        assert default_block_m(96) <= 128
+        assert 96 % default_block_m(96) == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.sampled_from([1, 3]),
+    cin=st.sampled_from([3, 4, 8, 16]),
+    cout_stacks=st.integers(1, 4),
+    hw=st.integers(5, 12),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_matches_ref_hypothesis(k, cin, cout_stacks, hw, stride, seed):
+    """Property: conv2d_nhwc == lax conv for random shapes, strides,
+    paddings, and every valid block size."""
+    rng = np.random.default_rng(seed)
+    cout = 4 * cout_stacks
+    pad = 1 if k == 3 else 0
+    x = jnp.asarray(rng.standard_normal((hw, hw, cin), dtype=np.float32))
+    w = jnp.asarray(rng.standard_normal((k, k, cin, cout), dtype=np.float32))
+    b = jnp.asarray(rng.standard_normal(cout, dtype=np.float32))
+    bms = valid_block_ms(cout)
+    bm = bms[seed % len(bms)]
+    got = conv2d_nhwc(x, w, b, stride=stride, padding=pad, block_m=bm)
+    want = conv2d_nhwc_ref(x, w, b, stride=stride, padding=pad)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    hw=st.integers(4, 16),
+    c_stacks=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_maxpool_matches_ref_hypothesis(hw, c_stacks, seed):
+    rng = np.random.default_rng(seed)
+    c = 4 * c_stacks
+    x = jnp.asarray(rng.standard_normal((hw, hw, c), dtype=np.float32))
+    got = maxpool_nhwc(x, k=3, stride=2)
+    want = maxpool_nhwc_ref(x, k=3, stride=2)
+    np.testing.assert_allclose(got, want)
+
+
+# ------------------------------------------------------------ pooling
+
+
+class TestPooling:
+    def test_maxpool_known_values(self):
+        x = jnp.arange(25, dtype=jnp.float32).reshape(5, 5, 1)
+        x = jnp.tile(x, (1, 1, 4))
+        out = maxpool_nhwc(x, k=3, stride=2, block_c=4)
+        assert out.shape == (2, 2, 4)
+        np.testing.assert_allclose(out[:, :, 0], [[12, 14], [22, 24]])
+
+    def test_maxpool_rejects_too_small(self, rng):
+        with pytest.raises(ValueError):
+            maxpool_nhwc(_rand(rng, 2, 2, 4), k=3, stride=2)
+
+    def test_avgpool_global(self, rng):
+        x = _rand(rng, 6, 7, 8)
+        got = avgpool_global(x, block_c=4)
+        want = avgpool_global_ref(x)
+        assert got.shape == (8,)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_softmax_ref_properties(self, rng):
+        logits = _rand(rng, 10)
+        p = softmax_ref(logits)
+        np.testing.assert_allclose(jnp.sum(p), 1.0, rtol=1e-6)
+        assert int(jnp.argmax(p)) == int(jnp.argmax(logits))

@@ -1,0 +1,116 @@
+"""Layer-2 tests: SqueezeNet architecture, precision variants, and the
+Pallas/XLA implementation agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(0)
+
+
+@pytest.fixture(scope="module")
+def image(rng=None):
+    r = np.random.default_rng(1)
+    return jnp.asarray(r.random((1, 224, 224, 3), dtype=np.float32))
+
+
+class TestArchitecture:
+    def test_param_count(self):
+        # SqueezeNet v1.0: ~1.25M parameters.
+        assert model.num_params() == 1_248_424
+
+    def test_param_specs_order(self):
+        specs = model.param_specs()
+        assert specs[0][0] == "conv1_w"
+        assert specs[1][0] == "conv1_b"
+        assert specs[-2][0] == "conv10_w"
+        assert len(specs) == 52  # 2 + 8 fires * 6 + 2
+
+    def test_layer_table(self):
+        rows = model.layer_table()
+        assert len(rows) == 26
+        conv1 = rows[0]
+        assert conv1["hw_out"] == 109
+        conv10 = rows[-1]
+        assert conv10["cin"] == 512 and conv10["cout"] == 1000
+        # expand3 layers preserve spatial size (pad 1)
+        for r in rows:
+            if r["name"].endswith("expand3"):
+                assert r["hw_in"] == r["hw_out"]
+
+    def test_fire_specs_monotone_channels(self):
+        # SqueezeNet's fires widen monotonically (v1.0 schedule).
+        widths = [e1 + e3 for _, e1, e3 in model.FIRE_SPECS]
+        assert widths == sorted(widths)
+
+
+class TestForward:
+    def test_logit_shape(self, params, image):
+        logits = model.forward(image, params)
+        assert logits.shape == (1, 1000)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_batch_consistency(self, params, image):
+        batch = jnp.concatenate([image, image * 0.5], axis=0)
+        single = model.forward(image, params)
+        batched = model.forward(batch, params)
+        np.testing.assert_allclose(batched[0], single[0], rtol=1e-5, atol=1e-5)
+
+    def test_imprecise_top1_agreement(self, params):
+        # §IV-B: relaxed-precision execution must not change top-1
+        # predictions. bf16 is a much coarser relaxation than
+        # RenderScript's, so require high-but-not-perfect agreement.
+        r = np.random.default_rng(7)
+        x = jnp.asarray(r.random((8, 224, 224, 3), dtype=np.float32))
+        precise = jax.jit(lambda x, *p: model.forward(x, p, precision="precise"))(x, *params)
+        imprecise = jax.jit(lambda x, *p: model.forward(x, p, precision="imprecise"))(x, *params)
+        agree = int(jnp.sum(jnp.argmax(precise, -1) == jnp.argmax(imprecise, -1)))
+        assert agree >= 7, f"top-1 agreement {agree}/8 too low"
+
+    def test_rejects_unknown_flags(self, params, image):
+        with pytest.raises(ValueError):
+            model.forward(image, params, impl="cuda")
+        with pytest.raises(ValueError):
+            model.forward(image, params, precision="half")
+
+
+class TestPallasPath:
+    def test_pallas_matches_xla_small(self, params):
+        # Full network through the Layer-1 Pallas kernels vs the lax
+        # oracle; 224px is slow in interpret mode, so use a crop of the
+        # graph: the first fire module on a small input.
+        r = np.random.default_rng(3)
+        x = jnp.asarray(r.random((32, 32, 96), dtype=np.float32))
+        # fire2 params are entries 2..8 in AOT order
+        sw, sb, e1w, e1b, e3w, e3b = params[2:8]
+        from compile.kernels import conv2d_nhwc
+        from compile.kernels.ref import conv2d_nhwc_ref
+
+        sq_p = conv2d_nhwc(x, sw, sb, relu=True)
+        sq_r = conv2d_nhwc_ref(x, sw, sb, relu=True)
+        np.testing.assert_allclose(sq_p, sq_r, rtol=3e-5, atol=3e-5)
+        cat_p = jnp.concatenate(
+            [conv2d_nhwc(sq_p, e1w, e1b, relu=True),
+             conv2d_nhwc(sq_p, e3w, e3b, padding=1, relu=True)],
+            axis=-1,
+        )
+        cat_r = jnp.concatenate(
+            [conv2d_nhwc_ref(sq_r, e1w, e1b, relu=True),
+             conv2d_nhwc_ref(sq_r, e3w, e3b, padding=1, relu=True)],
+            axis=-1,
+        )
+        np.testing.assert_allclose(cat_p, cat_r, rtol=3e-5, atol=3e-5)
+
+    @pytest.mark.slow
+    def test_pallas_full_network(self, params):
+        r = np.random.default_rng(5)
+        x = jnp.asarray(r.random((1, 224, 224, 3), dtype=np.float32))
+        lp = model.forward(x, params, impl="pallas")
+        lx = model.forward(x, params, impl="xla")
+        np.testing.assert_allclose(lp, lx, rtol=2e-4, atol=2e-4)

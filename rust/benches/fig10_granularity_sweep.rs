@@ -1,0 +1,56 @@
+//! Bench/regenerator for **Figure 10**: execution time of SqueezeNet's
+//! 13 Table-I layers vs thread granularity on the Nexus 5 model.
+//!
+//! Emits the per-layer (g, ms) series the figure plots, checks the two
+//! shape claims programmatically (g=1 never optimal; interior optimum),
+//! and sweeps the real Rust `conv_g` reference on one layer to show the
+//! same U-shape exists in executable code, not just in the model.
+
+use std::time::Instant;
+
+use mobile_convnet::convnet::vectorized::{conv2d_g, hwc_to_chw4, valid_gs, VectorizedFilterBank};
+use mobile_convnet::model::SqueezeNet;
+use mobile_convnet::simulator::device::{DeviceProfile, Precision};
+use mobile_convnet::simulator::tables;
+use mobile_convnet::util::bench::Bencher;
+use mobile_convnet::util::rng::Rng;
+
+fn main() {
+    let device = DeviceProfile::nexus_5();
+    println!("{}", tables::render_fig10(&device));
+
+    // Shape checks (the figure's headline observations).
+    let curves = tables::fig10_curves(&device, Precision::Precise);
+    let mut g1_worst = 0;
+    for c in &curves {
+        let (gopt, _) = c.optimal();
+        assert_ne!(gopt, 1, "{}: g=1 must not be optimal", c.layer);
+        if (c.points[0].1.total_ms() - c.pessimal().1).abs() < 1e-9 {
+            g1_worst += 1;
+        }
+    }
+    println!("layers where g=1 is the single worst point: {g1_worst}/13");
+
+    // The same U-shape on the real executable conv_g (fire6_expand1,
+    // wall-clock, single-threaded for determinism).
+    let net = SqueezeNet::with_input(56); // small spatial size: quick
+    let spec = net.conv_by_name("fire6_expand1").unwrap();
+    let mut rng = Rng::new(1);
+    let hwio = rng.vec_f32(spec.k * spec.k * spec.cin * spec.cout, -0.5, 0.5);
+    let bias = rng.vec_f32(spec.cout, -0.1, 0.1);
+    let img = rng.vec_f32(spec.hw_in * spec.hw_in * spec.cin, 0.0, 1.0);
+    let bank = VectorizedFilterBank::from_hwio(&hwio, spec.k, spec.cin, spec.cout);
+    let input = hwc_to_chw4(&img, spec.hw_in, spec.hw_in, spec.cin);
+    println!("\nreal conv_g wall-clock (fire6_expand1 @ {}x{}):", spec.hw_in, spec.hw_in);
+    for g in valid_gs(spec.cout) {
+        let t0 = Instant::now();
+        let iters = 5;
+        for _ in 0..iters {
+            std::hint::black_box(conv2d_g(&input, &bank, &bias, spec, g, true, false));
+        }
+        println!("  g={g:<3} {:>9.3} ms", t0.elapsed().as_secs_f64() * 1e3 / iters as f64);
+    }
+
+    let mut b = Bencher::from_env();
+    b.bench("fig10/sweep_13_layers_nexus5", || tables::fig10_curves(&device, Precision::Precise));
+}

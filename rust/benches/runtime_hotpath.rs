@@ -1,0 +1,68 @@
+//! Hot-path benchmark (ours, not a paper table): real PJRT execution
+//! latency/throughput through the runtime and coordinator — the numbers
+//! the §Perf pass in EXPERIMENTS.md optimizes.
+//!
+//! Requires `make artifacts`.
+
+use std::time::Instant;
+
+use mobile_convnet::coordinator::{plan_batches, Coordinator, CoordinatorConfig};
+use mobile_convnet::model::ImageCorpus;
+use mobile_convnet::runtime::{artifacts, RuntimeEngine};
+use mobile_convnet::simulator::device::Precision;
+use mobile_convnet::util::bench::Bencher;
+
+fn main() {
+    let dir = artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP runtime_hotpath: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let mut b = Bencher::from_env();
+
+    // --- raw executor latency per (precision, batch) ---
+    let engine = RuntimeEngine::load(
+        &dir,
+        &[Precision::Precise, Precision::Imprecise],
+        &[1, 2, 4, 8],
+    )
+    .expect("runtime load");
+    let corpus = ImageCorpus::new(0);
+    for precision in [Precision::Precise, Precision::Imprecise] {
+        for batch in [1usize, 4, 8] {
+            let exe = engine.executor(precision, batch).unwrap();
+            let input = corpus.batch(0, batch);
+            let stats = b.bench(
+                &format!("executor/{}/b{batch}", precision.label()),
+                || exe.infer(&input).unwrap(),
+            );
+            let per_img = stats.mean.as_secs_f64() * 1e3 / batch as f64;
+            println!("    -> {per_img:.2} ms/image, {:.1} img/s", 1e3 / per_img);
+        }
+    }
+
+    // --- batching policy microbenchmark ---
+    b.bench("batcher/plan_batches_q13", || plan_batches(13, &[1, 2, 4, 8]));
+
+    // --- end-to-end coordinator throughput, batch formation enabled ---
+    drop(engine);
+    let mut cfg = CoordinatorConfig::new(dir);
+    cfg.precisions = vec![Precision::Imprecise];
+    let coordinator = Coordinator::start(cfg).expect("coordinator");
+    let n = 32;
+    let t0 = Instant::now();
+    let receivers: Vec<_> = (0..n)
+        .map(|i| coordinator.submit(corpus.image(i as u64), Precision::Imprecise, false).unwrap())
+        .collect();
+    for rx in receivers {
+        rx.recv().unwrap().unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "coordinator/e2e: {n} concurrent requests in {:.2} s -> {:.1} req/s (mean batch {:.2})",
+        dt,
+        n as f64 / dt,
+        coordinator.telemetry.counters.mean_batch_size()
+    );
+    println!("{}", coordinator.telemetry.report());
+}

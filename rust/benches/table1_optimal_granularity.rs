@@ -1,0 +1,21 @@
+//! Bench/regenerator for **Table I**: optimal thread granularities for
+//! SqueezeNet on the three device profiles.
+//!
+//! Prints the reproduced table (paper row order) and times a full
+//! 13-layer × 3-device autotuning pass.
+
+use mobile_convnet::simulator::device::Precision;
+use mobile_convnet::simulator::tables;
+use mobile_convnet::util::bench::Bencher;
+
+fn main() {
+    println!("{}", tables::render_table_i());
+    println!("paper (for comparison):");
+    println!("  Galaxy S7: G6 G8 G4 G8 G8 G8 G8 G4 G4 G12 G12 G6 G4");
+    println!("  Nexus 6P : G6 G8 G4 G8 G4 G8 G4 G8 G4 G16 G6  G6 G6");
+    println!("  Nexus 5  : G12 G8 G16 G8 G16 G8 G8 G32 G8 G12 G12 G12 G12");
+    println!();
+    let mut b = Bencher::from_env();
+    b.bench("table_i/full_autotune_3_devices", || tables::table_i(Precision::Precise));
+    b.bench("table_i/full_autotune_imprecise", || tables::table_i(Precision::Imprecise));
+}

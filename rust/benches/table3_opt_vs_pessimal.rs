@@ -1,0 +1,27 @@
+//! Bench/regenerator for **Table III**: execution time with optimal vs
+//! pessimal thread granularity (fire layers vs plain conv layers).
+
+use mobile_convnet::simulator::device::Precision;
+use mobile_convnet::simulator::tables;
+use mobile_convnet::util::bench::Bencher;
+
+fn main() {
+    println!("{}", tables::render_table_iii());
+    println!("paper: fire 3.17X/2.31X/2.56X, conv 1.43X/1.52X/1.92X, overall 2.52X/2.02X/2.28X");
+    println!();
+
+    // The paper's aggregate claim: "choosing optimal granularity over
+    // pessimal improves the execution time by at least 2X".
+    for row in tables::table_iii(Precision::Precise) {
+        assert!(
+            row.overall_speedup() >= 1.7,
+            "{}: overall opt/pess speedup {:.2} too small",
+            row.device,
+            row.overall_speedup()
+        );
+    }
+    println!("claim check: optimal-vs-pessimal ~>=2X on every device ... OK");
+
+    let mut b = Bencher::from_env();
+    b.bench("table_iii/generate", || tables::table_iii(Precision::Precise));
+}

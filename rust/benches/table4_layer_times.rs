@@ -1,0 +1,78 @@
+//! Bench/regenerator for **Table IV**: per-macro-layer execution time
+//! (sequential / precise parallel / imprecise parallel × 3 devices).
+//!
+//! Also cross-checks the *real* execution engines at reduced scale: the
+//! Rust sequential loop nest vs the vectorized conv_g engine, confirming
+//! the parallel implementation wins on this machine too, not only in
+//! the device model.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use mobile_convnet::convnet::{run_squeezenet, ConvImpl};
+use mobile_convnet::model::SqueezeNet;
+use mobile_convnet::simulator::tables;
+use mobile_convnet::util::bench::Bencher;
+use mobile_convnet::util::rng::Rng;
+
+fn main() {
+    println!("{}", tables::render_table_iv());
+
+    // Real-engine cross-check at 112x112 input (same topology).
+    let net = SqueezeNet::with_input(112);
+    let weights = toy_weights(&net, 3);
+    let image = Rng::new(9).vec_f32(112 * 112 * 3, 0.0, 1.0);
+
+    let t0 = Instant::now();
+    let seq = run_squeezenet(&net, &weights, &image, &ConvImpl::Sequential).unwrap();
+    let t_seq = t0.elapsed();
+
+    let plan: HashMap<String, usize> = net
+        .conv_layers()
+        .iter()
+        .map(|c| {
+            let gs = mobile_convnet::convnet::vectorized::valid_gs(c.cout);
+            (c.name.clone(), gs[gs.len() / 2])
+        })
+        .collect();
+    let t0 = Instant::now();
+    let vec = run_squeezenet(&net, &weights, &image, &ConvImpl::Vectorized { plan, parallel: true })
+        .unwrap();
+    let t_vec = t0.elapsed();
+
+    assert_eq!(seq.top1, vec.top1, "engines disagree");
+    println!(
+        "real engines @112px: sequential {:.1} ms, vectorized(conv_g, parallel) {:.1} ms ({:.1}X)",
+        t_seq.as_secs_f64() * 1e3,
+        t_vec.as_secs_f64() * 1e3,
+        t_seq.as_secs_f64() / t_vec.as_secs_f64()
+    );
+
+    let mut b = Bencher::from_env();
+    b.bench("table_iv/generate", tables::table_iv);
+}
+
+fn toy_weights(net: &SqueezeNet, seed: u64) -> mobile_convnet::model::WeightStore {
+    let mut rng = Rng::new(seed);
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"MCNW");
+    bytes.extend_from_slice(&1u32.to_le_bytes());
+    let specs = net.param_specs();
+    bytes.extend_from_slice(&(specs.len() as u32).to_le_bytes());
+    for (name, shape) in &specs {
+        bytes.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        bytes.extend_from_slice(name.as_bytes());
+        bytes.push(shape.len() as u8);
+        for d in shape {
+            bytes.extend_from_slice(&(*d as u32).to_le_bytes());
+        }
+        let n: usize = shape.iter().product();
+        let fan_in: usize = shape[..shape.len().saturating_sub(1)].iter().product();
+        let scale = if name.ends_with("_b") { 0.0 } else { (2.0 / fan_in.max(1) as f32).sqrt() };
+        for _ in 0..n {
+            let v: f32 = rng.range_f32(-1.0, 1.0) * scale;
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    mobile_convnet::model::WeightStore::parse(&bytes).unwrap()
+}

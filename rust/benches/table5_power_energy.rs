@@ -1,0 +1,31 @@
+//! Bench/regenerator for **Table V**: power and energy consumption of
+//! SqueezeNet using sequential and (imprecise) parallel algorithms.
+
+use mobile_convnet::simulator::tables;
+use mobile_convnet::util::bench::Bencher;
+
+fn main() {
+    println!("{}", tables::render_table_v());
+    println!("paper: energy ratios 29.88X (S7), 17.43X (6P), 249.47X (N5);");
+    println!("       parallel per-image energy 0.106–0.569 J");
+    println!();
+
+    // Headline claims: >10X energy win everywhere; parallel energy in
+    // the sub-joule band the abstract advertises ("half a joule").
+    let rows = tables::table_v();
+    for r in &rows {
+        assert!(r.energy_ratio() > 10.0, "{}: ratio {:.1}", r.device, r.energy_ratio());
+        assert!(
+            r.imp_energy_j < 1.0,
+            "{}: parallel energy {:.3} J should be sub-joule",
+            r.device,
+            r.imp_energy_j
+        );
+    }
+    let n5 = rows.iter().find(|r| r.device == "Nexus 5").unwrap();
+    assert!(rows.iter().all(|r| n5.energy_ratio() >= r.energy_ratio()));
+    println!("claim check: >10X energy win on all devices, max on Nexus 5 ... OK");
+
+    let mut b = Bencher::from_env();
+    b.bench("table_v/generate", tables::table_v);
+}

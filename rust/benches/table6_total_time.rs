@@ -1,0 +1,34 @@
+//! Bench/regenerator for **Table VI**: total SqueezeNet execution time
+//! and speedups (sequential / precise parallel / imprecise parallel).
+
+use mobile_convnet::simulator::tables;
+use mobile_convnet::util::bench::Bencher;
+
+fn main() {
+    println!("{}", tables::render_table_vi());
+    println!("paper: precise speedups 28.24X/44.55X/74.68X;");
+    println!("       imprecise speedups 59.54X/133.89X/310.74X;");
+    println!("       imprecise totals 207.1/129.21/141.38 ms");
+    println!();
+
+    // Headline claims: parallel >= ~28X; imprecise within the paper's
+    // "less than a quarter of a second" bound; ordering S7 < 6P < N5
+    // on speedup.
+    let rows = tables::table_vi();
+    for r in &rows {
+        assert!(r.precise_speedup() > 20.0, "{}: {:.1}X", r.device, r.precise_speedup());
+        assert!(r.imprecise_speedup() > r.precise_speedup());
+        assert!(
+            r.imprecise_ms < 250.0,
+            "{}: imprecise total {:.1} ms should be < a quarter second",
+            r.device,
+            r.imprecise_ms
+        );
+    }
+    let by = |name: &str| rows.iter().find(|r| r.device == name).unwrap().precise_speedup();
+    assert!(by("Nexus 5") > by("Nexus 6P") && by("Nexus 6P") > by("Galaxy S7"));
+    println!("claim check: speedup ordering + <250 ms imprecise totals ... OK");
+
+    let mut b = Bencher::from_env();
+    b.bench("table_vi/generate", tables::table_vi);
+}

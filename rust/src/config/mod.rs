@@ -1,0 +1,145 @@
+//! Application configuration (JSON file + CLI overrides).
+//!
+//! Example `mobile-convnet.json`:
+//! ```json
+//! {
+//!   "artifacts_dir": "artifacts",
+//!   "server_addr": "127.0.0.1:7878",
+//!   "max_batch": 8,
+//!   "max_wait_ms": 5.0,
+//!   "batches": [1, 2, 4, 8],
+//!   "precisions": ["precise", "imprecise"]
+//! }
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{BatcherConfig, CoordinatorConfig};
+use crate::runtime::artifacts;
+use crate::simulator::device::Precision;
+use crate::util::json::Json;
+
+/// Top-level application config.
+#[derive(Debug, Clone)]
+pub struct AppConfig {
+    pub artifacts_dir: PathBuf,
+    pub server_addr: String,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub batches: Vec<usize>,
+    pub precisions: Vec<Precision>,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: artifacts::default_dir(),
+            server_addr: "127.0.0.1:7878".into(),
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            batches: vec![1, 2, 4, 8],
+            precisions: vec![Precision::Precise, Precision::Imprecise],
+        }
+    }
+}
+
+fn parse_precision(s: &str) -> Result<Precision> {
+    match s {
+        "precise" => Ok(Precision::Precise),
+        "imprecise" => Ok(Precision::Imprecise),
+        other => anyhow::bail!("unknown precision '{other}' (precise|imprecise)"),
+    }
+}
+
+impl AppConfig {
+    /// Parse from JSON text; missing fields keep defaults.
+    pub fn from_json(text: &str) -> Result<AppConfig> {
+        let v = Json::parse(text).context("config: invalid JSON")?;
+        let mut cfg = AppConfig::default();
+        if let Some(d) = v.get("artifacts_dir").and_then(Json::as_str) {
+            cfg.artifacts_dir = PathBuf::from(d);
+        }
+        if let Some(a) = v.get("server_addr").and_then(Json::as_str) {
+            cfg.server_addr = a.to_string();
+        }
+        if let Some(n) = v.get("max_batch").and_then(Json::as_usize) {
+            cfg.max_batch = n;
+        }
+        if let Some(ms) = v.get("max_wait_ms").and_then(Json::as_f64) {
+            cfg.max_wait = Duration::from_secs_f64(ms / 1e3);
+        }
+        if let Some(b) = v.get("batches").and_then(Json::as_array) {
+            cfg.batches = b.iter().filter_map(Json::as_usize).collect();
+            anyhow::ensure!(cfg.batches.contains(&1), "config: batches must include 1");
+        }
+        if let Some(p) = v.get("precisions").and_then(Json::as_array) {
+            cfg.precisions = p
+                .iter()
+                .filter_map(Json::as_str)
+                .map(parse_precision)
+                .collect::<Result<Vec<_>>>()?;
+            anyhow::ensure!(!cfg.precisions.is_empty(), "config: precisions must be non-empty");
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<AppConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_json(&text)
+    }
+
+    /// Convert into the coordinator's construction parameters.
+    pub fn coordinator_config(&self) -> CoordinatorConfig {
+        CoordinatorConfig {
+            artifacts_dir: self.artifacts_dir.clone(),
+            precisions: self.precisions.clone(),
+            batches: self.batches.clone(),
+            batcher: BatcherConfig { max_batch: self.max_batch, max_wait: self.max_wait },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = AppConfig::default();
+        assert!(c.batches.contains(&1));
+        assert_eq!(c.precisions.len(), 2);
+    }
+
+    #[test]
+    fn parses_overrides() {
+        let c = AppConfig::from_json(
+            r#"{"server_addr": "0.0.0.0:9", "max_batch": 4, "max_wait_ms": 2.5,
+                "batches": [1, 2], "precisions": ["imprecise"]}"#,
+        )
+        .unwrap();
+        assert_eq!(c.server_addr, "0.0.0.0:9");
+        assert_eq!(c.max_batch, 4);
+        assert_eq!(c.max_wait, Duration::from_micros(2500));
+        assert_eq!(c.batches, vec![1, 2]);
+        assert_eq!(c.precisions, vec![Precision::Imprecise]);
+    }
+
+    #[test]
+    fn rejects_bad_config() {
+        assert!(AppConfig::from_json("nope").is_err());
+        assert!(AppConfig::from_json(r#"{"batches": [2, 4]}"#).is_err());
+        assert!(AppConfig::from_json(r#"{"precisions": ["half"]}"#).is_err());
+    }
+
+    #[test]
+    fn converts_to_coordinator_config() {
+        let c = AppConfig::default().coordinator_config();
+        assert_eq!(c.batcher.max_batch, 8);
+        assert!(c.batches.contains(&8));
+    }
+}

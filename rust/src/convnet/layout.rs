@@ -1,0 +1,194 @@
+//! Data layouts and the paper's index algebra.
+//!
+//! - [`Layout::Chw`] — "row major" per the paper (§III-B1, Eq. 5):
+//!   layer-by-layer, each layer stored row by row.
+//! - [`Layout::Hwc`] — channels minor; the NHWC convention of the
+//!   JAX/Pallas side (the CHW4 idea taken to lane width = C).
+//! - [`Layout::Chw4`] — the paper's vectorized layout (Eq. 6, Fig. 5):
+//!   channels grouped in stacks of 4, each stack stored spatially with
+//!   the 4 channel values contiguous ("each four elements in gray or
+//!   blue form a vector").
+//!
+//! [`Chw4Index`] implements the thread-index equations: Eq. 2–4 (plain
+//! output indexing) and Eq. 7–9 (zero-overhead vectorized output
+//! indexing). Property tests verify the two are inverse permutations of
+//! the same output set.
+
+/// Number of channels packed per vector (RenderScript float4).
+pub const VEC: usize = 4;
+
+/// Storage order of a `(layers, height, width)` tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layout {
+    /// layer-major, rows within a layer: `off = (m*H + h)*W + w`.
+    Chw,
+    /// channels minor: `off = (h*W + w)*C + c`.
+    Hwc,
+    /// vectorized stacks of 4 (Eq. 6): stack `m/4`, then spatial, then
+    /// the 4 in-stack channels contiguous:
+    /// `off = ((m/4)*H*W + h*W + w)*4 + m%4`.
+    Chw4,
+}
+
+impl Layout {
+    /// Flat offset of logical `(layer, row, col)`.
+    #[inline]
+    pub fn offset(
+        &self,
+        layers: usize,
+        height: usize,
+        width: usize,
+        m: usize,
+        h: usize,
+        w: usize,
+    ) -> usize {
+        debug_assert!(m < layers && h < height && w < width);
+        match self {
+            Layout::Chw => (m * height + h) * width + w,
+            Layout::Hwc => (h * width + w) * layers + m,
+            Layout::Chw4 => {
+                debug_assert!(
+                    layers % VEC == 0,
+                    "CHW4 requires a multiple of {VEC} layers, got {layers}"
+                );
+                ((m / VEC) * height * width + h * width + w) * VEC + m % VEC
+            }
+        }
+    }
+}
+
+/// The paper's thread-index equations for an output of
+/// `layers x height x width`.
+#[derive(Debug, Clone, Copy)]
+pub struct Chw4Index {
+    pub layers: usize,
+    pub height: usize,
+    pub width: usize,
+}
+
+impl Chw4Index {
+    pub fn new(layers: usize, height: usize, width: usize) -> Self {
+        Self { layers, height, width }
+    }
+
+    pub fn num_output_elements(&self) -> usize {
+        self.layers * self.height * self.width
+    }
+
+    /// Eq. 2–4: thread `x` → `(m, h, w)` for row-major (CHW) output.
+    #[inline]
+    pub fn plain(&self, x: usize) -> (usize, usize, usize) {
+        let w = x % self.width;
+        let h = (x / self.width) % self.height;
+        let m = x / (self.width * self.height);
+        (m, h, w)
+    }
+
+    /// Eq. 7–9: thread `x` → `(m, h, w)` such that writing result `x`
+    /// at flat offset `x` yields the CHW4 layout directly — the
+    /// zero-overhead vectorization scheme of §III-C.
+    #[inline]
+    pub fn vectorized(&self, x: usize) -> (usize, usize, usize) {
+        let w = (x / VEC) % self.width;
+        let h = (x / (VEC * self.width)) % self.height;
+        let m = (x % VEC) + (x / (VEC * self.width * self.height)) * VEC;
+        (m, h, w)
+    }
+
+    /// Inverse of [`Self::vectorized`]: flat CHW4 offset of `(m, h, w)`.
+    #[inline]
+    pub fn chw4_offset(&self, m: usize, h: usize, w: usize) -> usize {
+        ((m / VEC) * self.height * self.width + h * self.width + w) * VEC + m % VEC
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn eq_2_4_matches_paper_example() {
+        // Paper: thread x=1 writes the second CHW element: (m,h,w)=(0,0,1).
+        let idx = Chw4Index::new(8, 3, 5);
+        assert_eq!(idx.plain(1), (0, 0, 1));
+        // After reordering, the second element is channel 1 of (0,0).
+        assert_eq!(idx.vectorized(1), (1, 0, 0));
+    }
+
+    #[test]
+    fn vectorized_writes_produce_chw4() {
+        // Writing thread x's result at flat offset x must equal storing
+        // (m,h,w) = vectorized(x) in the CHW4 layout.
+        let idx = Chw4Index::new(12, 4, 6);
+        for x in 0..idx.num_output_elements() {
+            let (m, h, w) = idx.vectorized(x);
+            assert_eq!(
+                Layout::Chw4.offset(idx.layers, idx.height, idx.width, m, h, w),
+                x,
+                "thread {x}"
+            );
+        }
+    }
+
+    /// Property: for randomized shapes, `vectorized` visits every
+    /// logical output exactly once (it is a permutation of Eq. 2–4's
+    /// output set, just in a different order).
+    #[test]
+    fn vectorized_is_a_permutation_randomized() {
+        let mut rng = Rng::new(0xA11CE);
+        for _ in 0..64 {
+            let layers = rng.range_usize(1, 8) * VEC;
+            let height = rng.range_usize(1, 12);
+            let width = rng.range_usize(1, 12);
+            let idx = Chw4Index::new(layers, height, width);
+            let mut seen = vec![false; idx.num_output_elements()];
+            for x in 0..idx.num_output_elements() {
+                let (m, h, w) = idx.vectorized(x);
+                assert!(m < layers && h < height && w < width);
+                let flat = (m * height + h) * width + w;
+                assert!(!seen[flat], "duplicate target at thread {x}");
+                seen[flat] = true;
+            }
+            assert!(seen.iter().all(|&b| b), "{layers}x{height}x{width}");
+        }
+    }
+
+    /// Property: Eq. 2–4 is likewise a permutation (any layer count).
+    #[test]
+    fn plain_is_a_permutation_randomized() {
+        let mut rng = Rng::new(0xB0B);
+        for _ in 0..64 {
+            let layers = rng.range_usize(1, 32);
+            let height = rng.range_usize(1, 12);
+            let width = rng.range_usize(1, 12);
+            let idx = Chw4Index::new(layers, height, width);
+            let mut seen = vec![false; idx.num_output_elements()];
+            for x in 0..idx.num_output_elements() {
+                let (m, h, w) = idx.plain(x);
+                assert!(m < layers && h < height && w < width);
+                let flat = (m * height + h) * width + w;
+                assert!(!seen[flat]);
+                seen[flat] = true;
+            }
+            assert!(seen.iter().all(|&b| b));
+        }
+    }
+
+    /// Property: `chw4_offset` inverts `vectorized` for random shapes.
+    #[test]
+    fn chw4_offset_inverts_vectorized_randomized() {
+        let mut rng = Rng::new(0xC0FFEE);
+        for _ in 0..64 {
+            let idx = Chw4Index::new(
+                rng.range_usize(1, 6) * VEC,
+                rng.range_usize(1, 10),
+                rng.range_usize(1, 10),
+            );
+            for x in 0..idx.num_output_elements() {
+                let (m, h, w) = idx.vectorized(x);
+                assert_eq!(idx.chw4_offset(m, h, w), x);
+            }
+        }
+    }
+}

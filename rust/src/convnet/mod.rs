@@ -1,0 +1,25 @@
+//! Pure-Rust CNN reference engine — the executable semantics of the
+//! paper's RenderScript kernels.
+//!
+//! Three implementations of the convolution, all bit-comparable:
+//!
+//! - [`sequential`] — the exact six-deep loop nest of Fig. 2; the
+//!   paper's sequential baseline.
+//! - [`vectorized`] — the CHW4 float4 algorithm of §III-B/§III-C with
+//!   thread granularity `g` (§III-D): Eq. 6–9 index math, zero-overhead
+//!   vectorized output, one Rayon task per logical RenderScript thread.
+//! - the AOT/PJRT path in [`crate::runtime`] (XLA / Pallas lowerings).
+//!
+//! [`network`] runs full SqueezeNet through either path so the three can
+//! be cross-checked numerically.
+
+pub mod layout;
+pub mod network;
+pub mod ops;
+pub mod sequential;
+pub mod tensor;
+pub mod vectorized;
+
+pub use layout::{Chw4Index, Layout};
+pub use network::{run_squeezenet, ConvImpl, NetworkOutput};
+pub use tensor::Tensor3;

@@ -1,0 +1,245 @@
+//! Full-network execution through the pure-Rust reference paths.
+//!
+//! Runs SqueezeNet end to end with either the sequential (Fig. 2) or the
+//! vectorized `conv_g` implementation, from the same `weights.bin`
+//! parameters the PJRT path uses — so all three execution engines can be
+//! cross-checked on identical inputs.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::graph::{LayerKind, SqueezeNet};
+use crate::model::weights::WeightStore;
+
+use super::layout::Layout;
+use super::ops;
+use super::sequential::{self, FilterBank};
+use super::tensor::Tensor3;
+use super::vectorized::{self, VectorizedFilterBank};
+
+/// Which convolution implementation to run.
+#[derive(Debug, Clone)]
+pub enum ConvImpl {
+    /// The paper's sequential baseline (Fig. 2), CHW layout.
+    Sequential,
+    /// The vectorized `conv_g` algorithm, CHW4 layout, with a per-layer
+    /// granularity plan (layer name → g; missing layers default to 1)
+    /// and optional Rayon parallelism (the "thread grid").
+    Vectorized { plan: HashMap<String, usize>, parallel: bool },
+}
+
+/// Network output for one image.
+#[derive(Debug, Clone)]
+pub struct NetworkOutput {
+    /// Pre-softmax logits (length 1000).
+    pub logits: Vec<f32>,
+    /// Softmax probabilities.
+    pub probs: Vec<f32>,
+    /// Argmax class.
+    pub top1: usize,
+}
+
+/// Run SqueezeNet on one HWC image (`hw*hw*3` f32 values).
+pub fn run_squeezenet(
+    net: &SqueezeNet,
+    weights: &WeightStore,
+    image_hwc: &[f32],
+    conv_impl: &ConvImpl,
+) -> Result<NetworkOutput> {
+    let input_hw = match &net.layers[0].kind {
+        LayerKind::Conv(c) => c.hw_in,
+        _ => bail!("network must start with a conv layer"),
+    };
+    if image_hwc.len() != input_hw * input_hw * 3 {
+        bail!(
+            "image must be {0}x{0}x3 = {1} values, got {2}",
+            input_hw,
+            input_hw * input_hw * 3,
+            image_hwc.len()
+        );
+    }
+
+    let mut act = match conv_impl {
+        ConvImpl::Sequential => {
+            let mut t = Tensor3::zeros(3, input_hw, input_hw, Layout::Chw);
+            for h in 0..input_hw {
+                for w in 0..input_hw {
+                    for c in 0..3 {
+                        t.set(c, h, w, image_hwc[(h * input_hw + w) * 3 + c]);
+                    }
+                }
+            }
+            t
+        }
+        ConvImpl::Vectorized { .. } => vectorized::hwc_to_chw4(image_hwc, input_hw, input_hw, 3),
+    };
+
+    let mut logits: Option<Vec<f32>> = None;
+    // Fire modules need the squeeze output twice (expand1 and expand3)
+    // and the expand outputs concatenated; we walk the flat layer list
+    // and stitch fire modules by name.
+    let mut pending_expand1: Option<Tensor3> = None;
+
+    for layer in &net.layers {
+        match &layer.kind {
+            LayerKind::Conv(spec) => {
+                let w = weights
+                    .get(&format!("{}_w", spec.name))
+                    .with_context(|| format!("missing weights for {}", spec.name))?;
+                let b = weights
+                    .get(&format!("{}_b", spec.name))
+                    .with_context(|| format!("missing bias for {}", spec.name))?;
+
+                let input = if spec.name.ends_with("expand3") {
+                    // expand3 consumes the squeeze output, which is the
+                    // activation *before* expand1 ran; we stashed expand1's
+                    // result and kept the squeeze activation in `act`.
+                    &act
+                } else {
+                    &act
+                };
+
+                let out = match conv_impl {
+                    ConvImpl::Sequential => {
+                        let bank = FilterBank::new(&w.data, spec.k, spec.cin, spec.cout);
+                        sequential::conv2d(input, &bank, &b.data, spec, true)
+                    }
+                    ConvImpl::Vectorized { plan, parallel } => {
+                        let g = plan.get(&spec.name).copied().unwrap_or(1);
+                        let bank =
+                            VectorizedFilterBank::from_hwio(&w.data, spec.k, spec.cin, spec.cout);
+                        vectorized::conv2d_g(input, &bank, &b.data, spec, g, true, *parallel)
+                    }
+                };
+
+                if spec.name.ends_with("expand1") {
+                    // keep squeeze activation in `act` for expand3
+                    pending_expand1 = Some(out);
+                } else if spec.name.ends_with("expand3") {
+                    let e1 = pending_expand1.take().context("expand1 must precede expand3")?;
+                    act = concat_layers(&e1, &out);
+                } else {
+                    act = out;
+                }
+            }
+            LayerKind::MaxPool { .. } => {
+                act = ops::maxpool(&act, 3, 2);
+            }
+            LayerKind::GlobalAvgPool { .. } => {
+                logits = Some(ops::global_avgpool(&act));
+            }
+            LayerKind::Softmax { .. } => {}
+        }
+    }
+
+    let logits = logits.context("network produced no logits")?;
+    let probs = ops::softmax(&logits);
+    let top1 = ops::argmax(&logits);
+    Ok(NetworkOutput { logits, probs, top1 })
+}
+
+/// Channel concatenation (fire module: [expand1 ; expand3]).
+fn concat_layers(a: &Tensor3, b: &Tensor3) -> Tensor3 {
+    assert_eq!((a.height, a.width), (b.height, b.width));
+    assert_eq!(a.layout, b.layout);
+    let mut out = Tensor3::zeros(a.layers + b.layers, a.height, a.width, a.layout);
+    for m in 0..a.layers {
+        for h in 0..a.height {
+            for w in 0..a.width {
+                out.set(m, h, w, a.get(m, h, w));
+            }
+        }
+    }
+    for m in 0..b.layers {
+        for h in 0..a.height {
+            for w in 0..a.width {
+                out.set(a.layers + m, h, w, b.get(m, h, w));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::graph::SqueezeNet;
+    use crate::util::rng::Rng;
+
+    /// Build a toy weight store matching the network's param contract.
+    pub(crate) fn toy_weights(net: &SqueezeNet, seed: u64) -> WeightStore {
+        let mut rng = Rng::new(seed);
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"MCNW");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        let specs = net.param_specs();
+        bytes.extend_from_slice(&(specs.len() as u32).to_le_bytes());
+        for (name, shape) in &specs {
+            bytes.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            bytes.extend_from_slice(name.as_bytes());
+            bytes.push(shape.len() as u8);
+            for d in shape {
+                bytes.extend_from_slice(&(*d as u32).to_le_bytes());
+            }
+            let n: usize = shape.iter().product();
+            let fan_in: usize = shape[..shape.len().saturating_sub(1)].iter().product();
+            let scale = if name.ends_with("_b") { 0.0 } else { (2.0 / fan_in.max(1) as f32).sqrt() };
+            for _ in 0..n {
+                let v: f32 = rng.range_f32(-1.0, 1.0) * scale;
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        WeightStore::parse(&bytes).unwrap()
+    }
+
+    #[test]
+    fn sequential_and_vectorized_agree_on_small_net() {
+        let net = SqueezeNet::with_input(56);
+        let weights = toy_weights(&net, 5);
+        weights.validate(&net).unwrap();
+        let image: Vec<f32> = Rng::new(11).vec_f32(56 * 56 * 3, 0.0, 1.0);
+
+        let seq = run_squeezenet(&net, &weights, &image, &ConvImpl::Sequential).unwrap();
+        // default plan (g=1 everywhere)
+        let vec1 = run_squeezenet(
+            &net,
+            &weights,
+            &image,
+            &ConvImpl::Vectorized { plan: HashMap::new(), parallel: false },
+        )
+        .unwrap();
+        // a non-trivial plan
+        let mut plan = HashMap::new();
+        for c in net.conv_layers() {
+            let gs = vectorized::valid_gs(c.cout);
+            plan.insert(c.name.clone(), gs[gs.len() / 2]);
+        }
+        let vec2 = run_squeezenet(
+            &net,
+            &weights,
+            &image,
+            &ConvImpl::Vectorized { plan, parallel: true },
+        )
+        .unwrap();
+
+        let d1 = max_diff(&seq.logits, &vec1.logits);
+        let d2 = max_diff(&seq.logits, &vec2.logits);
+        assert!(d1 < 1e-3, "g=1 diff {d1}");
+        assert!(d2 < 1e-3, "planned diff {d2}");
+        assert_eq!(seq.top1, vec1.top1);
+        assert_eq!(seq.top1, vec2.top1);
+    }
+
+    #[test]
+    fn rejects_wrong_image_size() {
+        let net = SqueezeNet::with_input(56);
+        let weights = toy_weights(&net, 5);
+        let err = run_squeezenet(&net, &weights, &[0.0; 10], &ConvImpl::Sequential);
+        assert!(err.is_err());
+    }
+
+    fn max_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+}

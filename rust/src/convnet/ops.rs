@@ -1,0 +1,140 @@
+//! Pooling, softmax and activation ops (§III-E).
+//!
+//! Pooling is layout-generic (it goes through the logical accessors), so
+//! the same code serves the CHW sequential path and the CHW4 vectorized
+//! path — mirroring the paper's observation that the pooling kernels are
+//! "analogous to convolution layers" and operate directly on the
+//! vectorized data.
+
+use super::tensor::Tensor3;
+
+/// 2-D max pooling with a `k`x`k` window and stride `s` (floor sizes).
+pub fn maxpool(input: &Tensor3, k: usize, s: usize) -> Tensor3 {
+    assert!(input.height >= k && input.width >= k, "pool window does not fit");
+    let ho = (input.height - k) / s + 1;
+    let wo = (input.width - k) / s + 1;
+    let mut out = Tensor3::zeros(input.layers, ho, wo, input.layout);
+    for m in 0..input.layers {
+        for h in 0..ho {
+            for w in 0..wo {
+                let mut best = f32::NEG_INFINITY;
+                for i in 0..k {
+                    for j in 0..k {
+                        best = best.max(input.get(m, h * s + i, w * s + j));
+                    }
+                }
+                out.set(m, h, w, best);
+            }
+        }
+    }
+    out
+}
+
+/// Global average pooling: one scalar per layer.
+pub fn global_avgpool(input: &Tensor3) -> Vec<f32> {
+    let denom = (input.height * input.width) as f32;
+    (0..input.layers)
+        .map(|m| {
+            let mut sum = 0.0f64;
+            for h in 0..input.height {
+                for w in 0..input.width {
+                    sum += input.get(m, h, w) as f64;
+                }
+            }
+            (sum / denom as f64) as f32
+        })
+        .collect()
+}
+
+/// Numerically-stable softmax.
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&v| (v - max).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / sum).collect()
+}
+
+/// Index of the largest logit (ties resolve to the first).
+pub fn argmax(values: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in values.iter().enumerate().skip(1) {
+        if v > values[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Top-k (index, value) pairs, descending.
+pub fn top_k(values: &[f32], k: usize) -> Vec<(usize, f32)> {
+    let mut pairs: Vec<(usize, f32)> = values.iter().cloned().enumerate().collect();
+    pairs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+    pairs.truncate(k);
+    pairs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convnet::layout::Layout;
+
+    #[test]
+    fn maxpool_3x3_s2() {
+        let mut t = Tensor3::zeros(1, 5, 5, Layout::Chw);
+        for h in 0..5 {
+            for w in 0..5 {
+                t.set(0, h, w, (h * 5 + w) as f32);
+            }
+        }
+        let p = maxpool(&t, 3, 2);
+        assert_eq!((p.height, p.width), (2, 2));
+        assert_eq!(p.data, vec![12.0, 14.0, 22.0, 24.0]);
+    }
+
+    #[test]
+    fn maxpool_layout_agnostic() {
+        let mut t = Tensor3::zeros(8, 6, 6, Layout::Chw);
+        for m in 0..8 {
+            for h in 0..6 {
+                for w in 0..6 {
+                    t.set(m, h, w, ((m * 36 + h * 6 + w) % 17) as f32);
+                }
+            }
+        }
+        let a = maxpool(&t, 3, 2);
+        let b = maxpool(&t.to_layout(Layout::Chw4), 3, 2);
+        assert!(a.max_abs_diff(&b) == 0.0);
+    }
+
+    #[test]
+    fn global_avgpool_means() {
+        let t = Tensor3::from_vec(2, 1, 2, Layout::Chw, vec![1.0, 3.0, 10.0, 30.0]);
+        assert_eq!(global_avgpool(&t), vec![2.0, 20.0]);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant_and_stable() {
+        let a = softmax(&[1000.0, 1001.0]);
+        let b = softmax(&[0.0, 1.0]);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+        assert!(a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn argmax_and_topk() {
+        let v = [0.1, 0.9, 0.5, 0.9];
+        assert_eq!(argmax(&v), 1);
+        let top = top_k(&v, 2);
+        assert_eq!(top[0].0, 1);
+        assert_eq!(top[1].0, 3);
+    }
+}

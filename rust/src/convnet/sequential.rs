@@ -1,0 +1,178 @@
+//! The paper's sequential baseline: the exact six-deep loop nest of
+//! Fig. 2, on CHW ("row major") tensors.
+//!
+//! ```text
+//! for (m = 0; m < numOutputLayers; m++)           // loop #1
+//!   for (h = 0; h < outputHeight; h++)            // #2
+//!     for (w = 0; w < outputWidth; w++)           // #3
+//!       for (n = 0; n < numInputLayers; n++)      // #4
+//!         for (i = 0; i < kernelHeight; i++)      // #5
+//!           for (j = 0; j < kernelWidth; j++)     // #6
+//!             out += in[n][h*S+i][w*S+j] * kernel[m][n][i][j];
+//! ```
+//!
+//! This is deliberately unoptimized — it is the semantics oracle every
+//! other implementation (vectorized, PJRT) is checked against, and the
+//! workload the sequential cost model in [`crate::simulator`] prices.
+
+use crate::model::graph::ConvSpec;
+
+use super::layout::Layout;
+use super::tensor::Tensor3;
+
+/// Filter bank in the paper's `kernel[m][n][i][j]` indexing, backed by
+/// the HWIO data of `weights.bin` without copying.
+#[derive(Debug, Clone, Copy)]
+pub struct FilterBank<'a> {
+    /// HWIO-ordered weights: index `((i*K + j)*Cin + n)*M + m`.
+    pub hwio: &'a [f32],
+    pub k: usize,
+    pub cin: usize,
+    pub cout: usize,
+}
+
+impl<'a> FilterBank<'a> {
+    pub fn new(hwio: &'a [f32], k: usize, cin: usize, cout: usize) -> Self {
+        assert_eq!(hwio.len(), k * k * cin * cout, "filter bank length mismatch");
+        Self { hwio, k, cin, cout }
+    }
+
+    /// `kernel[m][n][i][j]` (paper notation).
+    #[inline]
+    pub fn at(&self, m: usize, n: usize, i: usize, j: usize) -> f32 {
+        self.hwio[((i * self.k + j) * self.cin + n) * self.cout + m]
+    }
+}
+
+/// Padded input read: zero outside the valid region.
+#[inline]
+fn in_at(input: &Tensor3, n: usize, y: isize, x: isize) -> f32 {
+    if y < 0 || x < 0 || y as usize >= input.height || x as usize >= input.width {
+        0.0
+    } else {
+        input.get(n, y as usize, x as usize)
+    }
+}
+
+/// Sequential convolution (Fig. 2) with optional ReLU fusion.
+///
+/// `input` must be CHW; output is CHW. Shapes are taken from `spec` and
+/// validated against the tensors.
+pub fn conv2d(input: &Tensor3, bank: &FilterBank, bias: &[f32], spec: &ConvSpec, relu: bool) -> Tensor3 {
+    assert_eq!(input.layout, Layout::Chw, "sequential conv expects CHW input");
+    assert_eq!(input.layers, spec.cin, "{}: cin mismatch", spec.name);
+    assert_eq!(input.height, spec.hw_in, "{}: height mismatch", spec.name);
+    assert_eq!(input.width, spec.hw_in, "{}: width mismatch", spec.name);
+    assert_eq!(bank.cin, spec.cin);
+    assert_eq!(bank.cout, spec.cout);
+    assert_eq!(bank.k, spec.k);
+    assert_eq!(bias.len(), spec.cout);
+
+    let s = spec.stride as isize;
+    let pad = spec.pad as isize;
+    let mut out = Tensor3::zeros(spec.cout, spec.hw_out, spec.hw_out, Layout::Chw);
+    for m in 0..spec.cout {
+        for h in 0..spec.hw_out {
+            for w in 0..spec.hw_out {
+                let mut acc = bias[m];
+                for n in 0..spec.cin {
+                    for i in 0..spec.k {
+                        for j in 0..spec.k {
+                            let y = h as isize * s + i as isize - pad;
+                            let x = w as isize * s + j as isize - pad;
+                            acc += in_at(input, n, y, x) * bank.at(m, n, i, j);
+                        }
+                    }
+                }
+                out.set(m, h, w, if relu { acc.max(0.0) } else { acc });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 1x1 conv with identity-ish weights is a per-pixel linear map.
+    #[test]
+    fn conv_1x1_identity() {
+        let spec = ConvSpec {
+            name: "t".into(), k: 1, stride: 1, pad: 0,
+            cin: 2, cout: 2, hw_in: 3, hw_out: 3,
+        };
+        let mut input = Tensor3::zeros(2, 3, 3, Layout::Chw);
+        for n in 0..2 {
+            for h in 0..3 {
+                for w in 0..3 {
+                    input.set(n, h, w, (n * 9 + h * 3 + w) as f32);
+                }
+            }
+        }
+        // HWIO (1,1,2,2): identity matrix.
+        let hwio = vec![1.0, 0.0, 0.0, 1.0];
+        let bank = FilterBank::new(&hwio, 1, 2, 2);
+        let out = conv2d(&input, &bank, &[0.0, 0.0], &spec, false);
+        assert_eq!(out.max_abs_diff(&input), 0.0);
+    }
+
+    /// Hand-computed 3x3 valid convolution on a single channel.
+    #[test]
+    fn conv_3x3_hand_checked() {
+        let spec = ConvSpec {
+            name: "t".into(), k: 3, stride: 1, pad: 0,
+            cin: 1, cout: 1, hw_in: 3, hw_out: 1,
+        };
+        let input = Tensor3::from_vec(1, 3, 3, Layout::Chw,
+            (1..=9).map(|v| v as f32).collect());
+        let hwio: Vec<f32> = vec![1.0; 9];
+        let bank = FilterBank::new(&hwio, 3, 1, 1);
+        let out = conv2d(&input, &bank, &[0.5], &spec, false);
+        assert_eq!(out.data, vec![45.5]);
+    }
+
+    /// Padding contributes zeros.
+    #[test]
+    fn conv_padding_zero_border() {
+        let spec = ConvSpec {
+            name: "t".into(), k: 3, stride: 1, pad: 1,
+            cin: 1, cout: 1, hw_in: 2, hw_out: 2,
+        };
+        let input = Tensor3::from_vec(1, 2, 2, Layout::Chw, vec![1.0, 2.0, 3.0, 4.0]);
+        let hwio: Vec<f32> = vec![1.0; 9];
+        let bank = FilterBank::new(&hwio, 3, 1, 1);
+        let out = conv2d(&input, &bank, &[0.0], &spec, false);
+        // Every output sums all in-bounds pixels of the 3x3 window.
+        assert_eq!(out.data, vec![10.0, 10.0, 10.0, 10.0]);
+    }
+
+    /// Stride subsamples.
+    #[test]
+    fn conv_stride_two() {
+        let spec = ConvSpec {
+            name: "t".into(), k: 1, stride: 2, pad: 0,
+            cin: 1, cout: 1, hw_in: 4, hw_out: 2,
+        };
+        let input = Tensor3::from_vec(1, 4, 4, Layout::Chw,
+            (0..16).map(|v| v as f32).collect());
+        let hwio = vec![1.0];
+        let bank = FilterBank::new(&hwio, 1, 1, 1);
+        let out = conv2d(&input, &bank, &[0.0], &spec, false);
+        assert_eq!(out.data, vec![0.0, 2.0, 8.0, 10.0]);
+    }
+
+    /// ReLU clamps negatives.
+    #[test]
+    fn relu_fusion() {
+        let spec = ConvSpec {
+            name: "t".into(), k: 1, stride: 1, pad: 0,
+            cin: 1, cout: 1, hw_in: 2, hw_out: 2,
+        };
+        let input = Tensor3::from_vec(1, 2, 2, Layout::Chw, vec![-1.0, 1.0, -2.0, 2.0]);
+        let hwio = vec![1.0];
+        let bank = FilterBank::new(&hwio, 1, 1, 1);
+        let out = conv2d(&input, &bank, &[0.0], &spec, true);
+        assert_eq!(out.data, vec![0.0, 1.0, 0.0, 2.0]);
+    }
+}

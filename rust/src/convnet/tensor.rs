@@ -1,0 +1,127 @@
+//! A minimal dense 3-D tensor for feature maps.
+//!
+//! Storage is always a flat `Vec<f32>`; the logical order is given by a
+//! [`crate::convnet::Layout`]. Dimensions are named as in the paper:
+//! `layers` (channels), `height`, `width`.
+
+use super::layout::Layout;
+
+/// A `(layers, height, width)` f32 tensor with an explicit layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor3 {
+    pub layers: usize,
+    pub height: usize,
+    pub width: usize,
+    pub layout: Layout,
+    pub data: Vec<f32>,
+}
+
+impl Tensor3 {
+    /// Zero-filled tensor in the given layout.
+    pub fn zeros(layers: usize, height: usize, width: usize, layout: Layout) -> Self {
+        Self { layers, height, width, layout, data: vec![0.0; layers * height * width] }
+    }
+
+    /// Wrap existing data (must have exactly `layers*height*width` values).
+    pub fn from_vec(
+        layers: usize,
+        height: usize,
+        width: usize,
+        layout: Layout,
+        data: Vec<f32>,
+    ) -> Self {
+        assert_eq!(data.len(), layers * height * width, "tensor data length mismatch");
+        Self { layers, height, width, layout, data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Flat offset of logical element `(layer, row, col)` in this layout.
+    #[inline]
+    pub fn offset(&self, layer: usize, row: usize, col: usize) -> usize {
+        self.layout.offset(self.layers, self.height, self.width, layer, row, col)
+    }
+
+    /// Logical read.
+    #[inline]
+    pub fn get(&self, layer: usize, row: usize, col: usize) -> f32 {
+        self.data[self.offset(layer, row, col)]
+    }
+
+    /// Logical write.
+    #[inline]
+    pub fn set(&mut self, layer: usize, row: usize, col: usize, v: f32) {
+        let off = self.offset(layer, row, col);
+        self.data[off] = v;
+    }
+
+    /// Re-materialize in another layout (the reorder pass the paper's
+    /// zero-overhead scheme exists to avoid — used in tests to verify
+    /// the scheme really avoids it).
+    pub fn to_layout(&self, layout: Layout) -> Tensor3 {
+        if layout == self.layout {
+            return self.clone();
+        }
+        let mut out = Tensor3::zeros(self.layers, self.height, self.width, layout);
+        for m in 0..self.layers {
+            for h in 0..self.height {
+                for w in 0..self.width {
+                    out.set(m, h, w, self.get(m, h, w));
+                }
+            }
+        }
+        out
+    }
+
+    /// Maximum absolute element-wise difference (any layouts).
+    pub fn max_abs_diff(&self, other: &Tensor3) -> f32 {
+        assert_eq!(
+            (self.layers, self.height, self.width),
+            (other.layers, other.height, other.width),
+            "shape mismatch"
+        );
+        let mut max = 0.0f32;
+        for m in 0..self.layers {
+            for h in 0..self.height {
+                for w in 0..self.width {
+                    max = max.max((self.get(m, h, w) - other.get(m, h, w)).abs());
+                }
+            }
+        }
+        max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_round_trip() {
+        let mut t = Tensor3::zeros(8, 3, 4, Layout::Chw);
+        for m in 0..8 {
+            for h in 0..3 {
+                for w in 0..4 {
+                    t.set(m, h, w, (m * 100 + h * 10 + w) as f32);
+                }
+            }
+        }
+        let v = t.to_layout(Layout::Chw4);
+        assert_eq!(v.get(5, 2, 3), 523.0);
+        let back = v.to_layout(Layout::Chw);
+        assert_eq!(t, back);
+        assert_eq!(t.max_abs_diff(&v), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn from_vec_checks_len() {
+        Tensor3::from_vec(2, 2, 2, Layout::Chw, vec![0.0; 7]);
+    }
+}

@@ -1,0 +1,330 @@
+//! The paper's vectorized parallel algorithm (§III-B..D): CHW4 layout,
+//! float4 dot products, zero-overhead vectorized output, and thread
+//! granularity `g`.
+//!
+//! One Rayon task plays the role of a bundle of RenderScript threads;
+//! each logical thread `x`:
+//!
+//! 1. derives its `(m, h, w)` with the Eq. 7–9 index math,
+//! 2. walks the input window **once**, reading float4 channel vectors,
+//! 3. accumulates `g` dot products against `g` filter vectors (Fig. 9),
+//! 4. writes its `g` outputs at flat offsets `{x + t·T}` — which is
+//!    exactly the CHW4 layout of the output (the zero-overhead claim;
+//!    proven as a property test below).
+
+use crate::model::graph::ConvSpec;
+use crate::util::par;
+
+use super::layout::{Chw4Index, Layout, VEC};
+use super::tensor::Tensor3;
+
+/// Largest granularity the `conv_g` kernel family is generated for.
+/// The paper implements a finite set of kernels (§III-D); the largest
+/// granularity appearing anywhere in its evaluation is G32 (Table I).
+pub const MAX_G: usize = 32;
+
+/// Is `g` a valid granularity for a layer with `cout` output layers?
+/// (§III-D: `numOutputLayers / g` must exist and stay divisible by 4.)
+pub fn is_valid_g(cout: usize, g: usize) -> bool {
+    g >= 1 && g <= MAX_G && cout % g == 0 && (cout / g) % VEC == 0
+}
+
+/// All valid granularities of a layer, ascending.
+pub fn valid_gs(cout: usize) -> Vec<usize> {
+    (1..=cout.min(MAX_G * VEC) / VEC)
+        .filter(|&g| is_valid_g(cout, g))
+        .collect()
+}
+
+/// Round channels up to the float4 lane width.
+pub fn pad4(c: usize) -> usize {
+    c.div_ceil(VEC) * VEC
+}
+
+/// Filter bank reordered offline into float4 vectors (§III-C: "kernels
+/// can be reordered once, reshaped, and rewritten in a new model file").
+///
+/// Layout: `[m][n4][i][j][lane]` flat, where `n4` indexes input-channel
+/// stacks; input channels are zero-padded to a multiple of 4 so the
+/// first (RGB) layer works unchanged.
+#[derive(Debug, Clone)]
+pub struct VectorizedFilterBank {
+    pub k: usize,
+    /// Padded input channel count (multiple of 4).
+    pub cin_pad: usize,
+    pub cout: usize,
+    data: Vec<f32>,
+}
+
+impl VectorizedFilterBank {
+    /// Reorder an HWIO filter bank (the `weights.bin` layout).
+    pub fn from_hwio(hwio: &[f32], k: usize, cin: usize, cout: usize) -> Self {
+        assert_eq!(hwio.len(), k * k * cin * cout);
+        let cin_pad = pad4(cin);
+        let mut data = vec![0.0; cout * (cin_pad / VEC) * k * k * VEC];
+        for m in 0..cout {
+            for n in 0..cin {
+                for i in 0..k {
+                    for j in 0..k {
+                        let src = ((i * k + j) * cin + n) * cout + m;
+                        let dst = Self::offset_of(k, cin_pad, m, n / VEC, i, j) + n % VEC;
+                        data[dst] = hwio[src];
+                    }
+                }
+            }
+        }
+        Self { k, cin_pad, cout, data }
+    }
+
+    #[inline]
+    fn offset_of(k: usize, cin_pad: usize, m: usize, n4: usize, i: usize, j: usize) -> usize {
+        (((m * (cin_pad / VEC) + n4) * k + i) * k + j) * VEC
+    }
+
+    /// The float4 weight vector `kernel[m][4n4..4n4+4][i][j]`.
+    #[inline]
+    pub fn vec4(&self, m: usize, n4: usize, i: usize, j: usize) -> [f32; 4] {
+        let o = Self::offset_of(self.k, self.cin_pad, m, n4, i, j);
+        [self.data[o], self.data[o + 1], self.data[o + 2], self.data[o + 3]]
+    }
+}
+
+/// Convert an HWC image / feature map into the CHW4 layout, zero-padding
+/// channels to a multiple of 4.
+pub fn hwc_to_chw4(data: &[f32], h: usize, w: usize, c: usize) -> Tensor3 {
+    assert_eq!(data.len(), h * w * c);
+    let cp = pad4(c);
+    let mut out = Tensor3::zeros(cp, h, w, Layout::Chw4);
+    for y in 0..h {
+        for x in 0..w {
+            for ch in 0..c {
+                out.set(ch, y, x, data[(y * w + x) * c + ch]);
+            }
+        }
+    }
+    out
+}
+
+/// The float4 `rsGetElementAt_float4` read with zero padding outside the
+/// valid region.
+#[inline]
+fn in_vec4(input: &Tensor3, n4: usize, y: isize, x: isize) -> [f32; 4] {
+    if y < 0 || x < 0 || y as usize >= input.height || x as usize >= input.width {
+        return [0.0; 4];
+    }
+    let base = ((n4 * input.height * input.width) + y as usize * input.width + x as usize) * VEC;
+    let d = &input.data[base..base + VEC];
+    [d[0], d[1], d[2], d[3]]
+}
+
+/// The vectorized `dot()` built-in (Fig. 4).
+#[inline]
+pub fn dot4(a: [f32; 4], b: [f32; 4]) -> f32 {
+    a[0] * b[0] + a[1] * b[1] + a[2] * b[2] + a[3] * b[3]
+}
+
+/// `conv_g`: the paper's final kernel (Fig. 8 for g=1, Fig. 9 for g=2,
+/// generalized).  `input` must be CHW4 with `pad4(spec.cin)` layers;
+/// output is CHW4 with `spec.cout` layers (a multiple of 4 for every
+/// valid `g`).
+pub fn conv2d_g(
+    input: &Tensor3,
+    bank: &VectorizedFilterBank,
+    bias: &[f32],
+    spec: &ConvSpec,
+    g: usize,
+    relu: bool,
+    parallel: bool,
+) -> Tensor3 {
+    assert_eq!(input.layout, Layout::Chw4, "conv_g expects CHW4 input");
+    assert!(is_valid_g(spec.cout, g), "{}: invalid granularity g={g} for M={}", spec.name, spec.cout);
+    assert_eq!(input.layers, pad4(spec.cin), "{}: cin mismatch", spec.name);
+    assert_eq!(input.height, spec.hw_in);
+    assert_eq!(bank.cin_pad, pad4(spec.cin));
+    assert_eq!(bank.cout, spec.cout);
+    assert_eq!(bias.len(), spec.cout);
+
+    let m_per = spec.cout / g; // output layers per granule group
+    let ho = spec.hw_out;
+    let wo = spec.hw_out;
+    // T threads, each producing g outputs (the conv_g thread grid).
+    let t_threads = m_per * ho * wo;
+    let idx = Chw4Index::new(m_per, ho, wo);
+    let n4s = bank.cin_pad / VEC;
+    let k = spec.k;
+    let s = spec.stride as isize;
+    let pad = spec.pad as isize;
+
+    // Thread x writes flat offsets {x + t*T}: segment t of the output is
+    // exactly the CHW4 image of output-layer group t. Computing chunks
+    // of x and scattering afterwards keeps the parallel loop safe.
+    let compute_chunk = |x0: usize, x1: usize, out_chunk: &mut [f32]| {
+        debug_assert_eq!(out_chunk.len(), (x1 - x0) * g);
+        // One accumulator buffer per chunk, reset per logical thread.
+        let mut acc = vec![0.0f32; g];
+        for x in x0..x1 {
+            let (m0, h, w) = idx.vectorized(x);
+            let acc = &mut acc[..];
+            for (t, a) in acc.iter_mut().enumerate() {
+                *a = bias[m0 + t * m_per];
+            }
+            for n4 in 0..n4s {
+                for i in 0..k {
+                    for j in 0..k {
+                        let y = h as isize * s + i as isize - pad;
+                        let xx = w as isize * s + j as isize - pad;
+                        // Input window element read ONCE, reused g times
+                        // (§III-D data reusability).
+                        let iv = in_vec4(input, n4, y, xx);
+                        for (t, a) in acc.iter_mut().enumerate() {
+                            let wv = bank.vec4(m0 + t * m_per, n4, i, j);
+                            *a += dot4(iv, wv);
+                        }
+                    }
+                }
+            }
+            for (t, &a) in acc.iter().enumerate() {
+                out_chunk[(x - x0) * g + t] = if relu { a.max(0.0) } else { a };
+            }
+        }
+    };
+
+    const CHUNK: usize = 512;
+    let chunks: Vec<(usize, Vec<f32>)> = if parallel {
+        par::parallel_chunks(t_threads, CHUNK, |x0, x1| {
+            let mut buf = vec![0.0f32; (x1 - x0) * g];
+            compute_chunk(x0, x1, &mut buf);
+            buf
+        })
+    } else {
+        let mut buf = vec![0.0f32; t_threads * g];
+        compute_chunk(0, t_threads, &mut buf);
+        vec![(0, buf)]
+    };
+
+    // Scatter: thread x, granule t -> flat offset x + t*T (zero-overhead
+    // vectorized output: this IS CHW4, no reorder pass).
+    let mut out = Tensor3::zeros(spec.cout, ho, wo, Layout::Chw4);
+    for (x0, buf) in chunks {
+        for (rel, vals) in buf.chunks_exact(g).enumerate() {
+            let x = x0 + rel;
+            for (t, &v) in vals.iter().enumerate() {
+                out.data[x + t * t_threads] = v;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convnet::sequential::{self, FilterBank};
+    use crate::util::rng::Rng;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        Rng::new(seed).vec_f32(n, -1.0, 1.0)
+    }
+
+    fn spec(k: usize, stride: usize, pad: usize, cin: usize, cout: usize, hw_in: usize) -> ConvSpec {
+        let hw_out = (hw_in + 2 * pad - k) / stride + 1;
+        ConvSpec { name: "t".into(), k, stride, pad, cin, cout, hw_in, hw_out }
+    }
+
+    /// conv_g must equal the Fig. 2 sequential loop nest for every g.
+    fn check_against_sequential(sp: &ConvSpec, g: usize, relu: bool) {
+        let hwio = rand_vec(sp.k * sp.k * sp.cin * sp.cout, 1);
+        let bias = rand_vec(sp.cout, 2);
+        let img = rand_vec(sp.hw_in * sp.hw_in * sp.cin, 3);
+
+        // sequential on CHW
+        let mut chw = Tensor3::zeros(sp.cin, sp.hw_in, sp.hw_in, Layout::Chw);
+        for h in 0..sp.hw_in {
+            for w in 0..sp.hw_in {
+                for c in 0..sp.cin {
+                    chw.set(c, h, w, img[(h * sp.hw_in + w) * sp.cin + c]);
+                }
+            }
+        }
+        let bank = FilterBank::new(&hwio, sp.k, sp.cin, sp.cout);
+        let want = sequential::conv2d(&chw, &bank, &bias, sp, relu);
+
+        // vectorized on CHW4
+        let vbank = VectorizedFilterBank::from_hwio(&hwio, sp.k, sp.cin, sp.cout);
+        let input = hwc_to_chw4(&img, sp.hw_in, sp.hw_in, sp.cin);
+        let got = conv2d_g(&input, &vbank, &bias, sp, g, relu, false);
+        assert!(
+            got.max_abs_diff(&want) < 1e-4,
+            "g={g} diff={}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn matches_sequential_small() {
+        let sp = spec(3, 1, 1, 8, 16, 6);
+        for g in valid_gs(16) {
+            check_against_sequential(&sp, g, false);
+        }
+    }
+
+    #[test]
+    fn matches_sequential_stride_and_rgb_padding() {
+        // cin=3 exercises the zero-padded fourth lane (the RGB case).
+        let sp = spec(7, 2, 0, 3, 8, 15);
+        check_against_sequential(&sp, 2, true);
+    }
+
+    #[test]
+    fn matches_sequential_1x1() {
+        let sp = spec(1, 1, 0, 16, 32, 5);
+        for g in [1, 2, 4, 8] {
+            check_against_sequential(&sp, g, true);
+        }
+    }
+
+    #[test]
+    fn parallel_equals_serial() {
+        let sp = spec(3, 1, 1, 8, 16, 9);
+        let hwio = rand_vec(sp.k * sp.k * sp.cin * sp.cout, 7);
+        let bias = rand_vec(sp.cout, 8);
+        let img = rand_vec(sp.hw_in * sp.hw_in * sp.cin, 9);
+        let vbank = VectorizedFilterBank::from_hwio(&hwio, sp.k, sp.cin, sp.cout);
+        let input = hwc_to_chw4(&img, sp.hw_in, sp.hw_in, sp.cin);
+        let a = conv2d_g(&input, &vbank, &bias, &sp, 2, false, false);
+        let b = conv2d_g(&input, &vbank, &bias, &sp, 2, false, true);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn valid_gs_follow_paper_rule() {
+        // M=64: M/g must be divisible by 4.
+        assert_eq!(valid_gs(64), vec![1, 2, 4, 8, 16]);
+        // M=96 admits the G6/G12 entries of Table I.
+        let gs = valid_gs(96);
+        for g in [1, 2, 3, 4, 6, 8, 12, 24] {
+            assert!(gs.contains(&g), "g={g} should be valid for M=96");
+        }
+        assert!(!gs.contains(&32), "96/32=3 is not divisible by 4");
+    }
+
+    /// Property (randomized): conv_g output, read back through the CHW4
+    /// layout, equals the sequential CHW output — for random shapes, g,
+    /// strides, and the RGB channel-padding case.
+    #[test]
+    fn zero_overhead_output_is_chw4_randomized() {
+        let mut rng = Rng::new(0xF00D);
+        for case in 0..24 {
+            let k = *rng.choose(&[1usize, 3]);
+            let cin = *rng.choose(&[3usize, 4, 8]);
+            let cout = rng.range_usize(1, 5) * 8;
+            let hw = rng.range_usize(4, 9);
+            let pad = if k == 3 { 1 } else { 0 };
+            let sp = spec(k, 1, pad, cin, cout, hw);
+            let gs = valid_gs(cout);
+            let g = *rng.choose(&gs);
+            eprintln!("case {case}: k={k} cin={cin} cout={cout} hw={hw} g={g}");
+            check_against_sequential(&sp, g, false);
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Admission control / backpressure — protects the runtime from
+//! unbounded queue growth under open-loop overload.
+//!
+//! Policy: a token-bucket bound on in-flight requests plus a hard queue
+//! cap; requests beyond the cap are shed immediately with a retriable
+//! error rather than queued into a latency collapse (standard serving
+//! practice; the mechanism the paper's phone-local setting never needed
+//! but any deployed coordinator does).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Shared admission state.
+#[derive(Debug)]
+pub struct AdmissionControl {
+    max_in_flight: usize,
+    in_flight: AtomicUsize,
+    admitted: AtomicUsize,
+    shed: AtomicUsize,
+}
+
+/// RAII permit; releasing decrements the in-flight count.
+pub struct Permit {
+    ctrl: Arc<AdmissionControl>,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.ctrl.in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+impl AdmissionControl {
+    pub fn new(max_in_flight: usize) -> Arc<Self> {
+        assert!(max_in_flight > 0);
+        Arc::new(Self {
+            max_in_flight,
+            in_flight: AtomicUsize::new(0),
+            admitted: AtomicUsize::new(0),
+            shed: AtomicUsize::new(0),
+        })
+    }
+
+    /// Try to admit one request; `None` means shed (caller should
+    /// return an overload error to the client).
+    pub fn try_admit(self: &Arc<Self>) -> Option<Permit> {
+        let mut current = self.in_flight.load(Ordering::Acquire);
+        loop {
+            if current >= self.max_in_flight {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+            match self.in_flight.compare_exchange_weak(
+                current,
+                current + 1,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    self.admitted.fetch_add(1, Ordering::Relaxed);
+                    return Some(Permit { ctrl: self.clone() });
+                }
+                Err(actual) => current = actual,
+            }
+        }
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
+    pub fn admitted(&self) -> usize {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    pub fn shed(&self) -> usize {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Shed fraction over the lifetime of the controller.
+    pub fn shed_rate(&self) -> f64 {
+        let total = self.admitted() + self.shed();
+        if total == 0 {
+            0.0
+        } else {
+            self.shed() as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_cap_then_sheds() {
+        let ctrl = AdmissionControl::new(3);
+        let p1 = ctrl.try_admit().unwrap();
+        let _p2 = ctrl.try_admit().unwrap();
+        let _p3 = ctrl.try_admit().unwrap();
+        assert!(ctrl.try_admit().is_none());
+        assert_eq!(ctrl.in_flight(), 3);
+        assert_eq!(ctrl.shed(), 1);
+        drop(p1);
+        assert_eq!(ctrl.in_flight(), 2);
+        let _p4 = ctrl.try_admit().unwrap();
+        assert_eq!(ctrl.admitted(), 4);
+    }
+
+    #[test]
+    fn shed_rate_accounts_both() {
+        let ctrl = AdmissionControl::new(1);
+        let _p = ctrl.try_admit().unwrap();
+        for _ in 0..3 {
+            assert!(ctrl.try_admit().is_none());
+        }
+        assert!((ctrl.shed_rate() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrent_admission_never_exceeds_cap() {
+        let ctrl = AdmissionControl::new(8);
+        let peak = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..16 {
+                let ctrl = ctrl.clone();
+                let peak = peak.clone();
+                s.spawn(move || {
+                    for _ in 0..500 {
+                        if let Some(_permit) = ctrl.try_admit() {
+                            let now = ctrl.in_flight();
+                            peak.fetch_max(now, Ordering::Relaxed);
+                            std::hint::spin_loop();
+                        }
+                    }
+                });
+            }
+        });
+        assert!(peak.load(Ordering::Relaxed) <= 8);
+        assert_eq!(ctrl.in_flight(), 0);
+    }
+}

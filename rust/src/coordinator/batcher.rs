@@ -1,0 +1,98 @@
+//! Dynamic batching policy.
+//!
+//! Executables exist for a fixed set of batch sizes (the manifest's
+//! `hot_path_batches`, typically {1, 2, 4, 8}).  The batcher holds
+//! arriving requests briefly and greedily decomposes the queue into the
+//! largest available batch sizes, flushing when either the size bound or
+//! the age (deadline) bound trips.
+
+use std::time::Duration;
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Flush as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// Flush any request older than this, even if the batch is small.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        // §Perf (EXPERIMENTS.md): on the XLA-CPU substrate convolutions
+        // are internally parallel, so large batches *raise* per-image
+        // latency (b8 ≈ 50 ms/img vs b1 ≈ 42 ms/img imprecise). A
+        // moderate batch cap and a short deadline maximize throughput
+        // without queueing requests behind long batch executions; on a
+        // real accelerator with per-dispatch overhead, raise both.
+        Self { max_batch: 4, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Greedy decomposition of `queue_len` requests into available batch
+/// sizes (descending).  Always consumes the whole queue: `available`
+/// must contain 1 (enforced by the coordinator at startup).
+pub fn plan_batches(queue_len: usize, available: &[usize]) -> Vec<usize> {
+    assert!(available.contains(&1), "batch size 1 must always be available");
+    let mut sizes: Vec<usize> = available.to_vec();
+    sizes.sort_unstable_by(|a, b| b.cmp(a));
+    let mut remaining = queue_len;
+    let mut plan = Vec::new();
+    for &s in &sizes {
+        while remaining >= s {
+            plan.push(s);
+            remaining -= s;
+        }
+    }
+    debug_assert_eq!(remaining, 0);
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_fit() {
+        assert_eq!(plan_batches(8, &[1, 2, 4, 8]), vec![8]);
+        assert_eq!(plan_batches(4, &[1, 2, 4, 8]), vec![4]);
+    }
+
+    #[test]
+    fn greedy_decomposition() {
+        assert_eq!(plan_batches(7, &[1, 2, 4, 8]), vec![4, 2, 1]);
+        assert_eq!(plan_batches(13, &[1, 2, 4, 8]), vec![8, 4, 1]);
+        assert_eq!(plan_batches(3, &[1, 2, 4, 8]), vec![2, 1]);
+    }
+
+    #[test]
+    fn only_batch_one() {
+        assert_eq!(plan_batches(3, &[1]), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn empty_queue() {
+        assert!(plan_batches(0, &[1, 2, 4]).is_empty());
+    }
+
+    /// Property: the plan always sums to the queue length and only uses
+    /// available sizes.
+    #[test]
+    fn plan_conserves_requests_randomized() {
+        let mut rng = Rng::new(0xBA7C4);
+        for _ in 0..200 {
+            let queue = rng.below(40);
+            let available = match rng.below(3) {
+                0 => vec![1],
+                1 => vec![1, 2, 4],
+                _ => vec![1, 2, 4, 8],
+            };
+            let plan = plan_batches(queue, &available);
+            assert_eq!(plan.iter().sum::<usize>(), queue);
+            assert!(plan.iter().all(|s| available.contains(s)));
+            // Greedy: plan is non-increasing.
+            assert!(plan.windows(2).all(|w| w[0] >= w[1]));
+        }
+    }
+}

@@ -1,0 +1,367 @@
+//! The coordinator core: request routing, dynamic batching, and the
+//! runtime thread that owns the PJRT executables.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::convnet::ops;
+use crate::model::graph::{ConvSpec, SqueezeNet};
+use crate::runtime::RuntimeEngine;
+use crate::simulator::autotune::autotune_network;
+use crate::simulator::cost::{network_time, RunMode};
+use crate::simulator::device::{DeviceProfile, Precision};
+use crate::simulator::power::energy_joules;
+use crate::telemetry::Telemetry;
+
+use super::batcher::{plan_batches, BatcherConfig};
+use super::request::{InferRequest, InferResponse, SimEstimate};
+
+/// Coordinator construction parameters.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub artifacts_dir: PathBuf,
+    /// Precisions to serve (each gets its own executor set and queue).
+    pub precisions: Vec<Precision>,
+    /// Batch sizes to compile per precision (must include 1).
+    pub batches: Vec<usize>,
+    pub batcher: BatcherConfig,
+}
+
+impl CoordinatorConfig {
+    pub fn new(artifacts_dir: PathBuf) -> Self {
+        Self {
+            artifacts_dir,
+            precisions: vec![Precision::Precise, Precision::Imprecise],
+            batches: vec![1, 2, 4, 8],
+            batcher: BatcherConfig::default(),
+        }
+    }
+}
+
+type Reply = Sender<Result<InferResponse, String>>;
+
+enum Envelope {
+    Request(Box<InferRequest>, Reply),
+    Shutdown,
+}
+
+struct BatchJob {
+    precision: Precision,
+    items: Vec<(Box<InferRequest>, Reply)>,
+    formed_at: Instant,
+}
+
+enum RuntimeMsg {
+    Job(BatchJob),
+    Shutdown,
+}
+
+/// The running coordinator (router + batcher + runtime threads).
+pub struct Coordinator {
+    tx: Sender<Envelope>,
+    next_id: AtomicU64,
+    pub telemetry: Arc<Telemetry>,
+    batcher_handle: Option<JoinHandle<()>>,
+    runtime_handle: Option<JoinHandle<()>>,
+    image_len: usize,
+}
+
+impl Coordinator {
+    /// Start the coordinator: spawns the runtime thread (which compiles
+    /// all executables) and the batcher thread. Blocks until the
+    /// runtime is ready or failed.
+    pub fn start(config: CoordinatorConfig) -> Result<Coordinator> {
+        assert!(config.batches.contains(&1), "batch size 1 is required");
+        let telemetry = Arc::new(Telemetry::default());
+
+        // runtime thread: owns the (non-Send) PJRT state
+        let (job_tx, job_rx) = mpsc::channel::<RuntimeMsg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<usize, String>>();
+        let rt_cfg = config.clone();
+        let rt_telemetry = telemetry.clone();
+        let runtime_handle = std::thread::Builder::new()
+            .name("mcn-runtime".into())
+            .spawn(move || runtime_thread(rt_cfg, job_rx, ready_tx, rt_telemetry))
+            .context("spawning runtime thread")?;
+        let image_len = ready_rx
+            .recv()
+            .context("runtime thread died before signalling readiness")?
+            .map_err(|e| anyhow::anyhow!("runtime startup failed: {e}"))?;
+
+        // batcher thread: pure queue logic
+        let (tx, rx) = mpsc::channel::<Envelope>();
+        let b_cfg = config.clone();
+        let b_telemetry = telemetry.clone();
+        let batcher_handle = std::thread::Builder::new()
+            .name("mcn-batcher".into())
+            .spawn(move || batcher_thread(b_cfg, rx, job_tx, b_telemetry))
+            .context("spawning batcher thread")?;
+
+        Ok(Coordinator {
+            tx,
+            next_id: AtomicU64::new(1),
+            telemetry,
+            batcher_handle: Some(batcher_handle),
+            runtime_handle: Some(runtime_handle),
+            image_len,
+        })
+    }
+
+    /// Expected image length (H*W*3).
+    pub fn image_len(&self) -> usize {
+        self.image_len
+    }
+
+    /// Submit a request and obtain a receiver for the response.
+    pub fn submit(
+        &self,
+        image: Vec<f32>,
+        precision: Precision,
+        with_sim: bool,
+    ) -> Result<Receiver<Result<InferResponse, String>>> {
+        if image.len() != self.image_len {
+            anyhow::bail!("image must have {} values, got {}", self.image_len, image.len());
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = InferRequest { id, image, precision, with_sim, enqueued_at: Instant::now() };
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.telemetry.counters.requests.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Envelope::Request(Box::new(req), reply_tx))
+            .map_err(|_| anyhow::anyhow!("coordinator is shut down"))?;
+        Ok(reply_rx)
+    }
+
+    /// Blocking inference.
+    pub fn infer(
+        &self,
+        image: Vec<f32>,
+        precision: Precision,
+        with_sim: bool,
+    ) -> Result<InferResponse> {
+        let rx = self.submit(image, precision, with_sim)?;
+        rx.recv()
+            .context("coordinator dropped the request")?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Graceful shutdown (drains in-flight work).
+    pub fn shutdown(&mut self) {
+        let _ = self.tx.send(Envelope::Shutdown);
+        if let Some(h) = self.batcher_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.runtime_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Batcher thread: group per precision, flush on size or deadline.
+fn batcher_thread(
+    config: CoordinatorConfig,
+    rx: Receiver<Envelope>,
+    job_tx: Sender<RuntimeMsg>,
+    telemetry: Arc<Telemetry>,
+) {
+    let mut queues: HashMap<Precision, Vec<(Box<InferRequest>, Reply)>> = HashMap::new();
+    let tick = config.batcher.max_wait.min(Duration::from_millis(1)).max(Duration::from_micros(200));
+    'outer: loop {
+        // Drain the channel (blocking briefly so we don't spin).
+        match rx.recv_timeout(tick) {
+            Ok(Envelope::Request(req, reply)) => {
+                queues.entry(req.precision).or_default().push((req, reply));
+                // Opportunistically drain whatever else is queued.
+                while let Ok(env) = rx.try_recv() {
+                    match env {
+                        Envelope::Request(req, reply) => {
+                            queues.entry(req.precision).or_default().push((req, reply));
+                        }
+                        Envelope::Shutdown => {
+                            flush_all(&mut queues, &config, &job_tx, &telemetry, true);
+                            let _ = job_tx.send(RuntimeMsg::Shutdown);
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+            Ok(Envelope::Shutdown) => {
+                flush_all(&mut queues, &config, &job_tx, &telemetry, true);
+                let _ = job_tx.send(RuntimeMsg::Shutdown);
+                break;
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                flush_all(&mut queues, &config, &job_tx, &telemetry, true);
+                let _ = job_tx.send(RuntimeMsg::Shutdown);
+                break;
+            }
+        }
+        flush_all(&mut queues, &config, &job_tx, &telemetry, false);
+    }
+}
+
+/// Flush queues per policy; `force` flushes everything (shutdown).
+fn flush_all(
+    queues: &mut HashMap<Precision, Vec<(Box<InferRequest>, Reply)>>,
+    config: &CoordinatorConfig,
+    job_tx: &Sender<RuntimeMsg>,
+    telemetry: &Telemetry,
+    force: bool,
+) {
+    for (&precision, queue) in queues.iter_mut() {
+        if queue.is_empty() {
+            continue;
+        }
+        let oldest_age = queue[0].0.enqueued_at.elapsed();
+        let should_flush =
+            force || queue.len() >= config.batcher.max_batch || oldest_age >= config.batcher.max_wait;
+        if !should_flush {
+            continue;
+        }
+        let items: Vec<_> = queue.drain(..).collect();
+        let mut remaining = items;
+        for size in plan_batches(remaining.len(), &config.batches) {
+            let rest = remaining.split_off(size);
+            let batch = std::mem::replace(&mut remaining, rest);
+            telemetry.counters.batches.fetch_add(1, Ordering::Relaxed);
+            telemetry
+                .counters
+                .batched_requests
+                .fetch_add(batch.len() as u64, Ordering::Relaxed);
+            let _ = job_tx.send(RuntimeMsg::Job(BatchJob {
+                precision,
+                items: batch,
+                formed_at: Instant::now(),
+            }));
+        }
+    }
+}
+
+/// Runtime thread body: compile executables, then serve batch jobs.
+fn runtime_thread(
+    config: CoordinatorConfig,
+    rx: Receiver<RuntimeMsg>,
+    ready_tx: Sender<std::result::Result<usize, String>>,
+    telemetry: Arc<Telemetry>,
+) {
+    let engine = match RuntimeEngine::load(&config.artifacts_dir, &config.precisions, &config.batches)
+    {
+        Ok(e) => e,
+        Err(err) => {
+            let _ = ready_tx.send(Err(format!("{err:#}")));
+            return;
+        }
+    };
+    let image_len =
+        engine.manifest.input_hw * engine.manifest.input_hw * crate::model::graph::INPUT_CHANNELS;
+
+    // Precompute the simulated mobile-device estimates attached to
+    // responses (per precision; single-image inference).
+    let sim_table = build_sim_table();
+
+    let _ = ready_tx.send(Ok(image_len));
+
+    while let Ok(msg) = rx.recv() {
+        let job = match msg {
+            RuntimeMsg::Job(j) => j,
+            RuntimeMsg::Shutdown => break,
+        };
+        serve_job(&engine, job, &telemetry, &sim_table);
+    }
+}
+
+fn build_sim_table() -> HashMap<Precision, Vec<SimEstimate>> {
+    let net = SqueezeNet::v1_0();
+    let mut out: HashMap<Precision, Vec<SimEstimate>> = HashMap::new();
+    for precision in [Precision::Precise, Precision::Imprecise] {
+        let mut v = Vec::new();
+        for device in DeviceProfile::all() {
+            let plan = autotune_network(&net, precision, &device);
+            let g = |spec: &ConvSpec| plan.optimal_g(&spec.name);
+            let mode = RunMode::Parallel(precision);
+            let latency_ms = network_time(&net, mode, &device, &g);
+            let energy_j = energy_joules(&device, mode, latency_ms);
+            v.push(SimEstimate { device: device.name, latency_ms, energy_j });
+        }
+        out.insert(precision, v);
+    }
+    out
+}
+
+fn serve_job(
+    engine: &RuntimeEngine,
+    job: BatchJob,
+    telemetry: &Telemetry,
+    sim_table: &HashMap<Precision, Vec<SimEstimate>>,
+) {
+    let batch = job.items.len();
+    let exe = match engine.executor(job.precision, batch) {
+        Some(e) => e,
+        None => {
+            for (_, reply) in job.items {
+                telemetry.counters.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = reply.send(Err(format!(
+                    "no executor for precision={} batch={batch}",
+                    job.precision.label()
+                )));
+            }
+            return;
+        }
+    };
+    let mut input = Vec::with_capacity(batch * exe.image_len());
+    for (req, _) in &job.items {
+        input.extend_from_slice(&req.image);
+    }
+    let t0 = Instant::now();
+    let result = exe.infer(&input);
+    telemetry.execute_time.record(t0.elapsed());
+
+    match result {
+        Ok(all_logits) => {
+            for ((req, reply), logits) in job.items.into_iter().zip(all_logits) {
+                let probs = ops::softmax(&logits);
+                let top5 = ops::top_k(&probs, 5);
+                let latency = req.enqueued_at.elapsed();
+                let queue_time = job.formed_at.duration_since(req.enqueued_at);
+                telemetry.latency.record(latency);
+                telemetry.queue_time.record(queue_time);
+                telemetry.counters.responses.fetch_add(1, Ordering::Relaxed);
+                let sim = if req.with_sim {
+                    sim_table.get(&req.precision).cloned().unwrap_or_default()
+                } else {
+                    Vec::new()
+                };
+                let _ = reply.send(Ok(InferResponse {
+                    id: req.id,
+                    top1: ops::argmax(&probs),
+                    top5,
+                    latency,
+                    queue_time,
+                    batch_size: batch,
+                    precision: req.precision,
+                    sim,
+                }));
+            }
+        }
+        Err(err) => {
+            for (_, reply) in job.items {
+                telemetry.counters.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = reply.send(Err(format!("{err:#}")));
+            }
+        }
+    }
+}

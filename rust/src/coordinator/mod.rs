@@ -1,0 +1,31 @@
+//! Layer-3 coordinator: the serving stack.
+//!
+//! ```text
+//! client ──TCP/JSON──▶ server ──▶ Coordinator (router)
+//!                                    │ per-precision queues
+//!                                    ▼
+//!                                 batcher (size/deadline policy)
+//!                                    │ BatchJob
+//!                                    ▼
+//!                                 runtime thread (PJRT executors,
+//!                                 weights resident; softmax+top-k)
+//!                                    │ replies + telemetry
+//! ```
+//!
+//! PJRT handles are not `Send`, so the runtime lives on a dedicated
+//! thread that owns every executable; batching and routing are pure
+//! queue logic and run on their own thread.  Python is never on this
+//! path — executables were AOT-compiled by `make artifacts`.
+
+pub mod admission;
+pub mod batcher;
+pub mod engine;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+pub mod trace;
+
+pub use batcher::{plan_batches, BatcherConfig};
+pub use engine::{Coordinator, CoordinatorConfig};
+pub use request::{InferRequest, InferResponse, SimEstimate};
+pub use scheduler::PlanCache;

@@ -1,0 +1,114 @@
+//! Request/response types of the serving API.
+
+use std::time::{Duration, Instant};
+
+use crate::simulator::device::Precision;
+use crate::util::json::Json;
+
+/// An inference request entering the coordinator.
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    pub id: u64,
+    /// NHWC image, `224*224*3` f32.
+    pub image: Vec<f32>,
+    pub precision: Precision,
+    /// Include simulated mobile-device latency/energy estimates.
+    pub with_sim: bool,
+    pub enqueued_at: Instant,
+}
+
+/// Simulated execution estimate on one mobile device profile
+/// (the paper's evaluation target, attached to real inferences).
+#[derive(Debug, Clone)]
+pub struct SimEstimate {
+    pub device: &'static str,
+    pub latency_ms: f64,
+    pub energy_j: f64,
+}
+
+/// The response for one request.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    pub id: u64,
+    /// Argmax class.
+    pub top1: usize,
+    /// Top-5 (class, probability).
+    pub top5: Vec<(usize, f32)>,
+    /// End-to-end latency inside the coordinator.
+    pub latency: Duration,
+    /// Time spent queued before the batch formed.
+    pub queue_time: Duration,
+    /// Size of the batch this request rode in.
+    pub batch_size: usize,
+    pub precision: Precision,
+    /// Present when the request asked for simulation.
+    pub sim: Vec<SimEstimate>,
+}
+
+impl InferResponse {
+    /// Wire representation (JSON object) for the TCP server.
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("id", Json::num(self.id as f64)),
+            ("top1", Json::num(self.top1 as f64)),
+            (
+                "top5",
+                Json::Array(
+                    self.top5
+                        .iter()
+                        .map(|(c, p)| {
+                            Json::object(vec![
+                                ("class", Json::num(*c as f64)),
+                                ("prob", Json::num(*p as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("latency_ms", Json::num(self.latency.as_secs_f64() * 1e3)),
+            ("queue_ms", Json::num(self.queue_time.as_secs_f64() * 1e3)),
+            ("batch_size", Json::num(self.batch_size as f64)),
+            ("precision", Json::str(self.precision.label())),
+            (
+                "sim",
+                Json::Array(
+                    self.sim
+                        .iter()
+                        .map(|s| {
+                            Json::object(vec![
+                                ("device", Json::str(s.device)),
+                                ("latency_ms", Json::num(s.latency_ms)),
+                                ("energy_j", Json::num(s.energy_j)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_serializes() {
+        let r = InferResponse {
+            id: 3,
+            top1: 7,
+            top5: vec![(7, 0.9), (1, 0.05)],
+            latency: Duration::from_millis(12),
+            queue_time: Duration::from_millis(2),
+            batch_size: 4,
+            precision: Precision::Precise,
+            sim: vec![SimEstimate { device: "Nexus 5", latency_ms: 141.0, energy_j: 0.1 }],
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("top1").unwrap().as_usize(), Some(7));
+        assert_eq!(j.get("batch_size").unwrap().as_usize(), Some(4));
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("precision").unwrap().as_str(), Some("precise"));
+    }
+}

@@ -1,0 +1,82 @@
+//! Plan cache: autotuned per-layer granularity plans, memoized per
+//! (device, precision).
+//!
+//! This is the serving-side face of §III-D: the engine asks "what g
+//! should layer L use on device D", the cache answers from one
+//! autotuning pass.  The Rust vectorized execution path and the
+//! simulated estimates both consume these plans, and the `autotune` CLI
+//! command prints them (Table I).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::model::graph::SqueezeNet;
+use crate::simulator::autotune::{autotune_network, NetworkPlan};
+use crate::simulator::device::{DeviceProfile, Precision};
+
+/// Memoized autotuning results.
+pub struct PlanCache {
+    net: SqueezeNet,
+    plans: Mutex<HashMap<(&'static str, &'static str), NetworkPlan>>,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self { net: SqueezeNet::v1_0(), plans: Mutex::new(HashMap::new()) }
+    }
+
+    /// The autotuned plan for (device, precision); computed on first use.
+    pub fn plan(&self, device: &DeviceProfile, precision: Precision) -> NetworkPlan {
+        let key = (device.id, precision.label());
+        let mut plans = self.plans.lock().unwrap();
+        plans
+            .entry(key)
+            .or_insert_with(|| autotune_network(&self.net, precision, device))
+            .clone()
+    }
+
+    /// Layer-name → optimal-g map for the Rust vectorized engine.
+    pub fn plan_map(&self, device: &DeviceProfile, precision: Precision) -> HashMap<String, usize> {
+        self.plan(device, precision).as_plan_map()
+    }
+
+    /// Number of cached plans (for tests).
+    pub fn cached(&self) -> usize {
+        self.plans.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memoizes_per_device_and_precision() {
+        let cache = PlanCache::new();
+        let s7 = DeviceProfile::galaxy_s7();
+        let p1 = cache.plan(&s7, Precision::Precise);
+        let p2 = cache.plan(&s7, Precision::Precise);
+        assert_eq!(cache.cached(), 1);
+        assert_eq!(p1.optimal_g("conv1"), p2.optimal_g("conv1"));
+        cache.plan(&s7, Precision::Imprecise);
+        cache.plan(&DeviceProfile::nexus_5(), Precision::Precise);
+        assert_eq!(cache.cached(), 3);
+    }
+
+    #[test]
+    fn plans_respect_divisibility() {
+        let cache = PlanCache::new();
+        let map = cache.plan_map(&DeviceProfile::nexus_6p(), Precision::Precise);
+        for spec in SqueezeNet::v1_0().conv_layers() {
+            let g = map[&spec.name];
+            assert_eq!(spec.cout % g, 0);
+            assert_eq!((spec.cout / g) % 4, 0);
+        }
+    }
+}

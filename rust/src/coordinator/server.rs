@@ -1,0 +1,264 @@
+//! JSON-lines TCP front end and matching client.
+//!
+//! Wire protocol (one JSON object per line):
+//!
+//! request  `{"image_seed": 7, "image_index": 0, "precision": "precise",
+//!            "sim": true}`
+//!          or `{"image": [ ...150528 floats... ], ...}`
+//!          or `{"cmd": "stats"}` / `{"cmd": "quit"}`
+//! response the [`InferResponse::to_json`] object, or
+//!          `{"error": "..."}` / `{"stats": "..."}`.
+//!
+//! Seed-addressed images keep the wire small for load generation: both
+//! ends derive the pixels from the shared deterministic corpus.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::model::ImageCorpus;
+use crate::simulator::device::Precision;
+use crate::util::json::Json;
+
+use super::engine::Coordinator;
+use super::request::InferResponse;
+
+/// Parse a request line into (image, precision, with_sim) or a command.
+enum Parsed {
+    Infer { image: Vec<f32>, precision: Precision, with_sim: bool },
+    Stats,
+    Quit,
+}
+
+fn parse_request(line: &str, image_len: usize) -> Result<Parsed> {
+    let v = Json::parse(line).context("request is not valid JSON")?;
+    if let Some(cmd) = v.get("cmd").and_then(Json::as_str) {
+        return match cmd {
+            "stats" => Ok(Parsed::Stats),
+            "quit" => Ok(Parsed::Quit),
+            other => anyhow::bail!("unknown cmd '{other}'"),
+        };
+    }
+    let precision = match v.get("precision").and_then(Json::as_str).unwrap_or("precise") {
+        "precise" => Precision::Precise,
+        "imprecise" => Precision::Imprecise,
+        other => anyhow::bail!("unknown precision '{other}'"),
+    };
+    let with_sim = v.get("sim").and_then(Json::as_bool).unwrap_or(false);
+    let image = if let Some(raw) = v.get("image").and_then(Json::as_array) {
+        let img: Vec<f32> = raw.iter().filter_map(|x| x.as_f64()).map(|x| x as f32).collect();
+        anyhow::ensure!(img.len() == image_len, "image must have {image_len} values");
+        img
+    } else {
+        let seed = v.get("image_seed").and_then(Json::as_usize).unwrap_or(0) as u64;
+        let index = v.get("image_index").and_then(Json::as_usize).unwrap_or(0) as u64;
+        ImageCorpus::new(seed).image(index)
+    };
+    Ok(Parsed::Infer { image, precision, with_sim })
+}
+
+/// Serve until `stop` is set (checked between connections) or a client
+/// sends `{"cmd":"quit"}`. Returns the bound address via the callback.
+pub fn serve(
+    coordinator: Arc<Coordinator>,
+    addr: &str,
+    stop: Arc<AtomicBool>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    listener.set_nonblocking(true)?;
+    on_bound(listener.local_addr()?);
+    let mut handles = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let c = coordinator.clone();
+                let s = stop.clone();
+                handles.push(std::thread::spawn(move || {
+                    let _ = handle_client(c, stream, s);
+                }));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(e) => return Err(e).context("accept"),
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+fn handle_client(
+    coordinator: Arc<Coordinator>,
+    stream: TcpStream,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    // Read with a timeout so idle handler threads notice `stop` and
+    // exit — otherwise server shutdown would block on open connections.
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        // Accumulate into `line` across timeouts until a full line is in.
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF
+            Ok(_) if !line.ends_with('\n') => continue,
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        let request = std::mem::take(&mut line);
+        let request = request.trim();
+        if request.is_empty() {
+            continue;
+        }
+        let reply = match parse_request(request, coordinator.image_len()) {
+            Ok(Parsed::Quit) => {
+                stop.store(true, Ordering::Relaxed);
+                writeln!(writer, "{}", Json::object(vec![("ok", Json::Bool(true))]))?;
+                break;
+            }
+            Ok(Parsed::Stats) => {
+                Json::object(vec![("stats", Json::str(coordinator.telemetry.report()))])
+            }
+            Ok(Parsed::Infer { image, precision, with_sim }) => {
+                match coordinator.infer(image, precision, with_sim) {
+                    Ok(resp) => resp.to_json(),
+                    Err(e) => Json::object(vec![("error", Json::str(format!("{e:#}")))]),
+                }
+            }
+            Err(e) => Json::object(vec![("error", Json::str(format!("{e:#}")))]),
+        };
+        writeln!(writer, "{reply}")?;
+    }
+    Ok(())
+}
+
+/// Minimal blocking client for the JSON-lines protocol.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// A parsed inference reply.
+#[derive(Debug, Clone)]
+pub struct ClientReply {
+    pub top1: usize,
+    pub latency_ms: f64,
+    pub batch_size: usize,
+    pub raw: Json,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    fn round_trip(&mut self, req: Json) -> Result<Json> {
+        writeln!(self.writer, "{req}")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line).context("reading reply")?;
+        let v = Json::parse(line.trim()).context("parsing reply")?;
+        if let Some(err) = v.get("error").and_then(Json::as_str) {
+            anyhow::bail!("server error: {err}");
+        }
+        Ok(v)
+    }
+
+    /// Infer on a corpus-addressed image.
+    pub fn infer_seed(
+        &mut self,
+        seed: u64,
+        index: u64,
+        precision: Precision,
+        with_sim: bool,
+    ) -> Result<ClientReply> {
+        let v = self.round_trip(Json::object(vec![
+            ("image_seed", Json::num(seed as f64)),
+            ("image_index", Json::num(index as f64)),
+            ("precision", Json::str(precision.label())),
+            ("sim", Json::Bool(with_sim)),
+        ]))?;
+        Ok(ClientReply {
+            top1: v.get("top1").and_then(Json::as_usize).context("reply missing top1")?,
+            latency_ms: v.get("latency_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            batch_size: v.get("batch_size").and_then(Json::as_usize).unwrap_or(1),
+            raw: v,
+        })
+    }
+
+    /// Fetch the server's telemetry report.
+    pub fn stats(&mut self) -> Result<String> {
+        let v = self.round_trip(Json::object(vec![("cmd", Json::str("stats"))]))?;
+        Ok(v.get("stats").and_then(Json::as_str).unwrap_or("").to_string())
+    }
+
+    /// Ask the server to stop.
+    pub fn quit(&mut self) -> Result<()> {
+        let _ = self.round_trip(Json::object(vec![("cmd", Json::str("quit"))]))?;
+        Ok(())
+    }
+}
+
+/// `InferResponse` parsing helper shared with tests.
+pub fn response_top1(resp: &InferResponse) -> usize {
+    resp.top1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_seed_request() {
+        let p = parse_request(r#"{"image_seed": 3, "precision": "imprecise"}"#, 12).unwrap();
+        match p {
+            Parsed::Infer { image, precision, with_sim } => {
+                assert_eq!(image.len(), crate::model::images::IMAGE_LEN);
+                assert_eq!(precision, Precision::Imprecise);
+                assert!(!with_sim);
+            }
+            _ => panic!("expected infer"),
+        }
+    }
+
+    #[test]
+    fn parses_raw_image_request() {
+        let p = parse_request(r#"{"image": [0.1, 0.2, 0.3]}"#, 3).unwrap();
+        match p {
+            Parsed::Infer { image, .. } => assert_eq!(image, vec![0.1, 0.2, 0.3]),
+            _ => panic!("expected infer"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        assert!(parse_request("not json", 3).is_err());
+        assert!(parse_request(r#"{"image": [1.0]}"#, 3).is_err());
+        assert!(parse_request(r#"{"precision": "half"}"#, 3).is_err());
+        assert!(parse_request(r#"{"cmd": "dance"}"#, 3).is_err());
+    }
+
+    #[test]
+    fn parses_commands() {
+        assert!(matches!(parse_request(r#"{"cmd": "stats"}"#, 3).unwrap(), Parsed::Stats));
+        assert!(matches!(parse_request(r#"{"cmd": "quit"}"#, 3).unwrap(), Parsed::Quit));
+    }
+}

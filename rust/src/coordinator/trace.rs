@@ -1,0 +1,216 @@
+//! Workload trace generation and replay — the load-generation substrate
+//! for serving experiments (arrival processes the paper's successor
+//! evaluations use: open-loop Poisson, bursts, diurnal ramps).
+//!
+//! A [`Trace`] is a deterministic list of (arrival offset, image index,
+//! precision) tuples; [`replay`] drives a [`Coordinator`] with it in
+//! open loop and reports the achieved latency distribution.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::model::ImageCorpus;
+use crate::simulator::device::Precision;
+use crate::util::rng::Rng;
+
+use super::engine::Coordinator;
+
+/// Arrival process shapes.
+#[derive(Debug, Clone, Copy)]
+pub enum Arrival {
+    /// Fixed inter-arrival gap.
+    Uniform { rate_per_s: f64 },
+    /// Exponential inter-arrivals (Poisson process).
+    Poisson { rate_per_s: f64 },
+    /// Poisson base load with periodic multiplicative bursts.
+    Bursty { rate_per_s: f64, burst_every: usize, burst_len: usize, burst_mult: f64 },
+}
+
+/// One request of a trace.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEntry {
+    /// Arrival time offset from trace start.
+    pub at: Duration,
+    /// Corpus image index.
+    pub image: u64,
+    pub precision: Precision,
+}
+
+/// A deterministic workload trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub entries: Vec<TraceEntry>,
+    pub seed: u64,
+}
+
+impl Trace {
+    /// Generate `n` arrivals with the given process; `imprecise_frac`
+    /// of requests (deterministically chosen) use the imprecise path.
+    pub fn generate(n: usize, arrival: Arrival, imprecise_frac: f64, seed: u64) -> Trace {
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0f64;
+        let mut entries = Vec::with_capacity(n);
+        for i in 0..n {
+            let gap = match arrival {
+                Arrival::Uniform { rate_per_s } => 1.0 / rate_per_s,
+                Arrival::Poisson { rate_per_s } => {
+                    // inverse-CDF exponential sample
+                    -(1.0 - rng.next_f64()).ln() / rate_per_s
+                }
+                Arrival::Bursty { rate_per_s, burst_every, burst_len, burst_mult } => {
+                    let in_burst = burst_every > 0 && (i % burst_every) < burst_len;
+                    let rate = if in_burst { rate_per_s * burst_mult } else { rate_per_s };
+                    -(1.0 - rng.next_f64()).ln() / rate
+                }
+            };
+            t += gap;
+            let precision = if rng.next_f64() < imprecise_frac {
+                Precision::Imprecise
+            } else {
+                Precision::Precise
+            };
+            entries.push(TraceEntry { at: Duration::from_secs_f64(t), image: i as u64, precision });
+        }
+        Trace { entries, seed }
+    }
+
+    /// Total span of the trace.
+    pub fn span(&self) -> Duration {
+        self.entries.last().map(|e| e.at).unwrap_or_default()
+    }
+
+    /// Offered load in requests/second.
+    pub fn offered_rate(&self) -> f64 {
+        if self.entries.len() < 2 {
+            return 0.0;
+        }
+        self.entries.len() as f64 / self.span().as_secs_f64()
+    }
+}
+
+/// Replay outcome.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    pub completed: usize,
+    pub errors: usize,
+    pub wall: Duration,
+    /// Sorted end-to-end latencies (ms).
+    pub latencies_ms: Vec<f64>,
+    pub achieved_rate: f64,
+}
+
+impl ReplayReport {
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 0.0;
+        }
+        self.latencies_ms[((self.latencies_ms.len() - 1) as f64 * p) as usize]
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} completed, {} errors in {:.2} s -> {:.1} req/s; latency p50 {:.1} ms p95 {:.1} ms p99 {:.1} ms",
+            self.completed,
+            self.errors,
+            self.wall.as_secs_f64(),
+            self.achieved_rate,
+            self.percentile_ms(0.50),
+            self.percentile_ms(0.95),
+            self.percentile_ms(0.99),
+        )
+    }
+}
+
+/// Open-loop replay: arrivals are honored on schedule regardless of
+/// completions (the correct way to measure a serving system under
+/// load), responses are collected asynchronously.
+pub fn replay(coordinator: &Arc<Coordinator>, trace: &Trace, corpus: &ImageCorpus) -> Result<ReplayReport> {
+    let start = Instant::now();
+    let mut pending = Vec::with_capacity(trace.entries.len());
+    for entry in &trace.entries {
+        if let Some(wait) = entry.at.checked_sub(start.elapsed()) {
+            if !wait.is_zero() {
+                std::thread::sleep(wait);
+            }
+        }
+        let rx = coordinator.submit(corpus.image(entry.image), entry.precision, false)?;
+        pending.push((Instant::now(), rx));
+    }
+    let mut latencies = Vec::with_capacity(pending.len());
+    let mut errors = 0usize;
+    for (_, rx) in pending {
+        match rx.recv() {
+            Ok(Ok(resp)) => latencies.push(resp.latency.as_secs_f64() * 1e3),
+            _ => errors += 1,
+        }
+    }
+    let wall = start.elapsed();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(ReplayReport {
+        completed: latencies.len(),
+        errors,
+        achieved_rate: latencies.len() as f64 / wall.as_secs_f64(),
+        wall,
+        latencies_ms: latencies,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_ordered() {
+        let a = Trace::generate(50, Arrival::Poisson { rate_per_s: 100.0 }, 0.5, 9);
+        let b = Trace::generate(50, Arrival::Poisson { rate_per_s: 100.0 }, 0.5, 9);
+        assert_eq!(a.entries.len(), 50);
+        for (x, y) in a.entries.iter().zip(&b.entries) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.precision, y.precision);
+        }
+        // strictly increasing arrivals
+        assert!(a.entries.windows(2).all(|w| w[0].at < w[1].at));
+        // different seeds differ
+        let c = Trace::generate(50, Arrival::Poisson { rate_per_s: 100.0 }, 0.5, 10);
+        assert!(a.entries.iter().zip(&c.entries).any(|(x, y)| x.at != y.at));
+    }
+
+    #[test]
+    fn uniform_rate_is_exact() {
+        let t = Trace::generate(100, Arrival::Uniform { rate_per_s: 200.0 }, 0.0, 1);
+        assert!((t.offered_rate() - 200.0).abs() < 1.0, "{}", t.offered_rate());
+        assert!(t.entries.iter().all(|e| e.precision == Precision::Precise));
+    }
+
+    #[test]
+    fn poisson_rate_approximates_target() {
+        let t = Trace::generate(2000, Arrival::Poisson { rate_per_s: 50.0 }, 1.0, 3);
+        let rate = t.offered_rate();
+        assert!((35.0..70.0).contains(&rate), "rate {rate}");
+        assert!(t.entries.iter().all(|e| e.precision == Precision::Imprecise));
+    }
+
+    #[test]
+    fn bursts_raise_local_rate() {
+        let t = Trace::generate(
+            400,
+            Arrival::Bursty { rate_per_s: 50.0, burst_every: 100, burst_len: 50, burst_mult: 10.0 },
+            0.0,
+            4,
+        );
+        // bursty trace must be shorter than a pure-poisson one at the
+        // same base rate (some arrivals are 10x faster)
+        let p = Trace::generate(400, Arrival::Poisson { rate_per_s: 50.0 }, 0.0, 4);
+        assert!(t.span() < p.span());
+    }
+
+    #[test]
+    fn imprecise_fraction_respected() {
+        let t = Trace::generate(1000, Arrival::Uniform { rate_per_s: 10.0 }, 0.3, 5);
+        let frac = t.entries.iter().filter(|e| e.precision == Precision::Imprecise).count() as f64
+            / 1000.0;
+        assert!((0.2..0.4).contains(&frac), "fraction {frac}");
+    }
+}

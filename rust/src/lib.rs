@@ -1,0 +1,24 @@
+//! # mobile-convnet
+//!
+//! Reproduction of *"Fast and Energy-Efficient CNN Inference on IoT
+//! Devices"* (Motamedi, Fong, Ghiasi — 2016) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! - **Layer 1 (Pallas)**: the paper's vectorized convolution kernel,
+//!   re-thought for TPU (channel-vectorized layout, output-channel
+//!   granularity `g` as BlockSpec tiling). Build-time Python only.
+//! - **Layer 2 (JAX)**: SqueezeNet v1.0 forward pass, AOT-lowered to HLO
+//!   text under `artifacts/`.
+//! - **Layer 3 (this crate)**: inference coordinator — request router,
+//!   dynamic batcher, PJRT runtime, the mobile-GPU simulator substrate
+//!   (Adreno 530/430/330 device models), the granularity autotuner, and
+//!   the power/energy model that regenerates the paper's tables.
+
+pub mod config;
+pub mod convnet;
+pub mod coordinator;
+pub mod model;
+pub mod runtime;
+pub mod simulator;
+pub mod telemetry;
+pub mod util;

@@ -1,0 +1,258 @@
+//! `mobile-convnet` CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//!
+//! - `tables [--table i|iii|iv|v|vi|fig10] [--device ID]` — regenerate
+//!   the paper's evaluation tables from the device models.
+//! - `autotune [--device ID] [--precision P]` — per-layer granularity
+//!   sweep (Table I / Fig. 10 data).
+//! - `simulate --device ID [--precision P] [--granularity G]` — price a
+//!   full network run on a device model.
+//! - `infer [--count N] [--precision P] [--seed S] [--sim]` — run real
+//!   inferences through the PJRT runtime.
+//! - `agreement [--count N]` — precise-vs-imprecise top-1 agreement
+//!   (§IV-B's 10 000-image experiment, on the synthetic corpus).
+//! - `serve [--addr HOST:PORT]` — start the JSON-lines TCP server.
+//! - `info` — artifact/manifest/weight summary.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use mobile_convnet::config::AppConfig;
+use mobile_convnet::coordinator::{server, Coordinator};
+use mobile_convnet::model::{ImageCorpus, SqueezeNet};
+use mobile_convnet::simulator::device::{DeviceProfile, Precision};
+use mobile_convnet::simulator::{autotune, cost, tables};
+use mobile_convnet::util::cli::Args;
+
+const USAGE: &str = "\
+mobile-convnet — SqueezeNet inference coordinator (paper reproduction)
+
+USAGE: mobile-convnet <COMMAND> [OPTIONS]
+
+COMMANDS:
+  tables      regenerate the paper's tables   [--table i|iii|iv|v|vi|fig10] [--device ID]
+  autotune    granularity sweep per layer     [--device ID] [--precision P]
+  simulate    price a run on a device model   --device ID [--precision P] [--granularity G]
+  infer       run real PJRT inferences        [--count N] [--precision P] [--seed S] [--sim]
+  agreement   precise vs imprecise top-1      [--count N] [--seed S]
+  serve       start the TCP JSON-lines server [--addr HOST:PORT] [--config FILE]
+  info        artifact & model summary
+
+Common options: --config FILE (JSON), --artifacts DIR";
+
+fn precision_of(args: &Args) -> Result<Precision> {
+    match args.get_or("precision", "precise") {
+        "precise" => Ok(Precision::Precise),
+        "imprecise" => Ok(Precision::Imprecise),
+        other => anyhow::bail!("unknown precision '{other}'"),
+    }
+}
+
+fn device_of(args: &Args) -> Result<DeviceProfile> {
+    let id = args.get_or("device", "n5");
+    DeviceProfile::by_id(id).with_context(|| format!("unknown device '{id}' (s7|6p|n5)"))
+}
+
+fn app_config(args: &Args) -> Result<AppConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => AppConfig::load(std::path::Path::new(path))?,
+        None => AppConfig::default(),
+    };
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = dir.into();
+    }
+    if let Some(addr) = args.get("addr") {
+        cfg.server_addr = addr.to_string();
+    }
+    Ok(cfg)
+}
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command() {
+        Some("tables") => cmd_tables(args),
+        Some("autotune") => cmd_autotune(args),
+        Some("simulate") => cmd_simulate(args),
+        Some("infer") => cmd_infer(args),
+        Some("agreement") => cmd_agreement(args),
+        Some("serve") => cmd_serve(args),
+        Some("info") => cmd_info(args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    match args.get("table") {
+        None | Some("all") => println!("{}", tables::render_all()),
+        Some("i") | Some("I") => println!("{}", tables::render_table_i()),
+        Some("iii") | Some("III") => println!("{}", tables::render_table_iii()),
+        Some("iv") | Some("IV") => println!("{}", tables::render_table_iv()),
+        Some("v") | Some("V") => println!("{}", tables::render_table_v()),
+        Some("vi") | Some("VI") => println!("{}", tables::render_table_vi()),
+        Some("fig10") => println!("{}", tables::render_fig10(&device_of(args)?)),
+        Some(other) => anyhow::bail!("unknown table '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_autotune(args: &Args) -> Result<()> {
+    let device = device_of(args)?;
+    let precision = precision_of(args)?;
+    let net = SqueezeNet::v1_0();
+    println!("autotuning {} ({}):", device.name, precision.label());
+    for spec in net.conv_layers() {
+        let curve = autotune::autotune_layer(spec, precision, &device);
+        let (gopt, topt) = curve.optimal();
+        let (gpess, tpess) = curve.pessimal();
+        println!(
+            "{:<16} optimal G{:<3} {:>8.2} ms | pessimal G{:<3} {:>8.2} ms | {:>5.2}X",
+            tables::short_label(&spec.name),
+            gopt,
+            topt,
+            gpess,
+            tpess,
+            tpess / topt
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let device = device_of(args)?;
+    let precision = precision_of(args)?;
+    let net = SqueezeNet::v1_0();
+    let fixed_g = args
+        .get("granularity")
+        .map(|s| s.parse::<usize>())
+        .transpose()
+        .map_err(|_| anyhow::anyhow!("--granularity expects an integer"))?;
+    let plan = autotune::autotune_network(&net, precision, &device);
+    let g = |spec: &mobile_convnet::model::graph::ConvSpec| match fixed_g {
+        Some(g) if spec.cout % g == 0 && (spec.cout / g) % 4 == 0 => g,
+        _ => plan.optimal_g(&spec.name),
+    };
+    let mode = cost::RunMode::Parallel(precision);
+    let seq = cost::network_time(&net, cost::RunMode::Sequential, &device, &g);
+    let par = cost::network_time(&net, mode, &device, &g);
+    let energy = mobile_convnet::simulator::power::energy_joules(&device, mode, par);
+    println!("{} / {}:", device.name, precision.label());
+    println!("  sequential          {seq:>10.2} ms");
+    println!("  parallel            {par:>10.2} ms  ({:.2}X)", seq / par);
+    println!("  energy (parallel)   {energy:>10.3} J");
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let cfg = app_config(args)?;
+    let count = args.get_usize("count", 4).map_err(|e| anyhow::anyhow!(e))?;
+    let seed = args.get_u64("seed", 0).map_err(|e| anyhow::anyhow!(e))?;
+    let precision = precision_of(args)?;
+    let with_sim = args.flag("sim");
+    let coordinator = Coordinator::start(cfg.coordinator_config())?;
+    let corpus = ImageCorpus::new(seed);
+    for i in 0..count as u64 {
+        let resp = coordinator.infer(corpus.image(i), precision, with_sim)?;
+        print!(
+            "image {i}: top1={} p={:.4} latency={:.2} ms batch={}",
+            resp.top1,
+            resp.top5.first().map(|t| t.1).unwrap_or(0.0),
+            resp.latency.as_secs_f64() * 1e3,
+            resp.batch_size
+        );
+        for s in &resp.sim {
+            print!("  [{} {:.1} ms / {:.3} J]", s.device, s.latency_ms, s.energy_j);
+        }
+        println!();
+    }
+    println!("--\n{}", coordinator.telemetry.report());
+    Ok(())
+}
+
+fn cmd_agreement(args: &Args) -> Result<()> {
+    let cfg = app_config(args)?;
+    let count = args.get_usize("count", 64).map_err(|e| anyhow::anyhow!(e))?;
+    let seed = args.get_u64("seed", 2012).map_err(|e| anyhow::anyhow!(e))?;
+    let coordinator = Coordinator::start(cfg.coordinator_config())?;
+    let corpus = ImageCorpus::new(seed);
+    let mut agree = 0usize;
+    for i in 0..count as u64 {
+        let img = corpus.image(i);
+        let p = coordinator.infer(img.clone(), Precision::Precise, false)?;
+        let q = coordinator.infer(img, Precision::Imprecise, false)?;
+        if p.top1 == q.top1 {
+            agree += 1;
+        }
+    }
+    println!(
+        "precise vs imprecise top-1 agreement: {agree}/{count} ({:.2}%)",
+        100.0 * agree as f64 / count as f64
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = app_config(args)?;
+    println!("loading artifacts from {} ...", cfg.artifacts_dir.display());
+    let coordinator = Arc::new(Coordinator::start(cfg.coordinator_config())?);
+    let stop = Arc::new(AtomicBool::new(false));
+    server::serve(coordinator, &cfg.server_addr, stop, |addr| {
+        println!("listening on {addr} (JSON lines; {{\"cmd\":\"quit\"}} to stop)");
+    })
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = app_config(args)?;
+    let net = SqueezeNet::v1_0();
+    println!(
+        "SqueezeNet v1.0: {} conv layers, {} params, {:.1} MMACs/image",
+        net.conv_layers().len(),
+        net.total_params(),
+        net.total_macs() as f64 / 1e6
+    );
+    match mobile_convnet::runtime::Manifest::load(&cfg.artifacts_dir) {
+        Ok(m) => {
+            println!(
+                "artifacts: {} ({} entries, seed {})",
+                cfg.artifacts_dir.display(),
+                m.artifacts.len(),
+                m.seed
+            );
+            for a in &m.artifacts {
+                println!(
+                    "  {:<40} impl={:<6} precision={:<9} batch={}",
+                    a.file, a.impl_kind, a.precision, a.batch
+                );
+            }
+            m.validate_against(&net)?;
+            println!("manifest/model contract: OK");
+        }
+        Err(e) => println!("artifacts not available: {e:#} (run `make artifacts`)"),
+    }
+    for d in DeviceProfile::all() {
+        println!("device {:<10} {} / {}", d.id, d.soc, d.gpu_name);
+    }
+    Ok(())
+}

@@ -1,0 +1,364 @@
+//! SqueezeNet v1.0 layer graph: shapes, parameter specs, FLOP counts.
+//!
+//! Terminology follows the paper: `Fn SQ1` is the squeeze layer of fire
+//! module *n*, `Fn EX1`/`Fn EX3` its 1x1 / 3x3 expand layers.  The input
+//! is a 224x224 RGB image (§II); spatial sizes follow the floor
+//! convention of the convolution arithmetic, matching the Python model.
+
+/// Image side length fed to conv1.
+pub const INPUT_HW: usize = 224;
+/// RGB input channels.
+pub const INPUT_CHANNELS: usize = 3;
+/// ILSVRC class count (conv10 filter count).
+pub const NUM_CLASSES: usize = 1000;
+/// conv1 filter count.
+pub const CONV1_FILTERS: usize = 96;
+/// conv1 kernel size (7x7) and stride (2) per SqueezeNet v1.0.
+pub const CONV1_K: usize = 7;
+pub const CONV1_STRIDE: usize = 2;
+
+/// (squeeze, expand1x1, expand3x3) channel counts for fire2..fire9.
+pub const FIRE_SPECS: [(usize, usize, usize); 8] = [
+    (16, 64, 64),
+    (16, 64, 64),
+    (32, 128, 128),
+    (32, 128, 128),
+    (48, 192, 192),
+    (48, 192, 192),
+    (64, 256, 256),
+    (64, 256, 256),
+];
+
+/// A convolutional layer's full static description.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvSpec {
+    /// Canonical name, e.g. `conv1`, `fire5_expand3`, `conv10`.
+    pub name: String,
+    /// Square kernel side `K`.
+    pub k: usize,
+    /// Stride `S`.
+    pub stride: usize,
+    /// Symmetric zero padding.
+    pub pad: usize,
+    /// Input channels (`numInputLayers`).
+    pub cin: usize,
+    /// Output channels (`numOutputLayers`, `M`).
+    pub cout: usize,
+    /// Input spatial side.
+    pub hw_in: usize,
+    /// Output spatial side.
+    pub hw_out: usize,
+}
+
+impl ConvSpec {
+    /// `numOutputElements` = M * outputHeight * outputWidth (Eq. 1).
+    pub fn num_output_elements(&self) -> usize {
+        self.cout * self.hw_out * self.hw_out
+    }
+
+    /// Multiply-accumulates for the full layer.
+    pub fn macs(&self) -> u64 {
+        (self.num_output_elements() as u64) * (self.cin as u64) * (self.k * self.k) as u64
+    }
+
+    /// Weight parameter count (plus `cout` biases).
+    pub fn weight_params(&self) -> usize {
+        self.k * self.k * self.cin * self.cout
+    }
+
+    /// Bytes of one input feature-map volume (f32).
+    pub fn input_bytes(&self) -> u64 {
+        (self.hw_in * self.hw_in * self.cin * 4) as u64
+    }
+
+    /// Bytes of the output feature-map volume (f32).
+    pub fn output_bytes(&self) -> u64 {
+        (self.num_output_elements() * 4) as u64
+    }
+
+    /// Bytes of the filter bank (f32).
+    pub fn weight_bytes(&self) -> u64 {
+        (self.weight_params() * 4) as u64
+    }
+}
+
+/// Non-convolutional graph nodes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv(ConvSpec),
+    /// 3x3 stride-2 max pool over `channels` maps of side `hw_in`.
+    MaxPool {
+        name: String,
+        channels: usize,
+        hw_in: usize,
+        hw_out: usize,
+    },
+    /// Global average pool producing the logit vector.
+    GlobalAvgPool { name: String, channels: usize, hw_in: usize },
+    Softmax { name: String, classes: usize },
+}
+
+/// One node of the executable graph.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layer {
+    pub kind: LayerKind,
+    /// Macro-layer this node belongs to (the granularity of Table IV).
+    pub macro_layer: MacroLayer,
+}
+
+/// The paper reports per-"layer" numbers at macro granularity:
+/// Conv1, Fire2..Fire9, Conv10 (Table IV), pooling/softmax folded into
+/// the totals (Table VI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MacroLayer {
+    Conv1,
+    Fire(u8),
+    Conv10,
+    Head,
+}
+
+impl MacroLayer {
+    pub fn label(&self) -> String {
+        match self {
+            MacroLayer::Conv1 => "Conv 1".to_string(),
+            MacroLayer::Fire(n) => format!("Fire {n}"),
+            MacroLayer::Conv10 => "Conv 10".to_string(),
+            MacroLayer::Head => "Head".to_string(),
+        }
+    }
+
+    /// All macro layers in Table IV column order.
+    pub fn table_iv_order() -> Vec<MacroLayer> {
+        let mut v = vec![MacroLayer::Conv1];
+        v.extend((2..=9).map(MacroLayer::Fire));
+        v.push(MacroLayer::Conv10);
+        v
+    }
+}
+
+/// The whole network.
+#[derive(Debug, Clone)]
+pub struct SqueezeNet {
+    pub layers: Vec<Layer>,
+}
+
+fn pool_out(hw: usize) -> usize {
+    (hw - 3) / 2 + 1
+}
+
+impl SqueezeNet {
+    /// Build SqueezeNet v1.0 for a 224x224x3 input.
+    pub fn v1_0() -> Self {
+        Self::with_input(INPUT_HW)
+    }
+
+    /// Build the v1.0 topology for an arbitrary square input (parameter
+    /// shapes are unchanged — only spatial sizes scale). Used by tests
+    /// to run the full network cheaply.
+    pub fn with_input(input_hw: usize) -> Self {
+        let mut layers = Vec::new();
+        let mut hw = input_hw;
+        let conv1_out = (hw - CONV1_K) / CONV1_STRIDE + 1;
+        layers.push(Layer {
+            kind: LayerKind::Conv(ConvSpec {
+                name: "conv1".into(),
+                k: CONV1_K,
+                stride: CONV1_STRIDE,
+                pad: 0,
+                cin: INPUT_CHANNELS,
+                cout: CONV1_FILTERS,
+                hw_in: hw,
+                hw_out: conv1_out,
+            }),
+            macro_layer: MacroLayer::Conv1,
+        });
+        hw = conv1_out;
+        layers.push(Layer {
+            kind: LayerKind::MaxPool {
+                name: "pool1".into(),
+                channels: CONV1_FILTERS,
+                hw_in: hw,
+                hw_out: pool_out(hw),
+            },
+            macro_layer: MacroLayer::Conv1,
+        });
+        hw = pool_out(hw);
+
+        let mut cin = CONV1_FILTERS;
+        for (i, &(s, e1, e3)) in FIRE_SPECS.iter().enumerate() {
+            let fire = (i + 2) as u8;
+            let ml = MacroLayer::Fire(fire);
+            let mk = |name: &str, k, pad, cin, cout| ConvSpec {
+                name: format!("fire{fire}_{name}"),
+                k,
+                stride: 1,
+                pad,
+                cin,
+                cout,
+                hw_in: hw,
+                hw_out: hw,
+            };
+            layers.push(Layer { kind: LayerKind::Conv(mk("squeeze", 1, 0, cin, s)), macro_layer: ml });
+            layers.push(Layer { kind: LayerKind::Conv(mk("expand1", 1, 0, s, e1)), macro_layer: ml });
+            layers.push(Layer { kind: LayerKind::Conv(mk("expand3", 3, 1, s, e3)), macro_layer: ml });
+            cin = e1 + e3;
+            if fire == 4 || fire == 8 {
+                layers.push(Layer {
+                    kind: LayerKind::MaxPool {
+                        name: format!("pool{fire}"),
+                        channels: cin,
+                        hw_in: hw,
+                        hw_out: pool_out(hw),
+                    },
+                    macro_layer: ml,
+                });
+                hw = pool_out(hw);
+            }
+        }
+
+        layers.push(Layer {
+            kind: LayerKind::Conv(ConvSpec {
+                name: "conv10".into(),
+                k: 1,
+                stride: 1,
+                pad: 0,
+                cin,
+                cout: NUM_CLASSES,
+                hw_in: hw,
+                hw_out: hw,
+            }),
+            macro_layer: MacroLayer::Conv10,
+        });
+        layers.push(Layer {
+            kind: LayerKind::GlobalAvgPool {
+                name: "avgpool10".into(),
+                channels: NUM_CLASSES,
+                hw_in: hw,
+            },
+            macro_layer: MacroLayer::Head,
+        });
+        layers.push(Layer {
+            kind: LayerKind::Softmax { name: "softmax".into(), classes: NUM_CLASSES },
+            macro_layer: MacroLayer::Head,
+        });
+        SqueezeNet { layers }
+    }
+
+    /// All convolutional layers in execution order.
+    pub fn conv_layers(&self) -> Vec<&ConvSpec> {
+        self.layers
+            .iter()
+            .filter_map(|l| match &l.kind {
+                LayerKind::Conv(c) => Some(c),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Convolutional layers belonging to a macro layer.
+    pub fn convs_of(&self, ml: MacroLayer) -> Vec<&ConvSpec> {
+        self.layers
+            .iter()
+            .filter(|l| l.macro_layer == ml)
+            .filter_map(|l| match &l.kind {
+                LayerKind::Conv(c) => Some(c),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Look a conv layer up by canonical name.
+    pub fn conv_by_name(&self, name: &str) -> Option<&ConvSpec> {
+        self.conv_layers().into_iter().find(|c| c.name == name)
+    }
+
+    /// The 13 layers of Table I / Fig. 10 (conv1 + every expand layer),
+    /// in the paper's column order.
+    pub fn table_i_layers(&self) -> Vec<&ConvSpec> {
+        let mut out = vec![self.conv_by_name("conv1").expect("conv1")];
+        for fire in 2..=7 {
+            for which in ["expand1", "expand3"] {
+                out.push(
+                    self.conv_by_name(&format!("fire{fire}_{which}"))
+                        .expect("expand layer"),
+                );
+            }
+        }
+        out
+    }
+
+    /// Total multiply-accumulates of all conv layers.
+    pub fn total_macs(&self) -> u64 {
+        self.conv_layers().iter().map(|c| c.macs()).sum()
+    }
+
+    /// Total parameter count (weights + biases).
+    pub fn total_params(&self) -> usize {
+        self.conv_layers()
+            .iter()
+            .map(|c| c.weight_params() + c.cout)
+            .sum()
+    }
+
+    /// Ordered parameter tensor specs: must match `model.param_specs()`
+    /// on the Python side (checked against manifest.json).
+    pub fn param_specs(&self) -> Vec<(String, Vec<usize>)> {
+        let mut v = Vec::new();
+        for c in self.conv_layers() {
+            v.push((format!("{}_w", c.name), vec![c.k, c.k, c.cin, c.cout]));
+            v.push((format!("{}_b", c.name), vec![c.cout]));
+        }
+        // Python names squeeze/expand params fire{n}_{role}_{w,b} with
+        // role in squeeze/expand1/expand3 — identical to conv.name here.
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v1_0_shapes() {
+        let net = SqueezeNet::v1_0();
+        let convs = net.conv_layers();
+        assert_eq!(convs.len(), 2 + 8 * 3);
+        assert_eq!(convs[0].hw_out, 109);
+        assert_eq!(net.conv_by_name("fire2_squeeze").unwrap().hw_in, 54);
+        assert_eq!(net.conv_by_name("fire5_squeeze").unwrap().hw_in, 26);
+        assert_eq!(net.conv_by_name("fire9_squeeze").unwrap().hw_in, 12);
+        assert_eq!(net.conv_by_name("conv10").unwrap().hw_in, 12);
+        assert_eq!(net.conv_by_name("conv10").unwrap().cin, 512);
+    }
+
+    #[test]
+    fn param_count_matches_python() {
+        // model.num_params() on the Python side prints 1_248_424.
+        assert_eq!(SqueezeNet::v1_0().total_params(), 1_248_424);
+    }
+
+    #[test]
+    fn expand3_preserves_spatial() {
+        let net = SqueezeNet::v1_0();
+        for c in net.conv_layers() {
+            if c.name.ends_with("expand3") {
+                assert_eq!(c.k, 3);
+                assert_eq!(c.pad, 1);
+                assert_eq!(c.hw_in, c.hw_out);
+            }
+        }
+    }
+
+    #[test]
+    fn table_i_has_thirteen_layers() {
+        assert_eq!(SqueezeNet::v1_0().table_i_layers().len(), 13);
+    }
+
+    #[test]
+    fn macro_layer_order() {
+        let order = MacroLayer::table_iv_order();
+        assert_eq!(order.len(), 10);
+        assert_eq!(order[0], MacroLayer::Conv1);
+        assert_eq!(order[9], MacroLayer::Conv10);
+    }
+}

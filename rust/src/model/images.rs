@@ -1,0 +1,74 @@
+//! Seeded synthetic image corpus — the stand-in for the ILSVRC-2012
+//! validation set used in §IV-B (DESIGN.md §2: prediction agreement
+//! between precise and imprecise execution is a property of the
+//! numerics, not of natural image statistics).
+//!
+//! Images are 224x224x3 f32 in HWC order, values in [0, 1), generated
+//! with ChaCha8 so any process (tests, benches, the serving engine, the
+//! Python side if ever needed) can regenerate image *i* of corpus *seed*
+//! byte-identically.
+
+use crate::util::rng::Rng;
+
+use super::graph::{INPUT_CHANNELS, INPUT_HW};
+
+/// Number of f32 scalars per image.
+pub const IMAGE_LEN: usize = INPUT_HW * INPUT_HW * INPUT_CHANNELS;
+
+/// A deterministic, indexable corpus of synthetic images.
+#[derive(Debug, Clone, Copy)]
+pub struct ImageCorpus {
+    seed: u64,
+}
+
+impl ImageCorpus {
+    pub fn new(seed: u64) -> Self {
+        Self { seed }
+    }
+
+    /// Generate image `index` (HWC f32 in [0,1), length [`IMAGE_LEN`]).
+    pub fn image(&self, index: u64) -> Vec<f32> {
+        // Derive a per-image stream so images are independent of each
+        // other and of how many were generated before.
+        let mut rng = Rng::new(self.seed).fork(index);
+        (0..IMAGE_LEN).map(|_| rng.next_f32()).collect()
+    }
+
+    /// Generate a contiguous batch `(n, 224, 224, 3)` starting at `start`.
+    pub fn batch(&self, start: u64, n: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(n * IMAGE_LEN);
+        for i in 0..n as u64 {
+            out.extend_from_slice(&self.image(start + i));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let c = ImageCorpus::new(7);
+        assert_eq!(c.image(3), c.image(3));
+        assert_ne!(c.image(3), c.image(4));
+        let other = ImageCorpus::new(8);
+        assert_ne!(c.image(3), other.image(3));
+    }
+
+    #[test]
+    fn batch_concatenates_images() {
+        let c = ImageCorpus::new(1);
+        let b = c.batch(10, 2);
+        assert_eq!(b.len(), 2 * IMAGE_LEN);
+        assert_eq!(&b[..IMAGE_LEN], c.image(10).as_slice());
+        assert_eq!(&b[IMAGE_LEN..], c.image(11).as_slice());
+    }
+
+    #[test]
+    fn values_in_unit_interval() {
+        let img = ImageCorpus::new(2).image(0);
+        assert!(img.iter().all(|v| (0.0..1.0).contains(v)));
+    }
+}

@@ -1,0 +1,15 @@
+//! SqueezeNet v1.0 model description and synthetic data sources.
+//!
+//! The architecture table here is derived *independently* from the paper
+//! (§II: two convolutional layers + eight fire modules) and cross-checked
+//! against the Python side through `artifacts/manifest.json` at load time
+//! — the two sides must agree on every shape or the runtime refuses to
+//! start.
+
+pub mod graph;
+pub mod images;
+pub mod weights;
+
+pub use graph::{ConvSpec, Layer, LayerKind, MacroLayer, SqueezeNet};
+pub use images::ImageCorpus;
+pub use weights::WeightStore;

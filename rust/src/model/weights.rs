@@ -1,0 +1,227 @@
+//! Parser for `artifacts/weights.bin` — the seeded synthetic parameters
+//! written by `python/compile/aot.py` in AOT argument order.
+//!
+//! Format (little-endian):
+//! `b"MCNW" | u32 version | u32 count` then per parameter
+//! `u16 name_len | name | u8 ndim | u32 dims[ndim] | f32 data[]`.
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::graph::SqueezeNet;
+
+const MAGIC: &[u8; 4] = b"MCNW";
+const VERSION: u32 = 1;
+
+/// One named parameter tensor.
+#[derive(Debug, Clone)]
+pub struct Param {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Row-major (C-order) f32 data; conv weights are HWIO.
+    pub data: Vec<f32>,
+}
+
+impl Param {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// All parameters, in AOT argument order, with by-name lookup.
+#[derive(Debug, Clone)]
+pub struct WeightStore {
+    params: Vec<Param>,
+    by_name: HashMap<String, usize>,
+}
+
+impl WeightStore {
+    /// Parse a `weights.bin` file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading weights from {}", path.display()))?;
+        Self::parse(&bytes)
+    }
+
+    /// Parse from raw bytes.
+    pub fn parse(bytes: &[u8]) -> Result<Self> {
+        let mut r = bytes;
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic).context("weights: truncated magic")?;
+        if &magic != MAGIC {
+            bail!("weights: bad magic {magic:?}");
+        }
+        let version = read_u32(&mut r)?;
+        if version != VERSION {
+            bail!("weights: unsupported version {version}");
+        }
+        let count = read_u32(&mut r)? as usize;
+        if count > 10_000 {
+            bail!("weights: implausible parameter count {count}");
+        }
+        let mut params = Vec::with_capacity(count);
+        let mut by_name = HashMap::with_capacity(count);
+        for i in 0..count {
+            let name_len = read_u16(&mut r)? as usize;
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name).context("weights: truncated name")?;
+            let name = String::from_utf8(name).context("weights: non-utf8 name")?;
+            let ndim = read_u8(&mut r)? as usize;
+            if ndim > 8 {
+                bail!("weights: {name}: implausible ndim {ndim}");
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32(&mut r)? as usize);
+            }
+            let n: usize = shape.iter().product();
+            if r.len() < n * 4 {
+                bail!("weights: {name}: truncated data ({} bytes left, need {})", r.len(), n * 4);
+            }
+            let (head, rest) = r.split_at(n * 4);
+            let data = head
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            r = rest;
+            by_name.insert(name.clone(), i);
+            params.push(Param { name, shape, data });
+        }
+        Ok(Self { params, by_name })
+    }
+
+    /// Parameters in AOT argument order.
+    pub fn params(&self) -> &[Param] {
+        &self.params
+    }
+
+    pub fn len(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.params.is_empty()
+    }
+
+    /// Lookup by canonical name (e.g. `fire5_expand3_w`).
+    pub fn get(&self, name: &str) -> Option<&Param> {
+        self.by_name.get(name).map(|&i| &self.params[i])
+    }
+
+    /// Total scalar count across all parameters.
+    pub fn total_scalars(&self) -> usize {
+        self.params.iter().map(|p| p.len()).sum()
+    }
+
+    /// Check the store matches the network's parameter contract exactly
+    /// (names, order, shapes).
+    pub fn validate(&self, net: &SqueezeNet) -> Result<()> {
+        let specs = net.param_specs();
+        if specs.len() != self.params.len() {
+            bail!(
+                "weights: expected {} parameters, file has {}",
+                specs.len(),
+                self.params.len()
+            );
+        }
+        for ((name, shape), param) in specs.iter().zip(&self.params) {
+            if name != &param.name {
+                bail!("weights: order mismatch: expected {name}, found {}", param.name);
+            }
+            if shape != &param.shape {
+                bail!(
+                    "weights: {name}: shape mismatch: expected {shape:?}, found {:?}",
+                    param.shape
+                );
+            }
+            if param.data.iter().any(|v| !v.is_finite()) {
+                bail!("weights: {name}: non-finite values");
+            }
+        }
+        Ok(())
+    }
+}
+
+fn read_u8(r: &mut &[u8]) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b).context("weights: truncated u8")?;
+    Ok(b[0])
+}
+
+fn read_u16(r: &mut &[u8]) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b).context("weights: truncated u16")?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut &[u8]) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("weights: truncated u32")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn encode(params: &[(&str, Vec<usize>, Vec<f32>)]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(params.len() as u32).to_le_bytes());
+        for (name, shape, data) in params {
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.push(shape.len() as u8);
+            for d in shape {
+                out.extend_from_slice(&(*d as u32).to_le_bytes());
+            }
+            for v in data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn round_trip() {
+        let bytes = encode(&[
+            ("a_w", vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+            ("a_b", vec![2], vec![0.5, -0.5]),
+        ]);
+        let store = WeightStore::parse(&bytes).unwrap();
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.get("a_w").unwrap().data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(store.get("a_b").unwrap().shape, vec![2]);
+        assert_eq!(store.total_scalars(), 6);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = encode(&[("x", vec![1], vec![0.0])]);
+        bytes[0] = b'X';
+        assert!(WeightStore::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_data() {
+        let mut bytes = encode(&[("x", vec![4], vec![0.0; 4])]);
+        bytes.truncate(bytes.len() - 4);
+        assert!(WeightStore::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_non_finite() {
+        let bytes = encode(&[("conv1_w", vec![1], vec![f32::NAN])]);
+        let store = WeightStore::parse(&bytes).unwrap();
+        // validate() is what rejects NaN; parse keeps raw data.
+        assert!(store.get("conv1_w").unwrap().data[0].is_nan());
+    }
+}

@@ -1,0 +1,233 @@
+//! `artifacts/manifest.json` parsing and validation — the contract
+//! between the Python compile path and the Rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::graph::SqueezeNet;
+use crate::util::json::Json;
+
+/// One AOT-compiled artifact as described by the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    /// File name inside the artifacts directory.
+    pub file: String,
+    /// `xla` (hot path) or `pallas` (Layer-1 composition proof).
+    pub impl_kind: String,
+    /// `precise` or `imprecise`.
+    pub precision: String,
+    /// Batch size the executable was lowered for.
+    pub batch: usize,
+    /// Present for single-layer kernels (e.g. `conv1`).
+    pub layer: Option<String>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub seed: u64,
+    pub num_params: usize,
+    /// (name, shape) in AOT argument order.
+    pub params: Vec<(String, Vec<usize>)>,
+    pub input_hw: usize,
+    pub num_classes: usize,
+    pub hot_path_batches: Vec<usize>,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+/// Default artifact directory: `$MOBILE_CONVNET_ARTIFACTS` or
+/// `./artifacts` relative to the workspace root.
+pub fn default_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("MOBILE_CONVNET_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    // Walk up from the current dir so tests/benches running from
+    // target/ subdirectories still find the workspace artifacts.
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+impl Manifest {
+    /// Load and parse `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (dir recorded for later file resolution).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).context("manifest.json: parse error")?;
+        let usize_field = |j: &Json, k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("manifest.json: missing numeric '{k}'"))
+        };
+        let params = v
+            .get("params")
+            .and_then(Json::as_array)
+            .context("manifest.json: missing 'params'")?
+            .iter()
+            .map(|p| -> Result<(String, Vec<usize>)> {
+                let name = p
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .context("param missing name")?
+                    .to_string();
+                let shape = p
+                    .get("shape")
+                    .and_then(Json::as_array)
+                    .context("param missing shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("bad dim"))
+                    .collect::<Result<Vec<usize>>>()?;
+                Ok((name, shape))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let input_shape = v
+            .get("input_shape")
+            .and_then(Json::as_array)
+            .context("manifest.json: missing 'input_shape'")?;
+        let artifacts = v
+            .get("artifacts")
+            .and_then(Json::as_array)
+            .context("manifest.json: missing 'artifacts'")?
+            .iter()
+            .map(|a| -> Result<ArtifactInfo> {
+                Ok(ArtifactInfo {
+                    file: a
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .context("artifact missing file")?
+                        .to_string(),
+                    impl_kind: a
+                        .get("impl")
+                        .and_then(Json::as_str)
+                        .unwrap_or("xla")
+                        .to_string(),
+                    precision: a
+                        .get("precision")
+                        .and_then(Json::as_str)
+                        .unwrap_or("precise")
+                        .to_string(),
+                    batch: a.get("batch").and_then(Json::as_usize).unwrap_or(1),
+                    layer: a.get("layer").and_then(Json::as_str).map(|s| s.to_string()),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            seed: v.get("seed").and_then(Json::as_usize).unwrap_or(0) as u64,
+            num_params: usize_field(&v, "num_params")?,
+            params,
+            input_hw: input_shape
+                .first()
+                .and_then(Json::as_usize)
+                .context("bad input_shape")?,
+            num_classes: usize_field(&v, "num_classes")?,
+            hot_path_batches: v
+                .get("hot_path_batches")
+                .and_then(Json::as_array)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_else(|| vec![1]),
+            artifacts,
+        })
+    }
+
+    /// The Python and Rust sides must agree on every parameter name and
+    /// shape (same order). Refuse to run otherwise.
+    pub fn validate_against(&self, net: &SqueezeNet) -> Result<()> {
+        let specs = net.param_specs();
+        if specs.len() != self.params.len() {
+            bail!(
+                "manifest/params mismatch: rust expects {} tensors, manifest has {}",
+                specs.len(),
+                self.params.len()
+            );
+        }
+        for ((en, es), (mn, ms)) in specs.iter().zip(&self.params) {
+            if en != mn || es != ms {
+                bail!("manifest param mismatch: rust ({en}, {es:?}) vs manifest ({mn}, {ms:?})");
+            }
+        }
+        let total: usize = self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        if total != self.num_params {
+            bail!("manifest num_params {} != sum of shapes {total}", self.num_params);
+        }
+        Ok(())
+    }
+
+    /// Find the full-model artifact for (impl, precision, batch).
+    pub fn find_model(&self, impl_kind: &str, precision: &str, batch: usize) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| {
+            a.layer.is_none()
+                && a.impl_kind == impl_kind
+                && a.precision == precision
+                && a.batch == batch
+        })
+    }
+
+    /// Find a single-layer kernel artifact.
+    pub fn find_layer(&self, layer: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| a.layer.as_deref() == Some(layer))
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path_of(&self, info: &ArtifactInfo) -> PathBuf {
+        self.dir.join(&info.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "seed": 42,
+        "num_params": 8,
+        "params": [{"name": "conv1_w", "shape": [2, 2]}, {"name": "conv1_b", "shape": [4]}],
+        "input_shape": [224, 224, 3],
+        "num_classes": 1000,
+        "hot_path_batches": [1, 2],
+        "artifacts": [
+            {"file": "m_b1.hlo.txt", "impl": "xla", "precision": "precise", "batch": 1},
+            {"file": "k.hlo.txt", "impl": "pallas", "precision": "precise", "batch": 1, "layer": "conv1"}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.seed, 42);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.input_hw, 224);
+        assert!(m.find_model("xla", "precise", 1).is_some());
+        assert!(m.find_model("xla", "imprecise", 1).is_none());
+        assert_eq!(m.find_layer("conv1").unwrap().file, "k.hlo.txt");
+        assert_eq!(m.path_of(m.find_layer("conv1").unwrap()), Path::new("/tmp/a/k.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse(Path::new("."), "{}").is_err());
+        assert!(Manifest::parse(Path::new("."), "not json").is_err());
+    }
+
+    #[test]
+    fn validate_catches_mismatch() {
+        let m = Manifest::parse(Path::new("."), SAMPLE).unwrap();
+        let net = SqueezeNet::v1_0();
+        assert!(m.validate_against(&net).is_err());
+    }
+}

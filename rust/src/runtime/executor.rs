@@ -1,0 +1,257 @@
+//! PJRT executors: compiled SqueezeNet executables with weights resident
+//! on device.
+//!
+//! Design (mirrors `/opt/xla-example/load_hlo`): HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `compile`.
+//! Weights are uploaded once per executor as `PjRtBuffer`s and reused by
+//! every `execute_b` call; only the input image batch crosses the
+//! host→device boundary per request.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::graph::{SqueezeNet, INPUT_CHANNELS};
+use crate::model::weights::WeightStore;
+use crate::simulator::device::Precision;
+
+use super::artifacts::Manifest;
+
+/// A compiled full-model executable for one (precision, batch) pair.
+pub struct ModelExecutor {
+    exe: xla::PjRtLoadedExecutable,
+    /// Weight buffers in AOT argument order, resident on device.
+    weight_buffers: Vec<xla::PjRtBuffer>,
+    pub precision: Precision,
+    pub batch: usize,
+    pub input_hw: usize,
+    pub num_classes: usize,
+    /// Wall-clock spent compiling the artifact (startup cost).
+    pub compile_time: std::time::Duration,
+}
+
+impl ModelExecutor {
+    /// Elements per input image.
+    pub fn image_len(&self) -> usize {
+        self.input_hw * self.input_hw * INPUT_CHANNELS
+    }
+
+    /// Run one batch. `input` must contain exactly `batch` images in
+    /// NHWC order; returns `batch` logit vectors.
+    pub fn infer(&self, input: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let expected = self.batch * self.image_len();
+        if input.len() != expected {
+            bail!(
+                "executor(batch={}): input has {} values, expected {expected}",
+                self.batch,
+                input.len()
+            );
+        }
+        let client = self.exe.client();
+        let input_buffer = client
+            .buffer_from_host_buffer::<f32>(
+                input,
+                &[self.batch, self.input_hw, self.input_hw, INPUT_CHANNELS],
+                None,
+            )
+            .context("uploading input batch")?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weight_buffers.len());
+        args.push(&input_buffer);
+        args.extend(self.weight_buffers.iter());
+        let result = self.exe.execute_b(&args).context("execute_b")?;
+        let literal = result[0][0].to_literal_sync().context("download logits")?;
+        let tuple = literal.to_tuple1().context("unwrap result tuple")?;
+        let flat = tuple.to_vec::<f32>().context("logits to_vec")?;
+        if flat.len() != self.batch * self.num_classes {
+            bail!(
+                "logits length {} != batch {} * classes {}",
+                flat.len(),
+                self.batch,
+                self.num_classes
+            );
+        }
+        Ok(flat.chunks_exact(self.num_classes).map(|c| c.to_vec()).collect())
+    }
+}
+
+/// A compiled single-layer kernel executable (e.g. the Pallas conv1).
+pub struct KernelExecutor {
+    exe: xla::PjRtLoadedExecutable,
+    arg_buffers: Vec<xla::PjRtBuffer>,
+    pub input_dims: Vec<usize>,
+}
+
+impl KernelExecutor {
+    /// Run the kernel on one input tensor (dims fixed at load time).
+    pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let expected: usize = self.input_dims.iter().product();
+        if input.len() != expected {
+            bail!("kernel input has {} values, expected {expected}", input.len());
+        }
+        let client = self.exe.client();
+        let input_buffer = client
+            .buffer_from_host_buffer::<f32>(input, &self.input_dims, None)
+            .context("uploading kernel input")?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&input_buffer];
+        args.extend(self.arg_buffers.iter());
+        let result = self.exe.execute_b(&args)?;
+        let literal = result[0][0].to_literal_sync()?.to_tuple1()?;
+        Ok(literal.to_vec::<f32>()?)
+    }
+}
+
+/// The full runtime: one PJRT CPU client plus every executable the
+/// serving engine needs, compiled at startup.
+pub struct RuntimeEngine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    pub weights: WeightStore,
+    executors: HashMap<(Precision, usize), ModelExecutor>,
+}
+
+fn compile_from_text(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("artifact path is not utf-8")?,
+    )
+    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).with_context(|| format!("compiling {}", path.display()))
+}
+
+fn upload_weights(
+    client: &xla::PjRtClient,
+    weights: &WeightStore,
+) -> Result<Vec<xla::PjRtBuffer>> {
+    weights
+        .params()
+        .iter()
+        .map(|p| {
+            client
+                .buffer_from_host_buffer::<f32>(&p.data, &p.shape, None)
+                .with_context(|| format!("uploading {}", p.name))
+        })
+        .collect()
+}
+
+impl RuntimeEngine {
+    /// Load manifest + weights from an artifacts directory, start the
+    /// PJRT CPU client, and compile the requested hot-path executables.
+    ///
+    /// `batches`: which batch sizes to compile per precision (must be a
+    /// subset of the manifest's `hot_path_batches`).
+    pub fn load(dir: &Path, precisions: &[Precision], batches: &[usize]) -> Result<RuntimeEngine> {
+        let manifest = Manifest::load(dir)?;
+        let net = SqueezeNet::v1_0();
+        manifest.validate_against(&net).context("manifest/model contract")?;
+        let weights = WeightStore::load(&dir.join("weights.bin"))?;
+        weights.validate(&net).context("weights/model contract")?;
+
+        let client = xla::PjRtClient::cpu().context("starting PJRT CPU client")?;
+        let mut engine = RuntimeEngine { client, manifest, weights, executors: HashMap::new() };
+        for &precision in precisions {
+            for &batch in batches {
+                engine.ensure_executor(precision, batch)?;
+            }
+        }
+        Ok(engine)
+    }
+
+    /// Compile (if not yet compiled) the executor for (precision, batch).
+    pub fn ensure_executor(&mut self, precision: Precision, batch: usize) -> Result<()> {
+        if self.executors.contains_key(&(precision, batch)) {
+            return Ok(());
+        }
+        let info = self
+            .manifest
+            .find_model("xla", precision.label(), batch)
+            .with_context(|| {
+                format!("no artifact for precision={} batch={batch}", precision.label())
+            })?
+            .clone();
+        let path = self.manifest.path_of(&info);
+        let t0 = Instant::now();
+        let exe = compile_from_text(&self.client, &path)?;
+        let weight_buffers = upload_weights(&self.client, &self.weights)?;
+        self.executors.insert(
+            (precision, batch),
+            ModelExecutor {
+                exe,
+                weight_buffers,
+                precision,
+                batch,
+                input_hw: self.manifest.input_hw,
+                num_classes: self.manifest.num_classes,
+                compile_time: t0.elapsed(),
+            },
+        );
+        Ok(())
+    }
+
+    /// Executor for (precision, batch), if compiled.
+    pub fn executor(&self, precision: Precision, batch: usize) -> Option<&ModelExecutor> {
+        self.executors.get(&(precision, batch))
+    }
+
+    /// Batch sizes compiled for a precision, ascending.
+    pub fn batches_for(&self, precision: Precision) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .executors
+            .keys()
+            .filter(|(p, _)| *p == precision)
+            .map(|(_, b)| *b)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Load the full-model **Pallas** artifact (Layer-1 composition
+    /// proof; batch 1, precise).
+    pub fn load_pallas_model(&self) -> Result<ModelExecutor> {
+        let info = self
+            .manifest
+            .find_model("pallas", "precise", 1)
+            .context("no pallas model artifact (aot.py --skip-pallas?)")?
+            .clone();
+        let exe = compile_from_text(&self.client, &self.manifest.path_of(&info))?;
+        let t0 = Instant::now();
+        Ok(ModelExecutor {
+            exe,
+            weight_buffers: upload_weights(&self.client, &self.weights)?,
+            precision: Precision::Precise,
+            batch: 1,
+            input_hw: self.manifest.input_hw,
+            num_classes: self.manifest.num_classes,
+            compile_time: t0.elapsed(),
+        })
+    }
+
+    /// Load a single-layer kernel artifact (e.g. `conv1`) with its
+    /// weight arguments resolved from the weight store by layer name.
+    pub fn load_layer_kernel(&self, layer: &str) -> Result<KernelExecutor> {
+        let info = self
+            .manifest
+            .find_layer(layer)
+            .with_context(|| format!("no kernel artifact for layer {layer}"))?
+            .clone();
+        let exe = compile_from_text(&self.client, &self.manifest.path_of(&info))?;
+        let w = self
+            .weights
+            .get(&format!("{layer}_w"))
+            .with_context(|| format!("missing {layer}_w"))?;
+        let b = self
+            .weights
+            .get(&format!("{layer}_b"))
+            .with_context(|| format!("missing {layer}_b"))?;
+        let arg_buffers = vec![
+            self.client.buffer_from_host_buffer::<f32>(&w.data, &w.shape, None)?,
+            self.client.buffer_from_host_buffer::<f32>(&b.data, &b.shape, None)?,
+        ];
+        Ok(KernelExecutor {
+            exe,
+            arg_buffers,
+            input_dims: vec![self.manifest.input_hw, self.manifest.input_hw, INPUT_CHANNELS],
+        })
+    }
+}

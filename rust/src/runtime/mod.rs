@@ -1,0 +1,14 @@
+//! The PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only place Python output crosses into the Rust process,
+//! and it happens entirely at startup: artifacts are compiled once,
+//! weights are uploaded to device buffers once, and the request path is
+//! pure `execute_b` calls (no Python, no recompilation, no weight
+//! re-upload).
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::{ArtifactInfo, Manifest};
+pub use executor::{KernelExecutor, ModelExecutor, RuntimeEngine};

@@ -1,0 +1,207 @@
+//! Ablation studies for the paper's design choices (DESIGN.md §5).
+//!
+//! The paper's speedups stack three mechanisms: float4 vectorization
+//! (§III-B), zero-overhead layout + input reuse via granularity
+//! (§III-C/D), and relaxed-FP imprecise mode (§IV-B).  Each ablation
+//! disables one mechanism in the device model and re-prices the whole
+//! network, quantifying that mechanism's contribution — the analysis
+//! the paper implies but never tabulates.
+
+use crate::model::graph::{ConvSpec, SqueezeNet};
+
+use super::autotune::autotune_network;
+use super::cost::{conv_gpu_time, network_time, RunMode};
+use super::device::{DeviceProfile, Precision};
+
+/// A single ablation: a named transformation of the device model and/or
+/// the granularity policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ablation {
+    /// The full system (baseline for the ablation deltas).
+    Full,
+    /// No float4 SIMD: every vector dot costs 4 scalar issues
+    /// (removes §III-B).
+    NoVectorization,
+    /// Granularity pinned to g=1: no input-window reuse, maximum
+    /// per-thread overhead (removes §III-D).
+    NoGranularity,
+    /// No texture cache: spatially-overlapping window fetches all go to
+    /// DRAM (stresses the memory model).
+    NoTextureCache,
+    /// Reorder pass between layers instead of zero-overhead output:
+    /// adds a full feature-map read+write per layer (removes §III-C).
+    NoZeroOverhead,
+}
+
+impl Ablation {
+    pub fn all() -> [Ablation; 5] {
+        [
+            Ablation::Full,
+            Ablation::NoVectorization,
+            Ablation::NoGranularity,
+            Ablation::NoTextureCache,
+            Ablation::NoZeroOverhead,
+        ]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Ablation::Full => "full system",
+            Ablation::NoVectorization => "- float4 vectorization",
+            Ablation::NoGranularity => "- granularity tuning (g=1)",
+            Ablation::NoTextureCache => "- texture cache",
+            Ablation::NoZeroOverhead => "- zero-overhead layout",
+        }
+    }
+
+    /// Device model under this ablation.
+    fn device(&self, base: &DeviceProfile) -> DeviceProfile {
+        let mut d = base.clone();
+        match self {
+            Ablation::NoVectorization => {
+                // 4 scalar MACs per (former) float4 dot.
+                d.gpu.dot_cycles_precise *= 4.0;
+                d.gpu.dot_cycles_imprecise *= 4.0;
+            }
+            Ablation::NoTextureCache => {
+                d.gpu.tex_cache_cap = 1.0;
+            }
+            Ablation::Full | Ablation::NoGranularity | Ablation::NoZeroOverhead => {}
+        }
+        d
+    }
+}
+
+/// Result of pricing the network under one ablation.
+#[derive(Debug, Clone)]
+pub struct AblationResult {
+    pub ablation: Ablation,
+    pub total_ms: f64,
+    /// Slowdown vs the full system.
+    pub slowdown: f64,
+}
+
+/// Price the network under every ablation on one device.
+pub fn ablate(device: &DeviceProfile, precision: Precision) -> Vec<AblationResult> {
+    let net = SqueezeNet::v1_0();
+    let mode = RunMode::Parallel(precision);
+    let mut results = Vec::new();
+    let mut full_ms = f64::NAN;
+    for ablation in Ablation::all() {
+        let dev = ablation.device(device);
+        let plan = autotune_network(&net, precision, &dev);
+        let g = |spec: &ConvSpec| match ablation {
+            Ablation::NoGranularity => 1,
+            _ => plan.optimal_g(&spec.name),
+        };
+        let mut total = network_time(&net, mode, &dev, &g);
+        if ablation == Ablation::NoZeroOverhead {
+            // Reorder pass per conv layer: read + write the whole
+            // output feature map at DRAM bandwidth.
+            let reorder_ms: f64 = net
+                .conv_layers()
+                .iter()
+                .map(|c| 2.0 * c.output_bytes() as f64 / (dev.gpu.mem_bw_gb_s * 1e9) * 1e3)
+                .sum();
+            total += reorder_ms;
+        }
+        if ablation == Ablation::Full {
+            full_ms = total;
+        }
+        results.push(AblationResult { ablation, total_ms: total, slowdown: total / full_ms });
+    }
+    results
+}
+
+/// Per-layer contribution of granularity tuning: time(g=1)/time(g*).
+pub fn granularity_contribution(device: &DeviceProfile, precision: Precision) -> Vec<(String, f64)> {
+    let net = SqueezeNet::v1_0();
+    let plan = autotune_network(&net, precision, device);
+    net.conv_layers()
+        .into_iter()
+        .map(|spec| {
+            let opt = conv_gpu_time(spec, plan.optimal_g(&spec.name), precision, &device.gpu)
+                .total_ms();
+            let g1 = conv_gpu_time(spec, 1, precision, &device.gpu).total_ms();
+            (spec.name.clone(), g1 / opt)
+        })
+        .collect()
+}
+
+/// Render the ablation table for all devices.
+pub fn render_ablation(precision: Precision) -> String {
+    use crate::util::bench::render_table;
+    let mut rows = Vec::new();
+    for device in DeviceProfile::all() {
+        for r in ablate(&device, precision) {
+            rows.push(vec![
+                device.name.to_string(),
+                r.ablation.label().to_string(),
+                format!("{:.2}", r.total_ms),
+                format!("{:.2}X", r.slowdown),
+            ]);
+        }
+    }
+    render_table(
+        &format!("Ablation: mechanism contributions ({} mode)", precision.label()),
+        &["device", "configuration", "total ms", "slowdown"],
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_ablation_hurts() {
+        for device in DeviceProfile::all() {
+            let results = ablate(&device, Precision::Precise);
+            assert_eq!(results.len(), 5);
+            let full = &results[0];
+            assert_eq!(full.ablation, Ablation::Full);
+            assert!((full.slowdown - 1.0).abs() < 1e-9);
+            for r in &results[1..] {
+                // Texture-cache removal may be a no-op when the whole
+                // network is compute-bound at optimal g (roofline max);
+                // every other mechanism must cost strictly > 1x.
+                let min = if r.ablation == Ablation::NoTextureCache { 1.0 - 1e-9 } else { 1.0 };
+                assert!(
+                    r.slowdown > min,
+                    "{} / {}: slowdown {:.3} should exceed {min:.1}",
+                    device.name,
+                    r.ablation.label(),
+                    r.slowdown
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn vectorization_is_the_largest_lever() {
+        // float4 removal quadruples ALU cost on a compute-bound network
+        // — it must dominate the cache/layout ablations.
+        for device in DeviceProfile::all() {
+            let results = ablate(&device, Precision::Precise);
+            let get = |a: Ablation| results.iter().find(|r| r.ablation == a).unwrap().slowdown;
+            assert!(get(Ablation::NoVectorization) > get(Ablation::NoTextureCache));
+            assert!(get(Ablation::NoVectorization) > get(Ablation::NoZeroOverhead));
+        }
+    }
+
+    #[test]
+    fn granularity_contribution_exceeds_one_everywhere() {
+        let contrib = granularity_contribution(&DeviceProfile::nexus_5(), Precision::Precise);
+        assert_eq!(contrib.len(), 26);
+        for (name, ratio) in contrib {
+            assert!(ratio >= 1.0, "{name}: {ratio}");
+        }
+    }
+
+    #[test]
+    fn renders() {
+        let t = render_ablation(Precision::Precise);
+        assert!(t.contains("full system"));
+        assert!(t.contains("Nexus 5"));
+    }
+}

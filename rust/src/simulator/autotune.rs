@@ -1,0 +1,178 @@
+//! Granularity autotuning (§III-D, Tables I and III, Fig. 10).
+//!
+//! For every convolutional layer, enumerate the valid granularities
+//! (`cout % g == 0` and `(cout/g) % 4 == 0`), price each on the device
+//! model, and keep the full curve: the argmin is Table I's entry, the
+//! argmax ("pessimal") is Table III's comparison point.
+
+use std::collections::HashMap;
+
+use crate::convnet::vectorized::valid_gs;
+use crate::model::graph::{ConvSpec, SqueezeNet};
+
+use super::cost::{conv_gpu_time, LayerTime};
+use super::device::{DeviceProfile, Precision};
+
+/// The full time-vs-g curve for one layer on one device (a Fig. 10 line).
+#[derive(Debug, Clone)]
+pub struct GranularityCurve {
+    pub layer: String,
+    pub device: &'static str,
+    pub precision: Precision,
+    /// (g, timing) for every valid granularity, ascending g.
+    pub points: Vec<(usize, LayerTime)>,
+}
+
+impl GranularityCurve {
+    pub fn optimal(&self) -> (usize, f64) {
+        self.points
+            .iter()
+            .map(|(g, t)| (*g, t.total_ms()))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .expect("curve has points")
+    }
+
+    pub fn pessimal(&self) -> (usize, f64) {
+        self.points
+            .iter()
+            .map(|(g, t)| (*g, t.total_ms()))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .expect("curve has points")
+    }
+
+    /// Speedup of the optimal over the pessimal granularity.
+    pub fn speedup(&self) -> f64 {
+        self.pessimal().1 / self.optimal().1
+    }
+}
+
+/// Sweep all valid granularities of one layer.
+pub fn autotune_layer(
+    spec: &ConvSpec,
+    precision: Precision,
+    device: &DeviceProfile,
+) -> GranularityCurve {
+    let points = valid_gs(spec.cout)
+        .into_iter()
+        .map(|g| (g, conv_gpu_time(spec, g, precision, &device.gpu)))
+        .collect();
+    GranularityCurve { layer: spec.name.clone(), device: device.name, precision, points }
+}
+
+/// Autotuned granularities for a whole network on one device.
+#[derive(Debug, Clone)]
+pub struct NetworkPlan {
+    pub device: &'static str,
+    pub precision: Precision,
+    pub curves: HashMap<String, GranularityCurve>,
+}
+
+impl NetworkPlan {
+    /// Optimal g for a layer (1 if the layer is unknown — safe default).
+    pub fn optimal_g(&self, layer: &str) -> usize {
+        self.curves.get(layer).map(|c| c.optimal().0).unwrap_or(1)
+    }
+
+    /// Pessimal g for a layer.
+    pub fn pessimal_g(&self, layer: &str) -> usize {
+        self.curves.get(layer).map(|c| c.pessimal().0).unwrap_or(1)
+    }
+
+    /// Layer-name → optimal-g map (the engine's scheduling plan).
+    pub fn as_plan_map(&self) -> HashMap<String, usize> {
+        self.curves.iter().map(|(k, c)| (k.clone(), c.optimal().0)).collect()
+    }
+}
+
+/// Autotune every convolutional layer of the network.
+pub fn autotune_network(
+    net: &SqueezeNet,
+    precision: Precision,
+    device: &DeviceProfile,
+) -> NetworkPlan {
+    let curves = net
+        .conv_layers()
+        .into_iter()
+        .map(|spec| (spec.name.clone(), autotune_layer(spec, precision, device)))
+        .collect();
+    NetworkPlan { device: device.name, precision, curves }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SqueezeNet;
+
+    #[test]
+    fn optimal_is_never_finest_for_table_i_layers() {
+        // Fig. 10: "Highest number of threads (g = 1) has the worst
+        // execution time" — at minimum it must never be the best.
+        let net = SqueezeNet::v1_0();
+        for device in DeviceProfile::all() {
+            for spec in net.table_i_layers() {
+                let curve = autotune_layer(spec, Precision::Precise, &device);
+                assert_ne!(curve.optimal().0, 1, "{} on {}", spec.name, device.name);
+            }
+        }
+    }
+
+    #[test]
+    fn optima_vary_across_devices() {
+        // Table I: "the optimal thread granularity varies based on ...
+        // the target hardware". At least one layer must differ between
+        // the newest and oldest device.
+        let net = SqueezeNet::v1_0();
+        let s7 = autotune_network(&net, Precision::Precise, &DeviceProfile::galaxy_s7());
+        let n5 = autotune_network(&net, Precision::Precise, &DeviceProfile::nexus_5());
+        let differs = net
+            .table_i_layers()
+            .iter()
+            .any(|spec| s7.optimal_g(&spec.name) != n5.optimal_g(&spec.name));
+        assert!(differs, "granularity optima should be device-dependent");
+    }
+
+    #[test]
+    fn optima_vary_across_layers() {
+        let net = SqueezeNet::v1_0();
+        let plan = autotune_network(&net, Precision::Precise, &DeviceProfile::nexus_5());
+        let gs: std::collections::HashSet<usize> = net
+            .table_i_layers()
+            .iter()
+            .map(|spec| plan.optimal_g(&spec.name))
+            .collect();
+        assert!(gs.len() > 1, "granularity optima should be layer-dependent: {gs:?}");
+    }
+
+    #[test]
+    fn speedup_over_pessimal_is_significant() {
+        // Table III's aggregate claim is >= 2x end-to-end; per-layer the
+        // fire layers show up to 3.17x. Require a meaningful gap on the
+        // big fire layers.
+        let net = SqueezeNet::v1_0();
+        for device in DeviceProfile::all() {
+            let curve = autotune_layer(
+                net.conv_by_name("fire2_expand1").unwrap(),
+                Precision::Precise,
+                &device,
+            );
+            assert!(
+                curve.speedup() > 1.5,
+                "{}: opt/pess speedup {:.2} too small",
+                device.name,
+                curve.speedup()
+            );
+        }
+    }
+
+    #[test]
+    fn plan_map_covers_all_conv_layers() {
+        let net = SqueezeNet::v1_0();
+        let plan = autotune_network(&net, Precision::Precise, &DeviceProfile::galaxy_s7());
+        let map = plan.as_plan_map();
+        assert_eq!(map.len(), net.conv_layers().len());
+        for spec in net.conv_layers() {
+            let g = map[&spec.name];
+            assert!(spec.cout % g == 0 && (spec.cout / g) % 4 == 0, "{}: g={g}", spec.name);
+        }
+    }
+}

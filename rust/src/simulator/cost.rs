@@ -1,0 +1,245 @@
+//! The convolution cost model: prices a `ConvSpec` at granularity `g`
+//! on a [`GpuModel`], and the Fig. 2 loop nest on the sequential CPU
+//! model.
+//!
+//! GPU time for one layer =
+//! `max(compute, memory) + dispatch`, where
+//!
+//! - `compute`: `T` threads each spend `setup + g·(Cin/4)·K²·dot_cycles`
+//!   cycles, retired by `vec4_units` at an occupancy that degrades when
+//!   `T` is too small to hide latency (large `g`) or `g`'s register
+//!   footprint caps waves in flight;
+//! - `memory`: input windows are fetched once per thread (so traffic
+//!   *falls* as `g` grows — §III-D's data reuse), weights stream with
+//!   wave-level cache reuse, outputs are written once;
+//! - `dispatch`: fixed kernel launch plus per-wave scheduling (grows
+//!   with thread count — penalizing tiny `g`).
+
+use crate::model::graph::{ConvSpec, LayerKind, SqueezeNet};
+
+use super::device::{DeviceProfile, GpuModel, Precision, SeqCpuModel};
+
+/// How a network run is executed (the three rows of Table IV).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RunMode {
+    Sequential,
+    Parallel(Precision),
+}
+
+impl RunMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RunMode::Sequential => "Sequential",
+            RunMode::Parallel(Precision::Precise) => "Precise Parallel",
+            RunMode::Parallel(Precision::Imprecise) => "Imprecise Parallel",
+        }
+    }
+}
+
+/// Timing breakdown for one layer (milliseconds).
+#[derive(Debug, Clone, Copy)]
+pub struct LayerTime {
+    pub compute_ms: f64,
+    pub memory_ms: f64,
+    pub dispatch_ms: f64,
+}
+
+impl LayerTime {
+    /// Total latency: roofline max of compute/memory plus dispatch.
+    pub fn total_ms(&self) -> f64 {
+        self.compute_ms.max(self.memory_ms) + self.dispatch_ms
+    }
+
+    /// Which resource bounds this layer?
+    pub fn bound(&self) -> &'static str {
+        if self.compute_ms >= self.memory_ms {
+            "compute"
+        } else {
+            "memory"
+        }
+    }
+}
+
+/// Channels padded to the float4 lane width.
+fn cin_padded(cin: usize) -> f64 {
+    (cin.div_ceil(4) * 4) as f64
+}
+
+/// Price one convolutional layer on the GPU at granularity `g`.
+pub fn conv_gpu_time(spec: &ConvSpec, g: usize, precision: Precision, gpu: &GpuModel) -> LayerTime {
+    assert!(spec.cout % g == 0, "invalid granularity {g} for {}", spec.name);
+    let spatial = (spec.hw_out * spec.hw_out) as f64;
+    let threads = (spec.cout / g) as f64 * spatial;
+    let k2 = (spec.k * spec.k) as f64;
+    let vec_dots_per_output = (cin_padded(spec.cin) / 4.0) * k2;
+
+    // ---- compute ----
+    let per_thread_cycles = gpu.thread_setup_cycles
+        + g as f64 * vec_dots_per_output * gpu.dot_cycles(precision);
+    let occupancy =
+        gpu.occupancy_threads(threads) * gpu.occupancy_registers(g as f64);
+    let compute_cycles = threads * per_thread_cycles / (gpu.vec4_units * occupancy);
+    let compute_ms = compute_cycles / (gpu.clock_ghz * 1e9) * 1e3;
+
+    // ---- memory ----
+    // Input window: K²·Cin floats per thread, fetched once and reused g
+    // times; adjacent threads' windows overlap spatially, absorbed by
+    // the texture cache up to (K/S)².
+    let tex_reuse = ((spec.k as f64 / spec.stride as f64).powi(2)).clamp(1.0, gpu.tex_cache_cap);
+    let input_bytes = threads * k2 * cin_padded(spec.cin) * 4.0 / tex_reuse;
+    // Weights: g filter vectors per window position per thread; a wave's
+    // threads share the same filters (same output-layer group).
+    let weight_bytes =
+        threads * g as f64 * k2 * cin_padded(spec.cin) * 4.0 / gpu.weight_cache_reuse;
+    let output_bytes = spec.cout as f64 * spatial * 4.0;
+    let memory_ms = (input_bytes + weight_bytes + output_bytes) / (gpu.mem_bw_gb_s * 1e9) * 1e3;
+
+    // ---- dispatch ----
+    let waves = (threads / gpu.wave_size).ceil();
+    let dispatch_ms = (gpu.kernel_launch_us + waves * gpu.dispatch_us_per_wave) / 1e3;
+
+    LayerTime { compute_ms, memory_ms, dispatch_ms }
+}
+
+/// Price one convolutional layer on the sequential CPU (Fig. 2).
+pub fn conv_seq_time(spec: &ConvSpec, cpu: &SeqCpuModel) -> f64 {
+    cpu.seconds(spec.macs()) * 1e3
+}
+
+/// Price the non-convolution layers (pooling / avgpool / softmax).
+/// These are light, memory-bound passes (§III-E); sequential runs them
+/// on the CPU at the scalar-MAC rate, parallel runs them as a
+/// bandwidth-limited GPU pass plus launch overhead.
+pub fn aux_layer_time(kind: &LayerKind, mode: RunMode, device: &DeviceProfile) -> f64 {
+    let (elements, ops_per_el) = match kind {
+        LayerKind::Conv(_) => return 0.0,
+        LayerKind::MaxPool { channels, hw_out, .. } => ((channels * hw_out * hw_out) as f64, 9.0),
+        LayerKind::GlobalAvgPool { channels, hw_in, .. } => ((channels * hw_in * hw_in) as f64, 1.0),
+        LayerKind::Softmax { classes, .. } => (*classes as f64, 4.0),
+    };
+    match mode {
+        RunMode::Sequential => {
+            elements * ops_per_el * device.cpu.cycles_per_mac / (device.cpu.clock_ghz * 1e9) * 1e3
+        }
+        RunMode::Parallel(_) => {
+            let bytes = elements * ops_per_el * 4.0;
+            bytes / (device.gpu.mem_bw_gb_s * 1e9) * 1e3 + device.gpu.kernel_launch_us / 1e3
+        }
+    }
+}
+
+/// Total network time (ms) for a run mode, with a per-layer granularity
+/// lookup for the parallel modes (`granularity(layer) -> g`).
+pub fn network_time(
+    net: &SqueezeNet,
+    mode: RunMode,
+    device: &DeviceProfile,
+    granularity: &dyn Fn(&ConvSpec) -> usize,
+) -> f64 {
+    net.layers
+        .iter()
+        .map(|layer| match (&layer.kind, mode) {
+            (LayerKind::Conv(spec), RunMode::Sequential) => conv_seq_time(spec, &device.cpu),
+            (LayerKind::Conv(spec), RunMode::Parallel(precision)) => {
+                conv_gpu_time(spec, granularity(spec), precision, &device.gpu).total_ms()
+            }
+            (kind, mode) => aux_layer_time(kind, mode, device),
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convnet::vectorized::valid_gs;
+    use crate::model::SqueezeNet;
+
+    fn fire_expand_layer() -> ConvSpec {
+        SqueezeNet::v1_0().conv_by_name("fire2_expand1").unwrap().clone()
+    }
+
+    #[test]
+    fn g1_pays_memory_and_setup() {
+        let spec = fire_expand_layer();
+        let gpu = DeviceProfile::nexus_5().gpu;
+        let t1 = conv_gpu_time(&spec, 1, Precision::Precise, &gpu);
+        let t4 = conv_gpu_time(&spec, 4, Precision::Precise, &gpu);
+        assert!(
+            t1.total_ms() > t4.total_ms(),
+            "finest granularity should not be optimal: g1={:.3} g4={:.3}",
+            t1.total_ms(),
+            t4.total_ms()
+        );
+    }
+
+    #[test]
+    fn u_curve_exists_for_every_table_i_layer_on_every_device() {
+        // Fig. 10's headline: g=1 is never optimal, and neither is the
+        // coarsest granularity.
+        let net = SqueezeNet::v1_0();
+        for device in DeviceProfile::all() {
+            for spec in net.table_i_layers() {
+                let gs = valid_gs(spec.cout);
+                let times: Vec<f64> = gs
+                    .iter()
+                    .map(|&g| conv_gpu_time(spec, g, Precision::Precise, &device.gpu).total_ms())
+                    .collect();
+                let best = times
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                assert_ne!(best, 0, "{}: g=1 optimal on {}", spec.name, device.name);
+                assert_ne!(
+                    best,
+                    gs.len() - 1,
+                    "{}: coarsest g optimal on {}",
+                    spec.name,
+                    device.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn imprecise_is_faster() {
+        let spec = fire_expand_layer();
+        for device in DeviceProfile::all() {
+            let p = conv_gpu_time(&spec, 4, Precision::Precise, &device.gpu).total_ms();
+            let i = conv_gpu_time(&spec, 4, Precision::Imprecise, &device.gpu).total_ms();
+            assert!(i < p, "{}", device.name);
+        }
+    }
+
+    #[test]
+    fn network_time_magnitudes_match_table_vi_bands() {
+        // Table VI: sequential 12.3–43.9 s; precise parallel 388–589 ms;
+        // imprecise parallel 129–207 ms. The model must land in-band
+        // per device (±40% tolerance — shape, not exact numbers).
+        let net = SqueezeNet::v1_0();
+        let expect = [
+            ("s7", 12_331.8, 436.7, 207.1),
+            ("6p", 17_299.6, 388.4, 129.2),
+            ("n5", 43_932.7, 588.3, 141.4),
+        ];
+        for (id, seq_ms, par_ms, imp_ms) in expect {
+            let device = DeviceProfile::by_id(id).unwrap();
+            let plan = super::super::autotune::autotune_network(
+                &net,
+                Precision::Precise,
+                &device,
+            );
+            let g = |spec: &ConvSpec| plan.optimal_g(&spec.name);
+            let seq = network_time(&net, RunMode::Sequential, &device, &g);
+            let par = network_time(&net, RunMode::Parallel(Precision::Precise), &device, &g);
+            let imp = network_time(&net, RunMode::Parallel(Precision::Imprecise), &device, &g);
+            let within = |got: f64, want: f64| got > want * 0.6 && got < want * 1.4;
+            assert!(within(seq, seq_ms), "{id} sequential: got {seq:.0} want ~{seq_ms:.0}");
+            assert!(within(par, par_ms), "{id} precise: got {par:.0} want ~{par_ms:.0}");
+            assert!(within(imp, imp_ms), "{id} imprecise: got {imp:.0} want ~{imp_ms:.0}");
+            assert!(seq / par > 20.0, "{id}: precise speedup should be >20x");
+            assert!(par / imp > 1.5, "{id}: imprecise should be >1.5x over precise");
+        }
+    }
+}

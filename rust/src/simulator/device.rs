@@ -1,0 +1,299 @@
+//! Device profiles: the three phones of Table II.
+//!
+//! | Device            | SoC            | GPU                  |
+//! |-------------------|----------------|----------------------|
+//! | Samsung Galaxy S7 | Snapdragon 820 | Adreno 530 @ 624 MHz |
+//! | Huawei Nexus 6P   | Snapdragon 810 | Adreno 430 @ 650 MHz |
+//! | LG Nexus 5        | Snapdragon 800 | Adreno 330 @ 450 MHz |
+//!
+//! Microarchitectural constants are first-order public-spec numbers
+//! (ALU counts, clocks, LPDDR generations); the remaining constants
+//! (cycles per float4 dot in precise/imprecise mode, thread setup cost,
+//! cache effectiveness) are *calibration* parameters chosen so the
+//! model's end-to-end outputs land in the magnitude range the paper
+//! measured — exactly how an analytical model of real silicon would be
+//! calibrated against microbenchmarks.  The *shape* claims (U-curves,
+//! per-layer optima, speedup bands) are emergent, not fitted per layer.
+
+/// Floating-point execution mode (§IV-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Strict IEEE-754 single precision.
+    Precise,
+    /// RenderScript relaxed/imprecise mode: flush-to-zero, round toward
+    /// zero, vendor SIMD fast paths enabled.
+    Imprecise,
+}
+
+impl Precision {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Precision::Precise => "precise",
+            Precision::Imprecise => "imprecise",
+        }
+    }
+}
+
+/// Analytical model of a mobile GPU (Adreno 3xx/4xx/5xx class).
+#[derive(Debug, Clone)]
+pub struct GpuModel {
+    /// GPU core clock in GHz.
+    pub clock_ghz: f64,
+    /// float4 dot-product units that can retire concurrently.
+    pub vec4_units: f64,
+    /// Issue cycles per float4 dot in precise IEEE mode.
+    pub dot_cycles_precise: f64,
+    /// Issue cycles per float4 dot with relaxed-FP SIMD fast paths.
+    pub dot_cycles_imprecise: f64,
+    /// Fixed per-thread cycles: Eq. 7–9 index math, loop setup.
+    pub thread_setup_cycles: f64,
+    /// Threads that must be in flight to hide memory latency; below
+    /// this, ALU throughput degrades proportionally.
+    pub latency_hiding_threads: f64,
+    /// Largest granularity `g` whose register footprint still allows
+    /// full occupancy.
+    pub full_occupancy_g: f64,
+    /// Occupancy degradation per unit of `g` beyond `full_occupancy_g`
+    /// (register pressure: each extra accumulator costs live registers).
+    pub reg_pressure_slope: f64,
+    /// LPDDR bandwidth in GB/s (achievable, not theoretical peak).
+    pub mem_bw_gb_s: f64,
+    /// Max texture-cache amplification for spatially-overlapping reads.
+    pub tex_cache_cap: f64,
+    /// Effective reuse of filter weights across threads of one wave.
+    pub weight_cache_reuse: f64,
+    /// RenderScript kernel launch overhead per layer invocation (µs).
+    pub kernel_launch_us: f64,
+    /// Scheduling overhead per wavefront (µs).
+    pub dispatch_us_per_wave: f64,
+    /// Threads per wavefront.
+    pub wave_size: f64,
+}
+
+impl GpuModel {
+    /// Cycles to issue one float4 dot in the given mode.
+    pub fn dot_cycles(&self, precision: Precision) -> f64 {
+        match precision {
+            Precision::Precise => self.dot_cycles_precise,
+            Precision::Imprecise => self.dot_cycles_imprecise,
+        }
+    }
+
+    /// Occupancy factor from thread count (starvation below the
+    /// latency-hiding threshold — the paper's "large g does not use the
+    /// available parallel resources efficiently").
+    pub fn occupancy_threads(&self, threads: f64) -> f64 {
+        (threads / self.latency_hiding_threads).min(1.0)
+    }
+
+    /// Occupancy factor from register pressure at granularity `g`.
+    pub fn occupancy_registers(&self, g: f64) -> f64 {
+        if g <= self.full_occupancy_g {
+            1.0
+        } else {
+            1.0 / (1.0 + self.reg_pressure_slope * (g - self.full_occupancy_g))
+        }
+    }
+}
+
+/// Single-core scalar CPU model for the paper's sequential baseline.
+#[derive(Debug, Clone)]
+pub struct SeqCpuModel {
+    /// Sustained CPU clock in GHz (big core).
+    pub clock_ghz: f64,
+    /// Average cycles per scalar multiply-accumulate of the Fig. 2 loop
+    /// nest (calibration constant: unvectorized loads, index math,
+    /// branch overhead of an interpreted-runtime inner loop).
+    pub cycles_per_mac: f64,
+}
+
+impl SeqCpuModel {
+    /// Seconds to execute `macs` multiply-accumulates sequentially.
+    pub fn seconds(&self, macs: u64) -> f64 {
+        macs as f64 * self.cycles_per_mac / (self.clock_ghz * 1e9)
+    }
+}
+
+/// Power rails (Table V columns), in milliwatts.
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    /// Idle ("Baseline" column).
+    pub baseline_mw: f64,
+    /// Differential power of the sequential (single big CPU core) run.
+    pub seq_diff_mw: f64,
+    /// Differential power of the precise parallel (GPU busy) run.
+    pub precise_par_diff_mw: f64,
+    /// Differential power of the imprecise parallel run (GPU SIMD paths
+    /// lit up — the highest instantaneous draw).
+    pub imprecise_par_diff_mw: f64,
+}
+
+/// A complete simulated device (one row of Table II).
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    /// Human name used in the tables ("Galaxy S7", ...).
+    pub name: &'static str,
+    /// Short CLI identifier ("s7", "6p", "n5").
+    pub id: &'static str,
+    pub soc: &'static str,
+    pub gpu_name: &'static str,
+    pub gpu: GpuModel,
+    pub cpu: SeqCpuModel,
+    pub power: PowerModel,
+}
+
+impl DeviceProfile {
+    /// Samsung Galaxy S7 — Snapdragon 820, Adreno 530 @ 624 MHz, LPDDR4.
+    pub fn galaxy_s7() -> Self {
+        DeviceProfile {
+            name: "Galaxy S7",
+            id: "s7",
+            soc: "Snapdragon 820",
+            gpu_name: "Adreno 530 @624 MHz",
+            gpu: GpuModel {
+                clock_ghz: 0.624,
+                vec4_units: 64.0,
+                dot_cycles_precise: 66.0,
+                dot_cycles_imprecise: 31.0,
+                thread_setup_cycles: 1100.0,
+                latency_hiding_threads: 3072.0,
+                full_occupancy_g: 6.0,
+                reg_pressure_slope: 0.12,
+                mem_bw_gb_s: 22.0,
+                tex_cache_cap: 8.0,
+                weight_cache_reuse: 48.0,
+                kernel_launch_us: 60.0,
+                dispatch_us_per_wave: 0.030,
+                wave_size: 64.0,
+            },
+            cpu: SeqCpuModel { clock_ghz: 2.15, cycles_per_mac: 30.7 },
+            power: PowerModel {
+                baseline_mw: 173.18,
+                seq_diff_mw: 1379.33,
+                precise_par_diff_mw: 2350.0,
+                imprecise_par_diff_mw: 2748.61,
+            },
+        }
+    }
+
+    /// Huawei Nexus 6P — Snapdragon 810, Adreno 430 @ 650 MHz, LPDDR4.
+    pub fn nexus_6p() -> Self {
+        DeviceProfile {
+            name: "Nexus 6P",
+            id: "6p",
+            soc: "Snapdragon 810",
+            gpu_name: "Adreno 430 @650 MHz",
+            gpu: GpuModel {
+                clock_ghz: 0.650,
+                vec4_units: 48.0,
+                dot_cycles_precise: 45.0,
+                dot_cycles_imprecise: 15.0,
+                thread_setup_cycles: 1200.0,
+                latency_hiding_threads: 2304.0,
+                full_occupancy_g: 4.0,
+                reg_pressure_slope: 0.09,
+                mem_bw_gb_s: 20.0,
+                tex_cache_cap: 6.0,
+                weight_cache_reuse: 40.0,
+                kernel_launch_us: 70.0,
+                dispatch_us_per_wave: 0.035,
+                wave_size: 64.0,
+            },
+            cpu: SeqCpuModel { clock_ghz: 1.96, cycles_per_mac: 39.3 },
+            power: PowerModel {
+                baseline_mw: 1480.97,
+                seq_diff_mw: 518.15,
+                precise_par_diff_mw: 3100.0,
+                imprecise_par_diff_mw: 3980.92,
+            },
+        }
+    }
+
+    /// LG Nexus 5 — Snapdragon 800, Adreno 330 @ 450 MHz, LPDDR3.
+    pub fn nexus_5() -> Self {
+        DeviceProfile {
+            name: "Nexus 5",
+            id: "n5",
+            soc: "Snapdragon 800",
+            gpu_name: "Adreno 330 @450 MHz",
+            gpu: GpuModel {
+                clock_ghz: 0.450,
+                vec4_units: 32.0,
+                dot_cycles_precise: 33.0,
+                dot_cycles_imprecise: 8.0,
+                thread_setup_cycles: 1400.0,
+                latency_hiding_threads: 1536.0,
+                full_occupancy_g: 12.0,
+                reg_pressure_slope: 0.15,
+                mem_bw_gb_s: 11.0,
+                tex_cache_cap: 5.0,
+                weight_cache_reuse: 32.0,
+                kernel_launch_us: 90.0,
+                dispatch_us_per_wave: 0.045,
+                wave_size: 32.0,
+            },
+            cpu: SeqCpuModel { clock_ghz: 2.27, cycles_per_mac: 116.0 },
+            power: PowerModel {
+                baseline_mw: 422.71,
+                seq_diff_mw: 600.29,
+                precise_par_diff_mw: 700.0,
+                imprecise_par_diff_mw: 747.74,
+            },
+        }
+    }
+
+    /// All three devices in the paper's row order.
+    pub fn all() -> Vec<DeviceProfile> {
+        vec![Self::galaxy_s7(), Self::nexus_6p(), Self::nexus_5()]
+    }
+
+    /// Lookup by CLI id or name fragment (case-insensitive).
+    pub fn by_id(id: &str) -> Option<DeviceProfile> {
+        let id = id.to_lowercase().replace([' ', '-', '_'], "");
+        Self::all().into_iter().find(|d| {
+            d.id == id
+                || d.name.to_lowercase().replace(' ', "") == id
+                || d.name.to_lowercase().replace(' ', "").contains(&id)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_id_and_name() {
+        assert_eq!(DeviceProfile::by_id("s7").unwrap().name, "Galaxy S7");
+        assert_eq!(DeviceProfile::by_id("Nexus 5").unwrap().id, "n5");
+        assert_eq!(DeviceProfile::by_id("nexus-6p").unwrap().id, "6p");
+        assert!(DeviceProfile::by_id("pixel").is_none());
+    }
+
+    #[test]
+    fn imprecise_is_faster_per_dot_everywhere() {
+        for d in DeviceProfile::all() {
+            assert!(d.gpu.dot_cycles_imprecise < d.gpu.dot_cycles_precise, "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn occupancy_monotonic() {
+        let gpu = DeviceProfile::galaxy_s7().gpu;
+        assert!(gpu.occupancy_threads(100.0) < gpu.occupancy_threads(10_000.0));
+        assert_eq!(gpu.occupancy_threads(1e9), 1.0);
+        assert_eq!(gpu.occupancy_registers(1.0), 1.0);
+        assert!(gpu.occupancy_registers(32.0) < gpu.occupancy_registers(8.0));
+    }
+
+    #[test]
+    fn sequential_model_magnitudes() {
+        // ~860M MACs at the calibrated constants must land in the
+        // 12–44 s band of Table VI.
+        let macs = crate::model::SqueezeNet::v1_0().total_macs();
+        let s7 = DeviceProfile::galaxy_s7().cpu.seconds(macs);
+        let n5 = DeviceProfile::nexus_5().cpu.seconds(macs);
+        assert!((8.0..18.0).contains(&s7), "S7 sequential {s7}s");
+        assert!((30.0..55.0).contains(&n5), "N5 sequential {n5}s");
+    }
+}

@@ -1,0 +1,95 @@
+//! Power and energy model (Table V) — the Trepn-profiler substitution.
+//!
+//! Table V is rail arithmetic: `Total = Baseline + Differential`,
+//! `Energy = Differential × Time`.  The rails are device constants
+//! (DESIGN.md §2); times come from the cost model, so the energy *ratio*
+//! column — the paper's headline efficiency claim — is emergent.
+
+use super::cost::RunMode;
+use super::device::{DeviceProfile, Precision};
+
+/// Power readout for one run mode on one device (milliwatts).
+#[derive(Debug, Clone, Copy)]
+pub struct RunPower {
+    pub baseline_mw: f64,
+    pub total_mw: f64,
+    pub differential_mw: f64,
+}
+
+/// Rail power for a run mode.
+pub fn run_power(device: &DeviceProfile, mode: RunMode) -> RunPower {
+    let diff = match mode {
+        RunMode::Sequential => device.power.seq_diff_mw,
+        RunMode::Parallel(Precision::Precise) => device.power.precise_par_diff_mw,
+        RunMode::Parallel(Precision::Imprecise) => device.power.imprecise_par_diff_mw,
+    };
+    RunPower {
+        baseline_mw: device.power.baseline_mw,
+        total_mw: device.power.baseline_mw + diff,
+        differential_mw: diff,
+    }
+}
+
+/// Energy in joules for a run of `time_ms` at the mode's differential
+/// power (the paper's energy accounting: baseline excluded).
+pub fn energy_joules(device: &DeviceProfile, mode: RunMode, time_ms: f64) -> f64 {
+    run_power(device, mode).differential_mw / 1e3 * (time_ms / 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SqueezeNet;
+    use crate::simulator::autotune::autotune_network;
+    use crate::simulator::cost::network_time;
+    use crate::simulator::device::Precision;
+
+    #[test]
+    fn total_is_baseline_plus_differential() {
+        for d in DeviceProfile::all() {
+            for mode in [
+                RunMode::Sequential,
+                RunMode::Parallel(Precision::Precise),
+                RunMode::Parallel(Precision::Imprecise),
+            ] {
+                let p = run_power(&d, mode);
+                assert!((p.total_mw - p.baseline_mw - p.differential_mw).abs() < 1e-9);
+                assert!(p.differential_mw > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn energy_scales_linearly_with_time() {
+        let d = DeviceProfile::nexus_5();
+        let e1 = energy_joules(&d, RunMode::Sequential, 1000.0);
+        let e2 = energy_joules(&d, RunMode::Sequential, 2000.0);
+        assert!((e2 - 2.0 * e1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parallel_energy_win_matches_table_v_shape() {
+        // Table V: energy ratio (sequential / imprecise parallel) is
+        // 29.88x (S7), 17.43x (6P), 249.47x (N5). Check every device
+        // wins by >10x and N5 wins by the most.
+        let net = SqueezeNet::v1_0();
+        let mut ratios = Vec::new();
+        for d in DeviceProfile::all() {
+            let plan = autotune_network(&net, Precision::Precise, &d);
+            let g = |spec: &crate::model::graph::ConvSpec| plan.optimal_g(&spec.name);
+            let t_seq = network_time(&net, RunMode::Sequential, &d, &g);
+            let t_imp = network_time(&net, RunMode::Parallel(Precision::Imprecise), &d, &g);
+            let e_seq = energy_joules(&d, RunMode::Sequential, t_seq);
+            let e_imp = energy_joules(&d, RunMode::Parallel(Precision::Imprecise), t_imp);
+            let ratio = e_seq / e_imp;
+            assert!(ratio > 10.0, "{}: energy ratio {ratio:.1}", d.name);
+            ratios.push((d.id, ratio));
+        }
+        let n5 = ratios.iter().find(|(id, _)| *id == "n5").unwrap().1;
+        for (id, r) in &ratios {
+            if *id != "n5" {
+                assert!(n5 > *r, "Nexus 5 should have the largest energy ratio");
+            }
+        }
+    }
+}

@@ -1,0 +1,531 @@
+//! Generators for every table and figure of the paper's evaluation
+//! (§IV): structured data plus ASCII rendering.  Used by the `tables`
+//! CLI command, the per-table benches, and EXPERIMENTS.md.
+
+use crate::model::graph::{ConvSpec, MacroLayer, SqueezeNet};
+use crate::util::bench::render_table;
+
+use super::autotune::{autotune_layer, autotune_network, GranularityCurve, NetworkPlan};
+use super::cost::{aux_layer_time, conv_gpu_time, conv_seq_time, network_time, RunMode};
+use super::device::{DeviceProfile, Precision};
+use super::power::{energy_joules, run_power};
+
+/// Short paper-style label for a Table I / Fig. 10 layer
+/// (`conv1`, `F2EX1`, `F5EX3`, ...).
+pub fn short_label(name: &str) -> String {
+    if name == "conv1" {
+        return "Conv1".to_string();
+    }
+    if let Some(rest) = name.strip_prefix("fire") {
+        if let Some((n, which)) = rest.split_once('_') {
+            let suffix = match which {
+                "squeeze" => "SQ1".to_string(),
+                "expand1" => "EX1".to_string(),
+                "expand3" => "EX3".to_string(),
+                other => other.to_string(),
+            };
+            return format!("F{n}{suffix}");
+        }
+    }
+    name.to_string()
+}
+
+// ---------------------------------------------------------------- Fig 10
+
+/// Fig. 10: time-vs-g curves for the 13 Table-I layers on one device.
+pub fn fig10_curves(device: &DeviceProfile, precision: Precision) -> Vec<GranularityCurve> {
+    let net = SqueezeNet::v1_0();
+    net.table_i_layers()
+        .into_iter()
+        .map(|spec| autotune_layer(spec, precision, device))
+        .collect()
+}
+
+/// Render Fig. 10 as per-layer series (g, ms).
+pub fn render_fig10(device: &DeviceProfile) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "== Fig. 10: execution time vs thread granularity ({}, precise) ==\n",
+        device.name
+    ));
+    for curve in fig10_curves(device, Precision::Precise) {
+        let (gopt, topt) = curve.optimal();
+        out.push_str(&format!(
+            "{:<8} optimal g={:<3} ({:.2} ms)  |",
+            short_label(&curve.layer),
+            gopt,
+            topt
+        ));
+        for (g, t) in &curve.points {
+            out.push_str(&format!(" g{}:{:.2}", g, t.total_ms()));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+// ---------------------------------------------------------------- Table I
+
+/// Table I: optimal granularity per layer per device.
+pub struct TableI {
+    pub layers: Vec<String>,
+    /// (device name, per-layer optimal g in `layers` order).
+    pub rows: Vec<(&'static str, Vec<usize>)>,
+}
+
+pub fn table_i(precision: Precision) -> TableI {
+    let net = SqueezeNet::v1_0();
+    let layers: Vec<String> =
+        net.table_i_layers().iter().map(|s| short_label(&s.name)).collect();
+    let rows = DeviceProfile::all()
+        .into_iter()
+        .map(|device| {
+            let gs = net
+                .table_i_layers()
+                .iter()
+                .map(|spec| autotune_layer(spec, precision, &device).optimal().0)
+                .collect();
+            (device.name, gs)
+        })
+        .collect();
+    TableI { layers, rows }
+}
+
+pub fn render_table_i() -> String {
+    let t = table_i(Precision::Precise);
+    let mut header: Vec<&str> = vec![""];
+    header.extend(t.layers.iter().map(|s| s.as_str()));
+    let rows: Vec<Vec<String>> = t
+        .rows
+        .iter()
+        .map(|(name, gs)| {
+            let mut row = vec![name.to_string()];
+            row.extend(gs.iter().map(|g| format!("G{g}")));
+            row
+        })
+        .collect();
+    render_table("Table I: optimal thread granularities", &header, &rows)
+}
+
+// -------------------------------------------------------------- Table III
+
+/// Table III row: optimal vs pessimal on one device.
+#[derive(Debug, Clone)]
+pub struct TableIIIRow {
+    pub device: &'static str,
+    pub fire_optimal_ms: f64,
+    pub fire_pessimal_ms: f64,
+    pub conv_optimal_ms: f64,
+    pub conv_pessimal_ms: f64,
+}
+
+impl TableIIIRow {
+    pub fn fire_speedup(&self) -> f64 {
+        self.fire_pessimal_ms / self.fire_optimal_ms
+    }
+    pub fn conv_speedup(&self) -> f64 {
+        self.conv_pessimal_ms / self.conv_optimal_ms
+    }
+    pub fn overall_speedup(&self) -> f64 {
+        (self.fire_pessimal_ms + self.conv_pessimal_ms)
+            / (self.fire_optimal_ms + self.conv_optimal_ms)
+    }
+}
+
+pub fn table_iii(precision: Precision) -> Vec<TableIIIRow> {
+    let net = SqueezeNet::v1_0();
+    DeviceProfile::all()
+        .into_iter()
+        .map(|device| {
+            let plan = autotune_network(&net, precision, &device);
+            let time_with = |spec: &ConvSpec, g: usize| {
+                conv_gpu_time(spec, g, precision, &device.gpu).total_ms()
+            };
+            let mut row = TableIIIRow {
+                device: device.name,
+                fire_optimal_ms: 0.0,
+                fire_pessimal_ms: 0.0,
+                conv_optimal_ms: 0.0,
+                conv_pessimal_ms: 0.0,
+            };
+            for spec in net.conv_layers() {
+                let opt = time_with(spec, plan.optimal_g(&spec.name));
+                let pess = time_with(spec, plan.pessimal_g(&spec.name));
+                if spec.name.starts_with("fire") {
+                    row.fire_optimal_ms += opt;
+                    row.fire_pessimal_ms += pess;
+                } else {
+                    row.conv_optimal_ms += opt;
+                    row.conv_pessimal_ms += pess;
+                }
+            }
+            row
+        })
+        .collect()
+}
+
+pub fn render_table_iii() -> String {
+    let rows: Vec<Vec<String>> = table_iii(Precision::Precise)
+        .iter()
+        .map(|r| {
+            vec![
+                r.device.to_string(),
+                format!("{:.2}", r.fire_optimal_ms),
+                format!("{:.2}", r.fire_pessimal_ms),
+                format!("{:.2}X", r.fire_speedup()),
+                format!("{:.2}", r.conv_optimal_ms),
+                format!("{:.2}", r.conv_pessimal_ms),
+                format!("{:.2}X", r.conv_speedup()),
+                format!("{:.2}X", r.overall_speedup()),
+            ]
+        })
+        .collect();
+    render_table(
+        "Table III: effect of thread granularity (optimal vs pessimal)",
+        &[
+            "", "fire opt (ms)", "fire pess (ms)", "fire speedup",
+            "conv opt (ms)", "conv pess (ms)", "conv speedup", "overall",
+        ],
+        &rows,
+    )
+}
+
+// --------------------------------------------------------------- Table IV
+
+/// Table IV: per-macro-layer times for the three run modes.
+pub struct TableIV {
+    pub macro_layers: Vec<MacroLayer>,
+    /// (device, mode, per-macro-layer ms in `macro_layers` order).
+    pub rows: Vec<(&'static str, RunMode, Vec<f64>)>,
+}
+
+pub fn table_iv() -> TableIV {
+    let net = SqueezeNet::v1_0();
+    let macro_layers = MacroLayer::table_iv_order();
+    let mut rows = Vec::new();
+    for device in DeviceProfile::all() {
+        for mode in [
+            RunMode::Sequential,
+            RunMode::Parallel(Precision::Precise),
+            RunMode::Parallel(Precision::Imprecise),
+        ] {
+            let plan = match mode {
+                RunMode::Parallel(p) => Some(autotune_network(&net, p, &device)),
+                RunMode::Sequential => None,
+            };
+            let per_macro: Vec<f64> = macro_layers
+                .iter()
+                .map(|ml| macro_layer_time(&net, *ml, mode, &device, plan.as_ref()))
+                .collect();
+            rows.push((device.name, mode, per_macro));
+        }
+    }
+    TableIV { macro_layers, rows }
+}
+
+/// Time of one macro layer (its convs plus its pools) in a mode.
+fn macro_layer_time(
+    net: &SqueezeNet,
+    ml: MacroLayer,
+    mode: RunMode,
+    device: &DeviceProfile,
+    plan: Option<&NetworkPlan>,
+) -> f64 {
+    net.layers
+        .iter()
+        .filter(|l| l.macro_layer == ml)
+        .map(|layer| match (&layer.kind, mode) {
+            (crate::model::graph::LayerKind::Conv(spec), RunMode::Sequential) => {
+                conv_seq_time(spec, &device.cpu)
+            }
+            (crate::model::graph::LayerKind::Conv(spec), RunMode::Parallel(p)) => {
+                let g = plan.map(|pl| pl.optimal_g(&spec.name)).unwrap_or(1);
+                conv_gpu_time(spec, g, p, &device.gpu).total_ms()
+            }
+            (kind, mode) => aux_layer_time(kind, mode, device),
+        })
+        .sum()
+}
+
+pub fn render_table_iv() -> String {
+    let t = table_iv();
+    let mut header: Vec<String> = vec!["".into(), "Algorithm".into()];
+    header.extend(t.macro_layers.iter().map(|ml| ml.label()));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let rows: Vec<Vec<String>> = t
+        .rows
+        .iter()
+        .map(|(device, mode, times)| {
+            let mut row = vec![device.to_string(), mode.label().to_string()];
+            row.extend(times.iter().map(|ms| format!("{ms:.2}")));
+            row
+        })
+        .collect();
+    render_table(
+        "Table IV: execution time (ms) of layers of SqueezeNet",
+        &header_refs,
+        &rows,
+    )
+}
+
+// ---------------------------------------------------------------- Table V
+
+/// Table V row: power and energy on one device.
+#[derive(Debug, Clone)]
+pub struct TableVRow {
+    pub device: &'static str,
+    pub baseline_mw: f64,
+    pub seq_total_mw: f64,
+    pub imp_total_mw: f64,
+    pub seq_diff_mw: f64,
+    pub imp_diff_mw: f64,
+    pub seq_energy_j: f64,
+    pub imp_energy_j: f64,
+}
+
+impl TableVRow {
+    pub fn energy_ratio(&self) -> f64 {
+        self.seq_energy_j / self.imp_energy_j
+    }
+}
+
+pub fn table_v() -> Vec<TableVRow> {
+    let net = SqueezeNet::v1_0();
+    DeviceProfile::all()
+        .into_iter()
+        .map(|device| {
+            let plan = autotune_network(&net, Precision::Imprecise, &device);
+            let g = |spec: &ConvSpec| plan.optimal_g(&spec.name);
+            let t_seq = network_time(&net, RunMode::Sequential, &device, &g);
+            let t_imp =
+                network_time(&net, RunMode::Parallel(Precision::Imprecise), &device, &g);
+            let p_seq = run_power(&device, RunMode::Sequential);
+            let p_imp = run_power(&device, RunMode::Parallel(Precision::Imprecise));
+            TableVRow {
+                device: device.name,
+                baseline_mw: device.power.baseline_mw,
+                seq_total_mw: p_seq.total_mw,
+                imp_total_mw: p_imp.total_mw,
+                seq_diff_mw: p_seq.differential_mw,
+                imp_diff_mw: p_imp.differential_mw,
+                seq_energy_j: energy_joules(&device, RunMode::Sequential, t_seq),
+                imp_energy_j: energy_joules(
+                    &device,
+                    RunMode::Parallel(Precision::Imprecise),
+                    t_imp,
+                ),
+            }
+        })
+        .collect()
+}
+
+pub fn render_table_v() -> String {
+    let rows: Vec<Vec<String>> = table_v()
+        .iter()
+        .map(|r| {
+            vec![
+                r.device.to_string(),
+                format!("{:.2}", r.baseline_mw),
+                format!("{:.2}", r.seq_total_mw),
+                format!("{:.2}", r.imp_total_mw),
+                format!("{:.2}", r.seq_diff_mw),
+                format!("{:.2}", r.imp_diff_mw),
+                format!("{:.2}", r.seq_energy_j),
+                format!("{:.3}", r.imp_energy_j),
+                format!("{:.2}X", r.energy_ratio()),
+            ]
+        })
+        .collect();
+    render_table(
+        "Table V: power and energy consumption",
+        &[
+            "", "baseline mW", "seq total mW", "par total mW",
+            "seq diff mW", "par diff mW", "seq J", "par J", "energy ratio",
+        ],
+        &rows,
+    )
+}
+
+// --------------------------------------------------------------- Table VI
+
+/// Table VI row: total times and speedups on one device.
+#[derive(Debug, Clone)]
+pub struct TableVIRow {
+    pub device: &'static str,
+    pub sequential_ms: f64,
+    pub precise_ms: f64,
+    pub imprecise_ms: f64,
+}
+
+impl TableVIRow {
+    pub fn precise_speedup(&self) -> f64 {
+        self.sequential_ms / self.precise_ms
+    }
+    pub fn imprecise_speedup(&self) -> f64 {
+        self.sequential_ms / self.imprecise_ms
+    }
+}
+
+pub fn table_vi() -> Vec<TableVIRow> {
+    let net = SqueezeNet::v1_0();
+    DeviceProfile::all()
+        .into_iter()
+        .map(|device| {
+            let plan_p = autotune_network(&net, Precision::Precise, &device);
+            let plan_i = autotune_network(&net, Precision::Imprecise, &device);
+            let gp = |spec: &ConvSpec| plan_p.optimal_g(&spec.name);
+            let gi = |spec: &ConvSpec| plan_i.optimal_g(&spec.name);
+            TableVIRow {
+                device: device.name,
+                sequential_ms: network_time(&net, RunMode::Sequential, &device, &gp),
+                precise_ms: network_time(
+                    &net,
+                    RunMode::Parallel(Precision::Precise),
+                    &device,
+                    &gp,
+                ),
+                imprecise_ms: network_time(
+                    &net,
+                    RunMode::Parallel(Precision::Imprecise),
+                    &device,
+                    &gi,
+                ),
+            }
+        })
+        .collect()
+}
+
+pub fn render_table_vi() -> String {
+    let rows: Vec<Vec<String>> = table_vi()
+        .iter()
+        .map(|r| {
+            vec![
+                r.device.to_string(),
+                format!("{:.2}", r.sequential_ms),
+                format!("{:.2}", r.precise_ms),
+                format!("{:.2}X", r.precise_speedup()),
+                format!("{:.2}", r.imprecise_ms),
+                format!("{:.2}X", r.imprecise_speedup()),
+            ]
+        })
+        .collect();
+    render_table(
+        "Table VI: total execution time (ms) of SqueezeNet",
+        &["", "Sequential", "Precise Parallel", "Speedup", "Imprecise Parallel", "Speedup"],
+        &rows,
+    )
+}
+
+/// Render every table (the `tables` CLI command).
+pub fn render_all() -> String {
+    let mut out = String::new();
+    out.push_str(&render_table_i());
+    out.push('\n');
+    out.push_str(&render_table_iii());
+    out.push('\n');
+    out.push_str(&render_table_iv());
+    out.push('\n');
+    out.push_str(&render_table_v());
+    out.push('\n');
+    out.push_str(&render_table_vi());
+    out.push('\n');
+    out.push_str(&render_fig10(&DeviceProfile::nexus_5()));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn short_labels() {
+        assert_eq!(short_label("conv1"), "Conv1");
+        assert_eq!(short_label("fire2_expand1"), "F2EX1");
+        assert_eq!(short_label("fire9_expand3"), "F9EX3");
+        assert_eq!(short_label("fire3_squeeze"), "F3SQ1");
+    }
+
+    #[test]
+    fn table_i_dimensions() {
+        let t = table_i(Precision::Precise);
+        assert_eq!(t.layers.len(), 13);
+        assert_eq!(t.rows.len(), 3);
+        for (_, gs) in &t.rows {
+            assert_eq!(gs.len(), 13);
+        }
+    }
+
+    #[test]
+    fn table_iii_overall_speedup_at_least_1_7x() {
+        // Paper: "at least 2X". Allow modest slack for the model.
+        for row in table_iii(Precision::Precise) {
+            assert!(
+                row.overall_speedup() > 1.7,
+                "{}: {:.2}",
+                row.device,
+                row.overall_speedup()
+            );
+            assert!(row.fire_speedup() > row.conv_speedup() * 0.5);
+        }
+    }
+
+    #[test]
+    fn table_iv_modes_are_ordered() {
+        // For every device and macro layer: sequential >> precise >
+        // imprecise (with rare near-ties allowed on tiny layers).
+        let t = table_iv();
+        for chunk in t.rows.chunks(3) {
+            let (seq, pre, imp) = (&chunk[0].2, &chunk[1].2, &chunk[2].2);
+            let total =
+                |v: &Vec<f64>| v.iter().sum::<f64>();
+            assert!(total(seq) > 10.0 * total(pre), "{}", chunk[0].0);
+            assert!(total(pre) > 1.3 * total(imp), "{}", chunk[0].0);
+        }
+    }
+
+    #[test]
+    fn table_v_ratios_in_paper_band() {
+        // Paper ratios: 29.88X / 17.43X / 249.47X. Require > 10X
+        // everywhere and Nexus 5 the largest.
+        let rows = table_v();
+        let n5 = rows.iter().find(|r| r.device == "Nexus 5").unwrap();
+        for r in &rows {
+            assert!(r.energy_ratio() > 10.0, "{}: {:.1}", r.device, r.energy_ratio());
+        }
+        assert!(rows.iter().all(|r| n5.energy_ratio() >= r.energy_ratio()));
+    }
+
+    #[test]
+    fn table_vi_speedup_bands() {
+        // Paper: precise 28–75x, imprecise 60–311x, with Nexus 5 showing
+        // the largest speedups and Galaxy S7 the smallest.
+        let rows = table_vi();
+        for r in &rows {
+            assert!(
+                r.precise_speedup() > 15.0 && r.precise_speedup() < 150.0,
+                "{}: precise {:.1}",
+                r.device,
+                r.precise_speedup()
+            );
+            assert!(
+                r.imprecise_speedup() > 40.0 && r.imprecise_speedup() < 600.0,
+                "{}: imprecise {:.1}",
+                r.device,
+                r.imprecise_speedup()
+            );
+            assert!(r.imprecise_speedup() > r.precise_speedup());
+        }
+        let n5 = rows.iter().find(|r| r.device == "Nexus 5").unwrap();
+        let s7 = rows.iter().find(|r| r.device == "Galaxy S7").unwrap();
+        assert!(n5.imprecise_speedup() > s7.imprecise_speedup());
+    }
+
+    #[test]
+    fn rendering_is_nonempty() {
+        let all = render_all();
+        assert!(all.contains("Table I"));
+        assert!(all.contains("Table VI"));
+        assert!(all.contains("Fig. 10"));
+        assert!(all.len() > 2000);
+    }
+}

@@ -1,0 +1,165 @@
+//! Serving telemetry: latency histograms, counters, and report
+//! rendering (the Trepn-style monitoring hooks of §IV-C, applied to the
+//! real serving stack).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Sliding-window latency recorder (keeps the most recent `cap` samples).
+#[derive(Debug)]
+pub struct LatencyRecorder {
+    cap: usize,
+    samples_ms: Mutex<Vec<f64>>,
+}
+
+impl LatencyRecorder {
+    pub fn new(cap: usize) -> Self {
+        Self { cap, samples_ms: Mutex::new(Vec::new()) }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let mut s = self.samples_ms.lock().unwrap();
+        if s.len() == self.cap {
+            s.remove(0);
+        }
+        s.push(d.as_secs_f64() * 1e3);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ms.lock().unwrap().len()
+    }
+
+    /// Percentile in milliseconds (p in [0,1]); None when empty.
+    pub fn percentile_ms(&self, p: f64) -> Option<f64> {
+        let s = self.samples_ms.lock().unwrap();
+        if s.is_empty() {
+            return None;
+        }
+        let mut sorted = s.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(sorted[((sorted.len() - 1) as f64 * p) as usize])
+    }
+
+    pub fn mean_ms(&self) -> Option<f64> {
+        let s = self.samples_ms.lock().unwrap();
+        if s.is_empty() {
+            return None;
+        }
+        Some(s.iter().sum::<f64>() / s.len() as f64)
+    }
+}
+
+/// Aggregate serving counters.
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub errors: AtomicU64,
+    pub batches: AtomicU64,
+    /// Sum of batch sizes (for mean batch size).
+    pub batched_requests: AtomicU64,
+}
+
+impl Counters {
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+}
+
+/// Shared telemetry bundle for the coordinator.
+#[derive(Debug)]
+pub struct Telemetry {
+    pub latency: LatencyRecorder,
+    pub queue_time: LatencyRecorder,
+    pub execute_time: LatencyRecorder,
+    pub counters: Counters,
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Self {
+            latency: LatencyRecorder::new(4096),
+            queue_time: LatencyRecorder::new(4096),
+            execute_time: LatencyRecorder::new(4096),
+            counters: Counters::default(),
+        }
+    }
+}
+
+impl Telemetry {
+    /// Multi-line human-readable report.
+    pub fn report(&self) -> String {
+        let pct = |r: &LatencyRecorder, p: f64| {
+            r.percentile_ms(p).map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into())
+        };
+        format!(
+            "requests={} responses={} errors={} batches={} mean_batch={:.2}\n\
+             latency_ms: mean={} p50={} p95={} p99={}\n\
+             queue_ms:   p50={} p95={}\n\
+             execute_ms: p50={} p95={}",
+            self.counters.requests.load(Ordering::Relaxed),
+            self.counters.responses.load(Ordering::Relaxed),
+            self.counters.errors.load(Ordering::Relaxed),
+            self.counters.batches.load(Ordering::Relaxed),
+            self.counters.mean_batch_size(),
+            self.latency.mean_ms().map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into()),
+            pct(&self.latency, 0.5),
+            pct(&self.latency, 0.95),
+            pct(&self.latency, 0.99),
+            pct(&self.queue_time, 0.5),
+            pct(&self.queue_time, 0.95),
+            pct(&self.execute_time, 0.5),
+            pct(&self.execute_time, 0.95),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let r = LatencyRecorder::new(100);
+        for i in 1..=100 {
+            r.record(Duration::from_millis(i));
+        }
+        let p50 = r.percentile_ms(0.5).unwrap();
+        let p95 = r.percentile_ms(0.95).unwrap();
+        assert!(p50 < p95);
+        assert_eq!(r.count(), 100);
+    }
+
+    #[test]
+    fn ring_caps_samples() {
+        let r = LatencyRecorder::new(10);
+        for i in 0..50 {
+            r.record(Duration::from_millis(i));
+        }
+        assert_eq!(r.count(), 10);
+        assert!(r.percentile_ms(0.0).unwrap() >= 40.0);
+    }
+
+    #[test]
+    fn empty_recorder_is_none() {
+        let r = LatencyRecorder::new(4);
+        assert!(r.percentile_ms(0.5).is_none());
+        assert!(r.mean_ms().is_none());
+    }
+
+    #[test]
+    fn mean_batch_size() {
+        let c = Counters::default();
+        c.batches.store(2, Ordering::Relaxed);
+        c.batched_requests.store(10, Ordering::Relaxed);
+        assert_eq!(c.mean_batch_size(), 5.0);
+        let report = Telemetry::default().report();
+        assert!(report.contains("latency_ms"));
+    }
+}

@@ -1,0 +1,190 @@
+//! Micro-benchmark harness (in-tree stand-in for criterion).
+//!
+//! Every `rust/benches/*.rs` binary uses this: warm up, run timed
+//! iterations until a wall-clock budget or iteration cap is reached,
+//! report mean / p50 / p95 / min.  Output is line-oriented so the
+//! benches double as table generators for EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+/// Statistics for one benchmarked operation.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    fn from_samples(name: &str, mut samples: Vec<Duration>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort();
+        let total: Duration = samples.iter().sum();
+        let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+        Stats {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean: total / samples.len() as u32,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            min: samples[0],
+            max: *samples.last().unwrap(),
+        }
+    }
+
+    /// One-line human-readable summary.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p95),
+            fmt_dur(self.min),
+        )
+    }
+}
+
+/// Format a duration with adaptive units.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark runner with a per-case time budget.
+pub struct Bencher {
+    /// Wall-clock budget per case (after warmup).
+    pub budget: Duration,
+    /// Hard cap on timed iterations.
+    pub max_iters: usize,
+    /// Warmup iterations.
+    pub warmup: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new(Duration::from_secs(2), 10_000, 2)
+    }
+}
+
+impl Bencher {
+    pub fn new(budget: Duration, max_iters: usize, warmup: usize) -> Self {
+        Self { budget, max_iters, warmup, results: Vec::new() }
+    }
+
+    /// Quick-mode bencher honouring `MOBILE_CONVNET_BENCH_FAST=1`
+    /// (used by `cargo test` smoke runs of the bench binaries).
+    pub fn from_env() -> Self {
+        if std::env::var("MOBILE_CONVNET_BENCH_FAST").as_deref() == Ok("1") {
+            Self::new(Duration::from_millis(100), 20, 1)
+        } else {
+            Self::default()
+        }
+    }
+
+    /// Time `f` repeatedly; returns (and records) the stats. The closure
+    /// result is black-boxed to keep the optimizer honest.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.max_iters
+            && (samples.is_empty() || start.elapsed() < self.budget)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        let stats = Stats::from_samples(name, samples);
+        println!("{}", stats.line());
+        self.results.push(stats.clone());
+        stats
+    }
+
+    /// All recorded stats.
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+}
+
+/// Render an ASCII table: header row + rows of cells, column-aligned.
+/// Shared by the table benches and the CLI report commands.
+pub fn render_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    let fmt_row = |cells: &[String]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(c.len())))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let header_cells: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&header_cells));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_stats() {
+        let mut b = Bencher::new(Duration::from_millis(20), 50, 1);
+        let s = b.bench("noop", || 1 + 1);
+        assert!(s.iters >= 1);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.max);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.50 ms");
+        assert_eq!(fmt_dur(Duration::from_secs(2)), "2.000 s");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            "T",
+            &["layer", "ms"],
+            &[vec!["conv1".into(), "55.8".into()], vec!["fire2".into(), "25.5".into()]],
+        );
+        assert!(t.contains("== T =="));
+        assert!(t.contains("conv1"));
+        assert!(t.lines().count() >= 4);
+    }
+}

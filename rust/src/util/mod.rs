@@ -1,0 +1,15 @@
+//! In-tree utility substrate.
+//!
+//! The build environment vendors only the `xla` crate's dependency
+//! closure, so the pieces a networked project would pull from crates.io
+//! are implemented here: a deterministic RNG ([`rng`]), a scoped
+//! data-parallel helper ([`par`]), a JSON parser/serializer ([`json`]),
+//! a micro-benchmark harness ([`bench`]), and a small CLI argument
+//! parser ([`cli`]).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod par;
+pub mod rng;
+pub mod stats;

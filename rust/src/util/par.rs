@@ -1,0 +1,116 @@
+//! Scoped data-parallelism over index ranges (the in-tree stand-in for
+//! Rayon).  Work is split into contiguous chunks; each worker thread
+//! produces an owned result per chunk; results come back in order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use.
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Map `f` over `[0, total)` in chunks of `chunk` elements, in parallel.
+/// Returns `(chunk_start, f(chunk_start, chunk_end))` for every chunk,
+/// ordered by `chunk_start`.
+pub fn parallel_chunks<T, F>(total: usize, chunk: usize, f: F) -> Vec<(usize, T)>
+where
+    T: Send,
+    F: Fn(usize, usize) -> T + Sync,
+{
+    assert!(chunk > 0);
+    if total == 0 {
+        return Vec::new();
+    }
+    let n_chunks = total.div_ceil(chunk);
+    let workers = num_threads().min(n_chunks);
+    if workers <= 1 {
+        return (0..n_chunks)
+            .map(|c| {
+                let start = c * chunk;
+                (start, f(start, (start + chunk).min(total)))
+            })
+            .collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n_chunks));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let c = next.fetch_add(1, Ordering::Relaxed);
+                if c >= n_chunks {
+                    break;
+                }
+                let start = c * chunk;
+                let end = (start + chunk).min(total);
+                let value = f(start, end);
+                results.lock().unwrap().push((start, value));
+            });
+        }
+    });
+    let mut out = results.into_inner().unwrap();
+    out.sort_by_key(|(s, _)| *s);
+    out
+}
+
+/// Parallel for-each over items of a slice (one chunk per worker).
+pub fn parallel_for_each<T, F>(items: &[T], f: F)
+where
+    T: Sync,
+    F: Fn(&T) + Sync,
+{
+    parallel_chunks(items.len(), items.len().div_ceil(num_threads()).max(1), |a, b| {
+        for item in &items[a..b] {
+            f(item);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_all_indices_once() {
+        let got = parallel_chunks(1003, 64, |a, b| (a..b).collect::<Vec<_>>());
+        let mut all: Vec<usize> = got.into_iter().flat_map(|(_, v)| v).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..1003).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn results_in_order() {
+        let got = parallel_chunks(100, 7, |a, _| a);
+        let starts: Vec<usize> = got.iter().map(|(s, _)| *s).collect();
+        let mut sorted = starts.clone();
+        sorted.sort_unstable();
+        assert_eq!(starts, sorted);
+    }
+
+    #[test]
+    fn empty_input() {
+        let got = parallel_chunks(0, 8, |a, b| (a, b));
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn matches_serial_sum() {
+        let parallel: u64 = parallel_chunks(10_000, 128, |a, b| (a..b).map(|v| v as u64).sum::<u64>())
+            .into_iter()
+            .map(|(_, s)| s)
+            .sum();
+        let serial: u64 = (0..10_000u64).sum();
+        assert_eq!(parallel, serial);
+    }
+
+    #[test]
+    fn for_each_touches_every_item() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let items: Vec<u64> = (0..500).collect();
+        let sum = AtomicU64::new(0);
+        parallel_for_each(&items, |v| {
+            sum.fetch_add(*v, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), (0..500).sum::<u64>());
+    }
+}

@@ -1,0 +1,107 @@
+//! Descriptive statistics helpers shared by benches, the trace
+//! replayer, and the calibration checks.
+
+/// Summary statistics of a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Compute mean/std/min/max. Returns `None` for an empty sample.
+pub fn summarize(xs: &[f64]) -> Option<Summary> {
+    if xs.is_empty() {
+        return None;
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+    let (mut min, mut max) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &x in xs {
+        min = min.min(x);
+        max = max.max(x);
+    }
+    Some(Summary { n: xs.len(), mean, std: var.sqrt(), min, max })
+}
+
+/// Percentile (p in [0,1]) of an unsorted sample (nearest-rank).
+pub fn percentile(xs: &[f64], p: f64) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Some(sorted[((sorted.len() - 1) as f64 * p.clamp(0.0, 1.0)) as usize])
+}
+
+/// Pearson correlation of two equal-length samples.
+pub fn correlation(xs: &[f64], ys: &[f64]) -> Option<f64> {
+    if xs.len() != ys.len() || xs.len() < 2 {
+        return None;
+    }
+    let sx = summarize(xs)?;
+    let sy = summarize(ys)?;
+    if sx.std == 0.0 || sy.std == 0.0 {
+        return None;
+    }
+    let n = xs.len() as f64;
+    let cov = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| (x - sx.mean) * (y - sy.mean))
+        .sum::<f64>()
+        / n;
+    Some(cov / (sx.std * sy.std))
+}
+
+/// Geometric mean of strictly positive values.
+pub fn geomean(xs: &[f64]) -> Option<f64> {
+    if xs.is_empty() || xs.iter().any(|&x| x <= 0.0) {
+        return None;
+    }
+    Some((xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_known_values() {
+        let s = summarize(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]).unwrap();
+        assert_eq!(s.n, 8);
+        assert!((s.mean - 5.0).abs() < 1e-12);
+        assert!((s.std - 2.0).abs() < 1e-12);
+        assert_eq!((s.min, s.max), (2.0, 9.0));
+        assert!(summarize(&[]).is_none());
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), Some(1.0));
+        assert_eq!(percentile(&xs, 1.0), Some(100.0));
+        let p50 = percentile(&xs, 0.5).unwrap();
+        assert!((49.0..=51.0).contains(&p50));
+    }
+
+    #[test]
+    fn correlation_signs() {
+        let xs: Vec<f64> = (0..50).map(|v| v as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x + 1.0).collect();
+        assert!((correlation(&xs, &ys).unwrap() - 1.0).abs() < 1e-12);
+        let zs: Vec<f64> = xs.iter().map(|x| -x).collect();
+        assert!((correlation(&xs, &zs).unwrap() + 1.0).abs() < 1e-12);
+        assert!(correlation(&xs, &xs[..10]).is_none());
+    }
+
+    #[test]
+    fn geomean_properties() {
+        assert!((geomean(&[1.0, 4.0, 16.0]).unwrap() - 4.0).abs() < 1e-12);
+        assert!(geomean(&[1.0, -1.0]).is_none());
+        assert!(geomean(&[]).is_none());
+    }
+}

@@ -1,0 +1,14 @@
+//! Smoke test: the full table set renders and carries the paper's
+//! headline shapes (detailed assertions live in the simulator's unit
+//! tests; this exercises the top-level generators end to end).
+use mobile_convnet::simulator::tables;
+
+#[test]
+fn calib_dump() {
+    let all = tables::render_all();
+    for needle in ["Table I", "Table III", "Table IV", "Table V", "Table VI", "Fig. 10",
+                   "Galaxy S7", "Nexus 6P", "Nexus 5"] {
+        assert!(all.contains(needle), "missing {needle}");
+    }
+    println!("{all}");
+}

@@ -1,0 +1,177 @@
+//! Integration tests over the full coordinator: batching, concurrency,
+//! precision routing, error paths, and the Pallas-artifact composition
+//! proof. Requires `make artifacts` (tests skip gracefully otherwise).
+
+use std::sync::Arc;
+
+use mobile_convnet::convnet::{run_squeezenet, ConvImpl};
+use mobile_convnet::coordinator::{Coordinator, CoordinatorConfig};
+use mobile_convnet::model::{ImageCorpus, SqueezeNet};
+use mobile_convnet::runtime::{artifacts, RuntimeEngine};
+use mobile_convnet::simulator::device::Precision;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = artifacts::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts missing; run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn concurrent_requests_form_batches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = CoordinatorConfig::new(dir);
+    cfg.precisions = vec![Precision::Imprecise];
+    // Generous deadline so slow thread spawn cannot defeat batch
+    // formation (we are testing the policy, not the default knobs).
+    cfg.batcher = mobile_convnet::coordinator::BatcherConfig {
+        max_batch: 4,
+        max_wait: std::time::Duration::from_millis(80),
+    };
+    let coordinator = Arc::new(Coordinator::start(cfg).unwrap());
+    let corpus = ImageCorpus::new(5);
+
+    // Fire 12 requests from 12 threads; deadline batching should group
+    // them into batches > 1.
+    let mut handles = Vec::new();
+    for i in 0..12u64 {
+        let c = coordinator.clone();
+        let img = corpus.image(i);
+        handles.push(std::thread::spawn(move || {
+            c.infer(img, Precision::Imprecise, false).unwrap()
+        }));
+    }
+    let responses: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(responses.len(), 12);
+    let max_batch = responses.iter().map(|r| r.batch_size).max().unwrap();
+    assert!(max_batch > 1, "expected some batching, all batches were size 1");
+    // ids are unique
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 12);
+    // batching must not change results: same image again, alone
+    let single = coordinator.infer(corpus.image(0), Precision::Imprecise, false).unwrap();
+    let batched = responses.iter().find(|r| r.id == 1).unwrap();
+    assert_eq!(single.top1, batched.top1);
+}
+
+#[test]
+fn precision_routing_and_sim_estimates() {
+    let Some(dir) = artifacts_dir() else { return };
+    let coordinator = Coordinator::start(CoordinatorConfig::new(dir)).unwrap();
+    let img = ImageCorpus::new(6).image(0);
+    let p = coordinator.infer(img.clone(), Precision::Precise, true).unwrap();
+    let q = coordinator.infer(img, Precision::Imprecise, true).unwrap();
+    assert_eq!(p.precision, Precision::Precise);
+    assert_eq!(q.precision, Precision::Imprecise);
+    // §IV-B: top-1 must agree between precisions
+    assert_eq!(p.top1, q.top1, "precise and imprecise disagree on top-1");
+    // sim estimates attached for all three paper devices
+    assert_eq!(p.sim.len(), 3);
+    for s in &p.sim {
+        assert!(s.latency_ms > 0.0 && s.energy_j > 0.0);
+    }
+    // imprecise simulated latency is lower on every device
+    for (sp, sq) in p.sim.iter().zip(&q.sim) {
+        assert!(sq.latency_ms < sp.latency_ms, "{}", sp.device);
+    }
+}
+
+#[test]
+fn rejects_malformed_images() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = CoordinatorConfig::new(dir);
+    cfg.precisions = vec![Precision::Precise];
+    cfg.batches = vec![1];
+    let coordinator = Coordinator::start(cfg).unwrap();
+    assert!(coordinator.infer(vec![0.0; 17], Precision::Precise, false).is_err());
+    // and a well-formed request still works afterwards
+    let ok = coordinator
+        .infer(ImageCorpus::new(1).image(0), Precision::Precise, false)
+        .unwrap();
+    assert!(ok.top1 < 1000);
+}
+
+#[test]
+fn pallas_model_artifact_matches_xla_and_rust() {
+    // The three-layer composition proof: the network lowered THROUGH
+    // the Pallas kernels (interpret mode) must agree with the lax
+    // lowering and with the pure-Rust engine.
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = RuntimeEngine::load(&dir, &[Precision::Precise], &[1]).unwrap();
+    let pallas = match engine.load_pallas_model() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("SKIP pallas artifact: {e:#}");
+            return;
+        }
+    };
+    let img = ImageCorpus::new(11).image(3);
+    let via_pallas = pallas.infer(&img).unwrap().remove(0);
+    let via_xla = engine
+        .executor(Precision::Precise, 1)
+        .unwrap()
+        .infer(&img)
+        .unwrap()
+        .remove(0);
+    let d = via_pallas
+        .iter()
+        .zip(&via_xla)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(d < 5e-3, "pallas vs xla logits diff {d}");
+
+    let net = SqueezeNet::v1_0();
+    let rust = run_squeezenet(&net, &engine.weights, &img, &ConvImpl::Sequential).unwrap();
+    let top_pallas = via_pallas
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    assert_eq!(rust.top1, top_pallas, "pallas path disagrees with rust reference");
+}
+
+#[test]
+fn conv1_kernel_artifact_matches_rust_conv() {
+    // Single Pallas conv1 kernel vs the Rust vectorized conv_g engine.
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = RuntimeEngine::load(&dir, &[], &[]).unwrap();
+    let kernel = match engine.load_layer_kernel("conv1") {
+        Ok(k) => k,
+        Err(e) => {
+            eprintln!("SKIP conv1 kernel: {e:#}");
+            return;
+        }
+    };
+    let img = ImageCorpus::new(2).image(0);
+    let out = kernel.run(&img).unwrap();
+
+    let net = SqueezeNet::v1_0();
+    let spec = net.conv_by_name("conv1").unwrap();
+    assert_eq!(out.len(), spec.num_output_elements());
+
+    use mobile_convnet::convnet::vectorized::{conv2d_g, hwc_to_chw4, VectorizedFilterBank};
+    let w = engine.weights.get("conv1_w").unwrap();
+    let b = engine.weights.get("conv1_b").unwrap();
+    let bank = VectorizedFilterBank::from_hwio(&w.data, spec.k, spec.cin, spec.cout);
+    let input = hwc_to_chw4(&img, spec.hw_in, spec.hw_in, spec.cin);
+    let rust_out = conv2d_g(&input, &bank, &b.data, spec, 4, true, true);
+
+    // kernel output is HWC (channels minor), rust output is CHW4
+    let mut max_d = 0.0f32;
+    for h in (0..spec.hw_out).step_by(13) {
+        for ww in (0..spec.hw_out).step_by(13) {
+            for m in 0..spec.cout {
+                let hwc = out[(h * spec.hw_out + ww) * spec.cout + m];
+                let chw4 = rust_out.get(m, h, ww);
+                max_d = max_d.max((hwc - chw4).abs());
+            }
+        }
+    }
+    assert!(max_d < 1e-3, "conv1 pallas vs rust conv_g diff {max_d}");
+}

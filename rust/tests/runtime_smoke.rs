@@ -1,0 +1,48 @@
+// End-to-end runtime smoke: artifacts -> PJRT -> logits, cross-checked
+// against the pure-Rust reference engine on the same weights/image.
+use mobile_convnet::convnet::{run_squeezenet, ConvImpl};
+use mobile_convnet::model::{ImageCorpus, SqueezeNet};
+use mobile_convnet::runtime::{artifacts, RuntimeEngine};
+use mobile_convnet::simulator::device::Precision;
+
+fn artifacts_ready() -> bool {
+    artifacts::default_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn pjrt_matches_rust_reference() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let dir = artifacts::default_dir();
+    let mut engine = RuntimeEngine::load(&dir, &[Precision::Precise], &[1]).unwrap();
+    engine.ensure_executor(Precision::Precise, 2).unwrap();
+    let corpus = ImageCorpus::new(7);
+    let img = corpus.image(0);
+
+    let exe = engine.executor(Precision::Precise, 1).unwrap();
+    let logits = exe.infer(&img).unwrap();
+    assert_eq!(logits.len(), 1);
+    assert_eq!(logits[0].len(), 1000);
+
+    // batch-2 executor must reproduce the same numbers per image
+    let exe2 = engine.executor(Precision::Precise, 2).unwrap();
+    let batch = corpus.batch(0, 2);
+    let logits2 = exe2.infer(&batch).unwrap();
+    let d: f32 = logits[0].iter().zip(&logits2[0]).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+    assert!(d < 1e-4, "batch-1 vs batch-2 diff {d}");
+
+    // weights resident: second call must work (buffers not donated)
+    let again = exe.infer(&img).unwrap();
+    assert_eq!(again[0], logits[0]);
+
+    // cross-check vs the pure-Rust sequential reference
+    let net = SqueezeNet::v1_0();
+    let reference = run_squeezenet(&net, &engine.weights, &img, &ConvImpl::Sequential).unwrap();
+    let d: f32 = reference.logits.iter().zip(&logits[0]).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+    eprintln!("max |pjrt - rust_seq| = {d}");
+    assert!(d < 1e-2, "PJRT vs rust reference diff {d}");
+    let top_pjrt = logits[0].iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+    assert_eq!(reference.top1, top_pjrt);
+}

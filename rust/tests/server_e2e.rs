@@ -1,0 +1,68 @@
+//! End-to-end test of the TCP JSON-lines server: real sockets, real
+//! inference, telemetry, graceful shutdown.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use mobile_convnet::coordinator::{server, Coordinator, CoordinatorConfig};
+use mobile_convnet::runtime::artifacts;
+use mobile_convnet::simulator::device::Precision;
+
+#[test]
+fn serve_infer_stats_quit() {
+    let dir = artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing; run `make artifacts`");
+        return;
+    }
+    let mut cfg = CoordinatorConfig::new(dir);
+    cfg.precisions = vec![Precision::Precise];
+    cfg.batches = vec![1, 2];
+    let coordinator = Arc::new(Coordinator::start(cfg).unwrap());
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let c = coordinator.clone();
+    let s = stop.clone();
+    let handle = std::thread::spawn(move || {
+        server::serve(c, "127.0.0.1:0", s, move |a| {
+            let _ = addr_tx.send(a);
+        })
+    });
+    let addr = addr_rx.recv().unwrap().to_string();
+
+    let mut client = server::Client::connect(&addr).unwrap();
+    // same image twice -> identical top-1 (determinism over the wire)
+    let r1 = client.infer_seed(3, 0, Precision::Precise, true).unwrap();
+    let r2 = client.infer_seed(3, 0, Precision::Precise, false).unwrap();
+    assert_eq!(r1.top1, r2.top1);
+    assert!(r1.latency_ms > 0.0);
+    // sim estimates came over the wire
+    let sim = r1.raw.get("sim").and_then(|s| s.as_array().map(|a| a.len()));
+    assert_eq!(sim, Some(3));
+    // different image -> (very likely) valid class either way
+    let r3 = client.infer_seed(3, 1, Precision::Precise, false).unwrap();
+    assert!(r3.top1 < 1000);
+
+    // stats reflect the traffic
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("responses=3"), "stats: {stats}");
+
+    // a second client works concurrently
+    let mut client2 = server::Client::connect(&addr).unwrap();
+    let r4 = client2.infer_seed(9, 9, Precision::Precise, false).unwrap();
+    assert!(r4.top1 < 1000);
+
+    // malformed request gets an error reply, connection survives
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+        writeln!(raw, "this is not json").unwrap();
+        let mut line = String::new();
+        BufReader::new(raw.try_clone().unwrap()).read_line(&mut line).unwrap();
+        assert!(line.contains("error"), "got: {line}");
+    }
+
+    client.quit().unwrap();
+    handle.join().unwrap().unwrap();
+}
