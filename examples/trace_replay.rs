@@ -1,17 +1,20 @@
-//! Open-loop trace replay against the live coordinator: generate a
-//! Poisson / bursty arrival trace, replay it on schedule, and report
-//! the latency distribution plus admission-control behaviour under
-//! overload.
+//! Open-loop trace replay: generate a Poisson / bursty arrival trace,
+//! then drive it against the live coordinator (real PJRT inference) or
+//! against a simulated device fleet (`--fleet SPEC`, virtual time) — or
+//! both, for a side-by-side of the single-device and fleet paths.
 //!
 //! ```sh
 //! cargo run --release --example trace_replay -- --requests 40 --rate 15 --burst
+//! cargo run --release --example trace_replay -- --fleet 2xs7,2x6p,2xn5 --policy energy
 //! ```
 
 use std::sync::Arc;
 
 use anyhow::Result;
+use mobile_convnet::config;
 use mobile_convnet::coordinator::trace::{replay, Arrival, Trace};
 use mobile_convnet::coordinator::{Coordinator, CoordinatorConfig};
+use mobile_convnet::fleet::{self, Fleet};
 use mobile_convnet::model::ImageCorpus;
 use mobile_convnet::runtime::artifacts;
 use mobile_convnet::util::cli::Args;
@@ -22,11 +25,7 @@ fn main() -> Result<()> {
     let n = args.get_usize("requests", 40).map_err(|e| anyhow::anyhow!(e))?;
     let rate = args.get_f64("rate", 15.0).map_err(|e| anyhow::anyhow!(e))?;
     let bursty = args.flag("burst");
-
-    let dir = artifacts::default_dir();
-    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
-    println!("starting coordinator...");
-    let coordinator = Arc::new(Coordinator::start(CoordinatorConfig::new(dir))?);
+    let fleet_spec = args.get("fleet");
 
     let arrival = if bursty {
         Arrival::Bursty { rate_per_s: rate, burst_every: 10, burst_len: 5, burst_mult: 4.0 }
@@ -42,6 +41,26 @@ fn main() -> Result<()> {
         if bursty { ", bursty" } else { "" }
     );
 
+    // Fleet path: the same trace, routed across simulated replicas.
+    if let Some(spec) = fleet_spec {
+        let cfg = config::fleet_from(spec, args.get("policy"), None)?;
+        let fleet = Fleet::new(cfg);
+        let report = fleet::run_trace(&fleet, &trace, &[]);
+        println!("\nfleet path ({spec}):\n{}", report.render());
+    }
+
+    // Live path: real inference through the PJRT runtime.
+    let dir = artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
+        anyhow::ensure!(
+            fleet_spec.is_some(),
+            "run `make artifacts` first (or pass --fleet SPEC for the simulated path)"
+        );
+        println!("\n(live path skipped: artifacts missing; run `make artifacts`)");
+        return Ok(());
+    }
+    println!("\nstarting coordinator...");
+    let coordinator = Arc::new(Coordinator::start(CoordinatorConfig::new(dir))?);
     let corpus = ImageCorpus::new(13);
     let report = replay(&coordinator, &trace, &corpus)?;
     println!("\n{}", report.summary());

@@ -1,0 +1,79 @@
+//! Bench for **fleet routing policies** (Layer 3.5): the same Poisson
+//! trace through the same mixed 6-replica Adreno fleet under every
+//! placement policy, at equal throughput (identical arrivals, every
+//! request completed).  The claim under test: `EnergyAware` finishes
+//! the trace with no more total energy than `RoundRobin`, because it
+//! concentrates load on the joule-efficient replicas (Table V's per-
+//! device energy spread is what it exploits) until queueing makes the
+//! latency price too high.
+
+use mobile_convnet::coordinator::trace::{Arrival, Trace};
+use mobile_convnet::fleet::{run_trace, Fleet, FleetConfig, Policy};
+use mobile_convnet::util::bench::Bencher;
+
+fn main() {
+    const SPEC: &str = "2xs7,2x6p,2xn5";
+    let trace = Trace::generate(400, Arrival::Poisson { rate_per_s: 9.0 }, 0.0, 42);
+    println!(
+        "fleet {SPEC}, {} arrivals at {:.1} req/s (virtual time)\n",
+        trace.entries.len(),
+        trace.offered_rate()
+    );
+
+    println!(
+        "{:<16} {:>9} {:>6} {:>10} {:>10} {:>12} {:>10} {:>10}",
+        "policy", "completed", "shed", "p50 ms", "p99 ms", "energy J", "J/req", "req/s"
+    );
+    let mut results = Vec::new();
+    for policy in Policy::all() {
+        let cfg = FleetConfig::parse_spec(SPEC, policy).unwrap().with_seed(42);
+        let fleet = Fleet::new(cfg);
+        let report = run_trace(&fleet, &trace, &[]);
+        println!(
+            "{:<16} {:>9} {:>6} {:>10.1} {:>10.1} {:>12.1} {:>10.3} {:>10.1}",
+            report.policy,
+            report.completed,
+            report.shed,
+            report.p50_ms.unwrap_or(0.0),
+            report.p99_ms.unwrap_or(0.0),
+            report.total_energy_j,
+            report.energy_per_request_j(),
+            report.throughput_rps(),
+        );
+        results.push(report);
+    }
+
+    // Equal throughput: every policy completes the whole trace.
+    for r in &results {
+        assert_eq!(r.completed, 400, "{}: all requests must complete", r.policy);
+        assert_eq!(r.shed, 0, "{}: nothing may be shed", r.policy);
+    }
+    let energy = |label: &str| {
+        results.iter().find(|r| r.policy == label).map(|r| r.total_energy_j).unwrap()
+    };
+    assert!(
+        energy("energy-aware") <= energy("round-robin") + 1e-9,
+        "energy-aware {:.1} J must be <= round-robin {:.1} J at equal throughput",
+        energy("energy-aware"),
+        energy("round-robin")
+    );
+    println!(
+        "\nclaim check: energy-aware ({:.1} J) <= round-robin ({:.1} J) at equal throughput ... OK",
+        energy("energy-aware"),
+        energy("round-robin")
+    );
+
+    // Dispatch hot path: routing cost per request, fleet construction.
+    let mut b = Bencher::from_env();
+    b.bench("fleet/construct_6_replicas", || {
+        Fleet::new(FleetConfig::mixed_six(Policy::RoundRobin))
+    });
+    let fleet = Fleet::new(FleetConfig::mixed_six(Policy::EnergyAware {
+        lambda_j_per_ms: Policy::DEFAULT_LAMBDA_J_PER_MS,
+    }));
+    let mut t = 0.0f64;
+    b.bench("fleet/dispatch_energy_aware", || {
+        t += 10.0;
+        fleet.dispatch(t)
+    });
+}

@@ -8,9 +8,17 @@
 //!   "max_batch": 8,
 //!   "max_wait_ms": 5.0,
 //!   "batches": [1, 2, 4, 8],
-//!   "precisions": ["precise", "imprecise"]
+//!   "precisions": ["precise", "imprecise"],
+//!   "fleet": "2xs7,2x6p,2xn5",
+//!   "fleet_policy": "energy",
+//!   "fleet_budget_j": 50.0
 //! }
 //! ```
+//!
+//! The fleet topology can also come from the environment
+//! (`MCN_FLEET`, `MCN_FLEET_POLICY`, `MCN_FLEET_BUDGET_J`) or the CLI
+//! (`--fleet SPEC --fleet-policy P --fleet-budget-j J`); CLI wins over
+//! env, env over file.
 
 use std::path::{Path, PathBuf};
 use std::time::Duration;
@@ -18,6 +26,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::coordinator::{BatcherConfig, CoordinatorConfig};
+use crate::fleet::{FleetConfig, Policy};
 use crate::runtime::artifacts;
 use crate::simulator::device::Precision;
 use crate::util::json::Json;
@@ -31,6 +40,8 @@ pub struct AppConfig {
     pub max_wait: Duration,
     pub batches: Vec<usize>,
     pub precisions: Vec<Precision>,
+    /// Simulated device fleet behind the server (None = single-path).
+    pub fleet: Option<FleetConfig>,
 }
 
 impl Default for AppConfig {
@@ -42,8 +53,22 @@ impl Default for AppConfig {
             max_wait: Duration::from_millis(5),
             batches: vec![1, 2, 4, 8],
             precisions: vec![Precision::Precise, Precision::Imprecise],
+            fleet: None,
         }
     }
+}
+
+/// Build a [`FleetConfig`] from a topology spec plus optional policy
+/// name and per-replica budget.  Default policy is `energy` — the
+/// paper-derived router.
+pub fn fleet_from(spec: &str, policy: Option<&str>, budget_j: Option<f64>) -> Result<FleetConfig> {
+    let policy = match policy {
+        Some(p) => Policy::parse(p).map_err(|e| anyhow::anyhow!(e))?,
+        None => Policy::EnergyAware { lambda_j_per_ms: Policy::DEFAULT_LAMBDA_J_PER_MS },
+    };
+    let cfg = FleetConfig::parse_spec(spec, policy)
+        .map_err(|e| anyhow::anyhow!("fleet spec: {e}"))?;
+    Ok(cfg.with_budget_j(budget_j))
 }
 
 fn parse_precision(s: &str) -> Result<Precision> {
@@ -83,7 +108,30 @@ impl AppConfig {
                 .collect::<Result<Vec<_>>>()?;
             anyhow::ensure!(!cfg.precisions.is_empty(), "config: precisions must be non-empty");
         }
+        if let Some(spec) = v.get("fleet").and_then(Json::as_str) {
+            let policy = v.get("fleet_policy").and_then(Json::as_str);
+            let budget = v.get("fleet_budget_j").and_then(Json::as_f64);
+            cfg.fleet = Some(fleet_from(spec, policy, budget).context("config: fleet")?);
+        }
         Ok(cfg)
+    }
+
+    /// Apply `MCN_FLEET` / `MCN_FLEET_POLICY` / `MCN_FLEET_BUDGET_J`
+    /// environment overrides (spec presence gates the other two).
+    pub fn apply_env(&mut self) -> Result<()> {
+        if let Ok(spec) = std::env::var("MCN_FLEET") {
+            let policy = std::env::var("MCN_FLEET_POLICY").ok();
+            let budget = match std::env::var("MCN_FLEET_BUDGET_J") {
+                Ok(v) => Some(
+                    v.parse::<f64>()
+                        .map_err(|_| anyhow::anyhow!("MCN_FLEET_BUDGET_J: bad number '{v}'"))?,
+                ),
+                Err(_) => None,
+            };
+            self.fleet =
+                Some(fleet_from(&spec, policy.as_deref(), budget).context("MCN_FLEET")?);
+        }
+        Ok(())
     }
 
     /// Load from a file.
@@ -141,5 +189,31 @@ mod tests {
         let c = AppConfig::default().coordinator_config();
         assert_eq!(c.batcher.max_batch, 8);
         assert!(c.batches.contains(&8));
+    }
+
+    #[test]
+    fn parses_fleet_block() {
+        let c = AppConfig::from_json(
+            r#"{"fleet": "2xs7,1xn5@fp16", "fleet_policy": "p2c", "fleet_budget_j": 12.5}"#,
+        )
+        .unwrap();
+        let fleet = c.fleet.unwrap();
+        assert_eq!(fleet.replicas.len(), 3);
+        assert_eq!(fleet.policy, Policy::PowerOfTwoChoices);
+        assert_eq!(fleet.budget_j, Some(12.5));
+        // default config has no fleet; bad specs are errors
+        assert!(AppConfig::default().fleet.is_none());
+        assert!(AppConfig::from_json(r#"{"fleet": "9xpixel"}"#).is_err());
+        assert!(AppConfig::from_json(r#"{"fleet": "s7", "fleet_policy": "rand"}"#).is_err());
+    }
+
+    #[test]
+    fn fleet_from_defaults_to_energy_aware() {
+        let f = fleet_from("s7,n5", None, None).unwrap();
+        assert!(matches!(f.policy, Policy::EnergyAware { .. }));
+        assert_eq!(f.budget_j, None);
+        let f = fleet_from("s7", Some("rr"), Some(3.0)).unwrap();
+        assert_eq!(f.policy, Policy::RoundRobin);
+        assert_eq!(f.budget_j, Some(3.0));
     }
 }

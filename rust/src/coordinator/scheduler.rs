@@ -32,13 +32,20 @@ impl PlanCache {
     }
 
     /// The autotuned plan for (device, precision); computed on first use.
+    ///
+    /// The sweep runs *outside* the lock: first-touch autotunes for
+    /// different (device, precision) keys proceed concurrently instead
+    /// of serializing behind one mutex.  A double-checked insert keeps
+    /// exactly one winner per key (a losing racer's duplicate work is
+    /// discarded — autotuning is deterministic, so both are identical).
     pub fn plan(&self, device: &DeviceProfile, precision: Precision) -> NetworkPlan {
         let key = (device.id, precision.label());
+        if let Some(plan) = self.plans.lock().unwrap().get(&key) {
+            return plan.clone();
+        }
+        let plan = autotune_network(&self.net, precision, device);
         let mut plans = self.plans.lock().unwrap();
-        plans
-            .entry(key)
-            .or_insert_with(|| autotune_network(&self.net, precision, device))
-            .clone()
+        plans.entry(key).or_insert(plan).clone()
     }
 
     /// Layer-name → optimal-g map for the Rust vectorized engine.
@@ -67,6 +74,46 @@ mod tests {
         cache.plan(&s7, Precision::Imprecise);
         cache.plan(&DeviceProfile::nexus_5(), Precision::Precise);
         assert_eq!(cache.cached(), 3);
+    }
+
+    #[test]
+    fn concurrent_first_touch_is_consistent() {
+        // Many threads hit the cold cache for *different* devices and
+        // precisions at once.  Every thread must get the same plan the
+        // sequential path computes, and each key is cached exactly once.
+        let cache = PlanCache::new();
+        let combos: Vec<(DeviceProfile, Precision)> = DeviceProfile::all()
+            .into_iter()
+            .flat_map(|d| {
+                [(d.clone(), Precision::Precise), (d, Precision::Imprecise)]
+            })
+            .collect();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                for (device, precision) in &combos {
+                    let cache = &cache;
+                    s.spawn(move || {
+                        let plan = cache.plan(device, *precision);
+                        let expected = crate::simulator::autotune::autotune_network(
+                            &SqueezeNet::v1_0(),
+                            *precision,
+                            device,
+                        );
+                        for spec in SqueezeNet::v1_0().conv_layers() {
+                            assert_eq!(
+                                plan.optimal_g(&spec.name),
+                                expected.optimal_g(&spec.name),
+                                "{} {} {}",
+                                device.id,
+                                precision.label(),
+                                spec.name
+                            );
+                        }
+                    });
+                }
+            }
+        });
+        assert_eq!(cache.cached(), combos.len());
     }
 
     #[test]

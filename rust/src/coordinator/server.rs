@@ -3,11 +3,20 @@
 //! Wire protocol (one JSON object per line):
 //!
 //! request  `{"image_seed": 7, "image_index": 0, "precision": "precise",
-//!            "sim": true}`
+//!            "sim": true, "fleet": true}`
 //!          or `{"image": [ ...150528 floats... ], ...}`
-//!          or `{"cmd": "stats"}` / `{"cmd": "quit"}`
-//! response the [`InferResponse::to_json`] object, or
-//!          `{"error": "..."}` / `{"stats": "..."}`.
+//!          or `{"cmd": "stats"}` / `{"cmd": "fleet_stats"}` /
+//!          `{"cmd": "quit"}`
+//! response the [`InferResponse::to_json`] object (plus a `"fleet"`
+//!          placement object when the request set `"fleet": true`), or
+//!          `{"error": "..."}` / `{"stats": "..."}` /
+//!          `{"fleet_stats": {...}}`.
+//!
+//! With `"fleet": true` the request is first routed through the
+//! configured device fleet (see [`crate::fleet`]): the energy-aware (or
+//! other) policy places it on a simulated Adreno replica, whose
+//! predicted queue wait / latency / joules ride back on the response
+//! while the real PJRT runtime computes the answer.
 //!
 //! Seed-addressed images keep the wire small for load generation: both
 //! ends derive the pixels from the shared deterministic corpus.
@@ -16,9 +25,11 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::fleet::Fleet;
 use crate::model::ImageCorpus;
 use crate::simulator::device::Precision;
 use crate::util::json::Json;
@@ -26,10 +37,12 @@ use crate::util::json::Json;
 use super::engine::Coordinator;
 use super::request::InferResponse;
 
-/// Parse a request line into (image, precision, with_sim) or a command.
+/// Parse a request line into an inference (image, precision, sim/fleet
+/// flags) or a command.
 enum Parsed {
-    Infer { image: Vec<f32>, precision: Precision, with_sim: bool },
+    Infer { image: Vec<f32>, precision: Precision, with_sim: bool, with_fleet: bool },
     Stats,
+    FleetStats,
     Quit,
 }
 
@@ -38,6 +51,7 @@ fn parse_request(line: &str, image_len: usize) -> Result<Parsed> {
     if let Some(cmd) = v.get("cmd").and_then(Json::as_str) {
         return match cmd {
             "stats" => Ok(Parsed::Stats),
+            "fleet_stats" => Ok(Parsed::FleetStats),
             "quit" => Ok(Parsed::Quit),
             other => anyhow::bail!("unknown cmd '{other}'"),
         };
@@ -48,6 +62,7 @@ fn parse_request(line: &str, image_len: usize) -> Result<Parsed> {
         other => anyhow::bail!("unknown precision '{other}'"),
     };
     let with_sim = v.get("sim").and_then(Json::as_bool).unwrap_or(false);
+    let with_fleet = v.get("fleet").and_then(Json::as_bool).unwrap_or(false);
     let image = if let Some(raw) = v.get("image").and_then(Json::as_array) {
         let img: Vec<f32> = raw.iter().filter_map(|x| x.as_f64()).map(|x| x as f32).collect();
         anyhow::ensure!(img.len() == image_len, "image must have {image_len} values");
@@ -57,7 +72,7 @@ fn parse_request(line: &str, image_len: usize) -> Result<Parsed> {
         let index = v.get("image_index").and_then(Json::as_usize).unwrap_or(0) as u64;
         ImageCorpus::new(seed).image(index)
     };
-    Ok(Parsed::Infer { image, precision, with_sim })
+    Ok(Parsed::Infer { image, precision, with_sim, with_fleet })
 }
 
 /// Serve until `stop` is set (checked between connections) or a client
@@ -68,17 +83,32 @@ pub fn serve(
     stop: Arc<AtomicBool>,
     on_bound: impl FnOnce(std::net::SocketAddr),
 ) -> Result<()> {
+    serve_with_fleet(coordinator, None, addr, stop, on_bound)
+}
+
+/// [`serve`] with an optional device fleet backing the `"fleet": true`
+/// infer path and the `fleet_stats` command.  Wall-clock arrival times
+/// (ms since server start) drive the fleet's virtual clock.
+pub fn serve_with_fleet(
+    coordinator: Arc<Coordinator>,
+    fleet: Option<Arc<Fleet>>,
+    addr: &str,
+    stop: Arc<AtomicBool>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     listener.set_nonblocking(true)?;
     on_bound(listener.local_addr()?);
+    let started = Instant::now();
     let mut handles = Vec::new();
     while !stop.load(Ordering::Relaxed) {
         match listener.accept() {
             Ok((stream, _)) => {
                 let c = coordinator.clone();
+                let f = fleet.clone();
                 let s = stop.clone();
                 handles.push(std::thread::spawn(move || {
-                    let _ = handle_client(c, stream, s);
+                    let _ = handle_client(c, f, started, stream, s);
                 }));
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -95,6 +125,8 @@ pub fn serve(
 
 fn handle_client(
     coordinator: Arc<Coordinator>,
+    fleet: Option<Arc<Fleet>>,
+    started: Instant,
     stream: TcpStream,
     stop: Arc<AtomicBool>,
 ) -> Result<()> {
@@ -136,10 +168,52 @@ fn handle_client(
             Ok(Parsed::Stats) => {
                 Json::object(vec![("stats", Json::str(coordinator.telemetry.report()))])
             }
-            Ok(Parsed::Infer { image, precision, with_sim }) => {
-                match coordinator.infer(image, precision, with_sim) {
-                    Ok(resp) => resp.to_json(),
-                    Err(e) => Json::object(vec![("error", Json::str(format!("{e:#}")))]),
+            Ok(Parsed::FleetStats) => match &fleet {
+                Some(f) => {
+                    // Catch the virtual clock up to wall time so the
+                    // snapshot reflects long-finished requests.
+                    f.run_to(started.elapsed().as_secs_f64() * 1e3);
+                    Json::object(vec![("fleet_stats", f.stats().to_json())])
+                }
+                None => Json::object(vec![(
+                    "error",
+                    Json::str("no fleet configured (start the server with --fleet SPEC)"),
+                )]),
+            },
+            Ok(Parsed::Infer { image, precision, with_sim, with_fleet }) => {
+                // Fleet admission runs *before* the real inference, so
+                // an overload shed costs nothing; if the inference then
+                // fails, the placement is retracted so the fleet never
+                // meters joules for an answer that was not served.
+                let placement = match (with_fleet, &fleet) {
+                    (false, _) => Ok(None),
+                    (true, None) => {
+                        Err("no fleet configured (start the server with --fleet SPEC)".to_string())
+                    }
+                    (true, Some(f)) => {
+                        let arrival_ms = started.elapsed().as_secs_f64() * 1e3;
+                        f.dispatch(arrival_ms)
+                            .map(Some)
+                            .ok_or_else(|| "fleet overloaded: request shed".to_string())
+                    }
+                };
+                match placement {
+                    Err(e) => Json::object(vec![("error", Json::str(e))]),
+                    Ok(placement) => match coordinator.infer(image, precision, with_sim) {
+                        Ok(resp) => {
+                            let mut reply = resp.to_json();
+                            if let (Some(p), Json::Object(pairs)) = (placement, &mut reply) {
+                                pairs.push(("fleet".to_string(), p.to_json()));
+                            }
+                            reply
+                        }
+                        Err(e) => {
+                            if let (Some(p), Some(f)) = (&placement, &fleet) {
+                                f.retract(p);
+                            }
+                            Json::object(vec![("error", Json::str(format!("{e:#}")))])
+                        }
+                    },
                 }
             }
             Err(e) => Json::object(vec![("error", Json::str(format!("{e:#}")))]),
@@ -210,6 +284,12 @@ impl Client {
         Ok(v.get("stats").and_then(Json::as_str).unwrap_or("").to_string())
     }
 
+    /// Fetch the fleet report (errors when the server has no fleet).
+    pub fn fleet_stats(&mut self) -> Result<Json> {
+        let v = self.round_trip(Json::object(vec![("cmd", Json::str("fleet_stats"))]))?;
+        v.get("fleet_stats").cloned().context("reply missing fleet_stats")
+    }
+
     /// Ask the server to stop.
     pub fn quit(&mut self) -> Result<()> {
         let _ = self.round_trip(Json::object(vec![("cmd", Json::str("quit"))]))?;
@@ -230,11 +310,21 @@ mod tests {
     fn parses_seed_request() {
         let p = parse_request(r#"{"image_seed": 3, "precision": "imprecise"}"#, 12).unwrap();
         match p {
-            Parsed::Infer { image, precision, with_sim } => {
+            Parsed::Infer { image, precision, with_sim, with_fleet } => {
                 assert_eq!(image.len(), crate::model::images::IMAGE_LEN);
                 assert_eq!(precision, Precision::Imprecise);
                 assert!(!with_sim);
+                assert!(!with_fleet);
             }
+            _ => panic!("expected infer"),
+        }
+    }
+
+    #[test]
+    fn parses_fleet_request() {
+        let p = parse_request(r#"{"image_seed": 1, "fleet": true}"#, 12).unwrap();
+        match p {
+            Parsed::Infer { with_fleet, .. } => assert!(with_fleet),
             _ => panic!("expected infer"),
         }
     }
@@ -259,6 +349,10 @@ mod tests {
     #[test]
     fn parses_commands() {
         assert!(matches!(parse_request(r#"{"cmd": "stats"}"#, 3).unwrap(), Parsed::Stats));
+        assert!(matches!(
+            parse_request(r#"{"cmd": "fleet_stats"}"#, 3).unwrap(),
+            Parsed::FleetStats
+        ));
         assert!(matches!(parse_request(r#"{"cmd": "quit"}"#, 3).unwrap(), Parsed::Quit));
     }
 }

@@ -1,0 +1,107 @@
+//! Per-replica joule budgets — the paper's energy accounting (§IV-C,
+//! Table V) turned into a serving-time control loop.
+//!
+//! A replica meters the differential energy of every inference it
+//! completes.  Past a soft fraction of its budget it *degrades*: future
+//! requests run on the imprecise (fp16-class) path, which costs a
+//! fraction of the precise path's joules per image (Table V's energy
+//! ratio is the whole point of the paper).  When the budget is fully
+//! exhausted the replica stops accepting traffic and the router sheds
+//! or re-routes around it.
+
+/// A joule allowance for one replica.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JouleBudget {
+    /// Total joules the replica may spend.
+    pub budget_j: f64,
+    /// Fraction of the budget after which the replica degrades to the
+    /// imprecise path to stretch the remainder.
+    pub soft_frac: f64,
+}
+
+/// Where a replica stands against its budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BudgetState {
+    /// Under the soft threshold; serve at the configured precision.
+    Nominal,
+    /// Past the soft threshold; serve imprecise (fp16) only.
+    Degraded,
+    /// Budget spent; take no new traffic.
+    Exhausted,
+}
+
+impl BudgetState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            BudgetState::Nominal => "nominal",
+            BudgetState::Degraded => "degraded",
+            BudgetState::Exhausted => "exhausted",
+        }
+    }
+}
+
+impl JouleBudget {
+    /// Budget with the default soft threshold at half the allowance.
+    pub fn new(budget_j: f64) -> JouleBudget {
+        assert!(budget_j.is_finite() && budget_j > 0.0, "budget must be positive");
+        JouleBudget { budget_j, soft_frac: 0.5 }
+    }
+
+    pub fn with_soft_frac(mut self, soft_frac: f64) -> JouleBudget {
+        assert!((0.0..=1.0).contains(&soft_frac), "soft_frac must be in [0,1]");
+        self.soft_frac = soft_frac;
+        self
+    }
+
+    /// Classify a cumulative spend against this budget.
+    pub fn state(&self, spent_j: f64) -> BudgetState {
+        if spent_j >= self.budget_j {
+            BudgetState::Exhausted
+        } else if spent_j >= self.soft_frac * self.budget_j {
+            BudgetState::Degraded
+        } else {
+            BudgetState::Nominal
+        }
+    }
+
+    /// Joules left (never negative).
+    pub fn remaining_j(&self, spent_j: f64) -> f64 {
+        (self.budget_j - spent_j).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thresholds_in_order() {
+        let b = JouleBudget::new(10.0);
+        assert_eq!(b.state(0.0), BudgetState::Nominal);
+        assert_eq!(b.state(4.99), BudgetState::Nominal);
+        assert_eq!(b.state(5.0), BudgetState::Degraded);
+        assert_eq!(b.state(9.99), BudgetState::Degraded);
+        assert_eq!(b.state(10.0), BudgetState::Exhausted);
+        assert_eq!(b.state(42.0), BudgetState::Exhausted);
+    }
+
+    #[test]
+    fn soft_frac_moves_the_degrade_point() {
+        let b = JouleBudget::new(10.0).with_soft_frac(0.8);
+        assert_eq!(b.state(7.0), BudgetState::Nominal);
+        assert_eq!(b.state(8.0), BudgetState::Degraded);
+    }
+
+    #[test]
+    fn remaining_clamps_at_zero() {
+        let b = JouleBudget::new(2.0);
+        assert_eq!(b.remaining_j(0.5), 1.5);
+        assert_eq!(b.remaining_j(3.0), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_positive_budget() {
+        let _ = JouleBudget::new(0.0);
+    }
+}

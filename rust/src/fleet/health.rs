@@ -1,0 +1,89 @@
+//! Replica health: draining, failure injection, and the scripted
+//! event plans simulations use to exercise automatic re-routing.
+
+/// Lifecycle state of one replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    /// Accepting traffic and completing its queue.
+    Healthy,
+    /// No new placements; queued requests still complete (graceful
+    /// removal, e.g. before a rolling restart).
+    Draining,
+    /// Dead: queued requests are abandoned and re-routed by the fleet.
+    Failed,
+}
+
+impl Health {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Health::Healthy => "healthy",
+            Health::Draining => "draining",
+            Health::Failed => "failed",
+        }
+    }
+
+    /// May the router place new requests here?
+    pub fn accepts_traffic(&self) -> bool {
+        matches!(self, Health::Healthy)
+    }
+
+    /// Does already-queued work still run to completion?
+    pub fn completes_queued(&self) -> bool {
+        !matches!(self, Health::Failed)
+    }
+}
+
+/// What a scripted health event does to its target replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthAction {
+    Drain,
+    Fail,
+    Revive,
+}
+
+/// A scripted health transition for failure-injection runs: at virtual
+/// time `at_ms`, apply `action` to `replica`.
+#[derive(Debug, Clone, Copy)]
+pub struct HealthEvent {
+    pub at_ms: f64,
+    pub replica: usize,
+    pub action: HealthAction,
+}
+
+impl HealthEvent {
+    pub fn fail(replica: usize, at_ms: f64) -> HealthEvent {
+        HealthEvent { at_ms, replica, action: HealthAction::Fail }
+    }
+
+    pub fn drain(replica: usize, at_ms: f64) -> HealthEvent {
+        HealthEvent { at_ms, replica, action: HealthAction::Drain }
+    }
+
+    pub fn revive(replica: usize, at_ms: f64) -> HealthEvent {
+        HealthEvent { at_ms, replica, action: HealthAction::Revive }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traffic_rules() {
+        assert!(Health::Healthy.accepts_traffic());
+        assert!(!Health::Draining.accepts_traffic());
+        assert!(!Health::Failed.accepts_traffic());
+        assert!(Health::Healthy.completes_queued());
+        assert!(Health::Draining.completes_queued());
+        assert!(!Health::Failed.completes_queued());
+    }
+
+    #[test]
+    fn event_constructors() {
+        let e = HealthEvent::fail(2, 150.0);
+        assert_eq!(e.replica, 2);
+        assert_eq!(e.action, HealthAction::Fail);
+        assert_eq!(HealthEvent::drain(0, 1.0).action, HealthAction::Drain);
+        assert_eq!(HealthEvent::revive(0, 1.0).action, HealthAction::Revive);
+    }
+}

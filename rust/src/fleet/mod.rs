@@ -1,0 +1,645 @@
+//! Layer 3.5: the heterogeneous device fleet.
+//!
+//! The paper tunes CNN inference for *one* mobile GPU at a time — the
+//! optimal granularity `g` differs per device (Table I), and so do
+//! latency and joules per image (Tables IV–VI).  A production front
+//! door serves millions of users from a *mix* of such devices, so this
+//! module puts N simulated Adreno 530/430/330 replicas (at fp32 or the
+//! paper's relaxed-fp16 path) behind one dispatch API:
+//!
+//! - [`replica`] — a per-device worker with its own FIFO queue,
+//!   in-flight counter, energy meter, and latency telemetry; priced by
+//!   the autotuned `NetworkPlan` cost model and the Table V power rails;
+//! - [`router`] — pluggable placement policies (`RoundRobin`,
+//!   `LeastLoaded`, `EnergyAware`, `PowerOfTwoChoices`);
+//! - [`health`] — draining, failure injection, automatic re-routing of
+//!   a dead replica's queue;
+//! - [`budget`] — per-replica joule budgets that degrade a replica to
+//!   fp16 at a soft threshold and shed load once exhausted.
+//!
+//! The fleet runs in *virtual time*: callers supply arrival timestamps
+//! (trace offsets, or wall-clock milliseconds for the live server), so
+//! whole-trace simulations are instantaneous and deterministic, and the
+//! same code path backs `examples/fleet_sim.rs`, the
+//! `benches/fleet_routing.rs` policy comparison, and the TCP server's
+//! `fleet_stats` / fleet-backed infer path.
+
+pub mod budget;
+pub mod health;
+pub mod replica;
+pub mod router;
+
+pub use budget::{BudgetState, JouleBudget};
+pub use health::{Health, HealthAction, HealthEvent};
+pub use replica::{Placement, Replica, ReplicaSpec};
+pub use router::{Candidate, Policy, Router};
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::coordinator::trace::Trace;
+use crate::coordinator::PlanCache;
+use crate::telemetry::LatencyRecorder;
+use crate::util::json::Json;
+
+/// Fleet construction parameters.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub replicas: Vec<ReplicaSpec>,
+    pub policy: Policy,
+    /// Per-replica joule budget (`None` = unmetered).
+    pub budget_j: Option<f64>,
+    /// Seed for the sampling policies' RNG.
+    pub seed: u64,
+}
+
+impl FleetConfig {
+    pub fn new(replicas: Vec<ReplicaSpec>, policy: Policy) -> FleetConfig {
+        FleetConfig { replicas, policy, budget_j: None, seed: 0 }
+    }
+
+    /// Parse a topology spec: comma-separated `[COUNTx]DEVICE[@PRECISION]`
+    /// atoms, e.g. `"2xs7,1x6p@fp16,n5"`.
+    pub fn parse_spec(spec: &str, policy: Policy) -> Result<FleetConfig, String> {
+        let mut replicas = Vec::new();
+        for atom in spec.split(',') {
+            let atom = atom.trim();
+            if atom.is_empty() {
+                continue;
+            }
+            let (count, rest) = match atom.split_once('x') {
+                Some((n, rest)) if !n.is_empty() && n.chars().all(|c| c.is_ascii_digit()) => {
+                    (n.parse::<usize>().map_err(|_| format!("bad count in '{atom}'"))?, rest)
+                }
+                _ => (1, atom),
+            };
+            if count == 0 || count > 64 {
+                return Err(format!("replica count in '{atom}' must be 1..=64"));
+            }
+            let rs = ReplicaSpec::parse(rest)?;
+            for _ in 0..count {
+                replicas.push(rs.clone());
+            }
+        }
+        if replicas.is_empty() {
+            return Err("fleet spec is empty".into());
+        }
+        Ok(FleetConfig::new(replicas, policy))
+    }
+
+    /// The reference topology: two of each device, fp32 (6 replicas).
+    pub fn mixed_six(policy: Policy) -> FleetConfig {
+        Self::parse_spec("2xs7,2x6p,2xn5", policy).expect("reference spec parses")
+    }
+
+    pub fn with_budget_j(mut self, budget_j: Option<f64>) -> FleetConfig {
+        self.budget_j = budget_j;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> FleetConfig {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Mutable fleet state, behind one lock (dispatch is queue math only —
+/// microseconds — so a single lock is not a bottleneck at trace rates).
+#[derive(Debug)]
+struct FleetState {
+    replicas: Vec<Replica>,
+    router: Router,
+    clock_ms: f64,
+    shed: u64,
+    rerouted: u64,
+    /// Fleet-wide latency aggregate across all replicas.
+    fleet_latency: LatencyRecorder,
+}
+
+impl FleetState {
+    /// Advance virtual time (monotone) and collect completions.
+    fn advance(&mut self, t_ms: f64) {
+        if t_ms > self.clock_ms {
+            self.clock_ms = t_ms;
+        }
+        let now = self.clock_ms;
+        for r in &mut self.replicas {
+            for latency_ms in r.collect(now) {
+                self.fleet_latency.record(Duration::from_secs_f64(latency_ms / 1e3));
+            }
+        }
+    }
+
+    /// Route one request through the policy; `None` counts as shed.
+    fn place(&mut self, now_ms: f64, anchor_ms: f64) -> Option<Placement> {
+        let candidates: Vec<Candidate> = self
+            .replicas
+            .iter()
+            .filter(|r| r.available())
+            .map(|r| Candidate {
+                replica: r.id,
+                queue_wait_ms: r.queue_wait_ms(now_ms),
+                service_ms: r.service_ms(),
+                energy_j: r.energy_per_request_j(),
+                in_flight: r.in_flight(),
+            })
+            .collect();
+        match self.router.place(&candidates) {
+            Some(idx) => Some(self.replicas[idx].admit(now_ms, anchor_ms)),
+            None => {
+                self.shed += 1;
+                None
+            }
+        }
+    }
+}
+
+/// N simulated device replicas behind a single dispatch API.
+#[derive(Debug)]
+pub struct Fleet {
+    config: FleetConfig,
+    state: Mutex<FleetState>,
+}
+
+impl Fleet {
+    /// Build the fleet.  Each distinct (device, precision) pair is
+    /// autotuned once through a shared [`PlanCache`].
+    pub fn new(config: FleetConfig) -> Fleet {
+        let cache = PlanCache::new();
+        let budget = config.budget_j.map(JouleBudget::new);
+        let replicas: Vec<Replica> = config
+            .replicas
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| Replica::new(i, spec.clone(), budget, &cache))
+            .collect();
+        let router = Router::new(config.policy, config.seed);
+        Fleet {
+            config,
+            state: Mutex::new(FleetState {
+                replicas,
+                router,
+                clock_ms: 0.0,
+                shed: 0,
+                rerouted: 0,
+                fleet_latency: LatencyRecorder::new(8192),
+            }),
+        }
+    }
+
+    pub fn config(&self) -> &FleetConfig {
+        &self.config
+    }
+
+    pub fn len(&self) -> usize {
+        self.config.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.config.replicas.is_empty()
+    }
+
+    /// Advance virtual time to `t_ms`, completing finished requests.
+    pub fn run_to(&self, t_ms: f64) {
+        self.state.lock().unwrap().advance(t_ms);
+    }
+
+    /// Dispatch one request arriving at `arrival_ms` (virtual or
+    /// wall-clock milliseconds; the clock is monotone either way).
+    /// `None` means the request was shed — no replica is available.
+    pub fn dispatch(&self, arrival_ms: f64) -> Option<Placement> {
+        let mut st = self.state.lock().unwrap();
+        st.advance(arrival_ms);
+        let now = st.clock_ms;
+        // Latency stays anchored at the true arrival even when another
+        // caller already advanced the clock past it (out-of-order
+        // wall-clock dispatches must not lose their queue wait).
+        st.place(now, arrival_ms.min(now))
+    }
+
+    /// Undo a placement whose real work failed before being served
+    /// (see [`Replica::retract_last`]).  Returns false if the request
+    /// already completed, re-routed, or the replica failed since.
+    pub fn retract(&self, placement: &Placement) -> bool {
+        let mut st = self.state.lock().unwrap();
+        match st.replicas.get_mut(placement.replica) {
+            Some(r) => r.retract_last(placement),
+            None => false,
+        }
+    }
+
+    /// Gracefully remove a replica from rotation (queued work completes).
+    pub fn drain(&self, replica: usize) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(r) = st.replicas.get_mut(replica) {
+            r.drain();
+        }
+    }
+
+    /// Kill a replica; its queued requests are re-routed through the
+    /// policy (latency stays anchored at the original arrival).
+    pub fn fail(&self, replica: usize) {
+        let mut st = self.state.lock().unwrap();
+        if replica >= st.replicas.len() {
+            return;
+        }
+        let now = st.clock_ms;
+        let orphans = st.replicas[replica].fail();
+        for orphan in orphans {
+            st.rerouted += 1;
+            let _ = st.place(now, orphan.anchor_ms);
+        }
+    }
+
+    /// Return a drained/failed replica to rotation.
+    pub fn revive(&self, replica: usize) {
+        let mut st = self.state.lock().unwrap();
+        let now = st.clock_ms;
+        if let Some(r) = st.replicas.get_mut(replica) {
+            r.revive(now);
+        }
+    }
+
+    pub fn apply(&self, event: HealthEvent) {
+        self.run_to(event.at_ms);
+        match event.action {
+            HealthAction::Drain => self.drain(event.replica),
+            HealthAction::Fail => self.fail(event.replica),
+            HealthAction::Revive => self.revive(event.replica),
+        }
+    }
+
+    /// Snapshot the fleet without advancing time.
+    pub fn stats(&self) -> FleetReport {
+        let st = self.state.lock().unwrap();
+        self.snapshot(&st)
+    }
+
+    /// Run every queue dry and return the final report.
+    pub fn finish(&self) -> FleetReport {
+        let mut st = self.state.lock().unwrap();
+        let horizon = st
+            .replicas
+            .iter()
+            .filter_map(Replica::last_finish_ms)
+            .fold(st.clock_ms, f64::max);
+        st.advance(horizon);
+        self.snapshot(&st)
+    }
+
+    fn snapshot(&self, st: &FleetState) -> FleetReport {
+        let replicas: Vec<ReplicaStats> = st
+            .replicas
+            .iter()
+            .map(|r| ReplicaStats {
+                name: r.name.clone(),
+                device: r.spec.device.name,
+                precision: r.effective_precision().label(),
+                health: r.health.label(),
+                degraded: r.degraded,
+                placements: r.placements,
+                completed: r.completed,
+                in_flight: r.in_flight(),
+                energy_spent_j: r.energy_spent_j,
+                p50_ms: r.latency.percentile_ms(0.50),
+                p99_ms: r.latency.percentile_ms(0.99),
+            })
+            .collect();
+        FleetReport {
+            policy: self.config.policy.label(),
+            dispatched: replicas.iter().map(|r| r.placements).sum(),
+            completed: replicas.iter().map(|r| r.completed).sum(),
+            total_energy_j: replicas.iter().map(|r| r.energy_spent_j).sum(),
+            shed: st.shed,
+            rerouted: st.rerouted,
+            p50_ms: st.fleet_latency.percentile_ms(0.50),
+            p99_ms: st.fleet_latency.percentile_ms(0.99),
+            clock_ms: st.clock_ms,
+            replicas,
+        }
+    }
+}
+
+/// Per-replica stats row of a [`FleetReport`].
+#[derive(Debug, Clone)]
+pub struct ReplicaStats {
+    pub name: String,
+    pub device: &'static str,
+    /// Effective serving precision (reflects budget degradation).
+    pub precision: &'static str,
+    pub health: &'static str,
+    pub degraded: bool,
+    pub placements: u64,
+    pub completed: u64,
+    pub in_flight: usize,
+    pub energy_spent_j: f64,
+    pub p50_ms: Option<f64>,
+    pub p99_ms: Option<f64>,
+}
+
+/// Fleet-wide aggregates plus one row per replica.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub policy: &'static str,
+    pub replicas: Vec<ReplicaStats>,
+    pub dispatched: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub rerouted: u64,
+    pub total_energy_j: f64,
+    pub p50_ms: Option<f64>,
+    pub p99_ms: Option<f64>,
+    /// Virtual time of the snapshot.
+    pub clock_ms: f64,
+}
+
+fn opt_ms(v: Option<f64>) -> String {
+    v.map(|x| format!("{x:.1}")).unwrap_or_else(|| "-".into())
+}
+
+impl FleetReport {
+    /// Completed requests per virtual second (for equal-throughput
+    /// policy comparisons).
+    pub fn throughput_rps(&self) -> f64 {
+        if self.clock_ms <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / (self.clock_ms / 1e3)
+        }
+    }
+
+    /// Mean joules per completed request.
+    pub fn energy_per_request_j(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.total_energy_j / self.completed as f64
+        }
+    }
+
+    /// Multi-line human-readable report.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "fleet policy={} replicas={} dispatched={} completed={} shed={} rerouted={}\n\
+             energy {:.1} J ({:.3} J/req) | latency p50 {} ms p99 {} ms | span {:.2} s\n",
+            self.policy,
+            self.replicas.len(),
+            self.dispatched,
+            self.completed,
+            self.shed,
+            self.rerouted,
+            self.total_energy_j,
+            self.energy_per_request_j(),
+            opt_ms(self.p50_ms),
+            opt_ms(self.p99_ms),
+            self.clock_ms / 1e3,
+        );
+        for r in &self.replicas {
+            out.push_str(&format!(
+                "  {:<18} {:<9} placements={:<5} completed={:<5} in_flight={:<3} \
+                 energy={:>8.1} J  p50={:>8} ms  p99={:>8} ms{}\n",
+                r.name,
+                r.health,
+                r.placements,
+                r.completed,
+                r.in_flight,
+                r.energy_spent_j,
+                opt_ms(r.p50_ms),
+                opt_ms(r.p99_ms),
+                if r.degraded { "  [degraded->fp16]" } else { "" },
+            ));
+        }
+        out
+    }
+
+    /// Wire representation for the server's `fleet_stats` command.
+    pub fn to_json(&self) -> Json {
+        let opt_num = |v: Option<f64>| v.map(Json::num).unwrap_or(Json::Null);
+        Json::object(vec![
+            ("policy", Json::str(self.policy)),
+            ("dispatched", Json::num(self.dispatched as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("rerouted", Json::num(self.rerouted as f64)),
+            ("total_energy_j", Json::num(self.total_energy_j)),
+            ("p50_ms", opt_num(self.p50_ms)),
+            ("p99_ms", opt_num(self.p99_ms)),
+            ("clock_ms", Json::num(self.clock_ms)),
+            (
+                "replicas",
+                Json::Array(
+                    self.replicas
+                        .iter()
+                        .map(|r| {
+                            Json::object(vec![
+                                ("name", Json::str(r.name.clone())),
+                                ("device", Json::str(r.device)),
+                                ("precision", Json::str(r.precision)),
+                                ("health", Json::str(r.health)),
+                                ("degraded", Json::Bool(r.degraded)),
+                                ("placements", Json::num(r.placements as f64)),
+                                ("completed", Json::num(r.completed as f64)),
+                                ("in_flight", Json::num(r.in_flight as f64)),
+                                ("energy_spent_j", Json::num(r.energy_spent_j)),
+                                ("p50_ms", opt_num(r.p50_ms)),
+                                ("p99_ms", opt_num(r.p99_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Drive a whole trace through the fleet in virtual time, applying
+/// scripted health events at their timestamps, then run the queues dry.
+pub fn run_trace(fleet: &Fleet, trace: &Trace, events: &[HealthEvent]) -> FleetReport {
+    let mut events: Vec<HealthEvent> = events.to_vec();
+    events.sort_by(|a, b| a.at_ms.partial_cmp(&b.at_ms).unwrap());
+    let mut events = events.into_iter().peekable();
+    for entry in &trace.entries {
+        let at_ms = entry.at.as_secs_f64() * 1e3;
+        while events.peek().is_some_and(|e| e.at_ms <= at_ms) {
+            fleet.apply(events.next().unwrap());
+        }
+        fleet.dispatch(at_ms);
+    }
+    for e in events {
+        fleet.apply(e);
+    }
+    fleet.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trace::Arrival;
+
+    fn trace(n: usize, rate: f64, seed: u64) -> Trace {
+        Trace::generate(n, Arrival::Poisson { rate_per_s: rate }, 0.0, seed)
+    }
+
+    #[test]
+    fn parse_spec_expands_counts_and_precisions() {
+        let cfg = FleetConfig::parse_spec("2xs7, 1x6p@fp16, n5", Policy::RoundRobin).unwrap();
+        assert_eq!(cfg.replicas.len(), 4);
+        assert_eq!(cfg.replicas[0].device.id, "s7");
+        assert_eq!(cfg.replicas[2].device.id, "6p");
+        assert_eq!(cfg.replicas[2].precision, crate::simulator::device::Precision::Imprecise);
+        assert_eq!(cfg.replicas[3].device.id, "n5");
+        assert!(FleetConfig::parse_spec("", Policy::RoundRobin).is_err());
+        assert!(FleetConfig::parse_spec("0xs7", Policy::RoundRobin).is_err());
+        assert!(FleetConfig::parse_spec("2xpixel", Policy::RoundRobin).is_err());
+        assert_eq!(FleetConfig::mixed_six(Policy::RoundRobin).replicas.len(), 6);
+    }
+
+    #[test]
+    fn round_robin_balances_an_equal_fleet() {
+        let fleet = Fleet::new(FleetConfig::parse_spec("2xs7", Policy::RoundRobin).unwrap());
+        let report = run_trace(&fleet, &trace(40, 3.0, 5), &[]);
+        assert_eq!(report.completed, 40);
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.replicas[0].placements, 20);
+        assert_eq!(report.replicas[1].placements, 20);
+        assert!(report.p50_ms.unwrap() > 0.0);
+        assert!(report.p99_ms.unwrap() >= report.p50_ms.unwrap());
+    }
+
+    #[test]
+    fn energy_aware_beats_round_robin_on_skewed_fleet() {
+        // The satellite check: on a 530+330 (S7+N5) fleet, EnergyAware
+        // must finish the same trace with less total energy than
+        // RoundRobin at equal throughput (same arrivals, all completed).
+        let t = trace(120, 0.8, 11);
+        let ea = {
+            let fleet = Fleet::new(
+                FleetConfig::parse_spec("1xs7,1xn5", Policy::parse("energy").unwrap()).unwrap(),
+            );
+            run_trace(&fleet, &t, &[])
+        };
+        let rr = {
+            let fleet =
+                Fleet::new(FleetConfig::parse_spec("1xs7,1xn5", Policy::RoundRobin).unwrap());
+            run_trace(&fleet, &t, &[])
+        };
+        assert_eq!(ea.completed, 120);
+        assert_eq!(rr.completed, 120);
+        assert_eq!(ea.shed, 0);
+        assert_eq!(rr.shed, 0);
+        assert!(
+            ea.total_energy_j < rr.total_energy_j,
+            "energy-aware {:.1} J should beat round-robin {:.1} J",
+            ea.total_energy_j,
+            rr.total_energy_j
+        );
+        // N5 (Adreno 330) is the joule-efficient device; EnergyAware
+        // must send it more traffic than the even split.
+        let n5 = ea.replicas.iter().find(|r| r.device == "Nexus 5").unwrap();
+        assert!(n5.placements > 60, "n5 got {} placements", n5.placements);
+    }
+
+    #[test]
+    fn drained_replica_receives_zero_placements() {
+        let fleet = Fleet::new(FleetConfig::parse_spec("1xs7,1x6p", Policy::LeastLoaded).unwrap());
+        fleet.drain(0);
+        let report = run_trace(&fleet, &trace(30, 2.0, 7), &[]);
+        assert_eq!(report.replicas[0].placements, 0);
+        assert_eq!(report.replicas[1].placements, 30);
+        assert_eq!(report.completed, 30);
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.replicas[0].health, "draining");
+    }
+
+    #[test]
+    fn failed_replica_reroutes_queued_work() {
+        // Overload two S7s, kill one mid-trace: every request must
+        // still complete, with the dead replica's queue re-routed.
+        let fleet = Fleet::new(FleetConfig::parse_spec("2xs7", Policy::RoundRobin).unwrap());
+        let t = trace(40, 6.0, 3);
+        let report = run_trace(&fleet, &t, &[HealthEvent::fail(0, 2500.0)]);
+        assert_eq!(report.completed, 40, "no request may be lost: {report:?}");
+        assert_eq!(report.shed, 0);
+        assert!(report.rerouted > 0, "the dead replica's queue must re-route");
+        assert_eq!(report.replicas[0].health, "failed");
+        assert!(report.replicas[1].completed > report.replicas[0].completed);
+        // placements include the re-dispatches
+        assert_eq!(report.dispatched, 40 + report.rerouted);
+    }
+
+    #[test]
+    fn exhausted_budget_sheds_load() {
+        // One S7 with a tiny budget: it degrades to fp16, then runs
+        // dry, and the single-replica fleet starts shedding.
+        let cfg = FleetConfig::parse_spec("1xs7", Policy::LeastLoaded)
+            .unwrap()
+            .with_budget_j(Some(5.0));
+        let fleet = Fleet::new(cfg);
+        let t = Trace::generate(20, Arrival::Uniform { rate_per_s: 1.0 }, 0.0, 1);
+        let report = run_trace(&fleet, &t, &[]);
+        assert!(report.shed > 0, "exhausted budget must shed: {report:?}");
+        assert!(report.completed >= 5, "some requests complete before exhaustion");
+        assert!(report.replicas[0].degraded, "soft threshold must degrade to fp16");
+        assert_eq!(report.replicas[0].precision, "imprecise");
+        // overshoot is bounded by one in-flight request
+        assert!(report.total_energy_j < 5.0 + 1.2, "energy {:.2}", report.total_energy_j);
+    }
+
+    #[test]
+    fn budget_is_metered_at_admission_not_completion() {
+        // A burst far faster than the service rate must not overcommit
+        // the budget: admission meters spent + queued energy, so the
+        // replica sheds as soon as committed joules reach the budget,
+        // even before any completion is collected.
+        let cfg = FleetConfig::parse_spec("1xs7", Policy::LeastLoaded)
+            .unwrap()
+            .with_budget_j(Some(5.0));
+        let fleet = Fleet::new(cfg);
+        for i in 0..50 {
+            fleet.dispatch(i as f64); // 1 ms apart: nothing completes in between
+        }
+        let report = fleet.finish();
+        assert!(report.shed >= 40, "burst must shed once committed: {report:?}");
+        assert!(
+            report.total_energy_j < 5.0 + 1.2,
+            "committed energy {:.2} J must stay near the 5 J budget",
+            report.total_energy_j
+        );
+        assert!(report.replicas[0].degraded);
+    }
+
+    #[test]
+    fn revive_returns_replica_to_rotation() {
+        let fleet = Fleet::new(FleetConfig::parse_spec("2xs7", Policy::RoundRobin).unwrap());
+        fleet.drain(0);
+        for i in 0..4 {
+            fleet.dispatch(i as f64 * 100.0);
+        }
+        assert_eq!(fleet.stats().replicas[0].placements, 0);
+        fleet.revive(0);
+        for i in 4..8 {
+            fleet.dispatch(i as f64 * 100.0);
+        }
+        let report = fleet.finish();
+        assert!(report.replicas[0].placements > 0);
+        assert_eq!(report.completed, 8);
+    }
+
+    #[test]
+    fn report_renders_and_serializes() {
+        let fleet = Fleet::new(FleetConfig::mixed_six(Policy::PowerOfTwoChoices).with_seed(9));
+        let report = run_trace(&fleet, &trace(60, 8.0, 21), &[]);
+        let text = report.render();
+        assert!(text.contains("power-of-two"));
+        assert!(text.contains("r0/s7@precise"));
+        let json = report.to_json();
+        assert_eq!(json.get("completed").and_then(Json::as_usize), Some(60));
+        assert_eq!(
+            json.get("replicas").and_then(Json::as_array).map(|a| a.len()),
+            Some(6)
+        );
+        // round-trips through the wire format
+        let back = Json::parse(&json.to_string()).unwrap();
+        assert_eq!(back.get("policy").and_then(Json::as_str), Some("power-of-two"));
+    }
+}

@@ -1,0 +1,459 @@
+//! A simulated device replica: one Adreno profile (Table II row) at a
+//! serving precision, working a FIFO queue in *virtual time*.
+//!
+//! Service time per image comes from the autotuned [`NetworkPlan`] cost
+//! (the per-device optimal granularities of §III-D); energy per image
+//! from the Table V rail model.  Virtual time keeps whole-trace
+//! simulations instantaneous and fully deterministic: a request
+//! arriving at `t` on a replica busy until `b` starts at `max(t, b)`
+//! and finishes one service time later.
+//!
+//! [`NetworkPlan`]: crate::simulator::autotune::NetworkPlan
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use crate::coordinator::PlanCache;
+use crate::model::graph::{ConvSpec, SqueezeNet};
+use crate::simulator::cost::{network_time, RunMode};
+use crate::simulator::device::{DeviceProfile, Precision};
+use crate::simulator::power::energy_joules;
+use crate::telemetry::LatencyRecorder;
+use crate::util::json::Json;
+
+use super::budget::{BudgetState, JouleBudget};
+use super::health::Health;
+
+/// Static description of one replica: device profile + serving precision.
+#[derive(Debug, Clone)]
+pub struct ReplicaSpec {
+    pub device: DeviceProfile,
+    pub precision: Precision,
+}
+
+impl ReplicaSpec {
+    pub fn new(device: DeviceProfile, precision: Precision) -> ReplicaSpec {
+        ReplicaSpec { device, precision }
+    }
+
+    /// Parse one spec atom: `s7`, `s7@fp32`, `6p@fp16`, `n5@imprecise`.
+    /// `fp32`/`precise` is the IEEE path, `fp16`/`imprecise` the relaxed
+    /// RenderScript-style path (§IV-B).
+    pub fn parse(atom: &str) -> Result<ReplicaSpec, String> {
+        let (dev, prec) = match atom.split_once('@') {
+            Some((d, p)) => (d.trim(), Some(p.trim())),
+            None => (atom.trim(), None),
+        };
+        let device = DeviceProfile::by_id(dev)
+            .ok_or_else(|| format!("unknown device '{dev}' (s7|6p|n5)"))?;
+        let precision = match prec {
+            None | Some("fp32") | Some("precise") => Precision::Precise,
+            Some("fp16") | Some("imprecise") => Precision::Imprecise,
+            Some(other) => return Err(format!("unknown precision '{other}' (fp32|fp16)")),
+        };
+        Ok(ReplicaSpec { device, precision })
+    }
+}
+
+/// One queued (not yet completed) request.
+#[derive(Debug, Clone, Copy)]
+pub struct Pending {
+    /// Where latency measurement starts — the original arrival time,
+    /// preserved across failure re-routing.
+    pub anchor_ms: f64,
+    pub start_ms: f64,
+    pub finish_ms: f64,
+    pub energy_j: f64,
+}
+
+/// Where a dispatched request landed, and at what predicted cost.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub replica: usize,
+    pub replica_name: String,
+    pub queue_wait_ms: f64,
+    pub service_ms: f64,
+    /// Predicted end-to-end latency from the original arrival.
+    pub predicted_latency_ms: f64,
+    pub energy_j: f64,
+    /// Effective precision the replica will serve this request at.
+    pub precision: Precision,
+}
+
+impl Placement {
+    /// Wire representation for the TCP server's fleet-backed path.
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("replica", Json::num(self.replica as f64)),
+            ("replica_name", Json::str(self.replica_name.clone())),
+            ("queue_wait_ms", Json::num(self.queue_wait_ms)),
+            ("service_ms", Json::num(self.service_ms)),
+            ("predicted_latency_ms", Json::num(self.predicted_latency_ms)),
+            ("energy_j", Json::num(self.energy_j)),
+            ("precision", Json::str(self.precision.label())),
+        ])
+    }
+}
+
+fn precision_index(p: Precision) -> usize {
+    match p {
+        Precision::Precise => 0,
+        Precision::Imprecise => 1,
+    }
+}
+
+/// One simulated device worker with its own queue, energy meter,
+/// budget, health state, and latency telemetry.
+#[derive(Debug)]
+pub struct Replica {
+    pub id: usize,
+    /// `r<id>/<device>@<precision>`, e.g. `r0/s7@precise`.
+    pub name: String,
+    pub spec: ReplicaSpec,
+    pub health: Health,
+    /// Budget-forced fp16 fallback (sticky once the soft threshold is hit).
+    pub degraded: bool,
+    pub budget: Option<JouleBudget>,
+    /// Autotuned single-image service time, indexed `[precise, imprecise]`.
+    service_ms: [f64; 2],
+    /// Differential energy per image, indexed `[precise, imprecise]`.
+    energy_j: [f64; 2],
+    busy_until_ms: f64,
+    pending: VecDeque<Pending>,
+    pub energy_spent_j: f64,
+    /// Energy committed to still-queued requests (spent when they
+    /// complete, released if the replica fails first).  Budgets meter
+    /// `spent + queued`, so a burst cannot admit past the budget.
+    pub energy_queued_j: f64,
+    pub placements: u64,
+    pub completed: u64,
+    pub latency: LatencyRecorder,
+}
+
+impl Replica {
+    /// Build a replica, pricing both precisions through the shared
+    /// [`PlanCache`] (so equal (device, precision) replicas autotune once).
+    pub fn new(
+        id: usize,
+        spec: ReplicaSpec,
+        budget: Option<JouleBudget>,
+        cache: &PlanCache,
+    ) -> Replica {
+        let net = SqueezeNet::v1_0();
+        let mut service_ms = [0.0f64; 2];
+        let mut energy_j = [0.0f64; 2];
+        for precision in [Precision::Precise, Precision::Imprecise] {
+            let plan = cache.plan(&spec.device, precision);
+            let g = |s: &ConvSpec| plan.optimal_g(&s.name);
+            let mode = RunMode::Parallel(precision);
+            let ms = network_time(&net, mode, &spec.device, &g);
+            service_ms[precision_index(precision)] = ms;
+            energy_j[precision_index(precision)] = energy_joules(&spec.device, mode, ms);
+        }
+        let name = format!("r{id}/{}@{}", spec.device.id, spec.precision.label());
+        Replica {
+            id,
+            name,
+            spec,
+            health: Health::Healthy,
+            degraded: false,
+            budget,
+            service_ms,
+            energy_j,
+            busy_until_ms: 0.0,
+            pending: VecDeque::new(),
+            energy_spent_j: 0.0,
+            energy_queued_j: 0.0,
+            placements: 0,
+            completed: 0,
+            latency: LatencyRecorder::new(4096),
+        }
+    }
+
+    /// Configured precision, unless the budget degraded us to fp16.
+    pub fn effective_precision(&self) -> Precision {
+        if self.degraded {
+            Precision::Imprecise
+        } else {
+            self.spec.precision
+        }
+    }
+
+    /// Single-image service time at the effective precision (ms).
+    pub fn service_ms(&self) -> f64 {
+        self.service_ms[precision_index(self.effective_precision())]
+    }
+
+    /// Differential energy per request at the effective precision (J).
+    pub fn energy_per_request_j(&self) -> f64 {
+        self.energy_j[precision_index(self.effective_precision())]
+    }
+
+    /// Predicted wait before a request arriving now would start (ms).
+    pub fn queue_wait_ms(&self, now_ms: f64) -> f64 {
+        (self.busy_until_ms - now_ms).max(0.0)
+    }
+
+    /// Requests queued or running.
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Virtual time the last queued request finishes.
+    pub fn last_finish_ms(&self) -> Option<f64> {
+        self.pending.back().map(|p| p.finish_ms)
+    }
+
+    /// Budget state over *committed* energy (spent + queued): a burst
+    /// of admissions counts against the budget immediately, not only
+    /// once completions are collected.
+    pub fn budget_state(&self) -> BudgetState {
+        match self.budget {
+            Some(b) => b.state(self.energy_spent_j + self.energy_queued_j),
+            None => BudgetState::Nominal,
+        }
+    }
+
+    /// Sticky fp16 fallback once committed energy passes the soft
+    /// threshold (checked after every admit/collect/fail transition).
+    fn refresh_budget(&mut self) {
+        if !self.degraded && self.budget_state() != BudgetState::Nominal {
+            self.degraded = true;
+        }
+    }
+
+    /// Can the router place new traffic here right now?
+    pub fn available(&self) -> bool {
+        self.health.accepts_traffic() && self.budget_state() != BudgetState::Exhausted
+    }
+
+    /// Queue one request arriving at `now_ms`; latency is anchored at
+    /// `anchor_ms` (equal to `now_ms` except after failure re-routing).
+    pub fn admit(&mut self, now_ms: f64, anchor_ms: f64) -> Placement {
+        let precision = self.effective_precision();
+        let service_ms = self.service_ms();
+        let energy_j = self.energy_per_request_j();
+        let start_ms = self.busy_until_ms.max(now_ms);
+        let finish_ms = start_ms + service_ms;
+        self.busy_until_ms = finish_ms;
+        self.pending.push_back(Pending { anchor_ms, start_ms, finish_ms, energy_j });
+        self.energy_queued_j += energy_j;
+        self.placements += 1;
+        self.refresh_budget();
+        Placement {
+            replica: self.id,
+            replica_name: self.name.clone(),
+            queue_wait_ms: start_ms - now_ms,
+            service_ms,
+            predicted_latency_ms: finish_ms - anchor_ms,
+            energy_j,
+            precision,
+        }
+    }
+
+    /// Complete everything finishing by `now_ms`: record latency, meter
+    /// energy, and apply budget transitions (degrade at the soft
+    /// threshold; `available()` turns false once exhausted).  Returns
+    /// the completed latencies in ms for fleet-wide aggregation.
+    pub fn collect(&mut self, now_ms: f64) -> Vec<f64> {
+        let mut done = Vec::new();
+        while let Some(front) = self.pending.front() {
+            if front.finish_ms > now_ms {
+                break;
+            }
+            let p = self.pending.pop_front().unwrap();
+            let latency_ms = (p.finish_ms - p.anchor_ms).max(0.0);
+            self.latency.record(Duration::from_secs_f64(latency_ms / 1e3));
+            self.energy_queued_j = (self.energy_queued_j - p.energy_j).max(0.0);
+            self.energy_spent_j += p.energy_j;
+            self.completed += 1;
+            done.push(latency_ms);
+        }
+        self.refresh_budget();
+        done
+    }
+
+    /// Undo the most recent [`admit`](Self::admit) (identified by its
+    /// placement) — used when the real inference behind a fleet
+    /// placement fails, so the simulated queue and energy meter don't
+    /// count an answer that was never served.  No-op if the request
+    /// already completed or the replica failed in between.  Same-
+    /// precision requests on one replica are fungible in this model,
+    /// so retracting the queue tail is equivalent even if another
+    /// identical request was admitted in between.
+    pub fn retract_last(&mut self, placement: &Placement) -> bool {
+        // The candidate is the newest pending entry; verify it is the
+        // placement's request by its service/energy fingerprint.
+        match self.pending.back() {
+            Some(p)
+                if (p.finish_ms - p.start_ms - placement.service_ms).abs() < 1e-9
+                    && (p.energy_j - placement.energy_j).abs() < 1e-12 =>
+            {
+                let p = self.pending.pop_back().unwrap();
+                self.busy_until_ms = p.start_ms;
+                self.energy_queued_j = (self.energy_queued_j - p.energy_j).max(0.0);
+                self.placements = self.placements.saturating_sub(1);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Kill the replica: queued work is abandoned and handed back for
+    /// re-routing.  Energy for unfinished work is not metered (the run
+    /// died before the joules were spent on a useful answer).
+    pub fn fail(&mut self) -> Vec<Pending> {
+        self.health = Health::Failed;
+        self.busy_until_ms = 0.0;
+        self.energy_queued_j = 0.0;
+        self.pending.drain(..).collect()
+    }
+
+    /// Stop accepting traffic; queued work completes normally.
+    pub fn drain(&mut self) {
+        if self.health != Health::Failed {
+            self.health = Health::Draining;
+        }
+    }
+
+    /// Bring the replica back into rotation at virtual time `now_ms`.
+    pub fn revive(&mut self, now_ms: f64) {
+        self.health = Health::Healthy;
+        self.busy_until_ms = self.busy_until_ms.max(now_ms);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s7_precise() -> Replica {
+        let cache = PlanCache::new();
+        let spec = ReplicaSpec::new(DeviceProfile::galaxy_s7(), Precision::Precise);
+        Replica::new(0, spec, None, &cache)
+    }
+
+    #[test]
+    fn spec_parsing() {
+        let r = ReplicaSpec::parse("s7").unwrap();
+        assert_eq!(r.device.id, "s7");
+        assert_eq!(r.precision, Precision::Precise);
+        assert_eq!(ReplicaSpec::parse("6p@fp16").unwrap().precision, Precision::Imprecise);
+        assert_eq!(ReplicaSpec::parse("n5@precise").unwrap().device.id, "n5");
+        assert!(ReplicaSpec::parse("pixel").is_err());
+        assert!(ReplicaSpec::parse("s7@int8").is_err());
+    }
+
+    #[test]
+    fn queueing_math_is_fifo() {
+        let mut r = s7_precise();
+        let s = r.service_ms();
+        assert!(s > 100.0 && s < 1000.0, "service {s} ms out of Table VI band");
+
+        let p1 = r.admit(0.0, 0.0);
+        assert_eq!(p1.queue_wait_ms, 0.0);
+        assert!((p1.predicted_latency_ms - s).abs() < 1e-9);
+
+        // second arrival at t=0 waits one full service time
+        let p2 = r.admit(0.0, 0.0);
+        assert!((p2.queue_wait_ms - s).abs() < 1e-9);
+        assert_eq!(r.in_flight(), 2);
+
+        // nothing completes before the first finish
+        assert!(r.collect(s * 0.5).is_empty());
+        let done = r.collect(s * 2.0 + 1.0);
+        assert_eq!(done.len(), 2);
+        assert_eq!(r.completed, 2);
+        assert_eq!(r.in_flight(), 0);
+        assert!((r.energy_spent_j - 2.0 * r.energy_per_request_j()).abs() < 1e-9);
+        assert!(r.latency.percentile_ms(0.5).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn imprecise_serves_faster_and_cheaper() {
+        let cache = PlanCache::new();
+        let fp32 =
+            Replica::new(0, ReplicaSpec::new(DeviceProfile::nexus_5(), Precision::Precise), None, &cache);
+        let fp16 = Replica::new(
+            1,
+            ReplicaSpec::new(DeviceProfile::nexus_5(), Precision::Imprecise),
+            None,
+            &cache,
+        );
+        assert!(fp16.service_ms() < fp32.service_ms());
+        assert!(fp16.energy_per_request_j() < fp32.energy_per_request_j());
+        // both precisions came from one autotune pass each
+        assert_eq!(cache.cached(), 2);
+    }
+
+    #[test]
+    fn budget_degrades_then_exhausts() {
+        let cache = PlanCache::new();
+        let spec = ReplicaSpec::new(DeviceProfile::galaxy_s7(), Precision::Precise);
+        let per_req = {
+            let r = Replica::new(0, spec.clone(), None, &cache);
+            r.energy_per_request_j()
+        };
+        // budget: two precise requests hit the soft threshold
+        let mut r = Replica::new(0, spec, Some(JouleBudget::new(per_req * 4.0)), &cache);
+        let s = r.service_ms();
+        r.admit(0.0, 0.0);
+        r.admit(0.0, 0.0);
+        r.collect(2.0 * s + 1.0);
+        assert!(r.degraded, "soft threshold should degrade to fp16");
+        assert_eq!(r.effective_precision(), Precision::Imprecise);
+        assert!(r.available());
+        // burn the rest on the cheaper path until exhausted
+        let mut guard = 0;
+        while r.available() && guard < 100 {
+            r.admit(0.0, 0.0);
+            let horizon = r.last_finish_ms().unwrap() + 1.0;
+            r.collect(horizon);
+            guard += 1;
+        }
+        assert!(!r.available(), "budget should eventually exhaust");
+        assert_eq!(r.budget_state(), BudgetState::Exhausted);
+    }
+
+    #[test]
+    fn retract_unwinds_the_last_admit() {
+        let mut r = s7_precise();
+        let s = r.service_ms();
+        let p1 = r.admit(0.0, 0.0);
+        let p2 = r.admit(0.0, 0.0);
+        assert!((p2.queue_wait_ms - s).abs() < 1e-9);
+        assert!(r.retract_last(&p2));
+        assert_eq!(r.in_flight(), 1);
+        assert_eq!(r.placements, 1);
+        assert!((r.energy_queued_j - p1.energy_j).abs() < 1e-9);
+        // the queue slot is free again: a new arrival at t=0 waits s, not 2s
+        let p3 = r.admit(0.0, 0.0);
+        assert!((p3.queue_wait_ms - s).abs() < 1e-9);
+        // retracting after completion is a no-op
+        r.collect(10.0 * s);
+        assert!(!r.retract_last(&p3));
+        assert_eq!(r.completed, 2);
+    }
+
+    #[test]
+    fn fail_returns_orphans_and_drain_blocks_traffic() {
+        let mut r = s7_precise();
+        r.admit(0.0, 0.0);
+        r.admit(0.0, 0.0);
+        let orphans = r.fail();
+        assert_eq!(orphans.len(), 2);
+        assert_eq!(orphans[0].anchor_ms, 0.0);
+        assert!(!r.available());
+        assert_eq!(r.in_flight(), 0);
+
+        let mut d = s7_precise();
+        d.admit(0.0, 0.0);
+        d.drain();
+        assert!(!d.available());
+        // queued work still completes
+        let horizon = d.last_finish_ms().unwrap() + 1.0;
+        assert_eq!(d.collect(horizon).len(), 1);
+        d.revive(horizon);
+        assert!(d.available());
+    }
+}

@@ -1,0 +1,219 @@
+//! Placement policies: where does the next request go?
+//!
+//! Every policy sees the same candidate view — queue wait, autotuned
+//! service time, and joules per request for each *available* replica —
+//! and returns one replica index.  `EnergyAware` is the paper-derived
+//! policy: the per-device autotuned `NetworkPlan` cost (§III-D) prices
+//! latency, Table V's rail model prices energy, and λ converts between
+//! them.
+
+use crate::util::rng::Rng;
+
+/// A placement policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    /// Cycle through available replicas.
+    RoundRobin,
+    /// Shortest predicted queue wait.
+    LeastLoaded,
+    /// Minimize `energy_j + λ·(queue_wait_ms + service_ms)`: route to
+    /// the cheapest-joule replica until its queue makes latency worth
+    /// more than the energy saved.  λ is in joules per millisecond.
+    EnergyAware { lambda_j_per_ms: f64 },
+    /// Sample two random candidates, keep the less loaded — the classic
+    /// load-balancing compromise between RoundRobin and LeastLoaded.
+    PowerOfTwoChoices,
+}
+
+impl Policy {
+    /// Default latency price: 2 mJ per ms of predicted latency, i.e. a
+    /// ~0.6 J energy gap (S7 vs N5, precise) tolerates ~300 ms of queue.
+    pub const DEFAULT_LAMBDA_J_PER_MS: f64 = 0.002;
+
+    /// Parse a CLI/config policy name.
+    pub fn parse(s: &str) -> Result<Policy, String> {
+        match s.to_lowercase().replace(['-', '_'], "").as_str() {
+            "rr" | "roundrobin" => Ok(Policy::RoundRobin),
+            "least" | "leastloaded" => Ok(Policy::LeastLoaded),
+            "energy" | "energyaware" => {
+                Ok(Policy::EnergyAware { lambda_j_per_ms: Policy::DEFAULT_LAMBDA_J_PER_MS })
+            }
+            "p2c" | "poweroftwo" | "poweroftwochoices" => Ok(Policy::PowerOfTwoChoices),
+            other => Err(format!("unknown policy '{other}' (rr|least|energy|p2c)")),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Policy::RoundRobin => "round-robin",
+            Policy::LeastLoaded => "least-loaded",
+            Policy::EnergyAware { .. } => "energy-aware",
+            Policy::PowerOfTwoChoices => "power-of-two",
+        }
+    }
+
+    /// Every policy at its default parameters (bench/comparison order).
+    pub fn all() -> Vec<Policy> {
+        vec![
+            Policy::RoundRobin,
+            Policy::LeastLoaded,
+            Policy::EnergyAware { lambda_j_per_ms: Policy::DEFAULT_LAMBDA_J_PER_MS },
+            Policy::PowerOfTwoChoices,
+        ]
+    }
+}
+
+/// Router view of one available replica at dispatch time.
+#[derive(Debug, Clone, Copy)]
+pub struct Candidate {
+    /// Fleet-wide replica index.
+    pub replica: usize,
+    /// Predicted wait before service starts (ms).
+    pub queue_wait_ms: f64,
+    /// Autotuned single-image service time at the replica's effective
+    /// precision (ms).
+    pub service_ms: f64,
+    /// Differential energy per request (J).
+    pub energy_j: f64,
+    /// Requests queued or running.
+    pub in_flight: usize,
+}
+
+fn min_by_score(candidates: &[Candidate], score: impl Fn(&Candidate) -> f64) -> Candidate {
+    let mut best = candidates[0];
+    let mut best_score = score(&best);
+    for c in &candidates[1..] {
+        let s = score(c);
+        // strict `<` keeps the first (lowest-index) candidate on ties
+        if s < best_score {
+            best = *c;
+            best_score = s;
+        }
+    }
+    best
+}
+
+/// Stateful router: a cursor for round-robin, a seeded RNG for the
+/// sampling policies — placements are fully deterministic per seed.
+#[derive(Debug)]
+pub struct Router {
+    pub policy: Policy,
+    cursor: usize,
+    rng: Rng,
+}
+
+impl Router {
+    pub fn new(policy: Policy, seed: u64) -> Router {
+        Router { policy, cursor: 0, rng: Rng::new(seed) }
+    }
+
+    /// Pick a replica among the available candidates; `None` when the
+    /// whole fleet is unavailable (caller sheds the request).
+    pub fn place(&mut self, candidates: &[Candidate]) -> Option<usize> {
+        if candidates.is_empty() {
+            return None;
+        }
+        let chosen = match self.policy {
+            Policy::RoundRobin => {
+                let c = candidates[self.cursor % candidates.len()];
+                self.cursor = self.cursor.wrapping_add(1);
+                c
+            }
+            Policy::LeastLoaded => min_by_score(candidates, |c| c.queue_wait_ms),
+            Policy::EnergyAware { lambda_j_per_ms } => min_by_score(candidates, |c| {
+                c.energy_j + lambda_j_per_ms * (c.queue_wait_ms + c.service_ms)
+            }),
+            Policy::PowerOfTwoChoices => {
+                if candidates.len() == 1 {
+                    candidates[0]
+                } else {
+                    let i = self.rng.below(candidates.len());
+                    let mut j = self.rng.below(candidates.len() - 1);
+                    if j >= i {
+                        j += 1;
+                    }
+                    let (a, b) = (candidates[i], candidates[j]);
+                    // "less loaded": fewer requests in flight, queue
+                    // wait as the tiebreak between equal depths
+                    let load = |c: &Candidate| (c.in_flight, c.queue_wait_ms);
+                    if load(&b) < load(&a) {
+                        b
+                    } else {
+                        a
+                    }
+                }
+            }
+        };
+        Some(chosen.replica)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(replica: usize, wait: f64, service: f64, energy: f64) -> Candidate {
+        Candidate { replica, queue_wait_ms: wait, service_ms: service, energy_j: energy, in_flight: 0 }
+    }
+
+    #[test]
+    fn parse_accepts_aliases() {
+        assert_eq!(Policy::parse("rr").unwrap(), Policy::RoundRobin);
+        assert_eq!(Policy::parse("round-robin").unwrap(), Policy::RoundRobin);
+        assert_eq!(Policy::parse("LEAST_LOADED").unwrap(), Policy::LeastLoaded);
+        assert_eq!(Policy::parse("p2c").unwrap(), Policy::PowerOfTwoChoices);
+        assert!(matches!(Policy::parse("energy").unwrap(), Policy::EnergyAware { .. }));
+        assert!(Policy::parse("random").is_err());
+        assert_eq!(Policy::all().len(), 4);
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(Policy::RoundRobin, 0);
+        let cs = [cand(0, 0.0, 1.0, 1.0), cand(1, 0.0, 1.0, 1.0), cand(2, 0.0, 1.0, 1.0)];
+        let picks: Vec<usize> = (0..6).map(|_| r.place(&cs).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_picks_shortest_queue() {
+        let mut r = Router::new(Policy::LeastLoaded, 0);
+        let cs = [cand(0, 50.0, 1.0, 1.0), cand(1, 10.0, 1.0, 1.0), cand(2, 90.0, 1.0, 1.0)];
+        assert_eq!(r.place(&cs), Some(1));
+    }
+
+    #[test]
+    fn energy_aware_trades_joules_for_queue() {
+        let mut r = Router::new(Policy::EnergyAware { lambda_j_per_ms: 0.002 }, 0);
+        // replica 1 is cheap on energy and idle -> wins
+        let cs = [cand(0, 0.0, 400.0, 1.0), cand(1, 0.0, 600.0, 0.4)];
+        assert_eq!(r.place(&cs), Some(1));
+        // once replica 1's queue is deep enough, the energy gap is no
+        // longer worth it: 0.4 + 0.002*(700+600) = 3.0 > 0.0 + 1.8
+        let cs = [cand(0, 0.0, 400.0, 1.0), cand(1, 700.0, 600.0, 0.4)];
+        assert_eq!(r.place(&cs), Some(0));
+    }
+
+    #[test]
+    fn power_of_two_is_deterministic_per_seed() {
+        let cs = [cand(0, 5.0, 1.0, 1.0), cand(1, 1.0, 1.0, 1.0), cand(2, 9.0, 1.0, 1.0)];
+        let a: Vec<_> = {
+            let mut r = Router::new(Policy::PowerOfTwoChoices, 7);
+            (0..20).map(|_| r.place(&cs).unwrap()).collect()
+        };
+        let b: Vec<_> = {
+            let mut r = Router::new(Policy::PowerOfTwoChoices, 7);
+            (0..20).map(|_| r.place(&cs).unwrap()).collect()
+        };
+        assert_eq!(a, b);
+        // the heaviest replica loses every two-way comparison (the two
+        // samples are always distinct), so it can never be picked
+        assert!(!a.contains(&2));
+    }
+
+    #[test]
+    fn empty_candidates_shed() {
+        let mut r = Router::new(Policy::RoundRobin, 0);
+        assert_eq!(r.place(&[]), None);
+    }
+}

@@ -13,10 +13,23 @@
 //!   dynamic batcher, PJRT runtime, the mobile-GPU simulator substrate
 //!   (Adreno 530/430/330 device models), the granularity autotuner, and
 //!   the power/energy model that regenerates the paper's tables.
+//! - **Layer 3.5 ([`fleet`])**: the heterogeneous device fleet — N
+//!   simulated Adreno replicas (530/430/330 at fp32/fp16) behind one
+//!   dispatch API, with pluggable placement policies (`RoundRobin`,
+//!   `LeastLoaded`, `EnergyAware`, `PowerOfTwoChoices`), replica
+//!   draining / failure injection with automatic re-routing, and
+//!   per-replica joule budgets.  The paper's per-device autotuning
+//!   results are exactly what make routing non-trivial: each device has
+//!   its own optimal granularity plan (Table I), hence its own latency
+//!   (Table VI) and joules per image (Table V), so *where* a request
+//!   runs changes both how fast and how expensively it is answered.
+//!   Every later scaling layer (sharding, caching, multi-backend) plugs
+//!   into this dispatch point.
 
 pub mod config;
 pub mod convnet;
 pub mod coordinator;
+pub mod fleet;
 pub mod model;
 pub mod runtime;
 pub mod simulator;

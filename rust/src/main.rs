@@ -12,7 +12,11 @@
 //!   inferences through the PJRT runtime.
 //! - `agreement [--count N]` — precise-vs-imprecise top-1 agreement
 //!   (§IV-B's 10 000-image experiment, on the synthetic corpus).
-//! - `serve [--addr HOST:PORT]` — start the JSON-lines TCP server.
+//! - `fleet [--spec S] [--policy P]` — route a synthetic trace across a
+//!   simulated heterogeneous device fleet (Layer 3.5) and report
+//!   per-replica latency/energy/placements.
+//! - `serve [--addr HOST:PORT] [--fleet SPEC]` — start the JSON-lines
+//!   TCP server, optionally with a fleet behind it.
 //! - `info` — artifact/manifest/weight summary.
 
 use std::sync::atomic::AtomicBool;
@@ -20,8 +24,10 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use mobile_convnet::config::AppConfig;
+use mobile_convnet::config::{self, AppConfig};
+use mobile_convnet::coordinator::trace::{Arrival, Trace};
 use mobile_convnet::coordinator::{server, Coordinator};
+use mobile_convnet::fleet::{self, Fleet};
 use mobile_convnet::model::{ImageCorpus, SqueezeNet};
 use mobile_convnet::simulator::device::{DeviceProfile, Precision};
 use mobile_convnet::simulator::{autotune, cost, tables};
@@ -38,8 +44,15 @@ COMMANDS:
   simulate    price a run on a device model   --device ID [--precision P] [--granularity G]
   infer       run real PJRT inferences        [--count N] [--precision P] [--seed S] [--sim]
   agreement   precise vs imprecise top-1      [--count N] [--seed S]
+  fleet       simulate fleet routing          [--spec S] [--policy rr|least|energy|p2c]
+                                              [--requests N] [--rate R] [--seed S]
+                                              [--budget-j J] [--burst]
   serve       start the TCP JSON-lines server [--addr HOST:PORT] [--config FILE]
+                                              [--fleet SPEC] [--fleet-policy P]
   info        artifact & model summary
+
+Fleet specs are comma-separated [COUNTx]DEVICE[@fp32|fp16] atoms, e.g.
+2xs7,1x6p@fp16,n5 (also via MCN_FLEET / MCN_FLEET_POLICY env).
 
 Common options: --config FILE (JSON), --artifacts DIR";
 
@@ -61,11 +74,16 @@ fn app_config(args: &Args) -> Result<AppConfig> {
         Some(path) => AppConfig::load(std::path::Path::new(path))?,
         None => AppConfig::default(),
     };
+    cfg.apply_env()?;
     if let Some(dir) = args.get("artifacts") {
         cfg.artifacts_dir = dir.into();
     }
     if let Some(addr) = args.get("addr") {
         cfg.server_addr = addr.to_string();
+    }
+    if let Some(spec) = args.get("fleet") {
+        let budget = args.get_f64_opt("fleet-budget-j").map_err(|e| anyhow::anyhow!(e))?;
+        cfg.fleet = Some(config::fleet_from(spec, args.get("fleet-policy"), budget)?);
     }
     Ok(cfg)
 }
@@ -95,6 +113,7 @@ fn run(args: &Args) -> Result<()> {
         Some("simulate") => cmd_simulate(args),
         Some("infer") => cmd_infer(args),
         Some("agreement") => cmd_agreement(args),
+        Some("fleet") => cmd_fleet(args),
         Some("serve") => cmd_serve(args),
         Some("info") => cmd_info(args),
         _ => {
@@ -213,12 +232,46 @@ fn cmd_agreement(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let spec = args.get_or("spec", "2xs7,2x6p,2xn5");
+    let budget = args.get_f64_opt("budget-j").map_err(|e| anyhow::anyhow!(e))?;
+    let seed = args.get_u64("seed", 77).map_err(|e| anyhow::anyhow!(e))?;
+    let cfg = config::fleet_from(spec, args.get("policy"), budget)?.with_seed(seed);
+    let n = args.get_usize("requests", 240).map_err(|e| anyhow::anyhow!(e))?;
+    let rate = args.get_f64("rate", 8.0).map_err(|e| anyhow::anyhow!(e))?;
+    let arrival = if args.flag("burst") {
+        Arrival::Bursty { rate_per_s: rate, burst_every: 40, burst_len: 16, burst_mult: 4.0 }
+    } else {
+        Arrival::Poisson { rate_per_s: rate }
+    };
+    // one seed drives both the arrival trace and the router RNG
+    let trace = Trace::generate(n, arrival, 0.0, seed);
+    println!(
+        "fleet '{spec}' x {} replicas, {} arrivals at {:.1} req/s (virtual time)\n",
+        cfg.replicas.len(),
+        n,
+        trace.offered_rate()
+    );
+    let fleet = Fleet::new(cfg);
+    let report = fleet::run_trace(&fleet, &trace, &[]);
+    println!("{}", report.render());
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = app_config(args)?;
     println!("loading artifacts from {} ...", cfg.artifacts_dir.display());
     let coordinator = Arc::new(Coordinator::start(cfg.coordinator_config())?);
+    let fleet = cfg.fleet.clone().map(|f| {
+        println!(
+            "fleet: {} replicas, policy {} (fleet-backed infer via {{\"fleet\":true}})",
+            f.replicas.len(),
+            f.policy.label()
+        );
+        Arc::new(Fleet::new(f))
+    });
     let stop = Arc::new(AtomicBool::new(false));
-    server::serve(coordinator, &cfg.server_addr, stop, |addr| {
+    server::serve_with_fleet(coordinator, fleet, &cfg.server_addr, stop, |addr| {
         println!("listening on {addr} (JSON lines; {{\"cmd\":\"quit\"}} to stop)");
     })
 }

@@ -2,28 +2,32 @@
 //! rendering (the Trepn-style monitoring hooks of §IV-C, applied to the
 //! real serving stack).
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
-/// Sliding-window latency recorder (keeps the most recent `cap` samples).
+/// Sliding-window latency recorder (keeps the most recent `cap`
+/// samples).  Backed by a ring (`VecDeque`): evicting the oldest sample
+/// is O(1), where a `Vec::remove(0)` would shift the whole window on
+/// every record under load.
 #[derive(Debug)]
 pub struct LatencyRecorder {
     cap: usize,
-    samples_ms: Mutex<Vec<f64>>,
+    samples_ms: Mutex<VecDeque<f64>>,
 }
 
 impl LatencyRecorder {
     pub fn new(cap: usize) -> Self {
-        Self { cap, samples_ms: Mutex::new(Vec::new()) }
+        Self { cap, samples_ms: Mutex::new(VecDeque::with_capacity(cap.min(4096))) }
     }
 
     pub fn record(&self, d: Duration) {
         let mut s = self.samples_ms.lock().unwrap();
         if s.len() == self.cap {
-            s.remove(0);
+            s.pop_front();
         }
-        s.push(d.as_secs_f64() * 1e3);
+        s.push_back(d.as_secs_f64() * 1e3);
     }
 
     pub fn count(&self) -> usize {
@@ -31,14 +35,20 @@ impl LatencyRecorder {
     }
 
     /// Percentile in milliseconds (p in [0,1]); None when empty.
+    /// Interpolates linearly between the two nearest ranks, so small
+    /// windows don't snap to a single sample.
     pub fn percentile_ms(&self, p: f64) -> Option<f64> {
         let s = self.samples_ms.lock().unwrap();
         if s.is_empty() {
             return None;
         }
-        let mut sorted = s.clone();
+        let mut sorted: Vec<f64> = s.iter().copied().collect();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        Some(sorted[((sorted.len() - 1) as f64 * p) as usize])
+        let rank = (sorted.len() - 1) as f64 * p.clamp(0.0, 1.0);
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        Some(sorted[lo] + (sorted[hi] - sorted[lo]) * frac)
     }
 
     pub fn mean_ms(&self) -> Option<f64> {
@@ -47,6 +57,37 @@ impl LatencyRecorder {
             return None;
         }
         Some(s.iter().sum::<f64>() / s.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod recorder_tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates_between_ranks() {
+        let r = LatencyRecorder::new(8);
+        for ms in [1u64, 2, 3, 4] {
+            r.record(Duration::from_millis(ms));
+        }
+        // rank 1.5 between 2 and 3
+        assert!((r.percentile_ms(0.5).unwrap() - 2.5).abs() < 1e-9);
+        assert_eq!(r.percentile_ms(0.0), Some(1.0));
+        assert_eq!(r.percentile_ms(1.0), Some(4.0));
+        // out-of-range p clamps instead of panicking
+        assert_eq!(r.percentile_ms(2.0), Some(4.0));
+    }
+
+    #[test]
+    fn window_evicts_oldest_first() {
+        let r = LatencyRecorder::new(3);
+        for ms in 1..=5u64 {
+            r.record(Duration::from_millis(ms));
+        }
+        assert_eq!(r.count(), 3);
+        // only 3,4,5 remain
+        assert_eq!(r.percentile_ms(0.0), Some(3.0));
+        assert_eq!(r.percentile_ms(1.0), Some(5.0));
     }
 }
 

@@ -78,6 +78,17 @@ impl Args {
         }
     }
 
+    /// Optional number: `Ok(None)` when absent, error only on a bad value.
+    pub fn get_f64_opt(&self, name: &str) -> Result<Option<f64>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
     /// First positional argument (the subcommand), if any.
     pub fn command(&self) -> Option<&str> {
         self.positional.first().map(|s| s.as_str())
@@ -120,5 +131,14 @@ mod tests {
     fn bad_number_is_an_error() {
         let a = parse(&["--n", "abc"]);
         assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn optional_number() {
+        let a = parse(&["--budget-j", "2.5"]);
+        assert_eq!(a.get_f64_opt("budget-j").unwrap(), Some(2.5));
+        assert_eq!(a.get_f64_opt("missing").unwrap(), None);
+        let b = parse(&["--budget-j", "nope"]);
+        assert!(b.get_f64_opt("budget-j").is_err());
     }
 }
