@@ -1,15 +1,19 @@
 //! **Fleet routing driver** (Layer 3.5): push one deterministic trace
 //! through a mixed 6-replica Adreno fleet under every placement policy
 //! and compare per-replica p50/p99 latency, energy spent, and placement
-//! counts.  Pure simulation — no artifacts or PJRT runtime needed.
+//! counts — plus a batched-vs-unbatched comparison when `--batch` > 1
+//! turns on per-replica dynamic batching.  Pure simulation — no
+//! artifacts or PJRT runtime needed.
 //!
 //! ```sh
 //! cargo run --release --example fleet_sim -- --requests 240 --rate 8
 //! cargo run --release --example fleet_sim -- --inject            # kill r0 mid-trace
 //! cargo run --release --example fleet_sim -- --budget-j 40       # joule budgets
+//! cargo run --release --example fleet_sim -- --batch 8 --rate 24 # amortized dispatches
 //! ```
 
 use anyhow::Result;
+use mobile_convnet::config::{self, DEFAULT_FLEET_BATCH_WAIT_MS};
 use mobile_convnet::coordinator::trace::{Arrival, Trace};
 use mobile_convnet::fleet::{run_trace, Fleet, FleetConfig, HealthEvent, Policy};
 use mobile_convnet::util::cli::Args;
@@ -21,6 +25,10 @@ fn main() -> Result<()> {
     let rate = args.get_f64("rate", 8.0).map_err(|e| anyhow::anyhow!(e))?;
     let seed = args.get_u64("seed", 77).map_err(|e| anyhow::anyhow!(e))?;
     let budget_j = args.get_f64_opt("budget-j").map_err(|e| anyhow::anyhow!(e))?;
+    let batch_opt = args.get_usize_opt("batch").map_err(|e| anyhow::anyhow!(e))?;
+    let wait_opt = args.get_f64_opt("batch-wait-ms").map_err(|e| anyhow::anyhow!(e))?;
+    let batch = batch_opt.unwrap_or(1);
+    let batch_wait_ms = wait_opt.unwrap_or(DEFAULT_FLEET_BATCH_WAIT_MS);
     let inject = args.flag("inject");
 
     let trace = Trace::generate(n, Arrival::Poisson { rate_per_s: rate }, 0.0, seed);
@@ -33,21 +41,32 @@ fn main() -> Result<()> {
         Vec::new()
     };
 
+    // The user's raw knobs go through the shared config validation, so
+    // bad CLI values (cap 0 or > 64, negative or dangling wait) error
+    // exactly like every other entry point; the unbatched baseline is
+    // an internal reference config, not user input.
+    let configure = |policy: Policy, batched: bool| -> Result<FleetConfig> {
+        let (cap, wait) = if batched { (batch_opt, wait_opt) } else { (None, None) };
+        let cfg = config::fleet_from(spec, Some(policy.label()), budget_j, cap, wait)?;
+        Ok(cfg.with_seed(seed))
+    };
+
     println!(
-        "fleet '{spec}', {n} arrivals at {:.1} req/s over {:.1} s{}{}\n",
+        "fleet '{spec}', {n} arrivals at {:.1} req/s over {:.1} s{}{}{}\n",
         trace.offered_rate(),
         span_ms / 1e3,
         if inject { ", failure injection on r0" } else { "" },
         budget_j.map(|b| format!(", {b} J/replica budget")).unwrap_or_default(),
+        if batch > 1 {
+            format!(", batch<={batch} wait {batch_wait_ms} ms")
+        } else {
+            String::new()
+        },
     );
 
     let mut rows = Vec::new();
     for policy in Policy::all() {
-        let cfg = FleetConfig::parse_spec(spec, policy)
-            .map_err(|e| anyhow::anyhow!(e))?
-            .with_budget_j(budget_j)
-            .with_seed(seed);
-        let fleet = Fleet::new(cfg);
+        let fleet = Fleet::new(configure(policy, true)?);
         let report = run_trace(&fleet, &trace, &events);
         println!("{}", report.render());
         rows.push(report);
@@ -55,15 +74,16 @@ fn main() -> Result<()> {
 
     println!("policy comparison (same trace, same fleet):");
     println!(
-        "{:<16} {:>9} {:>6} {:>10} {:>10} {:>12} {:>10}",
-        "policy", "completed", "shed", "p50 ms", "p99 ms", "energy J", "J/req"
+        "{:<16} {:>9} {:>6} {:>6} {:>10} {:>10} {:>12} {:>10}",
+        "policy", "completed", "shed", "lost", "p50 ms", "p99 ms", "energy J", "J/req"
     );
     for r in &rows {
         println!(
-            "{:<16} {:>9} {:>6} {:>10.1} {:>10.1} {:>12.1} {:>10.3}",
+            "{:<16} {:>9} {:>6} {:>6} {:>10.1} {:>10.1} {:>12.1} {:>10.3}",
             r.policy,
             r.completed,
             r.shed,
+            r.lost,
             r.p50_ms.unwrap_or(0.0),
             r.p99_ms.unwrap_or(0.0),
             r.total_energy_j,
@@ -71,11 +91,36 @@ fn main() -> Result<()> {
         );
     }
 
-    // Sanity: with no budget, nothing is lost, and the energy-aware
-    // policy never spends more than round-robin on the same trace.
+    // Batched vs unbatched at the same arrivals: per-dispatch overhead
+    // amortizes, so the batched fleet must spend fewer joules.  The
+    // batched side reuses the reports already computed above.
+    if batch > 1 {
+        println!("\nbatched (<= {batch}) vs unbatched, same trace:");
+        for (policy, batched) in Policy::all().into_iter().zip(&rows) {
+            let unbatched = run_trace(&Fleet::new(configure(policy, false)?), &trace, &events);
+            println!(
+                "{:<16} energy {:>9.1} J -> {:>9.1} J ({:+.1}%)  \
+                 throughput {:>6.1} -> {:>6.1} req/s",
+                unbatched.policy,
+                unbatched.total_energy_j,
+                batched.total_energy_j,
+                (batched.total_energy_j / unbatched.total_energy_j - 1.0) * 100.0,
+                unbatched.throughput_rps(),
+                batched.throughput_rps(),
+            );
+        }
+    }
+
+    // Sanity: with no budget or failures, conservation holds and the
+    // energy-aware policy never spends more than round-robin.
     if budget_j.is_none() {
         for r in &rows {
-            assert_eq!(r.completed + r.shed, n as u64, "request conservation ({})", r.policy);
+            assert_eq!(
+                r.completed + r.shed + r.lost,
+                n as u64,
+                "request conservation ({})",
+                r.policy
+            );
         }
         let energy = |label: &str| {
             rows.iter().find(|r| r.policy == label).map(|r| r.total_energy_j).unwrap()

@@ -41,9 +41,12 @@ fn main() -> Result<()> {
         if bursty { ", bursty" } else { "" }
     );
 
-    // Fleet path: the same trace, routed across simulated replicas.
+    // Fleet path: the same trace, routed across simulated replicas
+    // (optionally batching inside each replica with --fleet-batch).
     if let Some(spec) = fleet_spec {
-        let cfg = config::fleet_from(spec, args.get("policy"), None)?;
+        let batch = args.get_usize_opt("fleet-batch").map_err(|e| anyhow::anyhow!(e))?;
+        let wait = args.get_f64_opt("fleet-batch-wait-ms").map_err(|e| anyhow::anyhow!(e))?;
+        let cfg = config::fleet_from(spec, args.get("policy"), None, batch, wait)?;
         let fleet = Fleet::new(cfg);
         let report = fleet::run_trace(&fleet, &trace, &[]);
         println!("\nfleet path ({spec}):\n{}", report.render());

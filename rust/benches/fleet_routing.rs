@@ -1,14 +1,21 @@
 //! Bench for **fleet routing policies** (Layer 3.5): the same Poisson
 //! trace through the same mixed 6-replica Adreno fleet under every
 //! placement policy, at equal throughput (identical arrivals, every
-//! request completed).  The claim under test: `EnergyAware` finishes
-//! the trace with no more total energy than `RoundRobin`, because it
-//! concentrates load on the joule-efficient replicas (Table V's per-
-//! device energy spread is what it exploits) until queueing makes the
-//! latency price too high.
+//! request completed).  Two claims under test:
+//!
+//! 1. `EnergyAware` finishes the trace with no more total energy than
+//!    `RoundRobin`, because it concentrates load on the joule-efficient
+//!    replicas (Table V's per-device energy spread is what it exploits)
+//!    until queueing makes the latency price too high.
+//! 2. Per-replica dynamic batching (batch cap 8, dispatch overhead
+//!    amortized across each multi-image dispatch) completes a
+//!    saturating trace with strictly lower total energy and no lower
+//!    throughput than the unbatched fleet — for both `RoundRobin` and
+//!    `EnergyAware`.
 
+use mobile_convnet::config::DEFAULT_FLEET_BATCH_WAIT_MS;
 use mobile_convnet::coordinator::trace::{Arrival, Trace};
-use mobile_convnet::fleet::{run_trace, Fleet, FleetConfig, Policy};
+use mobile_convnet::fleet::{run_trace, Fleet, FleetConfig, FleetReport, Policy};
 use mobile_convnet::util::bench::Bencher;
 
 fn main() {
@@ -47,6 +54,7 @@ fn main() {
     for r in &results {
         assert_eq!(r.completed, 400, "{}: all requests must complete", r.policy);
         assert_eq!(r.shed, 0, "{}: nothing may be shed", r.policy);
+        assert_eq!(r.lost, 0, "{}: nothing may be lost", r.policy);
     }
     let energy = |label: &str| {
         results.iter().find(|r| r.policy == label).map(|r| r.total_energy_j).unwrap()
@@ -63,6 +71,60 @@ fn main() {
         energy("round-robin")
     );
 
+    // Batched vs unbatched at equal arrivals: a saturating trace (the
+    // unbatched fleet's capacity is ~13 req/s) so queues back up and
+    // batches actually form.  The batched fleet must finish with
+    // strictly lower total energy and no lower throughput.
+    const BATCH: usize = 8;
+    const BATCH_WAIT_MS: f64 = DEFAULT_FLEET_BATCH_WAIT_MS;
+    let heavy = Trace::generate(400, Arrival::Poisson { rate_per_s: 28.0 }, 0.0, 42);
+    println!(
+        "\nbatched (cap {BATCH}, wait {BATCH_WAIT_MS} ms) vs unbatched, \
+         {} arrivals at {:.1} req/s:",
+        heavy.entries.len(),
+        heavy.offered_rate()
+    );
+    let run = |policy: Policy, batched: bool| -> FleetReport {
+        let mut cfg = FleetConfig::parse_spec(SPEC, policy).unwrap().with_seed(42);
+        if batched {
+            cfg = cfg.with_batching(BATCH, BATCH_WAIT_MS);
+        }
+        run_trace(&Fleet::new(cfg), &heavy, &[])
+    };
+    for policy in [
+        Policy::RoundRobin,
+        Policy::EnergyAware { lambda_j_per_ms: Policy::DEFAULT_LAMBDA_J_PER_MS },
+    ] {
+        let unbatched = run(policy, false);
+        let batched = run(policy, true);
+        println!(
+            "{:<16} energy {:>9.1} J -> {:>9.1} J ({:+.1}%)  throughput {:>6.1} -> {:>6.1} req/s",
+            unbatched.policy,
+            unbatched.total_energy_j,
+            batched.total_energy_j,
+            (batched.total_energy_j / unbatched.total_energy_j - 1.0) * 100.0,
+            unbatched.throughput_rps(),
+            batched.throughput_rps(),
+        );
+        assert_eq!(unbatched.completed, 400, "{}: unbatched must complete", unbatched.policy);
+        assert_eq!(batched.completed, 400, "{}: batched must complete", batched.policy);
+        assert!(
+            batched.total_energy_j < unbatched.total_energy_j,
+            "{}: batched {:.1} J must be strictly below unbatched {:.1} J",
+            batched.policy,
+            batched.total_energy_j,
+            unbatched.total_energy_j
+        );
+        assert!(
+            batched.throughput_rps() >= unbatched.throughput_rps(),
+            "{}: batched {:.2} req/s must not trail unbatched {:.2} req/s",
+            batched.policy,
+            batched.throughput_rps(),
+            unbatched.throughput_rps()
+        );
+    }
+    println!("claim check: batching lowers energy at no throughput cost ... OK");
+
     // Dispatch hot path: routing cost per request, fleet construction.
     let mut b = Bencher::from_env();
     b.bench("fleet/construct_6_replicas", || {
@@ -75,5 +137,16 @@ fn main() {
     b.bench("fleet/dispatch_energy_aware", || {
         t += 10.0;
         fleet.dispatch(t)
+    });
+    let batched_fleet = Fleet::new(
+        FleetConfig::mixed_six(Policy::EnergyAware {
+            lambda_j_per_ms: Policy::DEFAULT_LAMBDA_J_PER_MS,
+        })
+        .with_batching(BATCH, BATCH_WAIT_MS),
+    );
+    let mut tb = 0.0f64;
+    b.bench("fleet/dispatch_energy_aware_batched", || {
+        tb += 10.0;
+        batched_fleet.dispatch(tb)
     });
 }

@@ -11,14 +11,20 @@
 //!   "precisions": ["precise", "imprecise"],
 //!   "fleet": "2xs7,2x6p,2xn5",
 //!   "fleet_policy": "energy",
-//!   "fleet_budget_j": 50.0
+//!   "fleet_budget_j": 50.0,
+//!   "fleet_batch": 8,
+//!   "fleet_batch_wait_ms": 25.0
 //! }
 //! ```
 //!
 //! The fleet topology can also come from the environment
-//! (`MCN_FLEET`, `MCN_FLEET_POLICY`, `MCN_FLEET_BUDGET_J`) or the CLI
-//! (`--fleet SPEC --fleet-policy P --fleet-budget-j J`); CLI wins over
-//! env, env over file.
+//! (`MCN_FLEET`, `MCN_FLEET_POLICY`, `MCN_FLEET_BUDGET_J`,
+//! `MCN_FLEET_BATCH`, `MCN_FLEET_BATCH_WAIT_MS`) or the CLI
+//! (`--fleet SPEC --fleet-policy P --fleet-budget-j J --fleet-batch B
+//! --fleet-batch-wait-ms W`); CLI wins over env, env over file.
+//! `fleet_batch` > 1 turns on per-replica dynamic batching (requests
+//! accumulate into amortized multi-image dispatches); the default of 1
+//! keeps single-image service.
 
 use std::path::{Path, PathBuf};
 use std::time::Duration;
@@ -58,16 +64,45 @@ impl Default for AppConfig {
     }
 }
 
+/// Default flush deadline when per-replica batching is on but no wait
+/// was configured: long enough to accumulate riders at serving rates,
+/// short next to the 100–600 ms per-image service times.
+pub const DEFAULT_FLEET_BATCH_WAIT_MS: f64 = 25.0;
+
 /// Build a [`FleetConfig`] from a topology spec plus optional policy
-/// name and per-replica budget.  Default policy is `energy` — the
-/// paper-derived router.
-pub fn fleet_from(spec: &str, policy: Option<&str>, budget_j: Option<f64>) -> Result<FleetConfig> {
+/// name, per-replica budget, and batching knobs.  Default policy is
+/// `energy` — the paper-derived router; default batching is off
+/// (`max_batch` 1 = single-image service).
+pub fn fleet_from(
+    spec: &str,
+    policy: Option<&str>,
+    budget_j: Option<f64>,
+    max_batch: Option<usize>,
+    batch_wait_ms: Option<f64>,
+) -> Result<FleetConfig> {
     let policy = match policy {
         Some(p) => Policy::parse(p).map_err(|e| anyhow::anyhow!(e))?,
         None => Policy::EnergyAware { lambda_j_per_ms: Policy::DEFAULT_LAMBDA_J_PER_MS },
     };
-    let cfg = FleetConfig::parse_spec(spec, policy)
+    let mut cfg = FleetConfig::parse_spec(spec, policy)
         .map_err(|e| anyhow::anyhow!("fleet spec: {e}"))?;
+    let max_batch = max_batch.unwrap_or(1);
+    anyhow::ensure!((1..=64).contains(&max_batch), "fleet_batch must be 1..=64");
+    let wait = batch_wait_ms.unwrap_or(DEFAULT_FLEET_BATCH_WAIT_MS);
+    anyhow::ensure!(
+        wait.is_finite() && wait >= 0.0,
+        "fleet_batch_wait_ms must be a non-negative number"
+    );
+    if max_batch > 1 {
+        cfg = cfg.with_batching(max_batch, wait);
+    } else {
+        // A wait with no batch cap would be silently meaningless;
+        // reject it so the misconfiguration is visible.
+        anyhow::ensure!(
+            batch_wait_ms.is_none(),
+            "fleet_batch_wait_ms requires fleet_batch > 1"
+        );
+    }
     Ok(cfg.with_budget_j(budget_j))
 }
 
@@ -111,13 +146,25 @@ impl AppConfig {
         if let Some(spec) = v.get("fleet").and_then(Json::as_str) {
             let policy = v.get("fleet_policy").and_then(Json::as_str);
             let budget = v.get("fleet_budget_j").and_then(Json::as_f64);
-            cfg.fleet = Some(fleet_from(spec, policy, budget).context("config: fleet")?);
+            // Range validation (1..=64) lives in `fleet_from`; only the
+            // integer-ness of the JSON value is checked here.
+            let batch = match v.get("fleet_batch") {
+                None => None,
+                Some(b) => Some(
+                    b.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("config: fleet_batch must be an integer"))?,
+                ),
+            };
+            let wait = v.get("fleet_batch_wait_ms").and_then(Json::as_f64);
+            cfg.fleet =
+                Some(fleet_from(spec, policy, budget, batch, wait).context("config: fleet")?);
         }
         Ok(cfg)
     }
 
-    /// Apply `MCN_FLEET` / `MCN_FLEET_POLICY` / `MCN_FLEET_BUDGET_J`
-    /// environment overrides (spec presence gates the other two).
+    /// Apply `MCN_FLEET` / `MCN_FLEET_POLICY` / `MCN_FLEET_BUDGET_J` /
+    /// `MCN_FLEET_BATCH` / `MCN_FLEET_BATCH_WAIT_MS` environment
+    /// overrides (spec presence gates the others).
     pub fn apply_env(&mut self) -> Result<()> {
         if let Ok(spec) = std::env::var("MCN_FLEET") {
             let policy = std::env::var("MCN_FLEET_POLICY").ok();
@@ -128,8 +175,22 @@ impl AppConfig {
                 ),
                 Err(_) => None,
             };
-            self.fleet =
-                Some(fleet_from(&spec, policy.as_deref(), budget).context("MCN_FLEET")?);
+            let batch = match std::env::var("MCN_FLEET_BATCH") {
+                Ok(v) => Some(
+                    v.parse::<usize>()
+                        .map_err(|_| anyhow::anyhow!("MCN_FLEET_BATCH: bad count '{v}'"))?,
+                ),
+                Err(_) => None,
+            };
+            let wait = match std::env::var("MCN_FLEET_BATCH_WAIT_MS") {
+                Ok(v) => Some(v.parse::<f64>().map_err(|_| {
+                    anyhow::anyhow!("MCN_FLEET_BATCH_WAIT_MS: bad number '{v}'")
+                })?),
+                Err(_) => None,
+            };
+            self.fleet = Some(
+                fleet_from(&spec, policy.as_deref(), budget, batch, wait).context("MCN_FLEET")?,
+            );
         }
         Ok(())
     }
@@ -209,11 +270,36 @@ mod tests {
 
     #[test]
     fn fleet_from_defaults_to_energy_aware() {
-        let f = fleet_from("s7,n5", None, None).unwrap();
+        let f = fleet_from("s7,n5", None, None, None, None).unwrap();
         assert!(matches!(f.policy, Policy::EnergyAware { .. }));
         assert_eq!(f.budget_j, None);
-        let f = fleet_from("s7", Some("rr"), Some(3.0)).unwrap();
+        assert!(!f.batch.enabled(), "batching is off by default");
+        let f = fleet_from("s7", Some("rr"), Some(3.0), None, None).unwrap();
         assert_eq!(f.policy, Policy::RoundRobin);
         assert_eq!(f.budget_j, Some(3.0));
+    }
+
+    #[test]
+    fn parses_fleet_batching_knobs() {
+        let c = AppConfig::from_json(
+            r#"{"fleet": "2xs7", "fleet_batch": 8, "fleet_batch_wait_ms": 10.0}"#,
+        )
+        .unwrap();
+        let f = c.fleet.unwrap();
+        assert_eq!(f.batch.max_batch, 8);
+        assert_eq!(f.batch.max_wait_ms, 10.0);
+        assert_eq!(f.batch.sizes, vec![1, 2, 4, 8]);
+        // wait defaults when only the cap is given
+        let f = fleet_from("s7", None, None, Some(4), None).unwrap();
+        assert_eq!(f.batch.max_wait_ms, DEFAULT_FLEET_BATCH_WAIT_MS);
+        // bad knobs are errors
+        assert!(AppConfig::from_json(r#"{"fleet": "s7", "fleet_batch": 0}"#).is_err());
+        assert!(fleet_from("s7", None, None, Some(65), None).is_err());
+        assert!(fleet_from("s7", None, None, Some(4), Some(-1.0)).is_err());
+        // a wait without a batch cap is a visible error, not a no-op
+        assert!(fleet_from("s7", None, None, None, Some(10.0)).is_err());
+        assert!(
+            AppConfig::from_json(r#"{"fleet": "s7", "fleet_batch_wait_ms": 10.0}"#).is_err()
+        );
     }
 }

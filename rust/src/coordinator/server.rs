@@ -15,8 +15,10 @@
 //! With `"fleet": true` the request is first routed through the
 //! configured device fleet (see [`crate::fleet`]): the energy-aware (or
 //! other) policy places it on a simulated Adreno replica, whose
-//! predicted queue wait / latency / joules ride back on the response
-//! while the real PJRT runtime computes the answer.
+//! predicted queue wait / latency / joules — and, when per-replica
+//! batching is on (`--fleet-batch`), the size of the batch the request
+//! rides in (`"batch_fill"`) — ride back on the response while the
+//! real PJRT runtime computes the answer.
 //!
 //! Seed-addressed images keep the wire small for load generation: both
 //! ends derive the pixels from the shared deterministic corpus.

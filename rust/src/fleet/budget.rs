@@ -8,6 +8,13 @@
 //! ratio is the whole point of the paper).  When the budget is fully
 //! exhausted the replica stops accepting traffic and the router sheds
 //! or re-routes around it.
+//!
+//! Budgets meter *committed* energy (spent + queued) and are re-checked
+//! before every admission, so committed joules can overshoot the budget
+//! by at most one request — the priciest single request in the device
+//! zoo, computed by
+//! [`max_request_energy_j`](crate::fleet::max_request_energy_j) (the
+//! bound the budget regression tests assert instead of a magic number).
 
 /// A joule allowance for one replica.
 #[derive(Debug, Clone, Copy, PartialEq)]

@@ -1,21 +1,32 @@
 //! A simulated device replica: one Adreno profile (Table II row) at a
-//! serving precision, working a FIFO queue in *virtual time*.
+//! serving precision, batching a FIFO queue in *virtual time*.
 //!
-//! Service time per image comes from the autotuned [`NetworkPlan`] cost
-//! (the per-device optimal granularities of §III-D); energy per image
-//! from the Table V rail model.  Virtual time keeps whole-trace
-//! simulations instantaneous and fully deterministic: a request
-//! arriving at `t` on a replica busy until `b` starts at `max(t, b)`
-//! and finishes one service time later.
+//! Service cost comes from the autotuned [`NetworkPlan`] cost model
+//! split into a per-dispatch overhead and a per-image marginal (see
+//! [`network_dispatch_overhead_ms`] / [`network_marginal_time_ms`]):
+//! a dispatch carrying `b` images costs `overhead + b·marginal`
+//! milliseconds and the proportional joules, so batching amortizes the
+//! fixed launch/setup cost exactly the way the paper's granularity
+//! tuning amortizes per-thread overhead.  Arrivals accumulate in an
+//! *open batch* that flushes when it reaches `max_batch`, when its
+//! oldest rider has waited `max_wait_ms`, or when the serving precision
+//! changes (budget degradation) — and the flush decomposes the queue
+//! into executable batch sizes with the coordinator's [`plan_batches`]
+//! policy.  Virtual time keeps whole-trace simulations instantaneous
+//! and fully deterministic: a batch flushed at `t` on a replica busy
+//! until `b` starts at `max(t, b)` and finishes one batch service time
+//! later.
 //!
 //! [`NetworkPlan`]: crate::simulator::autotune::NetworkPlan
+//! [`network_dispatch_overhead_ms`]: crate::simulator::cost::network_dispatch_overhead_ms
+//! [`network_marginal_time_ms`]: crate::simulator::cost::network_marginal_time_ms
 
 use std::collections::VecDeque;
 use std::time::Duration;
 
-use crate::coordinator::PlanCache;
+use crate::coordinator::{plan_batches, PlanCache};
 use crate::model::graph::{ConvSpec, SqueezeNet};
-use crate::simulator::cost::{network_time, RunMode};
+use crate::simulator::cost::{network_dispatch_overhead_ms, network_marginal_time_ms, RunMode};
 use crate::simulator::device::{DeviceProfile, Precision};
 use crate::simulator::power::energy_joules;
 use crate::telemetry::LatencyRecorder;
@@ -55,15 +66,92 @@ impl ReplicaSpec {
     }
 }
 
-/// One queued (not yet completed) request.
+/// Per-replica dynamic batching knobs — the fleet-side analogue of the
+/// coordinator's [`BatcherConfig`](crate::coordinator::BatcherConfig),
+/// expressed in virtual-time milliseconds.
+#[derive(Debug, Clone)]
+pub struct FleetBatch {
+    /// Flush the open batch as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// Flush the open batch once its oldest rider has waited this long,
+    /// even if it is not full.
+    pub max_wait_ms: f64,
+    /// Executable batch sizes the flush decomposes into via
+    /// [`plan_batches`] (always contains 1).
+    pub sizes: Vec<usize>,
+}
+
+impl FleetBatch {
+    /// Single-image service: every admit flushes immediately (the
+    /// default — identical queueing math to the unbatched fleet).
+    pub fn single() -> FleetBatch {
+        FleetBatch { max_batch: 1, max_wait_ms: 0.0, sizes: vec![1] }
+    }
+
+    /// Batching with executable sizes at every power of two up to
+    /// `max_batch` — plus `max_batch` itself when it is not a power of
+    /// two, so a full batch always dispatches as *one* batch (a cap of
+    /// 6 must not behave like 4 + an unamortized remainder).
+    pub fn new(max_batch: usize, max_wait_ms: f64) -> FleetBatch {
+        assert!(max_batch >= 1, "max_batch must be >= 1");
+        assert!(max_wait_ms >= 0.0, "max_wait_ms must be >= 0");
+        let mut sizes = Vec::new();
+        let mut s = 1usize;
+        while s <= max_batch {
+            sizes.push(s);
+            s *= 2;
+        }
+        if sizes.last() != Some(&max_batch) {
+            sizes.push(max_batch);
+        }
+        FleetBatch { max_batch, max_wait_ms, sizes }
+    }
+
+    /// Is multi-image batching actually on?
+    pub fn enabled(&self) -> bool {
+        self.max_batch > 1
+    }
+
+    /// Number of dispatches [`plan_batches`] would split `n` riders
+    /// into, computed arithmetically (greedy over the descending
+    /// sizes) so the admit hot path does not allocate.  Relies on
+    /// `sizes` being ascending, as the constructors build it.
+    pub fn dispatch_count(&self, mut n: usize) -> usize {
+        let mut k = 0;
+        for &s in self.sizes.iter().rev() {
+            k += n / s;
+            n %= s;
+        }
+        k
+    }
+}
+
+/// One flushed (scheduled but not yet completed) dispatch: `b` riders
+/// sharing one per-dispatch overhead.
+#[derive(Debug, Clone)]
+struct Batch {
+    start_ms: f64,
+    finish_ms: f64,
+    /// `busy_until_ms` before this batch was appended (tail retraction
+    /// restores it).
+    prev_busy_ms: f64,
+    precision: Precision,
+    /// Per-rider marginal cost at this batch's precision.
+    marginal_ms: f64,
+    marginal_j: f64,
+    /// Total committed energy: one overhead plus `b` marginals.
+    energy_total_j: f64,
+    /// Latency anchors of the riders, admission order.
+    anchors: Vec<f64>,
+}
+
+/// A queued request orphaned by replica failure, handed back to the
+/// fleet for re-routing.
 #[derive(Debug, Clone, Copy)]
-pub struct Pending {
+pub struct Orphan {
     /// Where latency measurement starts — the original arrival time,
     /// preserved across failure re-routing.
     pub anchor_ms: f64,
-    pub start_ms: f64,
-    pub finish_ms: f64,
-    pub energy_j: f64,
 }
 
 /// Where a dispatched request landed, and at what predicted cost.
@@ -72,12 +160,20 @@ pub struct Placement {
     pub replica: usize,
     pub replica_name: String,
     pub queue_wait_ms: f64,
+    /// Single-image dispatch cost (overhead + one marginal).
     pub service_ms: f64,
     /// Predicted end-to-end latency from the original arrival.
     pub predicted_latency_ms: f64,
+    /// Committed (un-amortized) energy for this request.
     pub energy_j: f64,
     /// Effective precision the replica will serve this request at.
     pub precision: Precision,
+    /// Latency anchor this placement was admitted with (identifies the
+    /// queue entry for [`Replica::retract_last`]).
+    pub anchor_ms: f64,
+    /// Riders in this request's batch so far (its dispatch batch size
+    /// if the batch already flushed, the open-batch fill otherwise).
+    pub batch_fill: usize,
 }
 
 impl Placement {
@@ -91,6 +187,7 @@ impl Placement {
             ("predicted_latency_ms", Json::num(self.predicted_latency_ms)),
             ("energy_j", Json::num(self.energy_j)),
             ("precision", Json::str(self.precision.label())),
+            ("batch_fill", Json::num(self.batch_fill as f64)),
         ])
     }
 }
@@ -102,7 +199,30 @@ fn precision_index(p: Precision) -> usize {
     }
 }
 
-/// One simulated device worker with its own queue, energy meter,
+/// The largest single-request committed energy anywhere in the device
+/// zoo (every profile at both precisions, dispatch overhead included).
+/// This is the bound on how far a replica's committed energy can
+/// overshoot its joule budget: [`Replica::available`] re-checks the
+/// budget before every admit, so at most one request can be committed
+/// past the line — the budget tests assert
+/// `total_energy < budget + max_request_energy_j()`.
+pub fn max_request_energy_j() -> f64 {
+    static BOUND: std::sync::OnceLock<f64> = std::sync::OnceLock::new();
+    *BOUND.get_or_init(|| {
+        let cache = PlanCache::new();
+        let mut max = 0.0f64;
+        for device in DeviceProfile::all() {
+            for precision in [Precision::Precise, Precision::Imprecise] {
+                let spec = ReplicaSpec::new(device.clone(), precision);
+                let r = Replica::new(0, spec, None, FleetBatch::single(), &cache);
+                max = max.max(r.energy_per_request_j());
+            }
+        }
+        max
+    })
+}
+
+/// One simulated device worker with its own batch queue, energy meter,
 /// budget, health state, and latency telemetry.
 #[derive(Debug)]
 pub struct Replica {
@@ -114,12 +234,26 @@ pub struct Replica {
     /// Budget-forced fp16 fallback (sticky once the soft threshold is hit).
     pub degraded: bool,
     pub budget: Option<JouleBudget>,
-    /// Autotuned single-image service time, indexed `[precise, imprecise]`.
-    service_ms: [f64; 2],
-    /// Differential energy per image, indexed `[precise, imprecise]`.
-    energy_j: [f64; 2],
+    batch: FleetBatch,
+    /// Autotuned per-image marginal cost, indexed `[precise, imprecise]`.
+    marginal_ms: [f64; 2],
+    /// Fixed per-dispatch overhead, indexed `[precise, imprecise]`.
+    overhead_ms: [f64; 2],
+    marginal_j: [f64; 2],
+    overhead_j: [f64; 2],
     busy_until_ms: f64,
-    pending: VecDeque<Pending>,
+    /// Accumulating (not yet scheduled) batch: riders' latency anchors.
+    open_anchors: Vec<f64>,
+    /// Flush deadline of the open batch (`INFINITY` when it is empty).
+    open_deadline_ms: f64,
+    /// Serving precision of the open batch (batches are homogeneous; a
+    /// precision change flushes the open batch first).
+    open_precision: Precision,
+    scheduled: VecDeque<Batch>,
+    /// Riders queued (open or scheduled) — kept in sync by
+    /// admit/collect/retract/fail so the routing hot path reads it in
+    /// O(1) instead of summing the batch queue.
+    in_flight_count: usize,
     pub energy_spent_j: f64,
     /// Energy committed to still-queued requests (spent when they
     /// complete, released if the replica fails first).  Budgets meter
@@ -137,18 +271,23 @@ impl Replica {
         id: usize,
         spec: ReplicaSpec,
         budget: Option<JouleBudget>,
+        batch: FleetBatch,
         cache: &PlanCache,
     ) -> Replica {
         let net = SqueezeNet::v1_0();
-        let mut service_ms = [0.0f64; 2];
-        let mut energy_j = [0.0f64; 2];
+        let mut marginal_ms = [0.0f64; 2];
+        let mut overhead_ms = [0.0f64; 2];
+        let mut marginal_j = [0.0f64; 2];
+        let mut overhead_j = [0.0f64; 2];
         for precision in [Precision::Precise, Precision::Imprecise] {
             let plan = cache.plan(&spec.device, precision);
             let g = |s: &ConvSpec| plan.optimal_g(&s.name);
             let mode = RunMode::Parallel(precision);
-            let ms = network_time(&net, mode, &spec.device, &g);
-            service_ms[precision_index(precision)] = ms;
-            energy_j[precision_index(precision)] = energy_joules(&spec.device, mode, ms);
+            let i = precision_index(precision);
+            overhead_ms[i] = network_dispatch_overhead_ms(&net, mode, &spec.device);
+            marginal_ms[i] = network_marginal_time_ms(&net, mode, &spec.device, &g);
+            overhead_j[i] = energy_joules(&spec.device, mode, overhead_ms[i]);
+            marginal_j[i] = energy_joules(&spec.device, mode, marginal_ms[i]);
         }
         let name = format!("r{id}/{}@{}", spec.device.id, spec.precision.label());
         Replica {
@@ -158,10 +297,17 @@ impl Replica {
             health: Health::Healthy,
             degraded: false,
             budget,
-            service_ms,
-            energy_j,
+            batch,
+            marginal_ms,
+            overhead_ms,
+            marginal_j,
+            overhead_j,
             busy_until_ms: 0.0,
-            pending: VecDeque::new(),
+            open_anchors: Vec::new(),
+            open_deadline_ms: f64::INFINITY,
+            open_precision: Precision::Precise,
+            scheduled: VecDeque::new(),
+            in_flight_count: 0,
             energy_spent_j: 0.0,
             energy_queued_j: 0.0,
             placements: 0,
@@ -179,29 +325,97 @@ impl Replica {
         }
     }
 
-    /// Single-image service time at the effective precision (ms).
+    /// Single-image dispatch cost at the effective precision (ms):
+    /// one overhead plus one marginal.
     pub fn service_ms(&self) -> f64 {
-        self.service_ms[precision_index(self.effective_precision())]
+        let i = precision_index(self.effective_precision());
+        self.overhead_ms[i] + self.marginal_ms[i]
     }
 
-    /// Differential energy per request at the effective precision (J).
+    /// Fixed per-dispatch overhead at the effective precision (ms).
+    pub fn dispatch_overhead_ms(&self) -> f64 {
+        self.overhead_ms[precision_index(self.effective_precision())]
+    }
+
+    /// Per-image marginal service time at the effective precision (ms).
+    pub fn marginal_service_ms(&self) -> f64 {
+        self.marginal_ms[precision_index(self.effective_precision())]
+    }
+
+    /// Fixed per-dispatch overhead energy at the effective precision (J).
+    pub fn dispatch_overhead_j(&self) -> f64 {
+        self.overhead_j[precision_index(self.effective_precision())]
+    }
+
+    /// Per-image marginal energy at the effective precision (J).
+    pub fn marginal_energy_j(&self) -> f64 {
+        self.marginal_j[precision_index(self.effective_precision())]
+    }
+
+    /// Committed (un-amortized) energy per request at the effective
+    /// precision (J): one overhead plus one marginal.
     pub fn energy_per_request_j(&self) -> f64 {
-        self.energy_j[precision_index(self.effective_precision())]
+        let i = precision_index(self.effective_precision());
+        self.overhead_j[i] + self.marginal_j[i]
     }
 
-    /// Predicted wait before a request arriving now would start (ms).
+    /// Predicted energy the *next* request would actually cost here,
+    /// amortizing the dispatch overhead across the open batch it would
+    /// join — this is what makes the energy-aware policy prefer a
+    /// replica about to flush a partially-filled batch.
+    pub fn predicted_energy_per_request_j(&self) -> f64 {
+        let precision = self.effective_precision();
+        let i = precision_index(precision);
+        let fill = if !self.open_anchors.is_empty() && self.open_precision == precision {
+            self.open_anchors.len()
+        } else {
+            0
+        };
+        self.marginal_j[i] + self.overhead_j[i] / (fill + 1) as f64
+    }
+
+    /// Predicted wait before a request arriving now would start (ms):
+    /// until the batch it joins seals — the later of the batch
+    /// deadline (a fresh batch's deadline opens `max_wait_ms` out) and
+    /// the engine working off its backlog.  Riders already in the open
+    /// batch share the same dispatch, so they add no wait.
     pub fn queue_wait_ms(&self, now_ms: f64) -> f64 {
-        (self.busy_until_ms - now_ms).max(0.0)
+        let deadline = if self.open_anchors.is_empty() {
+            now_ms + self.batch.max_wait_ms
+        } else {
+            self.open_deadline_ms
+        };
+        (self.busy_until_ms.max(deadline) - now_ms).max(0.0)
     }
 
-    /// Requests queued or running.
+    /// Requests queued (open or scheduled) or running.
     pub fn in_flight(&self) -> usize {
-        self.pending.len()
+        self.in_flight_count
     }
 
-    /// Virtual time the last queued request finishes.
+    /// Riders in the open (still accumulating) batch.
+    pub fn open_fill(&self) -> usize {
+        self.open_anchors.len()
+    }
+
+    /// Virtual time the last queued work finishes.  An unflushed open
+    /// batch still owes a dispatch at its deadline; its contribution is
+    /// a safe upper bound (as if every rider flushed alone).
     pub fn last_finish_ms(&self) -> Option<f64> {
-        self.pending.back().map(|p| p.finish_ms)
+        let sched = self.scheduled.back().map(|b| b.finish_ms);
+        let open = if self.open_anchors.is_empty() {
+            None
+        } else {
+            let i = precision_index(self.open_precision);
+            let start = self.busy_until_ms.max(self.open_deadline_ms);
+            let n = self.open_anchors.len() as f64;
+            Some(start + n * (self.overhead_ms[i] + self.marginal_ms[i]))
+        };
+        match (sched, open) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (Some(a), None) => Some(a),
+            (None, b) => b,
+        }
     }
 
     /// Budget state over *committed* energy (spent + queued): a burst
@@ -227,86 +441,234 @@ impl Replica {
         self.health.accepts_traffic() && self.budget_state() != BudgetState::Exhausted
     }
 
+    /// Schedule the open batch at `at_ms`, decomposing it into
+    /// executable sizes ([`plan_batches`], largest first so the fullest
+    /// dispatch carries the oldest riders).  Each multi-rider dispatch
+    /// releases the per-item overheads it amortizes from the committed
+    /// energy meter.
+    fn flush_open(&mut self, at_ms: f64) {
+        if self.open_anchors.is_empty() {
+            return;
+        }
+        let i = precision_index(self.open_precision);
+        let plan = plan_batches(self.open_anchors.len(), &self.batch.sizes);
+        let mut offset = 0;
+        for b in plan {
+            let anchors = self.open_anchors[offset..offset + b].to_vec();
+            offset += b;
+            let start = self.busy_until_ms.max(at_ms);
+            let service = self.overhead_ms[i] + b as f64 * self.marginal_ms[i];
+            let energy = self.overhead_j[i] + b as f64 * self.marginal_j[i];
+            self.energy_queued_j -= (b - 1) as f64 * self.overhead_j[i];
+            let batch = Batch {
+                start_ms: start,
+                finish_ms: start + service,
+                prev_busy_ms: self.busy_until_ms,
+                precision: self.open_precision,
+                marginal_ms: self.marginal_ms[i],
+                marginal_j: self.marginal_j[i],
+                energy_total_j: energy,
+                anchors,
+            };
+            self.busy_until_ms = batch.finish_ms;
+            self.scheduled.push_back(batch);
+        }
+        self.energy_queued_j = self.energy_queued_j.max(0.0);
+        self.open_anchors.clear();
+        self.open_deadline_ms = f64::INFINITY;
+    }
+
+    /// When the open batch seals: the *later* of its deadline and the
+    /// engine freeing up.  While the replica is busy, waiting costs no
+    /// latency and lets the batch keep filling — sealing at the
+    /// deadline alone would lock in single-rider batches behind a
+    /// backlog, which is exactly when amortization matters most.
+    fn seal_ms(&self) -> f64 {
+        self.open_deadline_ms.max(self.busy_until_ms)
+    }
+
+    /// Flush the open batch if its seal time has passed (the flush
+    /// happens *at* the seal time, not at `now` — virtual time may
+    /// have jumped far beyond it).
+    fn flush_due(&mut self, now_ms: f64) {
+        if !self.open_anchors.is_empty() && self.seal_ms() <= now_ms {
+            let at = self.seal_ms();
+            self.flush_open(at);
+        }
+    }
+
+    /// Flush the open batch at its seal time even if virtual time has
+    /// not reached it yet — used by `Fleet::finish` to run queues dry.
+    pub fn force_flush(&mut self) {
+        if !self.open_anchors.is_empty() {
+            let at = self.seal_ms();
+            self.flush_open(at);
+        }
+    }
+
     /// Queue one request arriving at `now_ms`; latency is anchored at
     /// `anchor_ms` (equal to `now_ms` except after failure re-routing).
+    /// The request joins the open batch, which flushes immediately when
+    /// full (always, at the default `max_batch = 1`).
     pub fn admit(&mut self, now_ms: f64, anchor_ms: f64) -> Placement {
+        self.flush_due(now_ms);
         let precision = self.effective_precision();
-        let service_ms = self.service_ms();
-        let energy_j = self.energy_per_request_j();
-        let start_ms = self.busy_until_ms.max(now_ms);
-        let finish_ms = start_ms + service_ms;
-        self.busy_until_ms = finish_ms;
-        self.pending.push_back(Pending { anchor_ms, start_ms, finish_ms, energy_j });
-        self.energy_queued_j += energy_j;
+        // Batches are homogeneous: a precision change (budget
+        // degradation) closes the open batch before the new rider.
+        if !self.open_anchors.is_empty() && self.open_precision != precision {
+            self.flush_open(now_ms);
+        }
+        if self.open_anchors.is_empty() {
+            self.open_precision = precision;
+            self.open_deadline_ms = now_ms + self.batch.max_wait_ms;
+        }
+        self.open_anchors.push(anchor_ms);
+        self.in_flight_count += 1;
+        let i = precision_index(precision);
+        self.energy_queued_j += self.overhead_j[i] + self.marginal_j[i];
         self.placements += 1;
+        let flushed_now = self.open_anchors.len() >= self.batch.max_batch;
+        if flushed_now {
+            self.flush_open(now_ms);
+        }
+        let (start_est, finish_est, fill) = if flushed_now {
+            let b = self.scheduled.back().expect("flush scheduled at least one batch");
+            (b.start_ms, b.finish_ms, b.anchors.len())
+        } else {
+            let fill = self.open_anchors.len();
+            let start = self.busy_until_ms.max(self.open_deadline_ms);
+            // The open batch decomposes via plan_batches at flush; this
+            // newest rider lands in the trailing chunk, so its finish
+            // pays every chunk's overhead plus all riders' marginals.
+            let dispatches = self.batch.dispatch_count(fill) as f64;
+            let finish =
+                start + dispatches * self.overhead_ms[i] + fill as f64 * self.marginal_ms[i];
+            (start, finish, fill)
+        };
         self.refresh_budget();
         Placement {
             replica: self.id,
             replica_name: self.name.clone(),
-            queue_wait_ms: start_ms - now_ms,
-            service_ms,
-            predicted_latency_ms: finish_ms - anchor_ms,
-            energy_j,
+            queue_wait_ms: (start_est - now_ms).max(0.0),
+            service_ms: self.overhead_ms[i] + self.marginal_ms[i],
+            predicted_latency_ms: finish_est - anchor_ms,
+            energy_j: self.overhead_j[i] + self.marginal_j[i],
             precision,
+            anchor_ms,
+            batch_fill: fill,
         }
     }
 
-    /// Complete everything finishing by `now_ms`: record latency, meter
-    /// energy, and apply budget transitions (degrade at the soft
+    /// Complete every batch finishing by `now_ms` (flushing the open
+    /// batch first if its deadline passed): record per-rider latency,
+    /// meter energy, and apply budget transitions (degrade at the soft
     /// threshold; `available()` turns false once exhausted).  Returns
     /// the completed latencies in ms for fleet-wide aggregation.
     pub fn collect(&mut self, now_ms: f64) -> Vec<f64> {
+        self.flush_due(now_ms);
         let mut done = Vec::new();
-        while let Some(front) = self.pending.front() {
+        while let Some(front) = self.scheduled.front() {
             if front.finish_ms > now_ms {
                 break;
             }
-            let p = self.pending.pop_front().unwrap();
-            let latency_ms = (p.finish_ms - p.anchor_ms).max(0.0);
-            self.latency.record(Duration::from_secs_f64(latency_ms / 1e3));
-            self.energy_queued_j = (self.energy_queued_j - p.energy_j).max(0.0);
-            self.energy_spent_j += p.energy_j;
-            self.completed += 1;
-            done.push(latency_ms);
+            let b = self.scheduled.pop_front().unwrap();
+            for anchor in &b.anchors {
+                let latency_ms = (b.finish_ms - anchor).max(0.0);
+                self.latency.record(Duration::from_secs_f64(latency_ms / 1e3));
+                self.completed += 1;
+                done.push(latency_ms);
+            }
+            self.in_flight_count = self.in_flight_count.saturating_sub(b.anchors.len());
+            self.energy_queued_j = (self.energy_queued_j - b.energy_total_j).max(0.0);
+            self.energy_spent_j += b.energy_total_j;
         }
         self.refresh_budget();
         done
     }
 
-    /// Undo the most recent [`admit`](Self::admit) (identified by its
-    /// placement) — used when the real inference behind a fleet
-    /// placement fails, so the simulated queue and energy meter don't
-    /// count an answer that was never served.  No-op if the request
-    /// already completed or the replica failed in between.  Same-
-    /// precision requests on one replica are fungible in this model,
-    /// so retracting the queue tail is equivalent even if another
-    /// identical request was admitted in between.
+    /// Undo an [`admit`](Self::admit) whose real work failed before
+    /// being served, so the simulated queue and energy meter don't
+    /// count an answer that was never delivered.  The entry is found by
+    /// its latency anchor *and* serving precision (newest first), which
+    /// stays correct even when a budget degradation changed the
+    /// replica's service fingerprint between the admit and the retract.
+    /// Returns false if the request already completed or the replica
+    /// failed in between.  Retracting from a mid-queue batch leaves the
+    /// later batches' start times untouched (a conservative idle gap).
+    ///
+    /// Riders sharing an anchor and precision are fungible: whichever
+    /// of them is removed (the open batch is searched first), the
+    /// committed-energy meter stays equal to the exact cost of the
+    /// remaining queue — open riders release one full
+    /// overhead + marginal (what admission committed for them),
+    /// scheduled riders release what their batch still carries.
     pub fn retract_last(&mut self, placement: &Placement) -> bool {
-        // The candidate is the newest pending entry; verify it is the
-        // placement's request by its service/energy fingerprint.
-        match self.pending.back() {
-            Some(p)
-                if (p.finish_ms - p.start_ms - placement.service_ms).abs() < 1e-9
-                    && (p.energy_j - placement.energy_j).abs() < 1e-12 =>
+        if !self.open_anchors.is_empty() && self.open_precision == placement.precision {
+            if let Some(pos) =
+                self.open_anchors.iter().rposition(|&a| a == placement.anchor_ms)
             {
-                let p = self.pending.pop_back().unwrap();
-                self.busy_until_ms = p.start_ms;
-                self.energy_queued_j = (self.energy_queued_j - p.energy_j).max(0.0);
+                self.open_anchors.remove(pos);
+                self.in_flight_count = self.in_flight_count.saturating_sub(1);
+                let i = precision_index(placement.precision);
+                self.energy_queued_j =
+                    (self.energy_queued_j - self.overhead_j[i] - self.marginal_j[i]).max(0.0);
                 self.placements = self.placements.saturating_sub(1);
-                true
+                if self.open_anchors.is_empty() {
+                    self.open_deadline_ms = f64::INFINITY;
+                }
+                return true;
             }
-            _ => false,
         }
+        for idx in (0..self.scheduled.len()).rev() {
+            if self.scheduled[idx].precision != placement.precision {
+                continue;
+            }
+            let Some(pos) =
+                self.scheduled[idx].anchors.iter().rposition(|&a| a == placement.anchor_ms)
+            else {
+                continue;
+            };
+            let last = idx + 1 == self.scheduled.len();
+            self.scheduled[idx].anchors.remove(pos);
+            if self.scheduled[idx].anchors.is_empty() {
+                let b = self.scheduled.remove(idx).unwrap();
+                self.energy_queued_j = (self.energy_queued_j - b.energy_total_j).max(0.0);
+                if last {
+                    self.busy_until_ms = b.prev_busy_ms;
+                }
+            } else {
+                let m_ms = self.scheduled[idx].marginal_ms;
+                let m_j = self.scheduled[idx].marginal_j;
+                self.scheduled[idx].finish_ms -= m_ms;
+                self.scheduled[idx].energy_total_j -= m_j;
+                self.energy_queued_j = (self.energy_queued_j - m_j).max(0.0);
+                if last {
+                    self.busy_until_ms = self.scheduled[idx].finish_ms;
+                }
+            }
+            self.in_flight_count = self.in_flight_count.saturating_sub(1);
+            self.placements = self.placements.saturating_sub(1);
+            return true;
+        }
+        false
     }
 
-    /// Kill the replica: queued work is abandoned and handed back for
-    /// re-routing.  Energy for unfinished work is not metered (the run
-    /// died before the joules were spent on a useful answer).
-    pub fn fail(&mut self) -> Vec<Pending> {
+    /// Kill the replica: queued work (open and scheduled alike) is
+    /// abandoned and handed back for re-routing, oldest first.  Energy
+    /// for unfinished work is not metered (the run died before the
+    /// joules were spent on a useful answer).
+    pub fn fail(&mut self) -> Vec<Orphan> {
         self.health = Health::Failed;
         self.busy_until_ms = 0.0;
         self.energy_queued_j = 0.0;
-        self.pending.drain(..).collect()
+        self.in_flight_count = 0;
+        let mut orphans = Vec::new();
+        for b in self.scheduled.drain(..) {
+            orphans.extend(b.anchors.iter().map(|&anchor_ms| Orphan { anchor_ms }));
+        }
+        orphans.extend(self.open_anchors.drain(..).map(|anchor_ms| Orphan { anchor_ms }));
+        self.open_deadline_ms = f64::INFINITY;
+        orphans
     }
 
     /// Stop accepting traffic; queued work completes normally.
@@ -330,7 +692,13 @@ mod tests {
     fn s7_precise() -> Replica {
         let cache = PlanCache::new();
         let spec = ReplicaSpec::new(DeviceProfile::galaxy_s7(), Precision::Precise);
-        Replica::new(0, spec, None, &cache)
+        Replica::new(0, spec, None, FleetBatch::single(), &cache)
+    }
+
+    fn s7_batching(max_batch: usize, max_wait_ms: f64) -> Replica {
+        let cache = PlanCache::new();
+        let spec = ReplicaSpec::new(DeviceProfile::galaxy_s7(), Precision::Precise);
+        Replica::new(0, spec, None, FleetBatch::new(max_batch, max_wait_ms), &cache)
     }
 
     #[test]
@@ -345,14 +713,35 @@ mod tests {
     }
 
     #[test]
+    fn batch_knobs() {
+        let b = FleetBatch::new(8, 25.0);
+        assert_eq!(b.sizes, vec![1, 2, 4, 8]);
+        assert!(b.enabled());
+        // a non-power-of-two cap is itself executable, so a full batch
+        // dispatches as one batch
+        let b = FleetBatch::new(6, 0.0);
+        assert_eq!(b.sizes, vec![1, 2, 4, 6]);
+        assert!(!FleetBatch::single().enabled());
+        // the arithmetic dispatch count matches the real plan
+        for cap in [1usize, 2, 4, 6, 8] {
+            let b = FleetBatch::new(cap, 0.0);
+            for n in 0..=cap {
+                assert_eq!(b.dispatch_count(n), plan_batches(n, &b.sizes).len(), "{cap}/{n}");
+            }
+        }
+    }
+
+    #[test]
     fn queueing_math_is_fifo() {
         let mut r = s7_precise();
         let s = r.service_ms();
         assert!(s > 100.0 && s < 1000.0, "service {s} ms out of Table VI band");
+        assert!((r.dispatch_overhead_ms() + r.marginal_service_ms() - s).abs() < 1e-9);
 
         let p1 = r.admit(0.0, 0.0);
         assert_eq!(p1.queue_wait_ms, 0.0);
         assert!((p1.predicted_latency_ms - s).abs() < 1e-9);
+        assert_eq!(p1.batch_fill, 1);
 
         // second arrival at t=0 waits one full service time
         let p2 = r.admit(0.0, 0.0);
@@ -372,12 +761,18 @@ mod tests {
     #[test]
     fn imprecise_serves_faster_and_cheaper() {
         let cache = PlanCache::new();
-        let fp32 =
-            Replica::new(0, ReplicaSpec::new(DeviceProfile::nexus_5(), Precision::Precise), None, &cache);
+        let fp32 = Replica::new(
+            0,
+            ReplicaSpec::new(DeviceProfile::nexus_5(), Precision::Precise),
+            None,
+            FleetBatch::single(),
+            &cache,
+        );
         let fp16 = Replica::new(
             1,
             ReplicaSpec::new(DeviceProfile::nexus_5(), Precision::Imprecise),
             None,
+            FleetBatch::single(),
             &cache,
         );
         assert!(fp16.service_ms() < fp32.service_ms());
@@ -387,15 +782,84 @@ mod tests {
     }
 
     #[test]
+    fn batch_amortizes_dispatch_overhead() {
+        let mut r = s7_batching(4, 50.0);
+        let (oh, marg) = (r.dispatch_overhead_ms(), r.marginal_service_ms());
+        // four arrivals at t=0 fill the batch and flush as one dispatch
+        let mut last = None;
+        for _ in 0..4 {
+            last = Some(r.admit(0.0, 0.0));
+        }
+        let p = last.unwrap();
+        assert_eq!(p.batch_fill, 4);
+        assert!(p.queue_wait_ms.abs() < 1e-9, "a full flush starts immediately");
+        assert_eq!(r.in_flight(), 4);
+        let t_batch = oh + 4.0 * marg;
+        assert!((r.last_finish_ms().unwrap() - t_batch).abs() < 1e-9);
+        assert!(t_batch < 4.0 * (oh + marg), "batching must amortize the overhead");
+        let done = r.collect(t_batch + 1.0);
+        assert_eq!(done.len(), 4);
+        assert_eq!(r.completed, 4);
+        // one dispatch overhead shared by four riders
+        let expected_j = r.dispatch_overhead_j() + 4.0 * r.marginal_energy_j();
+        assert!((r.energy_spent_j - expected_j).abs() < 1e-9);
+        assert!(r.energy_spent_j < 4.0 * r.energy_per_request_j());
+        assert!(r.energy_queued_j.abs() < 1e-9);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let mut r = s7_batching(8, 50.0);
+        let (oh, marg) = (r.dispatch_overhead_ms(), r.marginal_service_ms());
+        r.admit(0.0, 0.0);
+        r.admit(1.0, 1.0);
+        assert_eq!(r.open_fill(), 2);
+        // before the 50 ms deadline nothing is even scheduled
+        assert!(r.collect(40.0).is_empty());
+        assert_eq!(r.open_fill(), 2);
+        // past the deadline the pair flushes as one dispatch *at* t=50
+        let done = r.collect(500.0);
+        assert_eq!(done.len(), 2);
+        assert_eq!(r.open_fill(), 0);
+        let finish = 50.0 + oh + 2.0 * marg;
+        assert!((done[0] - finish).abs() < 1e-9, "oldest rider waited for the deadline");
+        assert!((done[1] - (finish - 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flush_decomposes_into_executable_sizes() {
+        // 7 riders at cap 8 decompose greedily into 4 + 2 + 1 dispatches.
+        let mut r = s7_batching(8, 10.0);
+        for _ in 0..7 {
+            r.admit(0.0, 0.0);
+        }
+        assert_eq!(r.in_flight(), 7);
+        let done = r.collect(1e9);
+        assert_eq!(done.len(), 7);
+        let expected_j = 3.0 * r.dispatch_overhead_j() + 7.0 * r.marginal_energy_j();
+        assert!(
+            (r.energy_spent_j - expected_j).abs() < 1e-9,
+            "three dispatch overheads, seven marginals: {} vs {expected_j}",
+            r.energy_spent_j
+        );
+    }
+
+    #[test]
     fn budget_degrades_then_exhausts() {
         let cache = PlanCache::new();
         let spec = ReplicaSpec::new(DeviceProfile::galaxy_s7(), Precision::Precise);
         let per_req = {
-            let r = Replica::new(0, spec.clone(), None, &cache);
+            let r = Replica::new(0, spec.clone(), None, FleetBatch::single(), &cache);
             r.energy_per_request_j()
         };
         // budget: two precise requests hit the soft threshold
-        let mut r = Replica::new(0, spec, Some(JouleBudget::new(per_req * 4.0)), &cache);
+        let mut r = Replica::new(
+            0,
+            spec,
+            Some(JouleBudget::new(per_req * 4.0)),
+            FleetBatch::single(),
+            &cache,
+        );
         let s = r.service_ms();
         r.admit(0.0, 0.0);
         r.admit(0.0, 0.0);
@@ -436,6 +900,64 @@ mod tests {
     }
 
     #[test]
+    fn retract_after_degrade_releases_committed_energy() {
+        let cache = PlanCache::new();
+        let spec = ReplicaSpec::new(DeviceProfile::galaxy_s7(), Precision::Precise);
+        let per_req = {
+            let r = Replica::new(0, spec.clone(), None, FleetBatch::single(), &cache);
+            r.energy_per_request_j()
+        };
+        // soft threshold at 1.5 requests: the second admit trips it
+        let mut r = Replica::new(
+            0,
+            spec,
+            Some(JouleBudget::new(per_req * 3.0)),
+            FleetBatch::single(),
+            &cache,
+        );
+        let _p1 = r.admit(0.0, 0.0);
+        let p2 = r.admit(10.0, 10.0);
+        assert!(r.degraded, "second admit must trip the soft threshold");
+        // a third admit lands on the degraded fp16 path: different
+        // service/energy fingerprint than p2's
+        let p3 = r.admit(20.0, 20.0);
+        assert!(p3.energy_j < p2.energy_j);
+        // The regression: retracting p2 must succeed even though the
+        // queue tail (p3) no longer carries p2's fingerprint — the old
+        // tail-fingerprint match silently no-op'd here, leaving phantom
+        // committed joules on the budget meter forever.
+        let committed = r.energy_queued_j;
+        assert!(r.retract_last(&p2), "retract must find the degraded-era entry");
+        assert!((r.energy_queued_j - (committed - p2.energy_j)).abs() < 1e-9);
+        assert_eq!(r.in_flight(), 2);
+        assert_eq!(r.placements, 2);
+        // p1 and p3 still complete normally
+        let horizon = r.last_finish_ms().unwrap() + 1.0;
+        assert_eq!(r.collect(horizon).len(), 2);
+        assert_eq!(r.completed, 2);
+        assert!(r.energy_queued_j.abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_request_energy_bounds_every_replica() {
+        let bound = max_request_energy_j();
+        assert!(bound > 0.3 && bound < 3.0, "bound {bound} J out of plausible band");
+        let cache = PlanCache::new();
+        for device in DeviceProfile::all() {
+            for precision in [Precision::Precise, Precision::Imprecise] {
+                let r = Replica::new(
+                    0,
+                    ReplicaSpec::new(device.clone(), precision),
+                    None,
+                    FleetBatch::single(),
+                    &cache,
+                );
+                assert!(r.energy_per_request_j() <= bound + 1e-12, "{} exceeds bound", r.name);
+            }
+        }
+    }
+
+    #[test]
     fn fail_returns_orphans_and_drain_blocks_traffic() {
         let mut r = s7_precise();
         r.admit(0.0, 0.0);
@@ -445,6 +967,15 @@ mod tests {
         assert_eq!(orphans[0].anchor_ms, 0.0);
         assert!(!r.available());
         assert_eq!(r.in_flight(), 0);
+        assert_eq!(r.energy_queued_j, 0.0);
+
+        // an unflushed open batch is orphaned too
+        let mut b = s7_batching(8, 100.0);
+        b.admit(0.0, 0.0);
+        b.admit(1.0, 1.0);
+        assert_eq!(b.open_fill(), 2);
+        assert_eq!(b.fail().len(), 2);
+        assert_eq!(b.open_fill(), 0);
 
         let mut d = s7_precise();
         d.admit(0.0, 0.0);

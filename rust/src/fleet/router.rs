@@ -73,10 +73,17 @@ pub struct Candidate {
     /// Autotuned single-image service time at the replica's effective
     /// precision (ms).
     pub service_ms: f64,
-    /// Differential energy per request (J).
+    /// Predicted differential energy per request (J), amortized over
+    /// the open batch the request would join — a replica about to
+    /// flush a partially-filled batch looks cheaper, so energy-aware
+    /// placement naturally tops batches up.
     pub energy_j: f64,
     /// Requests queued or running.
     pub in_flight: usize,
+    /// Riders already accumulated in the replica's open batch.  Feeds
+    /// the amortized `energy_j` above and breaks power-of-two-choices
+    /// load ties toward the replica about to flush the fuller batch.
+    pub open_fill: usize,
 }
 
 fn min_by_score(candidates: &[Candidate], score: impl Fn(&Candidate) -> f64) -> Candidate {
@@ -95,9 +102,16 @@ fn min_by_score(candidates: &[Candidate], score: impl Fn(&Candidate) -> f64) -> 
 
 /// Stateful router: a cursor for round-robin, a seeded RNG for the
 /// sampling policies — placements are fully deterministic per seed.
+///
+/// The round-robin cursor is keyed on the *stable fleet-wide replica
+/// id*, not the index into the filtered availability list: a drain or
+/// revive mid-trace must not shift which replica each cursor value
+/// maps to (that skew was the PR-1 bug — the rotation went unbalanced
+/// whenever the candidate list changed length).
 #[derive(Debug)]
 pub struct Router {
     pub policy: Policy,
+    /// Next replica id the round-robin rotation will try to serve.
     cursor: usize,
     rng: Rng,
 }
@@ -109,14 +123,21 @@ impl Router {
 
     /// Pick a replica among the available candidates; `None` when the
     /// whole fleet is unavailable (caller sheds the request).
+    /// Candidates arrive in ascending replica-id order (the fleet
+    /// builds them by iterating its replica vector).
     pub fn place(&mut self, candidates: &[Candidate]) -> Option<usize> {
         if candidates.is_empty() {
             return None;
         }
         let chosen = match self.policy {
             Policy::RoundRobin => {
-                let c = candidates[self.cursor % candidates.len()];
-                self.cursor = self.cursor.wrapping_add(1);
+                // Smallest available id >= cursor, wrapping to the
+                // smallest id overall.
+                let c = *candidates
+                    .iter()
+                    .find(|c| c.replica >= self.cursor)
+                    .unwrap_or(&candidates[0]);
+                self.cursor = c.replica + 1;
                 c
             }
             Policy::LeastLoaded => min_by_score(candidates, |c| c.queue_wait_ms),
@@ -134,8 +155,13 @@ impl Router {
                     }
                     let (a, b) = (candidates[i], candidates[j]);
                     // "less loaded": fewer requests in flight, queue
-                    // wait as the tiebreak between equal depths
-                    let load = |c: &Candidate| (c.in_flight, c.queue_wait_ms);
+                    // wait as the tiebreak between equal depths; among
+                    // equally-loaded candidates prefer the fuller open
+                    // batch — topping it up amortizes its dispatch
+                    // overhead at no extra latency.
+                    let load = |c: &Candidate| {
+                        (c.in_flight, c.queue_wait_ms, usize::MAX - c.open_fill)
+                    };
                     if load(&b) < load(&a) {
                         b
                     } else {
@@ -153,7 +179,14 @@ mod tests {
     use super::*;
 
     fn cand(replica: usize, wait: f64, service: f64, energy: f64) -> Candidate {
-        Candidate { replica, queue_wait_ms: wait, service_ms: service, energy_j: energy, in_flight: 0 }
+        Candidate {
+            replica,
+            queue_wait_ms: wait,
+            service_ms: service,
+            energy_j: energy,
+            in_flight: 0,
+            open_fill: 0,
+        }
     }
 
     #[test]
@@ -173,6 +206,26 @@ mod tests {
         let cs = [cand(0, 0.0, 1.0, 1.0), cand(1, 0.0, 1.0, 1.0), cand(2, 0.0, 1.0, 1.0)];
         let picks: Vec<usize> = (0..6).map(|_| r.place(&cs).unwrap()).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_cursor_survives_availability_changes() {
+        // The PR-1 regression: the cursor indexed the *filtered* list,
+        // so removing a candidate shifted every later cursor->replica
+        // mapping.  Keyed on the stable id, a replica vanishing and
+        // returning must leave the rotation over the survivors intact.
+        let mut r = Router::new(Policy::RoundRobin, 0);
+        let all = [cand(0, 0.0, 1.0, 1.0), cand(1, 0.0, 1.0, 1.0), cand(2, 0.0, 1.0, 1.0)];
+        let without_1 = [all[0], all[2]];
+        assert_eq!(r.place(&all), Some(0));
+        // replica 1 drains: rotation continues 2, 0, 2, 0 ...
+        assert_eq!(r.place(&without_1), Some(2));
+        assert_eq!(r.place(&without_1), Some(0));
+        assert_eq!(r.place(&without_1), Some(2));
+        // replica 1 revives: the wrap lands on 0, then 1 rejoins in order
+        assert_eq!(r.place(&all), Some(0));
+        assert_eq!(r.place(&all), Some(1));
+        assert_eq!(r.place(&all), Some(2));
     }
 
     #[test]
@@ -209,6 +262,22 @@ mod tests {
         // the heaviest replica loses every two-way comparison (the two
         // samples are always distinct), so it can never be picked
         assert!(!a.contains(&2));
+    }
+
+    #[test]
+    fn power_of_two_breaks_load_ties_toward_fuller_open_batch() {
+        // Equal depth and wait: the candidate whose open batch is
+        // fuller wins the two-way comparison (its dispatch amortizes
+        // better), so with two candidates it is picked every time.
+        let mut a = cand(0, 10.0, 1.0, 1.0);
+        let mut b = cand(1, 10.0, 1.0, 1.0);
+        a.open_fill = 1;
+        b.open_fill = 3;
+        let cs = [a, b];
+        let mut r = Router::new(Policy::PowerOfTwoChoices, 3);
+        for _ in 0..10 {
+            assert_eq!(r.place(&cs), Some(1));
+        }
     }
 
     #[test]

@@ -16,9 +16,10 @@
 //! - **Layer 3.5 ([`fleet`])**: the heterogeneous device fleet — N
 //!   simulated Adreno replicas (530/430/330 at fp32/fp16) behind one
 //!   dispatch API, with pluggable placement policies (`RoundRobin`,
-//!   `LeastLoaded`, `EnergyAware`, `PowerOfTwoChoices`), replica
-//!   draining / failure injection with automatic re-routing, and
-//!   per-replica joule budgets.  The paper's per-device autotuning
+//!   `LeastLoaded`, `EnergyAware`, `PowerOfTwoChoices`), per-replica
+//!   dynamic batching (amortizing the per-dispatch overhead across
+//!   multi-image dispatches), replica draining / failure injection
+//!   with automatic re-routing, and per-replica joule budgets.  The paper's per-device autotuning
 //!   results are exactly what make routing non-trivial: each device has
 //!   its own optimal granularity plan (Table I), hence its own latency
 //!   (Table VI) and joules per image (Table V), so *where* a request

@@ -12,9 +12,10 @@
 //!   inferences through the PJRT runtime.
 //! - `agreement [--count N]` — precise-vs-imprecise top-1 agreement
 //!   (§IV-B's 10 000-image experiment, on the synthetic corpus).
-//! - `fleet [--spec S] [--policy P]` — route a synthetic trace across a
-//!   simulated heterogeneous device fleet (Layer 3.5) and report
-//!   per-replica latency/energy/placements.
+//! - `fleet [--spec S] [--policy P] [--batch B]` — route a synthetic
+//!   trace across a simulated heterogeneous device fleet (Layer 3.5)
+//!   and report per-replica latency/energy/placements; `--batch` > 1
+//!   turns on per-replica dynamic batching.
 //! - `serve [--addr HOST:PORT] [--fleet SPEC]` — start the JSON-lines
 //!   TCP server, optionally with a fleet behind it.
 //! - `info` — artifact/manifest/weight summary.
@@ -47,12 +48,16 @@ COMMANDS:
   fleet       simulate fleet routing          [--spec S] [--policy rr|least|energy|p2c]
                                               [--requests N] [--rate R] [--seed S]
                                               [--budget-j J] [--burst]
+                                              [--batch B] [--batch-wait-ms W]
   serve       start the TCP JSON-lines server [--addr HOST:PORT] [--config FILE]
                                               [--fleet SPEC] [--fleet-policy P]
+                                              [--fleet-batch B] [--fleet-batch-wait-ms W]
   info        artifact & model summary
 
 Fleet specs are comma-separated [COUNTx]DEVICE[@fp32|fp16] atoms, e.g.
-2xs7,1x6p@fp16,n5 (also via MCN_FLEET / MCN_FLEET_POLICY env).
+2xs7,1x6p@fp16,n5 (also via MCN_FLEET / MCN_FLEET_POLICY /
+MCN_FLEET_BATCH env).  --batch > 1 turns on per-replica dynamic
+batching: arrivals accumulate into amortized multi-image dispatches.
 
 Common options: --config FILE (JSON), --artifacts DIR";
 
@@ -83,7 +88,10 @@ fn app_config(args: &Args) -> Result<AppConfig> {
     }
     if let Some(spec) = args.get("fleet") {
         let budget = args.get_f64_opt("fleet-budget-j").map_err(|e| anyhow::anyhow!(e))?;
-        cfg.fleet = Some(config::fleet_from(spec, args.get("fleet-policy"), budget)?);
+        let batch = args.get_usize_opt("fleet-batch").map_err(|e| anyhow::anyhow!(e))?;
+        let wait = args.get_f64_opt("fleet-batch-wait-ms").map_err(|e| anyhow::anyhow!(e))?;
+        cfg.fleet =
+            Some(config::fleet_from(spec, args.get("fleet-policy"), budget, batch, wait)?);
     }
     Ok(cfg)
 }
@@ -236,7 +244,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let spec = args.get_or("spec", "2xs7,2x6p,2xn5");
     let budget = args.get_f64_opt("budget-j").map_err(|e| anyhow::anyhow!(e))?;
     let seed = args.get_u64("seed", 77).map_err(|e| anyhow::anyhow!(e))?;
-    let cfg = config::fleet_from(spec, args.get("policy"), budget)?.with_seed(seed);
+    let batch = args.get_usize_opt("batch").map_err(|e| anyhow::anyhow!(e))?;
+    let wait = args.get_f64_opt("batch-wait-ms").map_err(|e| anyhow::anyhow!(e))?;
+    let cfg = config::fleet_from(spec, args.get("policy"), budget, batch, wait)?.with_seed(seed);
     let n = args.get_usize("requests", 240).map_err(|e| anyhow::anyhow!(e))?;
     let rate = args.get_f64("rate", 8.0).map_err(|e| anyhow::anyhow!(e))?;
     let arrival = if args.flag("burst") {
@@ -246,8 +256,13 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     };
     // one seed drives both the arrival trace and the router RNG
     let trace = Trace::generate(n, arrival, 0.0, seed);
+    let batching = if cfg.batch.enabled() {
+        format!(", batch<={} wait {} ms", cfg.batch.max_batch, cfg.batch.max_wait_ms)
+    } else {
+        String::new()
+    };
     println!(
-        "fleet '{spec}' x {} replicas, {} arrivals at {:.1} req/s (virtual time)\n",
+        "fleet '{spec}' x {} replicas, {} arrivals at {:.1} req/s (virtual time){batching}\n",
         cfg.replicas.len(),
         n,
         trace.offered_rate()

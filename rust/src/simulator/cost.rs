@@ -128,6 +128,51 @@ pub fn aux_layer_time(kind: &LayerKind, mode: RunMode, device: &DeviceProfile) -
     }
 }
 
+/// Fixed cost of one whole-network *dispatch* (ms): the host-side setup
+/// ([`GpuModel::dispatch_setup_ms`] — JNI crossing, allocation
+/// rebinding, command submission) plus the per-layer kernel-launch
+/// floor.  Every one of these is paid once per dispatch regardless of
+/// how many images ride in it, so a batch of `b` images costs
+/// `network_dispatch_overhead_ms + b * network_marginal_time_ms`
+/// instead of `b` times the single-image total — the amortization the
+/// fleet's per-replica batcher exploits.  Sequential runs have no GPU
+/// dispatch, hence no overhead term.
+pub fn network_dispatch_overhead_ms(
+    net: &SqueezeNet,
+    mode: RunMode,
+    device: &DeviceProfile,
+) -> f64 {
+    match mode {
+        RunMode::Sequential => 0.0,
+        RunMode::Parallel(_) => {
+            // Every layer (conv and aux alike) is one kernel launch on
+            // the parallel path; see `conv_gpu_time` / `aux_layer_time`.
+            let launches = net.layers.len() as f64;
+            device.gpu.dispatch_setup_ms + launches * device.gpu.kernel_launch_us / 1e3
+        }
+    }
+}
+
+/// Per-image marginal cost (ms): [`network_time`] minus the per-layer
+/// kernel-launch floor that [`network_dispatch_overhead_ms`] charges
+/// once per dispatch.  Compute, memory traffic, and per-wave scheduling
+/// all scale with the number of images; only the launch floor and the
+/// host setup do not.
+pub fn network_marginal_time_ms(
+    net: &SqueezeNet,
+    mode: RunMode,
+    device: &DeviceProfile,
+    granularity: &dyn Fn(&ConvSpec) -> usize,
+) -> f64 {
+    let total = network_time(net, mode, device, granularity);
+    match mode {
+        RunMode::Sequential => total,
+        RunMode::Parallel(_) => {
+            total - net.layers.len() as f64 * device.gpu.kernel_launch_us / 1e3
+        }
+    }
+}
+
 /// Total network time (ms) for a run mode, with a per-layer granularity
 /// lookup for the parallel modes (`granularity(layer) -> g`).
 pub fn network_time(
@@ -210,6 +255,57 @@ mod tests {
             let i = conv_gpu_time(&spec, 4, Precision::Imprecise, &device.gpu).total_ms();
             assert!(i < p, "{}", device.name);
         }
+    }
+
+    #[test]
+    fn dispatch_overhead_splits_cleanly_from_marginal_cost() {
+        // overhead + marginal must reconstruct the single-image dispatch
+        // cost (network_time + host setup), and a batch of b images must
+        // be strictly cheaper than b single-image dispatches.
+        let net = SqueezeNet::v1_0();
+        for device in DeviceProfile::all() {
+            for precision in [Precision::Precise, Precision::Imprecise] {
+                let mode = RunMode::Parallel(precision);
+                let plan = super::super::autotune::autotune_network(&net, precision, &device);
+                let g = |spec: &ConvSpec| plan.optimal_g(&spec.name);
+                let total = network_time(&net, mode, &device, &g);
+                let overhead = network_dispatch_overhead_ms(&net, mode, &device);
+                let marginal = network_marginal_time_ms(&net, mode, &device, &g);
+                assert!(overhead > 0.0, "{}: overhead must be positive", device.name);
+                assert!(marginal > 0.0, "{}: marginal must be positive", device.name);
+                assert!(
+                    (overhead + marginal - (total + device.gpu.dispatch_setup_ms)).abs() < 1e-9,
+                    "{}: overhead {overhead} + marginal {marginal} != total {total} + setup",
+                    device.name
+                );
+                // Independent check of the launch accounting: pricing
+                // the network on a zero-launch-cost device must equal
+                // the marginal exactly — this fails if the overhead
+                // split ever disagrees with network_time about which
+                // layers pay a kernel launch.
+                let mut free_launch = device.clone();
+                free_launch.gpu.kernel_launch_us = 0.0;
+                let marginal_direct = network_time(&net, mode, &free_launch, &g);
+                assert!(
+                    (marginal - marginal_direct).abs() < 1e-9,
+                    "{}: marginal {marginal} != zero-launch network time {marginal_direct}",
+                    device.name
+                );
+                let b = 4.0;
+                assert!(
+                    overhead + b * marginal < b * (overhead + marginal),
+                    "{}: batching must amortize the dispatch overhead",
+                    device.name
+                );
+            }
+        }
+        // Sequential runs have no dispatch, so no overhead to amortize.
+        let d = DeviceProfile::nexus_5();
+        let g1 = |_: &ConvSpec| 1;
+        assert_eq!(network_dispatch_overhead_ms(&net, RunMode::Sequential, &d), 0.0);
+        let seq = network_time(&net, RunMode::Sequential, &d, &g1);
+        let seq_marginal = network_marginal_time_ms(&net, RunMode::Sequential, &d, &g1);
+        assert!((seq - seq_marginal).abs() < 1e-9);
     }
 
     #[test]

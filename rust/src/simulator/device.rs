@@ -68,6 +68,12 @@ pub struct GpuModel {
     pub dispatch_us_per_wave: f64,
     /// Threads per wavefront.
     pub wave_size: f64,
+    /// Host-side cost of one whole-network dispatch (ms): JNI crossing,
+    /// RenderScript allocation rebinding, command-buffer submission.
+    /// Paid once per *dispatch*, not per image — batching `b` images
+    /// into one dispatch amortizes it (the CNNdroid observation that
+    /// per-launch overhead dominates small mobile-GPU workloads).
+    pub dispatch_setup_ms: f64,
 }
 
 impl GpuModel {
@@ -165,6 +171,7 @@ impl DeviceProfile {
                 kernel_launch_us: 60.0,
                 dispatch_us_per_wave: 0.030,
                 wave_size: 64.0,
+                dispatch_setup_ms: 18.0,
             },
             cpu: SeqCpuModel { clock_ghz: 2.15, cycles_per_mac: 30.7 },
             power: PowerModel {
@@ -198,6 +205,7 @@ impl DeviceProfile {
                 kernel_launch_us: 70.0,
                 dispatch_us_per_wave: 0.035,
                 wave_size: 64.0,
+                dispatch_setup_ms: 22.0,
             },
             cpu: SeqCpuModel { clock_ghz: 1.96, cycles_per_mac: 39.3 },
             power: PowerModel {
@@ -231,6 +239,7 @@ impl DeviceProfile {
                 kernel_launch_us: 90.0,
                 dispatch_us_per_wave: 0.045,
                 wave_size: 32.0,
+                dispatch_setup_ms: 30.0,
             },
             cpu: SeqCpuModel { clock_ghz: 2.27, cycles_per_mac: 116.0 },
             power: PowerModel {
@@ -284,6 +293,17 @@ mod tests {
         assert_eq!(gpu.occupancy_threads(1e9), 1.0);
         assert_eq!(gpu.occupancy_registers(1.0), 1.0);
         assert!(gpu.occupancy_registers(32.0) < gpu.occupancy_registers(8.0));
+    }
+
+    #[test]
+    fn dispatch_setup_tracks_device_generation() {
+        // Host-side per-dispatch setup is positive everywhere and worst
+        // on the oldest SoC (slowest driver/JNI path).
+        let s7 = DeviceProfile::galaxy_s7().gpu.dispatch_setup_ms;
+        let p6 = DeviceProfile::nexus_6p().gpu.dispatch_setup_ms;
+        let n5 = DeviceProfile::nexus_5().gpu.dispatch_setup_ms;
+        assert!(s7 > 0.0 && p6 > 0.0 && n5 > 0.0);
+        assert!(n5 > p6 && p6 > s7);
     }
 
     #[test]

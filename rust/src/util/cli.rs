@@ -78,6 +78,17 @@ impl Args {
         }
     }
 
+    /// Optional integer: `Ok(None)` when absent, error only on a bad value.
+    pub fn get_usize_opt(&self, name: &str) -> Result<Option<usize>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
     /// Optional number: `Ok(None)` when absent, error only on a bad value.
     pub fn get_f64_opt(&self, name: &str) -> Result<Option<f64>, String> {
         match self.get(name) {
@@ -140,5 +151,14 @@ mod tests {
         assert_eq!(a.get_f64_opt("missing").unwrap(), None);
         let b = parse(&["--budget-j", "nope"]);
         assert!(b.get_f64_opt("budget-j").is_err());
+    }
+
+    #[test]
+    fn optional_integer() {
+        let a = parse(&["--fleet-batch", "8"]);
+        assert_eq!(a.get_usize_opt("fleet-batch").unwrap(), Some(8));
+        assert_eq!(a.get_usize_opt("missing").unwrap(), None);
+        let b = parse(&["--fleet-batch", "4.5"]);
+        assert!(b.get_usize_opt("fleet-batch").is_err());
     }
 }
