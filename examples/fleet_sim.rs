@@ -10,16 +10,98 @@
 //! cargo run --release --example fleet_sim -- --inject            # kill r0 mid-trace
 //! cargo run --release --example fleet_sim -- --budget-j 40       # joule budgets
 //! cargo run --release --example fleet_sim -- --batch 8 --rate 24 # amortized dispatches
+//! cargo run --release --example fleet_sim -- \
+//!     --autoscale "slo=800,pool=3xn5@fp16+2x6p@fp16,max=6"       # traffic ramp + spike
 //! ```
+//!
+//! `--autoscale KV` switches to the closed-loop scenario: a calm ->
+//! spike -> calm traffic ramp through an elastic fleet that starts
+//! from `--spec` (default one N5@fp16), scales up out of the warm
+//! pool when the spike breaches the SLO, parks replicas again in the
+//! tail, and is compared against a statically over-provisioned fleet
+//! on total joules (idle baseline rails metered on both sides).
 
 use anyhow::Result;
 use mobile_convnet::config::{self, DEFAULT_FLEET_BATCH_WAIT_MS};
 use mobile_convnet::coordinator::trace::{Arrival, Trace};
-use mobile_convnet::fleet::{run_trace, Fleet, FleetConfig, HealthEvent, Policy};
+use mobile_convnet::fleet::{
+    run_trace, AutoscaleConfig, Fleet, FleetConfig, HealthEvent, Policy,
+};
 use mobile_convnet::util::cli::Args;
+
+/// The `--autoscale` scenario: traffic ramp + spike against an elastic
+/// fleet, with a static over-provisioned fleet as the joule baseline.
+fn autoscale_scenario(args: &Args, kv: &str) -> Result<()> {
+    let autoscale = AutoscaleConfig::parse(kv).map_err(|e| anyhow::anyhow!(e))?;
+    let spec = args.get_or("spec", "1xn5@fp16");
+    let seed = args.get_u64("seed", 77).map_err(|e| anyhow::anyhow!(e))?;
+    let rate = args.get_f64("rate", 2.0).map_err(|e| anyhow::anyhow!(e))?;
+    let spike = args.get_f64("spike-rate", rate * 8.0).map_err(|e| anyhow::anyhow!(e))?;
+    let trace = Trace::phases(
+        &[
+            (30, Arrival::Poisson { rate_per_s: rate }),
+            (140, Arrival::Poisson { rate_per_s: spike }),
+            (150, Arrival::Poisson { rate_per_s: rate }),
+        ],
+        0.0,
+        seed,
+    );
+    let n = trace.entries.len() as u64;
+    println!(
+        "ramp+spike: {} arrivals ({rate:.1} -> {spike:.1} -> {rate:.1} req/s) over {:.1} s, \
+         slo p95 {} ms\n",
+        n,
+        trace.span().as_secs_f64(),
+        autoscale.slo_p95_ms
+    );
+
+    let pool_spec: Vec<String> = autoscale
+        .warm_pool
+        .iter()
+        .map(|s| format!("{}@{}", s.device.id, s.precision.label()))
+        .collect();
+    let elastic_cfg = config::fleet_from(spec, args.get("policy"), None, None, None)?
+        .with_autoscale(autoscale)
+        .with_seed(seed);
+    let fleet = Fleet::new(elastic_cfg);
+    let report = run_trace(&fleet, &trace, &[]);
+    println!("autoscaled (starts at '{spec}'):\n{}", report.render());
+    let asc = fleet.autoscale_report().expect("autoscaler is on");
+    println!("{}", asc.render());
+
+    // Static baseline: initial spec plus the whole warm pool, on from
+    // the first virtual millisecond.
+    let static_spec = format!("{spec},{}", pool_spec.join(","));
+    let static_cfg = config::fleet_from(&static_spec, args.get("policy"), None, None, None)?
+        .with_idle_power(true)
+        .with_seed(seed);
+    let static_report = run_trace(&Fleet::new(static_cfg), &trace, &[]);
+    println!("static over-provisioned ('{static_spec}'):\n{}", static_report.render());
+
+    println!(
+        "comparison: autoscaled {:.1} J (p95 {:.0} ms, shed {}) vs static {:.1} J \
+         (p95 {:.0} ms) -> {:+.1}% energy",
+        report.total_energy_j,
+        report.p95_ms.unwrap_or(0.0),
+        report.shed,
+        static_report.total_energy_j,
+        static_report.p95_ms.unwrap_or(0.0),
+        (report.total_energy_j / static_report.total_energy_j - 1.0) * 100.0,
+    );
+    assert_eq!(report.completed + report.shed + report.lost, n, "conservation");
+    assert!(
+        report.total_energy_j < static_report.total_energy_j,
+        "claim: the elastic fleet must undercut static provisioning on joules"
+    );
+    println!("claim check: autoscaled < static on total joules ... OK");
+    Ok(())
+}
 
 fn main() -> Result<()> {
     let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    if let Some(kv) = args.get("autoscale") {
+        return autoscale_scenario(&args, kv);
+    }
     let spec = args.get_or("spec", "2xs7,2x6p,2xn5");
     let n = args.get_usize("requests", 240).map_err(|e| anyhow::anyhow!(e))?;
     let rate = args.get_f64("rate", 8.0).map_err(|e| anyhow::anyhow!(e))?;

@@ -1,0 +1,163 @@
+//! Bench for **closed-loop fleet autoscaling**: the claim under test
+//! is the PR-3 headline — on a bursty ramp-and-spike trace, a fleet
+//! that starts from one cheap replica and autoscales against a p95 SLO
+//! finishes with *strictly fewer total joules* (service + idle
+//! baseline rails) than a statically over-provisioned topology sized
+//! for the peak, while still meeting the SLO.
+//!
+//! Everything runs in virtual time, so every asserted number is
+//! deterministic across machines — these metrics feed the CI
+//! regression gate via `BENCH_OUT_DIR` (see `bench_gate`).
+
+use mobile_convnet::coordinator::trace::{Arrival, Trace};
+use mobile_convnet::fleet::{
+    autoscaler, run_trace, AutoscaleConfig, Fleet, FleetConfig, Policy,
+};
+use mobile_convnet::util::bench::{write_json_summary, Bencher};
+
+/// SLO the control loop defends.  The front-door gate caps queue depth
+/// at 2 riders per active replica, so end-to-end latency is bounded by
+/// ~3 service times (< 750 ms on the slowest fp16 device).
+const SLO_P95_MS: f64 = 800.0;
+
+fn spike_trace() -> Trace {
+    // calm -> 8x spike -> long calm tail (the tail is long enough for
+    // the control loop's recent-latency window to clear the spike and
+    // park the extra replicas again).
+    Trace::phases(
+        &[
+            (30, Arrival::Poisson { rate_per_s: 2.0 }),
+            (140, Arrival::Poisson { rate_per_s: 16.0 }),
+            (150, Arrival::Poisson { rate_per_s: 2.0 }),
+        ],
+        0.0,
+        42,
+    )
+}
+
+fn autoscale_cfg() -> AutoscaleConfig {
+    let mut a = AutoscaleConfig::new(SLO_P95_MS)
+        .with_warm_pool(autoscaler::parse_pool("3xn5@fp16,2x6p@fp16").unwrap());
+    a.min_replicas = 1;
+    a.max_replicas = 6;
+    a.tick_ms = 250.0;
+    a.scale_up_after = 1;
+    a.scale_down_after = 4;
+    a.cooldown_ticks = 1;
+    a.queue_per_replica = 2;
+    a
+}
+
+fn main() {
+    let policy = Policy::EnergyAware { lambda_j_per_ms: Policy::DEFAULT_LAMBDA_J_PER_MS };
+    let trace = spike_trace();
+    let n = trace.entries.len() as u64;
+    println!(
+        "ramp+spike trace: {} arrivals over {:.1} s (peak 16 req/s), slo p95 {} ms\n",
+        n,
+        trace.span().as_secs_f64(),
+        SLO_P95_MS
+    );
+
+    // Elastic fleet: one cheap N5@fp16, warm pool of 3xN5@fp16 +
+    // 2x6P@fp16, closed-loop control.
+    let autoscaled = {
+        let cfg = FleetConfig::parse_spec("1xn5@fp16", policy)
+            .unwrap()
+            .with_autoscale(autoscale_cfg())
+            .with_seed(42);
+        let fleet = Fleet::new(cfg);
+        let report = run_trace(&fleet, &trace, &[]);
+        println!("autoscaled:\n{}", report.render());
+        let asc = fleet.autoscale_report().expect("autoscaler on");
+        println!("{}", asc.render());
+        (report, asc)
+    };
+
+    // Static comparison: the same capacity the autoscaler can reach,
+    // provisioned for the whole trace (idle rails metered equally).
+    let static_fleet = {
+        let cfg = FleetConfig::parse_spec("4xn5@fp16,2x6p@fp16", policy)
+            .unwrap()
+            .with_idle_power(true)
+            .with_seed(42);
+        let report = run_trace(&Fleet::new(cfg), &trace, &[]);
+        println!("static over-provisioned:\n{}", report.render());
+        report
+    };
+
+    let (auto_report, asc) = &autoscaled;
+
+    // Conservation on both sides.
+    assert_eq!(
+        auto_report.completed + auto_report.shed + auto_report.lost,
+        n,
+        "autoscaled conservation: {auto_report:?}"
+    );
+    assert_eq!(auto_report.lost, 0);
+    assert_eq!(static_fleet.completed, n, "over-provisioned fleet completes everything");
+    assert_eq!(static_fleet.shed, 0);
+
+    // The elastic fleet actually flexed: up during the spike, down in
+    // the tail.
+    assert!(asc.scale_ups >= 2, "spike must provision replicas: {asc:?}");
+    assert!(asc.scale_downs >= 1, "tail must park replicas: {asc:?}");
+
+    // SLO: both fleets must hold the p95 target; the autoscaled one
+    // may shed a bounded sliver at the gate during the ramp, which is
+    // the mechanism that keeps accepted latency inside the SLO.
+    let auto_p95 = auto_report.p95_ms.expect("completions exist");
+    let static_p95 = static_fleet.p95_ms.expect("completions exist");
+    assert!(auto_p95 <= SLO_P95_MS, "autoscaled p95 {auto_p95:.1} ms breaches the SLO");
+    assert!(static_p95 <= SLO_P95_MS, "static p95 {static_p95:.1} ms breaches the SLO");
+    assert!(
+        auto_report.shed <= n * 15 / 100,
+        "gate shed {} of {n} — the SLO may not be held by dropping the load",
+        auto_report.shed
+    );
+
+    // The headline: strictly fewer total joules than over-provisioning
+    // (the static fleet pays six baseline rails for the whole span).
+    assert!(
+        auto_report.total_energy_j < static_fleet.total_energy_j,
+        "autoscaled {:.1} J must be strictly below static {:.1} J",
+        auto_report.total_energy_j,
+        static_fleet.total_energy_j
+    );
+    println!(
+        "claim check: autoscaled {:.1} J (p95 {:.0} ms, shed {}) < static {:.1} J \
+         (p95 {:.0} ms) at slo {} ms ... OK",
+        auto_report.total_energy_j,
+        auto_p95,
+        auto_report.shed,
+        static_fleet.total_energy_j,
+        static_p95,
+        SLO_P95_MS
+    );
+
+    // Deterministic metrics for the CI regression gate (lower = better).
+    write_json_summary(
+        "fleet_autoscale",
+        &[
+            ("autoscaled_p95_ms", auto_p95),
+            ("autoscaled_total_j", auto_report.total_energy_j),
+            ("autoscaled_shed", auto_report.shed as f64),
+            ("static_total_j", static_fleet.total_energy_j),
+            ("autoscaled_over_static_j", auto_report.total_energy_j / static_fleet.total_energy_j),
+        ],
+    )
+    .expect("bench summary write");
+
+    // Control-loop hot paths: tick + gated dispatch cost.
+    let mut b = Bencher::from_env();
+    let gated = Fleet::new(
+        FleetConfig::parse_spec("1xn5@fp16", policy)
+            .unwrap()
+            .with_autoscale(autoscale_cfg()),
+    );
+    let mut t = 0.0f64;
+    b.bench("fleet/dispatch_autoscaled", || {
+        t += 10.0;
+        gated.dispatch(t)
+    });
+}

@@ -16,7 +16,7 @@
 use mobile_convnet::config::DEFAULT_FLEET_BATCH_WAIT_MS;
 use mobile_convnet::coordinator::trace::{Arrival, Trace};
 use mobile_convnet::fleet::{run_trace, Fleet, FleetConfig, FleetReport, Policy};
-use mobile_convnet::util::bench::Bencher;
+use mobile_convnet::util::bench::{write_json_summary, Bencher};
 
 fn main() {
     const SPEC: &str = "2xs7,2x6p,2xn5";
@@ -91,12 +91,16 @@ fn main() {
         }
         run_trace(&Fleet::new(cfg), &heavy, &[])
     };
+    let mut ea_batched = None;
     for policy in [
         Policy::RoundRobin,
         Policy::EnergyAware { lambda_j_per_ms: Policy::DEFAULT_LAMBDA_J_PER_MS },
     ] {
         let unbatched = run(policy, false);
         let batched = run(policy, true);
+        if matches!(policy, Policy::EnergyAware { .. }) {
+            ea_batched = Some(batched.clone());
+        }
         println!(
             "{:<16} energy {:>9.1} J -> {:>9.1} J ({:+.1}%)  throughput {:>6.1} -> {:>6.1} req/s",
             unbatched.policy,
@@ -124,6 +128,28 @@ fn main() {
         );
     }
     println!("claim check: batching lowers energy at no throughput cost ... OK");
+
+    // Deterministic metrics for the CI regression gate (lower =
+    // better).  A missing value must panic, not publish a perfect 0.0
+    // — a zero would sail through the gate as an "improvement".
+    let ea_batched = ea_batched.expect("the batched loop ran EnergyAware");
+    let p95 = |label: &str| {
+        results
+            .iter()
+            .find(|r| r.policy == label)
+            .and_then(|r| r.p95_ms)
+            .expect("every policy completed requests")
+    };
+    write_json_summary(
+        "fleet_routing",
+        &[
+            ("round_robin_total_j", energy("round-robin")),
+            ("energy_aware_total_j", energy("energy-aware")),
+            ("energy_aware_p95_ms", p95("energy-aware")),
+            ("energy_aware_batched_total_j", ea_batched.total_energy_j),
+        ],
+    )
+    .expect("bench summary write");
 
     // Dispatch hot path: routing cost per request, fleet construction.
     let mut b = Bencher::from_env();

@@ -2,7 +2,7 @@
 //! and speedups (sequential / precise parallel / imprecise parallel).
 
 use mobile_convnet::simulator::tables;
-use mobile_convnet::util::bench::Bencher;
+use mobile_convnet::util::bench::{write_json_summary, Bencher};
 
 fn main() {
     println!("{}", tables::render_table_vi());
@@ -28,6 +28,24 @@ fn main() {
     let by = |name: &str| rows.iter().find(|r| r.device == name).unwrap().precise_speedup();
     assert!(by("Nexus 5") > by("Nexus 6P") && by("Nexus 6P") > by("Galaxy S7"));
     println!("claim check: speedup ordering + <250 ms imprecise totals ... OK");
+
+    // Deterministic per-device totals for the CI regression gate
+    // (lower = better: a cost-model regression shows up here first).
+    // A missing row must panic, not publish a perfect 0.0 that the
+    // gate would read as an improvement.
+    let ms = |name: &str, f: fn(&tables::TableVIRow) -> f64| {
+        rows.iter().find(|r| r.device == name).map(f).expect("device row exists")
+    };
+    write_json_summary(
+        "table6_total_time",
+        &[
+            ("s7_precise_ms", ms("Galaxy S7", |r| r.precise_ms)),
+            ("s7_imprecise_ms", ms("Galaxy S7", |r| r.imprecise_ms)),
+            ("6p_imprecise_ms", ms("Nexus 6P", |r| r.imprecise_ms)),
+            ("n5_imprecise_ms", ms("Nexus 5", |r| r.imprecise_ms)),
+        ],
+    )
+    .expect("bench summary write");
 
     let mut b = Bencher::from_env();
     b.bench("table_vi/generate", tables::table_vi);

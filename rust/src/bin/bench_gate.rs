@@ -1,0 +1,300 @@
+//! CI bench-regression gate.
+//!
+//! The claim-check benches publish deterministic virtual-time metrics
+//! (simulated p95 latency, joules) as `$BENCH_OUT_DIR/<bench>.json`
+//! via [`write_json_summary`].  This binary compares them against the
+//! checked-in `BENCH_BASELINE.json` and fails (exit 1) when any gated
+//! metric regressed by more than the baseline's `tolerance_frac`
+//! (default 10%).  Every gated metric is lower-is-better.
+//!
+//! ```sh
+//! BENCH_OUT_DIR=bench_out cargo bench --bench fleet_autoscale
+//! cargo run --bin bench_gate -- --baseline ../BENCH_BASELINE.json --bench-out bench_out
+//! cargo run --bin bench_gate -- --update   # rewrite the baseline from bench_out
+//! ```
+//!
+//! After an intentional perf change, tighten the baseline with
+//! `--update` and commit the result.
+//!
+//! [`write_json_summary`]: mobile_convnet::util::bench::write_json_summary
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::process::ExitCode;
+
+use mobile_convnet::util::cli::Args;
+use mobile_convnet::util::json::Json;
+
+const DEFAULT_TOLERANCE_FRAC: f64 = 0.10;
+
+/// Outcome of gating one metric.
+#[derive(Debug, Clone, PartialEq)]
+enum Verdict {
+    /// Within tolerance of the baseline (delta fraction attached).
+    Ok(f64),
+    /// Regressed beyond tolerance (delta fraction attached).
+    Regressed(f64),
+    /// Present in the baseline but absent from the bench output.
+    Missing,
+}
+
+/// Compare current metrics against the baseline.  Returns one row per
+/// *baseline* metric (the baseline defines what is gated); metrics
+/// only present in the current run are ungated additions.
+fn gate(
+    baseline: &BTreeMap<String, f64>,
+    current: &BTreeMap<String, f64>,
+    tolerance_frac: f64,
+) -> Vec<(String, Verdict)> {
+    baseline
+        .iter()
+        .map(|(key, &base)| {
+            let verdict = match current.get(key) {
+                None => Verdict::Missing,
+                Some(&now) => {
+                    // lower-is-better; guard the degenerate zero base
+                    let delta = if base.abs() < 1e-12 { now } else { (now - base) / base };
+                    if delta > tolerance_frac {
+                        Verdict::Regressed(delta)
+                    } else {
+                        Verdict::Ok(delta)
+                    }
+                }
+            };
+            (key.clone(), verdict)
+        })
+        .collect()
+}
+
+/// Flatten one bench summary (`{"bench": ..., "metrics": {...}}`) into
+/// `bench/metric -> value` entries.
+fn collect_summary(v: &Json, into: &mut BTreeMap<String, f64>) -> Result<(), String> {
+    let bench = v
+        .get("bench")
+        .and_then(Json::as_str)
+        .ok_or("summary missing 'bench'")?
+        .to_string();
+    let metrics = v.get("metrics").ok_or("summary missing 'metrics'")?;
+    let Json::Object(pairs) = metrics else {
+        return Err("'metrics' must be an object".into());
+    };
+    for (k, val) in pairs {
+        let n = val.as_f64().ok_or_else(|| format!("metric '{k}' is not a number"))?;
+        into.insert(format!("{bench}/{k}"), n);
+    }
+    Ok(())
+}
+
+fn read_bench_out(dir: &Path) -> Result<BTreeMap<String, f64>, String> {
+    let mut current = BTreeMap::new();
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| format!("reading bench output dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let path = entry.map_err(|e| format!("{e}"))?.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| format!("parsing {}: {e}", path.display()))?;
+        collect_summary(&v, &mut current).map_err(|e| format!("{}: {e}", path.display()))?;
+    }
+    Ok(current)
+}
+
+fn read_baseline(path: &Path) -> Result<(f64, BTreeMap<String, f64>), String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("reading baseline {}: {e}", path.display()))?;
+    let v = Json::parse(&text).map_err(|e| format!("parsing {}: {e}", path.display()))?;
+    let tol = v
+        .get("tolerance_frac")
+        .and_then(Json::as_f64)
+        .unwrap_or(DEFAULT_TOLERANCE_FRAC);
+    let mut metrics = BTreeMap::new();
+    if let Some(Json::Object(pairs)) = v.get("metrics") {
+        for (k, val) in pairs {
+            let n = val
+                .as_f64()
+                .ok_or_else(|| format!("baseline metric '{k}' is not a number"))?;
+            metrics.insert(k.clone(), n);
+        }
+    }
+    Ok((tol, metrics))
+}
+
+/// Rewrite the baseline with fresh metrics.  Top-level keys other than
+/// `metrics` (the `_note`, `tolerance_frac`, anything an operator
+/// added) are carried over from the existing file, so `--update` never
+/// strips the baseline's documentation.
+fn write_baseline(path: &Path, metrics: &BTreeMap<String, f64>) -> Result<(), String> {
+    let mut pairs: Vec<(String, Json)> = match std::fs::read_to_string(path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(Json::Object(existing)) => {
+                existing.into_iter().filter(|(k, _)| k != "metrics").collect()
+            }
+            _ => Vec::new(),
+        },
+        Err(_) => Vec::new(),
+    };
+    if !pairs.iter().any(|(k, _)| k == "tolerance_frac") {
+        pairs.push(("tolerance_frac".to_string(), Json::num(DEFAULT_TOLERANCE_FRAC)));
+    }
+    pairs.push((
+        "metrics".to_string(),
+        Json::Object(metrics.iter().map(|(k, &v)| (k.clone(), Json::num(v))).collect()),
+    ));
+    let json = Json::Object(pairs);
+    std::fs::write(path, format!("{json}\n"))
+        .map_err(|e| format!("writing baseline {}: {e}", path.display()))
+}
+
+fn run() -> Result<bool, String> {
+    let args = Args::from_env()?;
+    let baseline_path = args.get_or("baseline", "../BENCH_BASELINE.json").to_string();
+    let bench_out = args.get_or("bench-out", "bench_out").to_string();
+    let current = read_bench_out(Path::new(&bench_out))?;
+    if current.is_empty() {
+        return Err(format!(
+            "no bench summaries in {bench_out}/ — run the benches with BENCH_OUT_DIR set first"
+        ));
+    }
+    if args.flag("update") {
+        write_baseline(Path::new(&baseline_path), &current)?;
+        println!("baseline {baseline_path} rewritten with {} metrics", current.len());
+        return Ok(true);
+    }
+    let (tol, baseline) = read_baseline(Path::new(&baseline_path))?;
+    if baseline.is_empty() {
+        return Err(format!("baseline {baseline_path} gates no metrics"));
+    }
+    let rows = gate(&baseline, &current, tol);
+    println!(
+        "bench gate: {} metrics, tolerance {:.0}% (lower is better)",
+        rows.len(),
+        tol * 100.0
+    );
+    let mut failed = false;
+    for (key, verdict) in &rows {
+        let base = baseline[key];
+        match verdict {
+            Verdict::Ok(delta) => {
+                let now = current[key];
+                let pct = delta * 100.0;
+                println!("  OK      {key:<44} {base:>10.3} -> {now:>10.3} ({pct:+.1}%)");
+            }
+            Verdict::Regressed(delta) => {
+                failed = true;
+                let now = current[key];
+                println!(
+                    "  REGRESS {key:<44} {base:>10.3} -> {now:>10.3} ({:+.1}% > {:.0}%)",
+                    delta * 100.0,
+                    tol * 100.0
+                );
+            }
+            Verdict::Missing => {
+                failed = true;
+                println!("  MISSING {key:<44} {base:>10.3} -> (no current value)");
+            }
+        }
+    }
+    for key in current.keys() {
+        if !baseline.contains_key(key) {
+            println!("  NEW     {key:<44} (not gated; add via --update)");
+        }
+    }
+    if failed {
+        println!("bench gate: FAILED");
+    } else {
+        println!("bench gate: OK");
+    }
+    Ok(!failed)
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::from(1),
+        Err(e) => {
+            eprintln!("bench_gate: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map(pairs: &[(&str, f64)]) -> BTreeMap<String, f64> {
+        pairs.iter().map(|&(k, v)| (k.to_string(), v)).collect()
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance_and_on_improvement() {
+        let base = map(&[("a/x_ms", 100.0), ("a/y_j", 50.0)]);
+        let cur = map(&[("a/x_ms", 109.0), ("a/y_j", 20.0)]);
+        let rows = gate(&base, &cur, 0.10);
+        assert!(rows.iter().all(|(_, v)| matches!(v, Verdict::Ok(_))), "{rows:?}");
+    }
+
+    #[test]
+    fn gate_fails_past_tolerance_and_on_missing() {
+        let base = map(&[("a/x_ms", 100.0), ("a/gone", 1.0)]);
+        let cur = map(&[("a/x_ms", 111.0)]);
+        let rows = gate(&base, &cur, 0.10);
+        assert!(matches!(
+            rows.iter().find(|(k, _)| k == "a/x_ms").unwrap().1,
+            Verdict::Regressed(_)
+        ));
+        assert_eq!(rows.iter().find(|(k, _)| k == "a/gone").unwrap().1, Verdict::Missing);
+    }
+
+    #[test]
+    fn gate_ignores_ungated_additions() {
+        let base = map(&[("a/x_ms", 100.0)]);
+        let cur = map(&[("a/x_ms", 100.0), ("a/new_metric", 9999.0)]);
+        let rows = gate(&base, &cur, 0.10);
+        assert_eq!(rows.len(), 1, "only baseline metrics are gated");
+    }
+
+    #[test]
+    fn summaries_flatten_to_namespaced_keys() {
+        let v = Json::parse(r#"{"bench": "b1", "metrics": {"p95_ms": 1.5, "total_j": 2}}"#)
+            .unwrap();
+        let mut out = BTreeMap::new();
+        collect_summary(&v, &mut out).unwrap();
+        assert_eq!(out.get("b1/p95_ms"), Some(&1.5));
+        assert_eq!(out.get("b1/total_j"), Some(&2.0));
+        assert!(collect_summary(&Json::parse("{}").unwrap(), &mut out).is_err());
+    }
+
+    #[test]
+    fn baseline_update_round_trips_and_keeps_extra_keys() {
+        let dir = std::env::temp_dir().join("bench_gate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("baseline.json");
+        std::fs::write(
+            &path,
+            r#"{"_note": "docs live here", "tolerance_frac": 0.2, "metrics": {"old/x": 1}}"#,
+        )
+        .unwrap();
+        let metrics = map(&[("a/x_ms", 123.5), ("b/y_j", 4.0)]);
+        write_baseline(&path, &metrics).unwrap();
+        let (tol, back) = read_baseline(&path).unwrap();
+        assert_eq!(tol, 0.2, "existing tolerance survives --update");
+        assert_eq!(back, metrics, "metrics are replaced wholesale");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(
+            v.get("_note").and_then(Json::as_str),
+            Some("docs live here"),
+            "--update must not strip the baseline's documentation"
+        );
+        // a fresh file gets the default tolerance
+        std::fs::remove_file(&path).ok();
+        write_baseline(&path, &metrics).unwrap();
+        let (tol, _) = read_baseline(&path).unwrap();
+        assert_eq!(tol, DEFAULT_TOLERANCE_FRAC);
+        std::fs::remove_file(&path).ok();
+    }
+}

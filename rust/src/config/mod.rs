@@ -13,7 +13,15 @@
 //!   "fleet_policy": "energy",
 //!   "fleet_budget_j": 50.0,
 //!   "fleet_batch": 8,
-//!   "fleet_batch_wait_ms": 25.0
+//!   "fleet_batch_wait_ms": 25.0,
+//!   "fleet_autoscale": {
+//!     "slo_p95_ms": 600.0,
+//!     "warm_pool": "2xn5@fp16,1x6p@fp16",
+//!     "min_replicas": 1,
+//!     "max_replicas": 8,
+//!     "fleet_budget_j": 300.0,
+//!     "tick_ms": 500.0
+//!   }
 //! }
 //! ```
 //!
@@ -25,6 +33,14 @@
 //! `fleet_batch` > 1 turns on per-replica dynamic batching (requests
 //! accumulate into amortized multi-image dispatches); the default of 1
 //! keeps single-image service.
+//!
+//! `fleet_autoscale` attaches the closed-loop autoscaler (and turns on
+//! idle-energy metering): a JSON object with the field names of
+//! [`AutoscaleConfig`] (`warm_pool` as a fleet spec string), or the
+//! compact `key=value` form [`AutoscaleConfig::parse`] accepts —
+//! which is also what `MCN_FLEET_AUTOSCALE` and `--fleet-autoscale`
+//! take, e.g. `"slo=600,pool=2xn5@fp16+1x6p@fp16,max=6,budget=300"`.
+//! It requires a fleet to be configured.
 
 use std::path::{Path, PathBuf};
 use std::time::Duration;
@@ -32,7 +48,8 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::coordinator::{BatcherConfig, CoordinatorConfig};
-use crate::fleet::{FleetConfig, Policy};
+use crate::fleet::autoscaler::parse_pool;
+use crate::fleet::{AutoscaleConfig, FleetConfig, Policy};
 use crate::runtime::artifacts;
 use crate::simulator::device::Precision;
 use crate::util::json::Json;
@@ -106,6 +123,101 @@ pub fn fleet_from(
     Ok(cfg.with_budget_j(budget_j))
 }
 
+/// Parse a `fleet_autoscale` config value: either the compact
+/// `key=value` string [`AutoscaleConfig::parse`] accepts, or an object
+/// with [`AutoscaleConfig`]'s field names (`warm_pool` as a fleet spec
+/// string, commas allowed).
+pub fn autoscale_from_json(v: &Json) -> Result<AutoscaleConfig> {
+    if let Some(s) = v.as_str() {
+        return AutoscaleConfig::parse(s).map_err(|e| anyhow::anyhow!(e));
+    }
+    // A typoed knob must be an error, not a silent default (the
+    // compact-string parser already rejects unknown keys).
+    const KNOWN: [&str; 12] = [
+        "slo_p95_ms",
+        "warm_pool",
+        "min_replicas",
+        "max_replicas",
+        "fleet_budget_j",
+        "tick_ms",
+        "scale_up_after",
+        "scale_down_after",
+        "cooldown_ticks",
+        "queue_per_replica",
+        "calm_frac",
+        "degrade_frac",
+    ];
+    if let Json::Object(pairs) = v {
+        for (k, _) in pairs {
+            anyhow::ensure!(
+                KNOWN.contains(&k.as_str()),
+                "fleet_autoscale: unknown key '{k}'"
+            );
+        }
+    } else {
+        anyhow::bail!("fleet_autoscale must be an object or a key=value string");
+    }
+    // Every knob errors on a wrong type too — `tick_ms: "250"` must
+    // not silently keep the default.
+    let count = |key: &str| -> Result<Option<usize>> {
+        match v.get(key) {
+            None => Ok(None),
+            Some(x) => Ok(Some(x.as_usize().ok_or_else(|| {
+                anyhow::anyhow!("fleet_autoscale: {key} must be a non-negative integer")
+            })?)),
+        }
+    };
+    let num = |key: &str| -> Result<Option<f64>> {
+        match v.get(key) {
+            None => Ok(None),
+            Some(x) => Ok(Some(x.as_f64().ok_or_else(|| {
+                anyhow::anyhow!("fleet_autoscale: {key} must be a number")
+            })?)),
+        }
+    };
+    let slo = num("slo_p95_ms")?
+        .ok_or_else(|| anyhow::anyhow!("fleet_autoscale: slo_p95_ms is required"))?;
+    let mut cfg = AutoscaleConfig::new(slo);
+    if let Some(pool) = v.get("warm_pool") {
+        let pool = pool
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("fleet_autoscale: warm_pool must be a spec string"))?;
+        cfg.warm_pool = parse_pool(pool).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(n) = count("min_replicas")? {
+        cfg.min_replicas = n;
+    }
+    if let Some(n) = count("max_replicas")? {
+        cfg.max_replicas = n;
+    }
+    if let Some(b) = num("fleet_budget_j")? {
+        cfg.fleet_budget_j = Some(b);
+    }
+    if let Some(t) = num("tick_ms")? {
+        cfg.tick_ms = t;
+    }
+    if let Some(n) = count("scale_up_after")? {
+        cfg.scale_up_after = n;
+    }
+    if let Some(n) = count("scale_down_after")? {
+        cfg.scale_down_after = n;
+    }
+    if let Some(n) = count("cooldown_ticks")? {
+        cfg.cooldown_ticks = n;
+    }
+    if let Some(n) = count("queue_per_replica")? {
+        cfg.queue_per_replica = n;
+    }
+    if let Some(f) = num("calm_frac")? {
+        cfg.calm_frac = f;
+    }
+    if let Some(f) = num("degrade_frac")? {
+        cfg.degrade_frac = f;
+    }
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(cfg)
+}
+
 fn parse_precision(s: &str) -> Result<Precision> {
     match s {
         "precise" => Ok(Precision::Precise),
@@ -159,12 +271,21 @@ impl AppConfig {
             cfg.fleet =
                 Some(fleet_from(spec, policy, budget, batch, wait).context("config: fleet")?);
         }
+        if let Some(a) = v.get("fleet_autoscale") {
+            let autoscale = autoscale_from_json(a).context("config: fleet_autoscale")?;
+            match cfg.fleet.take() {
+                Some(f) => cfg.fleet = Some(f.with_autoscale(autoscale)),
+                None => anyhow::bail!("config: fleet_autoscale requires a fleet"),
+            }
+        }
         Ok(cfg)
     }
 
     /// Apply `MCN_FLEET` / `MCN_FLEET_POLICY` / `MCN_FLEET_BUDGET_J` /
-    /// `MCN_FLEET_BATCH` / `MCN_FLEET_BATCH_WAIT_MS` environment
-    /// overrides (spec presence gates the others).
+    /// `MCN_FLEET_BATCH` / `MCN_FLEET_BATCH_WAIT_MS` /
+    /// `MCN_FLEET_AUTOSCALE` environment overrides (spec presence
+    /// gates the batch/policy knobs; `MCN_FLEET_AUTOSCALE` applies to
+    /// whichever fleet is configured, env or file).
     pub fn apply_env(&mut self) -> Result<()> {
         if let Ok(spec) = std::env::var("MCN_FLEET") {
             let policy = std::env::var("MCN_FLEET_POLICY").ok();
@@ -191,6 +312,15 @@ impl AppConfig {
             self.fleet = Some(
                 fleet_from(&spec, policy.as_deref(), budget, batch, wait).context("MCN_FLEET")?,
             );
+        }
+        if let Ok(kv) = std::env::var("MCN_FLEET_AUTOSCALE") {
+            let autoscale = AutoscaleConfig::parse(&kv)
+                .map_err(|e| anyhow::anyhow!(e))
+                .context("MCN_FLEET_AUTOSCALE")?;
+            match self.fleet.take() {
+                Some(f) => self.fleet = Some(f.with_autoscale(autoscale)),
+                None => anyhow::bail!("MCN_FLEET_AUTOSCALE requires a fleet (MCN_FLEET or config)"),
+            }
         }
         Ok(())
     }
@@ -277,6 +407,77 @@ mod tests {
         let f = fleet_from("s7", Some("rr"), Some(3.0), None, None).unwrap();
         assert_eq!(f.policy, Policy::RoundRobin);
         assert_eq!(f.budget_j, Some(3.0));
+    }
+
+    #[test]
+    fn parses_fleet_autoscale_block() {
+        // object form
+        let c = AppConfig::from_json(
+            r#"{"fleet": "1xn5@fp16", "fleet_autoscale": {
+                "slo_p95_ms": 600.0, "warm_pool": "2xn5@fp16,1x6p@fp16",
+                "min_replicas": 1, "max_replicas": 6, "fleet_budget_j": 300.0,
+                "tick_ms": 250.0, "queue_per_replica": 4}}"#,
+        )
+        .unwrap();
+        let f = c.fleet.unwrap();
+        assert!(f.idle_power, "autoscale turns idle metering on");
+        let a = f.autoscale.unwrap();
+        assert_eq!(a.slo_p95_ms, 600.0);
+        assert_eq!(a.warm_pool.len(), 3);
+        assert_eq!(a.max_replicas, 6);
+        assert_eq!(a.fleet_budget_j, Some(300.0));
+        assert_eq!(a.tick_ms, 250.0);
+        assert_eq!(a.queue_per_replica, 4);
+        // compact string form
+        let c = AppConfig::from_json(
+            r#"{"fleet": "1xn5", "fleet_autoscale": "slo=500,pool=2xs7+1xn5@fp16,max=4"}"#,
+        )
+        .unwrap();
+        let a = c.fleet.unwrap().autoscale.unwrap();
+        assert_eq!(a.slo_p95_ms, 500.0);
+        assert_eq!(a.warm_pool.len(), 3);
+        assert_eq!(a.max_replicas, 4);
+        // autoscale without a fleet is an error, as are bad knobs
+        assert!(AppConfig::from_json(r#"{"fleet_autoscale": "slo=500"}"#).is_err());
+        assert!(
+            AppConfig::from_json(r#"{"fleet": "1xn5", "fleet_autoscale": {}}"#).is_err(),
+            "slo_p95_ms is required"
+        );
+        assert!(AppConfig::from_json(
+            r#"{"fleet": "1xn5", "fleet_autoscale": {"slo_p95_ms": 500.0, "min_replicas": 0}}"#
+        )
+        .is_err());
+        assert!(AppConfig::from_json(
+            r#"{"fleet": "1xn5", "fleet_autoscale": "slo=500,pool=3xwatch"}"#
+        )
+        .is_err());
+        // a typoed knob is an error, not a silent default
+        assert!(AppConfig::from_json(
+            r#"{"fleet": "1xn5", "fleet_autoscale": {"slo_p95_ms": 500.0, "max_replica": 2}}"#
+        )
+        .is_err());
+        // so is a wrongly-typed value
+        assert!(AppConfig::from_json(
+            r#"{"fleet": "1xn5", "fleet_autoscale": {"slo_p95_ms": 500.0, "tick_ms": "250"}}"#
+        )
+        .is_err());
+        assert!(AppConfig::from_json(
+            r#"{"fleet": "1xn5", "fleet_autoscale": {"slo_p95_ms": 500.0, "warm_pool": ["n5"]}}"#
+        )
+        .is_err());
+        // the fraction knobs parse and validate
+        let c = AppConfig::from_json(
+            r#"{"fleet": "1xn5", "fleet_autoscale": {
+                "slo_p95_ms": 500.0, "calm_frac": 0.4, "degrade_frac": 0.9}}"#,
+        )
+        .unwrap();
+        let a = c.fleet.unwrap().autoscale.unwrap();
+        assert_eq!(a.calm_frac, 0.4);
+        assert_eq!(a.degrade_frac, 0.9);
+        assert!(AppConfig::from_json(
+            r#"{"fleet": "1xn5", "fleet_autoscale": {"slo_p95_ms": 500.0, "calm_frac": 1.5}}"#
+        )
+        .is_err());
     }
 
     #[test]

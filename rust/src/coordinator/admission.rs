@@ -1,11 +1,20 @@
 //! Admission control / backpressure — protects the runtime from
 //! unbounded queue growth under open-loop overload.
 //!
-//! Policy: a token-bucket bound on in-flight requests plus a hard queue
-//! cap; requests beyond the cap are shed immediately with a retriable
-//! error rather than queued into a latency collapse (standard serving
-//! practice; the mechanism the paper's phone-local setting never needed
-//! but any deployed coordinator does).
+//! Two front doors live here:
+//!
+//! - [`AdmissionControl`] guards the single-device coordinator path: a
+//!   token-bucket bound on in-flight requests; requests beyond the cap
+//!   are shed immediately with a retriable error rather than queued
+//!   into a latency collapse (standard serving practice; the mechanism
+//!   the paper's phone-local setting never needed but any deployed
+//!   coordinator does).
+//! - [`FleetGate`] guards the fleet dispatch path: a fleet-wide queue
+//!   cap (resized by the autoscaler as replicas come and go) plus a
+//!   saturation flag the autoscaler sets when the fleet cannot absorb
+//!   more load (deep SLO breach, exhausted fleet budget, or no replica
+//!   accepting traffic) — so the front door sheds *before* enqueueing
+//!   instead of letting queues collapse the latency SLO.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -88,9 +97,142 @@ impl AdmissionControl {
     }
 }
 
+/// Why the fleet front door refused a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateDecision {
+    /// Proceed to placement.
+    Admit,
+    /// The autoscaler reported saturation; shed before enqueueing.
+    ShedSaturated,
+    /// The fleet-wide queue cap is full; shed before enqueueing.
+    ShedQueue,
+}
+
+/// Front-door admission for the fleet dispatch path.  Lives inside the
+/// fleet's state lock (dispatch is already serialized there), so plain
+/// fields suffice; the autoscaler resizes the cap and flips the
+/// saturation flag each control tick.
+#[derive(Debug)]
+pub struct FleetGate {
+    /// Cap on riders queued or running across the whole fleet
+    /// (`active replicas x queue_per_replica`).
+    max_queue: usize,
+    /// Saturation reported by the autoscaler control loop.
+    saturated: bool,
+    admitted: u64,
+    shed_saturated: u64,
+    shed_queue: u64,
+}
+
+impl FleetGate {
+    pub fn new(max_queue: usize) -> FleetGate {
+        assert!(max_queue > 0, "fleet gate needs at least one queue slot");
+        FleetGate { max_queue, saturated: false, admitted: 0, shed_saturated: 0, shed_queue: 0 }
+    }
+
+    /// Decide admission given the fleet's current total queue depth.
+    pub fn admit(&mut self, queued: usize) -> GateDecision {
+        if self.saturated {
+            self.shed_saturated += 1;
+            GateDecision::ShedSaturated
+        } else if queued >= self.max_queue {
+            self.shed_queue += 1;
+            GateDecision::ShedQueue
+        } else {
+            self.admitted += 1;
+            GateDecision::Admit
+        }
+    }
+
+    /// Resize the queue cap as the autoscaler adds or drains replicas.
+    pub fn resize(&mut self, max_queue: usize) {
+        self.max_queue = max_queue.max(1);
+    }
+
+    pub fn set_saturated(&mut self, saturated: bool) {
+        self.saturated = saturated;
+    }
+
+    pub fn is_saturated(&self) -> bool {
+        self.saturated
+    }
+
+    pub fn max_queue(&self) -> usize {
+        self.max_queue
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.admitted
+    }
+
+    pub fn shed_saturated(&self) -> u64 {
+        self.shed_saturated
+    }
+
+    pub fn shed_queue(&self) -> u64 {
+        self.shed_queue
+    }
+
+    /// Counter snapshot for the autoscaler report (`autoscale_stats`).
+    pub fn stats(&self) -> GateStats {
+        GateStats {
+            max_queue: self.max_queue,
+            saturated: self.saturated,
+            admitted: self.admitted,
+            shed_saturated: self.shed_saturated,
+            shed_queue: self.shed_queue,
+        }
+    }
+}
+
+/// Point-in-time [`FleetGate`] counters.  `admitted` counts gate-level
+/// admissions (a request the gate passed can still shed at placement
+/// if no replica accepts traffic), and the two shed counters split the
+/// fleet's front-door sheds by cause.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GateStats {
+    pub max_queue: usize,
+    pub saturated: bool,
+    pub admitted: u64,
+    pub shed_saturated: u64,
+    pub shed_queue: u64,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fleet_gate_sheds_on_queue_cap() {
+        let mut g = FleetGate::new(2);
+        assert_eq!(g.admit(0), GateDecision::Admit);
+        assert_eq!(g.admit(1), GateDecision::Admit);
+        assert_eq!(g.admit(2), GateDecision::ShedQueue);
+        assert_eq!(g.admitted(), 2);
+        assert_eq!(g.shed_queue(), 1);
+        // the autoscaler added a replica: more room
+        g.resize(4);
+        assert_eq!(g.admit(2), GateDecision::Admit);
+    }
+
+    #[test]
+    fn fleet_gate_saturation_overrides_queue_room() {
+        let mut g = FleetGate::new(8);
+        g.set_saturated(true);
+        assert!(g.is_saturated());
+        assert_eq!(g.admit(0), GateDecision::ShedSaturated);
+        assert_eq!(g.shed_saturated(), 1);
+        g.set_saturated(false);
+        assert_eq!(g.admit(0), GateDecision::Admit);
+    }
+
+    #[test]
+    fn fleet_gate_resize_never_closes_entirely() {
+        let mut g = FleetGate::new(4);
+        g.resize(0); // a fleet scaled to min keeps one slot open
+        assert_eq!(g.max_queue(), 1);
+        assert_eq!(g.admit(0), GateDecision::Admit);
+    }
 
     #[test]
     fn admits_up_to_cap_then_sheds() {

@@ -15,6 +15,7 @@ use crate::simulator::autotune::{autotune_network, NetworkPlan};
 use crate::simulator::device::{DeviceProfile, Precision};
 
 /// Memoized autotuning results.
+#[derive(Debug)]
 pub struct PlanCache {
     net: SqueezeNet,
     plans: Mutex<HashMap<(&'static str, &'static str), NetworkPlan>>,

@@ -6,11 +6,11 @@
 //!            "sim": true, "fleet": true}`
 //!          or `{"image": [ ...150528 floats... ], ...}`
 //!          or `{"cmd": "stats"}` / `{"cmd": "fleet_stats"}` /
-//!          `{"cmd": "quit"}`
+//!          `{"cmd": "autoscale_stats"}` / `{"cmd": "quit"}`
 //! response the [`InferResponse::to_json`] object (plus a `"fleet"`
 //!          placement object when the request set `"fleet": true`), or
 //!          `{"error": "..."}` / `{"stats": "..."}` /
-//!          `{"fleet_stats": {...}}`.
+//!          `{"fleet_stats": {...}}` / `{"autoscale_stats": {...}}`.
 //!
 //! With `"fleet": true` the request is first routed through the
 //! configured device fleet (see [`crate::fleet`]): the energy-aware (or
@@ -18,7 +18,10 @@
 //! predicted queue wait / latency / joules — and, when per-replica
 //! batching is on (`--fleet-batch`), the size of the batch the request
 //! rides in (`"batch_fill"`) — ride back on the response while the
-//! real PJRT runtime computes the answer.
+//! real PJRT runtime computes the answer.  When the fleet autoscaler
+//! is on (`--fleet-autoscale`), scaling events that fired since the
+//! last fleet-backed reply ride back too (`"autoscale_events"`), and
+//! `{"cmd": "autoscale_stats"}` snapshots the whole control loop.
 //!
 //! Seed-addressed images keep the wire small for load generation: both
 //! ends derive the pixels from the shared deterministic corpus.
@@ -45,6 +48,7 @@ enum Parsed {
     Infer { image: Vec<f32>, precision: Precision, with_sim: bool, with_fleet: bool },
     Stats,
     FleetStats,
+    AutoscaleStats,
     Quit,
 }
 
@@ -54,6 +58,7 @@ fn parse_request(line: &str, image_len: usize) -> Result<Parsed> {
         return match cmd {
             "stats" => Ok(Parsed::Stats),
             "fleet_stats" => Ok(Parsed::FleetStats),
+            "autoscale_stats" => Ok(Parsed::AutoscaleStats),
             "quit" => Ok(Parsed::Quit),
             other => anyhow::bail!("unknown cmd '{other}'"),
         };
@@ -182,6 +187,27 @@ fn handle_client(
                     Json::str("no fleet configured (start the server with --fleet SPEC)"),
                 )]),
             },
+            Ok(Parsed::AutoscaleStats) => match &fleet {
+                Some(f) => {
+                    f.run_to(started.elapsed().as_secs_f64() * 1e3);
+                    match f.autoscale_report() {
+                        Some(report) => {
+                            Json::object(vec![("autoscale_stats", report.to_json())])
+                        }
+                        None => Json::object(vec![(
+                            "error",
+                            Json::str(
+                                "no autoscaler configured (start the server with \
+                                 --fleet-autoscale KV)",
+                            ),
+                        )]),
+                    }
+                }
+                None => Json::object(vec![(
+                    "error",
+                    Json::str("no fleet configured (start the server with --fleet SPEC)"),
+                )]),
+            },
             Ok(Parsed::Infer { image, precision, with_sim, with_fleet }) => {
                 // Fleet admission runs *before* the real inference, so
                 // an overload shed costs nothing; if the inference then
@@ -205,7 +231,28 @@ fn handle_client(
                         Ok(resp) => {
                             let mut reply = resp.to_json();
                             if let (Some(p), Json::Object(pairs)) = (placement, &mut reply) {
-                                pairs.push(("fleet".to_string(), p.to_json()));
+                                let mut pj = p.to_json();
+                                // Scaling events since the last fleet
+                                // reply ride back on the placement, so
+                                // load generators see scale-up/down as
+                                // it happens.
+                                if let Some(f) = &fleet {
+                                    let events = f.take_autoscale_events();
+                                    if !events.is_empty() {
+                                        if let Json::Object(ppairs) = &mut pj {
+                                            ppairs.push((
+                                                "autoscale_events".to_string(),
+                                                Json::Array(
+                                                    events
+                                                        .iter()
+                                                        .map(|e| e.to_json())
+                                                        .collect(),
+                                                ),
+                                            ));
+                                        }
+                                    }
+                                }
+                                pairs.push(("fleet".to_string(), pj));
                             }
                             reply
                         }
@@ -292,6 +339,13 @@ impl Client {
         v.get("fleet_stats").cloned().context("reply missing fleet_stats")
     }
 
+    /// Fetch the autoscaler report (errors when the server has no
+    /// fleet or no autoscaler).
+    pub fn autoscale_stats(&mut self) -> Result<Json> {
+        let v = self.round_trip(Json::object(vec![("cmd", Json::str("autoscale_stats"))]))?;
+        v.get("autoscale_stats").cloned().context("reply missing autoscale_stats")
+    }
+
     /// Ask the server to stop.
     pub fn quit(&mut self) -> Result<()> {
         let _ = self.round_trip(Json::object(vec![("cmd", Json::str("quit"))]))?;
@@ -354,6 +408,10 @@ mod tests {
         assert!(matches!(
             parse_request(r#"{"cmd": "fleet_stats"}"#, 3).unwrap(),
             Parsed::FleetStats
+        ));
+        assert!(matches!(
+            parse_request(r#"{"cmd": "autoscale_stats"}"#, 3).unwrap(),
+            Parsed::AutoscaleStats
         ));
         assert!(matches!(parse_request(r#"{"cmd": "quit"}"#, 3).unwrap(), Parsed::Quit));
     }

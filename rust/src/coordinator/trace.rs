@@ -45,33 +45,55 @@ pub struct Trace {
     pub seed: u64,
 }
 
+/// Sample one inter-arrival gap (seconds) for request `i` of a
+/// process — shared by [`Trace::generate`] and [`Trace::phases`].
+fn sample_gap(arrival: Arrival, i: usize, rng: &mut Rng) -> f64 {
+    match arrival {
+        Arrival::Uniform { rate_per_s } => 1.0 / rate_per_s,
+        Arrival::Poisson { rate_per_s } => {
+            // inverse-CDF exponential sample
+            -(1.0 - rng.next_f64()).ln() / rate_per_s
+        }
+        Arrival::Bursty { rate_per_s, burst_every, burst_len, burst_mult } => {
+            let in_burst = burst_every > 0 && (i % burst_every) < burst_len;
+            let rate = if in_burst { rate_per_s * burst_mult } else { rate_per_s };
+            -(1.0 - rng.next_f64()).ln() / rate
+        }
+    }
+}
+
 impl Trace {
     /// Generate `n` arrivals with the given process; `imprecise_frac`
     /// of requests (deterministically chosen) use the imprecise path.
+    /// (A one-segment [`phases`](Self::phases) trace — same RNG
+    /// stream, so existing seeds keep their exact timelines.)
     pub fn generate(n: usize, arrival: Arrival, imprecise_frac: f64, seed: u64) -> Trace {
+        Self::phases(&[(n, arrival)], imprecise_frac, seed)
+    }
+
+    /// Generate a multi-phase trace: each `(n, arrival)` segment
+    /// continues from where the previous one left off, so traffic
+    /// ramps and spikes (calm -> surge -> calm) are one deterministic
+    /// timeline — the workload shape autoscaling experiments need.
+    pub fn phases(segments: &[(usize, Arrival)], imprecise_frac: f64, seed: u64) -> Trace {
         let mut rng = Rng::new(seed);
         let mut t = 0.0f64;
-        let mut entries = Vec::with_capacity(n);
-        for i in 0..n {
-            let gap = match arrival {
-                Arrival::Uniform { rate_per_s } => 1.0 / rate_per_s,
-                Arrival::Poisson { rate_per_s } => {
-                    // inverse-CDF exponential sample
-                    -(1.0 - rng.next_f64()).ln() / rate_per_s
-                }
-                Arrival::Bursty { rate_per_s, burst_every, burst_len, burst_mult } => {
-                    let in_burst = burst_every > 0 && (i % burst_every) < burst_len;
-                    let rate = if in_burst { rate_per_s * burst_mult } else { rate_per_s };
-                    -(1.0 - rng.next_f64()).ln() / rate
-                }
-            };
-            t += gap;
-            let precision = if rng.next_f64() < imprecise_frac {
-                Precision::Imprecise
-            } else {
-                Precision::Precise
-            };
-            entries.push(TraceEntry { at: Duration::from_secs_f64(t), image: i as u64, precision });
+        let total: usize = segments.iter().map(|(n, _)| n).sum();
+        let mut entries = Vec::with_capacity(total);
+        for &(n, arrival) in segments {
+            for i in 0..n {
+                t += sample_gap(arrival, i, &mut rng);
+                let precision = if rng.next_f64() < imprecise_frac {
+                    Precision::Imprecise
+                } else {
+                    Precision::Precise
+                };
+                entries.push(TraceEntry {
+                    at: Duration::from_secs_f64(t),
+                    image: entries.len() as u64,
+                    precision,
+                });
+            }
         }
         Trace { entries, seed }
     }
@@ -204,6 +226,41 @@ mod tests {
         // same base rate (some arrivals are 10x faster)
         let p = Trace::generate(400, Arrival::Poisson { rate_per_s: 50.0 }, 0.0, 4);
         assert!(t.span() < p.span());
+    }
+
+    #[test]
+    fn phases_concatenate_and_shift_rate() {
+        let t = Trace::phases(
+            &[
+                (50, Arrival::Uniform { rate_per_s: 5.0 }),
+                (100, Arrival::Uniform { rate_per_s: 50.0 }),
+                (50, Arrival::Uniform { rate_per_s: 5.0 }),
+            ],
+            0.0,
+            7,
+        );
+        assert_eq!(t.entries.len(), 200);
+        // strictly increasing arrivals across segment boundaries
+        assert!(t.entries.windows(2).all(|w| w[0].at < w[1].at));
+        // image ids are the global arrival order
+        assert_eq!(t.entries[199].image, 199);
+        // the middle segment is 10x denser: 100 arrivals in ~2 s vs
+        // 50 in ~10 s on either side
+        let span_mid = t.entries[149].at - t.entries[50].at;
+        let span_head = t.entries[49].at - t.entries[0].at;
+        assert!(span_mid < span_head, "{span_mid:?} vs {span_head:?}");
+        // deterministic per seed
+        let u = Trace::phases(
+            &[
+                (50, Arrival::Uniform { rate_per_s: 5.0 }),
+                (100, Arrival::Uniform { rate_per_s: 50.0 }),
+                (50, Arrival::Uniform { rate_per_s: 5.0 }),
+            ],
+            0.0,
+            7,
+        );
+        assert_eq!(t.entries.len(), u.entries.len());
+        assert!(t.entries.iter().zip(&u.entries).all(|(a, b)| a.at == b.at));
     }
 
     #[test]

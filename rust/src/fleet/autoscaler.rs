@@ -1,0 +1,864 @@
+//! Closed-loop fleet autoscaling: resize the replica set against a
+//! latency SLO and a fleet-wide joule budget.
+//!
+//! The paper fixes a *topology* and tunes each device (Tables I, V,
+//! VI); this module closes the loop at serving time.  Every `tick_ms`
+//! of virtual time the controller samples the same counters
+//! `fleet_stats` exposes — queue depth, recent p95 latency from the
+//! fleet's [`LatencyRecorder`](crate::telemetry::LatencyRecorder),
+//! committed joules (service + idle), shed/lost totals — and emits at
+//! most one scaling decision:
+//!
+//! - **scale up** — after `scale_up_after` consecutive *breach* ticks
+//!   (p95 over `slo_p95_ms`, sheds since the last tick, or queue depth
+//!   past the per-replica allowance).  The fleet first revives a parked
+//!   (previously drained) replica, then provisions the next warm-pool
+//!   spec, cheapest joules-per-request first.
+//! - **scale down** — after `scale_down_after` consecutive *calm*
+//!   ticks (p95 under `calm_frac * slo`, no sheds) the fleet drains its
+//!   most expensive idle replica and parks it back into the warm pool.
+//!   A drain is **deferred** while the victim still holds re-routed
+//!   orphans of a failed peer (see [`Replica::holds_rerouted`]), so the
+//!   control loop cannot race `Fleet::fail`'s re-routing into a
+//!   capacity collapse.
+//! - **degrade** — once committed joules pass `degrade_frac` of the
+//!   fleet budget, or a breach cannot be answered with more capacity
+//!   (pool empty or `max_replicas` reached), the whole fleet drops to
+//!   the imprecise (fp16) posture: Table V's energy ratio stretches the
+//!   remaining budget and the faster path adds capacity.
+//!
+//! Hysteresis: breach/calm streaks reset each other, and any action
+//! starts a `cooldown_ticks` window in which no further action fires —
+//! so one burst cannot see-saw the fleet.  Saturation (deep breach,
+//! exhausted budget, or no replica accepting traffic) is reported to
+//! the front-door [`FleetGate`](crate::coordinator::admission::FleetGate),
+//! which sheds *before* enqueueing.
+//!
+//! The decision logic is a pure state machine over [`FleetSample`]s —
+//! unit-testable without a fleet; [`Fleet`](crate::fleet::Fleet)
+//! applies the returned [`ScaleDecision`]s.
+//!
+//! [`Replica::holds_rerouted`]: crate::fleet::Replica::holds_rerouted
+
+use crate::coordinator::admission::GateStats;
+use crate::util::json::Json;
+
+use super::replica::ReplicaSpec;
+
+/// Knobs of the closed control loop.
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// The latency SLO the loop defends (fleet-wide p95, ms).
+    pub slo_p95_ms: f64,
+    /// Replica specs that may be provisioned, in the order the fleet
+    /// will add them after sorting cheapest joules-per-request first.
+    pub warm_pool: Vec<ReplicaSpec>,
+    /// Never drain below this many replicas accepting traffic.
+    pub min_replicas: usize,
+    /// Never provision above this many replicas accepting traffic.
+    pub max_replicas: usize,
+    /// Fleet-wide joule budget over service + idle energy (`None` =
+    /// unmetered; per-replica budgets are separate).
+    pub fleet_budget_j: Option<f64>,
+    /// Control period in virtual-time milliseconds.
+    pub tick_ms: f64,
+    /// Consecutive breach ticks before a scale-up fires.
+    pub scale_up_after: usize,
+    /// Consecutive calm ticks before a scale-down fires.
+    pub scale_down_after: usize,
+    /// Ticks after any action during which no further action fires.
+    pub cooldown_ticks: usize,
+    /// Queue slots per active replica granted to the front-door gate.
+    pub queue_per_replica: usize,
+    /// A tick is calm only when p95 is under this fraction of the SLO.
+    pub calm_frac: f64,
+    /// Fraction of the fleet budget at which the posture degrades.
+    pub degrade_frac: f64,
+}
+
+impl AutoscaleConfig {
+    /// Defaults tuned for the 100–600 ms per-image service times of
+    /// the device zoo: a 500 ms control period, scale up after one bad
+    /// tick, scale down only after four quiet ones.
+    pub fn new(slo_p95_ms: f64) -> AutoscaleConfig {
+        AutoscaleConfig {
+            slo_p95_ms,
+            warm_pool: Vec::new(),
+            min_replicas: 1,
+            max_replicas: 8,
+            fleet_budget_j: None,
+            tick_ms: 500.0,
+            scale_up_after: 1,
+            scale_down_after: 4,
+            cooldown_ticks: 2,
+            queue_per_replica: 16,
+            calm_frac: 0.5,
+            degrade_frac: 0.8,
+        }
+    }
+
+    pub fn with_warm_pool(mut self, pool: Vec<ReplicaSpec>) -> AutoscaleConfig {
+        self.warm_pool = pool;
+        self
+    }
+
+    pub fn with_fleet_budget_j(mut self, budget_j: Option<f64>) -> AutoscaleConfig {
+        self.fleet_budget_j = budget_j;
+        self
+    }
+
+    /// Parse the compact `key=value` form used by `MCN_FLEET_AUTOSCALE`
+    /// and `--fleet-autoscale`: comma-separated pairs, pool atoms
+    /// joined by `+` (commas already separate the pairs), e.g.
+    /// `"slo=600,pool=2xn5@fp16+1x6p@fp16,min=1,max=6,budget=300"`.
+    /// Keys: `slo` (ms, required), `pool`, `min`, `max`, `budget` (J),
+    /// `tick` (ms), `up`, `down`, `cooldown`, `queue`.
+    pub fn parse(s: &str) -> Result<AutoscaleConfig, String> {
+        let mut slo = None;
+        let mut cfg = AutoscaleConfig::new(0.0);
+        for pair in s.split(',') {
+            let pair = pair.trim();
+            if pair.is_empty() {
+                continue;
+            }
+            let (key, value) = pair
+                .split_once('=')
+                .ok_or_else(|| format!("autoscale: expected key=value, got '{pair}'"))?;
+            let (key, value) = (key.trim(), value.trim());
+            let num = || {
+                value
+                    .parse::<f64>()
+                    .map_err(|_| format!("autoscale: bad number '{value}' for '{key}'"))
+            };
+            let count = || {
+                value
+                    .parse::<usize>()
+                    .map_err(|_| format!("autoscale: bad count '{value}' for '{key}'"))
+            };
+            match key {
+                "slo" => slo = Some(num()?),
+                "pool" => {
+                    let spec = value.replace('+', ",");
+                    cfg.warm_pool = parse_pool(&spec)?;
+                }
+                "min" => cfg.min_replicas = count()?,
+                "max" => cfg.max_replicas = count()?,
+                "budget" => cfg.fleet_budget_j = Some(num()?),
+                "tick" => cfg.tick_ms = num()?,
+                "up" => cfg.scale_up_after = count()?,
+                "down" => cfg.scale_down_after = count()?,
+                "cooldown" => cfg.cooldown_ticks = count()?,
+                "queue" => cfg.queue_per_replica = count()?,
+                other => return Err(format!("autoscale: unknown key '{other}'")),
+            }
+        }
+        cfg.slo_p95_ms = slo.ok_or("autoscale: 'slo' (p95 ms) is required")?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Reject configurations the control loop cannot run with.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.slo_p95_ms.is_finite() && self.slo_p95_ms > 0.0) {
+            return Err("autoscale: slo_p95_ms must be a positive number".into());
+        }
+        if self.min_replicas == 0 {
+            return Err("autoscale: min_replicas must be >= 1".into());
+        }
+        if self.max_replicas < self.min_replicas {
+            return Err("autoscale: max_replicas must be >= min_replicas".into());
+        }
+        if !(self.tick_ms.is_finite() && self.tick_ms > 0.0) {
+            return Err("autoscale: tick_ms must be a positive number".into());
+        }
+        if self.scale_up_after == 0 || self.scale_down_after == 0 {
+            return Err("autoscale: up/down streaks must be >= 1".into());
+        }
+        if self.queue_per_replica == 0 {
+            return Err("autoscale: queue_per_replica must be >= 1".into());
+        }
+        if let Some(b) = self.fleet_budget_j {
+            if !(b.is_finite() && b > 0.0) {
+                return Err("autoscale: fleet budget must be a positive number".into());
+            }
+        }
+        if !(0.0..=1.0).contains(&self.calm_frac) {
+            return Err("autoscale: calm_frac must be in [0, 1]".into());
+        }
+        if !(0.0..=1.0).contains(&self.degrade_frac) {
+            return Err("autoscale: degrade_frac must be in [0, 1]".into());
+        }
+        Ok(())
+    }
+}
+
+/// Parse a warm-pool topology spec (same grammar as `--fleet`).
+pub fn parse_pool(spec: &str) -> Result<Vec<ReplicaSpec>, String> {
+    let mut pool = Vec::new();
+    for atom in spec.split(',') {
+        let atom = atom.trim();
+        if atom.is_empty() {
+            continue;
+        }
+        let (count, rest) = match atom.split_once('x') {
+            Some((n, rest)) if !n.is_empty() && n.chars().all(|c| c.is_ascii_digit()) => {
+                (n.parse::<usize>().map_err(|_| format!("bad count in '{atom}'"))?, rest)
+            }
+            _ => (1, atom),
+        };
+        if count == 0 || count > 64 {
+            return Err(format!("pool count in '{atom}' must be 1..=64"));
+        }
+        let rs = ReplicaSpec::parse(rest)?;
+        for _ in 0..count {
+            pool.push(rs.clone());
+        }
+    }
+    Ok(pool)
+}
+
+/// One control-loop observation — the counters `fleet_stats` reports,
+/// sampled at a tick boundary.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetSample {
+    /// Virtual time of the tick (ms).
+    pub at_ms: f64,
+    /// Replicas currently accepting traffic.
+    pub active_replicas: usize,
+    /// Drained-and-idle replicas the fleet can revive instantly.
+    pub parked_replicas: usize,
+    /// Warm-pool specs not yet provisioned.
+    pub pool_remaining: usize,
+    /// Riders queued or running across the whole fleet.
+    pub queue_depth: usize,
+    /// Recent-window fleet p95 latency (ms); `None` before any
+    /// completion.
+    pub p95_ms: Option<f64>,
+    /// Lifetime shed counter (the controller differences it per tick).
+    pub shed_total: u64,
+    /// Lifetime lost counter.
+    pub lost_total: u64,
+    /// Committed fleet joules: service spent + queued + idle.
+    pub committed_j: f64,
+}
+
+/// What the controller asks the fleet to do this tick.  The fleet owns
+/// victim/spec selection (it prices replicas through its plan cache).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Revive a parked replica or provision the next warm-pool spec.
+    ScaleUp,
+    /// Drain the most expensive idle replica back into the pool.
+    ScaleDown,
+    /// Force the fleet-wide imprecise (fp16) posture.
+    Degrade,
+}
+
+/// Kinds of entries in the scaling-event log.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleKind {
+    AddReplica,
+    ReviveReplica,
+    DrainReplica,
+    /// A drain that was refused while its victim still held re-routed
+    /// orphans of a failed peer.
+    DeferDrain,
+    Degrade,
+    Saturated,
+    Recovered,
+}
+
+impl ScaleKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScaleKind::AddReplica => "add_replica",
+            ScaleKind::ReviveReplica => "revive_replica",
+            ScaleKind::DrainReplica => "drain_replica",
+            ScaleKind::DeferDrain => "defer_drain",
+            ScaleKind::Degrade => "degrade",
+            ScaleKind::Saturated => "saturated",
+            ScaleKind::Recovered => "recovered",
+        }
+    }
+}
+
+/// One scaling event, for the log, the server's placement JSON, and
+/// the `autoscale_stats` command.
+#[derive(Debug, Clone)]
+pub struct ScaleEvent {
+    pub at_ms: f64,
+    pub kind: ScaleKind,
+    /// Target replica, when the event has one.
+    pub replica: Option<usize>,
+    pub reason: String,
+}
+
+impl ScaleEvent {
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("at_ms", Json::num(self.at_ms)),
+            ("kind", Json::str(self.kind.label())),
+            (
+                "replica",
+                self.replica.map(|r| Json::num(r as f64)).unwrap_or(Json::Null),
+            ),
+            ("reason", Json::str(self.reason.clone())),
+        ])
+    }
+}
+
+/// Cap on the retained event log (oldest entries drop first).
+const EVENT_LOG_CAP: usize = 64;
+/// Cap on events pending delivery to the server's placement JSON.
+const PENDING_CAP: usize = 32;
+
+/// The control-loop state machine.  Pure over [`FleetSample`]s; the
+/// fleet drives [`Autoscaler::tick`] at each virtual-time boundary and
+/// applies the returned decisions.
+#[derive(Debug)]
+pub struct Autoscaler {
+    pub cfg: AutoscaleConfig,
+    next_tick_ms: f64,
+    breach_ticks: usize,
+    calm_ticks: usize,
+    cooldown_left: usize,
+    /// Front-door saturation, mirrored into the fleet gate.
+    pub saturated: bool,
+    /// Sticky fleet-wide fp16 posture.
+    pub degraded_posture: bool,
+    ticks: u64,
+    scale_ups: u64,
+    scale_downs: u64,
+    deferred_drains: u64,
+    degrades: u64,
+    last_shed: u64,
+    last_lost: u64,
+    events: Vec<ScaleEvent>,
+    pending: Vec<ScaleEvent>,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleConfig) -> Autoscaler {
+        let first_tick = cfg.tick_ms;
+        Autoscaler {
+            cfg,
+            next_tick_ms: first_tick,
+            breach_ticks: 0,
+            calm_ticks: 0,
+            cooldown_left: 0,
+            saturated: false,
+            degraded_posture: false,
+            ticks: 0,
+            scale_ups: 0,
+            scale_downs: 0,
+            deferred_drains: 0,
+            degrades: 0,
+            last_shed: 0,
+            last_lost: 0,
+            events: Vec::new(),
+            pending: Vec::new(),
+        }
+    }
+
+    /// Virtual time of the next control tick.
+    pub fn next_tick_ms(&self) -> f64 {
+        self.next_tick_ms
+    }
+
+    /// Is committed spend past the fleet budget entirely?
+    fn budget_exhausted(&self, committed_j: f64) -> bool {
+        self.cfg.fleet_budget_j.is_some_and(|b| committed_j >= b)
+    }
+
+    /// Is committed spend past the degrade threshold?
+    fn budget_degraded(&self, committed_j: f64) -> bool {
+        self.cfg
+            .fleet_budget_j
+            .is_some_and(|b| committed_j >= self.cfg.degrade_frac * b)
+    }
+
+    /// Evaluate one control tick.  Returns the decisions for the fleet
+    /// to apply, in order.  At most one capacity action (up or down)
+    /// fires per tick; a posture degrade may accompany it.
+    pub fn tick(&mut self, s: &FleetSample) -> Vec<ScaleDecision> {
+        self.ticks += 1;
+        self.next_tick_ms = s.at_ms + self.cfg.tick_ms;
+        let shed_delta = s.shed_total.saturating_sub(self.last_shed);
+        let lost_delta = s.lost_total.saturating_sub(self.last_lost);
+        self.last_shed = s.shed_total;
+        self.last_lost = s.lost_total;
+
+        let over_slo = s.p95_ms.is_some_and(|p| p > self.cfg.slo_p95_ms);
+        let queue_full =
+            s.queue_depth > s.active_replicas.max(1) * self.cfg.queue_per_replica;
+        let breach = over_slo || shed_delta > 0 || lost_delta > 0 || queue_full;
+        let calm = !breach
+            && !s.p95_ms.is_some_and(|p| p >= self.cfg.calm_frac * self.cfg.slo_p95_ms)
+            && s.queue_depth <= s.active_replicas * self.cfg.queue_per_replica / 2;
+        if breach {
+            self.breach_ticks += 1;
+            self.calm_ticks = 0;
+        } else {
+            self.breach_ticks = 0;
+            if calm {
+                self.calm_ticks += 1;
+            }
+        }
+
+        // Saturation gates the front door: a deep breach, an exhausted
+        // budget, or nothing left to route to.  Recovery is keyed on
+        // *queue and budget state only* — a closed gate sheds every
+        // arrival (breach stays true) and freezes the latency window
+        // (no new completions), so conditioning reopening on `!breach`
+        // or on p95 would livelock the door shut forever.
+        let deep_breach = s.p95_ms.is_some_and(|p| p > 2.0 * self.cfg.slo_p95_ms);
+        let recovered = s.active_replicas > 0
+            && s.queue_depth <= s.active_replicas * self.cfg.queue_per_replica / 2
+            && !self.budget_exhausted(s.committed_j);
+        // A deep p95 breach with an already-drained queue is a stale
+        // window, not live overload — closing on it would just flap.
+        let want_saturated = (deep_breach && !recovered)
+            || queue_full
+            || s.active_replicas == 0
+            || self.budget_exhausted(s.committed_j);
+        if want_saturated && !self.saturated {
+            self.saturated = true;
+            self.note(ScaleEvent {
+                at_ms: s.at_ms,
+                kind: ScaleKind::Saturated,
+                replica: None,
+                reason: format!(
+                    "queue {} / p95 {} ms: front door closed",
+                    s.queue_depth,
+                    fmt_opt(s.p95_ms)
+                ),
+            });
+        } else if self.saturated && recovered {
+            self.saturated = false;
+            self.note(ScaleEvent {
+                at_ms: s.at_ms,
+                kind: ScaleKind::Recovered,
+                replica: None,
+                reason: format!("queue drained to {}: front door reopened", s.queue_depth),
+            });
+        }
+
+        let mut decisions = Vec::new();
+
+        // Posture: once near the fleet budget, run everything on the
+        // cheap path to stretch what is left (Table V's energy ratio).
+        if !self.degraded_posture && self.budget_degraded(s.committed_j) {
+            self.degraded_posture = true;
+            decisions.push(ScaleDecision::Degrade);
+        }
+
+        // Hysteresis: an action opens a cooldown window of whole ticks
+        // in which no further capacity action fires.
+        if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+            return decisions;
+        }
+
+        if self.breach_ticks >= self.cfg.scale_up_after {
+            let headroom = s.active_replicas < self.cfg.max_replicas;
+            let capacity = s.parked_replicas + s.pool_remaining > 0;
+            if headroom && capacity && !self.budget_exhausted(s.committed_j) {
+                decisions.push(ScaleDecision::ScaleUp);
+                self.breach_ticks = 0;
+                self.cooldown_left = self.cfg.cooldown_ticks;
+            } else if !self.degraded_posture {
+                // No capacity to add: answer the breach with the
+                // faster, cheaper fp16 posture instead.
+                self.degraded_posture = true;
+                decisions.push(ScaleDecision::Degrade);
+                self.breach_ticks = 0;
+                self.cooldown_left = self.cfg.cooldown_ticks;
+            }
+        } else if self.calm_ticks >= self.cfg.scale_down_after
+            && s.active_replicas > self.cfg.min_replicas
+        {
+            decisions.push(ScaleDecision::ScaleDown);
+            self.calm_ticks = 0;
+            self.cooldown_left = self.cfg.cooldown_ticks;
+        }
+
+        decisions
+    }
+
+    /// Record a scaling event (the fleet reports what it actually did,
+    /// with the replica id it picked).
+    pub fn note(&mut self, event: ScaleEvent) {
+        match event.kind {
+            ScaleKind::AddReplica | ScaleKind::ReviveReplica => self.scale_ups += 1,
+            ScaleKind::DrainReplica => self.scale_downs += 1,
+            ScaleKind::DeferDrain => self.deferred_drains += 1,
+            ScaleKind::Degrade => self.degrades += 1,
+            ScaleKind::Saturated | ScaleKind::Recovered => {}
+        }
+        if self.events.len() == EVENT_LOG_CAP {
+            self.events.remove(0);
+        }
+        self.events.push(event.clone());
+        if self.pending.len() == PENDING_CAP {
+            self.pending.remove(0);
+        }
+        self.pending.push(event);
+    }
+
+    /// Drain the events pending delivery (the server attaches them to
+    /// the next placement reply).
+    pub fn take_pending(&mut self) -> Vec<ScaleEvent> {
+        std::mem::take(&mut self.pending)
+    }
+
+    /// Snapshot for `autoscale_stats` / the example's timeline print.
+    pub fn report(&self, sample: &FleetSample, gate: Option<GateStats>) -> AutoscaleReport {
+        AutoscaleReport {
+            gate,
+            slo_p95_ms: self.cfg.slo_p95_ms,
+            recent_p95_ms: sample.p95_ms,
+            active_replicas: sample.active_replicas,
+            parked_replicas: sample.parked_replicas,
+            pool_remaining: sample.pool_remaining,
+            queue_depth: sample.queue_depth,
+            saturated: self.saturated,
+            degraded_posture: self.degraded_posture,
+            ticks: self.ticks,
+            scale_ups: self.scale_ups,
+            scale_downs: self.scale_downs,
+            deferred_drains: self.deferred_drains,
+            degrades: self.degrades,
+            fleet_budget_j: self.cfg.fleet_budget_j,
+            committed_j: sample.committed_j,
+            events: self.events.clone(),
+        }
+    }
+}
+
+fn fmt_opt(v: Option<f64>) -> String {
+    v.map(|x| format!("{x:.1}")).unwrap_or_else(|| "-".into())
+}
+
+/// Control-loop snapshot: counters, posture, and the recent event log.
+#[derive(Debug, Clone)]
+pub struct AutoscaleReport {
+    pub slo_p95_ms: f64,
+    pub recent_p95_ms: Option<f64>,
+    pub active_replicas: usize,
+    pub parked_replicas: usize,
+    pub pool_remaining: usize,
+    pub queue_depth: usize,
+    pub saturated: bool,
+    pub degraded_posture: bool,
+    pub ticks: u64,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub deferred_drains: u64,
+    pub degrades: u64,
+    pub fleet_budget_j: Option<f64>,
+    pub committed_j: f64,
+    /// Front-door counters (cap, saturation flag, admits, sheds split
+    /// by cause).
+    pub gate: Option<GateStats>,
+    pub events: Vec<ScaleEvent>,
+}
+
+impl AutoscaleReport {
+    /// Wire representation for `{"cmd": "autoscale_stats"}`.
+    pub fn to_json(&self) -> Json {
+        let opt_num = |v: Option<f64>| v.map(Json::num).unwrap_or(Json::Null);
+        Json::object(vec![
+            ("slo_p95_ms", Json::num(self.slo_p95_ms)),
+            ("recent_p95_ms", opt_num(self.recent_p95_ms)),
+            ("active_replicas", Json::num(self.active_replicas as f64)),
+            ("parked_replicas", Json::num(self.parked_replicas as f64)),
+            ("pool_remaining", Json::num(self.pool_remaining as f64)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("saturated", Json::Bool(self.saturated)),
+            ("degraded_posture", Json::Bool(self.degraded_posture)),
+            ("ticks", Json::num(self.ticks as f64)),
+            ("scale_ups", Json::num(self.scale_ups as f64)),
+            ("scale_downs", Json::num(self.scale_downs as f64)),
+            ("deferred_drains", Json::num(self.deferred_drains as f64)),
+            ("degrades", Json::num(self.degrades as f64)),
+            ("fleet_budget_j", opt_num(self.fleet_budget_j)),
+            ("committed_j", Json::num(self.committed_j)),
+            (
+                "gate",
+                match &self.gate {
+                    Some(g) => Json::object(vec![
+                        ("max_queue", Json::num(g.max_queue as f64)),
+                        ("saturated", Json::Bool(g.saturated)),
+                        ("admitted", Json::num(g.admitted as f64)),
+                        ("shed_saturated", Json::num(g.shed_saturated as f64)),
+                        ("shed_queue", Json::num(g.shed_queue as f64)),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "events",
+                Json::Array(self.events.iter().map(ScaleEvent::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Multi-line human-readable report with the event timeline.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "autoscale slo_p95={} ms recent_p95={} ms active={} parked={} pool={} queue={}\n\
+             ticks={} ups={} downs={} deferred={} degrades={} saturated={} posture={}{}\n",
+            self.slo_p95_ms,
+            fmt_opt(self.recent_p95_ms),
+            self.active_replicas,
+            self.parked_replicas,
+            self.pool_remaining,
+            self.queue_depth,
+            self.ticks,
+            self.scale_ups,
+            self.scale_downs,
+            self.deferred_drains,
+            self.degrades,
+            self.saturated,
+            if self.degraded_posture { "fp16" } else { "nominal" },
+            match self.fleet_budget_j {
+                Some(b) => format!(" budget {:.1}/{b:.1} J", self.committed_j),
+                None => String::new(),
+            },
+        );
+        if let Some(g) = &self.gate {
+            out.push_str(&format!(
+                "gate cap={} admitted={} shed_queue={} shed_saturated={}\n",
+                g.max_queue, g.admitted, g.shed_queue, g.shed_saturated,
+            ));
+        }
+        for e in &self.events {
+            out.push_str(&format!(
+                "  t={:>9.1} ms  {:<15} {}  {}\n",
+                e.at_ms,
+                e.kind.label(),
+                e.replica.map(|r| format!("r{r}")).unwrap_or_else(|| "-".into()),
+                e.reason,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(at_ms: f64) -> FleetSample {
+        FleetSample {
+            at_ms,
+            active_replicas: 2,
+            parked_replicas: 0,
+            pool_remaining: 4,
+            queue_depth: 0,
+            p95_ms: Some(100.0),
+            shed_total: 0,
+            lost_total: 0,
+            committed_j: 0.0,
+        }
+    }
+
+    fn cfg() -> AutoscaleConfig {
+        let mut c = AutoscaleConfig::new(400.0);
+        c.scale_up_after = 1;
+        c.scale_down_after = 2;
+        c.cooldown_ticks = 0;
+        c
+    }
+
+    #[test]
+    fn parse_kv_round_trip() {
+        let c = AutoscaleConfig::parse(
+            "slo=600, pool=2xn5@fp16+1x6p, min=1, max=6, budget=300, tick=250, \
+             up=2, down=3, cooldown=1, queue=8",
+        )
+        .unwrap();
+        assert_eq!(c.slo_p95_ms, 600.0);
+        assert_eq!(c.warm_pool.len(), 3);
+        assert_eq!(c.warm_pool[0].device.id, "n5");
+        assert_eq!(
+            c.warm_pool[0].precision,
+            crate::simulator::device::Precision::Imprecise
+        );
+        assert_eq!(c.warm_pool[2].device.id, "6p");
+        assert_eq!(c.min_replicas, 1);
+        assert_eq!(c.max_replicas, 6);
+        assert_eq!(c.fleet_budget_j, Some(300.0));
+        assert_eq!(c.tick_ms, 250.0);
+        assert_eq!(c.scale_up_after, 2);
+        assert_eq!(c.scale_down_after, 3);
+        assert_eq!(c.cooldown_ticks, 1);
+        assert_eq!(c.queue_per_replica, 8);
+    }
+
+    #[test]
+    fn parse_rejects_bad_input() {
+        assert!(AutoscaleConfig::parse("pool=2xn5").is_err(), "slo is required");
+        assert!(AutoscaleConfig::parse("slo=0").is_err());
+        assert!(AutoscaleConfig::parse("slo=400,min=0").is_err());
+        assert!(AutoscaleConfig::parse("slo=400,min=4,max=2").is_err());
+        assert!(AutoscaleConfig::parse("slo=400,tick=-1").is_err());
+        assert!(AutoscaleConfig::parse("slo=400,pool=9xwatch").is_err());
+        assert!(AutoscaleConfig::parse("slo=400,frobnicate=1").is_err());
+        assert!(AutoscaleConfig::parse("slo=nope").is_err());
+    }
+
+    #[test]
+    fn breach_scales_up_and_hysteresis_cools_down() {
+        let mut c = cfg();
+        c.cooldown_ticks = 2;
+        let mut a = Autoscaler::new(c);
+        let mut s = sample(500.0);
+        s.p95_ms = Some(900.0); // over the 400 ms SLO
+        assert_eq!(a.tick(&s), vec![ScaleDecision::ScaleUp]);
+        // still breaching, but inside the cooldown window: no action
+        s.at_ms = 1000.0;
+        assert!(a.tick(&s).is_empty());
+        s.at_ms = 1500.0;
+        assert!(a.tick(&s).is_empty());
+        // cooldown over, breach persists: scale up again
+        s.at_ms = 2000.0;
+        assert_eq!(a.tick(&s), vec![ScaleDecision::ScaleUp]);
+    }
+
+    #[test]
+    fn shed_delta_counts_as_breach() {
+        let mut a = Autoscaler::new(cfg());
+        let mut s = sample(500.0);
+        s.shed_total = 3; // sheds since the last tick
+        assert_eq!(a.tick(&s), vec![ScaleDecision::ScaleUp]);
+        // same lifetime total next tick: no new sheds, no breach
+        s.at_ms = 1000.0;
+        assert!(a.tick(&s).is_empty());
+    }
+
+    #[test]
+    fn calm_streak_scales_down_to_min() {
+        let mut a = Autoscaler::new(cfg());
+        let mut s = sample(500.0);
+        s.p95_ms = Some(50.0); // well under calm_frac * slo
+        assert!(a.tick(&s).is_empty(), "one calm tick is not enough");
+        s.at_ms = 1000.0;
+        assert_eq!(a.tick(&s), vec![ScaleDecision::ScaleDown]);
+        // at min_replicas no further scale-down fires
+        s.active_replicas = 1;
+        s.at_ms = 1500.0;
+        s.p95_ms = Some(50.0);
+        let _ = a.tick(&s);
+        s.at_ms = 2000.0;
+        assert!(a.tick(&s).is_empty());
+    }
+
+    #[test]
+    fn pool_exhaustion_degrades_instead_of_adding() {
+        let mut a = Autoscaler::new(cfg());
+        let mut s = sample(500.0);
+        s.p95_ms = Some(900.0);
+        s.pool_remaining = 0;
+        s.parked_replicas = 0;
+        assert_eq!(a.tick(&s), vec![ScaleDecision::Degrade]);
+        assert!(a.degraded_posture);
+        // degrade is sticky: the next breach with no capacity is a no-op
+        s.at_ms = 1000.0;
+        assert!(a.tick(&s).is_empty());
+    }
+
+    #[test]
+    fn budget_pressure_degrades_then_saturates() {
+        let mut c = cfg();
+        c.fleet_budget_j = Some(100.0);
+        let mut a = Autoscaler::new(c);
+        let mut s = sample(500.0);
+        s.committed_j = 85.0; // past degrade_frac * budget
+        assert_eq!(a.tick(&s), vec![ScaleDecision::Degrade]);
+        assert!(a.degraded_posture);
+        s.at_ms = 1000.0;
+        s.committed_j = 105.0; // past the budget entirely
+        s.p95_ms = Some(900.0); // breach, but no joules left to add with
+        assert!(a.tick(&s).is_empty());
+        assert!(a.saturated, "exhausted budget must close the front door");
+    }
+
+    #[test]
+    fn saturation_is_sticky_until_the_queue_drains() {
+        let mut a = Autoscaler::new(cfg());
+        let mut s = sample(500.0);
+        s.p95_ms = Some(1000.0); // > 2x SLO: deep breach...
+        s.queue_depth = 40; // ...with a live overloaded queue
+        let _ = a.tick(&s);
+        assert!(a.saturated);
+        // Latency window looks better but the queue is still deep:
+        // stays closed.  Recovery is keyed on queue+budget, NOT on the
+        // breach flag — a closed gate sheds every arrival (permanent
+        // breach) and freezes the p95 window, so a breach-based reopen
+        // would livelock the door shut (the PR-3 review finding).
+        s.at_ms = 1000.0;
+        s.p95_ms = Some(100.0);
+        s.queue_depth = 30;
+        let _ = a.tick(&s);
+        assert!(a.saturated);
+        // queue drained below half the per-replica allowance: reopens
+        s.at_ms = 1500.0;
+        s.queue_depth = 0;
+        let _ = a.tick(&s);
+        assert!(!a.saturated);
+        // a stale deep p95 over an empty queue must not close (or
+        // flap) the door again
+        s.at_ms = 2000.0;
+        s.p95_ms = Some(5000.0);
+        let _ = a.tick(&s);
+        assert!(!a.saturated);
+        let kinds: Vec<ScaleKind> = a.events.iter().map(|e| e.kind).collect();
+        assert!(kinds.contains(&ScaleKind::Saturated));
+        assert!(kinds.contains(&ScaleKind::Recovered));
+    }
+
+    #[test]
+    fn events_feed_counters_and_pending_drains() {
+        let mut a = Autoscaler::new(cfg());
+        a.note(ScaleEvent {
+            at_ms: 1.0,
+            kind: ScaleKind::AddReplica,
+            replica: Some(2),
+            reason: "test".into(),
+        });
+        a.note(ScaleEvent {
+            at_ms: 2.0,
+            kind: ScaleKind::DeferDrain,
+            replica: Some(1),
+            reason: "rerouted orphans in queue".into(),
+        });
+        assert_eq!(a.scale_ups, 1);
+        assert_eq!(a.deferred_drains, 1);
+        let pending = a.take_pending();
+        assert_eq!(pending.len(), 2);
+        assert!(a.take_pending().is_empty());
+        // the log is retained
+        assert_eq!(a.events.len(), 2);
+        let s = sample(500.0);
+        let report = a.report(
+            &s,
+            Some(GateStats {
+                max_queue: 32,
+                saturated: false,
+                admitted: 7,
+                shed_saturated: 0,
+                shed_queue: 2,
+            }),
+        );
+        assert_eq!(report.scale_ups, 1);
+        assert_eq!(report.gate.unwrap().shed_queue, 2);
+        assert!(report.render().contains("gate cap=32"));
+        let json = report.to_json();
+        assert_eq!(
+            json.get("events").and_then(Json::as_array).map(|a| a.len()),
+            Some(2)
+        );
+        assert!(report.render().contains("add_replica"));
+    }
+}

@@ -39,12 +39,36 @@
 //! same code path backs `examples/fleet_sim.rs`, the
 //! `benches/fleet_routing.rs` policy comparison, and the TCP server's
 //! `fleet_stats` / fleet-backed infer path.
+//!
+//! **Closed-loop autoscaling** ([`autoscaler`]) makes the topology
+//! elastic: every `tick_ms` of virtual time the controller samples the
+//! `fleet_stats` counters (queue depth, recent p95 latency, committed
+//! joules, shed/lost totals) and either provisions a replica from a
+//! cheapest-joules-first warm pool, drains the most expensive idle one
+//! back into the pool, or degrades the whole fleet to the fp16 posture
+//! — defending a latency SLO (`slo_p95_ms`) under a fleet-wide joule
+//! budget.  With autoscaling on, the fleet also meters *idle* energy
+//! (the baseline rail of every provisioned replica-second — see
+//! [`idle_power_w`](crate::simulator::power::idle_power_w)), so an
+//! over-provisioned static topology pays for its slack, and the front
+//! door is guarded by a
+//! [`FleetGate`](crate::coordinator::admission::FleetGate) that sheds
+//! *before* enqueueing once the controller reports saturation.
+//! Configure with [`FleetConfig::with_autoscale`], the
+//! `fleet_autoscale` config key, `MCN_FLEET_AUTOSCALE`, or
+//! `--fleet-autoscale` (compact `slo=...,pool=...` form — see
+//! [`AutoscaleConfig::parse`]).
 
+pub mod autoscaler;
 pub mod budget;
 pub mod health;
 pub mod replica;
 pub mod router;
 
+pub use autoscaler::{
+    AutoscaleConfig, AutoscaleReport, Autoscaler, FleetSample, ScaleDecision, ScaleEvent,
+    ScaleKind,
+};
 pub use budget::{BudgetState, JouleBudget};
 pub use health::{Health, HealthAction, HealthEvent};
 pub use replica::{max_request_energy_j, FleetBatch, Orphan, Placement, Replica, ReplicaSpec};
@@ -53,6 +77,7 @@ pub use router::{Candidate, Policy, Router};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::coordinator::admission::{FleetGate, GateDecision};
 use crate::coordinator::trace::Trace;
 use crate::coordinator::PlanCache;
 use crate::telemetry::LatencyRecorder;
@@ -61,19 +86,36 @@ use crate::util::json::Json;
 /// Fleet construction parameters.
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
+    /// Initial topology (the autoscaler may grow past it, up to
+    /// `max_replicas`, from its warm pool).
     pub replicas: Vec<ReplicaSpec>,
     pub policy: Policy,
     /// Per-replica joule budget (`None` = unmetered).
     pub budget_j: Option<f64>,
     /// Per-replica dynamic batching (default: single-image service).
     pub batch: FleetBatch,
+    /// Closed-loop autoscaling (default: static topology).
+    pub autoscale: Option<AutoscaleConfig>,
+    /// Meter the baseline rail of every provisioned replica-second
+    /// into the fleet's total energy.  Off by default (the paper's
+    /// per-image accounting); forced on by `with_autoscale`, where
+    /// provisioning slack is exactly the cost the loop trades against.
+    pub idle_power: bool,
     /// Seed for the sampling policies' RNG.
     pub seed: u64,
 }
 
 impl FleetConfig {
     pub fn new(replicas: Vec<ReplicaSpec>, policy: Policy) -> FleetConfig {
-        FleetConfig { replicas, policy, budget_j: None, batch: FleetBatch::single(), seed: 0 }
+        FleetConfig {
+            replicas,
+            policy,
+            budget_j: None,
+            batch: FleetBatch::single(),
+            autoscale: None,
+            idle_power: false,
+            seed: 0,
+        }
     }
 
     /// Parse a topology spec: comma-separated `[COUNTx]DEVICE[@PRECISION]`
@@ -127,6 +169,22 @@ impl FleetConfig {
         self.seed = seed;
         self
     }
+
+    /// Attach the closed-loop autoscaler.  Idle-energy metering turns
+    /// on with it: the loop's whole point is trading provisioned
+    /// baseline joules against the latency SLO.
+    pub fn with_autoscale(mut self, autoscale: AutoscaleConfig) -> FleetConfig {
+        self.idle_power = true;
+        self.autoscale = Some(autoscale);
+        self
+    }
+
+    /// Meter idle (baseline-rail) energy without an autoscaler — the
+    /// honest cost of a static over-provisioned topology.
+    pub fn with_idle_power(mut self, on: bool) -> FleetConfig {
+        self.idle_power = on;
+        self
+    }
 }
 
 /// Mutable fleet state, behind one lock (dispatch is queue math only —
@@ -144,18 +202,61 @@ struct FleetState {
     lost: u64,
     /// Fleet-wide latency aggregate across all replicas.
     fleet_latency: LatencyRecorder,
+    /// Short-window latency the control loop reads p95 from — a small
+    /// window so the controller reacts to the last few seconds, not
+    /// the whole trace.
+    recent_latency: LatencyRecorder,
+    /// Shared autotune cache; kept so the autoscaler can price and
+    /// provision new replicas mid-trace.
+    cache: PlanCache,
+    /// Per-replica joule budget applied to provisioned replicas.
+    budget: Option<JouleBudget>,
+    /// Batching knobs applied to provisioned replicas.
+    batch: FleetBatch,
+    /// Meter baseline-rail idle energy per provisioned replica-second.
+    idle_on: bool,
+    /// Warm pool (sorted cheapest joules-per-request first) and the
+    /// next entry to provision.
+    pool: Vec<ReplicaSpec>,
+    pool_cursor: usize,
+    /// The control loop, when configured.
+    autoscaler: Option<Autoscaler>,
+    /// Front door for the fleet dispatch path (present iff autoscaling
+    /// is on).
+    gate: Option<FleetGate>,
 }
 
 impl FleetState {
-    /// Advance virtual time (monotone) and collect completions.
+    /// Advance virtual time, running control ticks at their boundaries
+    /// so scaling decisions happen *at* tick time even when the clock
+    /// jumps far ahead between arrivals.
     fn advance(&mut self, t_ms: f64) {
+        while let Some(tick_ms) = self.autoscaler.as_ref().map(Autoscaler::next_tick_ms) {
+            if tick_ms > t_ms {
+                break;
+            }
+            self.advance_raw(tick_ms);
+            self.autoscale_tick(tick_ms.max(self.clock_ms));
+        }
+        self.advance_raw(t_ms);
+    }
+
+    /// Advance the monotone clock, settle idle meters, and collect
+    /// completions.
+    fn advance_raw(&mut self, t_ms: f64) {
         if t_ms > self.clock_ms {
             self.clock_ms = t_ms;
         }
         let now = self.clock_ms;
+        let idle_on = self.idle_on;
         for r in &mut self.replicas {
+            if idle_on {
+                r.accrue_idle(now);
+            }
             for latency_ms in r.collect(now) {
-                self.fleet_latency.record(Duration::from_secs_f64(latency_ms / 1e3));
+                let d = Duration::from_secs_f64(latency_ms / 1e3);
+                self.fleet_latency.record(d);
+                self.recent_latency.record(d);
             }
         }
     }
@@ -182,6 +283,173 @@ impl FleetState {
             .place(&candidates)
             .map(|idx| self.replicas[idx].admit(now_ms, anchor_ms))
     }
+
+    /// The control loop's observation — the same counters
+    /// `fleet_stats` reports.
+    fn sample(&self, at_ms: f64) -> FleetSample {
+        FleetSample {
+            at_ms,
+            active_replicas: self
+                .replicas
+                .iter()
+                .filter(|r| r.health.accepts_traffic())
+                .count(),
+            parked_replicas: self
+                .replicas
+                .iter()
+                .filter(|r| r.parked && r.in_flight() == 0)
+                .count(),
+            pool_remaining: self.pool.len() - self.pool_cursor,
+            queue_depth: self.replicas.iter().map(Replica::in_flight).sum(),
+            p95_ms: self.recent_latency.percentile_ms(0.95),
+            shed_total: self.shed,
+            lost_total: self.lost,
+            committed_j: self
+                .replicas
+                .iter()
+                .map(|r| r.energy_spent_j + r.energy_queued_j + r.idle_energy_j)
+                .sum(),
+        }
+    }
+
+    /// Run one control tick: sample, decide, apply, refresh the gate.
+    fn autoscale_tick(&mut self, at_ms: f64) {
+        let Some(mut asc) = self.autoscaler.take() else { return };
+        let sample = self.sample(at_ms);
+        for decision in asc.tick(&sample) {
+            match decision {
+                ScaleDecision::ScaleUp => self.apply_scale_up(at_ms, &mut asc),
+                ScaleDecision::ScaleDown => self.apply_scale_down(at_ms, &mut asc),
+                ScaleDecision::Degrade => {
+                    for r in &mut self.replicas {
+                        r.degraded = true;
+                    }
+                    asc.note(ScaleEvent {
+                        at_ms,
+                        kind: ScaleKind::Degrade,
+                        replica: None,
+                        reason: "fleet posture -> fp16".into(),
+                    });
+                }
+            }
+        }
+        if let Some(gate) = &mut self.gate {
+            let active = self
+                .replicas
+                .iter()
+                .filter(|r| r.health.accepts_traffic())
+                .count();
+            gate.resize(active.max(1) * asc.cfg.queue_per_replica);
+            gate.set_saturated(asc.saturated);
+        }
+        self.autoscaler = Some(asc);
+    }
+
+    /// Add capacity: revive the cheapest parked replica, else
+    /// provision the next (cheapest) warm-pool spec.
+    fn apply_scale_up(&mut self, at_ms: f64, asc: &mut Autoscaler) {
+        let parked = self
+            .replicas
+            .iter()
+            .filter(|r| r.parked && r.in_flight() == 0)
+            .min_by(|a, b| {
+                a.energy_per_request_j()
+                    .partial_cmp(&b.energy_per_request_j())
+                    .unwrap()
+            })
+            .map(|r| r.id);
+        if let Some(id) = parked {
+            self.replicas[id].revive(at_ms);
+            // A degraded fleet posture outlives individual replicas:
+            // capacity added after the degrade serves fp16 too.
+            if asc.degraded_posture {
+                self.replicas[id].degraded = true;
+            }
+            let name = self.replicas[id].name.clone();
+            asc.note(ScaleEvent {
+                at_ms,
+                kind: ScaleKind::ReviveReplica,
+                replica: Some(id),
+                reason: format!("revived parked {name}"),
+            });
+            return;
+        }
+        if self.pool_cursor < self.pool.len() {
+            let spec = self.pool[self.pool_cursor].clone();
+            self.pool_cursor += 1;
+            let id = self.add_replica(spec, at_ms);
+            if asc.degraded_posture {
+                self.replicas[id].degraded = true;
+            }
+            let name = self.replicas[id].name.clone();
+            asc.note(ScaleEvent {
+                at_ms,
+                kind: ScaleKind::AddReplica,
+                replica: Some(id),
+                reason: format!("provisioned {name} from warm pool"),
+            });
+        }
+    }
+
+    /// Remove capacity: drain the least-loaded (ideally idle) healthy
+    /// replica, preferring the most expensive rails.  A victim that
+    /// still holds re-routed orphans of a failed peer is *deferred*,
+    /// not drained — `Fleet::fail`'s re-routing and the control loop
+    /// must not race capacity out from under the absorbed queue.
+    fn apply_scale_down(&mut self, at_ms: f64, asc: &mut Autoscaler) {
+        let victim = self
+            .replicas
+            .iter()
+            .filter(|r| r.health.accepts_traffic())
+            .min_by(|a, b| {
+                // least loaded first; among equals, highest keep-alive
+                // cost drains first (idle rail, then service joules)
+                (a.in_flight() as f64, -a.idle_power_w(), -a.energy_per_request_j())
+                    .partial_cmp(&(
+                        b.in_flight() as f64,
+                        -b.idle_power_w(),
+                        -b.energy_per_request_j(),
+                    ))
+                    .unwrap()
+            })
+            .map(|r| r.id);
+        let Some(id) = victim else { return };
+        if self.replicas[id].holds_rerouted() {
+            let name = self.replicas[id].name.clone();
+            asc.note(ScaleEvent {
+                at_ms,
+                kind: ScaleKind::DeferDrain,
+                replica: Some(id),
+                reason: format!("{name} still holds re-routed orphans of a failed peer"),
+            });
+            return;
+        }
+        if self.replicas[id].in_flight() > 0 {
+            return; // nothing idle enough to park this tick
+        }
+        if self.idle_on {
+            self.replicas[id].accrue_idle(at_ms);
+        }
+        self.replicas[id].drain();
+        self.replicas[id].parked = true;
+        let name = self.replicas[id].name.clone();
+        asc.note(ScaleEvent {
+            at_ms,
+            kind: ScaleKind::DrainReplica,
+            replica: Some(id),
+            reason: format!("parked idle {name}"),
+        });
+    }
+
+    /// Provision a new replica mid-trace (autotuned through the shared
+    /// cache; its idle meter starts now, not at virtual zero).
+    fn add_replica(&mut self, spec: ReplicaSpec, at_ms: f64) -> usize {
+        let id = self.replicas.len();
+        let mut r = Replica::new(id, spec, self.budget, self.batch.clone(), &self.cache);
+        r.activate_at(at_ms);
+        self.replicas.push(r);
+        id
+    }
 }
 
 /// N simulated device replicas behind a single dispatch API.
@@ -193,7 +461,9 @@ pub struct Fleet {
 
 impl Fleet {
     /// Build the fleet.  Each distinct (device, precision) pair is
-    /// autotuned once through a shared [`PlanCache`].
+    /// autotuned once through a shared [`PlanCache`]; the autoscaler's
+    /// warm pool is priced through the same cache and sorted cheapest
+    /// joules-per-request first.
     pub fn new(config: FleetConfig) -> Fleet {
         let cache = PlanCache::new();
         let budget = config.budget_j.map(JouleBudget::new);
@@ -204,8 +474,25 @@ impl Fleet {
             .map(|(i, spec)| Replica::new(i, spec.clone(), budget, config.batch.clone(), &cache))
             .collect();
         let router = Router::new(config.policy, config.seed);
+        let price = |spec: &ReplicaSpec| {
+            Replica::new(0, spec.clone(), None, FleetBatch::single(), &cache)
+                .energy_per_request_j()
+        };
+        let pool = match &config.autoscale {
+            Some(a) => {
+                let mut priced: Vec<(f64, ReplicaSpec)> =
+                    a.warm_pool.iter().map(|s| (price(s), s.clone())).collect();
+                priced.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+                priced.into_iter().map(|(_, s)| s).collect()
+            }
+            None => Vec::new(),
+        };
+        let gate = config
+            .autoscale
+            .as_ref()
+            .map(|a| FleetGate::new((replicas.len() * a.queue_per_replica).max(1)));
+        let autoscaler = config.autoscale.clone().map(Autoscaler::new);
         Fleet {
-            config,
             state: Mutex::new(FleetState {
                 replicas,
                 router,
@@ -214,7 +501,17 @@ impl Fleet {
                 rerouted: 0,
                 lost: 0,
                 fleet_latency: LatencyRecorder::new(8192),
+                recent_latency: LatencyRecorder::new(128),
+                cache,
+                budget,
+                batch: config.batch.clone(),
+                idle_on: config.idle_power,
+                pool,
+                pool_cursor: 0,
+                autoscaler,
+                gate,
             }),
+            config,
         }
     }
 
@@ -222,12 +519,13 @@ impl Fleet {
         &self.config
     }
 
+    /// Current replica count (provisioned replicas included).
     pub fn len(&self) -> usize {
-        self.config.replicas.len()
+        self.state.lock().unwrap().replicas.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.config.replicas.is_empty()
+        self.len() == 0
     }
 
     /// Advance virtual time to `t_ms`, completing finished requests.
@@ -237,11 +535,23 @@ impl Fleet {
 
     /// Dispatch one request arriving at `arrival_ms` (virtual or
     /// wall-clock milliseconds; the clock is monotone either way).
-    /// `None` means the request was shed — no replica is available.
+    /// `None` means the request was shed — the front-door gate closed
+    /// it out (autoscaled fleets), or no replica is available.
     pub fn dispatch(&self, arrival_ms: f64) -> Option<Placement> {
         let mut st = self.state.lock().unwrap();
         st.advance(arrival_ms);
         let now = st.clock_ms;
+        // Front door: with autoscaling on, shed *before* enqueueing
+        // when the gate's queue cap is full or the controller reported
+        // saturation — queues past the SLO help nobody.
+        if st.gate.is_some() {
+            let queued: usize = st.replicas.iter().map(Replica::in_flight).sum();
+            let gate = st.gate.as_mut().expect("checked above");
+            if gate.admit(queued) != GateDecision::Admit {
+                st.shed += 1;
+                return None;
+            }
+        }
         // Latency stays anchored at the true arrival even when another
         // caller already advanced the clock past it (out-of-order
         // wall-clock dispatches must not lose their queue wait).
@@ -264,10 +574,39 @@ impl Fleet {
     }
 
     /// Gracefully remove a replica from rotation (queued work completes).
+    /// Unconditional — operator override; prefer [`Fleet::try_drain`]
+    /// when a failed peer's queue may have just re-routed here.
     pub fn drain(&self, replica: usize) {
         let mut st = self.state.lock().unwrap();
+        let now = st.clock_ms;
+        let idle_on = st.idle_on;
         if let Some(r) = st.replicas.get_mut(replica) {
+            if idle_on {
+                r.accrue_idle(now);
+            }
             r.drain();
+        }
+    }
+
+    /// Drain, unless the replica is failed or still holds re-routed
+    /// orphans of a failed peer — the PR-3 race: `Fleet::fail` had
+    /// just re-routed a dead replica's queue onto this one, and a
+    /// concurrent drain would remove exactly the capacity the orphans
+    /// landed on.  Returns whether the drain was applied; a refusal is
+    /// a deferral — retry once the orphans complete.
+    pub fn try_drain(&self, replica: usize) -> bool {
+        let mut st = self.state.lock().unwrap();
+        let now = st.clock_ms;
+        let idle_on = st.idle_on;
+        match st.replicas.get_mut(replica) {
+            Some(r) if r.health != Health::Failed && !r.holds_rerouted() => {
+                if idle_on {
+                    r.accrue_idle(now);
+                }
+                r.drain();
+                true
+            }
+            _ => false,
         }
     }
 
@@ -283,9 +622,16 @@ impl Fleet {
             return;
         }
         let now = st.clock_ms;
+        if st.idle_on {
+            st.replicas[replica].accrue_idle(now);
+        }
         let orphans = st.replicas[replica].fail();
         for orphan in orphans {
-            if st.place(now, orphan.anchor_ms).is_some() {
+            // A successful re-placement marks its target replica as
+            // holding a re-routed rider: autoscaler drains of that
+            // replica are deferred until the orphan completes.
+            if let Some(p) = st.place(now, orphan.anchor_ms) {
+                st.replicas[p.replica].note_rerouted(p.anchor_ms);
                 st.rerouted += 1;
             } else {
                 st.lost += 1;
@@ -317,6 +663,24 @@ impl Fleet {
         self.snapshot(&st)
     }
 
+    /// Snapshot the control loop (`None` when autoscaling is off).
+    pub fn autoscale_report(&self) -> Option<AutoscaleReport> {
+        let st = self.state.lock().unwrap();
+        let sample = st.sample(st.clock_ms);
+        let gate = st.gate.as_ref().map(FleetGate::stats);
+        st.autoscaler.as_ref().map(|a| a.report(&sample, gate))
+    }
+
+    /// Drain scaling events pending delivery (the server attaches them
+    /// to the next fleet-backed infer reply).
+    pub fn take_autoscale_events(&self) -> Vec<ScaleEvent> {
+        let mut st = self.state.lock().unwrap();
+        match &mut st.autoscaler {
+            Some(a) => a.take_pending(),
+            None => Vec::new(),
+        }
+    }
+
     /// Run every queue dry and return the final report.  Open batches
     /// flush at their deadlines first, so the final clock is the exact
     /// virtual time of the last completion.
@@ -344,23 +708,30 @@ impl Fleet {
                 precision: r.effective_precision().label(),
                 health: r.health.label(),
                 degraded: r.degraded,
+                parked: r.parked,
                 placements: r.placements,
                 completed: r.completed,
                 in_flight: r.in_flight(),
                 energy_spent_j: r.energy_spent_j,
+                idle_energy_j: r.idle_energy_j,
                 p50_ms: r.latency.percentile_ms(0.50),
                 p99_ms: r.latency.percentile_ms(0.99),
             })
             .collect();
+        let service_energy_j: f64 = replicas.iter().map(|r| r.energy_spent_j).sum();
+        let idle_energy_j: f64 = replicas.iter().map(|r| r.idle_energy_j).sum();
         FleetReport {
             policy: self.config.policy.label(),
             dispatched: replicas.iter().map(|r| r.placements).sum(),
             completed: replicas.iter().map(|r| r.completed).sum(),
-            total_energy_j: replicas.iter().map(|r| r.energy_spent_j).sum(),
+            service_energy_j,
+            idle_energy_j,
+            total_energy_j: service_energy_j + idle_energy_j,
             shed: st.shed,
             rerouted: st.rerouted,
             lost: st.lost,
             p50_ms: st.fleet_latency.percentile_ms(0.50),
+            p95_ms: st.fleet_latency.percentile_ms(0.95),
             p99_ms: st.fleet_latency.percentile_ms(0.99),
             clock_ms: st.clock_ms,
             replicas,
@@ -377,10 +748,15 @@ pub struct ReplicaStats {
     pub precision: &'static str,
     pub health: &'static str,
     pub degraded: bool,
+    /// Drained by the autoscaler into the warm pool.
+    pub parked: bool,
     pub placements: u64,
     pub completed: u64,
     pub in_flight: usize,
     pub energy_spent_j: f64,
+    /// Baseline-rail joules while provisioned (zero unless the fleet
+    /// meters idle power).
+    pub idle_energy_j: f64,
     pub p50_ms: Option<f64>,
     pub p99_ms: Option<f64>,
 }
@@ -396,15 +772,23 @@ pub struct FleetReport {
     pub replicas: Vec<ReplicaStats>,
     pub dispatched: u64,
     pub completed: u64,
-    /// Rejected at the front door (no replica available at dispatch).
+    /// Rejected at the front door (gate shed, or no replica available
+    /// at dispatch).
     pub shed: u64,
     /// Successful re-placements of a failed replica's orphans.
     pub rerouted: u64,
     /// Orphans of a failed replica that found no replica to re-place
     /// on; these requests are gone, not shed.
     pub lost: u64,
+    /// Differential (per-inference) joules across all replicas.
+    pub service_energy_j: f64,
+    /// Baseline-rail joules for provisioned replica-seconds (zero
+    /// unless idle metering is on).
+    pub idle_energy_j: f64,
+    /// `service_energy_j + idle_energy_j`.
     pub total_energy_j: f64,
     pub p50_ms: Option<f64>,
+    pub p95_ms: Option<f64>,
     pub p99_ms: Option<f64>,
     /// Virtual time of the snapshot.
     pub clock_ms: f64,
@@ -436,9 +820,14 @@ impl FleetReport {
 
     /// Multi-line human-readable report.
     pub fn render(&self) -> String {
+        let idle = if self.idle_energy_j > 0.0 {
+            format!(" (service {:.1} + idle {:.1})", self.service_energy_j, self.idle_energy_j)
+        } else {
+            String::new()
+        };
         let mut out = format!(
             "fleet policy={} replicas={} dispatched={} completed={} shed={} rerouted={} lost={}\n\
-             energy {:.1} J ({:.3} J/req) | latency p50 {} ms p99 {} ms | span {:.2} s\n",
+             energy {:.1} J{} ({:.3} J/req) | latency p50 {} ms p95 {} ms p99 {} ms | span {:.2} s\n",
             self.policy,
             self.replicas.len(),
             self.dispatched,
@@ -447,15 +836,17 @@ impl FleetReport {
             self.rerouted,
             self.lost,
             self.total_energy_j,
+            idle,
             self.energy_per_request_j(),
             opt_ms(self.p50_ms),
+            opt_ms(self.p95_ms),
             opt_ms(self.p99_ms),
             self.clock_ms / 1e3,
         );
         for r in &self.replicas {
             out.push_str(&format!(
                 "  {:<18} {:<9} placements={:<5} completed={:<5} in_flight={:<3} \
-                 energy={:>8.1} J  p50={:>8} ms  p99={:>8} ms{}\n",
+                 energy={:>8.1} J  p50={:>8} ms  p99={:>8} ms{}{}\n",
                 r.name,
                 r.health,
                 r.placements,
@@ -465,6 +856,7 @@ impl FleetReport {
                 opt_ms(r.p50_ms),
                 opt_ms(r.p99_ms),
                 if r.degraded { "  [degraded->fp16]" } else { "" },
+                if r.parked { "  [parked]" } else { "" },
             ));
         }
         out
@@ -480,8 +872,11 @@ impl FleetReport {
             ("shed", Json::num(self.shed as f64)),
             ("rerouted", Json::num(self.rerouted as f64)),
             ("lost", Json::num(self.lost as f64)),
+            ("service_energy_j", Json::num(self.service_energy_j)),
+            ("idle_energy_j", Json::num(self.idle_energy_j)),
             ("total_energy_j", Json::num(self.total_energy_j)),
             ("p50_ms", opt_num(self.p50_ms)),
+            ("p95_ms", opt_num(self.p95_ms)),
             ("p99_ms", opt_num(self.p99_ms)),
             ("clock_ms", Json::num(self.clock_ms)),
             (
@@ -496,10 +891,12 @@ impl FleetReport {
                                 ("precision", Json::str(r.precision)),
                                 ("health", Json::str(r.health)),
                                 ("degraded", Json::Bool(r.degraded)),
+                                ("parked", Json::Bool(r.parked)),
                                 ("placements", Json::num(r.placements as f64)),
                                 ("completed", Json::num(r.completed as f64)),
                                 ("in_flight", Json::num(r.in_flight as f64)),
                                 ("energy_spent_j", Json::num(r.energy_spent_j)),
+                                ("idle_energy_j", Json::num(r.idle_energy_j)),
                                 ("p50_ms", opt_num(r.p50_ms)),
                                 ("p99_ms", opt_num(r.p99_ms)),
                             ])
@@ -818,6 +1215,213 @@ mod tests {
         let report = fleet.finish();
         assert!(report.replicas[0].placements > 0);
         assert_eq!(report.completed, 8);
+    }
+
+    #[test]
+    fn idle_metering_charges_provisioned_replicas() {
+        use crate::simulator::device::DeviceProfile;
+        use crate::simulator::power::idle_power_w;
+        let t = trace(30, 2.0, 9);
+        let run = |idle: bool| {
+            let cfg = FleetConfig::parse_spec("2xs7", Policy::RoundRobin)
+                .unwrap()
+                .with_idle_power(idle);
+            run_trace(&Fleet::new(cfg), &t, &[])
+        };
+        let metered = run(true);
+        let unmetered = run(false);
+        assert_eq!(metered.completed, 30);
+        assert_eq!(unmetered.completed, 30);
+        // idle off: total is service only (the pre-autoscale contract)
+        assert_eq!(unmetered.idle_energy_j, 0.0);
+        assert!((unmetered.total_energy_j - unmetered.service_energy_j).abs() < 1e-9);
+        // idle on: two S7 baselines for the whole provisioned span
+        let w = idle_power_w(&DeviceProfile::galaxy_s7());
+        let expected = 2.0 * w * metered.clock_ms / 1e3;
+        assert!(
+            (metered.idle_energy_j - expected).abs() < 1e-6,
+            "idle {:.4} J vs expected {expected:.4} J",
+            metered.idle_energy_j
+        );
+        assert!(
+            (metered.total_energy_j - metered.service_energy_j - metered.idle_energy_j).abs()
+                < 1e-9
+        );
+        // the service joules are identical either way
+        assert!((metered.service_energy_j - unmetered.service_energy_j).abs() < 1e-9);
+    }
+
+    fn spike_trace(seed: u64) -> Trace {
+        Trace::phases(
+            &[
+                (20, Arrival::Poisson { rate_per_s: 1.5 }),
+                (80, Arrival::Poisson { rate_per_s: 12.0 }),
+                (40, Arrival::Poisson { rate_per_s: 1.5 }),
+            ],
+            0.0,
+            seed,
+        )
+    }
+
+    fn spike_autoscale() -> AutoscaleConfig {
+        let mut a = AutoscaleConfig::new(2000.0)
+            .with_warm_pool(autoscaler::parse_pool("3xn5@fp16").unwrap());
+        a.min_replicas = 1;
+        a.max_replicas = 4;
+        a.tick_ms = 500.0;
+        a.scale_up_after = 1;
+        a.scale_down_after = 4;
+        a.cooldown_ticks = 1;
+        a.queue_per_replica = 2;
+        a
+    }
+
+    #[test]
+    fn autoscaler_rides_a_spike_up_then_down() {
+        // Calm -> 12 req/s spike -> calm, starting from one cheap
+        // replica.  The spike saturates the 2-slot-per-replica gate,
+        // the sheds breach the loop, the warm pool provisions more
+        // N5@fp16 replicas, and the calm tail parks them again.
+        let cfg = FleetConfig::parse_spec("1xn5@fp16", Policy::parse("energy").unwrap())
+            .unwrap()
+            .with_autoscale(spike_autoscale())
+            .with_seed(5);
+        let fleet = Fleet::new(cfg);
+        let t = spike_trace(5);
+        let report = run_trace(&fleet, &t, &[]);
+        // conservation across every add/drain/shed
+        assert_eq!(
+            report.completed + report.shed + report.lost,
+            140,
+            "conservation: {report:?}"
+        );
+        assert_eq!(report.lost, 0);
+        assert!(report.shed > 0, "the spike must shed at the gate before scale-up");
+        let asc = fleet.autoscale_report().expect("autoscaler is on");
+        assert!(asc.scale_ups >= 1, "spike must provision replicas: {asc:?}");
+        assert!(asc.scale_downs >= 1, "calm tail must park replicas: {asc:?}");
+        assert!(report.replicas.len() > 1, "fleet must have grown");
+        assert_eq!(fleet.len(), report.replicas.len());
+        assert!(report.idle_energy_j > 0.0, "autoscaled fleets meter idle joules");
+        // the gate's hard cap bounds every completed latency: at most
+        // (cap riders ahead) + own service on the slowest replica
+        assert!(report.p95_ms.unwrap() <= 2000.0, "p95 {:?}", report.p95_ms);
+        // events narrate the cycle
+        assert!(asc.events.iter().any(|e| e.kind == ScaleKind::AddReplica));
+        assert!(asc.events.iter().any(|e| e.kind == ScaleKind::DrainReplica));
+    }
+
+    #[test]
+    fn autoscale_conservation_under_bursts_failures_and_degrade() {
+        // The property check: `arrivals == completed + shed + lost`
+        // and `dispatched == arrivals - shed + rerouted` hold across
+        // autoscale add/drain/degrade plus injected replica failure,
+        // on a seeded bursty trace, for every seed.
+        for seed in [3u64, 11, 29] {
+            let t = Trace::generate(
+                120,
+                Arrival::Bursty {
+                    rate_per_s: 4.0,
+                    burst_every: 30,
+                    burst_len: 10,
+                    burst_mult: 5.0,
+                },
+                0.0,
+                seed,
+            );
+            let mut asc = AutoscaleConfig::new(600.0)
+                .with_warm_pool(autoscaler::parse_pool("1x6p@fp16,1xn5@fp16").unwrap())
+                .with_fleet_budget_j(Some(60.0));
+            asc.tick_ms = 250.0;
+            asc.cooldown_ticks = 1;
+            asc.queue_per_replica = 3;
+            let cfg = FleetConfig::parse_spec("1xs7,1xn5", Policy::LeastLoaded)
+                .unwrap()
+                .with_autoscale(asc)
+                .with_seed(seed);
+            let fleet = Fleet::new(cfg);
+            let span_ms = t.span().as_secs_f64() * 1e3;
+            let events = vec![
+                HealthEvent::fail(0, span_ms * 0.3),
+                HealthEvent::revive(0, span_ms * 0.7),
+            ];
+            let report = run_trace(&fleet, &t, &events);
+            assert_eq!(
+                report.completed + report.shed + report.lost,
+                120,
+                "seed {seed}: conservation broke: {report:?}"
+            );
+            assert_eq!(
+                report.dispatched,
+                120 - report.shed + report.rerouted,
+                "seed {seed}: dispatch accounting broke: {report:?}"
+            );
+            let asc = fleet.autoscale_report().unwrap();
+            assert!(
+                asc.degraded_posture,
+                "seed {seed}: the 60 J fleet budget must degrade the posture: {asc:?}"
+            );
+            assert!(asc.degrades >= 1, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn gate_sheds_before_enqueueing_at_the_queue_cap() {
+        // One S7, no pool: the gate's 4-slot cap must bound the queue
+        // and shed the rest of a 30-request burst up front.
+        let mut asc = AutoscaleConfig::new(2000.0);
+        asc.max_replicas = 1;
+        asc.queue_per_replica = 4;
+        let cfg = FleetConfig::parse_spec("1xs7", Policy::LeastLoaded)
+            .unwrap()
+            .with_autoscale(asc);
+        let fleet = Fleet::new(cfg);
+        for i in 0..30 {
+            fleet.dispatch(1.0 + i as f64); // 1 ms apart: nothing completes
+        }
+        let report = fleet.finish();
+        assert_eq!(report.completed, 4, "only the gate's 4 slots admit: {report:?}");
+        assert_eq!(report.shed, 26);
+        assert_eq!(report.completed + report.shed + report.lost, 30);
+        // the breach with an empty pool degrades the posture instead
+        let asc = fleet.autoscale_report().unwrap();
+        assert!(asc.degraded_posture, "no capacity to add -> fp16 posture: {asc:?}");
+    }
+
+    #[test]
+    fn drain_defers_while_reroute_is_in_flight() {
+        // The PR-3 race regression: after `fail` re-routes r0's queue
+        // onto r1, draining r1 would remove exactly the capacity the
+        // orphans landed on.  `try_drain` must refuse while r1 still
+        // holds them, then succeed once they complete.
+        for seed in [3u64, 17] {
+            let fleet = Fleet::new(
+                FleetConfig::parse_spec("2xs7", Policy::RoundRobin).unwrap().with_seed(seed),
+            );
+            let t = trace(40, 6.0, seed); // saturating: deep queues on both
+            let span_ms = t.span().as_secs_f64() * 1e3;
+            for entry in &t.entries {
+                fleet.dispatch(entry.at.as_secs_f64() * 1e3);
+            }
+            fleet.run_to(span_ms);
+            fleet.fail(0);
+            let mid = fleet.stats();
+            assert!(mid.rerouted > 0, "seed {seed}: r0's queue must re-route: {mid:?}");
+            assert!(
+                !fleet.try_drain(1),
+                "seed {seed}: drain must defer while re-routed orphans are queued"
+            );
+            assert_eq!(fleet.stats().replicas[1].health, "healthy");
+            // a failed replica can never be drained
+            assert!(!fleet.try_drain(0));
+            let report = fleet.finish();
+            assert_eq!(report.completed, 40, "seed {seed}: {report:?}");
+            assert!(
+                fleet.try_drain(1),
+                "seed {seed}: the deferral lifts once the orphans complete"
+            );
+            assert_eq!(fleet.stats().replicas[1].health, "draining");
+        }
     }
 
     #[test]

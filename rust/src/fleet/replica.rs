@@ -28,7 +28,7 @@ use crate::coordinator::{plan_batches, PlanCache};
 use crate::model::graph::{ConvSpec, SqueezeNet};
 use crate::simulator::cost::{network_dispatch_overhead_ms, network_marginal_time_ms, RunMode};
 use crate::simulator::device::{DeviceProfile, Precision};
-use crate::simulator::power::energy_joules;
+use crate::simulator::power::{energy_joules, idle_power_w};
 use crate::telemetry::LatencyRecorder;
 use crate::util::json::Json;
 
@@ -233,6 +233,9 @@ pub struct Replica {
     pub health: Health,
     /// Budget-forced fp16 fallback (sticky once the soft threshold is hit).
     pub degraded: bool,
+    /// Drained by the autoscaler and returned to the warm pool (idle,
+    /// revivable instantly, accruing no idle energy).
+    pub parked: bool,
     pub budget: Option<JouleBudget>,
     batch: FleetBatch,
     /// Autotuned per-image marginal cost, indexed `[precise, imprecise]`.
@@ -259,6 +262,20 @@ pub struct Replica {
     /// complete, released if the replica fails first).  Budgets meter
     /// `spent + queued`, so a burst cannot admit past the budget.
     pub energy_queued_j: f64,
+    /// Provisioning cost: baseline-rail joules accrued while the
+    /// replica is kept on (Table V's "Baseline" column).  Metered only
+    /// when the fleet enables idle accounting; kept separate from
+    /// `energy_spent_j` so per-replica joule budgets stay a meter of
+    /// useful work.
+    pub idle_energy_j: f64,
+    /// Baseline rail power (W) the idle meter charges.
+    idle_w: f64,
+    /// Virtual time idle energy has been settled up to.
+    idle_from_ms: f64,
+    /// Latency anchors of re-routed orphans (from a failed peer) still
+    /// queued here.  While non-empty, an autoscaler drain of this
+    /// replica is deferred — see [`Replica::holds_rerouted`].
+    rerouted_anchors: Vec<f64>,
     pub placements: u64,
     pub completed: u64,
     pub latency: LatencyRecorder,
@@ -290,12 +307,14 @@ impl Replica {
             marginal_j[i] = energy_joules(&spec.device, mode, marginal_ms[i]);
         }
         let name = format!("r{id}/{}@{}", spec.device.id, spec.precision.label());
+        let idle_w = idle_power_w(&spec.device);
         Replica {
             id,
             name,
             spec,
             health: Health::Healthy,
             degraded: false,
+            parked: false,
             budget,
             batch,
             marginal_ms,
@@ -310,10 +329,62 @@ impl Replica {
             in_flight_count: 0,
             energy_spent_j: 0.0,
             energy_queued_j: 0.0,
+            idle_energy_j: 0.0,
+            idle_w,
+            idle_from_ms: 0.0,
+            rerouted_anchors: Vec::new(),
             placements: 0,
             completed: 0,
             latency: LatencyRecorder::new(4096),
         }
+    }
+
+    /// Start this replica's idle meter at `now_ms` — used when the
+    /// autoscaler provisions a replica mid-trace, so it is not charged
+    /// baseline joules for virtual time before it existed.
+    pub fn activate_at(&mut self, now_ms: f64) {
+        self.idle_from_ms = now_ms;
+    }
+
+    /// Virtual time up to which the idle meter charges: a healthy
+    /// replica is held on continuously; a draining one only until its
+    /// queue runs dry (then it is parked/powered down); a failed one
+    /// charges nothing further.
+    fn idle_active_until(&self, now_ms: f64) -> f64 {
+        match self.health {
+            Health::Healthy => now_ms,
+            Health::Draining => self
+                .last_finish_ms()
+                .map(|f| f.min(now_ms))
+                .unwrap_or(self.idle_from_ms),
+            Health::Failed => self.idle_from_ms,
+        }
+    }
+
+    /// Settle baseline-rail idle energy up to `now_ms` (no-op for
+    /// parked, failed, or already-settled spans).  The fleet calls this
+    /// on every virtual-time advance when idle accounting is on.
+    pub fn accrue_idle(&mut self, now_ms: f64) {
+        let until = self.idle_active_until(now_ms);
+        if until > self.idle_from_ms {
+            self.idle_energy_j += self.idle_w * (until - self.idle_from_ms) / 1e3;
+            self.idle_from_ms = until;
+        }
+    }
+
+    /// Mark the rider admitted with `anchor_ms` as a re-routed orphan
+    /// of a failed peer.  While any such rider is still queued here,
+    /// [`holds_rerouted`](Self::holds_rerouted) defers autoscaler
+    /// drains of this replica.
+    pub fn note_rerouted(&mut self, anchor_ms: f64) {
+        self.rerouted_anchors.push(anchor_ms);
+    }
+
+    /// Does this replica still hold re-routed orphans in its queue?  A
+    /// drain while true would remove the very capacity that just
+    /// absorbed a failed peer's queue — the autoscaler defers instead.
+    pub fn holds_rerouted(&self) -> bool {
+        !self.rerouted_anchors.is_empty()
     }
 
     /// Configured precision, unless the budget degraded us to fp16.
@@ -396,6 +467,11 @@ impl Replica {
     /// Riders in the open (still accumulating) batch.
     pub fn open_fill(&self) -> usize {
         self.open_anchors.len()
+    }
+
+    /// Baseline rail power (W) this replica's idle meter charges.
+    pub fn idle_power_w(&self) -> f64 {
+        self.idle_w
     }
 
     /// Virtual time the last queued work finishes.  An unflushed open
@@ -577,6 +653,11 @@ impl Replica {
                 self.latency.record(Duration::from_secs_f64(latency_ms / 1e3));
                 self.completed += 1;
                 done.push(latency_ms);
+                // Riders sharing an anchor are fungible; retiring any
+                // one of them releases one re-route hold.
+                if let Some(pos) = self.rerouted_anchors.iter().position(|a| a == anchor) {
+                    self.rerouted_anchors.swap_remove(pos);
+                }
             }
             self.in_flight_count = self.in_flight_count.saturating_sub(b.anchors.len());
             self.energy_queued_j = (self.energy_queued_j - b.energy_total_j).max(0.0);
@@ -616,6 +697,7 @@ impl Replica {
                 if self.open_anchors.is_empty() {
                     self.open_deadline_ms = f64::INFINITY;
                 }
+                self.release_reroute_hold(placement.anchor_ms);
                 return true;
             }
         }
@@ -648,9 +730,20 @@ impl Replica {
             }
             self.in_flight_count = self.in_flight_count.saturating_sub(1);
             self.placements = self.placements.saturating_sub(1);
+            self.release_reroute_hold(placement.anchor_ms);
             return true;
         }
         false
+    }
+
+    /// Drop one re-route hold matching `anchor_ms`, if any (riders
+    /// sharing an anchor are fungible — see [`retract_last`]).
+    ///
+    /// [`retract_last`]: Self::retract_last
+    fn release_reroute_hold(&mut self, anchor_ms: f64) {
+        if let Some(pos) = self.rerouted_anchors.iter().position(|&a| a == anchor_ms) {
+            self.rerouted_anchors.swap_remove(pos);
+        }
     }
 
     /// Kill the replica: queued work (open and scheduled alike) is
@@ -659,9 +752,11 @@ impl Replica {
     /// joules were spent on a useful answer).
     pub fn fail(&mut self) -> Vec<Orphan> {
         self.health = Health::Failed;
+        self.parked = false;
         self.busy_until_ms = 0.0;
         self.energy_queued_j = 0.0;
         self.in_flight_count = 0;
+        self.rerouted_anchors.clear();
         let mut orphans = Vec::new();
         for b in self.scheduled.drain(..) {
             orphans.extend(b.anchors.iter().map(|&anchor_ms| Orphan { anchor_ms }));
@@ -679,9 +774,13 @@ impl Replica {
     }
 
     /// Bring the replica back into rotation at virtual time `now_ms`.
+    /// The idle meter restarts here — a parked or failed span is not
+    /// retroactively charged.
     pub fn revive(&mut self, now_ms: f64) {
         self.health = Health::Healthy;
+        self.parked = false;
         self.busy_until_ms = self.busy_until_ms.max(now_ms);
+        self.idle_from_ms = self.idle_from_ms.max(now_ms);
     }
 }
 
@@ -955,6 +1054,73 @@ mod tests {
                 assert!(r.energy_per_request_j() <= bound + 1e-12, "{} exceeds bound", r.name);
             }
         }
+    }
+
+    #[test]
+    fn idle_meter_charges_baseline_while_on() {
+        let mut r = s7_precise();
+        let w = r.idle_power_w();
+        assert!((w - DeviceProfile::galaxy_s7().power.baseline_mw / 1e3).abs() < 1e-12);
+        // healthy: 10 virtual seconds at the baseline rail
+        r.accrue_idle(10_000.0);
+        assert!((r.idle_energy_j - w * 10.0).abs() < 1e-9);
+        // settled spans are not double-charged
+        r.accrue_idle(10_000.0);
+        assert!((r.idle_energy_j - w * 10.0).abs() < 1e-9);
+        // draining with an empty queue is parked: no further charge
+        r.drain();
+        r.accrue_idle(20_000.0);
+        assert!((r.idle_energy_j - w * 10.0).abs() < 1e-9);
+        // revival restarts the meter at the revive time, not the past
+        r.revive(30_000.0);
+        r.accrue_idle(31_000.0);
+        assert!((r.idle_energy_j - w * 11.0).abs() < 1e-9);
+        // failure stops the meter
+        let _ = r.fail();
+        r.accrue_idle(60_000.0);
+        assert!((r.idle_energy_j - w * 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn draining_idle_meter_stops_when_queue_runs_dry() {
+        let mut r = s7_precise();
+        let w = r.idle_power_w();
+        let s = r.service_ms();
+        r.admit(0.0, 0.0);
+        r.drain();
+        // the queued request finishes at `s`; idle charges only to there
+        r.accrue_idle(10.0 * s);
+        assert!((r.idle_energy_j - w * s / 1e3).abs() < 1e-9);
+        let _ = r.collect(10.0 * s);
+        assert_eq!(r.completed, 1);
+    }
+
+    #[test]
+    fn reroute_holds_clear_on_completion_and_retract() {
+        let mut r = s7_precise();
+        let s = r.service_ms();
+        assert!(!r.holds_rerouted());
+        let _own = r.admit(0.0, 0.0);
+        let p = r.admit(0.0, 123.0); // re-routed orphan, anchor preserved
+        r.note_rerouted(123.0);
+        assert!(r.holds_rerouted());
+        // completing the orphan releases the hold
+        let _ = r.collect(3.0 * s);
+        assert!(!r.holds_rerouted());
+        assert_eq!(r.completed, 2);
+        // a retracted orphan releases its hold too
+        let p2 = r.admit(4.0 * s, 456.0);
+        r.note_rerouted(456.0);
+        assert!(r.holds_rerouted());
+        assert!(r.retract_last(&p2));
+        assert!(!r.holds_rerouted());
+        // fail clears any remaining holds
+        let p3 = r.admit(5.0 * s, 789.0);
+        r.note_rerouted(789.0);
+        let _ = p;
+        let _ = r.fail();
+        assert!(!r.holds_rerouted());
+        let _ = p3;
     }
 
     #[test]

@@ -28,7 +28,7 @@ use anyhow::{Context, Result};
 use mobile_convnet::config::{self, AppConfig};
 use mobile_convnet::coordinator::trace::{Arrival, Trace};
 use mobile_convnet::coordinator::{server, Coordinator};
-use mobile_convnet::fleet::{self, Fleet};
+use mobile_convnet::fleet::{self, AutoscaleConfig, Fleet};
 use mobile_convnet::model::{ImageCorpus, SqueezeNet};
 use mobile_convnet::simulator::device::{DeviceProfile, Precision};
 use mobile_convnet::simulator::{autotune, cost, tables};
@@ -49,15 +49,25 @@ COMMANDS:
                                               [--requests N] [--rate R] [--seed S]
                                               [--budget-j J] [--burst]
                                               [--batch B] [--batch-wait-ms W]
+                                              [--autoscale KV]
   serve       start the TCP JSON-lines server [--addr HOST:PORT] [--config FILE]
                                               [--fleet SPEC] [--fleet-policy P]
                                               [--fleet-batch B] [--fleet-batch-wait-ms W]
+                                              [--fleet-autoscale KV]
   info        artifact & model summary
 
 Fleet specs are comma-separated [COUNTx]DEVICE[@fp32|fp16] atoms, e.g.
 2xs7,1x6p@fp16,n5 (also via MCN_FLEET / MCN_FLEET_POLICY /
 MCN_FLEET_BATCH env).  --batch > 1 turns on per-replica dynamic
 batching: arrivals accumulate into amortized multi-image dispatches.
+
+--fleet-autoscale / --autoscale attach the closed-loop autoscaler
+(also via MCN_FLEET_AUTOSCALE): comma-separated key=value pairs, pool
+atoms joined by '+', e.g. slo=600,pool=2xn5@fp16+1x6p@fp16,max=6 —
+keys: slo (p95 ms, required), pool, min, max, budget (fleet J), tick
+(ms), up, down, cooldown, queue (slots per replica).  The controller
+adds/parks replicas against the SLO and budget, degrades the fleet to
+fp16 under joule pressure, and sheds at the front door when saturated.
 
 Common options: --config FILE (JSON), --artifacts DIR";
 
@@ -92,6 +102,13 @@ fn app_config(args: &Args) -> Result<AppConfig> {
         let wait = args.get_f64_opt("fleet-batch-wait-ms").map_err(|e| anyhow::anyhow!(e))?;
         cfg.fleet =
             Some(config::fleet_from(spec, args.get("fleet-policy"), budget, batch, wait)?);
+    }
+    if let Some(kv) = args.get("fleet-autoscale") {
+        let autoscale = AutoscaleConfig::parse(kv).map_err(|e| anyhow::anyhow!(e))?;
+        match cfg.fleet.take() {
+            Some(f) => cfg.fleet = Some(f.with_autoscale(autoscale)),
+            None => anyhow::bail!("--fleet-autoscale requires a fleet (--fleet or config)"),
+        }
     }
     Ok(cfg)
 }
@@ -246,7 +263,12 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed", 77).map_err(|e| anyhow::anyhow!(e))?;
     let batch = args.get_usize_opt("batch").map_err(|e| anyhow::anyhow!(e))?;
     let wait = args.get_f64_opt("batch-wait-ms").map_err(|e| anyhow::anyhow!(e))?;
-    let cfg = config::fleet_from(spec, args.get("policy"), budget, batch, wait)?.with_seed(seed);
+    let mut cfg =
+        config::fleet_from(spec, args.get("policy"), budget, batch, wait)?.with_seed(seed);
+    if let Some(kv) = args.get("autoscale") {
+        let autoscale = AutoscaleConfig::parse(kv).map_err(|e| anyhow::anyhow!(e))?;
+        cfg = cfg.with_autoscale(autoscale);
+    }
     let n = args.get_usize("requests", 240).map_err(|e| anyhow::anyhow!(e))?;
     let rate = args.get_f64("rate", 8.0).map_err(|e| anyhow::anyhow!(e))?;
     let arrival = if args.flag("burst") {
@@ -270,6 +292,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let fleet = Fleet::new(cfg);
     let report = fleet::run_trace(&fleet, &trace, &[]);
     println!("{}", report.render());
+    if let Some(asc) = fleet.autoscale_report() {
+        println!("{}", asc.render());
+    }
     Ok(())
 }
 
@@ -283,6 +308,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             f.replicas.len(),
             f.policy.label()
         );
+        if let Some(a) = &f.autoscale {
+            println!(
+                "autoscale: slo p95 {} ms, warm pool {} specs, {}..={} replicas \
+                 ({{\"cmd\":\"autoscale_stats\"}} for the control loop)",
+                a.slo_p95_ms,
+                a.warm_pool.len(),
+                a.min_replicas,
+                a.max_replicas
+            );
+        }
         Arc::new(Fleet::new(f))
     });
     let stop = Arc::new(AtomicBool::new(false));

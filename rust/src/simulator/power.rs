@@ -36,6 +36,16 @@ pub fn energy_joules(device: &DeviceProfile, mode: RunMode, time_ms: f64) -> f64
     run_power(device, mode).differential_mw / 1e3 * (time_ms / 1e3)
 }
 
+/// Baseline rail power in watts — what merely keeping the device awake
+/// costs (Table V's "Baseline" column).  The paper's per-image energy
+/// excludes it because a phone is on anyway; a *provisioned fleet
+/// replica* is held on deliberately, so the fleet's idle meter and the
+/// autoscaler's fleet-wide joule budget charge this rail for every
+/// replica-second of provisioned time.
+pub fn idle_power_w(device: &DeviceProfile) -> f64 {
+    device.power.baseline_mw / 1e3
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -56,6 +66,14 @@ mod tests {
                 assert!((p.total_mw - p.baseline_mw - p.differential_mw).abs() < 1e-9);
                 assert!(p.differential_mw > 0.0);
             }
+        }
+    }
+
+    #[test]
+    fn idle_power_is_the_baseline_rail() {
+        for d in DeviceProfile::all() {
+            assert!((idle_power_w(&d) - d.power.baseline_mw / 1e3).abs() < 1e-12);
+            assert!(idle_power_w(&d) > 0.0);
         }
     }
 

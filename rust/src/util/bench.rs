@@ -4,8 +4,17 @@
 //! iterations until a wall-clock budget or iteration cap is reached,
 //! report mean / p50 / p95 / min.  Output is line-oriented so the
 //! benches double as table generators for EXPERIMENTS.md.
+//!
+//! Claim-check benches additionally publish their *deterministic*
+//! metrics (virtual-time latencies, joules — stable across machines)
+//! with [`write_json_summary`]; CI collects the files from
+//! `$BENCH_OUT_DIR` as a workflow artifact and `bench_gate` compares
+//! them against the checked-in `BENCH_BASELINE.json`.
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// Statistics for one benchmarked operation.
 #[derive(Debug, Clone)]
@@ -123,6 +132,34 @@ impl Bencher {
     }
 }
 
+/// Publish a bench's deterministic metrics as
+/// `$BENCH_OUT_DIR/<bench>.json` (`{"bench": ..., "metrics": {...}}`).
+/// No-op returning `Ok(None)` when `BENCH_OUT_DIR` is unset, so local
+/// runs stay side-effect free.  Only virtual-time metrics (ms of
+/// simulated latency, joules) belong here — wall-clock timings vary by
+/// machine and would make the CI regression gate flaky.
+pub fn write_json_summary(
+    bench: &str,
+    metrics: &[(&str, f64)],
+) -> std::io::Result<Option<PathBuf>> {
+    let Some(dir) = std::env::var_os("BENCH_OUT_DIR") else {
+        return Ok(None);
+    };
+    let dir = PathBuf::from(dir);
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{bench}.json"));
+    let json = Json::object(vec![
+        ("bench", Json::str(bench)),
+        (
+            "metrics",
+            Json::object(metrics.iter().map(|&(k, v)| (k, Json::num(v))).collect()),
+        ),
+    ]);
+    std::fs::write(&path, format!("{json}\n"))?;
+    println!("bench summary -> {}", path.display());
+    Ok(Some(path))
+}
+
 /// Render an ASCII table: header row + rows of cells, column-aligned.
 /// Shared by the table benches and the CLI report commands.
 pub fn render_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
@@ -174,6 +211,16 @@ mod tests {
         assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
         assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.50 ms");
         assert_eq!(fmt_dur(Duration::from_secs(2)), "2.000 s");
+    }
+
+    #[test]
+    fn json_summary_is_a_noop_without_the_env() {
+        // BENCH_OUT_DIR is not set under `cargo test`; the writer must
+        // not touch the filesystem.
+        if std::env::var_os("BENCH_OUT_DIR").is_none() {
+            let out = write_json_summary("noop_bench", &[("x_ms", 1.5)]).unwrap();
+            assert!(out.is_none());
+        }
     }
 
     #[test]
