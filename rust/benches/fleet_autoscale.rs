@@ -49,7 +49,7 @@ fn autoscale_cfg() -> AutoscaleConfig {
 }
 
 fn main() {
-    let policy = Policy::EnergyAware { lambda_j_per_ms: Policy::DEFAULT_LAMBDA_J_PER_MS };
+    let policy = Policy::EnergyAware { lambda_j_per_ms: None };
     let trace = spike_trace();
     let n = trace.entries.len() as u64;
     println!(

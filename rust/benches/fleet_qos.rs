@@ -1,0 +1,190 @@
+//! Bench for **deadline-aware QoS** (the PR-4 tentpole): on a seeded
+//! mixed-priority trace (bulk + interactive-with-deadlines) through a
+//! heterogeneous fp16 fleet, the QoS-aware dispatch spine must beat
+//! the priority-blind configuration on *both* interactive latency and
+//! deadline misses, at equal-or-lower total joules:
+//!
+//! - interactive (high-priority) p95 strictly lower — deadline-aware
+//!   `EnergyAware` routes tight-slack requests to the fast replica
+//!   while bulk's near-free latency price holds it on the cheap rails;
+//! - deadline-miss rate strictly lower — misses in the blind fleet are
+//!   requests served seconds late out of a shared backlog; in the QoS
+//!   fleet a hopeless rider is shed at dequeue (counted missed, but no
+//!   joules burned) and a feasible one is placed where it still fits;
+//! - total joules equal or lower — the blind fleet spills traffic to
+//!   the fast, expensive replica as soon as queues pass the uniform
+//!   λ-threshold, while the QoS fleet reserves it for urgent work.
+//!
+//! Everything is *self-calibrating*: service times, capacities, the
+//! surge rate, and the deadline budget all derive from the device
+//! models at runtime, so the claims track the simulator instead of
+//! hard-coded milliseconds.  All numbers are deterministic virtual
+//! time and feed the CI regression gate via `BENCH_OUT_DIR`.
+//!
+//! The "blind" fleet is the same fleet with
+//! [`FleetConfig::with_qos_blind`]: QoS is still *accounted* (miss
+//! counters, per-class p95) but never acted on — i.e. the exact
+//! pre-QoS dispatch behavior.
+
+use mobile_convnet::coordinator::trace::{Arrival, Trace};
+use mobile_convnet::coordinator::{PlanCache, Qos};
+use mobile_convnet::fleet::{
+    run_trace, Fleet, FleetBatch, FleetConfig, FleetReport, Policy, Replica, ReplicaSpec,
+};
+use mobile_convnet::simulator::device::{DeviceProfile, Precision};
+use mobile_convnet::util::bench::{write_json_summary, Bencher};
+
+/// Fraction of arrivals in the interactive class.
+const INTERACTIVE_FRAC: f64 = 0.2;
+/// Interactive priority (two classes above bulk's 0).
+const INTERACTIVE_PRIORITY: u8 = 2;
+
+/// Price one `device@fp16` single-image replica through a shared cache.
+fn price(cache: &PlanCache, device: &DeviceProfile) -> Replica {
+    let spec = ReplicaSpec::new(device.clone(), Precision::Imprecise);
+    Replica::new(0, spec, None, FleetBatch::single(), cache)
+}
+
+fn main() {
+    // Self-calibration: find the fastest and the cheapest fp16 device
+    // in the zoo.  The QoS story needs them distinct (speed vs joules
+    // is the paper's Table V/VI tradeoff); if a model change collapses
+    // that, fail loudly here rather than asserting nonsense below.
+    let cache = PlanCache::new();
+    let devices = DeviceProfile::all();
+    let priced: Vec<(DeviceProfile, f64, f64)> = devices
+        .iter()
+        .map(|d| {
+            let r = price(&cache, d);
+            (d.clone(), r.service_ms(), r.energy_per_request_j())
+        })
+        .collect();
+    let fast = priced
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .expect("device zoo is non-empty");
+    let cheap = priced
+        .iter()
+        .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+        .expect("device zoo is non-empty");
+    assert_ne!(
+        fast.0.id, cheap.0.id,
+        "the fp16 zoo must keep a speed-vs-joules tradeoff (fastest {} is also cheapest)",
+        fast.0.id
+    );
+    let (fast_ms, fast_j) = (fast.1, fast.2);
+    let (cheap_ms, cheap_j) = (cheap.1, cheap.2);
+    println!(
+        "fast  = {}@fp16: {:.1} ms, {:.3} J/req\ncheap = {}@fp16: {:.1} ms, {:.3} J/req",
+        fast.0.id, fast_ms, fast_j, cheap.0.id, cheap_ms, cheap_j
+    );
+
+    // 1x fast + 2x cheap; rates derived from the fleet's capacity so
+    // the surge genuinely overloads it whatever the model constants.
+    let spec = format!("1x{}@fp16,2x{}@fp16", fast.0.id, cheap.0.id);
+    let capacity_rps = 1e3 / fast_ms + 2e3 / cheap_ms;
+    let calm_rps = 0.25 * capacity_rps;
+    let surge_rps = 1.6 * capacity_rps;
+    // The interactive latency budget: generous next to the fast
+    // replica's service, tight next to a congested backlog.
+    let deadline_ms = 2.5 * cheap_ms;
+    let trace = Trace::phases(
+        &[
+            (30, Arrival::Poisson { rate_per_s: calm_rps }),
+            (150, Arrival::Poisson { rate_per_s: surge_rps }),
+            (60, Arrival::Poisson { rate_per_s: calm_rps }),
+        ],
+        0.0,
+        42,
+    )
+    .with_base_qos(Qos::bulk())
+    .with_qos_mix(INTERACTIVE_FRAC, Qos::interactive(INTERACTIVE_PRIORITY, deadline_ms));
+    let n = trace.entries.len() as u64;
+    let hi = trace.entries.iter().filter(|e| e.qos.is_interactive()).count();
+    println!(
+        "fleet '{spec}' (capacity ~{capacity_rps:.1} req/s), {n} arrivals \
+         ({calm_rps:.1} -> {surge_rps:.1} -> {calm_rps:.1} req/s), {hi} interactive \
+         with {deadline_ms:.0} ms deadlines\n",
+    );
+
+    let policy = Policy::EnergyAware { lambda_j_per_ms: None };
+    let run = |blind: bool| -> FleetReport {
+        let mut cfg = FleetConfig::parse_spec(&spec, policy).unwrap().with_seed(42);
+        if blind {
+            cfg = cfg.with_qos_blind();
+        }
+        let report = run_trace(&Fleet::new(cfg), &trace, &[]);
+        println!("{}:\n{}", if blind { "priority-blind" } else { "qos-aware" }, report.render());
+        report
+    };
+    let qos = run(false);
+    let blind = run(true);
+
+    // Conservation on both sides (the extended invariant).
+    assert_eq!(
+        qos.completed + qos.shed + qos.lost + qos.expired,
+        n,
+        "qos conservation: {qos:?}"
+    );
+    assert_eq!(blind.completed, n, "the blind fleet serves everything, however late");
+    assert_eq!(blind.expired, 0);
+    assert_eq!(qos.shed, 0, "no gate in this bench: nothing sheds at dispatch");
+    assert_eq!(qos.deadline_riders, hi as u64);
+    assert_eq!(blind.deadline_riders, hi as u64, "blind still *accounts* deadlines");
+
+    let qos_hi_p95 = qos.p95_hi_ms.expect("interactive completions exist");
+    let blind_hi_p95 = blind.p95_hi_ms.expect("interactive completions exist");
+    let qos_miss = qos.deadline_miss_rate().expect("deadline riders exist");
+    let blind_miss = blind.deadline_miss_rate().expect("deadline riders exist");
+
+    // The tentpole claims, all three at once.
+    assert!(
+        qos_hi_p95 < blind_hi_p95,
+        "interactive p95 must strictly improve: {qos_hi_p95:.0} ms vs blind {blind_hi_p95:.0} ms"
+    );
+    assert!(
+        qos_miss < blind_miss,
+        "deadline-miss rate must strictly improve: {qos_miss:.3} vs blind {blind_miss:.3}"
+    );
+    assert!(
+        qos.total_energy_j <= blind.total_energy_j,
+        "QoS must not cost joules: {:.1} J vs blind {:.1} J",
+        qos.total_energy_j,
+        blind.total_energy_j
+    );
+    // The blind backlog genuinely violated the interactive SLO — the
+    // contrast is real congestion, not noise.
+    assert!(
+        blind_miss > 0.2,
+        "the surge should make the blind fleet miss hard (got {blind_miss:.3})"
+    );
+    println!(
+        "claim check: hi p95 {qos_hi_p95:.0} ms < {blind_hi_p95:.0} ms, miss rate \
+         {qos_miss:.3} < {blind_miss:.3}, energy {:.1} J <= {:.1} J ... OK",
+        qos.total_energy_j, blind.total_energy_j
+    );
+
+    // Deterministic metrics for the CI regression gate (lower =
+    // better).  Ratios vs the blind baseline gate the *margin*, not
+    // just the absolute numbers.
+    write_json_summary(
+        "fleet_qos",
+        &[
+            ("qos_hi_p95_ms", qos_hi_p95),
+            ("qos_deadline_miss_rate", qos_miss),
+            ("qos_total_j", qos.total_energy_j),
+            ("qos_over_blind_j", qos.total_energy_j / blind.total_energy_j),
+            ("qos_hi_p95_over_blind", qos_hi_p95 / blind_hi_p95),
+        ],
+    )
+    .expect("bench summary write");
+
+    // Hot path: QoS dispatch cost (victimless, gate-free).
+    let mut b = Bencher::from_env();
+    let fleet = Fleet::new(FleetConfig::parse_spec(&spec, policy).unwrap());
+    let mut t = 0.0f64;
+    b.bench("fleet/dispatch_qos_interactive", || {
+        t += 10.0;
+        fleet.dispatch_qos(t, Qos::interactive(2, 500.0))
+    });
+}

@@ -94,7 +94,7 @@ fn main() {
     let mut ea_batched = None;
     for policy in [
         Policy::RoundRobin,
-        Policy::EnergyAware { lambda_j_per_ms: Policy::DEFAULT_LAMBDA_J_PER_MS },
+        Policy::EnergyAware { lambda_j_per_ms: None },
     ] {
         let unbatched = run(policy, false);
         let batched = run(policy, true);
@@ -156,19 +156,16 @@ fn main() {
     b.bench("fleet/construct_6_replicas", || {
         Fleet::new(FleetConfig::mixed_six(Policy::RoundRobin))
     });
-    let fleet = Fleet::new(FleetConfig::mixed_six(Policy::EnergyAware {
-        lambda_j_per_ms: Policy::DEFAULT_LAMBDA_J_PER_MS,
-    }));
+    let fleet =
+        Fleet::new(FleetConfig::mixed_six(Policy::EnergyAware { lambda_j_per_ms: None }));
     let mut t = 0.0f64;
     b.bench("fleet/dispatch_energy_aware", || {
         t += 10.0;
         fleet.dispatch(t)
     });
     let batched_fleet = Fleet::new(
-        FleetConfig::mixed_six(Policy::EnergyAware {
-            lambda_j_per_ms: Policy::DEFAULT_LAMBDA_J_PER_MS,
-        })
-        .with_batching(BATCH, BATCH_WAIT_MS),
+        FleetConfig::mixed_six(Policy::EnergyAware { lambda_j_per_ms: None })
+            .with_batching(BATCH, BATCH_WAIT_MS),
     );
     let mut tb = 0.0f64;
     b.bench("fleet/dispatch_energy_aware_batched", || {

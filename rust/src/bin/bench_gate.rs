@@ -7,6 +7,13 @@
 //! metric regressed by more than the baseline's `tolerance_frac`
 //! (default 10%).  Every gated metric is lower-is-better.
 //!
+//! The metric *name sets* must match exactly: a baseline metric the
+//! benches no longer emit fails as `MISSING`, and a bench metric the
+//! baseline does not gate fails as `NEW` (with the full name diff
+//! printed) — a silently un-gated metric is exactly how a regression
+//! slips past CI.  After adding or renaming metrics, refresh with
+//! `--update` and commit the result.
+//!
 //! ```sh
 //! BENCH_OUT_DIR=bench_out cargo bench --bench fleet_autoscale
 //! cargo run --bin bench_gate -- --baseline ../BENCH_BASELINE.json --bench-out bench_out
@@ -38,9 +45,23 @@ enum Verdict {
     Missing,
 }
 
+/// Metric names present on one side only: `(missing_from_current,
+/// missing_from_baseline)`.  Either kind fails the gate — the baseline
+/// and the benches must agree on exactly which metrics are gated.
+fn name_diff(
+    baseline: &BTreeMap<String, f64>,
+    current: &BTreeMap<String, f64>,
+) -> (Vec<String>, Vec<String>) {
+    let missing_from_current: Vec<String> =
+        baseline.keys().filter(|k| !current.contains_key(*k)).cloned().collect();
+    let missing_from_baseline: Vec<String> =
+        current.keys().filter(|k| !baseline.contains_key(*k)).cloned().collect();
+    (missing_from_current, missing_from_baseline)
+}
+
 /// Compare current metrics against the baseline.  Returns one row per
-/// *baseline* metric (the baseline defines what is gated); metrics
-/// only present in the current run are ungated additions.
+/// *baseline* metric; metrics only present in the current run are
+/// reported by [`name_diff`] and fail the gate separately.
 fn gate(
     baseline: &BTreeMap<String, f64>,
     current: &BTreeMap<String, f64>,
@@ -197,10 +218,20 @@ fn run() -> Result<bool, String> {
             }
         }
     }
-    for key in current.keys() {
-        if !baseline.contains_key(key) {
-            println!("  NEW     {key:<44} (not gated; add via --update)");
-        }
+    let (missing_from_current, missing_from_baseline) = name_diff(&baseline, &current);
+    for key in &missing_from_baseline {
+        failed = true;
+        println!("  NEW     {key:<44} (bench emits it, baseline does not gate it)");
+    }
+    if !missing_from_current.is_empty() || !missing_from_baseline.is_empty() {
+        println!(
+            "bench gate: metric names diverged — {} in baseline only {:?}, \
+             {} in bench output only {:?}; refresh with --update and commit",
+            missing_from_current.len(),
+            missing_from_current,
+            missing_from_baseline.len(),
+            missing_from_baseline,
+        );
     }
     if failed {
         println!("bench gate: FAILED");
@@ -250,11 +281,19 @@ mod tests {
     }
 
     #[test]
-    fn gate_ignores_ungated_additions() {
-        let base = map(&[("a/x_ms", 100.0)]);
+    fn name_diff_flags_divergence_both_ways() {
+        let base = map(&[("a/x_ms", 100.0), ("a/gone", 1.0)]);
         let cur = map(&[("a/x_ms", 100.0), ("a/new_metric", 9999.0)]);
+        let (missing_from_current, missing_from_baseline) = name_diff(&base, &cur);
+        assert_eq!(missing_from_current, vec!["a/gone".to_string()]);
+        assert_eq!(missing_from_baseline, vec!["a/new_metric".to_string()]);
+        // gate rows still only cover baseline metrics — the name diff
+        // is what fails an un-gated addition loudly
         let rows = gate(&base, &cur, 0.10);
-        assert_eq!(rows.len(), 1, "only baseline metrics are gated");
+        assert_eq!(rows.len(), 2);
+        let identical = map(&[("a/x_ms", 100.0)]);
+        let (a, b) = name_diff(&identical, &identical);
+        assert!(a.is_empty() && b.is_empty());
     }
 
     #[test]

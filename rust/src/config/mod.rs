@@ -30,6 +30,10 @@
 //! `MCN_FLEET_BATCH`, `MCN_FLEET_BATCH_WAIT_MS`) or the CLI
 //! (`--fleet SPEC --fleet-policy P --fleet-budget-j J --fleet-batch B
 //! --fleet-batch-wait-ms W`); CLI wins over env, env over file.
+//! `fleet_policy` accepts `energy:<λ>` (J/ms) to pin the energy-aware
+//! latency price explicitly; a plain `energy` uses the fixed default,
+//! which `fleet_autoscale` re-derives from `slo_p95_ms`
+//! ([`Policy::lambda_for_slo`](crate::fleet::Policy::lambda_for_slo)).
 //! `fleet_batch` > 1 turns on per-replica dynamic batching (requests
 //! accumulate into amortized multi-image dispatches); the default of 1
 //! keeps single-image service.
@@ -99,7 +103,7 @@ pub fn fleet_from(
 ) -> Result<FleetConfig> {
     let policy = match policy {
         Some(p) => Policy::parse(p).map_err(|e| anyhow::anyhow!(e))?,
-        None => Policy::EnergyAware { lambda_j_per_ms: Policy::DEFAULT_LAMBDA_J_PER_MS },
+        None => Policy::EnergyAware { lambda_j_per_ms: None },
     };
     let mut cfg = FleetConfig::parse_spec(spec, policy)
         .map_err(|e| anyhow::anyhow!("fleet spec: {e}"))?;
@@ -404,9 +408,42 @@ mod tests {
         assert!(matches!(f.policy, Policy::EnergyAware { .. }));
         assert_eq!(f.budget_j, None);
         assert!(!f.batch.enabled(), "batching is off by default");
+        assert!(f.qos_aware, "fleets honor QoS by default");
         let f = fleet_from("s7", Some("rr"), Some(3.0), None, None).unwrap();
         assert_eq!(f.policy, Policy::RoundRobin);
         assert_eq!(f.budget_j, Some(3.0));
+    }
+
+    #[test]
+    fn fleet_policy_accepts_explicit_lambda() {
+        let c = AppConfig::from_json(r#"{"fleet": "s7,n5", "fleet_policy": "energy:0.008"}"#)
+            .unwrap();
+        assert_eq!(
+            c.fleet.unwrap().policy,
+            Policy::EnergyAware { lambda_j_per_ms: Some(0.008) }
+        );
+        assert!(
+            AppConfig::from_json(r#"{"fleet": "s7", "fleet_policy": "energy:nope"}"#).is_err()
+        );
+        // an explicit λ survives autoscale attachment; a default λ is
+        // re-derived from the SLO
+        let c = AppConfig::from_json(
+            r#"{"fleet": "s7,n5", "fleet_policy": "energy:0.008",
+                "fleet_autoscale": "slo=500"}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            c.fleet.unwrap().policy,
+            Policy::EnergyAware { lambda_j_per_ms: Some(0.008) }
+        );
+        let c = AppConfig::from_json(
+            r#"{"fleet": "s7,n5", "fleet_policy": "energy", "fleet_autoscale": "slo=500"}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            c.fleet.unwrap().policy,
+            Policy::EnergyAware { lambda_j_per_ms: Some(Policy::lambda_for_slo(500.0)) }
+        );
     }
 
     #[test]

@@ -15,6 +15,15 @@
 //!   more load (deep SLO breach, exhausted fleet budget, or no replica
 //!   accepting traffic) — so the front door sheds *before* enqueueing
 //!   instead of letting queues collapse the latency SLO.
+//!
+//! Shedding at the queue cap is **priority-aware**: when the fleet can
+//! name a queued rider cheaper to drop than the arrival (lower
+//! priority, then most deadline slack), the gate admits the arrival
+//! and the fleet evicts that rider instead of shedding newest-first
+//! ([`GateDecision::AdmitEvict`]).  Saturation still sheds every
+//! class: the controller closed the door because the fleet as a whole
+//! cannot absorb more work, and queue-jumping would only deepen the
+//! collapse.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -97,14 +106,20 @@ impl AdmissionControl {
     }
 }
 
-/// Why the fleet front door refused a request.
+/// Why the fleet front door refused (or conditionally admitted) a
+/// request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum GateDecision {
     /// Proceed to placement.
     Admit,
+    /// The queue cap is full, but a cheaper-to-drop queued rider
+    /// exists: admit this request and evict that rider (the caller
+    /// performs the eviction and accounts it as shed).
+    AdmitEvict,
     /// The autoscaler reported saturation; shed before enqueueing.
     ShedSaturated,
-    /// The fleet-wide queue cap is full; shed before enqueueing.
+    /// The fleet-wide queue cap is full and nothing queued is cheaper
+    /// to drop; shed before enqueueing.
     ShedQueue,
 }
 
@@ -122,22 +137,40 @@ pub struct FleetGate {
     admitted: u64,
     shed_saturated: u64,
     shed_queue: u64,
+    /// Queued riders dropped to admit a more urgent arrival.
+    evicted: u64,
 }
 
 impl FleetGate {
     pub fn new(max_queue: usize) -> FleetGate {
         assert!(max_queue > 0, "fleet gate needs at least one queue slot");
-        FleetGate { max_queue, saturated: false, admitted: 0, shed_saturated: 0, shed_queue: 0 }
+        FleetGate {
+            max_queue,
+            saturated: false,
+            admitted: 0,
+            shed_saturated: 0,
+            shed_queue: 0,
+            evicted: 0,
+        }
     }
 
-    /// Decide admission given the fleet's current total queue depth.
-    pub fn admit(&mut self, queued: usize) -> GateDecision {
+    /// Decide admission given the fleet's current total queue depth
+    /// and whether the fleet found a queued rider cheaper to drop than
+    /// this arrival (`can_evict`) — priority shedding: under queue
+    /// pressure the cheapest rider goes, not the newest.
+    pub fn admit(&mut self, queued: usize, can_evict: bool) -> GateDecision {
         if self.saturated {
             self.shed_saturated += 1;
             GateDecision::ShedSaturated
         } else if queued >= self.max_queue {
-            self.shed_queue += 1;
-            GateDecision::ShedQueue
+            if can_evict {
+                self.admitted += 1;
+                self.evicted += 1;
+                GateDecision::AdmitEvict
+            } else {
+                self.shed_queue += 1;
+                GateDecision::ShedQueue
+            }
         } else {
             self.admitted += 1;
             GateDecision::Admit
@@ -173,6 +206,10 @@ impl FleetGate {
         self.shed_queue
     }
 
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+
     /// Counter snapshot for the autoscaler report (`autoscale_stats`).
     pub fn stats(&self) -> GateStats {
         GateStats {
@@ -181,14 +218,16 @@ impl FleetGate {
             admitted: self.admitted,
             shed_saturated: self.shed_saturated,
             shed_queue: self.shed_queue,
+            evicted: self.evicted,
         }
     }
 }
 
 /// Point-in-time [`FleetGate`] counters.  `admitted` counts gate-level
 /// admissions (a request the gate passed can still shed at placement
-/// if no replica accepts traffic), and the two shed counters split the
-/// fleet's front-door sheds by cause.
+/// if no replica accepts traffic), the two shed counters split the
+/// fleet's front-door sheds by cause, and `evicted` counts queued
+/// riders dropped in favor of a more urgent arrival.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct GateStats {
     pub max_queue: usize,
@@ -196,6 +235,7 @@ pub struct GateStats {
     pub admitted: u64,
     pub shed_saturated: u64,
     pub shed_queue: u64,
+    pub evicted: u64,
 }
 
 #[cfg(test)]
@@ -205,14 +245,31 @@ mod tests {
     #[test]
     fn fleet_gate_sheds_on_queue_cap() {
         let mut g = FleetGate::new(2);
-        assert_eq!(g.admit(0), GateDecision::Admit);
-        assert_eq!(g.admit(1), GateDecision::Admit);
-        assert_eq!(g.admit(2), GateDecision::ShedQueue);
+        assert_eq!(g.admit(0, false), GateDecision::Admit);
+        assert_eq!(g.admit(1, false), GateDecision::Admit);
+        assert_eq!(g.admit(2, false), GateDecision::ShedQueue);
         assert_eq!(g.admitted(), 2);
         assert_eq!(g.shed_queue(), 1);
         // the autoscaler added a replica: more room
         g.resize(4);
-        assert_eq!(g.admit(2), GateDecision::Admit);
+        assert_eq!(g.admit(2, false), GateDecision::Admit);
+    }
+
+    #[test]
+    fn fleet_gate_evicts_instead_of_shedding_newest_first() {
+        let mut g = FleetGate::new(2);
+        assert_eq!(g.admit(0, false), GateDecision::Admit);
+        assert_eq!(g.admit(1, false), GateDecision::Admit);
+        // a cheaper queued rider exists: the arrival is admitted and
+        // the victim goes instead
+        assert_eq!(g.admit(2, true), GateDecision::AdmitEvict);
+        assert_eq!(g.admitted(), 3);
+        assert_eq!(g.evicted(), 1);
+        assert_eq!(g.shed_queue(), 0);
+        // below the cap, the evictability hint is irrelevant
+        assert_eq!(g.admit(1, true), GateDecision::Admit);
+        assert_eq!(g.evicted(), 1);
+        assert_eq!(g.stats().evicted, 1);
     }
 
     #[test]
@@ -220,10 +277,12 @@ mod tests {
         let mut g = FleetGate::new(8);
         g.set_saturated(true);
         assert!(g.is_saturated());
-        assert_eq!(g.admit(0), GateDecision::ShedSaturated);
-        assert_eq!(g.shed_saturated(), 1);
+        assert_eq!(g.admit(0, false), GateDecision::ShedSaturated);
+        // saturation sheds every class — even with an evictable victim
+        assert_eq!(g.admit(0, true), GateDecision::ShedSaturated);
+        assert_eq!(g.shed_saturated(), 2);
         g.set_saturated(false);
-        assert_eq!(g.admit(0), GateDecision::Admit);
+        assert_eq!(g.admit(0, false), GateDecision::Admit);
     }
 
     #[test]
@@ -231,7 +290,7 @@ mod tests {
         let mut g = FleetGate::new(4);
         g.resize(0); // a fleet scaled to min keeps one slot open
         assert_eq!(g.max_queue(), 1);
-        assert_eq!(g.admit(0), GateDecision::Admit);
+        assert_eq!(g.admit(0, false), GateDecision::Admit);
     }
 
     #[test]

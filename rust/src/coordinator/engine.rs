@@ -21,7 +21,7 @@ use crate::simulator::power::energy_joules;
 use crate::telemetry::Telemetry;
 
 use super::batcher::{plan_batches, BatcherConfig};
-use super::request::{InferRequest, InferResponse, SimEstimate};
+use super::request::{InferRequest, InferResponse, Qos, SimEstimate};
 
 /// Coordinator construction parameters.
 #[derive(Debug, Clone)]
@@ -119,18 +119,34 @@ impl Coordinator {
         self.image_len
     }
 
-    /// Submit a request and obtain a receiver for the response.
+    /// Submit a default-class request and obtain a receiver for the
+    /// response.
     pub fn submit(
         &self,
         image: Vec<f32>,
         precision: Precision,
         with_sim: bool,
     ) -> Result<Receiver<Result<InferResponse, String>>> {
+        self.submit_qos(image, precision, with_sim, Qos::default())
+    }
+
+    /// [`submit`](Self::submit) with an explicit QoS class.  The
+    /// single-device path records the class on the request (QoS is
+    /// *enforced* on the fleet path; see
+    /// [`Fleet::dispatch_qos`](crate::fleet::Fleet::dispatch_qos)).
+    pub fn submit_qos(
+        &self,
+        image: Vec<f32>,
+        precision: Precision,
+        with_sim: bool,
+        qos: Qos,
+    ) -> Result<Receiver<Result<InferResponse, String>>> {
         if image.len() != self.image_len {
             anyhow::bail!("image must have {} values, got {}", self.image_len, image.len());
         }
+        qos.validate().map_err(|e| anyhow::anyhow!(e))?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = InferRequest { id, image, precision, with_sim, enqueued_at: Instant::now() };
+        let req = InferRequest { id, image, precision, with_sim, qos, enqueued_at: Instant::now() };
         let (reply_tx, reply_rx) = mpsc::channel();
         self.telemetry.counters.requests.fetch_add(1, Ordering::Relaxed);
         self.tx
@@ -139,14 +155,25 @@ impl Coordinator {
         Ok(reply_rx)
     }
 
-    /// Blocking inference.
+    /// Blocking inference (default QoS class).
     pub fn infer(
         &self,
         image: Vec<f32>,
         precision: Precision,
         with_sim: bool,
     ) -> Result<InferResponse> {
-        let rx = self.submit(image, precision, with_sim)?;
+        self.infer_qos(image, precision, with_sim, Qos::default())
+    }
+
+    /// Blocking inference with an explicit QoS class.
+    pub fn infer_qos(
+        &self,
+        image: Vec<f32>,
+        precision: Precision,
+        with_sim: bool,
+        qos: Qos,
+    ) -> Result<InferResponse> {
+        let rx = self.submit_qos(image, precision, with_sim, qos)?;
         rx.recv()
             .context("coordinator dropped the request")?
             .map_err(|e| anyhow::anyhow!(e))

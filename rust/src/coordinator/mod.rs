@@ -27,5 +27,5 @@ pub mod trace;
 
 pub use batcher::{plan_batches, BatcherConfig};
 pub use engine::{Coordinator, CoordinatorConfig};
-pub use request::{InferRequest, InferResponse, SimEstimate};
+pub use request::{InferRequest, InferResponse, Qos, SimEstimate};
 pub use scheduler::PlanCache;

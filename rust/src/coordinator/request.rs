@@ -5,6 +5,66 @@ use std::time::{Duration, Instant};
 use crate::simulator::device::Precision;
 use crate::util::json::Json;
 
+/// Per-request quality-of-service class, threaded end to end through
+/// the serving path: parsed from the TCP JSON (`"priority"`,
+/// `"deadline_ms"`), carried by trace entries, and honored by the
+/// fleet's admission gate, routers, and replica batchers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Qos {
+    /// Scheduling priority; higher is more important.  The default
+    /// ([`Qos::DEFAULT_PRIORITY`]) reproduces the pre-QoS behavior
+    /// exactly; `0` marks bulk traffic whose latency is nearly free to
+    /// trade away (it is also the first to be shed under pressure).
+    pub priority: u8,
+    /// Relative deadline: the latency budget in milliseconds from
+    /// arrival (virtual time on the fleet path, wall clock on the live
+    /// server).  `None` = no deadline.
+    pub deadline_ms: Option<f64>,
+}
+
+impl Default for Qos {
+    fn default() -> Qos {
+        Qos { priority: Qos::DEFAULT_PRIORITY, deadline_ms: None }
+    }
+}
+
+impl Qos {
+    /// The neutral priority every request gets unless it asks for
+    /// something else.  Priorities below it are bulk; above it (or any
+    /// deadline) mark the interactive class.
+    pub const DEFAULT_PRIORITY: u8 = 1;
+
+    /// Bulk batch traffic: lowest priority, no deadline — sheds first,
+    /// tolerates unbounded queueing on the cheapest replicas.
+    pub fn bulk() -> Qos {
+        Qos { priority: 0, deadline_ms: None }
+    }
+
+    /// Interactive traffic: raised priority plus a latency budget in
+    /// milliseconds from arrival.
+    pub fn interactive(priority: u8, deadline_ms: f64) -> Qos {
+        Qos { priority, deadline_ms: Some(deadline_ms) }
+    }
+
+    /// Does this request belong to the interactive class (raised
+    /// priority or an explicit deadline)?  The autoscaler splits its
+    /// p95 breach signal on this, so bulk traffic cannot mask
+    /// interactive SLO violations.
+    pub fn is_interactive(&self) -> bool {
+        self.priority > Qos::DEFAULT_PRIORITY || self.deadline_ms.is_some()
+    }
+
+    /// Reject budgets the dispatch path cannot honor.
+    pub fn validate(&self) -> Result<(), String> {
+        match self.deadline_ms {
+            Some(d) if !(d.is_finite() && d > 0.0) => {
+                Err(format!("deadline_ms must be a positive number, got {d}"))
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
 /// An inference request entering the coordinator.
 #[derive(Debug, Clone)]
 pub struct InferRequest {
@@ -14,6 +74,9 @@ pub struct InferRequest {
     pub precision: Precision,
     /// Include simulated mobile-device latency/energy estimates.
     pub with_sim: bool,
+    /// QoS class (recorded on the single-device path, enforced on the
+    /// fleet path).
+    pub qos: Qos,
     pub enqueued_at: Instant,
 }
 
@@ -91,6 +154,27 @@ impl InferResponse {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn qos_defaults_and_classes() {
+        let q = Qos::default();
+        assert_eq!(q.priority, Qos::DEFAULT_PRIORITY);
+        assert_eq!(q.deadline_ms, None);
+        assert!(!q.is_interactive(), "the default class is not interactive");
+        assert!(q.validate().is_ok());
+        assert!(!Qos::bulk().is_interactive());
+        assert!(Qos::bulk().priority < Qos::DEFAULT_PRIORITY);
+        let i = Qos::interactive(2, 500.0);
+        assert!(i.is_interactive());
+        assert!(i.validate().is_ok());
+        // a deadline alone is interactive, even at default priority
+        assert!(Qos { priority: Qos::DEFAULT_PRIORITY, deadline_ms: Some(100.0) }
+            .is_interactive());
+        // non-positive or non-finite budgets are rejected
+        assert!(Qos { priority: 1, deadline_ms: Some(0.0) }.validate().is_err());
+        assert!(Qos { priority: 1, deadline_ms: Some(-5.0) }.validate().is_err());
+        assert!(Qos { priority: 1, deadline_ms: Some(f64::NAN) }.validate().is_err());
+    }
 
     #[test]
     fn response_serializes() {

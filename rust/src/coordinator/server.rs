@@ -3,7 +3,8 @@
 //! Wire protocol (one JSON object per line):
 //!
 //! request  `{"image_seed": 7, "image_index": 0, "precision": "precise",
-//!            "sim": true, "fleet": true}`
+//!            "sim": true, "fleet": true, "priority": 2,
+//!            "deadline_ms": 500}`
 //!          or `{"image": [ ...150528 floats... ], ...}`
 //!          or `{"cmd": "stats"}` / `{"cmd": "fleet_stats"}` /
 //!          `{"cmd": "autoscale_stats"}` / `{"cmd": "quit"}`
@@ -18,7 +19,12 @@
 //! predicted queue wait / latency / joules — and, when per-replica
 //! batching is on (`--fleet-batch`), the size of the batch the request
 //! rides in (`"batch_fill"`) — ride back on the response while the
-//! real PJRT runtime computes the answer.  When the fleet autoscaler
+//! real PJRT runtime computes the answer.  `"priority"` (0 = bulk,
+//! default 1, higher = more urgent) and `"deadline_ms"` (latency
+//! budget from arrival, wall clock) set the request's QoS class on
+//! the fleet path: priority-aware shedding at the gate,
+//! deadline-aware placement, early batch flush, and expiry at
+//! dequeue.  When the fleet autoscaler
 //! is on (`--fleet-autoscale`), scaling events that fired since the
 //! last fleet-backed reply ride back too (`"autoscale_events"`), and
 //! `{"cmd": "autoscale_stats"}` snapshots the whole control loop.
@@ -40,12 +46,18 @@ use crate::simulator::device::Precision;
 use crate::util::json::Json;
 
 use super::engine::Coordinator;
-use super::request::InferResponse;
+use super::request::{InferResponse, Qos};
 
 /// Parse a request line into an inference (image, precision, sim/fleet
-/// flags) or a command.
+/// flags, QoS class) or a command.
 enum Parsed {
-    Infer { image: Vec<f32>, precision: Precision, with_sim: bool, with_fleet: bool },
+    Infer {
+        image: Vec<f32>,
+        precision: Precision,
+        with_sim: bool,
+        with_fleet: bool,
+        qos: Qos,
+    },
     Stats,
     FleetStats,
     AutoscaleStats,
@@ -70,6 +82,20 @@ fn parse_request(line: &str, image_len: usize) -> Result<Parsed> {
     };
     let with_sim = v.get("sim").and_then(Json::as_bool).unwrap_or(false);
     let with_fleet = v.get("fleet").and_then(Json::as_bool).unwrap_or(false);
+    let priority = match v.get("priority") {
+        None => Qos::DEFAULT_PRIORITY,
+        Some(p) => {
+            let n = p.as_usize().context("priority must be an integer")?;
+            anyhow::ensure!(n <= u8::MAX as usize, "priority must be 0..=255");
+            n as u8
+        }
+    };
+    let deadline_ms = match v.get("deadline_ms") {
+        None => None,
+        Some(d) => Some(d.as_f64().context("deadline_ms must be a number")?),
+    };
+    let qos = Qos { priority, deadline_ms };
+    qos.validate().map_err(|e| anyhow::anyhow!(e))?;
     let image = if let Some(raw) = v.get("image").and_then(Json::as_array) {
         let img: Vec<f32> = raw.iter().filter_map(|x| x.as_f64()).map(|x| x as f32).collect();
         anyhow::ensure!(img.len() == image_len, "image must have {image_len} values");
@@ -79,7 +105,7 @@ fn parse_request(line: &str, image_len: usize) -> Result<Parsed> {
         let index = v.get("image_index").and_then(Json::as_usize).unwrap_or(0) as u64;
         ImageCorpus::new(seed).image(index)
     };
-    Ok(Parsed::Infer { image, precision, with_sim, with_fleet })
+    Ok(Parsed::Infer { image, precision, with_sim, with_fleet, qos })
 }
 
 /// Serve until `stop` is set (checked between connections) or a client
@@ -208,7 +234,7 @@ fn handle_client(
                     Json::str("no fleet configured (start the server with --fleet SPEC)"),
                 )]),
             },
-            Ok(Parsed::Infer { image, precision, with_sim, with_fleet }) => {
+            Ok(Parsed::Infer { image, precision, with_sim, with_fleet, qos }) => {
                 // Fleet admission runs *before* the real inference, so
                 // an overload shed costs nothing; if the inference then
                 // fails, the placement is retracted so the fleet never
@@ -220,14 +246,15 @@ fn handle_client(
                     }
                     (true, Some(f)) => {
                         let arrival_ms = started.elapsed().as_secs_f64() * 1e3;
-                        f.dispatch(arrival_ms)
+                        f.dispatch_qos(arrival_ms, qos)
                             .map(Some)
                             .ok_or_else(|| "fleet overloaded: request shed".to_string())
                     }
                 };
                 match placement {
                     Err(e) => Json::object(vec![("error", Json::str(e))]),
-                    Ok(placement) => match coordinator.infer(image, precision, with_sim) {
+                    Ok(placement) => match coordinator.infer_qos(image, precision, with_sim, qos)
+                    {
                         Ok(resp) => {
                             let mut reply = resp.to_json();
                             if let (Some(p), Json::Object(pairs)) = (placement, &mut reply) {
@@ -313,12 +340,30 @@ impl Client {
         precision: Precision,
         with_sim: bool,
     ) -> Result<ClientReply> {
-        let v = self.round_trip(Json::object(vec![
+        self.infer_seed_qos(seed, index, precision, with_sim, Qos::default())
+    }
+
+    /// [`infer_seed`](Self::infer_seed) with an explicit QoS class
+    /// (`"priority"` / `"deadline_ms"` on the wire).
+    pub fn infer_seed_qos(
+        &mut self,
+        seed: u64,
+        index: u64,
+        precision: Precision,
+        with_sim: bool,
+        qos: Qos,
+    ) -> Result<ClientReply> {
+        let mut pairs = vec![
             ("image_seed", Json::num(seed as f64)),
             ("image_index", Json::num(index as f64)),
             ("precision", Json::str(precision.label())),
             ("sim", Json::Bool(with_sim)),
-        ]))?;
+            ("priority", Json::num(f64::from(qos.priority))),
+        ];
+        if let Some(d) = qos.deadline_ms {
+            pairs.push(("deadline_ms", Json::num(d)));
+        }
+        let v = self.round_trip(Json::object(pairs))?;
         Ok(ClientReply {
             top1: v.get("top1").and_then(Json::as_usize).context("reply missing top1")?,
             latency_ms: v.get("latency_ms").and_then(Json::as_f64).unwrap_or(0.0),
@@ -366,11 +411,12 @@ mod tests {
     fn parses_seed_request() {
         let p = parse_request(r#"{"image_seed": 3, "precision": "imprecise"}"#, 12).unwrap();
         match p {
-            Parsed::Infer { image, precision, with_sim, with_fleet } => {
+            Parsed::Infer { image, precision, with_sim, with_fleet, qos } => {
                 assert_eq!(image.len(), crate::model::images::IMAGE_LEN);
                 assert_eq!(precision, Precision::Imprecise);
                 assert!(!with_sim);
                 assert!(!with_fleet);
+                assert_eq!(qos, Qos::default());
             }
             _ => panic!("expected infer"),
         }
@@ -383,6 +429,34 @@ mod tests {
             Parsed::Infer { with_fleet, .. } => assert!(with_fleet),
             _ => panic!("expected infer"),
         }
+    }
+
+    #[test]
+    fn parses_qos_fields() {
+        let p = parse_request(
+            r#"{"image_seed": 1, "fleet": true, "priority": 3, "deadline_ms": 450.5}"#,
+            12,
+        )
+        .unwrap();
+        match p {
+            Parsed::Infer { qos, .. } => {
+                assert_eq!(qos.priority, 3);
+                assert_eq!(qos.deadline_ms, Some(450.5));
+                assert!(qos.is_interactive());
+            }
+            _ => panic!("expected infer"),
+        }
+        // bulk is priority 0, no deadline
+        let p = parse_request(r#"{"image_seed": 1, "priority": 0}"#, 12).unwrap();
+        match p {
+            Parsed::Infer { qos, .. } => assert_eq!(qos, Qos::bulk()),
+            _ => panic!("expected infer"),
+        }
+        // malformed QoS is an error, not a silent default
+        assert!(parse_request(r#"{"image_seed": 1, "priority": 300}"#, 12).is_err());
+        assert!(parse_request(r#"{"image_seed": 1, "priority": "high"}"#, 12).is_err());
+        assert!(parse_request(r#"{"image_seed": 1, "deadline_ms": -5}"#, 12).is_err());
+        assert!(parse_request(r#"{"image_seed": 1, "deadline_ms": "soon"}"#, 12).is_err());
     }
 
     #[test]

@@ -16,6 +16,7 @@ use crate::simulator::device::Precision;
 use crate::util::rng::Rng;
 
 use super::engine::Coordinator;
+use super::request::Qos;
 
 /// Arrival process shapes.
 #[derive(Debug, Clone, Copy)]
@@ -36,6 +37,9 @@ pub struct TraceEntry {
     /// Corpus image index.
     pub image: u64,
     pub precision: Precision,
+    /// QoS class the request carries into dispatch (default class
+    /// unless the trace was given a mix — see [`Trace::with_qos_mix`]).
+    pub qos: Qos,
 }
 
 /// A deterministic workload trace.
@@ -92,10 +96,37 @@ impl Trace {
                     at: Duration::from_secs_f64(t),
                     image: entries.len() as u64,
                     precision,
+                    qos: Qos::default(),
                 });
             }
         }
         Trace { entries, seed }
+    }
+
+    /// Set every entry's QoS class (e.g. mark the whole trace bulk
+    /// before layering an interactive slice on top with
+    /// [`with_qos_mix`](Self::with_qos_mix)).
+    pub fn with_base_qos(mut self, qos: Qos) -> Trace {
+        for e in &mut self.entries {
+            e.qos = qos;
+        }
+        self
+    }
+
+    /// Mark a deterministic fraction of arrivals with `qos` — the
+    /// interactive slice of a mixed trace; the rest keep the class
+    /// they already have.  The assignment derives from the trace seed
+    /// (independently of the arrival stream), so a given (trace, mix)
+    /// is fully reproducible.
+    pub fn with_qos_mix(mut self, frac: f64, qos: Qos) -> Trace {
+        assert!((0.0..=1.0).contains(&frac), "qos mix fraction must be in [0, 1]");
+        let mut rng = Rng::new(self.seed ^ 0xA5A5_5A5A_C0FF_EE00);
+        for e in &mut self.entries {
+            if rng.next_f64() < frac {
+                e.qos = qos;
+            }
+        }
+        self
     }
 
     /// Total span of the trace.
@@ -261,6 +292,31 @@ mod tests {
         );
         assert_eq!(t.entries.len(), u.entries.len());
         assert!(t.entries.iter().zip(&u.entries).all(|(a, b)| a.at == b.at));
+    }
+
+    #[test]
+    fn qos_mix_is_deterministic_and_respects_fraction() {
+        let mk = || {
+            Trace::generate(1000, Arrival::Poisson { rate_per_s: 50.0 }, 0.0, 9)
+                .with_base_qos(Qos::bulk())
+                .with_qos_mix(0.3, Qos::interactive(2, 500.0))
+        };
+        let a = mk();
+        let b = mk();
+        // deterministic per seed, down to each entry's class
+        assert!(a.entries.iter().zip(&b.entries).all(|(x, y)| x.qos == y.qos));
+        let hi = a.entries.iter().filter(|e| e.qos.is_interactive()).count() as f64 / 1000.0;
+        assert!((0.2..0.4).contains(&hi), "interactive fraction {hi}");
+        // the rest kept the bulk base class
+        assert!(a
+            .entries
+            .iter()
+            .all(|e| e.qos.is_interactive() || e.qos == Qos::bulk()));
+        // the arrival timeline is untouched by the mix
+        let plain = Trace::generate(1000, Arrival::Poisson { rate_per_s: 50.0 }, 0.0, 9);
+        assert!(a.entries.iter().zip(&plain.entries).all(|(x, y)| x.at == y.at));
+        // default traces carry the default class
+        assert!(plain.entries.iter().all(|e| e.qos == Qos::default()));
     }
 
     #[test]

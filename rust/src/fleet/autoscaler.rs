@@ -10,8 +10,11 @@
 //! most one scaling decision:
 //!
 //! - **scale up** — after `scale_up_after` consecutive *breach* ticks
-//!   (p95 over `slo_p95_ms`, sheds since the last tick, or queue depth
-//!   past the per-replica allowance).  The fleet first revives a parked
+//!   (p95 over `slo_p95_ms` in *either* latency class — the breach
+//!   signal splits p95 between all traffic and the interactive class,
+//!   so a flood of fast bulk completions cannot mask interactive SLO
+//!   violations — sheds, deadline expiries, or queue depth past the
+//!   per-replica allowance).  The fleet first revives a parked
 //!   (previously drained) replica, then provisions the next warm-pool
 //!   spec, cheapest joules-per-request first.
 //! - **scale down** — after `scale_down_after` consecutive *calm*
@@ -234,10 +237,24 @@ pub struct FleetSample {
     /// Recent-window fleet p95 latency (ms); `None` before any
     /// completion.
     pub p95_ms: Option<f64>,
+    /// Recent-window p95 of the interactive class alone (raised
+    /// priority or deadline); `None` before any such completion.  The
+    /// breach signal checks both, so bulk cannot mask interactive.
+    pub p95_hi_ms: Option<f64>,
+    /// Interactive riders currently queued or running.  The hi-class
+    /// window only refreshes on interactive completions, so with no
+    /// interactive rider in flight it is a *stale* reading — the
+    /// controller ignores it then (for breach and calm alike), or a
+    /// single old interactive burst would wedge the breach signal on
+    /// forever.
+    pub interactive_in_flight: usize,
     /// Lifetime shed counter (the controller differences it per tick).
     pub shed_total: u64,
     /// Lifetime lost counter.
     pub lost_total: u64,
+    /// Lifetime deadline-expiry counter (riders shed at dequeue); an
+    /// expiry is an SLO violation and breaches like a shed.
+    pub expired_total: u64,
     /// Committed fleet joules: service spent + queued + idle.
     pub committed_j: f64,
 }
@@ -333,6 +350,7 @@ pub struct Autoscaler {
     degrades: u64,
     last_shed: u64,
     last_lost: u64,
+    last_expired: u64,
     events: Vec<ScaleEvent>,
     pending: Vec<ScaleEvent>,
 }
@@ -355,6 +373,7 @@ impl Autoscaler {
             degrades: 0,
             last_shed: 0,
             last_lost: 0,
+            last_expired: 0,
             events: Vec::new(),
             pending: Vec::new(),
         }
@@ -385,15 +404,31 @@ impl Autoscaler {
         self.next_tick_ms = s.at_ms + self.cfg.tick_ms;
         let shed_delta = s.shed_total.saturating_sub(self.last_shed);
         let lost_delta = s.lost_total.saturating_sub(self.last_lost);
+        let expired_delta = s.expired_total.saturating_sub(self.last_expired);
         self.last_shed = s.shed_total;
         self.last_lost = s.lost_total;
+        self.last_expired = s.expired_total;
 
-        let over_slo = s.p95_ms.is_some_and(|p| p > self.cfg.slo_p95_ms);
+        // p95 splits by class: a breach in *either* the overall window
+        // or the interactive window counts — a flood of fast bulk
+        // completions must not mask interactive SLO violations, and a
+        // deadline expiry is a violation by definition.  The hi window
+        // only counts while interactive work is actually in flight:
+        // bulk completions cannot refresh it, so without that liveness
+        // gate one old interactive burst would hold the breach signal
+        // true forever (the same stale-window rule saturation already
+        // applies to p95 over a drained queue).
+        let hi_live = s.interactive_in_flight > 0;
+        let over_slo = s.p95_ms.is_some_and(|p| p > self.cfg.slo_p95_ms)
+            || (hi_live && s.p95_hi_ms.is_some_and(|p| p > self.cfg.slo_p95_ms));
         let queue_full =
             s.queue_depth > s.active_replicas.max(1) * self.cfg.queue_per_replica;
-        let breach = over_slo || shed_delta > 0 || lost_delta > 0 || queue_full;
+        let breach =
+            over_slo || shed_delta > 0 || lost_delta > 0 || expired_delta > 0 || queue_full;
+        let calm_ms = self.cfg.calm_frac * self.cfg.slo_p95_ms;
         let calm = !breach
-            && !s.p95_ms.is_some_and(|p| p >= self.cfg.calm_frac * self.cfg.slo_p95_ms)
+            && !s.p95_ms.is_some_and(|p| p >= calm_ms)
+            && !(hi_live && s.p95_hi_ms.is_some_and(|p| p >= calm_ms))
             && s.queue_depth <= s.active_replicas * self.cfg.queue_per_replica / 2;
         if breach {
             self.breach_ticks += 1;
@@ -517,6 +552,7 @@ impl Autoscaler {
             gate,
             slo_p95_ms: self.cfg.slo_p95_ms,
             recent_p95_ms: sample.p95_ms,
+            recent_p95_hi_ms: sample.p95_hi_ms,
             active_replicas: sample.active_replicas,
             parked_replicas: sample.parked_replicas,
             pool_remaining: sample.pool_remaining,
@@ -544,6 +580,9 @@ fn fmt_opt(v: Option<f64>) -> String {
 pub struct AutoscaleReport {
     pub slo_p95_ms: f64,
     pub recent_p95_ms: Option<f64>,
+    /// Recent interactive-class p95 (the second half of the split
+    /// breach signal).
+    pub recent_p95_hi_ms: Option<f64>,
     pub active_replicas: usize,
     pub parked_replicas: usize,
     pub pool_remaining: usize,
@@ -570,6 +609,7 @@ impl AutoscaleReport {
         Json::object(vec![
             ("slo_p95_ms", Json::num(self.slo_p95_ms)),
             ("recent_p95_ms", opt_num(self.recent_p95_ms)),
+            ("recent_p95_hi_ms", opt_num(self.recent_p95_hi_ms)),
             ("active_replicas", Json::num(self.active_replicas as f64)),
             ("parked_replicas", Json::num(self.parked_replicas as f64)),
             ("pool_remaining", Json::num(self.pool_remaining as f64)),
@@ -592,6 +632,7 @@ impl AutoscaleReport {
                         ("admitted", Json::num(g.admitted as f64)),
                         ("shed_saturated", Json::num(g.shed_saturated as f64)),
                         ("shed_queue", Json::num(g.shed_queue as f64)),
+                        ("evicted", Json::num(g.evicted as f64)),
                     ]),
                     None => Json::Null,
                 },
@@ -606,10 +647,12 @@ impl AutoscaleReport {
     /// Multi-line human-readable report with the event timeline.
     pub fn render(&self) -> String {
         let mut out = format!(
-            "autoscale slo_p95={} ms recent_p95={} ms active={} parked={} pool={} queue={}\n\
+            "autoscale slo_p95={} ms recent_p95={} ms (hi {} ms) active={} parked={} pool={} \
+             queue={}\n\
              ticks={} ups={} downs={} deferred={} degrades={} saturated={} posture={}{}\n",
             self.slo_p95_ms,
             fmt_opt(self.recent_p95_ms),
+            fmt_opt(self.recent_p95_hi_ms),
             self.active_replicas,
             self.parked_replicas,
             self.pool_remaining,
@@ -628,8 +671,8 @@ impl AutoscaleReport {
         );
         if let Some(g) = &self.gate {
             out.push_str(&format!(
-                "gate cap={} admitted={} shed_queue={} shed_saturated={}\n",
-                g.max_queue, g.admitted, g.shed_queue, g.shed_saturated,
+                "gate cap={} admitted={} shed_queue={} shed_saturated={} evicted={}\n",
+                g.max_queue, g.admitted, g.shed_queue, g.shed_saturated, g.evicted,
             ));
         }
         for e in &self.events {
@@ -657,8 +700,11 @@ mod tests {
             pool_remaining: 4,
             queue_depth: 0,
             p95_ms: Some(100.0),
+            p95_hi_ms: None,
+            interactive_in_flight: 0,
             shed_total: 0,
             lost_total: 0,
+            expired_total: 0,
             committed_j: 0.0,
         }
     }
@@ -733,6 +779,61 @@ mod tests {
         s.shed_total = 3; // sheds since the last tick
         assert_eq!(a.tick(&s), vec![ScaleDecision::ScaleUp]);
         // same lifetime total next tick: no new sheds, no breach
+        s.at_ms = 1000.0;
+        assert!(a.tick(&s).is_empty());
+    }
+
+    #[test]
+    fn interactive_p95_breaches_even_when_overall_p95_is_calm() {
+        // Bulk dominates the overall window (fast, plentiful) while
+        // the interactive class is deep over the SLO: the split breach
+        // signal must still scale up.
+        let mut a = Autoscaler::new(cfg());
+        let mut s = sample(500.0);
+        s.p95_ms = Some(100.0); // well under the 400 ms SLO
+        s.p95_hi_ms = Some(900.0); // interactive class breaches
+        s.interactive_in_flight = 3; // ...and is live
+        assert_eq!(a.tick(&s), vec![ScaleDecision::ScaleUp]);
+        // an elevated (but not breaching) interactive window also
+        // blocks the calm streak
+        let mut a = Autoscaler::new(cfg());
+        let mut s = sample(500.0);
+        s.p95_ms = Some(50.0);
+        s.p95_hi_ms = Some(350.0); // >= calm_frac * slo
+        s.interactive_in_flight = 1;
+        assert!(a.tick(&s).is_empty());
+        s.at_ms = 1000.0;
+        assert!(a.tick(&s).is_empty(), "no calm streak, so no scale-down");
+    }
+
+    #[test]
+    fn stale_interactive_window_neither_breaches_nor_blocks_calm() {
+        // The hi-class window only refreshes on interactive
+        // completions; once interactive traffic stops (none in
+        // flight), a frozen breaching reading must not hold the
+        // breach signal true — and must not block the calm streak —
+        // or one old burst would wedge the fleet at max_replicas.
+        let mut a = Autoscaler::new(cfg());
+        let mut s = sample(500.0);
+        s.p95_ms = Some(50.0); // live overall window is calm
+        s.p95_hi_ms = Some(900.0); // stale: breaching value...
+        s.interactive_in_flight = 0; // ...but nothing hi in flight
+        assert!(a.tick(&s).is_empty(), "stale hi window must not breach");
+        s.at_ms = 1000.0;
+        assert_eq!(
+            a.tick(&s),
+            vec![ScaleDecision::ScaleDown],
+            "the calm streak must run despite the frozen hi reading"
+        );
+    }
+
+    #[test]
+    fn deadline_expiry_counts_as_breach() {
+        let mut a = Autoscaler::new(cfg());
+        let mut s = sample(500.0);
+        s.expired_total = 2; // expiries since the last tick
+        assert_eq!(a.tick(&s), vec![ScaleDecision::ScaleUp]);
+        // same lifetime total next tick: no new expiries, no breach
         s.at_ms = 1000.0;
         assert!(a.tick(&s).is_empty());
     }
@@ -849,6 +950,7 @@ mod tests {
                 admitted: 7,
                 shed_saturated: 0,
                 shed_queue: 2,
+                evicted: 1,
             }),
         );
         assert_eq!(report.scale_ups, 1);

@@ -58,6 +58,30 @@
 //! `fleet_autoscale` config key, `MCN_FLEET_AUTOSCALE`, or
 //! `--fleet-autoscale` (compact `slo=...,pool=...` form — see
 //! [`AutoscaleConfig::parse`]).
+//!
+//! **Deadline-aware QoS** threads a per-request class
+//! ([`Qos`](crate::coordinator::Qos): priority + optional deadline)
+//! through the whole dispatch spine ([`Fleet::dispatch_qos`]):
+//!
+//! - the [`FleetGate`](crate::coordinator::admission::FleetGate) sheds
+//!   *cheapest-to-drop first* under queue pressure — a full gate
+//!   evicts the lowest-priority / most-slack queued rider for a more
+//!   urgent arrival instead of shedding newest-first;
+//! - [`router`] policies price latency by priority and penalize
+//!   deadline-infeasible placements, so tight deadlines buy fast
+//!   replicas while bulk holds the cheap-joule rails;
+//! - [`replica`] batching seals a batch early for an urgent rider and
+//!   sheds expired-deadline riders *at dequeue* (no service joules are
+//!   wasted on answers that would arrive too late);
+//! - the autoscaler's breach signal splits p95 by class, so bulk
+//!   traffic cannot mask interactive SLO violations;
+//! - with an SLO configured, `EnergyAware`'s default λ is derived from
+//!   it ([`Policy::lambda_for_slo`]); an explicit `energy:<λ>` policy
+//!   keeps its λ.
+//!
+//! Conservation extends to `arrivals == completed + shed + lost +
+//! expired` (gate evictions count as shed; dequeue expiries as
+//! expired).
 
 pub mod autoscaler;
 pub mod budget;
@@ -71,7 +95,9 @@ pub use autoscaler::{
 };
 pub use budget::{BudgetState, JouleBudget};
 pub use health::{Health, HealthAction, HealthEvent};
-pub use replica::{max_request_energy_j, FleetBatch, Orphan, Placement, Replica, ReplicaSpec};
+pub use replica::{
+    max_request_energy_j, FleetBatch, Outcome, Placement, Replica, ReplicaSpec, Rider,
+};
 pub use router::{Candidate, Policy, Router};
 
 use std::sync::Mutex;
@@ -79,7 +105,7 @@ use std::time::Duration;
 
 use crate::coordinator::admission::{FleetGate, GateDecision};
 use crate::coordinator::trace::Trace;
-use crate::coordinator::PlanCache;
+use crate::coordinator::{PlanCache, Qos};
 use crate::telemetry::LatencyRecorder;
 use crate::util::json::Json;
 
@@ -101,6 +127,12 @@ pub struct FleetConfig {
     /// per-image accounting); forced on by `with_autoscale`, where
     /// provisioning slack is exactly the cost the loop trades against.
     pub idle_power: bool,
+    /// Honor per-request QoS in placement, gating, and batching
+    /// (default).  Turned off by [`FleetConfig::with_qos_blind`] for
+    /// the priority-blind comparison baseline: deadlines and
+    /// priorities are still *accounted* (miss counters, per-class
+    /// p95) but never acted on.
+    pub qos_aware: bool,
     /// Seed for the sampling policies' RNG.
     pub seed: u64,
 }
@@ -114,6 +146,7 @@ impl FleetConfig {
             batch: FleetBatch::single(),
             autoscale: None,
             idle_power: false,
+            qos_aware: true,
             seed: 0,
         }
     }
@@ -172,10 +205,27 @@ impl FleetConfig {
 
     /// Attach the closed-loop autoscaler.  Idle-energy metering turns
     /// on with it: the loop's whole point is trading provisioned
-    /// baseline joules against the latency SLO.
+    /// baseline joules against the latency SLO.  An *unpinned*
+    /// `EnergyAware` λ (`energy` with no `:<λ>`) is derived from the
+    /// SLO ([`Policy::lambda_for_slo`]); a pinned λ stays as
+    /// configured.
     pub fn with_autoscale(mut self, autoscale: AutoscaleConfig) -> FleetConfig {
         self.idle_power = true;
+        if let Policy::EnergyAware { lambda_j_per_ms: None } = self.policy {
+            self.policy = Policy::EnergyAware {
+                lambda_j_per_ms: Some(Policy::lambda_for_slo(autoscale.slo_p95_ms)),
+            };
+        }
         self.autoscale = Some(autoscale);
+        self
+    }
+
+    /// Ignore QoS when placing, gating, and batching — the
+    /// priority-blind baseline the QoS bench compares against.
+    /// Deadline/priority *accounting* still runs, so miss rates and
+    /// per-class latency stay comparable.
+    pub fn with_qos_blind(mut self) -> FleetConfig {
+        self.qos_aware = false;
         self
     }
 
@@ -185,6 +235,19 @@ impl FleetConfig {
         self.idle_power = on;
         self
     }
+}
+
+/// A rider currently queued somewhere in the fleet — the front door's
+/// eviction candidates (priority shedding drops the cheapest of these
+/// to admit a more urgent arrival when the gate is full).  Entries are
+/// removed as riders retire and lazily pruned when stale.
+#[derive(Debug, Clone, Copy)]
+struct QueuedEntry {
+    replica: usize,
+    rider: Rider,
+    /// Admission-time effective precision (identifies the queue entry
+    /// for eviction, exactly like [`Replica::retract_last`]).
+    precision: crate::simulator::device::Precision,
 }
 
 /// Mutable fleet state, behind one lock (dispatch is queue math only —
@@ -198,14 +261,28 @@ struct FleetState {
     rerouted: u64,
     /// Orphans of a failed replica that found no healthy replica to
     /// re-place on.  Kept separate from `shed` (rejected at the front
-    /// door) so `arrivals == completed + shed + lost` always holds.
+    /// door) so `arrivals == completed + shed + lost + expired` always
+    /// holds.
     lost: u64,
+    /// Of the shed, how many were queued riders evicted in favor of a
+    /// more urgent arrival (priority shedding at the gate).
+    evicted: u64,
+    /// Honor QoS in decisions (placement, gate, batching)?
+    qos_aware: bool,
+    /// Riders queued across the fleet, for victim selection.
+    queued: Vec<QueuedEntry>,
     /// Fleet-wide latency aggregate across all replicas.
     fleet_latency: LatencyRecorder,
+    /// Same, interactive class only (raised priority or deadline).
+    fleet_latency_hi: LatencyRecorder,
     /// Short-window latency the control loop reads p95 from — a small
     /// window so the controller reacts to the last few seconds, not
     /// the whole trace.
     recent_latency: LatencyRecorder,
+    /// Short-window interactive-class latency: the controller breaches
+    /// on either window, so bulk traffic cannot mask interactive SLO
+    /// violations.
+    recent_latency_hi: LatencyRecorder,
     /// Shared autotune cache; kept so the autoscaler can price and
     /// provision new replicas mid-trace.
     cache: PlanCache,
@@ -242,30 +319,49 @@ impl FleetState {
     }
 
     /// Advance the monotone clock, settle idle meters, and collect
-    /// completions.
+    /// retired riders (completions and dequeue expiries).
     fn advance_raw(&mut self, t_ms: f64) {
         if t_ms > self.clock_ms {
             self.clock_ms = t_ms;
         }
         let now = self.clock_ms;
         let idle_on = self.idle_on;
+        let mut retired: Vec<(usize, Outcome)> = Vec::new();
         for r in &mut self.replicas {
             if idle_on {
                 r.accrue_idle(now);
             }
-            for latency_ms in r.collect(now) {
+            for outcome in r.collect(now) {
+                retired.push((r.id, outcome));
+            }
+        }
+        for (replica, o) in retired {
+            if let Some(pos) = self
+                .queued
+                .iter()
+                .position(|q| q.replica == replica && q.rider.anchor_ms == o.rider.anchor_ms)
+            {
+                self.queued.swap_remove(pos);
+            }
+            if let Some(latency_ms) = o.latency_ms {
                 let d = Duration::from_secs_f64(latency_ms / 1e3);
                 self.fleet_latency.record(d);
                 self.recent_latency.record(d);
+                if o.rider.is_interactive() {
+                    self.fleet_latency_hi.record(d);
+                    self.recent_latency_hi.record(d);
+                }
             }
         }
     }
 
-    /// Route one request through the policy; `None` means no replica
-    /// is available (the caller decides whether that is a shed or a
-    /// lost re-route).  Candidates are in ascending replica-id order,
-    /// which the round-robin cursor relies on.
-    fn place(&mut self, now_ms: f64, anchor_ms: f64) -> Option<Placement> {
+    /// Route one rider through the policy; `None` means no replica is
+    /// available (the caller decides whether that is a shed or a lost
+    /// re-route).  Candidates are in ascending replica-id order, which
+    /// the round-robin cursor relies on.  In the priority-blind
+    /// posture the router sees a default-class rider (the replica
+    /// still receives the real one, for accounting).
+    fn place_rider(&mut self, now_ms: f64, rider: Rider) -> Option<Placement> {
         let candidates: Vec<Candidate> = self
             .replicas
             .iter()
@@ -273,15 +369,78 @@ impl FleetState {
             .map(|r| Candidate {
                 replica: r.id,
                 queue_wait_ms: r.queue_wait_ms(now_ms),
+                busy_wait_ms: r.backlog_wait_ms(now_ms),
                 service_ms: r.service_ms(),
                 energy_j: r.predicted_energy_per_request_j(),
                 in_flight: r.in_flight(),
                 open_fill: r.open_fill(),
             })
             .collect();
-        self.router
-            .place(&candidates)
-            .map(|idx| self.replicas[idx].admit(now_ms, anchor_ms))
+        let route_rider = if self.qos_aware { rider } else { Rider::plain(rider.anchor_ms) };
+        let idx = self.router.place(&candidates, &route_rider, now_ms)?;
+        let placement = self.replicas[idx].admit_rider(now_ms, rider);
+        self.queued.push(QueuedEntry {
+            replica: placement.replica,
+            rider,
+            precision: placement.precision,
+        });
+        Some(placement)
+    }
+
+    /// Pick the cheapest-to-drop queued rider *strictly cheaper* than
+    /// the incoming one — lowest priority first, most deadline slack
+    /// next — among riders whose batch has not started service
+    /// (joules already burning are never wasted on an eviction).
+    /// `None` when the gate has room, the door is closed, or nothing
+    /// queued is cheaper.
+    fn find_victim(&self, incoming: &Rider, queued: usize, now_ms: f64) -> Option<usize> {
+        if !self.qos_aware {
+            return None;
+        }
+        let gate = self.gate.as_ref()?;
+        if gate.is_saturated() || queued < gate.max_queue() {
+            return None;
+        }
+        // An eviction is only worth it if the arrival can actually be
+        // placed afterwards — with no replica accepting traffic, the
+        // placement would shed too and the victim would die for
+        // nothing.
+        if !self.replicas.iter().any(Replica::available) {
+            return None;
+        }
+        // Drop-cost key: ascending priority, then descending deadline
+        // (no deadline = infinite slack = cheapest within a priority).
+        let key = |r: &Rider| (f64::from(r.priority), -r.deadline_at_ms);
+        let lt = |a: (f64, f64), b: (f64, f64)| {
+            a.partial_cmp(&b) == Some(std::cmp::Ordering::Less)
+        };
+        let incoming_key = key(incoming);
+        let mut best: Option<(usize, (f64, f64))> = None;
+        for (i, q) in self.queued.iter().enumerate() {
+            let k = key(&q.rider);
+            if !lt(k, incoming_key) {
+                continue; // not strictly cheaper than the arrival
+            }
+            if best.is_some_and(|(_, bk)| !lt(k, bk)) {
+                continue; // an even cheaper victim is already found
+            }
+            let Some(r) = self.replicas.get(q.replica) else { continue };
+            if !r.rider_evictable(q.rider.anchor_ms, q.precision, now_ms) {
+                continue;
+            }
+            best = Some((i, k));
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Drop the chosen victim (the gate already counted the admission
+    /// it makes room for); the victim is accounted as shed.
+    fn evict(&mut self, victim: usize, now_ms: f64) {
+        let q = self.queued.swap_remove(victim);
+        if self.replicas[q.replica].evict_rider(q.rider.anchor_ms, q.precision, now_ms) {
+            self.shed += 1;
+            self.evicted += 1;
+        }
     }
 
     /// The control loop's observation — the same counters
@@ -302,8 +461,15 @@ impl FleetState {
             pool_remaining: self.pool.len() - self.pool_cursor,
             queue_depth: self.replicas.iter().map(Replica::in_flight).sum(),
             p95_ms: self.recent_latency.percentile_ms(0.95),
+            p95_hi_ms: self.recent_latency_hi.percentile_ms(0.95),
+            interactive_in_flight: self
+                .queued
+                .iter()
+                .filter(|q| q.rider.is_interactive())
+                .count(),
             shed_total: self.shed,
             lost_total: self.lost,
+            expired_total: self.replicas.iter().map(|r| r.expired).sum(),
             committed_j: self
                 .replicas
                 .iter()
@@ -446,6 +612,7 @@ impl FleetState {
     fn add_replica(&mut self, spec: ReplicaSpec, at_ms: f64) -> usize {
         let id = self.replicas.len();
         let mut r = Replica::new(id, spec, self.budget, self.batch.clone(), &self.cache);
+        r.qos_blind = !self.qos_aware;
         r.activate_at(at_ms);
         self.replicas.push(r);
         id
@@ -471,7 +638,11 @@ impl Fleet {
             .replicas
             .iter()
             .enumerate()
-            .map(|(i, spec)| Replica::new(i, spec.clone(), budget, config.batch.clone(), &cache))
+            .map(|(i, spec)| {
+                let mut r = Replica::new(i, spec.clone(), budget, config.batch.clone(), &cache);
+                r.qos_blind = !config.qos_aware;
+                r
+            })
             .collect();
         let router = Router::new(config.policy, config.seed);
         let price = |spec: &ReplicaSpec| {
@@ -500,8 +671,13 @@ impl Fleet {
                 shed: 0,
                 rerouted: 0,
                 lost: 0,
+                evicted: 0,
+                qos_aware: config.qos_aware,
+                queued: Vec::new(),
                 fleet_latency: LatencyRecorder::new(8192),
+                fleet_latency_hi: LatencyRecorder::new(8192),
                 recent_latency: LatencyRecorder::new(128),
+                recent_latency_hi: LatencyRecorder::new(128),
                 cache,
                 budget,
                 batch: config.batch.clone(),
@@ -533,29 +709,47 @@ impl Fleet {
         self.state.lock().unwrap().advance(t_ms);
     }
 
-    /// Dispatch one request arriving at `arrival_ms` (virtual or
-    /// wall-clock milliseconds; the clock is monotone either way).
-    /// `None` means the request was shed — the front-door gate closed
-    /// it out (autoscaled fleets), or no replica is available.
+    /// Dispatch one default-class request arriving at `arrival_ms`
+    /// (virtual or wall-clock milliseconds; the clock is monotone
+    /// either way).  See [`Fleet::dispatch_qos`].
     pub fn dispatch(&self, arrival_ms: f64) -> Option<Placement> {
+        self.dispatch_qos(arrival_ms, Qos::default())
+    }
+
+    /// Dispatch one request with an explicit QoS class.  `None` means
+    /// the request was shed — the front-door gate closed it out
+    /// (autoscaled fleets), or no replica is available.  Under queue
+    /// pressure the gate sheds cheapest-to-drop first: a queued rider
+    /// with lower priority (then more deadline slack) than this
+    /// arrival is evicted to make room, instead of shedding
+    /// newest-first.
+    pub fn dispatch_qos(&self, arrival_ms: f64, qos: Qos) -> Option<Placement> {
         let mut st = self.state.lock().unwrap();
         st.advance(arrival_ms);
         let now = st.clock_ms;
+        // Latency stays anchored at the true arrival even when another
+        // caller already advanced the clock past it (out-of-order
+        // wall-clock dispatches must not lose their queue wait).
+        let rider = Rider::from_qos(arrival_ms.min(now), qos);
         // Front door: with autoscaling on, shed *before* enqueueing
         // when the gate's queue cap is full or the controller reported
         // saturation — queues past the SLO help nobody.
         if st.gate.is_some() {
             let queued: usize = st.replicas.iter().map(Replica::in_flight).sum();
+            let victim = st.find_victim(&rider, queued, now);
             let gate = st.gate.as_mut().expect("checked above");
-            if gate.admit(queued) != GateDecision::Admit {
-                st.shed += 1;
-                return None;
+            match gate.admit(queued, victim.is_some()) {
+                GateDecision::Admit => {}
+                GateDecision::AdmitEvict => {
+                    st.evict(victim.expect("gate evicts only when a victim exists"), now);
+                }
+                GateDecision::ShedSaturated | GateDecision::ShedQueue => {
+                    st.shed += 1;
+                    return None;
+                }
             }
         }
-        // Latency stays anchored at the true arrival even when another
-        // caller already advanced the clock past it (out-of-order
-        // wall-clock dispatches must not lose their queue wait).
-        let placed = st.place(now, arrival_ms.min(now));
+        let placed = st.place_rider(now, rider);
         if placed.is_none() {
             st.shed += 1;
         }
@@ -567,10 +761,18 @@ impl Fleet {
     /// already completed, re-routed, or the replica failed since.
     pub fn retract(&self, placement: &Placement) -> bool {
         let mut st = self.state.lock().unwrap();
-        match st.replicas.get_mut(placement.replica) {
+        let ok = match st.replicas.get_mut(placement.replica) {
             Some(r) => r.retract_last(placement),
             None => false,
+        };
+        if ok {
+            if let Some(pos) = st.queued.iter().position(|q| {
+                q.replica == placement.replica && q.rider.anchor_ms == placement.anchor_ms
+            }) {
+                st.queued.swap_remove(pos);
+            }
         }
+        ok
     }
 
     /// Gracefully remove a replica from rotation (queued work completes).
@@ -626,11 +828,15 @@ impl Fleet {
             st.replicas[replica].accrue_idle(now);
         }
         let orphans = st.replicas[replica].fail();
+        // The dead replica's registry entries are gone with its queue;
+        // successful re-placements register themselves anew.
+        st.queued.retain(|q| q.replica != replica);
         for orphan in orphans {
             // A successful re-placement marks its target replica as
             // holding a re-routed rider: autoscaler drains of that
-            // replica are deferred until the orphan completes.
-            if let Some(p) = st.place(now, orphan.anchor_ms) {
+            // replica are deferred until the orphan completes.  The
+            // orphan keeps its anchor *and* its QoS class.
+            if let Some(p) = st.place_rider(now, orphan) {
                 st.replicas[p.replica].note_rerouted(p.anchor_ms);
                 st.rerouted += 1;
             } else {
@@ -711,6 +917,7 @@ impl Fleet {
                 parked: r.parked,
                 placements: r.placements,
                 completed: r.completed,
+                expired: r.expired,
                 in_flight: r.in_flight(),
                 energy_spent_j: r.energy_spent_j,
                 idle_energy_j: r.idle_energy_j,
@@ -724,15 +931,20 @@ impl Fleet {
             policy: self.config.policy.label(),
             dispatched: replicas.iter().map(|r| r.placements).sum(),
             completed: replicas.iter().map(|r| r.completed).sum(),
+            expired: replicas.iter().map(|r| r.expired).sum(),
+            deadline_riders: st.replicas.iter().map(|r| r.deadline_riders).sum(),
+            deadline_missed: st.replicas.iter().map(|r| r.deadline_missed).sum(),
             service_energy_j,
             idle_energy_j,
             total_energy_j: service_energy_j + idle_energy_j,
             shed: st.shed,
             rerouted: st.rerouted,
             lost: st.lost,
+            evicted: st.evicted,
             p50_ms: st.fleet_latency.percentile_ms(0.50),
             p95_ms: st.fleet_latency.percentile_ms(0.95),
             p99_ms: st.fleet_latency.percentile_ms(0.99),
+            p95_hi_ms: st.fleet_latency_hi.percentile_ms(0.95),
             clock_ms: st.clock_ms,
             replicas,
         }
@@ -752,6 +964,8 @@ pub struct ReplicaStats {
     pub parked: bool,
     pub placements: u64,
     pub completed: u64,
+    /// Deadline riders shed at dequeue (expired before service).
+    pub expired: u64,
     pub in_flight: usize,
     pub energy_spent_j: f64,
     /// Baseline-rail joules while provisioned (zero unless the fleet
@@ -764,22 +978,34 @@ pub struct ReplicaStats {
 /// Fleet-wide aggregates plus one row per replica.
 ///
 /// Conservation invariants (after [`Fleet::finish`]):
-/// `arrivals == completed + shed + lost` and
-/// `dispatched == arrivals - shed + rerouted`.
+/// `arrivals == completed + shed + lost + expired` and
+/// `dispatched == arrivals - shed + rerouted` (an expired rider was
+/// dispatched, then shed at dequeue; an evicted rider's placement is
+/// retracted and it is counted in `shed`).
 #[derive(Debug, Clone)]
 pub struct FleetReport {
     pub policy: &'static str,
     pub replicas: Vec<ReplicaStats>,
     pub dispatched: u64,
     pub completed: u64,
-    /// Rejected at the front door (gate shed, or no replica available
-    /// at dispatch).
+    /// Deadline riders shed at dequeue (expired before service, no
+    /// joules spent).
+    pub expired: u64,
+    /// Riders with a deadline retired so far (served or expired).
+    pub deadline_riders: u64,
+    /// Of those, how many missed it (served late, or expired).
+    pub deadline_missed: u64,
+    /// Rejected at the front door (gate shed, eviction, or no replica
+    /// available at dispatch).
     pub shed: u64,
     /// Successful re-placements of a failed replica's orphans.
     pub rerouted: u64,
     /// Orphans of a failed replica that found no replica to re-place
     /// on; these requests are gone, not shed.
     pub lost: u64,
+    /// Of `shed`, queued riders evicted in favor of a more urgent
+    /// arrival (priority shedding at the gate).
+    pub evicted: u64,
     /// Differential (per-inference) joules across all replicas.
     pub service_energy_j: f64,
     /// Baseline-rail joules for provisioned replica-seconds (zero
@@ -790,6 +1016,9 @@ pub struct FleetReport {
     pub p50_ms: Option<f64>,
     pub p95_ms: Option<f64>,
     pub p99_ms: Option<f64>,
+    /// p95 of the interactive class only (raised priority or
+    /// deadline); `None` before any interactive completion.
+    pub p95_hi_ms: Option<f64>,
     /// Virtual time of the snapshot.
     pub clock_ms: f64,
 }
@@ -818,6 +1047,16 @@ impl FleetReport {
         }
     }
 
+    /// Fraction of deadline riders that missed (served late or expired
+    /// at dequeue); `None` when no rider carried a deadline.
+    pub fn deadline_miss_rate(&self) -> Option<f64> {
+        if self.deadline_riders == 0 {
+            None
+        } else {
+            Some(self.deadline_missed as f64 / self.deadline_riders as f64)
+        }
+    }
+
     /// Multi-line human-readable report.
     pub fn render(&self) -> String {
         let idle = if self.idle_energy_j > 0.0 {
@@ -825,9 +1064,24 @@ impl FleetReport {
         } else {
             String::new()
         };
+        let qos = if self.deadline_riders > 0 || self.evicted > 0 {
+            format!(
+                "qos: hi p95 {} ms | deadlines {}/{} missed ({:.1}%) | expired {} evicted {}\n",
+                opt_ms(self.p95_hi_ms),
+                self.deadline_missed,
+                self.deadline_riders,
+                100.0 * self.deadline_miss_rate().unwrap_or(0.0),
+                self.expired,
+                self.evicted,
+            )
+        } else {
+            String::new()
+        };
         let mut out = format!(
-            "fleet policy={} replicas={} dispatched={} completed={} shed={} rerouted={} lost={}\n\
-             energy {:.1} J{} ({:.3} J/req) | latency p50 {} ms p95 {} ms p99 {} ms | span {:.2} s\n",
+            "fleet policy={} replicas={} dispatched={} completed={} shed={} rerouted={} \
+             lost={} expired={}\n\
+             energy {:.1} J{} ({:.3} J/req) | latency p50 {} ms p95 {} ms p99 {} ms | span {:.2} s\n\
+             {}",
             self.policy,
             self.replicas.len(),
             self.dispatched,
@@ -835,6 +1089,7 @@ impl FleetReport {
             self.shed,
             self.rerouted,
             self.lost,
+            self.expired,
             self.total_energy_j,
             idle,
             self.energy_per_request_j(),
@@ -842,6 +1097,7 @@ impl FleetReport {
             opt_ms(self.p95_ms),
             opt_ms(self.p99_ms),
             self.clock_ms / 1e3,
+            qos,
         );
         for r in &self.replicas {
             out.push_str(&format!(
@@ -872,12 +1128,17 @@ impl FleetReport {
             ("shed", Json::num(self.shed as f64)),
             ("rerouted", Json::num(self.rerouted as f64)),
             ("lost", Json::num(self.lost as f64)),
+            ("expired", Json::num(self.expired as f64)),
+            ("evicted", Json::num(self.evicted as f64)),
+            ("deadline_riders", Json::num(self.deadline_riders as f64)),
+            ("deadline_missed", Json::num(self.deadline_missed as f64)),
             ("service_energy_j", Json::num(self.service_energy_j)),
             ("idle_energy_j", Json::num(self.idle_energy_j)),
             ("total_energy_j", Json::num(self.total_energy_j)),
             ("p50_ms", opt_num(self.p50_ms)),
             ("p95_ms", opt_num(self.p95_ms)),
             ("p99_ms", opt_num(self.p99_ms)),
+            ("p95_hi_ms", opt_num(self.p95_hi_ms)),
             ("clock_ms", Json::num(self.clock_ms)),
             (
                 "replicas",
@@ -894,6 +1155,7 @@ impl FleetReport {
                                 ("parked", Json::Bool(r.parked)),
                                 ("placements", Json::num(r.placements as f64)),
                                 ("completed", Json::num(r.completed as f64)),
+                                ("expired", Json::num(r.expired as f64)),
                                 ("in_flight", Json::num(r.in_flight as f64)),
                                 ("energy_spent_j", Json::num(r.energy_spent_j)),
                                 ("idle_energy_j", Json::num(r.idle_energy_j)),
@@ -919,7 +1181,7 @@ pub fn run_trace(fleet: &Fleet, trace: &Trace, events: &[HealthEvent]) -> FleetR
         while events.peek().is_some_and(|e| e.at_ms <= at_ms) {
             fleet.apply(events.next().unwrap());
         }
-        fleet.dispatch(at_ms);
+        fleet.dispatch_qos(at_ms, entry.qos);
     }
     for e in events {
         fleet.apply(e);
@@ -1120,7 +1382,7 @@ mod tests {
         // less energy and no less throughput than the unbatched fleet.
         for policy in [
             Policy::RoundRobin,
-            Policy::EnergyAware { lambda_j_per_ms: Policy::DEFAULT_LAMBDA_J_PER_MS },
+            Policy::EnergyAware { lambda_j_per_ms: None },
         ] {
             let t = trace(120, 30.0, 17);
             let run = |cap: usize| {
@@ -1422,6 +1684,206 @@ mod tests {
             );
             assert_eq!(fleet.stats().replicas[1].health, "draining");
         }
+    }
+
+    #[test]
+    fn autoscale_derives_energy_lambda_from_the_slo() {
+        // An unpinned EnergyAware λ gets the SLO-calibrated price...
+        let cfg = FleetConfig::parse_spec("1xn5", Policy::parse("energy").unwrap())
+            .unwrap()
+            .with_autoscale(AutoscaleConfig::new(400.0));
+        let Policy::EnergyAware { lambda_j_per_ms: Some(lambda) } = cfg.policy else {
+            panic!("policy must stay energy-aware with a resolved λ")
+        };
+        assert!(
+            (lambda - Policy::lambda_for_slo(400.0)).abs() < 1e-12,
+            "λ {lambda} should be derived from the 400 ms SLO"
+        );
+        // ... a pinned λ survives the autoscaler — even one equal to
+        // the default price (provenance, not value, decides)
+        for pinned in [0.009, Policy::DEFAULT_LAMBDA_J_PER_MS] {
+            let policy = Policy::EnergyAware { lambda_j_per_ms: Some(pinned) };
+            let cfg = FleetConfig::parse_spec("1xn5", policy)
+                .unwrap()
+                .with_autoscale(AutoscaleConfig::new(400.0));
+            assert_eq!(cfg.policy, Policy::EnergyAware { lambda_j_per_ms: Some(pinned) });
+        }
+        // ... and non-energy policies are untouched
+        let cfg = FleetConfig::parse_spec("1xn5", Policy::RoundRobin)
+            .unwrap()
+            .with_autoscale(AutoscaleConfig::new(400.0));
+        assert_eq!(cfg.policy, Policy::RoundRobin);
+    }
+
+    #[test]
+    fn gate_evicts_cheapest_queued_rider_for_urgent_arrivals() {
+        // 1xS7 behind a 4-slot gate, no warm pool.  Bulk fills the
+        // gate; an urgent arrival must evict a queued bulk rider
+        // (cheapest-to-drop) instead of being shed newest-first.
+        let mut asc = AutoscaleConfig::new(10_000.0);
+        asc.max_replicas = 1;
+        asc.queue_per_replica = 4;
+        let cfg = FleetConfig::parse_spec("1xs7", Policy::LeastLoaded)
+            .unwrap()
+            .with_autoscale(asc);
+        let fleet = Fleet::new(cfg);
+        for i in 0..6 {
+            fleet.dispatch_qos(1.0 + i as f64, Qos::bulk()); // 4 admit, 2 shed
+        }
+        let placed = fleet.dispatch_qos(10.0, Qos { priority: 3, deadline_ms: None });
+        assert!(placed.is_some(), "the urgent arrival must ride an eviction");
+        let report = fleet.finish();
+        // 7 arrivals: 4 bulk completed... minus the evicted one, plus
+        // the urgent request; sheds = 2 at the cap + 1 eviction.
+        assert_eq!(report.completed, 4);
+        assert_eq!(report.shed, 3);
+        assert_eq!(report.evicted, 1);
+        assert_eq!(report.completed + report.shed + report.lost + report.expired, 7);
+        assert_eq!(report.dispatched, 7 - report.shed + report.rerouted);
+        let gate = fleet.autoscale_report().unwrap().gate.unwrap();
+        assert_eq!(gate.evicted, 1);
+        // a bulk arrival at a full gate finds no cheaper victim: shed
+        let fleet2 = {
+            let mut asc = AutoscaleConfig::new(10_000.0);
+            asc.max_replicas = 1;
+            asc.queue_per_replica = 2;
+            Fleet::new(
+                FleetConfig::parse_spec("1xs7", Policy::LeastLoaded).unwrap().with_autoscale(asc),
+            )
+        };
+        fleet2.dispatch_qos(1.0, Qos::bulk());
+        fleet2.dispatch_qos(2.0, Qos::bulk());
+        assert!(fleet2.dispatch_qos(3.0, Qos::bulk()).is_none(), "equal class: no eviction");
+        assert_eq!(fleet2.stats().evicted, 0);
+    }
+
+    #[test]
+    fn hopeless_deadlines_expire_instead_of_burning_joules() {
+        // Three bulk riders back up the single replica; a deadline
+        // rider whose budget can't even cover queue-free service is
+        // shed at dequeue.  The blind fleet serves it late instead —
+        // spending strictly more joules for a miss either way.
+        let run = |blind: bool| {
+            let mut cfg = FleetConfig::parse_spec("1xs7", Policy::LeastLoaded).unwrap();
+            if blind {
+                cfg = cfg.with_qos_blind();
+            }
+            let fleet = Fleet::new(cfg);
+            for i in 0..3 {
+                fleet.dispatch_qos(i as f64, Qos::bulk());
+            }
+            fleet.dispatch_qos(5.0, Qos::interactive(2, 10.0));
+            fleet.finish()
+        };
+        let aware = run(false);
+        assert_eq!(aware.expired, 1, "{aware:?}");
+        assert_eq!(aware.completed, 3);
+        assert_eq!(aware.completed + aware.shed + aware.lost + aware.expired, 4);
+        assert_eq!(aware.deadline_riders, 1);
+        assert_eq!(aware.deadline_missed, 1);
+        assert_eq!(aware.deadline_miss_rate(), Some(1.0));
+        let blind = run(true);
+        assert_eq!(blind.expired, 0);
+        assert_eq!(blind.completed, 4);
+        assert_eq!(blind.deadline_missed, 1, "served late still counts as a miss");
+        assert!(
+            aware.total_energy_j < blind.total_energy_j,
+            "expiry must save the doomed request's joules: {:.2} vs {:.2}",
+            aware.total_energy_j,
+            blind.total_energy_j
+        );
+    }
+
+    #[test]
+    fn gate_closed_by_saturation_reopens_once_queue_recovers() {
+        // The PR-3 livelock fix, now with a direct regression test: a
+        // gate closed by controller saturation (deep p95 breach over a
+        // live queue) must reopen once the queue drains — reopening is
+        // keyed on queue+budget state, never on the (frozen) p95.
+        for seed in [9u64, 23] {
+            let mut asc = AutoscaleConfig::new(150.0);
+            asc.max_replicas = 1; // nothing to scale up with
+            asc.queue_per_replica = 4;
+            asc.tick_ms = 250.0;
+            let cfg = FleetConfig::parse_spec("1xs7", Policy::LeastLoaded)
+                .unwrap()
+                .with_autoscale(asc)
+                .with_seed(seed);
+            let fleet = Fleet::new(cfg);
+            // 5 s of sustained overload: the gate cap holds the queue
+            // at 4, waits blow past 2x the 150 ms SLO, and the
+            // controller closes the door.
+            let mut t = 0.0;
+            for _ in 0..100 {
+                t += 50.0;
+                fleet.dispatch(t);
+            }
+            let rep = fleet.autoscale_report().expect("autoscaler on");
+            let gate = rep.gate.expect("gate on");
+            assert!(gate.shed_saturated > 0, "seed {seed}: the door must have closed: {rep:?}");
+            assert!(rep.events.iter().any(|e| e.kind == ScaleKind::Saturated));
+            // drain completely, then tick: the door reopens
+            fleet.run_to(t + 30_000.0);
+            let rep = fleet.autoscale_report().unwrap();
+            assert!(!rep.saturated, "seed {seed}: recovery must reopen the gate: {rep:?}");
+            assert!(rep.events.iter().any(|e| e.kind == ScaleKind::Recovered));
+            assert!(
+                fleet.dispatch(t + 30_001.0).is_some(),
+                "seed {seed}: a recovered gate admits new arrivals"
+            );
+        }
+    }
+
+    #[test]
+    fn conservation_holds_with_priorities_eviction_and_expiry() {
+        // The extended invariant: `arrivals == completed + shed + lost
+        // + expired` across priority shedding (gate evictions), dequeue
+        // expiry, and autoscale add/drain, on seeded bursty mixed
+        // traffic.
+        let mut any_qos_shed = 0u64;
+        for seed in [3u64, 11, 29] {
+            let mut asc = AutoscaleConfig::new(800.0);
+            asc.max_replicas = 2;
+            asc.queue_per_replica = 3;
+            asc.tick_ms = 250.0;
+            asc.cooldown_ticks = 1;
+            let cfg = FleetConfig::parse_spec("1xs7,1xn5", Policy::parse("energy").unwrap())
+                .unwrap()
+                .with_autoscale(asc)
+                .with_seed(seed);
+            let fleet = Fleet::new(cfg);
+            let t = Trace::generate(
+                100,
+                Arrival::Bursty {
+                    rate_per_s: 5.0,
+                    burst_every: 25,
+                    burst_len: 10,
+                    burst_mult: 6.0,
+                },
+                0.0,
+                seed,
+            )
+            .with_base_qos(Qos::bulk())
+            .with_qos_mix(0.3, Qos::interactive(2, 500.0));
+            let report = run_trace(&fleet, &t, &[]);
+            assert_eq!(
+                report.completed + report.shed + report.lost + report.expired,
+                100,
+                "seed {seed}: conservation broke: {report:?}"
+            );
+            assert_eq!(
+                report.dispatched,
+                100 - report.shed + report.rerouted,
+                "seed {seed}: dispatch accounting broke: {report:?}"
+            );
+            let sum: u64 = report.replicas.iter().map(|r| r.completed).sum();
+            assert_eq!(sum, report.completed, "seed {seed}: double-served");
+            any_qos_shed += report.evicted + report.expired;
+        }
+        assert!(
+            any_qos_shed > 0,
+            "the bursty mixed traces should exercise eviction and/or expiry"
+        );
     }
 
     #[test]

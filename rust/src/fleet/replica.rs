@@ -17,6 +17,14 @@
 //! until `b` starts at `max(t, b)` and finishes one batch service time
 //! later.
 //!
+//! **QoS:** every queued request is a [`Rider`] carrying its priority
+//! and absolute deadline.  An open batch seals *early* when its
+//! tightest deadline's slack drops below the batch's estimated service
+//! time (an urgent rider is never stranded behind `max_wait_ms`), and
+//! a rider that can no longer meet its deadline even if dispatched
+//! alone is shed at dequeue ([`Outcome`] with no latency) instead of
+//! wasting service joules on an answer that arrives too late.
+//!
 //! [`NetworkPlan`]: crate::simulator::autotune::NetworkPlan
 //! [`network_dispatch_overhead_ms`]: crate::simulator::cost::network_dispatch_overhead_ms
 //! [`network_marginal_time_ms`]: crate::simulator::cost::network_marginal_time_ms
@@ -24,7 +32,7 @@
 use std::collections::VecDeque;
 use std::time::Duration;
 
-use crate::coordinator::{plan_batches, PlanCache};
+use crate::coordinator::{plan_batches, PlanCache, Qos};
 use crate::model::graph::{ConvSpec, SqueezeNet};
 use crate::simulator::cost::{network_dispatch_overhead_ms, network_marginal_time_ms, RunMode};
 use crate::simulator::device::{DeviceProfile, Precision};
@@ -141,17 +149,62 @@ struct Batch {
     marginal_j: f64,
     /// Total committed energy: one overhead plus `b` marginals.
     energy_total_j: f64,
-    /// Latency anchors of the riders, admission order.
-    anchors: Vec<f64>,
+    /// The riders, admission order.
+    riders: Vec<Rider>,
 }
 
-/// A queued request orphaned by replica failure, handed back to the
-/// fleet for re-routing.
+/// One queued request as the replica sees it: latency anchor plus QoS.
+/// Also what [`Replica::fail`] hands back for re-routing, so a
+/// re-routed orphan keeps its anchor *and* its class.
 #[derive(Debug, Clone, Copy)]
-pub struct Orphan {
+pub struct Rider {
     /// Where latency measurement starts — the original arrival time,
     /// preserved across failure re-routing.
     pub anchor_ms: f64,
+    /// Scheduling priority (see [`Qos::priority`]).
+    pub priority: u8,
+    /// Absolute virtual-time deadline (`f64::INFINITY` = none).
+    pub deadline_at_ms: f64,
+}
+
+impl Rider {
+    /// A rider of the default class (no deadline).
+    pub fn plain(anchor_ms: f64) -> Rider {
+        Rider { anchor_ms, priority: Qos::DEFAULT_PRIORITY, deadline_at_ms: f64::INFINITY }
+    }
+
+    /// Build a rider from a request's [`Qos`], resolving the relative
+    /// deadline budget against the anchor (arrival) time.
+    pub fn from_qos(anchor_ms: f64, qos: Qos) -> Rider {
+        Rider {
+            anchor_ms,
+            priority: qos.priority,
+            deadline_at_ms: qos.deadline_ms.map_or(f64::INFINITY, |d| anchor_ms + d),
+        }
+    }
+
+    pub fn has_deadline(&self) -> bool {
+        self.deadline_at_ms.is_finite()
+    }
+
+    /// Interactive class: raised priority or an explicit deadline
+    /// (mirrors [`Qos::is_interactive`]).
+    pub fn is_interactive(&self) -> bool {
+        self.priority > Qos::DEFAULT_PRIORITY || self.has_deadline()
+    }
+}
+
+/// One rider retired by [`Replica::collect`]: served at a recorded
+/// latency, or shed at dequeue because its deadline had already
+/// expired (no joules were spent on it).
+#[derive(Debug, Clone, Copy)]
+pub struct Outcome {
+    pub rider: Rider,
+    /// Completion latency in ms; `None` = expired at dequeue.
+    pub latency_ms: Option<f64>,
+    /// The rider had a deadline and did not make it (served late, or
+    /// expired before service).
+    pub missed_deadline: bool,
 }
 
 /// Where a dispatched request landed, and at what predicted cost.
@@ -245,13 +298,28 @@ pub struct Replica {
     marginal_j: [f64; 2],
     overhead_j: [f64; 2],
     busy_until_ms: f64,
-    /// Accumulating (not yet scheduled) batch: riders' latency anchors.
-    open_anchors: Vec<f64>,
+    /// Accumulating (not yet scheduled) batch.
+    open: Vec<Rider>,
     /// Flush deadline of the open batch (`INFINITY` when it is empty).
     open_deadline_ms: f64,
+    /// Latest admission into the open batch — an urgency-pulled seal
+    /// time can never move before a rider's own arrival.
+    open_latest_admit_ms: f64,
     /// Serving precision of the open batch (batches are homogeneous; a
     /// precision change flushes the open batch first).
     open_precision: Precision,
+    /// Ignore per-rider deadlines when making batching decisions (the
+    /// priority-blind comparison baseline).  Deadline *accounting*
+    /// (miss counters) still runs either way.
+    pub qos_blind: bool,
+    /// Deadline riders shed at dequeue (expired before service).
+    pub expired: u64,
+    /// Riders with a deadline retired so far (served or expired).
+    pub deadline_riders: u64,
+    /// Of those, how many missed it (served late, or expired).
+    pub deadline_missed: u64,
+    /// Expired riders awaiting hand-back via [`Replica::collect`].
+    expired_pending: Vec<Rider>,
     scheduled: VecDeque<Batch>,
     /// Riders queued (open or scheduled) — kept in sync by
     /// admit/collect/retract/fail so the routing hot path reads it in
@@ -322,9 +390,15 @@ impl Replica {
             marginal_j,
             overhead_j,
             busy_until_ms: 0.0,
-            open_anchors: Vec::new(),
+            open: Vec::new(),
             open_deadline_ms: f64::INFINITY,
+            open_latest_admit_ms: f64::NEG_INFINITY,
             open_precision: Precision::Precise,
+            qos_blind: false,
+            expired: 0,
+            deadline_riders: 0,
+            deadline_missed: 0,
+            expired_pending: Vec::new(),
             scheduled: VecDeque::new(),
             in_flight_count: 0,
             energy_spent_j: 0.0,
@@ -437,8 +511,8 @@ impl Replica {
     pub fn predicted_energy_per_request_j(&self) -> f64 {
         let precision = self.effective_precision();
         let i = precision_index(precision);
-        let fill = if !self.open_anchors.is_empty() && self.open_precision == precision {
-            self.open_anchors.len()
+        let fill = if !self.open.is_empty() && self.open_precision == precision {
+            self.open.len()
         } else {
             0
         };
@@ -451,12 +525,22 @@ impl Replica {
     /// the engine working off its backlog.  Riders already in the open
     /// batch share the same dispatch, so they add no wait.
     pub fn queue_wait_ms(&self, now_ms: f64) -> f64 {
-        let deadline = if self.open_anchors.is_empty() {
+        let deadline = if self.open.is_empty() {
             now_ms + self.batch.max_wait_ms
         } else {
-            self.open_deadline_ms
+            self.open_deadline_ms.min(self.urgent_seal_ms()).max(self.open_latest_admit_ms)
         };
         (self.busy_until_ms.max(deadline) - now_ms).max(0.0)
+    }
+
+    /// Wait imposed by the engine backlog alone (ms): scheduled work
+    /// that must finish before a new dispatch can start.  Unlike
+    /// [`queue_wait_ms`](Self::queue_wait_ms) this excludes the open
+    /// batch's `max_wait_ms` accumulation window, which an urgent
+    /// rider bypasses (its tight slack seals the batch immediately) —
+    /// the deadline-feasibility floor, not the typical wait.
+    pub fn backlog_wait_ms(&self, now_ms: f64) -> f64 {
+        (self.busy_until_ms - now_ms).max(0.0)
     }
 
     /// Requests queued (open or scheduled) or running.
@@ -466,7 +550,7 @@ impl Replica {
 
     /// Riders in the open (still accumulating) batch.
     pub fn open_fill(&self) -> usize {
-        self.open_anchors.len()
+        self.open.len()
     }
 
     /// Baseline rail power (W) this replica's idle meter charges.
@@ -479,12 +563,12 @@ impl Replica {
     /// a safe upper bound (as if every rider flushed alone).
     pub fn last_finish_ms(&self) -> Option<f64> {
         let sched = self.scheduled.back().map(|b| b.finish_ms);
-        let open = if self.open_anchors.is_empty() {
+        let open = if self.open.is_empty() {
             None
         } else {
             let i = precision_index(self.open_precision);
-            let start = self.busy_until_ms.max(self.open_deadline_ms);
-            let n = self.open_anchors.len() as f64;
+            let start = self.seal_ms();
+            let n = self.open.len() as f64;
             Some(start + n * (self.overhead_ms[i] + self.marginal_ms[i]))
         };
         match (sched, open) {
@@ -523,14 +607,46 @@ impl Replica {
     /// releases the per-item overheads it amortizes from the committed
     /// energy meter.
     fn flush_open(&mut self, at_ms: f64) {
-        if self.open_anchors.is_empty() {
+        if self.open.is_empty() {
             return;
         }
         let i = precision_index(self.open_precision);
-        let plan = plan_batches(self.open_anchors.len(), &self.batch.sizes);
+        // Expired-deadline riders are shed at dequeue: a rider that
+        // cannot meet its deadline even dispatched *alone, right now*
+        // would only waste service joules on an answer that arrives
+        // too late.  (Skipped in the priority-blind posture — it
+        // serves doomed requests, which is the waste the QoS bench
+        // quantifies.)
+        if !self.qos_blind {
+            let start0 = self.busy_until_ms.max(at_ms);
+            let min_service = self.overhead_ms[i] + self.marginal_ms[i];
+            let committed = self.overhead_j[i] + self.marginal_j[i];
+            if self.open.iter().any(|r| start0 + min_service > r.deadline_at_ms) {
+                let mut kept = Vec::with_capacity(self.open.len());
+                for r in std::mem::take(&mut self.open) {
+                    if start0 + min_service > r.deadline_at_ms {
+                        self.expired += 1;
+                        self.deadline_riders += 1;
+                        self.deadline_missed += 1;
+                        self.in_flight_count = self.in_flight_count.saturating_sub(1);
+                        self.energy_queued_j = (self.energy_queued_j - committed).max(0.0);
+                        self.release_reroute_hold(r.anchor_ms);
+                        self.expired_pending.push(r);
+                    } else {
+                        kept.push(r);
+                    }
+                }
+                self.open = kept;
+                if self.open.is_empty() {
+                    self.open_deadline_ms = f64::INFINITY;
+                    return;
+                }
+            }
+        }
+        let plan = plan_batches(self.open.len(), &self.batch.sizes);
         let mut offset = 0;
         for b in plan {
-            let anchors = self.open_anchors[offset..offset + b].to_vec();
+            let riders = self.open[offset..offset + b].to_vec();
             offset += b;
             let start = self.busy_until_ms.max(at_ms);
             let service = self.overhead_ms[i] + b as f64 * self.marginal_ms[i];
@@ -544,30 +660,54 @@ impl Replica {
                 marginal_ms: self.marginal_ms[i],
                 marginal_j: self.marginal_j[i],
                 energy_total_j: energy,
-                anchors,
+                riders,
             };
             self.busy_until_ms = batch.finish_ms;
             self.scheduled.push_back(batch);
         }
         self.energy_queued_j = self.energy_queued_j.max(0.0);
-        self.open_anchors.clear();
+        self.open.clear();
         self.open_deadline_ms = f64::INFINITY;
+    }
+
+    /// Latest time the open batch can start so that its
+    /// tightest-deadline rider still meets its deadline (`INFINITY`
+    /// when no rider has one, or in the priority-blind posture).
+    fn urgent_seal_ms(&self) -> f64 {
+        if self.qos_blind {
+            return f64::INFINITY;
+        }
+        let tightest = self.open.iter().map(|r| r.deadline_at_ms).fold(f64::INFINITY, f64::min);
+        if !tightest.is_finite() {
+            return f64::INFINITY;
+        }
+        let i = precision_index(self.open_precision);
+        let n = self.open.len();
+        let service = self.batch.dispatch_count(n) as f64 * self.overhead_ms[i]
+            + n as f64 * self.marginal_ms[i];
+        tightest - service
     }
 
     /// When the open batch seals: the *later* of its deadline and the
     /// engine freeing up.  While the replica is busy, waiting costs no
     /// latency and lets the batch keep filling — sealing at the
     /// deadline alone would lock in single-rider batches behind a
-    /// backlog, which is exactly when amortization matters most.
+    /// backlog, which is exactly when amortization matters most.  An
+    /// urgent rider pulls the seal *earlier* (to the last moment its
+    /// deadline can still be met), clamped so the batch never seals
+    /// before its newest member arrived.
     fn seal_ms(&self) -> f64 {
-        self.open_deadline_ms.max(self.busy_until_ms)
+        self.open_deadline_ms
+            .min(self.urgent_seal_ms())
+            .max(self.busy_until_ms)
+            .max(self.open_latest_admit_ms)
     }
 
     /// Flush the open batch if its seal time has passed (the flush
     /// happens *at* the seal time, not at `now` — virtual time may
     /// have jumped far beyond it).
     fn flush_due(&mut self, now_ms: f64) {
-        if !self.open_anchors.is_empty() && self.seal_ms() <= now_ms {
+        if !self.open.is_empty() && self.seal_ms() <= now_ms {
             let at = self.seal_ms();
             self.flush_open(at);
         }
@@ -576,7 +716,7 @@ impl Replica {
     /// Flush the open batch at its seal time even if virtual time has
     /// not reached it yet — used by `Fleet::finish` to run queues dry.
     pub fn force_flush(&mut self) {
-        if !self.open_anchors.is_empty() {
+        if !self.open.is_empty() {
             let at = self.seal_ms();
             self.flush_open(at);
         }
@@ -587,35 +727,55 @@ impl Replica {
     /// The request joins the open batch, which flushes immediately when
     /// full (always, at the default `max_batch = 1`).
     pub fn admit(&mut self, now_ms: f64, anchor_ms: f64) -> Placement {
+        self.admit_rider(now_ms, Rider::plain(anchor_ms))
+    }
+
+    /// [`admit`](Self::admit) with an explicit QoS rider.  A rider
+    /// whose deadline slack is already thinner than the open batch's
+    /// estimated service time seals (flushes) the batch immediately —
+    /// an urgent request is never stranded waiting out `max_wait_ms`.
+    pub fn admit_rider(&mut self, now_ms: f64, rider: Rider) -> Placement {
         self.flush_due(now_ms);
         let precision = self.effective_precision();
         // Batches are homogeneous: a precision change (budget
         // degradation) closes the open batch before the new rider.
-        if !self.open_anchors.is_empty() && self.open_precision != precision {
+        if !self.open.is_empty() && self.open_precision != precision {
             self.flush_open(now_ms);
         }
-        if self.open_anchors.is_empty() {
+        if self.open.is_empty() {
             self.open_precision = precision;
             self.open_deadline_ms = now_ms + self.batch.max_wait_ms;
         }
-        self.open_anchors.push(anchor_ms);
+        self.open.push(rider);
+        self.open_latest_admit_ms = now_ms;
         self.in_flight_count += 1;
         let i = precision_index(precision);
         self.energy_queued_j += self.overhead_j[i] + self.marginal_j[i];
         self.placements += 1;
-        let flushed_now = self.open_anchors.len() >= self.batch.max_batch;
+        // A full batch flushes as before; a tight deadline (seal time
+        // already due) flushes the partial batch early.
+        let flushed_now = self.open.len() >= self.batch.max_batch || self.seal_ms() <= now_ms;
         if flushed_now {
             self.flush_open(now_ms);
         }
         let (start_est, finish_est, fill) = if flushed_now {
-            let b = self.scheduled.back().expect("flush scheduled at least one batch");
-            (b.start_ms, b.finish_ms, b.anchors.len())
+            match self.scheduled.back() {
+                Some(b) => (b.start_ms, b.finish_ms, b.riders.len()),
+                // The flush expired every rider (hopeless deadline):
+                // nothing was scheduled; report the single-dispatch
+                // cost the request would have had.
+                None => {
+                    let start = self.busy_until_ms.max(now_ms);
+                    (start, start + self.overhead_ms[i] + self.marginal_ms[i], 1)
+                }
+            }
         } else {
-            let fill = self.open_anchors.len();
-            let start = self.busy_until_ms.max(self.open_deadline_ms);
-            // The open batch decomposes via plan_batches at flush; this
-            // newest rider lands in the trailing chunk, so its finish
-            // pays every chunk's overhead plus all riders' marginals.
+            // The open batch decomposes via plan_batches at flush;
+            // this newest rider lands in the trailing chunk, so its
+            // finish pays every chunk's overhead plus all riders'
+            // marginals.
+            let fill = self.open.len();
+            let start = self.seal_ms();
             let dispatches = self.batch.dispatch_count(fill) as f64;
             let finish =
                 start + dispatches * self.overhead_ms[i] + fill as f64 * self.marginal_ms[i];
@@ -627,10 +787,10 @@ impl Replica {
             replica_name: self.name.clone(),
             queue_wait_ms: (start_est - now_ms).max(0.0),
             service_ms: self.overhead_ms[i] + self.marginal_ms[i],
-            predicted_latency_ms: finish_est - anchor_ms,
+            predicted_latency_ms: finish_est - rider.anchor_ms,
             energy_j: self.overhead_j[i] + self.marginal_j[i],
             precision,
-            anchor_ms,
+            anchor_ms: rider.anchor_ms,
             batch_fill: fill,
         }
     }
@@ -639,27 +799,41 @@ impl Replica {
     /// batch first if its deadline passed): record per-rider latency,
     /// meter energy, and apply budget transitions (degrade at the soft
     /// threshold; `available()` turns false once exhausted).  Returns
-    /// the completed latencies in ms for fleet-wide aggregation.
-    pub fn collect(&mut self, now_ms: f64) -> Vec<f64> {
+    /// one [`Outcome`] per retired rider — served completions plus any
+    /// deadline-expired riders shed at dequeue since the last collect.
+    pub fn collect(&mut self, now_ms: f64) -> Vec<Outcome> {
         self.flush_due(now_ms);
-        let mut done = Vec::new();
+        let mut done: Vec<Outcome> = self
+            .expired_pending
+            .drain(..)
+            .map(|rider| Outcome { rider, latency_ms: None, missed_deadline: true })
+            .collect();
         while let Some(front) = self.scheduled.front() {
             if front.finish_ms > now_ms {
                 break;
             }
             let b = self.scheduled.pop_front().unwrap();
-            for anchor in &b.anchors {
-                let latency_ms = (b.finish_ms - anchor).max(0.0);
+            for rider in &b.riders {
+                let latency_ms = (b.finish_ms - rider.anchor_ms).max(0.0);
                 self.latency.record(Duration::from_secs_f64(latency_ms / 1e3));
                 self.completed += 1;
-                done.push(latency_ms);
+                let missed = b.finish_ms > rider.deadline_at_ms;
+                if rider.has_deadline() {
+                    self.deadline_riders += 1;
+                    if missed {
+                        self.deadline_missed += 1;
+                    }
+                }
+                done.push(Outcome {
+                    rider: *rider,
+                    latency_ms: Some(latency_ms),
+                    missed_deadline: missed,
+                });
                 // Riders sharing an anchor are fungible; retiring any
                 // one of them releases one re-route hold.
-                if let Some(pos) = self.rerouted_anchors.iter().position(|a| a == anchor) {
-                    self.rerouted_anchors.swap_remove(pos);
-                }
+                self.release_reroute_hold(rider.anchor_ms);
             }
-            self.in_flight_count = self.in_flight_count.saturating_sub(b.anchors.len());
+            self.in_flight_count = self.in_flight_count.saturating_sub(b.riders.len());
             self.energy_queued_j = (self.energy_queued_j - b.energy_total_j).max(0.0);
             self.energy_spent_j += b.energy_total_j;
         }
@@ -684,35 +858,75 @@ impl Replica {
     /// overhead + marginal (what admission committed for them),
     /// scheduled riders release what their batch still carries.
     pub fn retract_last(&mut self, placement: &Placement) -> bool {
-        if !self.open_anchors.is_empty() && self.open_precision == placement.precision {
-            if let Some(pos) =
-                self.open_anchors.iter().rposition(|&a| a == placement.anchor_ms)
-            {
-                self.open_anchors.remove(pos);
+        self.remove_rider(placement.anchor_ms, placement.precision, None)
+    }
+
+    /// Evict a queued rider that has *not started service* — the
+    /// fleet gate's priority shedding (drop the cheapest queued rider
+    /// to admit a more urgent arrival).  Unlike
+    /// [`retract_last`](Self::retract_last), a batch already running
+    /// at `now_ms` is never touched: joules in flight are not wasted
+    /// on an eviction.
+    pub fn evict_rider(&mut self, anchor_ms: f64, precision: Precision, now_ms: f64) -> bool {
+        self.remove_rider(anchor_ms, precision, Some(now_ms))
+    }
+
+    /// Is the rider admitted with (anchor, precision) still waiting in
+    /// the open batch or a scheduled batch that has not started at
+    /// `now_ms`?  (I.e. would [`evict_rider`](Self::evict_rider)
+    /// succeed.)
+    pub fn rider_evictable(&self, anchor_ms: f64, precision: Precision, now_ms: f64) -> bool {
+        if !self.open.is_empty()
+            && self.open_precision == precision
+            && self.open.iter().any(|r| r.anchor_ms == anchor_ms)
+        {
+            return true;
+        }
+        self.scheduled.iter().any(|b| {
+            b.precision == precision
+                && b.start_ms > now_ms
+                && b.riders.iter().any(|r| r.anchor_ms == anchor_ms)
+        })
+    }
+
+    fn remove_rider(
+        &mut self,
+        anchor_ms: f64,
+        precision: Precision,
+        unstarted_after: Option<f64>,
+    ) -> bool {
+        if !self.open.is_empty() && self.open_precision == precision {
+            if let Some(pos) = self.open.iter().rposition(|r| r.anchor_ms == anchor_ms) {
+                self.open.remove(pos);
                 self.in_flight_count = self.in_flight_count.saturating_sub(1);
-                let i = precision_index(placement.precision);
+                let i = precision_index(precision);
                 self.energy_queued_j =
                     (self.energy_queued_j - self.overhead_j[i] - self.marginal_j[i]).max(0.0);
                 self.placements = self.placements.saturating_sub(1);
-                if self.open_anchors.is_empty() {
+                if self.open.is_empty() {
                     self.open_deadline_ms = f64::INFINITY;
                 }
-                self.release_reroute_hold(placement.anchor_ms);
+                self.release_reroute_hold(anchor_ms);
                 return true;
             }
         }
         for idx in (0..self.scheduled.len()).rev() {
-            if self.scheduled[idx].precision != placement.precision {
+            if self.scheduled[idx].precision != precision {
                 continue;
             }
+            if let Some(limit) = unstarted_after {
+                if self.scheduled[idx].start_ms <= limit {
+                    continue;
+                }
+            }
             let Some(pos) =
-                self.scheduled[idx].anchors.iter().rposition(|&a| a == placement.anchor_ms)
+                self.scheduled[idx].riders.iter().rposition(|r| r.anchor_ms == anchor_ms)
             else {
                 continue;
             };
             let last = idx + 1 == self.scheduled.len();
-            self.scheduled[idx].anchors.remove(pos);
-            if self.scheduled[idx].anchors.is_empty() {
+            self.scheduled[idx].riders.remove(pos);
+            if self.scheduled[idx].riders.is_empty() {
                 let b = self.scheduled.remove(idx).unwrap();
                 self.energy_queued_j = (self.energy_queued_j - b.energy_total_j).max(0.0);
                 if last {
@@ -730,7 +944,7 @@ impl Replica {
             }
             self.in_flight_count = self.in_flight_count.saturating_sub(1);
             self.placements = self.placements.saturating_sub(1);
-            self.release_reroute_hold(placement.anchor_ms);
+            self.release_reroute_hold(anchor_ms);
             return true;
         }
         false
@@ -747,10 +961,11 @@ impl Replica {
     }
 
     /// Kill the replica: queued work (open and scheduled alike) is
-    /// abandoned and handed back for re-routing, oldest first.  Energy
-    /// for unfinished work is not metered (the run died before the
-    /// joules were spent on a useful answer).
-    pub fn fail(&mut self) -> Vec<Orphan> {
+    /// abandoned and handed back for re-routing, oldest first — each
+    /// orphan keeps its anchor *and* its QoS class.  Energy for
+    /// unfinished work is not metered (the run died before the joules
+    /// were spent on a useful answer).
+    pub fn fail(&mut self) -> Vec<Rider> {
         self.health = Health::Failed;
         self.parked = false;
         self.busy_until_ms = 0.0;
@@ -759,9 +974,9 @@ impl Replica {
         self.rerouted_anchors.clear();
         let mut orphans = Vec::new();
         for b in self.scheduled.drain(..) {
-            orphans.extend(b.anchors.iter().map(|&anchor_ms| Orphan { anchor_ms }));
+            orphans.extend(b.riders.iter().copied());
         }
-        orphans.extend(self.open_anchors.drain(..).map(|anchor_ms| Orphan { anchor_ms }));
+        orphans.append(&mut self.open);
         self.open_deadline_ms = f64::INFINITY;
         orphans
     }
@@ -921,8 +1136,114 @@ mod tests {
         assert_eq!(done.len(), 2);
         assert_eq!(r.open_fill(), 0);
         let finish = 50.0 + oh + 2.0 * marg;
-        assert!((done[0] - finish).abs() < 1e-9, "oldest rider waited for the deadline");
-        assert!((done[1] - (finish - 1.0)).abs() < 1e-9);
+        let lat = |o: &Outcome| o.latency_ms.expect("served, not expired");
+        assert!(
+            (lat(&done[0]) - finish).abs() < 1e-9,
+            "oldest rider waited for the deadline"
+        );
+        assert!((lat(&done[1]) - (finish - 1.0)).abs() < 1e-9);
+        assert!(done.iter().all(|o| !o.missed_deadline), "no deadlines were set");
+    }
+
+    #[test]
+    fn urgent_rider_seals_partial_batch_early() {
+        // An urgent rider must not be stranded behind max_wait_ms: the
+        // open batch seals as soon as the tightest deadline's slack
+        // drops below the batch's estimated service time.
+        let mut r = s7_batching(8, 1000.0);
+        let (oh, marg) = (r.dispatch_overhead_ms(), r.marginal_service_ms());
+        r.admit(0.0, 0.0);
+        let service2 = oh + 2.0 * marg; // two riders flush as one dispatch
+        let urgent = Rider {
+            anchor_ms: 10.0,
+            priority: 2,
+            // the batch must start by t=50 for this rider to make it
+            deadline_at_ms: 50.0 + service2,
+        };
+        r.admit_rider(10.0, urgent);
+        assert_eq!(r.open_fill(), 2);
+        // well before the 1000 ms wait deadline, the urgency seals it
+        r.collect(60.0);
+        assert_eq!(r.open_fill(), 0, "urgent slack must seal the batch early");
+        assert!((r.last_finish_ms().unwrap() - (50.0 + service2)).abs() < 1e-9);
+        let done = r.collect(50.0 + service2 + 1.0);
+        assert_eq!(done.len(), 2);
+        assert!(done.iter().all(|o| !o.missed_deadline));
+        assert_eq!(r.deadline_riders, 1);
+        assert_eq!(r.deadline_missed, 0);
+        // the blind posture ignores the deadline and waits for the cap
+        let mut blind = s7_batching(8, 1000.0);
+        blind.qos_blind = true;
+        blind.admit(0.0, 0.0);
+        blind.admit_rider(10.0, urgent);
+        blind.collect(60.0);
+        assert_eq!(blind.open_fill(), 2, "blind batch keeps filling");
+    }
+
+    #[test]
+    fn hopeless_deadline_rider_is_shed_at_dequeue() {
+        // Three plain riders back the queue up, then a rider whose
+        // budget cannot cover even the queue-free service: it is shed
+        // at dequeue (expired), its committed energy released, and no
+        // service joules are spent on it.
+        let mut r = s7_precise();
+        let s = r.service_ms();
+        for _ in 0..3 {
+            r.admit(0.0, 0.0);
+        }
+        let hopeless = Rider { anchor_ms: 1.0, priority: 2, deadline_at_ms: 1.0 + s * 0.5 };
+        r.admit_rider(1.0, hopeless);
+        // single-image batching flushes at admit; the expired rider is
+        // handed back on the next collect
+        let out = r.collect(1.5);
+        let expired: Vec<&Outcome> = out.iter().filter(|o| o.latency_ms.is_none()).collect();
+        assert_eq!(expired.len(), 1, "the hopeless rider must expire: {out:?}");
+        assert!(expired[0].missed_deadline);
+        assert_eq!(r.expired, 1);
+        assert_eq!(r.deadline_riders, 1);
+        assert_eq!(r.deadline_missed, 1);
+        assert_eq!(r.in_flight(), 3, "the plain riders are unaffected");
+        let horizon = r.last_finish_ms().unwrap() + 1.0;
+        let done = r.collect(horizon);
+        assert_eq!(done.len(), 3);
+        assert_eq!(r.completed, 3);
+        // exactly three requests' joules were spent
+        assert!((r.energy_spent_j - 3.0 * r.energy_per_request_j()).abs() < 1e-9);
+        assert!(r.energy_queued_j.abs() < 1e-9);
+        // the blind posture serves the doomed rider anyway (and counts
+        // the miss at completion)
+        let mut blind = s7_precise();
+        blind.qos_blind = true;
+        for _ in 0..3 {
+            blind.admit(0.0, 0.0);
+        }
+        blind.admit_rider(1.0, hopeless);
+        let horizon = blind.last_finish_ms().unwrap() + 1.0;
+        blind.collect(horizon);
+        assert_eq!(blind.completed, 4);
+        assert_eq!(blind.expired, 0);
+        assert_eq!(blind.deadline_missed, 1, "the late answer still counts as a miss");
+        assert!(
+            blind.energy_spent_j > r.energy_spent_j,
+            "serving the doomed rider wastes joules"
+        );
+    }
+
+    #[test]
+    fn evict_rider_refuses_batches_already_running() {
+        let mut r = s7_precise();
+        let s = r.service_ms();
+        let p1 = r.admit(0.0, 0.0);
+        let p2 = r.admit(0.5, 0.5);
+        // p1's batch started at t=0; at now=1 it is running and may
+        // not be evicted — p2's batch starts at s > 1 and may.
+        assert!(!r.rider_evictable(p1.anchor_ms, p1.precision, 1.0));
+        assert!(r.rider_evictable(p2.anchor_ms, p2.precision, 1.0));
+        assert!(r.evict_rider(p2.anchor_ms, p2.precision, 1.0));
+        assert_eq!(r.in_flight(), 1);
+        let done = r.collect(s * 3.0);
+        assert_eq!(done.len(), 1);
+        assert_eq!(r.completed, 1);
     }
 
     #[test]

@@ -2,12 +2,30 @@
 //!
 //! Every policy sees the same candidate view — queue wait, autotuned
 //! service time, and joules per request for each *available* replica —
-//! and returns one replica index.  `EnergyAware` is the paper-derived
-//! policy: the per-device autotuned `NetworkPlan` cost (§III-D) prices
-//! latency, Table V's rail model prices energy, and λ converts between
-//! them.
+//! plus the request's QoS ([`Rider`]), and returns one replica index.
+//! `EnergyAware` is the paper-derived policy: the per-device autotuned
+//! `NetworkPlan` cost (§III-D) prices latency, Table V's rail model
+//! prices energy, and λ converts between them.
+//!
+//! QoS enters the score two ways (Cappuccino's QoS-driven tradeoff
+//! selection, at serving time instead of synthesis time):
+//!
+//! - the latency price scales with priority (`λ_eff = λ · priority`,
+//!   floored at [`Policy::BULK_LATENCY_WEIGHT`]·λ) — bulk traffic
+//!   tolerates deep queues on the cheap-joule replicas, the default
+//!   class reproduces the pre-QoS score exactly;
+//! - a deadline adds an infeasibility penalty
+//!   ([`Policy::MISS_PENALTY_J`]) to every candidate whose predicted
+//!   completion would miss it, so tight-deadline requests route to
+//!   fast (or lightly-queued) replicas and relaxed ones keep the
+//!   cheap-joule placement.
+//!
+//! [`Rider`]: super::replica::Rider
 
+use crate::coordinator::Qos;
 use crate::util::rng::Rng;
+
+use super::replica::{max_request_energy_j, Rider};
 
 /// A placement policy.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -18,8 +36,12 @@ pub enum Policy {
     LeastLoaded,
     /// Minimize `energy_j + λ·(queue_wait_ms + service_ms)`: route to
     /// the cheapest-joule replica until its queue makes latency worth
-    /// more than the energy saved.  λ is in joules per millisecond.
-    EnergyAware { lambda_j_per_ms: f64 },
+    /// more than the energy saved.  λ is in joules per millisecond;
+    /// `None` means unpinned — score with
+    /// [`Policy::DEFAULT_LAMBDA_J_PER_MS`], and let an autoscale SLO
+    /// re-derive it ([`Policy::lambda_for_slo`]).  `Some(λ)` (the
+    /// `energy:<λ>` parse form) is never overridden.
+    EnergyAware { lambda_j_per_ms: Option<f64> },
     /// Sample two random candidates, keep the less loaded — the classic
     /// load-balancing compromise between RoundRobin and LeastLoaded.
     PowerOfTwoChoices,
@@ -30,17 +52,67 @@ impl Policy {
     /// ~0.6 J energy gap (S7 vs N5, precise) tolerates ~300 ms of queue.
     pub const DEFAULT_LAMBDA_J_PER_MS: f64 = 0.002;
 
-    /// Parse a CLI/config policy name.
+    /// Latency-price floor for bulk (priority 0) traffic, as a
+    /// fraction of λ: near-free latency concentrates bulk on the
+    /// cheapest-joule replicas, while the small residual still
+    /// balances equal-energy replicas by queue depth.
+    pub const BULK_LATENCY_WEIGHT: f64 = 0.05;
+
+    /// Score penalty (J) for a candidate whose predicted completion
+    /// misses the request's deadline — far above any real energy gap,
+    /// so a feasible replica always beats an infeasible one, and among
+    /// all-infeasible candidates the base score still picks the
+    /// least-bad.
+    pub const MISS_PENALTY_J: f64 = 1e3;
+
+    /// Parse a CLI/config policy name.  `energy:<λ>` pins an explicit
+    /// latency price in J/ms (e.g. `energy:0.004` or `energy:2e-3`) —
+    /// a pinned λ is never overridden by the SLO calibration
+    /// ([`Policy::lambda_for_slo`]).
     pub fn parse(s: &str) -> Result<Policy, String> {
-        match s.to_lowercase().replace(['-', '_'], "").as_str() {
+        // Split off the λ *before* normalizing: '-' and '_' are
+        // decorative in policy names but meaningful in numbers (minus
+        // sign, `2e-3` scientific notation).
+        let (name, lambda) = match s.split_once(':') {
+            Some((n, l)) => (n, Some(l.trim())),
+            None => (s, None),
+        };
+        let norm = name.to_lowercase().replace(['-', '_'], "");
+        if let Some(lambda) = lambda {
+            if norm != "energy" && norm != "energyaware" {
+                return Err(format!("unknown policy '{s}' (rr|least|energy[:λ]|p2c)"));
+            }
+            let l: f64 = lambda
+                .parse()
+                .map_err(|_| format!("bad latency price '{lambda}' in '{s}' (J/ms)"))?;
+            if !(l.is_finite() && l > 0.0) {
+                return Err(format!("latency price in '{s}' must be a positive number"));
+            }
+            return Ok(Policy::EnergyAware { lambda_j_per_ms: Some(l) });
+        }
+        match norm.as_str() {
             "rr" | "roundrobin" => Ok(Policy::RoundRobin),
             "least" | "leastloaded" => Ok(Policy::LeastLoaded),
-            "energy" | "energyaware" => {
-                Ok(Policy::EnergyAware { lambda_j_per_ms: Policy::DEFAULT_LAMBDA_J_PER_MS })
-            }
+            "energy" | "energyaware" => Ok(Policy::EnergyAware { lambda_j_per_ms: None }),
             "p2c" | "poweroftwo" | "poweroftwochoices" => Ok(Policy::PowerOfTwoChoices),
-            other => Err(format!("unknown policy '{other}' (rr|least|energy|p2c)")),
+            other => Err(format!("unknown policy '{other}' (rr|least|energy[:λ]|p2c)")),
         }
+    }
+
+    /// Derive the energy-aware latency price from a latency SLO:
+    /// waiting out the whole SLO costs as much as the priciest single
+    /// request in the device zoo
+    /// ([`max_request_energy_j`](super::replica::max_request_energy_j)),
+    /// so queueing is worth at most one worst-case request's joules
+    /// before the policy pays for a faster replica.  A tight SLO makes
+    /// latency expensive; a relaxed one lets the cheap replicas absorb
+    /// deeper queues.
+    pub fn lambda_for_slo(slo_p95_ms: f64) -> f64 {
+        assert!(
+            slo_p95_ms.is_finite() && slo_p95_ms > 0.0,
+            "slo_p95_ms must be positive"
+        );
+        max_request_energy_j() / slo_p95_ms
     }
 
     pub fn label(&self) -> &'static str {
@@ -57,7 +129,7 @@ impl Policy {
         vec![
             Policy::RoundRobin,
             Policy::LeastLoaded,
-            Policy::EnergyAware { lambda_j_per_ms: Policy::DEFAULT_LAMBDA_J_PER_MS },
+            Policy::EnergyAware { lambda_j_per_ms: None },
             Policy::PowerOfTwoChoices,
         ]
     }
@@ -70,6 +142,12 @@ pub struct Candidate {
     pub replica: usize,
     /// Predicted wait before service starts (ms).
     pub queue_wait_ms: f64,
+    /// Wait imposed by the engine backlog alone (ms) — excludes the
+    /// open batch's accumulation window, which an urgent rider seals
+    /// through.  Deadline feasibility is judged on this floor, so an
+    /// idle batched replica is not scored infeasible for a wait the
+    /// rider itself would bypass.
+    pub busy_wait_ms: f64,
     /// Autotuned single-image service time at the replica's effective
     /// precision (ms).
     pub service_ms: f64,
@@ -121,14 +199,19 @@ impl Router {
         Router { policy, cursor: 0, rng: Rng::new(seed) }
     }
 
-    /// Pick a replica among the available candidates; `None` when the
-    /// whole fleet is unavailable (caller sheds the request).
+    /// Pick a replica among the available candidates for `rider`
+    /// (`now_ms` resolves its deadline into remaining slack); `None`
+    /// when the whole fleet is unavailable (caller sheds the request).
     /// Candidates arrive in ascending replica-id order (the fleet
     /// builds them by iterating its replica vector).
-    pub fn place(&mut self, candidates: &[Candidate]) -> Option<usize> {
+    pub fn place(&mut self, candidates: &[Candidate], rider: &Rider, now_ms: f64) -> Option<usize> {
         if candidates.is_empty() {
             return None;
         }
+        // Remaining latency budget (INFINITY when no deadline): a
+        // candidate whose predicted wait + service overruns it would
+        // miss the deadline.
+        let budget_ms = rider.deadline_at_ms - now_ms;
         let chosen = match self.policy {
             Policy::RoundRobin => {
                 // Smallest available id >= cursor, wrapping to the
@@ -141,9 +224,28 @@ impl Router {
                 c
             }
             Policy::LeastLoaded => min_by_score(candidates, |c| c.queue_wait_ms),
-            Policy::EnergyAware { lambda_j_per_ms } => min_by_score(candidates, |c| {
-                c.energy_j + lambda_j_per_ms * (c.queue_wait_ms + c.service_ms)
-            }),
+            Policy::EnergyAware { lambda_j_per_ms } => {
+                // The latency price scales with priority: the default
+                // class pays exactly λ (the pre-QoS score), raised
+                // priorities pay proportionally more, and bulk pays
+                // the small floor — so relaxed traffic holds the
+                // cheap-joule replicas while urgent traffic buys
+                // speed.
+                let urgency = (rider.priority as f64 / Qos::DEFAULT_PRIORITY as f64)
+                    .max(Policy::BULK_LATENCY_WEIGHT);
+                let lambda =
+                    lambda_j_per_ms.unwrap_or(Policy::DEFAULT_LAMBDA_J_PER_MS) * urgency;
+                min_by_score(candidates, |c| {
+                    let mut score = c.energy_j + lambda * (c.queue_wait_ms + c.service_ms);
+                    // Feasibility is judged on the backlog floor: an
+                    // urgent rider seals through the batch wait, so
+                    // only real queued work can make it miss.
+                    if c.busy_wait_ms + c.service_ms > budget_ms {
+                        score += Policy::MISS_PENALTY_J;
+                    }
+                    score
+                })
+            }
             Policy::PowerOfTwoChoices => {
                 if candidates.len() == 1 {
                     candidates[0]
@@ -154,13 +256,15 @@ impl Router {
                         j += 1;
                     }
                     let (a, b) = (candidates[i], candidates[j]);
-                    // "less loaded": fewer requests in flight, queue
-                    // wait as the tiebreak between equal depths; among
+                    // "less loaded": meeting the rider's deadline
+                    // first, then fewer requests in flight, queue wait
+                    // as the tiebreak between equal depths; among
                     // equally-loaded candidates prefer the fuller open
                     // batch — topping it up amortizes its dispatch
                     // overhead at no extra latency.
                     let load = |c: &Candidate| {
-                        (c.in_flight, c.queue_wait_ms, usize::MAX - c.open_fill)
+                        let misses = u8::from(c.busy_wait_ms + c.service_ms > budget_ms);
+                        (misses, c.in_flight, c.queue_wait_ms, usize::MAX - c.open_fill)
                     };
                     if load(&b) < load(&a) {
                         b
@@ -182,11 +286,18 @@ mod tests {
         Candidate {
             replica,
             queue_wait_ms: wait,
+            // tests model unbatched replicas: the whole wait is backlog
+            busy_wait_ms: wait,
             service_ms: service,
             energy_j: energy,
             in_flight: 0,
             open_fill: 0,
         }
+    }
+
+    /// The default-class rider at t=0 (pre-QoS behavior).
+    fn plain() -> Rider {
+        Rider::plain(0.0)
     }
 
     #[test]
@@ -201,10 +312,50 @@ mod tests {
     }
 
     #[test]
+    fn parse_accepts_explicit_lambda() {
+        assert_eq!(
+            Policy::parse("energy:0.004").unwrap(),
+            Policy::EnergyAware { lambda_j_per_ms: Some(0.004) }
+        );
+        assert_eq!(
+            Policy::parse("energy-aware:0.01").unwrap(),
+            Policy::EnergyAware { lambda_j_per_ms: Some(0.01) }
+        );
+        // scientific notation and sign survive name normalization (a
+        // '-' in the λ is a minus sign, not a name separator)
+        assert_eq!(
+            Policy::parse("energy:2e-3").unwrap(),
+            Policy::EnergyAware { lambda_j_per_ms: Some(0.002) }
+        );
+        // a plain name is the *unpinned* form
+        assert_eq!(
+            Policy::parse("energy").unwrap(),
+            Policy::EnergyAware { lambda_j_per_ms: None }
+        );
+        assert!(Policy::parse("energy:").is_err());
+        assert!(Policy::parse("energy:zero").is_err());
+        assert!(Policy::parse("energy:-1").is_err());
+        assert!(Policy::parse("energy:-2e-3").is_err());
+        assert!(Policy::parse("rr:0.5").is_err(), "only energy takes a λ");
+    }
+
+    #[test]
+    fn lambda_for_slo_scales_inversely() {
+        let tight = Policy::lambda_for_slo(200.0);
+        let relaxed = Policy::lambda_for_slo(2000.0);
+        assert!(tight > 0.0 && relaxed > 0.0);
+        assert!((tight / relaxed - 10.0).abs() < 1e-9, "λ ∝ 1/SLO");
+        // the default λ's ~300 ms tolerance sits inside the band the
+        // derivation produces for realistic SLOs
+        let mid = Policy::lambda_for_slo(800.0);
+        assert!(mid > 0.0005 && mid < 0.01, "derived λ {mid} out of band");
+    }
+
+    #[test]
     fn round_robin_cycles() {
         let mut r = Router::new(Policy::RoundRobin, 0);
         let cs = [cand(0, 0.0, 1.0, 1.0), cand(1, 0.0, 1.0, 1.0), cand(2, 0.0, 1.0, 1.0)];
-        let picks: Vec<usize> = (0..6).map(|_| r.place(&cs).unwrap()).collect();
+        let picks: Vec<usize> = (0..6).map(|_| r.place(&cs, &plain(), 0.0).unwrap()).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
 
@@ -217,34 +368,98 @@ mod tests {
         let mut r = Router::new(Policy::RoundRobin, 0);
         let all = [cand(0, 0.0, 1.0, 1.0), cand(1, 0.0, 1.0, 1.0), cand(2, 0.0, 1.0, 1.0)];
         let without_1 = [all[0], all[2]];
-        assert_eq!(r.place(&all), Some(0));
+        assert_eq!(r.place(&all, &plain(), 0.0), Some(0));
         // replica 1 drains: rotation continues 2, 0, 2, 0 ...
-        assert_eq!(r.place(&without_1), Some(2));
-        assert_eq!(r.place(&without_1), Some(0));
-        assert_eq!(r.place(&without_1), Some(2));
+        assert_eq!(r.place(&without_1, &plain(), 0.0), Some(2));
+        assert_eq!(r.place(&without_1, &plain(), 0.0), Some(0));
+        assert_eq!(r.place(&without_1, &plain(), 0.0), Some(2));
         // replica 1 revives: the wrap lands on 0, then 1 rejoins in order
-        assert_eq!(r.place(&all), Some(0));
-        assert_eq!(r.place(&all), Some(1));
-        assert_eq!(r.place(&all), Some(2));
+        assert_eq!(r.place(&all, &plain(), 0.0), Some(0));
+        assert_eq!(r.place(&all, &plain(), 0.0), Some(1));
+        assert_eq!(r.place(&all, &plain(), 0.0), Some(2));
     }
 
     #[test]
     fn least_loaded_picks_shortest_queue() {
         let mut r = Router::new(Policy::LeastLoaded, 0);
         let cs = [cand(0, 50.0, 1.0, 1.0), cand(1, 10.0, 1.0, 1.0), cand(2, 90.0, 1.0, 1.0)];
-        assert_eq!(r.place(&cs), Some(1));
+        assert_eq!(r.place(&cs, &plain(), 0.0), Some(1));
     }
 
     #[test]
     fn energy_aware_trades_joules_for_queue() {
-        let mut r = Router::new(Policy::EnergyAware { lambda_j_per_ms: 0.002 }, 0);
+        let mut r = Router::new(Policy::EnergyAware { lambda_j_per_ms: Some(0.002) }, 0);
         // replica 1 is cheap on energy and idle -> wins
         let cs = [cand(0, 0.0, 400.0, 1.0), cand(1, 0.0, 600.0, 0.4)];
-        assert_eq!(r.place(&cs), Some(1));
+        assert_eq!(r.place(&cs, &plain(), 0.0), Some(1));
         // once replica 1's queue is deep enough, the energy gap is no
         // longer worth it: 0.4 + 0.002*(700+600) = 3.0 > 0.0 + 1.8
         let cs = [cand(0, 0.0, 400.0, 1.0), cand(1, 700.0, 600.0, 0.4)];
-        assert_eq!(r.place(&cs), Some(0));
+        assert_eq!(r.place(&cs, &plain(), 0.0), Some(0));
+    }
+
+    #[test]
+    fn energy_aware_routes_tight_deadlines_to_feasible_replicas() {
+        let mut r = Router::new(Policy::EnergyAware { lambda_j_per_ms: Some(0.002) }, 0);
+        let cs = [cand(0, 0.0, 400.0, 1.0), cand(1, 0.0, 600.0, 0.4)];
+        // relaxed: the cheap (slower) replica wins, as ever
+        assert_eq!(r.place(&cs, &plain(), 0.0), Some(1));
+        // a 500 ms deadline rules the 600 ms replica out: only the
+        // fast one can still make it, whatever its joule price
+        let tight = Rider { anchor_ms: 0.0, priority: 2, deadline_at_ms: 500.0 };
+        assert_eq!(r.place(&cs, &tight, 0.0), Some(0));
+        // when *every* candidate misses, the penalty cancels out and
+        // the base score picks the least-bad (at priority 2's doubled
+        // λ, the fast replica: 1.0+1.6 < 0.4+2.4)
+        let hopeless = Rider { anchor_ms: 0.0, priority: 2, deadline_at_ms: 100.0 };
+        assert_eq!(r.place(&cs, &hopeless, 0.0), Some(0));
+        // the budget is *remaining* slack: the same 500 ms deadline
+        // evaluated at t=450 leaves nobody feasible either
+        assert_eq!(r.place(&cs, &tight, 450.0), Some(0));
+    }
+
+    #[test]
+    fn deadline_feasibility_ignores_the_bypassable_batch_wait() {
+        // An idle *batched* replica reports queue_wait = its
+        // accumulation window, but an urgent rider seals straight
+        // through it: feasibility must be judged on the backlog floor
+        // (busy_wait), not the window.
+        let mut r = Router::new(Policy::EnergyAware { lambda_j_per_ms: Some(0.002) }, 0);
+        let mut fast = cand(0, 50.0, 30.0, 1.0); // 50 ms batch window...
+        fast.busy_wait_ms = 0.0; // ...but no real backlog
+        let cheap = cand(1, 0.0, 200.0, 0.4);
+        let cs = [fast, cheap];
+        // 60 ms budget: only the fast replica can make it, and it must
+        // not be scored infeasible for a wait the rider bypasses
+        // (1.0 + 0.004*80 = 1.32 beats 0.4 + 0.004*200 + miss penalty)
+        let tight = Rider { anchor_ms: 0.0, priority: 2, deadline_at_ms: 60.0 };
+        assert_eq!(r.place(&cs, &tight, 0.0), Some(0));
+        // P2C judges feasibility on the same floor
+        let mut r = Router::new(Policy::PowerOfTwoChoices, 3);
+        for _ in 0..10 {
+            assert_eq!(r.place(&cs, &tight, 0.0), Some(0));
+        }
+    }
+
+    #[test]
+    fn bulk_priority_relaxes_the_latency_price() {
+        let mut r = Router::new(Policy::EnergyAware { lambda_j_per_ms: Some(0.002) }, 0);
+        // deep queue on the cheap replica: the default class spills to
+        // the pricier fast one (the existing tradeoff) ...
+        let cs = [cand(0, 0.0, 400.0, 1.0), cand(1, 700.0, 600.0, 0.4)];
+        assert_eq!(r.place(&cs, &plain(), 0.0), Some(0));
+        // ... but bulk's near-free latency keeps it on the cheap rail:
+        // 0.4 + 0.002*0.05*1300 = 0.53 < 1.0 + 0.04
+        let bulk = Rider { anchor_ms: 0.0, priority: 0, deadline_at_ms: f64::INFINITY };
+        assert_eq!(r.place(&cs, &bulk, 0.0), Some(1));
+        // a raised priority pays more for latency: a queue the default
+        // class still tolerates (0.4+0.002*650 = 1.7 < 1.8) spills the
+        // priority-2 class to the fast replica (0.4+0.004*650 = 3.0 >
+        // 1.0+0.004*400 = 2.6)
+        let cs = [cand(0, 0.0, 400.0, 1.0), cand(1, 50.0, 600.0, 0.4)];
+        assert_eq!(r.place(&cs, &plain(), 0.0), Some(1), "default tolerates 50 ms");
+        let urgent = Rider { anchor_ms: 0.0, priority: 2, deadline_at_ms: f64::INFINITY };
+        assert_eq!(r.place(&cs, &urgent, 0.0), Some(0), "priority 2 does not");
     }
 
     #[test]
@@ -252,16 +467,38 @@ mod tests {
         let cs = [cand(0, 5.0, 1.0, 1.0), cand(1, 1.0, 1.0, 1.0), cand(2, 9.0, 1.0, 1.0)];
         let a: Vec<_> = {
             let mut r = Router::new(Policy::PowerOfTwoChoices, 7);
-            (0..20).map(|_| r.place(&cs).unwrap()).collect()
+            (0..20).map(|_| r.place(&cs, &plain(), 0.0).unwrap()).collect()
         };
         let b: Vec<_> = {
             let mut r = Router::new(Policy::PowerOfTwoChoices, 7);
-            (0..20).map(|_| r.place(&cs).unwrap()).collect()
+            (0..20).map(|_| r.place(&cs, &plain(), 0.0).unwrap()).collect()
         };
         assert_eq!(a, b);
         // the heaviest replica loses every two-way comparison (the two
         // samples are always distinct), so it can never be picked
         assert!(!a.contains(&2));
+    }
+
+    #[test]
+    fn power_of_two_prefers_deadline_feasible_candidates() {
+        // Replica 0 is idle but slow (misses the deadline); replica 1
+        // is deeper-queued but fast enough.  For a deadline rider the
+        // feasibility flag outranks the load comparison.
+        let mut a = cand(0, 0.0, 900.0, 1.0);
+        let mut b = cand(1, 100.0, 200.0, 1.0);
+        a.in_flight = 0;
+        b.in_flight = 2;
+        let cs = [a, b];
+        let tight = Rider { anchor_ms: 0.0, priority: 2, deadline_at_ms: 600.0 };
+        let mut r = Router::new(Policy::PowerOfTwoChoices, 3);
+        for _ in 0..10 {
+            assert_eq!(r.place(&cs, &tight, 0.0), Some(1));
+        }
+        // without the deadline, the idle replica wins as before
+        let mut r = Router::new(Policy::PowerOfTwoChoices, 3);
+        for _ in 0..10 {
+            assert_eq!(r.place(&cs, &plain(), 0.0), Some(0));
+        }
     }
 
     #[test]
@@ -276,13 +513,13 @@ mod tests {
         let cs = [a, b];
         let mut r = Router::new(Policy::PowerOfTwoChoices, 3);
         for _ in 0..10 {
-            assert_eq!(r.place(&cs), Some(1));
+            assert_eq!(r.place(&cs, &plain(), 0.0), Some(1));
         }
     }
 
     #[test]
     fn empty_candidates_shed() {
         let mut r = Router::new(Policy::RoundRobin, 0);
-        assert_eq!(r.place(&[]), None);
+        assert_eq!(r.place(&[], &plain(), 0.0), None);
     }
 }

@@ -19,7 +19,12 @@
 //!   `LeastLoaded`, `EnergyAware`, `PowerOfTwoChoices`), per-replica
 //!   dynamic batching (amortizing the per-dispatch overhead across
 //!   multi-image dispatches), replica draining / failure injection
-//!   with automatic re-routing, and per-replica joule budgets.  The paper's per-device autotuning
+//!   with automatic re-routing, per-replica joule budgets, and
+//!   **deadline-aware QoS**: every request carries a priority and an
+//!   optional deadline end to end — priority-aware shedding at the
+//!   admission gate (cheapest-to-drop first), deadline-slack routing,
+//!   early batch flush for urgent riders, expiry at dequeue, and an
+//!   autoscaler breach signal split by class.  The paper's per-device autotuning
 //!   results are exactly what make routing non-trivial: each device has
 //!   its own optimal granularity plan (Table I), hence its own latency
 //!   (Table VI) and joules per image (Table V), so *where* a request

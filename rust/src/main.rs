@@ -60,6 +60,11 @@ Fleet specs are comma-separated [COUNTx]DEVICE[@fp32|fp16] atoms, e.g.
 2xs7,1x6p@fp16,n5 (also via MCN_FLEET / MCN_FLEET_POLICY /
 MCN_FLEET_BATCH env).  --batch > 1 turns on per-replica dynamic
 batching: arrivals accumulate into amortized multi-image dispatches.
+Policies: rr|least|energy|p2c; energy:<λ> pins the J/ms latency price
+explicitly (otherwise an autoscale SLO derives it).  Requests carry a
+QoS class on the fleet path: "priority" (0 = bulk, default 1) and
+"deadline_ms" on the serve wire protocol — priority-aware shedding,
+deadline-aware placement, early batch flush, expiry at dequeue.
 
 --fleet-autoscale / --autoscale attach the closed-loop autoscaler
 (also via MCN_FLEET_AUTOSCALE): comma-separated key=value pairs, pool
