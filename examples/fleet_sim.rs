@@ -12,6 +12,7 @@
 //! cargo run --release --example fleet_sim -- --batch 8 --rate 24 # amortized dispatches
 //! cargo run --release --example fleet_sim -- \
 //!     --autoscale "slo=800,pool=3xn5@fp16+2x6p@fp16,max=6"       # traffic ramp + spike
+//! cargo run --release --example fleet_sim -- --multimodel        # artifact cache tier
 //! ```
 //!
 //! `--autoscale KV` switches to the closed-loop scenario: a calm ->
@@ -20,13 +21,22 @@
 //! pool when the spike breaches the SLO, parks replicas again in the
 //! tail, and is compared against a statically over-provisioned fleet
 //! on total joules (idle baseline rails metered on both sides).
+//!
+//! `--multimodel` switches to the artifact-tier scenario: a 50/50
+//! two-model trace (`squeezenet` ≈ 5 MB, `detector` ≈ 10 MB) through
+//! replicas whose artifact cache (`--cache-mb`, default 12) holds only
+//! one model at a time, with both models prewarmed to their home
+//! replica.  Affinity-aware placement (cold-load cost in the router
+//! score) is compared against the affinity-blind posture — same
+//! physics, blind routing — on cold loads, joules, and p95.
 
 use anyhow::Result;
 use mobile_convnet::config::{self, DEFAULT_FLEET_BATCH_WAIT_MS};
 use mobile_convnet::coordinator::trace::{Arrival, Trace};
 use mobile_convnet::fleet::{
-    run_trace, AutoscaleConfig, Fleet, FleetConfig, HealthEvent, Policy,
+    run_trace, AutoscaleConfig, Fleet, FleetConfig, FleetReport, HealthEvent, Policy,
 };
+use mobile_convnet::runtime::artifacts::ModelId;
 use mobile_convnet::util::cli::Args;
 
 /// The `--autoscale` scenario: traffic ramp + spike against an elastic
@@ -60,7 +70,7 @@ fn autoscale_scenario(args: &Args, kv: &str) -> Result<()> {
         .iter()
         .map(|s| format!("{}@{}", s.device.id, s.precision.label()))
         .collect();
-    let elastic_cfg = config::fleet_from(spec, args.get("policy"), None, None, None)?
+    let elastic_cfg = config::fleet_from(spec, args.get("policy"), None, None, None, None)?
         .with_autoscale(autoscale)
         .with_seed(seed);
     let fleet = Fleet::new(elastic_cfg);
@@ -72,7 +82,7 @@ fn autoscale_scenario(args: &Args, kv: &str) -> Result<()> {
     // Static baseline: initial spec plus the whole warm pool, on from
     // the first virtual millisecond.
     let static_spec = format!("{spec},{}", pool_spec.join(","));
-    let static_cfg = config::fleet_from(&static_spec, args.get("policy"), None, None, None)?
+    let static_cfg = config::fleet_from(&static_spec, args.get("policy"), None, None, None, None)?
         .with_idle_power(true)
         .with_seed(seed);
     let static_report = run_trace(&Fleet::new(static_cfg), &trace, &[]);
@@ -97,10 +107,72 @@ fn autoscale_scenario(args: &Args, kv: &str) -> Result<()> {
     Ok(())
 }
 
+/// The `--multimodel` scenario: a two-model mixed trace through an
+/// artifact-cached fleet, affinity-aware vs affinity-blind placement.
+fn multimodel_scenario(args: &Args) -> Result<()> {
+    let spec = args.get_or("spec", "2xn5@fp16");
+    let n = args.get_usize("requests", 240).map_err(|e| anyhow::anyhow!(e))?;
+    let rate = args.get_f64("rate", 3.0).map_err(|e| anyhow::anyhow!(e))?;
+    let seed = args.get_u64("seed", 77).map_err(|e| anyhow::anyhow!(e))?;
+    let cache_mb = args.get_f64("cache-mb", 12.0).map_err(|e| anyhow::anyhow!(e))?;
+    let trace = Trace::generate(n, Arrival::Poisson { rate_per_s: rate }, 0.0, seed)
+        .with_model_mix(0.5, ModelId(1));
+    println!(
+        "multimodel: fleet '{spec}', {n} arrivals at {:.1} req/s, 50/50 squeezenet/detector, \
+         {cache_mb} MB artifact cache per replica\n",
+        trace.offered_rate()
+    );
+    let run = |blind: bool| -> Result<FleetReport> {
+        let mut cfg =
+            config::fleet_from(spec, args.get("policy"), None, None, None, Some(cache_mb))?
+                .with_seed(seed);
+        if blind {
+            cfg = cfg.with_affinity_blind();
+        }
+        let fleet = Fleet::new(cfg);
+        // the operator prewarm a real deployment would do: one model
+        // home per replica (both postures start from the same layout)
+        fleet.prewarm(0, ModelId::DEFAULT);
+        if fleet.len() > 1 {
+            fleet.prewarm(1, ModelId(1));
+        }
+        let report = run_trace(&fleet, &trace, &[]);
+        println!(
+            "{}:\n{}",
+            if blind { "affinity-blind" } else { "affinity-aware" },
+            report.render()
+        );
+        Ok(report)
+    };
+    let aware = run(false)?;
+    let blind = run(true)?;
+    println!(
+        "comparison: affinity-aware {} loads / {:.1} J (p95 {:.0} ms) vs blind {} loads / \
+         {:.1} J (p95 {:.0} ms)",
+        aware.artifact_loads,
+        aware.total_energy_j,
+        aware.p95_ms.unwrap_or(0.0),
+        blind.artifact_loads,
+        blind.total_energy_j,
+        blind.p95_ms.unwrap_or(0.0),
+    );
+    assert_eq!(aware.completed, n as u64, "conservation (aware)");
+    assert_eq!(blind.completed, n as u64, "conservation (blind)");
+    assert!(
+        aware.total_energy_j <= blind.total_energy_j,
+        "claim: affinity-aware routing must not spend more joules than blind"
+    );
+    println!("claim check: affinity-aware <= affinity-blind on total joules ... OK");
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
     if let Some(kv) = args.get("autoscale") {
         return autoscale_scenario(&args, kv);
+    }
+    if args.flag("multimodel") {
+        return multimodel_scenario(&args);
     }
     let spec = args.get_or("spec", "2xs7,2x6p,2xn5");
     let n = args.get_usize("requests", 240).map_err(|e| anyhow::anyhow!(e))?;
@@ -129,7 +201,7 @@ fn main() -> Result<()> {
     // an internal reference config, not user input.
     let configure = |policy: Policy, batched: bool| -> Result<FleetConfig> {
         let (cap, wait) = if batched { (batch_opt, wait_opt) } else { (None, None) };
-        let cfg = config::fleet_from(spec, Some(policy.label()), budget_j, cap, wait)?;
+        let cfg = config::fleet_from(spec, Some(policy.label()), budget_j, cap, wait, None)?;
         Ok(cfg.with_seed(seed))
     };
 

@@ -46,7 +46,7 @@ fn main() -> Result<()> {
     if let Some(spec) = fleet_spec {
         let batch = args.get_usize_opt("fleet-batch").map_err(|e| anyhow::anyhow!(e))?;
         let wait = args.get_f64_opt("fleet-batch-wait-ms").map_err(|e| anyhow::anyhow!(e))?;
-        let cfg = config::fleet_from(spec, args.get("policy"), None, batch, wait)?;
+        let cfg = config::fleet_from(spec, args.get("policy"), None, batch, wait, None)?;
         let fleet = Fleet::new(cfg);
         let report = fleet::run_trace(&fleet, &trace, &[]);
         println!("\nfleet path ({spec}):\n{}", report.render());

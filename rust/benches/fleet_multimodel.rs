@@ -1,0 +1,177 @@
+//! Bench for the **model-artifact tier** (the PR-5 tentpole): on a
+//! seeded 50/50 two-model trace (`squeezenet` ≈ 5 MB, `detector` ≈
+//! 10 MB) through replicas whose artifact cache holds only one model
+//! at a time, affinity-aware placement must beat the affinity-blind
+//! posture at equal completions:
+//!
+//! - **total joules strictly lower** — a cold load costs real
+//!   sequential-rail joules; the affinity-aware router sees the load
+//!   price in its score and keeps each model on its home replica,
+//!   while the blind router bounces models across replicas and pays
+//!   the reload every time the cache thrashes;
+//! - **p95 no worse** — cold loads sit *in the queue* (the request
+//!   behind one waits it out), so avoided loads are avoided latency;
+//! - **fewer cold loads** — the mechanism behind both.
+//!
+//! Both postures share the same physics (replicas pay real load
+//! costs), the same prewarmed layout (one model home per replica —
+//! the operator warm-up a real deployment would do), and the same
+//! trace; only the router's visibility differs.  This is a genuinely
+//! new placement axis — *which replica has the model* — orthogonal to
+//! the speed/energy axes of `fleet_routing` and `fleet_qos`.
+//!
+//! Everything is self-calibrating: the arrival rate derives from the
+//! device model's service time, and the cache capacity from the
+//! catalog's artifact bytes (fits the bigger model, never both).  All
+//! numbers are deterministic virtual time and feed the CI regression
+//! gate via `BENCH_OUT_DIR`.
+
+use mobile_convnet::coordinator::trace::{Arrival, Trace};
+use mobile_convnet::coordinator::{PlanCache, Qos};
+use mobile_convnet::fleet::{
+    run_trace, Fleet, FleetBatch, FleetConfig, FleetReport, Policy, Replica, ReplicaSpec,
+};
+use mobile_convnet::runtime::artifacts::{ModelCatalog, ModelId};
+use mobile_convnet::simulator::device::{DeviceProfile, Precision};
+use mobile_convnet::util::bench::{write_json_summary, Bencher};
+
+/// Fraction of arrivals serving the second (detector) model.
+const DETECTOR_FRAC: f64 = 0.5;
+
+fn main() {
+    // Self-calibration: per-image service time of the serving replica
+    // (N5 @ fp16, the cheap rail) and the catalog's artifact sizes.
+    let plan_cache = PlanCache::new();
+    let probe = Replica::new(
+        0,
+        ReplicaSpec::new(DeviceProfile::nexus_5(), Precision::Imprecise),
+        None,
+        FleetBatch::single(),
+        &plan_cache,
+    );
+    let service_ms = probe.service_ms();
+    let catalog = ModelCatalog::two_model_zoo();
+    let sq_bytes = catalog.models()[0].total_bytes;
+    let det_bytes = catalog.models()[1].total_bytes;
+    assert!(
+        det_bytes > sq_bytes,
+        "the zoo must keep an asymmetric footprint ({sq_bytes} vs {det_bytes} B)"
+    );
+    // Capacity fits the bigger model alone, never both: every
+    // cross-model placement on a warm replica evicts.
+    let capacity_bytes = (det_bytes as f64 * 1.2) as u64;
+    assert!(capacity_bytes < sq_bytes + det_bytes, "capacity must force a choice");
+
+    // Two equal replicas at ~25% utilization: queues stay shallow, so
+    // placement is decided by the policy, not saturation — which is
+    // exactly where the affinity signal matters (the blind posture's
+    // tie-breaking concentrates mixed traffic and thrashes the cache
+    // at any utilization).
+    let spec = "2xn5@fp16";
+    let rate = 0.25 * 2e3 / service_ms;
+    let n = 240usize;
+    let trace = Trace::generate(n, Arrival::Poisson { rate_per_s: rate }, 0.0, 42)
+        .with_model_mix(DETECTOR_FRAC, ModelId(1));
+    let det_n = trace.entries.iter().filter(|e| e.model == ModelId(1)).count();
+    println!(
+        "fleet '{spec}' ({service_ms:.0} ms/img), {n} arrivals at {rate:.1} req/s, \
+         {det_n} detector / {} squeezenet, cache {:.1} MB/replica\n",
+        n - det_n,
+        capacity_bytes as f64 / 1e6,
+    );
+
+    let policy = Policy::EnergyAware { lambda_j_per_ms: None };
+    let run = |blind: bool| -> FleetReport {
+        let mut cfg = FleetConfig::parse_spec(spec, policy)
+            .unwrap()
+            .with_catalog(ModelCatalog::two_model_zoo(), capacity_bytes)
+            .with_seed(42);
+        if blind {
+            cfg = cfg.with_affinity_blind();
+        }
+        let fleet = Fleet::new(cfg);
+        // identical starting layout for both postures
+        assert!(fleet.prewarm(0, ModelId::DEFAULT));
+        assert!(fleet.prewarm(1, ModelId(1)));
+        let report = run_trace(&fleet, &trace, &[]);
+        println!(
+            "{}:\n{}",
+            if blind { "affinity-blind" } else { "affinity-aware" },
+            report.render()
+        );
+        report
+    };
+    let aware = run(false);
+    let blind = run(true);
+
+    // Conservation on both sides: loads cost joules, never requests.
+    assert_eq!(aware.completed, n as u64, "aware conservation: {aware:?}");
+    assert_eq!(blind.completed, n as u64, "blind conservation: {blind:?}");
+    assert_eq!(aware.shed + aware.lost + aware.expired, 0);
+    assert_eq!(blind.shed + blind.lost + blind.expired, 0);
+
+    let aware_p95 = aware.p95_ms.expect("completions exist");
+    let blind_p95 = blind.p95_ms.expect("completions exist");
+
+    // The tentpole claims.
+    assert!(
+        aware.artifact_loads < blind.artifact_loads,
+        "affinity must avoid reloads: {} vs blind {}",
+        aware.artifact_loads,
+        blind.artifact_loads
+    );
+    assert!(
+        aware.total_energy_j < blind.total_energy_j,
+        "avoided loads are avoided joules: {:.1} J vs blind {:.1} J",
+        aware.total_energy_j,
+        blind.total_energy_j
+    );
+    assert!(
+        aware_p95 <= blind_p95,
+        "avoided loads must not cost latency: p95 {aware_p95:.0} ms vs blind {blind_p95:.0} ms"
+    );
+    // The blind posture genuinely thrashed — the contrast is the cache
+    // tier working, not noise.
+    assert!(
+        blind.cache_evictions > 0,
+        "the blind fleet should thrash the cache: {blind:?}"
+    );
+    println!(
+        "claim check: loads {} < {}, energy {:.1} J < {:.1} J, p95 {:.0} <= {:.0} ms ... OK",
+        aware.artifact_loads,
+        blind.artifact_loads,
+        aware.total_energy_j,
+        blind.total_energy_j,
+        aware_p95,
+        blind_p95,
+    );
+
+    // Deterministic metrics for the CI regression gate (lower =
+    // better).  Ratios vs the blind baseline gate the *margin*.
+    write_json_summary(
+        "fleet_multimodel",
+        &[
+            ("aware_total_j", aware.total_energy_j),
+            ("aware_p95_ms", aware_p95),
+            ("aware_load_j", aware.artifact_load_j),
+            ("aware_over_blind_j", aware.total_energy_j / blind.total_energy_j),
+            ("aware_p95_over_blind", aware_p95 / blind_p95),
+        ],
+    )
+    .expect("bench summary write");
+
+    // Hot path: the affinity-aware dispatch cost (candidate building
+    // now includes residency lookups).
+    let mut b = Bencher::from_env();
+    let fleet = Fleet::new(
+        FleetConfig::parse_spec(spec, policy)
+            .unwrap()
+            .with_catalog(ModelCatalog::two_model_zoo(), capacity_bytes),
+    );
+    let mut t = 0.0f64;
+    b.bench("fleet/dispatch_model_mixed", || {
+        t += 10.0;
+        let model = if (t as u64 / 10) % 2 == 0 { ModelId::DEFAULT } else { ModelId(1) };
+        fleet.dispatch_model(t, Qos::default(), model)
+    });
+}

@@ -14,6 +14,7 @@
 //!   "fleet_budget_j": 50.0,
 //!   "fleet_batch": 8,
 //!   "fleet_batch_wait_ms": 25.0,
+//!   "fleet_cache": 12.0,
 //!   "fleet_autoscale": {
 //!     "slo_p95_ms": 600.0,
 //!     "warm_pool": "2xn5@fp16,1x6p@fp16",
@@ -27,16 +28,23 @@
 //!
 //! The fleet topology can also come from the environment
 //! (`MCN_FLEET`, `MCN_FLEET_POLICY`, `MCN_FLEET_BUDGET_J`,
-//! `MCN_FLEET_BATCH`, `MCN_FLEET_BATCH_WAIT_MS`) or the CLI
+//! `MCN_FLEET_BATCH`, `MCN_FLEET_BATCH_WAIT_MS`, `MCN_FLEET_CACHE`)
+//! or the CLI
 //! (`--fleet SPEC --fleet-policy P --fleet-budget-j J --fleet-batch B
-//! --fleet-batch-wait-ms W`); CLI wins over env, env over file.
+//! --fleet-batch-wait-ms W --fleet-cache MB`); CLI wins over env, env
+//! over file.
 //! `fleet_policy` accepts `energy:<λ>` (J/ms) to pin the energy-aware
 //! latency price explicitly; a plain `energy` uses the fixed default,
 //! which `fleet_autoscale` re-derives from `slo_p95_ms`
 //! ([`Policy::lambda_for_slo`](crate::fleet::Policy::lambda_for_slo)).
 //! `fleet_batch` > 1 turns on per-replica dynamic batching (requests
 //! accumulate into amortized multi-image dispatches); the default of 1
-//! keeps single-image service.
+//! keeps single-image service.  `fleet_cache` (megabytes per replica)
+//! attaches the model-artifact tier: the fleet serves the default
+//! two-model catalog (`squeezenet` ≈ 5 MB, `detector` ≈ 10 MB), each
+//! replica keeps an LRU artifact cache of that capacity, cold loads
+//! cost virtual time and joules, and placement becomes
+//! affinity-aware (see [`crate::fleet::cache`]).
 //!
 //! `fleet_autoscale` attaches the closed-loop autoscaler (and turns on
 //! idle-energy metering): a JSON object with the field names of
@@ -100,6 +108,7 @@ pub fn fleet_from(
     budget_j: Option<f64>,
     max_batch: Option<usize>,
     batch_wait_ms: Option<f64>,
+    cache_mb: Option<f64>,
 ) -> Result<FleetConfig> {
     let policy = match policy {
         Some(p) => Policy::parse(p).map_err(|e| anyhow::anyhow!(e))?,
@@ -123,6 +132,20 @@ pub fn fleet_from(
             batch_wait_ms.is_none(),
             "fleet_batch_wait_ms requires fleet_batch > 1"
         );
+    }
+    if let Some(mb) = cache_mb {
+        anyhow::ensure!(
+            mb.is_finite() && mb > 0.0,
+            "fleet_cache must be a positive number of megabytes per replica"
+        );
+        let capacity_bytes = (mb * 1e6) as u64;
+        // A sub-microscopic capacity truncates to zero bytes; make it
+        // a config error like every other bad knob, not a panic.
+        anyhow::ensure!(
+            capacity_bytes > 0,
+            "fleet_cache of {mb} MB rounds to zero bytes per replica"
+        );
+        cfg = cfg.with_artifact_cache(capacity_bytes);
     }
     Ok(cfg.with_budget_j(budget_j))
 }
@@ -272,8 +295,16 @@ impl AppConfig {
                 ),
             };
             let wait = v.get("fleet_batch_wait_ms").and_then(Json::as_f64);
-            cfg.fleet =
-                Some(fleet_from(spec, policy, budget, batch, wait).context("config: fleet")?);
+            let cache_mb = match v.get("fleet_cache") {
+                None => None,
+                Some(c) => Some(c.as_f64().ok_or_else(|| {
+                    anyhow::anyhow!("config: fleet_cache must be a number (MB per replica)")
+                })?),
+            };
+            cfg.fleet = Some(
+                fleet_from(spec, policy, budget, batch, wait, cache_mb)
+                    .context("config: fleet")?,
+            );
         }
         if let Some(a) = v.get("fleet_autoscale") {
             let autoscale = autoscale_from_json(a).context("config: fleet_autoscale")?;
@@ -287,9 +318,10 @@ impl AppConfig {
 
     /// Apply `MCN_FLEET` / `MCN_FLEET_POLICY` / `MCN_FLEET_BUDGET_J` /
     /// `MCN_FLEET_BATCH` / `MCN_FLEET_BATCH_WAIT_MS` /
-    /// `MCN_FLEET_AUTOSCALE` environment overrides (spec presence
-    /// gates the batch/policy knobs; `MCN_FLEET_AUTOSCALE` applies to
-    /// whichever fleet is configured, env or file).
+    /// `MCN_FLEET_CACHE` / `MCN_FLEET_AUTOSCALE` environment overrides
+    /// (spec presence gates the batch/policy/cache knobs;
+    /// `MCN_FLEET_AUTOSCALE` applies to whichever fleet is configured,
+    /// env or file).
     pub fn apply_env(&mut self) -> Result<()> {
         if let Ok(spec) = std::env::var("MCN_FLEET") {
             let policy = std::env::var("MCN_FLEET_POLICY").ok();
@@ -313,8 +345,16 @@ impl AppConfig {
                 })?),
                 Err(_) => None,
             };
+            let cache_mb = match std::env::var("MCN_FLEET_CACHE") {
+                Ok(v) => Some(
+                    v.parse::<f64>()
+                        .map_err(|_| anyhow::anyhow!("MCN_FLEET_CACHE: bad number '{v}'"))?,
+                ),
+                Err(_) => None,
+            };
             self.fleet = Some(
-                fleet_from(&spec, policy.as_deref(), budget, batch, wait).context("MCN_FLEET")?,
+                fleet_from(&spec, policy.as_deref(), budget, batch, wait, cache_mb)
+                    .context("MCN_FLEET")?,
             );
         }
         if let Ok(kv) = std::env::var("MCN_FLEET_AUTOSCALE") {
@@ -404,12 +444,12 @@ mod tests {
 
     #[test]
     fn fleet_from_defaults_to_energy_aware() {
-        let f = fleet_from("s7,n5", None, None, None, None).unwrap();
+        let f = fleet_from("s7,n5", None, None, None, None, None).unwrap();
         assert!(matches!(f.policy, Policy::EnergyAware { .. }));
         assert_eq!(f.budget_j, None);
         assert!(!f.batch.enabled(), "batching is off by default");
         assert!(f.qos_aware, "fleets honor QoS by default");
-        let f = fleet_from("s7", Some("rr"), Some(3.0), None, None).unwrap();
+        let f = fleet_from("s7", Some("rr"), Some(3.0), None, None, None).unwrap();
         assert_eq!(f.policy, Policy::RoundRobin);
         assert_eq!(f.budget_j, Some(3.0));
     }
@@ -518,6 +558,26 @@ mod tests {
     }
 
     #[test]
+    fn parses_fleet_cache_knob() {
+        let c = AppConfig::from_json(r#"{"fleet": "2xs7", "fleet_cache": 12.0}"#).unwrap();
+        let f = c.fleet.unwrap();
+        let cc = f.cache.expect("fleet_cache attaches the artifact tier");
+        assert_eq!(cc.capacity_bytes, 12_000_000);
+        assert_eq!(cc.catalog.len(), 2, "default two-model zoo");
+        assert!(f.affinity_aware);
+        // no knob, no tier
+        let no_knob = AppConfig::from_json(r#"{"fleet": "2xs7"}"#).unwrap();
+        assert!(no_knob.fleet.unwrap().cache.is_none());
+        // bad knobs are errors
+        assert!(AppConfig::from_json(r#"{"fleet": "s7", "fleet_cache": 0}"#).is_err());
+        assert!(AppConfig::from_json(r#"{"fleet": "s7", "fleet_cache": -4.0}"#).is_err());
+        assert!(AppConfig::from_json(r#"{"fleet": "s7", "fleet_cache": "big"}"#).is_err());
+        assert!(fleet_from("s7", None, None, None, None, Some(f64::NAN)).is_err());
+        // a capacity that truncates to zero bytes is an error, not a panic
+        assert!(fleet_from("s7", None, None, None, None, Some(1e-7)).is_err());
+    }
+
+    #[test]
     fn parses_fleet_batching_knobs() {
         let c = AppConfig::from_json(
             r#"{"fleet": "2xs7", "fleet_batch": 8, "fleet_batch_wait_ms": 10.0}"#,
@@ -528,14 +588,14 @@ mod tests {
         assert_eq!(f.batch.max_wait_ms, 10.0);
         assert_eq!(f.batch.sizes, vec![1, 2, 4, 8]);
         // wait defaults when only the cap is given
-        let f = fleet_from("s7", None, None, Some(4), None).unwrap();
+        let f = fleet_from("s7", None, None, Some(4), None, None).unwrap();
         assert_eq!(f.batch.max_wait_ms, DEFAULT_FLEET_BATCH_WAIT_MS);
         // bad knobs are errors
         assert!(AppConfig::from_json(r#"{"fleet": "s7", "fleet_batch": 0}"#).is_err());
-        assert!(fleet_from("s7", None, None, Some(65), None).is_err());
-        assert!(fleet_from("s7", None, None, Some(4), Some(-1.0)).is_err());
+        assert!(fleet_from("s7", None, None, Some(65), None, None).is_err());
+        assert!(fleet_from("s7", None, None, Some(4), Some(-1.0), None).is_err());
         // a wait without a batch cap is a visible error, not a no-op
-        assert!(fleet_from("s7", None, None, None, Some(10.0)).is_err());
+        assert!(fleet_from("s7", None, None, None, Some(10.0), None).is_err());
         assert!(
             AppConfig::from_json(r#"{"fleet": "s7", "fleet_batch_wait_ms": 10.0}"#).is_err()
         );

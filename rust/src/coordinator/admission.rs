@@ -20,10 +20,14 @@
 //! name a queued rider cheaper to drop than the arrival (lower
 //! priority, then most deadline slack), the gate admits the arrival
 //! and the fleet evicts that rider instead of shedding newest-first
-//! ([`GateDecision::AdmitEvict`]).  Saturation still sheds every
-//! class: the controller closed the door because the fleet as a whole
-//! cannot absorb more work, and queue-jumping would only deepen the
-//! collapse.
+//! ([`GateDecision::AdmitEvict`]).  Victim candidates are read
+//! straight off each replica's queue
+//! ([`Replica::cheapest_evictable`](crate::fleet::Replica::cheapest_evictable)
+//! — the replicas are the source of truth; there is no parallel
+//! registry of queued riders to keep in sync).  Saturation still
+//! sheds every class: the controller closed the door because the
+//! fleet as a whole cannot absorb more work, and queue-jumping would
+//! only deepen the collapse.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;

@@ -4,7 +4,7 @@
 //!
 //! request  `{"image_seed": 7, "image_index": 0, "precision": "precise",
 //!            "sim": true, "fleet": true, "priority": 2,
-//!            "deadline_ms": 500}`
+//!            "deadline_ms": 500, "model": "squeezenet"}`
 //!          or `{"image": [ ...150528 floats... ], ...}`
 //!          or `{"cmd": "stats"}` / `{"cmd": "fleet_stats"}` /
 //!          `{"cmd": "autoscale_stats"}` / `{"cmd": "quit"}`
@@ -28,6 +28,11 @@
 //! is on (`--fleet-autoscale`), scaling events that fired since the
 //! last fleet-backed reply ride back too (`"autoscale_events"`), and
 //! `{"cmd": "autoscale_stats"}` snapshots the whole control loop.
+//! `"model"` (with `"fleet": true`) names a catalog model when the
+//! fleet serves an artifact tier (`--fleet-cache`): placement becomes
+//! affinity-aware, the reply's placement object reports the model and
+//! any `"cold_load_ms"` the request triggered, and an unknown model
+//! name is an error.
 //!
 //! Seed-addressed images keep the wire small for load generation: both
 //! ends derive the pixels from the shared deterministic corpus.
@@ -42,6 +47,7 @@ use anyhow::{Context, Result};
 
 use crate::fleet::Fleet;
 use crate::model::ImageCorpus;
+use crate::runtime::artifacts::ModelId;
 use crate::simulator::device::Precision;
 use crate::util::json::Json;
 
@@ -57,6 +63,8 @@ enum Parsed {
         with_sim: bool,
         with_fleet: bool,
         qos: Qos,
+        /// Catalog model name (fleet path only).
+        model: Option<String>,
     },
     Stats,
     FleetStats,
@@ -96,6 +104,14 @@ fn parse_request(line: &str, image_len: usize) -> Result<Parsed> {
     };
     let qos = Qos { priority, deadline_ms };
     qos.validate().map_err(|e| anyhow::anyhow!(e))?;
+    let model = match v.get("model") {
+        None => None,
+        Some(m) => Some(m.as_str().context("model must be a string")?.to_string()),
+    };
+    anyhow::ensure!(
+        model.is_none() || with_fleet,
+        "\"model\" requires \"fleet\": true (models are served by the fleet's artifact tier)"
+    );
     let image = if let Some(raw) = v.get("image").and_then(Json::as_array) {
         let img: Vec<f32> = raw.iter().filter_map(|x| x.as_f64()).map(|x| x as f32).collect();
         anyhow::ensure!(img.len() == image_len, "image must have {image_len} values");
@@ -105,7 +121,7 @@ fn parse_request(line: &str, image_len: usize) -> Result<Parsed> {
         let index = v.get("image_index").and_then(Json::as_usize).unwrap_or(0) as u64;
         ImageCorpus::new(seed).image(index)
     };
-    Ok(Parsed::Infer { image, precision, with_sim, with_fleet, qos })
+    Ok(Parsed::Infer { image, precision, with_sim, with_fleet, qos, model })
 }
 
 /// Serve until `stop` is set (checked between connections) or a client
@@ -234,7 +250,7 @@ fn handle_client(
                     Json::str("no fleet configured (start the server with --fleet SPEC)"),
                 )]),
             },
-            Ok(Parsed::Infer { image, precision, with_sim, with_fleet, qos }) => {
+            Ok(Parsed::Infer { image, precision, with_sim, with_fleet, qos, model }) => {
                 // Fleet admission runs *before* the real inference, so
                 // an overload shed costs nothing; if the inference then
                 // fails, the placement is retracted so the fleet never
@@ -245,10 +261,24 @@ fn handle_client(
                         Err("no fleet configured (start the server with --fleet SPEC)".to_string())
                     }
                     (true, Some(f)) => {
-                        let arrival_ms = started.elapsed().as_secs_f64() * 1e3;
-                        f.dispatch_qos(arrival_ms, qos)
-                            .map(Some)
-                            .ok_or_else(|| "fleet overloaded: request shed".to_string())
+                        let model_id = match &model {
+                            None => Ok(ModelId::DEFAULT),
+                            Some(name) => f.resolve_model(name).ok_or_else(|| {
+                                if f.has_catalog() {
+                                    format!("unknown model '{name}' (not in the artifact catalog)")
+                                } else {
+                                    "no model catalog configured (start the server with \
+                                     --fleet-cache MB)"
+                                        .to_string()
+                                }
+                            }),
+                        };
+                        model_id.and_then(|m| {
+                            let arrival_ms = started.elapsed().as_secs_f64() * 1e3;
+                            f.dispatch_model(arrival_ms, qos, m)
+                                .map(Some)
+                                .ok_or_else(|| "fleet overloaded: request shed".to_string())
+                        })
                     }
                 };
                 match placement {
@@ -372,6 +402,38 @@ impl Client {
         })
     }
 
+    /// Fleet-backed inference for a named catalog model: sets
+    /// `"fleet": true` and `"model"` on the wire.  The reply's
+    /// `"fleet"` placement object carries the model name and any
+    /// `"cold_load_ms"` the request triggered.
+    pub fn infer_seed_model(
+        &mut self,
+        seed: u64,
+        index: u64,
+        precision: Precision,
+        model: &str,
+        qos: Qos,
+    ) -> Result<ClientReply> {
+        let mut pairs = vec![
+            ("image_seed", Json::num(seed as f64)),
+            ("image_index", Json::num(index as f64)),
+            ("precision", Json::str(precision.label())),
+            ("fleet", Json::Bool(true)),
+            ("model", Json::str(model)),
+            ("priority", Json::num(f64::from(qos.priority))),
+        ];
+        if let Some(d) = qos.deadline_ms {
+            pairs.push(("deadline_ms", Json::num(d)));
+        }
+        let v = self.round_trip(Json::object(pairs))?;
+        Ok(ClientReply {
+            top1: v.get("top1").and_then(Json::as_usize).context("reply missing top1")?,
+            latency_ms: v.get("latency_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            batch_size: v.get("batch_size").and_then(Json::as_usize).unwrap_or(1),
+            raw: v,
+        })
+    }
+
     /// Fetch the server's telemetry report.
     pub fn stats(&mut self) -> Result<String> {
         let v = self.round_trip(Json::object(vec![("cmd", Json::str("stats"))]))?;
@@ -411,15 +473,33 @@ mod tests {
     fn parses_seed_request() {
         let p = parse_request(r#"{"image_seed": 3, "precision": "imprecise"}"#, 12).unwrap();
         match p {
-            Parsed::Infer { image, precision, with_sim, with_fleet, qos } => {
+            Parsed::Infer { image, precision, with_sim, with_fleet, qos, model } => {
                 assert_eq!(image.len(), crate::model::images::IMAGE_LEN);
                 assert_eq!(precision, Precision::Imprecise);
                 assert!(!with_sim);
                 assert!(!with_fleet);
                 assert_eq!(qos, Qos::default());
+                assert_eq!(model, None);
             }
             _ => panic!("expected infer"),
         }
+    }
+
+    #[test]
+    fn parses_model_field() {
+        let p = parse_request(r#"{"image_seed": 1, "fleet": true, "model": "detector"}"#, 12)
+            .unwrap();
+        match p {
+            Parsed::Infer { model, with_fleet, .. } => {
+                assert_eq!(model.as_deref(), Some("detector"));
+                assert!(with_fleet);
+            }
+            _ => panic!("expected infer"),
+        }
+        // a model without the fleet path is a visible error, as is a
+        // non-string model
+        assert!(parse_request(r#"{"image_seed": 1, "model": "detector"}"#, 12).is_err());
+        assert!(parse_request(r#"{"image_seed": 1, "fleet": true, "model": 3}"#, 12).is_err());
     }
 
     #[test]

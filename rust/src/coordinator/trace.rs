@@ -12,6 +12,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::model::ImageCorpus;
+use crate::runtime::artifacts::ModelId;
 use crate::simulator::device::Precision;
 use crate::util::rng::Rng;
 
@@ -40,6 +41,10 @@ pub struct TraceEntry {
     /// QoS class the request carries into dispatch (default class
     /// unless the trace was given a mix — see [`Trace::with_qos_mix`]).
     pub qos: Qos,
+    /// Catalog model the request serves (the default model unless the
+    /// trace was given a mix — see [`Trace::with_model_mix`]; ignored
+    /// by fleets without an artifact tier).
+    pub model: ModelId,
 }
 
 /// A deterministic workload trace.
@@ -97,6 +102,7 @@ impl Trace {
                     image: entries.len() as u64,
                     precision,
                     qos: Qos::default(),
+                    model: ModelId::DEFAULT,
                 });
             }
         }
@@ -124,6 +130,24 @@ impl Trace {
         for e in &mut self.entries {
             if rng.next_f64() < frac {
                 e.qos = qos;
+            }
+        }
+        self
+    }
+
+    /// Mark a deterministic fraction of arrivals as serving `model` —
+    /// the second-model slice of a multi-model trace; the rest keep
+    /// the model they already have.  Like
+    /// [`with_qos_mix`](Self::with_qos_mix) the assignment derives
+    /// from the trace seed (its own stream, independent of both the
+    /// arrival process and the QoS mix), so a given (trace, mix) is
+    /// fully reproducible and the two mixes compose freely.
+    pub fn with_model_mix(mut self, frac: f64, model: ModelId) -> Trace {
+        assert!((0.0..=1.0).contains(&frac), "model mix fraction must be in [0, 1]");
+        let mut rng = Rng::new(self.seed ^ 0x0DE1_CA7E_D0_C0FF_EE);
+        for e in &mut self.entries {
+            if rng.next_f64() < frac {
+                e.model = model;
             }
         }
         self
@@ -317,6 +341,35 @@ mod tests {
         assert!(a.entries.iter().zip(&plain.entries).all(|(x, y)| x.at == y.at));
         // default traces carry the default class
         assert!(plain.entries.iter().all(|e| e.qos == Qos::default()));
+    }
+
+    #[test]
+    fn model_mix_is_deterministic_and_independent_of_qos_mix() {
+        let det = ModelId(1);
+        let mk = || {
+            Trace::generate(1000, Arrival::Poisson { rate_per_s: 50.0 }, 0.0, 9)
+                .with_base_qos(Qos::bulk())
+                .with_qos_mix(0.3, Qos::interactive(2, 500.0))
+                .with_model_mix(0.5, det)
+        };
+        let a = mk();
+        let b = mk();
+        assert!(a.entries.iter().zip(&b.entries).all(|(x, y)| x.model == y.model));
+        let frac =
+            a.entries.iter().filter(|e| e.model == det).count() as f64 / 1000.0;
+        assert!((0.4..0.6).contains(&frac), "model fraction {frac}");
+        // the model mix leaves arrivals and QoS classes untouched
+        let plain = Trace::generate(1000, Arrival::Poisson { rate_per_s: 50.0 }, 0.0, 9)
+            .with_base_qos(Qos::bulk())
+            .with_qos_mix(0.3, Qos::interactive(2, 500.0));
+        assert!(a.entries.iter().zip(&plain.entries).all(|(x, y)| x.at == y.at));
+        assert!(a.entries.iter().zip(&plain.entries).all(|(x, y)| x.qos == y.qos));
+        // default traces serve the default model
+        assert!(plain.entries.iter().all(|e| e.model == ModelId::DEFAULT));
+        // the model and QoS slices are independent streams: the
+        // detector slice contains both bulk and interactive riders
+        assert!(a.entries.iter().any(|e| e.model == det && e.qos.is_interactive()));
+        assert!(a.entries.iter().any(|e| e.model == det && !e.qos.is_interactive()));
     }
 
     #[test]

@@ -1,0 +1,161 @@
+//! Replica-local model-artifact cache: which weight artifacts are
+//! resident on a device, under a byte-capacity budget.
+//!
+//! A fleet replica serving a multi-model catalog keeps at most
+//! `capacity_bytes` of artifacts warm.  A request for a resident model
+//! is a *hit* (free); a miss makes the replica pay the cold-load price
+//! ([`artifact_load_ms`](crate::simulator::cost::artifact_load_ms) in
+//! virtual time, sequential-rail joules) and evicts until the new
+//! artifact fits.  Eviction is LRU with a joule-aware tiebreak: the
+//! stalest entry goes first, and among equally-stale entries the one
+//! *cheapest to reload* (fewest bytes — reload joules are proportional
+//! to bytes on a given device) goes, so a forced eviction risks the
+//! smallest future cold-start bill.
+//!
+//! An artifact larger than the whole cache is never inserted: every
+//! touch is a miss and pays the load, but it cannot flush the entire
+//! cache on its way through.
+
+use crate::runtime::artifacts::ModelId;
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    model: ModelId,
+    bytes: u64,
+    last_used_ms: f64,
+}
+
+/// LRU artifact cache with hit/miss/eviction counters.
+#[derive(Debug)]
+pub struct ArtifactCache {
+    capacity_bytes: u64,
+    entries: Vec<Entry>,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl ArtifactCache {
+    pub fn new(capacity_bytes: u64) -> ArtifactCache {
+        assert!(capacity_bytes > 0, "artifact cache needs a positive capacity");
+        ArtifactCache { capacity_bytes, entries: Vec::new(), hits: 0, misses: 0, evictions: 0 }
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.bytes).sum()
+    }
+
+    /// Models currently resident.
+    pub fn resident_models(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn contains(&self, model: ModelId) -> bool {
+        self.entries.iter().any(|e| e.model == model)
+    }
+
+    /// Touch `model` (of `bytes` footprint) at `now_ms`.  A hit
+    /// refreshes recency and returns `true`.  A miss evicts
+    /// stalest-first (cheapest-to-reload among equally stale) until the
+    /// artifact fits, inserts it, and returns `false` — the caller pays
+    /// the cold-load cost.  An artifact larger than the whole cache is
+    /// a miss every time and is never inserted.
+    pub fn touch(&mut self, model: ModelId, bytes: u64, now_ms: f64) -> bool {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.model == model) {
+            e.last_used_ms = now_ms;
+            self.hits += 1;
+            return true;
+        }
+        self.misses += 1;
+        if bytes > self.capacity_bytes {
+            return false;
+        }
+        while self.resident_bytes() + bytes > self.capacity_bytes {
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| {
+                    (a.last_used_ms, a.bytes)
+                        .partial_cmp(&(b.last_used_ms, b.bytes))
+                        .expect("recency is never NaN")
+                })
+                .map(|(i, _)| i)
+                .expect("over capacity implies at least one resident entry");
+            self.entries.swap_remove(victim);
+            self.evictions += 1;
+        }
+        self.entries.push(Entry { model, bytes, last_used_ms: now_ms });
+        false
+    }
+
+    /// Drop every resident artifact (a failed replica reboots cold —
+    /// RAM-resident weights do not survive).  Counters are lifetime
+    /// meters and are kept.
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(i: u16) -> ModelId {
+        ModelId(i)
+    }
+
+    #[test]
+    fn hit_miss_and_lru_eviction() {
+        let mut c = ArtifactCache::new(100);
+        assert!(!c.touch(m(0), 40, 1.0), "first touch is a miss");
+        assert!(!c.touch(m(1), 40, 2.0));
+        assert!(c.touch(m(0), 40, 3.0), "resident model hits");
+        assert_eq!((c.hits, c.misses, c.evictions), (1, 2, 0));
+        assert_eq!(c.resident_bytes(), 80);
+        // a third model over capacity evicts the stalest (m1, last used
+        // at t=2 — m0 was refreshed at t=3)
+        assert!(!c.touch(m(2), 40, 4.0));
+        assert_eq!(c.evictions, 1);
+        assert!(c.contains(m(0)) && c.contains(m(2)) && !c.contains(m(1)));
+        assert_eq!(c.resident_models(), 2);
+    }
+
+    #[test]
+    fn equally_stale_entries_evict_cheapest_reload_first() {
+        let mut c = ArtifactCache::new(100);
+        c.touch(m(0), 60, 1.0); // expensive to reload
+        c.touch(m(1), 30, 1.0); // cheap to reload, same recency
+        // 20 more bytes force one eviction: the cheap entry goes
+        assert!(!c.touch(m(2), 20, 2.0));
+        assert!(c.contains(m(0)) && !c.contains(m(1)));
+        assert_eq!(c.evictions, 1);
+    }
+
+    #[test]
+    fn oversized_artifact_is_never_inserted() {
+        let mut c = ArtifactCache::new(50);
+        c.touch(m(0), 40, 1.0);
+        assert!(!c.touch(m(1), 80, 2.0), "over-capacity artifact misses");
+        assert!(!c.touch(m(1), 80, 3.0), "...every time");
+        assert!(!c.contains(m(1)));
+        assert!(c.contains(m(0)), "and does not flush the resident set");
+        assert_eq!(c.evictions, 0);
+        assert_eq!(c.misses, 3);
+    }
+
+    #[test]
+    fn clear_drops_residency_but_keeps_meters() {
+        let mut c = ArtifactCache::new(100);
+        c.touch(m(0), 40, 1.0);
+        c.touch(m(0), 40, 2.0);
+        c.clear();
+        assert!(!c.contains(m(0)));
+        assert_eq!(c.resident_bytes(), 0);
+        assert_eq!((c.hits, c.misses), (1, 1));
+    }
+}

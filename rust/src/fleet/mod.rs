@@ -82,9 +82,31 @@
 //! Conservation extends to `arrivals == completed + shed + lost +
 //! expired` (gate evictions count as shed; dequeue expiries as
 //! expired).
+//!
+//! **Model-artifact tier** ([`cache`]): a fleet can serve a
+//! [`ModelCatalog`](crate::runtime::artifacts::ModelCatalog) of named
+//! weight artifacts (sharded per macro layer, byte sizes derived from
+//! the SqueezeNet graph).  Each replica keeps a byte-budgeted
+//! LRU [`ArtifactCache`] of resident models; a request for a
+//! non-resident model pays a cold-load price (shard bytes / device
+//! transfer rate in virtual time, sequential-rail joules), and
+//! placement is **affinity-aware**: `EnergyAware` folds the cold-load
+//! joules and latency into its score, `PowerOfTwoChoices` prefers the
+//! resident sample — so *which replica has the model* becomes a third
+//! placement axis next to speed and energy.  Requests name their model
+//! on the TCP wire (`"model"`) and in traces
+//! ([`Trace::with_model_mix`](crate::coordinator::trace::Trace::with_model_mix));
+//! the autoscaler pre-warms the hottest model on every replica it
+//! provisions from the warm pool.  Configure with
+//! [`FleetConfig::with_artifact_cache`], the `fleet_cache` config key
+//! (MB per replica), `MCN_FLEET_CACHE`, or `--fleet-cache`; off by
+//! default (every model resident, loads free — the paper's
+//! weights-already-on-device assumption).  Cold loads cost joules and
+//! time, never requests, so conservation is unchanged.
 
 pub mod autoscaler;
 pub mod budget;
+pub mod cache;
 pub mod health;
 pub mod replica;
 pub mod router;
@@ -94,18 +116,21 @@ pub use autoscaler::{
     ScaleKind,
 };
 pub use budget::{BudgetState, JouleBudget};
+pub use cache::ArtifactCache;
 pub use health::{Health, HealthAction, HealthEvent};
 pub use replica::{
     max_request_energy_j, FleetBatch, Outcome, Placement, Replica, ReplicaSpec, Rider,
 };
 pub use router::{Candidate, Policy, Router};
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::coordinator::admission::{FleetGate, GateDecision};
 use crate::coordinator::trace::Trace;
 use crate::coordinator::{PlanCache, Qos};
+use crate::runtime::artifacts::{ModelCatalog, ModelId};
+use crate::simulator::device::Precision;
 use crate::telemetry::LatencyRecorder;
 use crate::util::json::Json;
 
@@ -133,8 +158,26 @@ pub struct FleetConfig {
     /// priorities are still *accounted* (miss counters, per-class
     /// p95) but never acted on.
     pub qos_aware: bool,
+    /// Model-artifact tier: a shared catalog plus a per-replica cache
+    /// capacity (`None` = no tier: every model is resident and loads
+    /// are free, the pre-cache contract).
+    pub cache: Option<FleetCacheConfig>,
+    /// Let routers see model residency (default).  Turned off by
+    /// [`FleetConfig::with_affinity_blind`] for the comparison
+    /// baseline: replicas still pay real cold-load costs, but
+    /// placement cannot see them — the physics stay, the signal goes.
+    pub affinity_aware: bool,
     /// Seed for the sampling policies' RNG.
     pub seed: u64,
+}
+
+/// Model-artifact tier configuration: the catalog of named weight
+/// artifacts the fleet serves, and each replica's residency budget.
+#[derive(Debug, Clone)]
+pub struct FleetCacheConfig {
+    pub catalog: Arc<ModelCatalog>,
+    /// Per-replica artifact cache capacity in bytes.
+    pub capacity_bytes: u64,
 }
 
 impl FleetConfig {
@@ -147,6 +190,8 @@ impl FleetConfig {
             autoscale: None,
             idle_power: false,
             qos_aware: true,
+            cache: None,
+            affinity_aware: true,
             seed: 0,
         }
     }
@@ -235,20 +280,39 @@ impl FleetConfig {
         self.idle_power = on;
         self
     }
+
+    /// Attach the model-artifact tier with the default two-model zoo
+    /// ([`ModelCatalog::two_model_zoo`]: `squeezenet` ≈ 5 MB,
+    /// `detector` ≈ 10 MB) and `capacity_bytes` of per-replica cache.
+    pub fn with_artifact_cache(self, capacity_bytes: u64) -> FleetConfig {
+        self.with_catalog(ModelCatalog::two_model_zoo(), capacity_bytes)
+    }
+
+    /// Attach the model-artifact tier with an explicit catalog.
+    pub fn with_catalog(mut self, catalog: ModelCatalog, capacity_bytes: u64) -> FleetConfig {
+        assert!(capacity_bytes > 0, "artifact cache capacity must be positive");
+        assert!(!catalog.is_empty(), "artifact catalog must have at least one model");
+        self.cache = Some(FleetCacheConfig { catalog: Arc::new(catalog), capacity_bytes });
+        self
+    }
+
+    /// Hide model residency from placement — the affinity-blind
+    /// comparison baseline for `benches/fleet_multimodel.rs`.  Cold
+    /// loads still cost real virtual time and joules; the routers just
+    /// cannot see them coming.
+    pub fn with_affinity_blind(mut self) -> FleetConfig {
+        self.affinity_aware = false;
+        self
+    }
 }
 
-/// A rider currently queued somewhere in the fleet — the front door's
-/// eviction candidates (priority shedding drops the cheapest of these
-/// to admit a more urgent arrival when the gate is full).  Entries are
-/// removed as riders retire and lazily pruned when stale.
-#[derive(Debug, Clone, Copy)]
-struct QueuedEntry {
-    replica: usize,
-    rider: Rider,
-    /// Admission-time effective precision (identifies the queue entry
-    /// for eviction, exactly like [`Replica::retract_last`]).
-    precision: crate::simulator::device::Precision,
-}
+/// The gate's chosen eviction victim: which replica holds it, the
+/// rider itself, and the admission-time precision that identifies its
+/// queue entry (exactly like [`Replica::retract_last`]).  Read
+/// straight off the replicas' queues via
+/// [`Replica::cheapest_evictable`] — the old parallel registry of
+/// queued riders (synced at five call sites) is gone.
+type Victim = (usize, Rider, Precision);
 
 /// Mutable fleet state, behind one lock (dispatch is queue math only —
 /// microseconds — so a single lock is not a bottleneck at trace rates).
@@ -269,8 +333,14 @@ struct FleetState {
     evicted: u64,
     /// Honor QoS in decisions (placement, gate, batching)?
     qos_aware: bool,
-    /// Riders queued across the fleet, for victim selection.
-    queued: Vec<QueuedEntry>,
+    /// Let routers see model residency?
+    affinity_aware: bool,
+    /// The artifact tier applied to provisioned replicas (and the
+    /// catalog names resolve against).
+    artifact_cache: Option<FleetCacheConfig>,
+    /// Lifetime placements per catalog model — the autoscaler prewarms
+    /// the hottest model on replicas it provisions.
+    model_placements: Vec<u64>,
     /// Fleet-wide latency aggregate across all replicas.
     fleet_latency: LatencyRecorder,
     /// Same, interactive class only (raised priority or deadline).
@@ -325,31 +395,19 @@ impl FleetState {
             self.clock_ms = t_ms;
         }
         let now = self.clock_ms;
-        let idle_on = self.idle_on;
-        let mut retired: Vec<(usize, Outcome)> = Vec::new();
         for r in &mut self.replicas {
-            if idle_on {
+            if self.idle_on {
                 r.accrue_idle(now);
             }
-            for outcome in r.collect(now) {
-                retired.push((r.id, outcome));
-            }
-        }
-        for (replica, o) in retired {
-            if let Some(pos) = self
-                .queued
-                .iter()
-                .position(|q| q.replica == replica && q.rider.anchor_ms == o.rider.anchor_ms)
-            {
-                self.queued.swap_remove(pos);
-            }
-            if let Some(latency_ms) = o.latency_ms {
-                let d = Duration::from_secs_f64(latency_ms / 1e3);
-                self.fleet_latency.record(d);
-                self.recent_latency.record(d);
-                if o.rider.is_interactive() {
-                    self.fleet_latency_hi.record(d);
-                    self.recent_latency_hi.record(d);
+            for o in r.collect(now) {
+                if let Some(latency_ms) = o.latency_ms {
+                    let d = Duration::from_secs_f64(latency_ms / 1e3);
+                    self.fleet_latency.record(d);
+                    self.recent_latency.record(d);
+                    if o.rider.is_interactive() {
+                        self.fleet_latency_hi.record(d);
+                        self.recent_latency_hi.record(d);
+                    }
                 }
             }
         }
@@ -360,30 +418,44 @@ impl FleetState {
     /// re-route).  Candidates are in ascending replica-id order, which
     /// the round-robin cursor relies on.  In the priority-blind
     /// posture the router sees a default-class rider (the replica
-    /// still receives the real one, for accounting).
+    /// still receives the real one, for accounting); in the
+    /// affinity-blind posture every candidate claims residency, so
+    /// cold loads still happen but placement cannot see them.
     fn place_rider(&mut self, now_ms: f64, rider: Rider) -> Option<Placement> {
+        let affinity = self.affinity_aware && self.artifact_cache.is_some();
         let candidates: Vec<Candidate> = self
             .replicas
             .iter()
             .filter(|r| r.available())
-            .map(|r| Candidate {
-                replica: r.id,
-                queue_wait_ms: r.queue_wait_ms(now_ms),
-                busy_wait_ms: r.backlog_wait_ms(now_ms),
-                service_ms: r.service_ms(),
-                energy_j: r.predicted_energy_per_request_j(),
-                in_flight: r.in_flight(),
-                open_fill: r.open_fill(),
+            .map(|r| {
+                let (load_ms, load_j) =
+                    if affinity { r.model_load_cost(rider.model) } else { (0.0, 0.0) };
+                Candidate {
+                    replica: r.id,
+                    queue_wait_ms: r.queue_wait_ms(now_ms),
+                    busy_wait_ms: r.backlog_wait_ms(now_ms),
+                    service_ms: r.service_ms(),
+                    energy_j: r.predicted_energy_per_request_j(),
+                    in_flight: r.in_flight(),
+                    open_fill: r.open_fill(),
+                    model_resident: if affinity { r.model_resident(rider.model) } else { true },
+                    load_ms,
+                    load_j,
+                }
             })
             .collect();
-        let route_rider = if self.qos_aware { rider } else { Rider::plain(rider.anchor_ms) };
+        let route_rider = if self.qos_aware {
+            rider
+        } else {
+            // the blind router still sees the model (affinity is not
+            // part of the QoS-blind comparison)
+            Rider::plain(rider.anchor_ms).with_model(rider.model)
+        };
         let idx = self.router.place(&candidates, &route_rider, now_ms)?;
         let placement = self.replicas[idx].admit_rider(now_ms, rider);
-        self.queued.push(QueuedEntry {
-            replica: placement.replica,
-            rider,
-            precision: placement.precision,
-        });
+        if let Some(count) = self.model_placements.get_mut(rider.model.index()) {
+            *count += 1;
+        }
         Some(placement)
     }
 
@@ -391,9 +463,10 @@ impl FleetState {
     /// the incoming one — lowest priority first, most deadline slack
     /// next — among riders whose batch has not started service
     /// (joules already burning are never wasted on an eviction).
-    /// `None` when the gate has room, the door is closed, or nothing
-    /// queued is cheaper.
-    fn find_victim(&self, incoming: &Rider, queued: usize, now_ms: f64) -> Option<usize> {
+    /// Victim candidates come straight from each replica's queue
+    /// ([`Replica::cheapest_evictable`]); `None` when the gate has
+    /// room, the door is closed, or nothing queued is cheaper.
+    fn find_victim(&self, incoming: &Rider, queued: usize, now_ms: f64) -> Option<Victim> {
         if !self.qos_aware {
             return None;
         }
@@ -415,29 +488,26 @@ impl FleetState {
             a.partial_cmp(&b) == Some(std::cmp::Ordering::Less)
         };
         let incoming_key = key(incoming);
-        let mut best: Option<(usize, (f64, f64))> = None;
-        for (i, q) in self.queued.iter().enumerate() {
-            let k = key(&q.rider);
+        let mut best: Option<(Victim, (f64, f64))> = None;
+        for r in &self.replicas {
+            let Some((rider, precision)) = r.cheapest_evictable(now_ms) else { continue };
+            let k = key(&rider);
             if !lt(k, incoming_key) {
                 continue; // not strictly cheaper than the arrival
             }
-            if best.is_some_and(|(_, bk)| !lt(k, bk)) {
+            if best.as_ref().is_some_and(|(_, bk)| !lt(k, *bk)) {
                 continue; // an even cheaper victim is already found
             }
-            let Some(r) = self.replicas.get(q.replica) else { continue };
-            if !r.rider_evictable(q.rider.anchor_ms, q.precision, now_ms) {
-                continue;
-            }
-            best = Some((i, k));
+            best = Some(((r.id, rider, precision), k));
         }
-        best.map(|(i, _)| i)
+        best.map(|(victim, _)| victim)
     }
 
     /// Drop the chosen victim (the gate already counted the admission
     /// it makes room for); the victim is accounted as shed.
-    fn evict(&mut self, victim: usize, now_ms: f64) {
-        let q = self.queued.swap_remove(victim);
-        if self.replicas[q.replica].evict_rider(q.rider.anchor_ms, q.precision, now_ms) {
+    fn evict(&mut self, victim: Victim, now_ms: f64) {
+        let (replica, rider, precision) = victim;
+        if self.replicas[replica].evict_rider(rider.anchor_ms, precision, now_ms) {
             self.shed += 1;
             self.evicted += 1;
         }
@@ -463,17 +533,19 @@ impl FleetState {
             p95_ms: self.recent_latency.percentile_ms(0.95),
             p95_hi_ms: self.recent_latency_hi.percentile_ms(0.95),
             interactive_in_flight: self
-                .queued
+                .replicas
                 .iter()
-                .filter(|q| q.rider.is_interactive())
-                .count(),
+                .map(Replica::interactive_in_flight)
+                .sum(),
             shed_total: self.shed,
             lost_total: self.lost,
             expired_total: self.replicas.iter().map(|r| r.expired).sum(),
             committed_j: self
                 .replicas
                 .iter()
-                .map(|r| r.energy_spent_j + r.energy_queued_j + r.idle_energy_j)
+                .map(|r| {
+                    r.energy_spent_j + r.energy_queued_j + r.idle_energy_j + r.artifact_load_j
+                })
                 .sum(),
         }
     }
@@ -531,12 +603,16 @@ impl FleetState {
             if asc.degraded_posture {
                 self.replicas[id].degraded = true;
             }
+            let prewarmed = self.prewarm_hot(id, at_ms);
             let name = self.replicas[id].name.clone();
             asc.note(ScaleEvent {
                 at_ms,
                 kind: ScaleKind::ReviveReplica,
                 replica: Some(id),
-                reason: format!("revived parked {name}"),
+                reason: match prewarmed {
+                    Some(model) => format!("revived parked {name}, prewarmed {model}"),
+                    None => format!("revived parked {name}"),
+                },
             });
             return;
         }
@@ -547,14 +623,44 @@ impl FleetState {
             if asc.degraded_posture {
                 self.replicas[id].degraded = true;
             }
+            let prewarmed = self.prewarm_hot(id, at_ms);
             let name = self.replicas[id].name.clone();
             asc.note(ScaleEvent {
                 at_ms,
                 kind: ScaleKind::AddReplica,
                 replica: Some(id),
-                reason: format!("provisioned {name} from warm pool"),
+                reason: match prewarmed {
+                    Some(model) => {
+                        format!("provisioned {name} from warm pool, prewarmed {model}")
+                    }
+                    None => format!("provisioned {name} from warm pool"),
+                },
             });
         }
+    }
+
+    /// The catalog model with the most lifetime placements (`None`
+    /// without an artifact tier or before any placement).
+    fn hot_model(&self) -> Option<ModelId> {
+        self.artifact_cache.as_ref()?;
+        let (idx, &n) = self.model_placements.iter().enumerate().max_by_key(|&(_, &n)| n)?;
+        if n == 0 {
+            return None;
+        }
+        Some(ModelId(idx as u16))
+    }
+
+    /// Pre-load the hottest model's artifact on a freshly provisioned
+    /// replica, so the traffic that forced the scale-up does not pay a
+    /// cold start on top of its queue wait.  Returns the model name
+    /// for the scaling-event log; `None` when there is nothing to warm
+    /// (no tier, no placements yet) — a revived replica that still
+    /// holds the artifact warms for free (residency hit).
+    fn prewarm_hot(&mut self, id: usize, at_ms: f64) -> Option<String> {
+        let hot = self.hot_model()?;
+        let name = self.artifact_cache.as_ref()?.catalog.get(hot)?.name.clone();
+        self.replicas[id].prewarm(hot, at_ms);
+        Some(name)
     }
 
     /// Remove capacity: drain the least-loaded (ideally idle) healthy
@@ -613,6 +719,9 @@ impl FleetState {
         let id = self.replicas.len();
         let mut r = Replica::new(id, spec, self.budget, self.batch.clone(), &self.cache);
         r.qos_blind = !self.qos_aware;
+        if let Some(cc) = &self.artifact_cache {
+            r.set_artifact_cache(cc.catalog.clone(), cc.capacity_bytes);
+        }
         r.activate_at(at_ms);
         self.replicas.push(r);
         id
@@ -641,6 +750,9 @@ impl Fleet {
             .map(|(i, spec)| {
                 let mut r = Replica::new(i, spec.clone(), budget, config.batch.clone(), &cache);
                 r.qos_blind = !config.qos_aware;
+                if let Some(cc) = &config.cache {
+                    r.set_artifact_cache(cc.catalog.clone(), cc.capacity_bytes);
+                }
                 r
             })
             .collect();
@@ -673,7 +785,12 @@ impl Fleet {
                 lost: 0,
                 evicted: 0,
                 qos_aware: config.qos_aware,
-                queued: Vec::new(),
+                affinity_aware: config.affinity_aware,
+                artifact_cache: config.cache.clone(),
+                model_placements: vec![
+                    0;
+                    config.cache.as_ref().map_or(1, |cc| cc.catalog.len())
+                ],
                 fleet_latency: LatencyRecorder::new(8192),
                 fleet_latency_hi: LatencyRecorder::new(8192),
                 recent_latency: LatencyRecorder::new(128),
@@ -724,13 +841,33 @@ impl Fleet {
     /// arrival is evicted to make room, instead of shedding
     /// newest-first.
     pub fn dispatch_qos(&self, arrival_ms: f64, qos: Qos) -> Option<Placement> {
+        self.dispatch_model(arrival_ms, qos, ModelId::DEFAULT)
+    }
+
+    /// [`dispatch_qos`](Self::dispatch_qos) for a named catalog model
+    /// (resolve names with [`Fleet::resolve_model`]).  Without an
+    /// artifact tier the model is ignored; with one, a model id
+    /// outside the catalog cannot be served and is shed (counted, so
+    /// conservation holds).
+    pub fn dispatch_model(&self, arrival_ms: f64, qos: Qos, model: ModelId) -> Option<Placement> {
         let mut st = self.state.lock().unwrap();
         st.advance(arrival_ms);
         let now = st.clock_ms;
+        // Without a tier the model field is meaningless: normalize it
+        // so tierless fleets behave identically whatever ids a trace
+        // or caller carries (no phantom batch splits, no shed).
+        let model = if st.artifact_cache.is_none() {
+            ModelId::DEFAULT
+        } else if st.artifact_cache.as_ref().is_some_and(|cc| !cc.catalog.contains(model)) {
+            st.shed += 1;
+            return None;
+        } else {
+            model
+        };
         // Latency stays anchored at the true arrival even when another
         // caller already advanced the clock past it (out-of-order
         // wall-clock dispatches must not lose their queue wait).
-        let rider = Rider::from_qos(arrival_ms.min(now), qos);
+        let rider = Rider::from_qos(arrival_ms.min(now), qos).with_model(model);
         // Front door: with autoscaling on, shed *before* enqueueing
         // when the gate's queue cap is full or the controller reported
         // saturation — queues past the SLO help nobody.
@@ -759,20 +896,46 @@ impl Fleet {
     /// Undo a placement whose real work failed before being served
     /// (see [`Replica::retract_last`]).  Returns false if the request
     /// already completed, re-routed, or the replica failed since.
+    /// Artifact-load joules the admission triggered are *not*
+    /// refunded: the model genuinely became resident.
     pub fn retract(&self, placement: &Placement) -> bool {
         let mut st = self.state.lock().unwrap();
-        let ok = match st.replicas.get_mut(placement.replica) {
+        match st.replicas.get_mut(placement.replica) {
             Some(r) => r.retract_last(placement),
             None => false,
-        };
-        if ok {
-            if let Some(pos) = st.queued.iter().position(|q| {
-                q.replica == placement.replica && q.rider.anchor_ms == placement.anchor_ms
-            }) {
-                st.queued.swap_remove(pos);
-            }
         }
-        ok
+    }
+
+    /// Resolve a catalog model name (`None` when the fleet has no
+    /// artifact tier, or the name is unknown).
+    pub fn resolve_model(&self, name: &str) -> Option<ModelId> {
+        self.config.cache.as_ref()?.catalog.resolve(name)
+    }
+
+    /// Pre-load a model's artifact on one replica (operator warm-up:
+    /// seed the residency layout before traffic, exactly like the
+    /// autoscaler does for replicas it provisions).  The load cost is
+    /// paid now, in virtual time and joules.  Returns false when the
+    /// fleet has no artifact tier, the replica does not exist, or the
+    /// model is outside the catalog.
+    pub fn prewarm(&self, replica: usize, model: ModelId) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if !st.artifact_cache.as_ref().is_some_and(|cc| cc.catalog.contains(model)) {
+            return false;
+        }
+        let now = st.clock_ms;
+        match st.replicas.get_mut(replica) {
+            Some(r) => {
+                r.prewarm(model, now);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Does this fleet serve a model catalog (artifact tier on)?
+    pub fn has_catalog(&self) -> bool {
+        self.config.cache.is_some()
     }
 
     /// Gracefully remove a replica from rotation (queued work completes).
@@ -828,9 +991,6 @@ impl Fleet {
             st.replicas[replica].accrue_idle(now);
         }
         let orphans = st.replicas[replica].fail();
-        // The dead replica's registry entries are gone with its queue;
-        // successful re-placements register themselves anew.
-        st.queued.retain(|q| q.replica != replica);
         for orphan in orphans {
             // A successful re-placement marks its target replica as
             // holding a re-routed rider: autoscaler drains of that
@@ -908,25 +1068,36 @@ impl Fleet {
         let replicas: Vec<ReplicaStats> = st
             .replicas
             .iter()
-            .map(|r| ReplicaStats {
-                name: r.name.clone(),
-                device: r.spec.device.name,
-                precision: r.effective_precision().label(),
-                health: r.health.label(),
-                degraded: r.degraded,
-                parked: r.parked,
-                placements: r.placements,
-                completed: r.completed,
-                expired: r.expired,
-                in_flight: r.in_flight(),
-                energy_spent_j: r.energy_spent_j,
-                idle_energy_j: r.idle_energy_j,
-                p50_ms: r.latency.percentile_ms(0.50),
-                p99_ms: r.latency.percentile_ms(0.99),
+            .map(|r| {
+                let (cache_hits, cache_misses, cache_evictions) =
+                    r.cache_stats().unwrap_or((0, 0, 0));
+                ReplicaStats {
+                    name: r.name.clone(),
+                    device: r.spec.device.name,
+                    precision: r.effective_precision().label(),
+                    health: r.health.label(),
+                    degraded: r.degraded,
+                    parked: r.parked,
+                    placements: r.placements,
+                    completed: r.completed,
+                    expired: r.expired,
+                    in_flight: r.in_flight(),
+                    energy_spent_j: r.energy_spent_j,
+                    idle_energy_j: r.idle_energy_j,
+                    artifact_load_j: r.artifact_load_j,
+                    artifact_loads: r.artifact_loads,
+                    cache_hits,
+                    cache_misses,
+                    cache_evictions,
+                    resident_models: r.resident_models(),
+                    p50_ms: r.latency.percentile_ms(0.50),
+                    p99_ms: r.latency.percentile_ms(0.99),
+                }
             })
             .collect();
         let service_energy_j: f64 = replicas.iter().map(|r| r.energy_spent_j).sum();
         let idle_energy_j: f64 = replicas.iter().map(|r| r.idle_energy_j).sum();
+        let artifact_load_j: f64 = replicas.iter().map(|r| r.artifact_load_j).sum();
         FleetReport {
             policy: self.config.policy.label(),
             dispatched: replicas.iter().map(|r| r.placements).sum(),
@@ -934,9 +1105,14 @@ impl Fleet {
             expired: replicas.iter().map(|r| r.expired).sum(),
             deadline_riders: st.replicas.iter().map(|r| r.deadline_riders).sum(),
             deadline_missed: st.replicas.iter().map(|r| r.deadline_missed).sum(),
+            artifact_loads: replicas.iter().map(|r| r.artifact_loads).sum(),
+            cache_hits: replicas.iter().map(|r| r.cache_hits).sum(),
+            cache_misses: replicas.iter().map(|r| r.cache_misses).sum(),
+            cache_evictions: replicas.iter().map(|r| r.cache_evictions).sum(),
             service_energy_j,
             idle_energy_j,
-            total_energy_j: service_energy_j + idle_energy_j,
+            artifact_load_j,
+            total_energy_j: service_energy_j + idle_energy_j + artifact_load_j,
             shed: st.shed,
             rerouted: st.rerouted,
             lost: st.lost,
@@ -971,6 +1147,17 @@ pub struct ReplicaStats {
     /// Baseline-rail joules while provisioned (zero unless the fleet
     /// meters idle power).
     pub idle_energy_j: f64,
+    /// Sequential-rail joules spent on cold artifact loads (zero
+    /// without the artifact tier).
+    pub artifact_load_j: f64,
+    /// Cold artifact loads performed.
+    pub artifact_loads: u64,
+    /// Residency-cache counters (zero without the artifact tier).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    /// Models currently resident in this replica's cache.
+    pub resident_models: usize,
     pub p50_ms: Option<f64>,
     pub p99_ms: Option<f64>,
 }
@@ -1006,12 +1193,21 @@ pub struct FleetReport {
     /// Of `shed`, queued riders evicted in favor of a more urgent
     /// arrival (priority shedding at the gate).
     pub evicted: u64,
+    /// Cold artifact loads across the fleet (zero without the tier).
+    pub artifact_loads: u64,
+    /// Residency-cache aggregates across all replicas.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
     /// Differential (per-inference) joules across all replicas.
     pub service_energy_j: f64,
     /// Baseline-rail joules for provisioned replica-seconds (zero
     /// unless idle metering is on).
     pub idle_energy_j: f64,
-    /// `service_energy_j + idle_energy_j`.
+    /// Sequential-rail joules for cold artifact loads (zero without
+    /// the artifact tier).
+    pub artifact_load_j: f64,
+    /// `service_energy_j + idle_energy_j + artifact_load_j`.
     pub total_energy_j: f64,
     pub p50_ms: Option<f64>,
     pub p95_ms: Option<f64>,
@@ -1057,10 +1253,37 @@ impl FleetReport {
         }
     }
 
+    /// Hit fraction of residency-cache touches (`None` without any).
+    pub fn cache_hit_rate(&self) -> Option<f64> {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            None
+        } else {
+            Some(self.cache_hits as f64 / total as f64)
+        }
+    }
+
     /// Multi-line human-readable report.
     pub fn render(&self) -> String {
-        let idle = if self.idle_energy_j > 0.0 {
-            format!(" (service {:.1} + idle {:.1})", self.service_energy_j, self.idle_energy_j)
+        let idle = if self.idle_energy_j > 0.0 || self.artifact_load_j > 0.0 {
+            format!(
+                " (service {:.1} + idle {:.1} + load {:.1})",
+                self.service_energy_j, self.idle_energy_j, self.artifact_load_j
+            )
+        } else {
+            String::new()
+        };
+        let cache = if self.cache_hits + self.cache_misses > 0 {
+            format!(
+                "artifacts: {} cold loads ({:.1} J) | cache {}/{} hits ({:.0}%) \
+                 evictions {}\n",
+                self.artifact_loads,
+                self.artifact_load_j,
+                self.cache_hits,
+                self.cache_hits + self.cache_misses,
+                100.0 * self.cache_hit_rate().unwrap_or(0.0),
+                self.cache_evictions,
+            )
         } else {
             String::new()
         };
@@ -1081,7 +1304,7 @@ impl FleetReport {
             "fleet policy={} replicas={} dispatched={} completed={} shed={} rerouted={} \
              lost={} expired={}\n\
              energy {:.1} J{} ({:.3} J/req) | latency p50 {} ms p95 {} ms p99 {} ms | span {:.2} s\n\
-             {}",
+             {}{}",
             self.policy,
             self.replicas.len(),
             self.dispatched,
@@ -1098,6 +1321,7 @@ impl FleetReport {
             opt_ms(self.p99_ms),
             self.clock_ms / 1e3,
             qos,
+            cache,
         );
         for r in &self.replicas {
             out.push_str(&format!(
@@ -1132,8 +1356,13 @@ impl FleetReport {
             ("evicted", Json::num(self.evicted as f64)),
             ("deadline_riders", Json::num(self.deadline_riders as f64)),
             ("deadline_missed", Json::num(self.deadline_missed as f64)),
+            ("artifact_loads", Json::num(self.artifact_loads as f64)),
+            ("cache_hits", Json::num(self.cache_hits as f64)),
+            ("cache_misses", Json::num(self.cache_misses as f64)),
+            ("cache_evictions", Json::num(self.cache_evictions as f64)),
             ("service_energy_j", Json::num(self.service_energy_j)),
             ("idle_energy_j", Json::num(self.idle_energy_j)),
+            ("artifact_load_j", Json::num(self.artifact_load_j)),
             ("total_energy_j", Json::num(self.total_energy_j)),
             ("p50_ms", opt_num(self.p50_ms)),
             ("p95_ms", opt_num(self.p95_ms)),
@@ -1159,6 +1388,12 @@ impl FleetReport {
                                 ("in_flight", Json::num(r.in_flight as f64)),
                                 ("energy_spent_j", Json::num(r.energy_spent_j)),
                                 ("idle_energy_j", Json::num(r.idle_energy_j)),
+                                ("artifact_load_j", Json::num(r.artifact_load_j)),
+                                ("artifact_loads", Json::num(r.artifact_loads as f64)),
+                                ("cache_hits", Json::num(r.cache_hits as f64)),
+                                ("cache_misses", Json::num(r.cache_misses as f64)),
+                                ("cache_evictions", Json::num(r.cache_evictions as f64)),
+                                ("resident_models", Json::num(r.resident_models as f64)),
                                 ("p50_ms", opt_num(r.p50_ms)),
                                 ("p99_ms", opt_num(r.p99_ms)),
                             ])
@@ -1172,6 +1407,8 @@ impl FleetReport {
 
 /// Drive a whole trace through the fleet in virtual time, applying
 /// scripted health events at their timestamps, then run the queues dry.
+/// Entries carry their QoS class *and* their model (ignored on fleets
+/// without an artifact tier).
 pub fn run_trace(fleet: &Fleet, trace: &Trace, events: &[HealthEvent]) -> FleetReport {
     let mut events: Vec<HealthEvent> = events.to_vec();
     events.sort_by(|a, b| a.at_ms.partial_cmp(&b.at_ms).unwrap());
@@ -1181,7 +1418,7 @@ pub fn run_trace(fleet: &Fleet, trace: &Trace, events: &[HealthEvent]) -> FleetR
         while events.peek().is_some_and(|e| e.at_ms <= at_ms) {
             fleet.apply(events.next().unwrap());
         }
-        fleet.dispatch_qos(at_ms, entry.qos);
+        fleet.dispatch_model(at_ms, entry.qos, entry.model);
     }
     for e in events {
         fleet.apply(e);
@@ -1883,6 +2120,211 @@ mod tests {
         assert!(
             any_qos_shed > 0,
             "the bursty mixed traces should exercise eviction and/or expiry"
+        );
+    }
+
+    #[test]
+    fn multimodel_conservation_across_cold_loads_and_evictions() {
+        // One replica whose cache fits only one model at a time: a
+        // 50/50 mix forces a cold load on every model switch (evicting
+        // the other artifact mid-queue).  Loads must cost joules and
+        // virtual time, never requests.
+        for seed in [3u64, 11, 29] {
+            let cfg = FleetConfig::parse_spec("1xn5@fp16", Policy::parse("energy").unwrap())
+                .unwrap()
+                .with_artifact_cache(12_000_000)
+                .with_seed(seed);
+            let fleet = Fleet::new(cfg);
+            let t = trace(60, 3.0, seed).with_model_mix(0.5, ModelId(1));
+            let report = run_trace(&fleet, &t, &[]);
+            assert_eq!(
+                report.completed + report.shed + report.lost + report.expired,
+                60,
+                "seed {seed}: conservation broke: {report:?}"
+            );
+            assert_eq!(report.completed, 60, "seed {seed}: no gate/budget: all complete");
+            assert!(
+                report.cache_evictions > 0,
+                "seed {seed}: the 12 MB cache must thrash on a 5+10 MB mix"
+            );
+            assert!(report.artifact_loads >= 2, "seed {seed}: both models cold-load");
+            assert_eq!(report.cache_misses, report.artifact_loads, "seed {seed}");
+            assert!(report.artifact_load_j > 0.0);
+            assert!(
+                (report.total_energy_j
+                    - report.service_energy_j
+                    - report.idle_energy_j
+                    - report.artifact_load_j)
+                    .abs()
+                    < 1e-9,
+                "seed {seed}: energy split must sum"
+            );
+        }
+    }
+
+    #[test]
+    fn energy_aware_partitions_models_across_equal_replicas() {
+        // 50/50 two-model mix over two equal replicas, cache sized for
+        // one model each: affinity-aware routing settles into a
+        // partition (each model mostly served where it is resident),
+        // so it pays fewer cold loads — and strictly fewer joules —
+        // than the affinity-blind posture, at equal completions.
+        let t = trace(80, 3.0, 13).with_model_mix(0.5, ModelId(1));
+        let run = |blind: bool| {
+            let mut cfg =
+                FleetConfig::parse_spec("2xn5@fp16", Policy::parse("energy").unwrap())
+                    .unwrap()
+                    .with_artifact_cache(12_000_000)
+                    .with_seed(13);
+            if blind {
+                cfg = cfg.with_affinity_blind();
+            }
+            let fleet = Fleet::new(cfg);
+            // both postures start from the same warm layout: one model
+            // resident per replica (the operator prewarm a real
+            // deployment would do)
+            assert!(fleet.prewarm(0, ModelId::DEFAULT));
+            assert!(fleet.prewarm(1, ModelId(1)));
+            run_trace(&fleet, &t, &[])
+        };
+        let aware = run(false);
+        let blind = run(true);
+        assert_eq!(aware.completed, 80);
+        assert_eq!(blind.completed, 80);
+        assert!(
+            aware.artifact_loads < blind.artifact_loads,
+            "affinity must avoid reloads: {} vs {} loads",
+            aware.artifact_loads,
+            blind.artifact_loads
+        );
+        assert!(
+            aware.total_energy_j < blind.total_energy_j,
+            "saved loads are saved joules: {:.1} vs {:.1} J",
+            aware.total_energy_j,
+            blind.total_energy_j
+        );
+    }
+
+    #[test]
+    fn failing_the_only_warm_replica_forces_a_reload_on_the_survivor() {
+        // r0 takes all the detector traffic (the only warm copy);
+        // killing it re-routes the queued riders to r1, which pays its
+        // own cold load — and conservation still holds.
+        let cfg = FleetConfig::parse_spec("2xs7", Policy::LeastLoaded)
+            .unwrap()
+            .with_artifact_cache(32_000_000)
+            .with_seed(7);
+        let fleet = Fleet::new(cfg);
+        let det = fleet.resolve_model("detector").expect("zoo has a detector");
+        fleet.drain(1); // pin the detector queue onto r0
+        for i in 0..4 {
+            assert!(fleet.dispatch_model(i as f64, Qos::default(), det).is_some());
+        }
+        fleet.revive(1);
+        fleet.fail(0);
+        let report = fleet.finish();
+        assert_eq!(report.completed, 4, "{report:?}");
+        assert_eq!(report.lost, 0, "the survivor takes every orphan");
+        assert_eq!(report.rerouted, 4, "nothing had started on r0 yet");
+        assert_eq!(report.dispatched, 4 + report.rerouted);
+        assert!(
+            report.replicas[1].artifact_loads >= 1,
+            "the survivor must cold-load the re-routed model: {report:?}"
+        );
+        // the failed replica rebooted cold
+        assert_eq!(report.replicas[0].resident_models, 0);
+        assert_eq!(report.completed + report.shed + report.lost + report.expired, 4);
+    }
+
+    #[test]
+    fn draining_the_warm_replica_reloads_on_the_remaining_one() {
+        let cfg = FleetConfig::parse_spec("2xs7", Policy::parse("energy").unwrap())
+            .unwrap()
+            .with_artifact_cache(32_000_000)
+            .with_seed(7);
+        let fleet = Fleet::new(cfg);
+        let det = fleet.resolve_model("detector").unwrap();
+        fleet.drain(1);
+        assert!(fleet.dispatch_model(0.0, Qos::default(), det).is_some());
+        // r0 gracefully drains: its queued rider still completes, but
+        // new detector traffic can only land on r1 — a fresh cold load.
+        fleet.drain(0);
+        fleet.revive(1);
+        let p = fleet.dispatch_model(10.0, Qos::default(), det).expect("placed on r1");
+        assert_eq!(p.replica, 1);
+        assert!(p.cold_load_ms > 0.0, "the only warm copy is draining away: {p:?}");
+        assert_eq!(p.model.as_deref(), Some("detector"));
+        let report = fleet.finish();
+        assert_eq!(report.completed, 2);
+        assert_eq!(report.artifact_loads, 2, "one load per replica");
+        assert_eq!(report.completed + report.shed + report.lost + report.expired, 2);
+    }
+
+    #[test]
+    fn unknown_model_is_shed_and_tierless_fleets_ignore_models() {
+        let cfg = FleetConfig::parse_spec("1xs7", Policy::LeastLoaded)
+            .unwrap()
+            .with_artifact_cache(32_000_000);
+        let fleet = Fleet::new(cfg);
+        assert!(fleet.has_catalog());
+        assert_eq!(fleet.resolve_model("squeezenet"), Some(ModelId::DEFAULT));
+        assert!(fleet.resolve_model("nope").is_none());
+        assert!(
+            fleet.dispatch_model(0.0, Qos::default(), ModelId(9)).is_none(),
+            "a model outside the catalog cannot be served"
+        );
+        let report = fleet.finish();
+        assert_eq!(report.shed, 1, "the unknown-model request is counted");
+        // without a tier, the model field is ignored entirely
+        let plain = Fleet::new(FleetConfig::parse_spec("1xs7", Policy::LeastLoaded).unwrap());
+        assert!(!plain.has_catalog());
+        assert!(plain.resolve_model("squeezenet").is_none());
+        assert!(plain.dispatch_model(0.0, Qos::default(), ModelId(9)).is_some());
+        let report = plain.finish();
+        assert_eq!(report.completed, 1);
+        assert_eq!(report.artifact_loads, 0);
+        assert_eq!(report.artifact_load_j, 0.0);
+        // ...including by the batcher: mixed model ids on a tierless
+        // fleet must not split open batches (the models are all "the"
+        // resident model)
+        let batched = Fleet::new(
+            FleetConfig::parse_spec("1xs7", Policy::LeastLoaded)
+                .unwrap()
+                .with_batching(4, 50.0),
+        );
+        batched.dispatch_model(0.0, Qos::default(), ModelId(0));
+        let p = batched.dispatch_model(1.0, Qos::default(), ModelId(9)).unwrap();
+        assert_eq!(p.batch_fill, 2, "tierless fleets must not split batches by model");
+        let report = batched.finish();
+        assert_eq!(report.completed, 2);
+    }
+
+    #[test]
+    fn autoscaler_prewarms_the_hot_model_on_provisioned_replicas() {
+        // The spike scenario with an artifact tier: the warm-pool
+        // replicas the breach provisions must come up with the hot
+        // model prewarmed (narrated in the scaling event), not pay the
+        // cold start under the very traffic that forced the scale-up.
+        let cfg = FleetConfig::parse_spec("1xn5@fp16", Policy::parse("energy").unwrap())
+            .unwrap()
+            .with_artifact_cache(32_000_000)
+            .with_autoscale(spike_autoscale())
+            .with_seed(5);
+        let fleet = Fleet::new(cfg);
+        let report = run_trace(&fleet, &spike_trace(5), &[]);
+        assert_eq!(
+            report.completed + report.shed + report.lost + report.expired,
+            140,
+            "conservation with tier + autoscale: {report:?}"
+        );
+        let asc = fleet.autoscale_report().expect("autoscaler on");
+        assert!(asc.scale_ups >= 1, "the spike must provision: {asc:?}");
+        assert!(
+            asc.events.iter().any(|e| {
+                e.kind == ScaleKind::AddReplica && e.reason.contains("prewarmed squeezenet")
+            }),
+            "provisioning must narrate the prewarm: {:?}",
+            asc.events
         );
     }
 

@@ -25,22 +25,40 @@
 //! alone is shed at dequeue ([`Outcome`] with no latency) instead of
 //! wasting service joules on an answer that arrives too late.
 //!
+//! **Artifact tier:** with a model catalog attached
+//! ([`Replica::set_artifact_cache`]), every rider names a model and the
+//! replica keeps a byte-budgeted [`ArtifactCache`] of resident weight
+//! artifacts.  A miss pays the cold-load price *in the queue* —
+//! `busy_until` is pushed out by
+//! [`artifact_load_ms`](crate::simulator::cost::artifact_load_ms) and
+//! sequential-rail joules are metered (`artifact_load_j`) — so a cold
+//! start has a real latency and energy cost, and batches are
+//! model-homogeneous (a model switch flushes the open batch exactly
+//! like a precision change).  Cold-load joules are *sunk*: retracting
+//! or evicting a rider does not refund the load, because the artifact
+//! genuinely became resident.
+//!
 //! [`NetworkPlan`]: crate::simulator::autotune::NetworkPlan
 //! [`network_dispatch_overhead_ms`]: crate::simulator::cost::network_dispatch_overhead_ms
 //! [`network_marginal_time_ms`]: crate::simulator::cost::network_marginal_time_ms
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::coordinator::{plan_batches, PlanCache, Qos};
 use crate::model::graph::{ConvSpec, SqueezeNet};
-use crate::simulator::cost::{network_dispatch_overhead_ms, network_marginal_time_ms, RunMode};
+use crate::runtime::artifacts::{ModelCatalog, ModelId};
+use crate::simulator::cost::{
+    artifact_load_ms, network_dispatch_overhead_ms, network_marginal_time_ms, RunMode,
+};
 use crate::simulator::device::{DeviceProfile, Precision};
 use crate::simulator::power::{energy_joules, idle_power_w};
 use crate::telemetry::LatencyRecorder;
 use crate::util::json::Json;
 
 use super::budget::{BudgetState, JouleBudget};
+use super::cache::ArtifactCache;
 use super::health::Health;
 
 /// Static description of one replica: device profile + serving precision.
@@ -165,12 +183,20 @@ pub struct Rider {
     pub priority: u8,
     /// Absolute virtual-time deadline (`f64::INFINITY` = none).
     pub deadline_at_ms: f64,
+    /// The model this request serves (catalog index; ignored — and
+    /// [`ModelId::DEFAULT`] — on fleets without an artifact tier).
+    pub model: ModelId,
 }
 
 impl Rider {
-    /// A rider of the default class (no deadline).
+    /// A rider of the default class (no deadline, default model).
     pub fn plain(anchor_ms: f64) -> Rider {
-        Rider { anchor_ms, priority: Qos::DEFAULT_PRIORITY, deadline_at_ms: f64::INFINITY }
+        Rider {
+            anchor_ms,
+            priority: Qos::DEFAULT_PRIORITY,
+            deadline_at_ms: f64::INFINITY,
+            model: ModelId::DEFAULT,
+        }
     }
 
     /// Build a rider from a request's [`Qos`], resolving the relative
@@ -180,7 +206,14 @@ impl Rider {
             anchor_ms,
             priority: qos.priority,
             deadline_at_ms: qos.deadline_ms.map_or(f64::INFINITY, |d| anchor_ms + d),
+            model: ModelId::DEFAULT,
         }
+    }
+
+    /// The same rider serving a named catalog model.
+    pub fn with_model(mut self, model: ModelId) -> Rider {
+        self.model = model;
+        self
     }
 
     pub fn has_deadline(&self) -> bool {
@@ -227,12 +260,17 @@ pub struct Placement {
     /// Riders in this request's batch so far (its dispatch batch size
     /// if the batch already flushed, the open-batch fill otherwise).
     pub batch_fill: usize,
+    /// Cold-load milliseconds this admission triggered (0.0 when the
+    /// model was already resident, or no artifact tier is configured).
+    pub cold_load_ms: f64,
+    /// Catalog name of the model served (`None` without a catalog).
+    pub model: Option<String>,
 }
 
 impl Placement {
     /// Wire representation for the TCP server's fleet-backed path.
     pub fn to_json(&self) -> Json {
-        Json::object(vec![
+        let mut pairs = vec![
             ("replica", Json::num(self.replica as f64)),
             ("replica_name", Json::str(self.replica_name.clone())),
             ("queue_wait_ms", Json::num(self.queue_wait_ms)),
@@ -241,7 +279,12 @@ impl Placement {
             ("energy_j", Json::num(self.energy_j)),
             ("precision", Json::str(self.precision.label())),
             ("batch_fill", Json::num(self.batch_fill as f64)),
-        ])
+        ];
+        if let Some(model) = &self.model {
+            pairs.push(("model", Json::str(model.clone())));
+            pairs.push(("cold_load_ms", Json::num(self.cold_load_ms)));
+        }
+        Json::object(pairs)
     }
 }
 
@@ -308,6 +351,9 @@ pub struct Replica {
     /// Serving precision of the open batch (batches are homogeneous; a
     /// precision change flushes the open batch first).
     open_precision: Precision,
+    /// Model of the open batch (homogeneous too: different models are
+    /// different executables, so a model switch flushes first).
+    open_model: ModelId,
     /// Ignore per-rider deadlines when making batching decisions (the
     /// priority-blind comparison baseline).  Deadline *accounting*
     /// (miss counters) still runs either way.
@@ -344,9 +390,30 @@ pub struct Replica {
     /// queued here.  While non-empty, an autoscaler drain of this
     /// replica is deferred — see [`Replica::holds_rerouted`].
     rerouted_anchors: Vec<f64>,
+    /// Artifact tier (catalog + residency cache + per-model load
+    /// prices); `None` = pre-cache behavior: every model is resident
+    /// and loads are free.
+    artifact: Option<ReplicaArtifacts>,
+    /// Joules spent on cold artifact loads (sequential rail; separate
+    /// from `energy_spent_j` so joule budgets keep metering useful
+    /// service work, but counted into fleet totals).
+    pub artifact_load_j: f64,
+    /// Cold artifact loads performed.
+    pub artifact_loads: u64,
     pub placements: u64,
     pub completed: u64,
     pub latency: LatencyRecorder,
+}
+
+/// Per-replica artifact-tier state: the shared catalog, this device's
+/// residency cache, and pre-priced cold-load costs per model.
+#[derive(Debug)]
+struct ReplicaArtifacts {
+    catalog: Arc<ModelCatalog>,
+    cache: ArtifactCache,
+    /// Cold-load cost per catalog model (ms / J), indexed by model id.
+    load_ms: Vec<f64>,
+    load_j: Vec<f64>,
 }
 
 impl Replica {
@@ -394,6 +461,7 @@ impl Replica {
             open_deadline_ms: f64::INFINITY,
             open_latest_admit_ms: f64::NEG_INFINITY,
             open_precision: Precision::Precise,
+            open_model: ModelId::DEFAULT,
             qos_blind: false,
             expired: 0,
             deadline_riders: 0,
@@ -407,10 +475,93 @@ impl Replica {
             idle_w,
             idle_from_ms: 0.0,
             rerouted_anchors: Vec::new(),
+            artifact: None,
+            artifact_load_j: 0.0,
+            artifact_loads: 0,
             placements: 0,
             completed: 0,
             latency: LatencyRecorder::new(4096),
         }
+    }
+
+    /// Attach the artifact tier: a shared model catalog and a
+    /// byte-budgeted residency cache.  Cold-load prices are derived
+    /// from each model's shard bytes and this device's transfer rate
+    /// (see [`artifact_load_ms`]); load energy is metered on the
+    /// sequential-differential rail (a host-driven copy).
+    pub fn set_artifact_cache(&mut self, catalog: Arc<ModelCatalog>, capacity_bytes: u64) {
+        let load_ms: Vec<f64> = catalog
+            .models()
+            .iter()
+            .map(|m| artifact_load_ms(&self.spec.device, m.total_bytes))
+            .collect();
+        let load_j: Vec<f64> = load_ms
+            .iter()
+            .map(|&ms| energy_joules(&self.spec.device, RunMode::Sequential, ms))
+            .collect();
+        self.artifact = Some(ReplicaArtifacts {
+            catalog,
+            cache: ArtifactCache::new(capacity_bytes),
+            load_ms,
+            load_j,
+        });
+    }
+
+    /// Is the model's artifact resident here?  Always true without an
+    /// artifact tier (the pre-cache contract: weights are assumed
+    /// loaded, exactly as the paper's single-device setting does).
+    pub fn model_resident(&self, model: ModelId) -> bool {
+        match &self.artifact {
+            None => true,
+            Some(a) => a.cache.contains(model),
+        }
+    }
+
+    /// Predicted cold-load cost `(ms, joules)` if a rider for `model`
+    /// were placed here right now; `(0, 0)` when resident or untiered.
+    pub fn model_load_cost(&self, model: ModelId) -> (f64, f64) {
+        match &self.artifact {
+            Some(a) if !a.cache.contains(model) => (
+                a.load_ms.get(model.index()).copied().unwrap_or(0.0),
+                a.load_j.get(model.index()).copied().unwrap_or(0.0),
+            ),
+            _ => (0.0, 0.0),
+        }
+    }
+
+    /// Make `model` resident, paying the cold-load price on a miss:
+    /// the engine backlog grows by the load time (a request behind the
+    /// load waits it out) and load joules are metered.  A no-op when
+    /// the tier is off, the model is unknown, or already resident.
+    fn ensure_resident(&mut self, model: ModelId, now_ms: f64) {
+        let Some(a) = &mut self.artifact else { return };
+        let Some(m) = a.catalog.get(model) else { return };
+        if a.cache.touch(model, m.total_bytes, now_ms) {
+            return;
+        }
+        let ms = a.load_ms.get(model.index()).copied().unwrap_or(0.0);
+        let j = a.load_j.get(model.index()).copied().unwrap_or(0.0);
+        self.busy_until_ms = self.busy_until_ms.max(now_ms) + ms;
+        self.artifact_load_j += j;
+        self.artifact_loads += 1;
+    }
+
+    /// Pre-load a model's artifact (the autoscaler warms the hot model
+    /// on a freshly provisioned replica, so its first requests do not
+    /// pay the cold start).  A hit just refreshes recency.
+    pub fn prewarm(&mut self, model: ModelId, now_ms: f64) {
+        self.ensure_resident(model, now_ms);
+    }
+
+    /// Residency-cache counters `(hits, misses, evictions)`; `None`
+    /// without an artifact tier.
+    pub fn cache_stats(&self) -> Option<(u64, u64, u64)> {
+        self.artifact.as_ref().map(|a| (a.cache.hits, a.cache.misses, a.cache.evictions))
+    }
+
+    /// Models currently resident (0 without an artifact tier).
+    pub fn resident_models(&self) -> usize {
+        self.artifact.as_ref().map_or(0, |a| a.cache.resident_models())
     }
 
     /// Start this replica's idle meter at `now_ms` — used when the
@@ -737,13 +888,24 @@ impl Replica {
     pub fn admit_rider(&mut self, now_ms: f64, rider: Rider) -> Placement {
         self.flush_due(now_ms);
         let precision = self.effective_precision();
-        // Batches are homogeneous: a precision change (budget
-        // degradation) closes the open batch before the new rider.
-        if !self.open.is_empty() && self.open_precision != precision {
+        // Batches are homogeneous in precision *and* model: a
+        // precision change (budget degradation) or a model switch
+        // closes the open batch before the new rider joins.  Without
+        // an artifact tier the model field is ignored entirely —
+        // every model is "the" resident model, so it must not break
+        // batches either.
+        let model_switch = self.artifact.is_some() && self.open_model != rider.model;
+        if !self.open.is_empty() && (self.open_precision != precision || model_switch) {
             self.flush_open(now_ms);
         }
+        // Pay the cold start (if any) before scheduling: the load
+        // extends the engine backlog that every estimate below reads,
+        // so a request behind a cold load genuinely waits it out.
+        let (cold_load_ms, _cold_load_j) = self.model_load_cost(rider.model);
+        self.ensure_resident(rider.model, now_ms);
         if self.open.is_empty() {
             self.open_precision = precision;
+            self.open_model = rider.model;
             self.open_deadline_ms = now_ms + self.batch.max_wait_ms;
         }
         self.open.push(rider);
@@ -792,6 +954,12 @@ impl Replica {
             precision,
             anchor_ms: rider.anchor_ms,
             batch_fill: fill,
+            cold_load_ms,
+            model: self
+                .artifact
+                .as_ref()
+                .and_then(|a| a.catalog.get(rider.model))
+                .map(|m| m.name.clone()),
         }
     }
 
@@ -869,6 +1037,53 @@ impl Replica {
     /// on an eviction.
     pub fn evict_rider(&mut self, anchor_ms: f64, precision: Precision, now_ms: f64) -> bool {
         self.remove_rider(anchor_ms, precision, Some(now_ms))
+    }
+
+    /// The cheapest-to-drop rider still waiting here at `now_ms` —
+    /// lowest priority first, most deadline slack next — among riders
+    /// whose batch has not started service (joules already burning are
+    /// never wasted on an eviction).  Returns the rider and the
+    /// serving precision its queue entry carries (what
+    /// [`evict_rider`](Self::evict_rider) matches on).  This accessor
+    /// replaces the fleet's old parallel registry of queued riders:
+    /// the replica *is* the source of truth for its queue.
+    pub fn cheapest_evictable(&self, now_ms: f64) -> Option<(Rider, Precision)> {
+        fn key(r: &Rider) -> (f64, f64) {
+            (f64::from(r.priority), -r.deadline_at_ms)
+        }
+        let mut best: Option<((f64, f64), Rider, Precision)> = None;
+        let mut consider = |r: Rider, p: Precision| {
+            let k = key(&r);
+            let better = match &best {
+                None => true,
+                Some((bk, _, _)) => k.partial_cmp(bk) == Some(std::cmp::Ordering::Less),
+            };
+            if better {
+                best = Some((k, r, p));
+            }
+        };
+        for r in &self.open {
+            consider(*r, self.open_precision);
+        }
+        for b in &self.scheduled {
+            if b.start_ms > now_ms {
+                for r in &b.riders {
+                    consider(*r, b.precision);
+                }
+            }
+        }
+        best.map(|(_, r, p)| (r, p))
+    }
+
+    /// Interactive-class riders (raised priority or deadline) queued or
+    /// running here — the autoscaler's hi-window liveness signal.
+    pub fn interactive_in_flight(&self) -> usize {
+        self.open.iter().filter(|r| r.is_interactive()).count()
+            + self
+                .scheduled
+                .iter()
+                .map(|b| b.riders.iter().filter(|r| r.is_interactive()).count())
+                .sum::<usize>()
     }
 
     /// Is the rider admitted with (anchor, precision) still waiting in
@@ -972,6 +1187,13 @@ impl Replica {
         self.energy_queued_j = 0.0;
         self.in_flight_count = 0;
         self.rerouted_anchors.clear();
+        // A failed replica reboots cold: RAM-resident artifacts are
+        // gone, so post-revive traffic pays the load again (and an
+        // orphan re-routed elsewhere may force a cold load there —
+        // losing the only warm copy of a model has a real price).
+        if let Some(a) = &mut self.artifact {
+            a.cache.clear();
+        }
         let mut orphans = Vec::new();
         for b in self.scheduled.drain(..) {
             orphans.extend(b.riders.iter().copied());
@@ -1155,10 +1377,10 @@ mod tests {
         r.admit(0.0, 0.0);
         let service2 = oh + 2.0 * marg; // two riders flush as one dispatch
         let urgent = Rider {
-            anchor_ms: 10.0,
             priority: 2,
             // the batch must start by t=50 for this rider to make it
             deadline_at_ms: 50.0 + service2,
+            ..Rider::plain(10.0)
         };
         r.admit_rider(10.0, urgent);
         assert_eq!(r.open_fill(), 2);
@@ -1191,7 +1413,8 @@ mod tests {
         for _ in 0..3 {
             r.admit(0.0, 0.0);
         }
-        let hopeless = Rider { anchor_ms: 1.0, priority: 2, deadline_at_ms: 1.0 + s * 0.5 };
+        let hopeless =
+            Rider { priority: 2, deadline_at_ms: 1.0 + s * 0.5, ..Rider::plain(1.0) };
         r.admit_rider(1.0, hopeless);
         // single-image batching flushes at admit; the expired rider is
         // handed back on the next collect
@@ -1442,6 +1665,113 @@ mod tests {
         let _ = r.fail();
         assert!(!r.holds_rerouted());
         let _ = p3;
+    }
+
+    #[test]
+    fn artifact_cold_load_extends_backlog_and_meters_joules() {
+        let cache = PlanCache::new();
+        let spec = ReplicaSpec::new(DeviceProfile::galaxy_s7(), Precision::Precise);
+        let mut r = Replica::new(0, spec, None, FleetBatch::single(), &cache);
+        r.set_artifact_cache(Arc::new(ModelCatalog::two_model_zoo()), 32_000_000);
+        let s = r.service_ms();
+        let (load_ms, load_j) = r.model_load_cost(ModelId::DEFAULT);
+        assert!(load_ms > 10.0 && load_j > 0.0, "cold start has a real price");
+        assert!(!r.model_resident(ModelId::DEFAULT));
+        let p1 = r.admit(0.0, 0.0);
+        assert!((p1.cold_load_ms - load_ms).abs() < 1e-9);
+        assert_eq!(p1.model.as_deref(), Some("squeezenet"));
+        assert!(
+            (p1.queue_wait_ms - load_ms).abs() < 1e-9,
+            "the first request waits out its own cold load"
+        );
+        assert!(r.model_resident(ModelId::DEFAULT));
+        assert!((r.artifact_load_j - load_j).abs() < 1e-12);
+        assert_eq!(r.artifact_loads, 1);
+        // a warm admit pays nothing extra
+        let p2 = r.admit(0.0, 0.0);
+        assert_eq!(p2.cold_load_ms, 0.0);
+        assert_eq!(r.artifact_loads, 1);
+        let done = r.collect(load_ms + 2.0 * s + 1.0);
+        assert_eq!(done.len(), 2);
+        assert_eq!(r.cache_stats(), Some((1, 1, 0)));
+        // load joules are metered separately from service joules
+        assert!((r.energy_spent_j - 2.0 * r.energy_per_request_j()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn model_switch_flushes_open_batch_and_evicts_under_pressure() {
+        let cache = PlanCache::new();
+        let spec = ReplicaSpec::new(DeviceProfile::galaxy_s7(), Precision::Precise);
+        let mut r = Replica::new(0, spec, None, FleetBatch::new(8, 1000.0), &cache);
+        // squeezenet (~5 MB) or detector (~10 MB) fits, not both
+        r.set_artifact_cache(Arc::new(ModelCatalog::two_model_zoo()), 12_000_000);
+        let det = ModelId(1);
+        r.admit_rider(0.0, Rider::plain(0.0));
+        r.admit_rider(1.0, Rider::plain(1.0));
+        assert_eq!(r.open_fill(), 2);
+        // a detector rider closes the squeezenet batch and pays a load
+        let p = r.admit_rider(2.0, Rider::plain(2.0).with_model(det));
+        assert_eq!(r.open_fill(), 1, "model switch must flush the open batch");
+        assert!(p.cold_load_ms > 0.0);
+        assert_eq!(p.model.as_deref(), Some("detector"));
+        // capacity pressure evicted squeezenet; its return reloads
+        assert!(!r.model_resident(ModelId::DEFAULT));
+        let p = r.admit_rider(3.0, Rider::plain(3.0));
+        assert!(p.cold_load_ms > 0.0, "thrash: the evicted model reloads");
+        assert_eq!(r.artifact_loads, 3);
+        let (_, misses, evictions) = r.cache_stats().unwrap();
+        assert_eq!(misses, 3);
+        assert_eq!(evictions, 2);
+        // every rider still completes — loads cost joules, not requests
+        let horizon = r.last_finish_ms().unwrap() + 1.0;
+        assert_eq!(r.collect(horizon).len(), 4);
+        assert_eq!(r.completed, 4);
+        assert!(r.energy_queued_j.abs() < 1e-9);
+    }
+
+    #[test]
+    fn prewarm_makes_the_first_request_warm() {
+        let cache = PlanCache::new();
+        let spec = ReplicaSpec::new(DeviceProfile::nexus_5(), Precision::Imprecise);
+        let mut r = Replica::new(0, spec, None, FleetBatch::single(), &cache);
+        r.set_artifact_cache(Arc::new(ModelCatalog::two_model_zoo()), 32_000_000);
+        r.prewarm(ModelId::DEFAULT, 0.0);
+        assert!(r.model_resident(ModelId::DEFAULT));
+        assert_eq!(r.artifact_loads, 1);
+        assert!(r.backlog_wait_ms(0.0) > 0.0, "the prewarm itself occupies the engine");
+        // well after the load settles, the first request starts warm
+        let p = r.admit(1000.0, 1000.0);
+        assert_eq!(p.cold_load_ms, 0.0);
+        assert!(p.queue_wait_ms < 1e-9);
+        // a second prewarm is a residency hit, not another load
+        r.prewarm(ModelId::DEFAULT, 1000.0);
+        assert_eq!(r.artifact_loads, 1);
+    }
+
+    #[test]
+    fn cheapest_evictable_and_interactive_counts_read_the_queue() {
+        // The accessors that replaced the fleet's parallel queued-rider
+        // registry: victim selection and the hi-class liveness count
+        // both read the replica's own queue.
+        let mut r = s7_precise();
+        let s = r.service_ms();
+        assert!(r.cheapest_evictable(0.0).is_none());
+        assert_eq!(r.interactive_in_flight(), 0);
+        let _p1 = r.admit(0.0, 0.0); // this batch starts at t=0: running
+        r.admit_rider(0.5, Rider { priority: 0, ..Rider::plain(0.5) });
+        r.admit_rider(0.7, Rider { priority: 2, deadline_at_ms: 5_000.0, ..Rider::plain(0.7) });
+        assert_eq!(r.interactive_in_flight(), 1);
+        // the running batch is never a victim; bulk is the cheapest
+        let (victim, precision) = r.cheapest_evictable(1.0).unwrap();
+        assert_eq!(victim.priority, 0);
+        assert!((victim.anchor_ms - 0.5).abs() < 1e-9);
+        assert!(r.evict_rider(victim.anchor_ms, precision, 1.0));
+        // with bulk gone, the urgent rider is the only unstarted one
+        let (victim, _) = r.cheapest_evictable(1.0).unwrap();
+        assert_eq!(victim.priority, 2);
+        let done = r.collect(10.0 * s);
+        assert_eq!(done.len(), 2);
+        assert_eq!(r.interactive_in_flight(), 0);
     }
 
     #[test]

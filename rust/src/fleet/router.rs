@@ -20,6 +20,15 @@
 //!   fast (or lightly-queued) replicas and relaxed ones keep the
 //!   cheap-joule placement.
 //!
+//! **Model affinity** (the artifact tier): candidates report whether
+//! the rider's model is already resident and the cold-load price if
+//! not.  `EnergyAware` folds the miss penalty straight into its score
+//! (`load_j` joules plus `λ·load_ms` latency), so a replica that would
+//! need a cold load must beat a warm one by more than the load costs;
+//! `PowerOfTwoChoices` prefers the resident candidate of its two
+//! samples.  `RoundRobin` and `LeastLoaded` stay affinity-blind by
+//! design (they are the naive baselines).
+//!
 //! [`Rider`]: super::replica::Rider
 
 use crate::coordinator::Qos;
@@ -162,6 +171,14 @@ pub struct Candidate {
     /// the amortized `energy_j` above and breaks power-of-two-choices
     /// load ties toward the replica about to flush the fuller batch.
     pub open_fill: usize,
+    /// Is the rider's model artifact already resident on this replica?
+    /// (`true` when no artifact tier is configured, and in the
+    /// affinity-blind posture.)
+    pub model_resident: bool,
+    /// Predicted cold-load cost if the rider lands here (ms / J); zero
+    /// when resident.
+    pub load_ms: f64,
+    pub load_j: f64,
 }
 
 fn min_by_score(candidates: &[Candidate], score: impl Fn(&Candidate) -> f64) -> Candidate {
@@ -236,11 +253,18 @@ impl Router {
                 let lambda =
                     lambda_j_per_ms.unwrap_or(Policy::DEFAULT_LAMBDA_J_PER_MS) * urgency;
                 min_by_score(candidates, |c| {
-                    let mut score = c.energy_j + lambda * (c.queue_wait_ms + c.service_ms);
+                    // A cold load costs joules *and* pushes the start
+                    // out, so affinity falls out of the same price: a
+                    // miss-side replica must beat the warm one by more
+                    // than its load costs.
+                    let mut score = c.energy_j
+                        + c.load_j
+                        + lambda * (c.queue_wait_ms + c.load_ms + c.service_ms);
                     // Feasibility is judged on the backlog floor: an
                     // urgent rider seals through the batch wait, so
-                    // only real queued work can make it miss.
-                    if c.busy_wait_ms + c.service_ms > budget_ms {
+                    // only real queued work (and any cold load) can
+                    // make it miss.
+                    if c.busy_wait_ms + c.load_ms + c.service_ms > budget_ms {
                         score += Policy::MISS_PENALTY_J;
                     }
                     score
@@ -257,14 +281,23 @@ impl Router {
                     }
                     let (a, b) = (candidates[i], candidates[j]);
                     // "less loaded": meeting the rider's deadline
-                    // first, then fewer requests in flight, queue wait
-                    // as the tiebreak between equal depths; among
-                    // equally-loaded candidates prefer the fuller open
-                    // batch — topping it up amortizes its dispatch
-                    // overhead at no extra latency.
+                    // first, then model residency (a warm replica
+                    // skips the cold load entirely), then fewer
+                    // requests in flight, queue wait as the tiebreak
+                    // between equal depths; among equally-loaded
+                    // candidates prefer the fuller open batch —
+                    // topping it up amortizes its dispatch overhead at
+                    // no extra latency.
                     let load = |c: &Candidate| {
-                        let misses = u8::from(c.busy_wait_ms + c.service_ms > budget_ms);
-                        (misses, c.in_flight, c.queue_wait_ms, usize::MAX - c.open_fill)
+                        let misses =
+                            u8::from(c.busy_wait_ms + c.load_ms + c.service_ms > budget_ms);
+                        (
+                            misses,
+                            u8::from(!c.model_resident),
+                            c.in_flight,
+                            c.queue_wait_ms,
+                            usize::MAX - c.open_fill,
+                        )
                     };
                     if load(&b) < load(&a) {
                         b
@@ -292,7 +325,20 @@ mod tests {
             energy_j: energy,
             in_flight: 0,
             open_fill: 0,
+            // warm by default: affinity tests set these explicitly
+            model_resident: true,
+            load_ms: 0.0,
+            load_j: 0.0,
         }
+    }
+
+    /// Mark a candidate cold for the rider's model at the given load
+    /// price.
+    fn cold(mut c: Candidate, load_ms: f64, load_j: f64) -> Candidate {
+        c.model_resident = false;
+        c.load_ms = load_ms;
+        c.load_j = load_j;
+        c
     }
 
     /// The default-class rider at t=0 (pre-QoS behavior).
@@ -406,12 +452,12 @@ mod tests {
         assert_eq!(r.place(&cs, &plain(), 0.0), Some(1));
         // a 500 ms deadline rules the 600 ms replica out: only the
         // fast one can still make it, whatever its joule price
-        let tight = Rider { anchor_ms: 0.0, priority: 2, deadline_at_ms: 500.0 };
+        let tight = Rider { priority: 2, deadline_at_ms: 500.0, ..Rider::plain(0.0) };
         assert_eq!(r.place(&cs, &tight, 0.0), Some(0));
         // when *every* candidate misses, the penalty cancels out and
         // the base score picks the least-bad (at priority 2's doubled
         // λ, the fast replica: 1.0+1.6 < 0.4+2.4)
-        let hopeless = Rider { anchor_ms: 0.0, priority: 2, deadline_at_ms: 100.0 };
+        let hopeless = Rider { priority: 2, deadline_at_ms: 100.0, ..Rider::plain(0.0) };
         assert_eq!(r.place(&cs, &hopeless, 0.0), Some(0));
         // the budget is *remaining* slack: the same 500 ms deadline
         // evaluated at t=450 leaves nobody feasible either
@@ -432,7 +478,7 @@ mod tests {
         // 60 ms budget: only the fast replica can make it, and it must
         // not be scored infeasible for a wait the rider bypasses
         // (1.0 + 0.004*80 = 1.32 beats 0.4 + 0.004*200 + miss penalty)
-        let tight = Rider { anchor_ms: 0.0, priority: 2, deadline_at_ms: 60.0 };
+        let tight = Rider { priority: 2, deadline_at_ms: 60.0, ..Rider::plain(0.0) };
         assert_eq!(r.place(&cs, &tight, 0.0), Some(0));
         // P2C judges feasibility on the same floor
         let mut r = Router::new(Policy::PowerOfTwoChoices, 3);
@@ -450,7 +496,7 @@ mod tests {
         assert_eq!(r.place(&cs, &plain(), 0.0), Some(0));
         // ... but bulk's near-free latency keeps it on the cheap rail:
         // 0.4 + 0.002*0.05*1300 = 0.53 < 1.0 + 0.04
-        let bulk = Rider { anchor_ms: 0.0, priority: 0, deadline_at_ms: f64::INFINITY };
+        let bulk = Rider { priority: 0, ..Rider::plain(0.0) };
         assert_eq!(r.place(&cs, &bulk, 0.0), Some(1));
         // a raised priority pays more for latency: a queue the default
         // class still tolerates (0.4+0.002*650 = 1.7 < 1.8) spills the
@@ -458,8 +504,57 @@ mod tests {
         // 1.0+0.004*400 = 2.6)
         let cs = [cand(0, 0.0, 400.0, 1.0), cand(1, 50.0, 600.0, 0.4)];
         assert_eq!(r.place(&cs, &plain(), 0.0), Some(1), "default tolerates 50 ms");
-        let urgent = Rider { anchor_ms: 0.0, priority: 2, deadline_at_ms: f64::INFINITY };
+        let urgent = Rider { priority: 2, ..Rider::plain(0.0) };
         assert_eq!(r.place(&cs, &urgent, 0.0), Some(0), "priority 2 does not");
+    }
+
+    #[test]
+    fn energy_aware_prefers_the_resident_replica() {
+        let mut r = Router::new(Policy::EnergyAware { lambda_j_per_ms: Some(0.002) }, 0);
+        // equal replicas, but replica 1 would need a 200 ms / 0.12 J
+        // cold load: the warm one wins
+        let warm = cand(0, 0.0, 400.0, 1.0);
+        let cs = [warm, cold(cand(1, 0.0, 400.0, 1.0), 200.0, 0.12)];
+        assert_eq!(r.place(&cs, &plain(), 0.0), Some(0));
+        // ...until the warm replica's queue costs more than the load:
+        // 1.0 + 0.002*(300+400) = 2.4 > 0.12 + 1.0 + 0.002*600 = 2.32
+        let cs = [cand(0, 300.0, 400.0, 1.0), cs[1]];
+        assert_eq!(r.place(&cs, &plain(), 0.0), Some(1));
+    }
+
+    #[test]
+    fn cold_load_counts_against_deadline_feasibility() {
+        let mut r = Router::new(Policy::EnergyAware { lambda_j_per_ms: Some(0.002) }, 0);
+        // the cheap replica is idle but would need a 300 ms load; a
+        // 500 ms deadline over a 300 ms service only fits the warm one
+        let warm = cand(0, 0.0, 400.0, 1.0);
+        let cheap_cold = cold(cand(1, 0.0, 300.0, 0.4), 300.0, 0.1);
+        let cs = [warm, cheap_cold];
+        let tight = Rider { priority: 2, deadline_at_ms: 500.0, ..Rider::plain(0.0) };
+        assert_eq!(r.place(&cs, &tight, 0.0), Some(0), "load makes replica 1 infeasible");
+        // without the deadline the cheap replica is still worth the load
+        assert_eq!(r.place(&cs, &plain(), 0.0), Some(1));
+    }
+
+    #[test]
+    fn power_of_two_prefers_the_resident_sample() {
+        // equal load and wait: residency decides the two-way
+        // comparison, so the warm replica is picked every time
+        let warm = cand(0, 10.0, 1.0, 1.0);
+        let cs = [warm, cold(cand(1, 10.0, 1.0, 1.0), 100.0, 0.1)];
+        let mut r = Router::new(Policy::PowerOfTwoChoices, 3);
+        for _ in 0..10 {
+            assert_eq!(r.place(&cs, &plain(), 0.0), Some(0));
+        }
+        // ...but a deadline only the cold replica can meet outranks it
+        let slow_warm = cand(0, 0.0, 900.0, 1.0);
+        let fast_cold = cold(cand(1, 0.0, 200.0, 1.0), 100.0, 0.1);
+        let cs = [slow_warm, fast_cold];
+        let tight = Rider { priority: 2, deadline_at_ms: 600.0, ..Rider::plain(0.0) };
+        let mut r = Router::new(Policy::PowerOfTwoChoices, 3);
+        for _ in 0..10 {
+            assert_eq!(r.place(&cs, &tight, 0.0), Some(1));
+        }
     }
 
     #[test]
@@ -489,7 +584,7 @@ mod tests {
         a.in_flight = 0;
         b.in_flight = 2;
         let cs = [a, b];
-        let tight = Rider { anchor_ms: 0.0, priority: 2, deadline_at_ms: 600.0 };
+        let tight = Rider { priority: 2, deadline_at_ms: 600.0, ..Rider::plain(0.0) };
         let mut r = Router::new(Policy::PowerOfTwoChoices, 3);
         for _ in 0..10 {
             assert_eq!(r.place(&cs, &tight, 0.0), Some(1));

@@ -29,8 +29,19 @@
 //!   its own optimal granularity plan (Table I), hence its own latency
 //!   (Table VI) and joules per image (Table V), so *where* a request
 //!   runs changes both how fast and how expensively it is answered.
-//!   Every later scaling layer (sharding, caching, multi-backend) plugs
-//!   into this dispatch point.
+//!   The **model-artifact tier** adds a third placement axis: a
+//!   [`ModelCatalog`](runtime::artifacts::ModelCatalog) of named
+//!   weight artifacts (sharded per macro layer, byte sizes derived
+//!   from the graph), a per-replica LRU
+//!   [`ArtifactCache`](fleet::ArtifactCache) with a byte budget (a
+//!   cold load costs shard-bytes / device-transfer-rate in virtual
+//!   time and sequential-rail joules), affinity-aware routing (the
+//!   cold-load price rides in the placement score), and hot-model
+//!   prewarm on autoscaler provisioning — so *which replica has the
+//!   model* is priced next to speed and energy, instead of assuming
+//!   weights are already resident.  Every later scaling layer
+//!   (multi-backend, predictive scaling) plugs into this dispatch
+//!   point.
 
 pub mod config;
 pub mod convnet;

@@ -49,11 +49,11 @@ COMMANDS:
                                               [--requests N] [--rate R] [--seed S]
                                               [--budget-j J] [--burst]
                                               [--batch B] [--batch-wait-ms W]
-                                              [--autoscale KV]
+                                              [--autoscale KV] [--cache-mb MB]
   serve       start the TCP JSON-lines server [--addr HOST:PORT] [--config FILE]
                                               [--fleet SPEC] [--fleet-policy P]
                                               [--fleet-batch B] [--fleet-batch-wait-ms W]
-                                              [--fleet-autoscale KV]
+                                              [--fleet-autoscale KV] [--fleet-cache MB]
   info        artifact & model summary
 
 Fleet specs are comma-separated [COUNTx]DEVICE[@fp32|fp16] atoms, e.g.
@@ -65,6 +65,12 @@ explicitly (otherwise an autoscale SLO derives it).  Requests carry a
 QoS class on the fleet path: "priority" (0 = bulk, default 1) and
 "deadline_ms" on the serve wire protocol — priority-aware shedding,
 deadline-aware placement, early batch flush, expiry at dequeue.
+
+--fleet-cache / --cache-mb (also MCN_FLEET_CACHE) attach the
+model-artifact tier: MB of per-replica artifact cache over the default
+two-model catalog (squeezenet + detector).  Requests pick a model with
+"model" on the serve wire protocol; cold loads cost virtual time and
+joules and placement becomes affinity-aware.
 
 --fleet-autoscale / --autoscale attach the closed-loop autoscaler
 (also via MCN_FLEET_AUTOSCALE): comma-separated key=value pairs, pool
@@ -105,8 +111,15 @@ fn app_config(args: &Args) -> Result<AppConfig> {
         let budget = args.get_f64_opt("fleet-budget-j").map_err(|e| anyhow::anyhow!(e))?;
         let batch = args.get_usize_opt("fleet-batch").map_err(|e| anyhow::anyhow!(e))?;
         let wait = args.get_f64_opt("fleet-batch-wait-ms").map_err(|e| anyhow::anyhow!(e))?;
-        cfg.fleet =
-            Some(config::fleet_from(spec, args.get("fleet-policy"), budget, batch, wait)?);
+        let cache = args.get_f64_opt("fleet-cache").map_err(|e| anyhow::anyhow!(e))?;
+        cfg.fleet = Some(config::fleet_from(
+            spec,
+            args.get("fleet-policy"),
+            budget,
+            batch,
+            wait,
+            cache,
+        )?);
     }
     if let Some(kv) = args.get("fleet-autoscale") {
         let autoscale = AutoscaleConfig::parse(kv).map_err(|e| anyhow::anyhow!(e))?;
@@ -268,8 +281,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed", 77).map_err(|e| anyhow::anyhow!(e))?;
     let batch = args.get_usize_opt("batch").map_err(|e| anyhow::anyhow!(e))?;
     let wait = args.get_f64_opt("batch-wait-ms").map_err(|e| anyhow::anyhow!(e))?;
-    let mut cfg =
-        config::fleet_from(spec, args.get("policy"), budget, batch, wait)?.with_seed(seed);
+    let cache = args.get_f64_opt("cache-mb").map_err(|e| anyhow::anyhow!(e))?;
+    let mut cfg = config::fleet_from(spec, args.get("policy"), budget, batch, wait, cache)?
+        .with_seed(seed);
     if let Some(kv) = args.get("autoscale") {
         let autoscale = AutoscaleConfig::parse(kv).map_err(|e| anyhow::anyhow!(e))?;
         cfg = cfg.with_autoscale(autoscale);

@@ -11,7 +11,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::graph::SqueezeNet;
+use super::graph::{MacroLayer, SqueezeNet};
 
 const MAGIC: &[u8; 4] = b"MCNW";
 const VERSION: u32 = 1;
@@ -149,6 +149,41 @@ impl WeightStore {
     }
 }
 
+/// One weight shard of a model artifact: every parameter tensor of one
+/// macro layer (Conv1, Fire2..Fire9, Conv10), sized in f32 bytes.
+/// Sharding at macro-layer granularity mirrors the paper's reporting
+/// unit (Table IV) and keeps shard count small enough that per-shard
+/// transfer accounting stays legible.
+#[derive(Debug, Clone)]
+pub struct WeightShard {
+    /// Macro-layer label, e.g. `Conv 1`, `Fire 5`.
+    pub name: String,
+    /// Scalar parameter count (weights + biases).
+    pub params: usize,
+    /// f32 bytes on the wire / in cache.
+    pub bytes: u64,
+}
+
+/// Shard a network's parameters at macro-layer granularity.  The byte
+/// sizes derive from the graph itself (`weight_params` + biases, 4
+/// bytes each), so the shard plan always agrees with
+/// [`SqueezeNet::total_params`]; the artifact cache tier
+/// ([`crate::runtime::artifacts::ModelCatalog`]) sums them into a
+/// per-model load size.
+pub fn shard_plan(net: &SqueezeNet) -> Vec<WeightShard> {
+    MacroLayer::table_iv_order()
+        .into_iter()
+        .filter_map(|ml| {
+            let params: usize =
+                net.convs_of(ml).iter().map(|c| c.weight_params() + c.cout).sum();
+            if params == 0 {
+                return None;
+            }
+            Some(WeightShard { name: ml.label(), params, bytes: (params * 4) as u64 })
+        })
+        .collect()
+}
+
 fn read_u8(r: &mut &[u8]) -> Result<u8> {
     let mut b = [0u8; 1];
     r.read_exact(&mut b).context("weights: truncated u8")?;
@@ -215,6 +250,25 @@ mod tests {
         let mut bytes = encode(&[("x", vec![4], vec![0.0; 4])]);
         bytes.truncate(bytes.len() - 4);
         assert!(WeightStore::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn shard_plan_covers_every_parameter_once() {
+        let net = SqueezeNet::v1_0();
+        let shards = shard_plan(&net);
+        // Conv1 + Fire2..Fire9 + Conv10 = 10 macro layers with params.
+        assert_eq!(shards.len(), 10);
+        assert_eq!(shards[0].name, "Conv 1");
+        assert_eq!(shards[9].name, "Conv 10");
+        let total: usize = shards.iter().map(|s| s.params).sum();
+        assert_eq!(total, net.total_params(), "shards must cover every parameter exactly");
+        for s in &shards {
+            assert_eq!(s.bytes, (s.params * 4) as u64, "{}: f32 bytes", s.name);
+            assert!(s.params > 0);
+        }
+        // conv10 (512 -> 1000 channels, 1x1) is the biggest shard.
+        let max = shards.iter().max_by_key(|s| s.bytes).unwrap();
+        assert_eq!(max.name, "Conv 10");
     }
 
     #[test]

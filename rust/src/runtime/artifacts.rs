@@ -1,11 +1,16 @@
 //! `artifacts/manifest.json` parsing and validation — the contract
-//! between the Python compile path and the Rust runtime.
+//! between the Python compile path and the Rust runtime — plus the
+//! [`ModelCatalog`]: named weight artifacts (sharded per macro layer
+//! via [`shard_plan`](crate::model::weights::shard_plan)) that the
+//! fleet's replica-local artifact cache tier loads, evicts, and
+//! routes on.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 use crate::model::graph::SqueezeNet;
+use crate::model::weights::{shard_plan, WeightShard};
 use crate::util::json::Json;
 
 /// One AOT-compiled artifact as described by the manifest.
@@ -189,6 +194,134 @@ impl Manifest {
     }
 }
 
+/// Index of a model in a [`ModelCatalog`].  `Copy` so it rides on
+/// fleet `Rider`s and trace entries; id 0 ([`ModelId::DEFAULT`]) is
+/// always the catalog's default model, and a fleet with no catalog
+/// treats every request as the default model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ModelId(pub u16);
+
+impl ModelId {
+    /// The catalog's first (default) model — what every request serves
+    /// unless it names another model on the wire or in a trace.
+    pub const DEFAULT: ModelId = ModelId(0);
+
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// One named weight artifact: the model's parameters sharded per macro
+/// layer, with byte sizes derived from the graph.  The artifact tier
+/// prices a cold start as `total_bytes / device transfer rate` —
+/// residency is a new placement axis, orthogonal to the per-device
+/// speed/energy axes (every catalog model serves at the replica's
+/// autotuned SqueezeNet cost; only the artifact footprint differs).
+#[derive(Debug, Clone)]
+pub struct ModelArtifact {
+    pub name: String,
+    pub shards: Vec<WeightShard>,
+    /// Sum of shard bytes — the load/cache unit.
+    pub total_bytes: u64,
+}
+
+impl ModelArtifact {
+    /// Build an artifact from a network graph (shards per macro layer).
+    pub fn from_network(name: &str, net: &SqueezeNet) -> ModelArtifact {
+        let shards = shard_plan(net);
+        let total_bytes = shards.iter().map(|s| s.bytes).sum();
+        ModelArtifact { name: name.to_string(), shards, total_bytes }
+    }
+
+    /// A synthetic stand-in for a heavier model family: the same shard
+    /// structure with every shard's footprint scaled by `factor`
+    /// (e.g. 2.0 ≈ a wider variant with twice the weight bytes).  Lets
+    /// multi-model experiments stress the cache tier without a second
+    /// real graph in the repo.
+    pub fn scaled(name: &str, net: &SqueezeNet, factor: f64) -> ModelArtifact {
+        assert!(factor.is_finite() && factor > 0.0, "scale factor must be positive");
+        let mut a = Self::from_network(name, net);
+        for s in &mut a.shards {
+            s.bytes = (s.bytes as f64 * factor).ceil() as u64;
+            s.params = (s.params as f64 * factor).ceil() as usize;
+        }
+        a.total_bytes = a.shards.iter().map(|s| s.bytes).sum();
+        a
+    }
+}
+
+/// Named weight artifacts the fleet's artifact tier can serve.  Index
+/// 0 is the default model; `resolve` maps wire/trace names to ids.
+#[derive(Debug, Clone)]
+pub struct ModelCatalog {
+    models: Vec<ModelArtifact>,
+}
+
+impl ModelCatalog {
+    /// A catalog with one default model.
+    pub fn new(default_model: ModelArtifact) -> ModelCatalog {
+        ModelCatalog { models: vec![default_model] }
+    }
+
+    /// The single-model catalog: SqueezeNet v1.0 as `squeezenet`.
+    pub fn squeezenet() -> ModelCatalog {
+        Self::new(ModelArtifact::from_network("squeezenet", &SqueezeNet::v1_0()))
+    }
+
+    /// The default multi-model zoo: `squeezenet` (≈5 MB of weights)
+    /// plus `detector`, a synthetic 2x-footprint family (≈10 MB) — the
+    /// smallest catalog where replica caches must choose what to keep.
+    pub fn two_model_zoo() -> ModelCatalog {
+        let net = SqueezeNet::v1_0();
+        let mut c = Self::new(ModelArtifact::from_network("squeezenet", &net));
+        c.register(ModelArtifact::scaled("detector", &net, 2.0));
+        c
+    }
+
+    /// Add a model; returns its id.
+    pub fn register(&mut self, artifact: ModelArtifact) -> ModelId {
+        assert!(self.models.len() < u16::MAX as usize, "model catalog full");
+        assert!(
+            self.resolve(&artifact.name).is_none(),
+            "duplicate model name '{}'",
+            artifact.name
+        );
+        let id = ModelId(self.models.len() as u16);
+        self.models.push(artifact);
+        id
+    }
+
+    /// Look a model up by name.
+    pub fn resolve(&self, name: &str) -> Option<ModelId> {
+        self.models
+            .iter()
+            .position(|m| m.name == name)
+            .map(|i| ModelId(i as u16))
+    }
+
+    /// All models, in id order.
+    pub fn models(&self) -> &[ModelArtifact] {
+        &self.models
+    }
+
+    /// Model by id (`None` for an id outside this catalog).
+    pub fn get(&self, id: ModelId) -> Option<&ModelArtifact> {
+        self.models.get(id.index())
+    }
+
+    pub fn contains(&self, id: ModelId) -> bool {
+        id.index() < self.models.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -229,5 +362,37 @@ mod tests {
         let m = Manifest::parse(Path::new("."), SAMPLE).unwrap();
         let net = SqueezeNet::v1_0();
         assert!(m.validate_against(&net).is_err());
+    }
+
+    #[test]
+    fn model_artifact_sizes_derive_from_the_graph() {
+        let net = SqueezeNet::v1_0();
+        let a = ModelArtifact::from_network("squeezenet", &net);
+        assert_eq!(a.shards.len(), 10);
+        // 1_248_424 params x 4 bytes
+        assert_eq!(a.total_bytes, (net.total_params() * 4) as u64);
+        assert!(a.total_bytes > 4_000_000 && a.total_bytes < 6_000_000);
+        // the scaled stand-in doubles the footprint (within ceil slack)
+        let b = ModelArtifact::scaled("detector", &net, 2.0);
+        assert!(b.total_bytes >= 2 * a.total_bytes);
+        assert!(b.total_bytes < 2 * a.total_bytes + a.shards.len() as u64);
+    }
+
+    #[test]
+    fn catalog_registers_and_resolves() {
+        let mut c = ModelCatalog::squeezenet();
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.resolve("squeezenet"), Some(ModelId::DEFAULT));
+        assert_eq!(c.resolve("detector"), None);
+        let id = c.register(ModelArtifact::scaled("detector", &SqueezeNet::v1_0(), 2.0));
+        assert_eq!(id, ModelId(1));
+        assert_eq!(c.resolve("detector"), Some(id));
+        assert!(c.contains(id));
+        assert!(!c.contains(ModelId(7)));
+        assert_eq!(c.get(id).unwrap().name, "detector");
+        assert!(c.get(ModelId(7)).is_none());
+        let zoo = ModelCatalog::two_model_zoo();
+        assert_eq!(zoo.len(), 2);
+        assert!(zoo.models()[1].total_bytes > zoo.models()[0].total_bytes);
     }
 }

@@ -10,5 +10,5 @@
 pub mod artifacts;
 pub mod executor;
 
-pub use artifacts::{ArtifactInfo, Manifest};
+pub use artifacts::{ArtifactInfo, Manifest, ModelArtifact, ModelCatalog, ModelId};
 pub use executor::{KernelExecutor, ModelExecutor, RuntimeEngine};
