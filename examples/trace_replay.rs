@@ -46,10 +46,19 @@ fn main() -> Result<()> {
     if let Some(spec) = fleet_spec {
         let batch = args.get_usize_opt("fleet-batch").map_err(|e| anyhow::anyhow!(e))?;
         let wait = args.get_f64_opt("fleet-batch-wait-ms").map_err(|e| anyhow::anyhow!(e))?;
-        let cfg = config::fleet_from(spec, args.get("policy"), None, batch, wait, None)?;
+        let trace_out = args.get("trace-out");
+        let mut cfg = config::fleet_from(spec, args.get("policy"), None, batch, wait, None)?;
+        if trace_out.is_some() {
+            // Sample every arrival: a replay exists to be inspected.
+            cfg = cfg.with_trace_sampling(1);
+        }
         let fleet = Fleet::new(cfg);
         let report = fleet::run_trace(&fleet, &trace, &[]);
         println!("\nfleet path ({spec}):\n{}", report.render());
+        if let Some(path) = trace_out {
+            std::fs::write(path, format!("{}\n", fleet.trace_chrome_json()))?;
+            println!("wrote request spans to {path} (chrome://tracing / Perfetto)");
+        }
     }
 
     // Live path: real inference through the PJRT runtime.

@@ -19,7 +19,9 @@
 //! surge rate, and the deadline budget all derive from the device
 //! models at runtime, so the claims track the simulator instead of
 //! hard-coded milliseconds.  All numbers are deterministic virtual
-//! time and feed the CI regression gate via `BENCH_OUT_DIR`.
+//! time; the scenario runs once per seed in [`bench_seeds`] (claim
+//! asserts on the primary seed, every seed a distribution sample) and
+//! feeds the CI regression gate via `BENCH_OUT_DIR`.
 //!
 //! The "blind" fleet is the same fleet with
 //! [`FleetConfig::with_qos_blind`]: QoS is still *accounted* (miss
@@ -32,7 +34,9 @@ use mobile_convnet::fleet::{
     run_trace, Fleet, FleetBatch, FleetConfig, FleetReport, Policy, Replica, ReplicaSpec,
 };
 use mobile_convnet::simulator::device::{DeviceProfile, Precision};
-use mobile_convnet::util::bench::{write_json_summary, Bencher};
+use mobile_convnet::util::bench::{
+    bench_seeds, write_json_distributions, Bencher, PRIMARY_BENCH_SEED,
+};
 
 /// Fraction of arrivals in the interactive class.
 const INTERACTIVE_FRAC: f64 = 0.2;
@@ -43,6 +47,122 @@ const INTERACTIVE_PRIORITY: u8 = 2;
 fn price(cache: &PlanCache, device: &DeviceProfile) -> Replica {
     let spec = ReplicaSpec::new(device.clone(), Precision::Imprecise);
     Replica::new(0, spec, None, FleetBatch::single(), cache)
+}
+
+/// Seed-independent scenario parameters, derived from the device zoo.
+struct Scenario {
+    spec: String,
+    calm_rps: f64,
+    surge_rps: f64,
+    deadline_ms: f64,
+    capacity_rps: f64,
+}
+
+struct SeedMetrics {
+    qos_hi_p95_ms: f64,
+    qos_deadline_miss_rate: f64,
+    qos_total_j: f64,
+    qos_over_blind_j: f64,
+    qos_hi_p95_over_blind: f64,
+}
+
+fn run_seed(sc: &Scenario, seed: u64) -> SeedMetrics {
+    let primary = seed == PRIMARY_BENCH_SEED;
+    let trace = Trace::phases(
+        &[
+            (30, Arrival::Poisson { rate_per_s: sc.calm_rps }),
+            (150, Arrival::Poisson { rate_per_s: sc.surge_rps }),
+            (60, Arrival::Poisson { rate_per_s: sc.calm_rps }),
+        ],
+        0.0,
+        seed,
+    )
+    .with_base_qos(Qos::bulk())
+    .with_qos_mix(INTERACTIVE_FRAC, Qos::interactive(INTERACTIVE_PRIORITY, sc.deadline_ms));
+    let n = trace.entries.len() as u64;
+    let hi = trace.entries.iter().filter(|e| e.qos.is_interactive()).count();
+    if primary {
+        println!(
+            "fleet '{}' (capacity ~{:.1} req/s), {n} arrivals \
+             ({:.1} -> {:.1} -> {:.1} req/s), {hi} interactive \
+             with {:.0} ms deadlines, seed {seed}\n",
+            sc.spec, sc.capacity_rps, sc.calm_rps, sc.surge_rps, sc.calm_rps, sc.deadline_ms,
+        );
+    }
+
+    let policy = Policy::EnergyAware { lambda_j_per_ms: None };
+    let run = |blind: bool| -> FleetReport {
+        let mut cfg = FleetConfig::parse_spec(&sc.spec, policy).unwrap().with_seed(seed);
+        if blind {
+            cfg = cfg.with_qos_blind();
+        }
+        let report = run_trace(&Fleet::new(cfg), &trace, &[]);
+        if primary {
+            println!(
+                "{}:\n{}",
+                if blind { "priority-blind" } else { "qos-aware" },
+                report.render()
+            );
+        }
+        report
+    };
+    let qos = run(false);
+    let blind = run(true);
+
+    // Conservation on both sides (the extended invariant) holds on
+    // every seed.
+    assert_eq!(
+        qos.completed + qos.shed + qos.lost + qos.expired,
+        n,
+        "qos conservation (seed {seed}): {qos:?}"
+    );
+    assert_eq!(blind.completed, n, "the blind fleet serves everything, however late");
+    assert_eq!(blind.expired, 0);
+    assert_eq!(qos.shed, 0, "no gate in this bench: nothing sheds at dispatch");
+    assert_eq!(qos.deadline_riders, hi as u64);
+    assert_eq!(blind.deadline_riders, hi as u64, "blind still *accounts* deadlines");
+
+    let qos_hi_p95 = qos.p95_hi_ms.expect("interactive completions exist");
+    let blind_hi_p95 = blind.p95_hi_ms.expect("interactive completions exist");
+    let qos_miss = qos.deadline_miss_rate().expect("deadline riders exist");
+    let blind_miss = blind.deadline_miss_rate().expect("deadline riders exist");
+
+    if primary {
+        // The tentpole claims, all three at once.
+        assert!(
+            qos_hi_p95 < blind_hi_p95,
+            "interactive p95 must strictly improve: {qos_hi_p95:.0} ms vs blind {blind_hi_p95:.0} ms"
+        );
+        assert!(
+            qos_miss < blind_miss,
+            "deadline-miss rate must strictly improve: {qos_miss:.3} vs blind {blind_miss:.3}"
+        );
+        assert!(
+            qos.total_energy_j <= blind.total_energy_j,
+            "QoS must not cost joules: {:.1} J vs blind {:.1} J",
+            qos.total_energy_j,
+            blind.total_energy_j
+        );
+        // The blind backlog genuinely violated the interactive SLO —
+        // the contrast is real congestion, not noise.
+        assert!(
+            blind_miss > 0.2,
+            "the surge should make the blind fleet miss hard (got {blind_miss:.3})"
+        );
+        println!(
+            "claim check: hi p95 {qos_hi_p95:.0} ms < {blind_hi_p95:.0} ms, miss rate \
+             {qos_miss:.3} < {blind_miss:.3}, energy {:.1} J <= {:.1} J ... OK",
+            qos.total_energy_j, blind.total_energy_j
+        );
+    }
+
+    SeedMetrics {
+        qos_hi_p95_ms: qos_hi_p95,
+        qos_deadline_miss_rate: qos_miss,
+        qos_total_j: qos.total_energy_j,
+        qos_over_blind_j: qos.total_energy_j / blind.total_energy_j,
+        qos_hi_p95_over_blind: qos_hi_p95 / blind_hi_p95,
+    }
 }
 
 fn main() {
@@ -81,107 +201,51 @@ fn main() {
 
     // 1x fast + 2x cheap; rates derived from the fleet's capacity so
     // the surge genuinely overloads it whatever the model constants.
-    let spec = format!("1x{}@fp16,2x{}@fp16", fast.0.id, cheap.0.id);
     let capacity_rps = 1e3 / fast_ms + 2e3 / cheap_ms;
-    let calm_rps = 0.25 * capacity_rps;
-    let surge_rps = 1.6 * capacity_rps;
-    // The interactive latency budget: generous next to the fast
-    // replica's service, tight next to a congested backlog.
-    let deadline_ms = 2.5 * cheap_ms;
-    let trace = Trace::phases(
-        &[
-            (30, Arrival::Poisson { rate_per_s: calm_rps }),
-            (150, Arrival::Poisson { rate_per_s: surge_rps }),
-            (60, Arrival::Poisson { rate_per_s: calm_rps }),
-        ],
-        0.0,
-        42,
-    )
-    .with_base_qos(Qos::bulk())
-    .with_qos_mix(INTERACTIVE_FRAC, Qos::interactive(INTERACTIVE_PRIORITY, deadline_ms));
-    let n = trace.entries.len() as u64;
-    let hi = trace.entries.iter().filter(|e| e.qos.is_interactive()).count();
-    println!(
-        "fleet '{spec}' (capacity ~{capacity_rps:.1} req/s), {n} arrivals \
-         ({calm_rps:.1} -> {surge_rps:.1} -> {calm_rps:.1} req/s), {hi} interactive \
-         with {deadline_ms:.0} ms deadlines\n",
-    );
-
-    let policy = Policy::EnergyAware { lambda_j_per_ms: None };
-    let run = |blind: bool| -> FleetReport {
-        let mut cfg = FleetConfig::parse_spec(&spec, policy).unwrap().with_seed(42);
-        if blind {
-            cfg = cfg.with_qos_blind();
-        }
-        let report = run_trace(&Fleet::new(cfg), &trace, &[]);
-        println!("{}:\n{}", if blind { "priority-blind" } else { "qos-aware" }, report.render());
-        report
+    let sc = Scenario {
+        spec: format!("1x{}@fp16,2x{}@fp16", fast.0.id, cheap.0.id),
+        calm_rps: 0.25 * capacity_rps,
+        surge_rps: 1.6 * capacity_rps,
+        // The interactive latency budget: generous next to the fast
+        // replica's service, tight next to a congested backlog.
+        deadline_ms: 2.5 * cheap_ms,
+        capacity_rps,
     };
-    let qos = run(false);
-    let blind = run(true);
 
-    // Conservation on both sides (the extended invariant).
-    assert_eq!(
-        qos.completed + qos.shed + qos.lost + qos.expired,
-        n,
-        "qos conservation: {qos:?}"
-    );
-    assert_eq!(blind.completed, n, "the blind fleet serves everything, however late");
-    assert_eq!(blind.expired, 0);
-    assert_eq!(qos.shed, 0, "no gate in this bench: nothing sheds at dispatch");
-    assert_eq!(qos.deadline_riders, hi as u64);
-    assert_eq!(blind.deadline_riders, hi as u64, "blind still *accounts* deadlines");
+    let mut hi_p95 = Vec::new();
+    let mut miss = Vec::new();
+    let mut total_j = Vec::new();
+    let mut over_blind_j = Vec::new();
+    let mut p95_over_blind = Vec::new();
+    for seed in bench_seeds() {
+        let m = run_seed(&sc, seed);
+        hi_p95.push(m.qos_hi_p95_ms);
+        miss.push(m.qos_deadline_miss_rate);
+        total_j.push(m.qos_total_j);
+        over_blind_j.push(m.qos_over_blind_j);
+        p95_over_blind.push(m.qos_hi_p95_over_blind);
+    }
+    println!("\ncollected {} seed sample(s) per metric", hi_p95.len());
 
-    let qos_hi_p95 = qos.p95_hi_ms.expect("interactive completions exist");
-    let blind_hi_p95 = blind.p95_hi_ms.expect("interactive completions exist");
-    let qos_miss = qos.deadline_miss_rate().expect("deadline riders exist");
-    let blind_miss = blind.deadline_miss_rate().expect("deadline riders exist");
-
-    // The tentpole claims, all three at once.
-    assert!(
-        qos_hi_p95 < blind_hi_p95,
-        "interactive p95 must strictly improve: {qos_hi_p95:.0} ms vs blind {blind_hi_p95:.0} ms"
-    );
-    assert!(
-        qos_miss < blind_miss,
-        "deadline-miss rate must strictly improve: {qos_miss:.3} vs blind {blind_miss:.3}"
-    );
-    assert!(
-        qos.total_energy_j <= blind.total_energy_j,
-        "QoS must not cost joules: {:.1} J vs blind {:.1} J",
-        qos.total_energy_j,
-        blind.total_energy_j
-    );
-    // The blind backlog genuinely violated the interactive SLO — the
-    // contrast is real congestion, not noise.
-    assert!(
-        blind_miss > 0.2,
-        "the surge should make the blind fleet miss hard (got {blind_miss:.3})"
-    );
-    println!(
-        "claim check: hi p95 {qos_hi_p95:.0} ms < {blind_hi_p95:.0} ms, miss rate \
-         {qos_miss:.3} < {blind_miss:.3}, energy {:.1} J <= {:.1} J ... OK",
-        qos.total_energy_j, blind.total_energy_j
-    );
-
-    // Deterministic metrics for the CI regression gate (lower =
-    // better).  Ratios vs the blind baseline gate the *margin*, not
-    // just the absolute numbers.
-    write_json_summary(
+    // Deterministic metric distributions for the CI regression gate
+    // (lower = better).  Ratios vs the blind baseline gate the
+    // *margin*, not just the absolute numbers.
+    write_json_distributions(
         "fleet_qos",
         &[
-            ("qos_hi_p95_ms", qos_hi_p95),
-            ("qos_deadline_miss_rate", qos_miss),
-            ("qos_total_j", qos.total_energy_j),
-            ("qos_over_blind_j", qos.total_energy_j / blind.total_energy_j),
-            ("qos_hi_p95_over_blind", qos_hi_p95 / blind_hi_p95),
+            ("qos_hi_p95_ms", &hi_p95),
+            ("qos_deadline_miss_rate", &miss),
+            ("qos_total_j", &total_j),
+            ("qos_over_blind_j", &over_blind_j),
+            ("qos_hi_p95_over_blind", &p95_over_blind),
         ],
     )
     .expect("bench summary write");
 
     // Hot path: QoS dispatch cost (victimless, gate-free).
+    let policy = Policy::EnergyAware { lambda_j_per_ms: None };
     let mut b = Bencher::from_env();
-    let fleet = Fleet::new(FleetConfig::parse_spec(&spec, policy).unwrap());
+    let fleet = Fleet::new(FleetConfig::parse_spec(&sc.spec, policy).unwrap());
     let mut t = 0.0f64;
     b.bench("fleet/dispatch_qos_interactive", || {
         t += 10.0;

@@ -1,18 +1,35 @@
-//! CI bench-regression gate.
+//! CI bench-regression gate, distribution-aware.
 //!
-//! The claim-check benches publish deterministic virtual-time metrics
-//! (simulated p95 latency, joules) as `$BENCH_OUT_DIR/<bench>.json`
-//! via [`write_json_summary`].  This binary compares them against the
-//! checked-in `BENCH_BASELINE.json` and fails (exit 1) when any gated
-//! metric regressed by more than the baseline's `tolerance_frac`
-//! (default 10%).  Every gated metric is lower-is-better.
+//! The claim-check benches run every seed in
+//! [`bench_seeds`](mobile_convnet::util::bench::bench_seeds) and
+//! publish each deterministic virtual-time metric (simulated p95
+//! latency, joules) as a distribution — median, IQR, min/max over the
+//! per-seed samples — into `$BENCH_OUT_DIR/<bench>.json` via
+//! [`write_json_distributions`].  This binary compares **medians**
+//! against the checked-in `BENCH_BASELINE.json` and fails (exit 1)
+//! when any gated metric's median regressed past the effective
+//! tolerance:
+//!
+//! ```text
+//! tol_eff = tolerance_frac + max(baseline.iqr, current.iqr) / baseline.median
+//! ```
+//!
+//! i.e. the baseline's flat tolerance widened by the observed
+//! seed-to-seed spread — a noisy metric does not flap the gate, a
+//! tight metric stays tightly gated.  Every gated metric is
+//! lower-is-better.  Relative deltas are printed on every row, pass or
+//! fail, so CI logs double as a perf report; a baseline whose ceiling
+//! sits more than 50% above the measured median is flagged `LOOSE`
+//! (tighten it with `--update`).
 //!
 //! The metric *name sets* must match exactly: a baseline metric the
 //! benches no longer emit fails as `MISSING`, and a bench metric the
 //! baseline does not gate fails as `NEW` (with the full name diff
 //! printed) — a silently un-gated metric is exactly how a regression
 //! slips past CI.  After adding or renaming metrics, refresh with
-//! `--update` and commit the result.
+//! `--update` and commit the result; the refreshed baseline stores
+//! full distribution objects (legacy bare-number baselines still
+//! parse, as zero-spread points).
 //!
 //! ```sh
 //! BENCH_OUT_DIR=bench_out cargo bench --bench fleet_autoscale
@@ -20,37 +37,48 @@
 //! cargo run --bin bench_gate -- --update   # rewrite the baseline from bench_out
 //! ```
 //!
-//! After an intentional perf change, tighten the baseline with
-//! `--update` and commit the result.
-//!
-//! [`write_json_summary`]: mobile_convnet::util::bench::write_json_summary
+//! [`write_json_distributions`]: mobile_convnet::util::bench::write_json_distributions
 
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::process::ExitCode;
 
+use mobile_convnet::util::bench::{read_baseline, read_bench_out, MetricDist};
 use mobile_convnet::util::cli::Args;
 use mobile_convnet::util::json::Json;
 
 const DEFAULT_TOLERANCE_FRAC: f64 = 0.10;
+/// A baseline median more than this factor above the measured median
+/// is a stale ceiling that would hide a real regression.
+const LOOSE_CEILING_FACTOR: f64 = 1.5;
 
-/// Outcome of gating one metric.
+/// Outcome of gating one metric: `(delta_frac, tol_eff)`.
 #[derive(Debug, Clone, PartialEq)]
 enum Verdict {
-    /// Within tolerance of the baseline (delta fraction attached).
-    Ok(f64),
-    /// Regressed beyond tolerance (delta fraction attached).
-    Regressed(f64),
+    /// Median within the effective tolerance (or improved).
+    Ok(f64, f64),
+    /// Median regressed beyond the effective tolerance.
+    Regressed(f64, f64),
     /// Present in the baseline but absent from the bench output.
     Missing,
+}
+
+/// Spread-aware effective tolerance for one metric pair: the flat
+/// tolerance widened by the larger of the two IQRs, relative to the
+/// baseline median.
+fn effective_tolerance(base: &MetricDist, cur: &MetricDist, tolerance_frac: f64) -> f64 {
+    if base.median.abs() < 1e-12 {
+        return tolerance_frac;
+    }
+    tolerance_frac + base.iqr.max(cur.iqr) / base.median.abs()
 }
 
 /// Metric names present on one side only: `(missing_from_current,
 /// missing_from_baseline)`.  Either kind fails the gate — the baseline
 /// and the benches must agree on exactly which metrics are gated.
 fn name_diff(
-    baseline: &BTreeMap<String, f64>,
-    current: &BTreeMap<String, f64>,
+    baseline: &BTreeMap<String, MetricDist>,
+    current: &BTreeMap<String, MetricDist>,
 ) -> (Vec<String>, Vec<String>) {
     let missing_from_current: Vec<String> =
         baseline.keys().filter(|k| !current.contains_key(*k)).cloned().collect();
@@ -59,26 +87,31 @@ fn name_diff(
     (missing_from_current, missing_from_baseline)
 }
 
-/// Compare current metrics against the baseline.  Returns one row per
+/// Compare current medians against the baseline.  Returns one row per
 /// *baseline* metric; metrics only present in the current run are
 /// reported by [`name_diff`] and fail the gate separately.
 fn gate(
-    baseline: &BTreeMap<String, f64>,
-    current: &BTreeMap<String, f64>,
+    baseline: &BTreeMap<String, MetricDist>,
+    current: &BTreeMap<String, MetricDist>,
     tolerance_frac: f64,
 ) -> Vec<(String, Verdict)> {
     baseline
         .iter()
-        .map(|(key, &base)| {
+        .map(|(key, base)| {
             let verdict = match current.get(key) {
                 None => Verdict::Missing,
-                Some(&now) => {
+                Some(cur) => {
                     // lower-is-better; guard the degenerate zero base
-                    let delta = if base.abs() < 1e-12 { now } else { (now - base) / base };
-                    if delta > tolerance_frac {
-                        Verdict::Regressed(delta)
+                    let delta = if base.median.abs() < 1e-12 {
+                        cur.median
                     } else {
-                        Verdict::Ok(delta)
+                        (cur.median - base.median) / base.median
+                    };
+                    let tol = effective_tolerance(base, cur, tolerance_frac);
+                    if delta > tol {
+                        Verdict::Regressed(delta, tol)
+                    } else {
+                        Verdict::Ok(delta, tol)
                     }
                 }
             };
@@ -87,67 +120,11 @@ fn gate(
         .collect()
 }
 
-/// Flatten one bench summary (`{"bench": ..., "metrics": {...}}`) into
-/// `bench/metric -> value` entries.
-fn collect_summary(v: &Json, into: &mut BTreeMap<String, f64>) -> Result<(), String> {
-    let bench = v
-        .get("bench")
-        .and_then(Json::as_str)
-        .ok_or("summary missing 'bench'")?
-        .to_string();
-    let metrics = v.get("metrics").ok_or("summary missing 'metrics'")?;
-    let Json::Object(pairs) = metrics else {
-        return Err("'metrics' must be an object".into());
-    };
-    for (k, val) in pairs {
-        let n = val.as_f64().ok_or_else(|| format!("metric '{k}' is not a number"))?;
-        into.insert(format!("{bench}/{k}"), n);
-    }
-    Ok(())
-}
-
-fn read_bench_out(dir: &Path) -> Result<BTreeMap<String, f64>, String> {
-    let mut current = BTreeMap::new();
-    let entries = std::fs::read_dir(dir)
-        .map_err(|e| format!("reading bench output dir {}: {e}", dir.display()))?;
-    for entry in entries {
-        let path = entry.map_err(|e| format!("{e}"))?.path();
-        if path.extension().and_then(|e| e.to_str()) != Some("json") {
-            continue;
-        }
-        let text = std::fs::read_to_string(&path)
-            .map_err(|e| format!("reading {}: {e}", path.display()))?;
-        let v = Json::parse(&text).map_err(|e| format!("parsing {}: {e}", path.display()))?;
-        collect_summary(&v, &mut current).map_err(|e| format!("{}: {e}", path.display()))?;
-    }
-    Ok(current)
-}
-
-fn read_baseline(path: &Path) -> Result<(f64, BTreeMap<String, f64>), String> {
-    let text = std::fs::read_to_string(path)
-        .map_err(|e| format!("reading baseline {}: {e}", path.display()))?;
-    let v = Json::parse(&text).map_err(|e| format!("parsing {}: {e}", path.display()))?;
-    let tol = v
-        .get("tolerance_frac")
-        .and_then(Json::as_f64)
-        .unwrap_or(DEFAULT_TOLERANCE_FRAC);
-    let mut metrics = BTreeMap::new();
-    if let Some(Json::Object(pairs)) = v.get("metrics") {
-        for (k, val) in pairs {
-            let n = val
-                .as_f64()
-                .ok_or_else(|| format!("baseline metric '{k}' is not a number"))?;
-            metrics.insert(k.clone(), n);
-        }
-    }
-    Ok((tol, metrics))
-}
-
-/// Rewrite the baseline with fresh metrics.  Top-level keys other than
-/// `metrics` (the `_note`, `tolerance_frac`, anything an operator
-/// added) are carried over from the existing file, so `--update` never
-/// strips the baseline's documentation.
-fn write_baseline(path: &Path, metrics: &BTreeMap<String, f64>) -> Result<(), String> {
+/// Rewrite the baseline with fresh metric distributions.  Top-level
+/// keys other than `metrics` (the `_note`, `tolerance_frac`, anything
+/// an operator added) are carried over from the existing file, so
+/// `--update` never strips the baseline's documentation.
+fn write_baseline(path: &Path, metrics: &BTreeMap<String, MetricDist>) -> Result<(), String> {
     let mut pairs: Vec<(String, Json)> = match std::fs::read_to_string(path) {
         Ok(text) => match Json::parse(&text) {
             Ok(Json::Object(existing)) => {
@@ -162,11 +139,19 @@ fn write_baseline(path: &Path, metrics: &BTreeMap<String, f64>) -> Result<(), St
     }
     pairs.push((
         "metrics".to_string(),
-        Json::Object(metrics.iter().map(|(k, &v)| (k.clone(), Json::num(v))).collect()),
+        Json::Object(metrics.iter().map(|(k, d)| (k.clone(), d.to_json())).collect()),
     ));
     let json = Json::Object(pairs);
     std::fs::write(path, format!("{json}\n"))
         .map_err(|e| format!("writing baseline {}: {e}", path.display()))
+}
+
+fn fmt_dist(d: &MetricDist) -> String {
+    if d.n <= 1 || d.iqr == 0.0 {
+        format!("{:.3}", d.median)
+    } else {
+        format!("{:.3}±{:.3}", d.median, d.iqr)
+    }
 }
 
 fn run() -> Result<bool, String> {
@@ -181,40 +166,66 @@ fn run() -> Result<bool, String> {
     }
     if args.flag("update") {
         write_baseline(Path::new(&baseline_path), &current)?;
-        println!("baseline {baseline_path} rewritten with {} metrics", current.len());
+        println!(
+            "baseline {baseline_path} rewritten with {} metric distributions",
+            current.len()
+        );
         return Ok(true);
     }
-    let (tol, baseline) = read_baseline(Path::new(&baseline_path))?;
+    let (tol, baseline) = read_baseline(Path::new(&baseline_path), DEFAULT_TOLERANCE_FRAC)?;
     if baseline.is_empty() {
         return Err(format!("baseline {baseline_path} gates no metrics"));
     }
     let rows = gate(&baseline, &current, tol);
     println!(
-        "bench gate: {} metrics, tolerance {:.0}% (lower is better)",
+        "bench gate: {} metrics, tolerance {:.0}% + seed spread (medians, lower is better)",
         rows.len(),
         tol * 100.0
     );
     let mut failed = false;
+    let mut loose = 0usize;
     for (key, verdict) in &rows {
-        let base = baseline[key];
+        let base = &baseline[key];
         match verdict {
-            Verdict::Ok(delta) => {
-                let now = current[key];
-                let pct = delta * 100.0;
-                println!("  OK      {key:<44} {base:>10.3} -> {now:>10.3} ({pct:+.1}%)");
-            }
-            Verdict::Regressed(delta) => {
-                failed = true;
-                let now = current[key];
+            Verdict::Ok(delta, tol_eff) => {
+                let cur = &current[key];
                 println!(
-                    "  REGRESS {key:<44} {base:>10.3} -> {now:>10.3} ({:+.1}% > {:.0}%)",
+                    "  OK      {key:<44} {:>14} -> {:>14} ({:+.1}%, tol {:.0}%)",
+                    fmt_dist(base),
+                    fmt_dist(cur),
                     delta * 100.0,
-                    tol * 100.0
+                    tol_eff * 100.0
+                );
+                // A ceiling far above the measurement is a latent
+                // regression shield — surface it on every run.
+                if base.median > LOOSE_CEILING_FACTOR * cur.median && cur.median > 0.0 {
+                    loose += 1;
+                    println!(
+                        "  LOOSE   {key:<44} baseline median {:.3} is {:.0}% above measured \
+                         {:.3} — tighten with --update",
+                        base.median,
+                        (base.median / cur.median - 1.0) * 100.0,
+                        cur.median
+                    );
+                }
+            }
+            Verdict::Regressed(delta, tol_eff) => {
+                failed = true;
+                let cur = &current[key];
+                println!(
+                    "  REGRESS {key:<44} {:>14} -> {:>14} ({:+.1}% > {:.0}%)",
+                    fmt_dist(base),
+                    fmt_dist(cur),
+                    delta * 100.0,
+                    tol_eff * 100.0
                 );
             }
             Verdict::Missing => {
                 failed = true;
-                println!("  MISSING {key:<44} {base:>10.3} -> (no current value)");
+                println!(
+                    "  MISSING {key:<44} {:>14} -> (no current value)",
+                    fmt_dist(base)
+                );
             }
         }
     }
@@ -225,13 +236,15 @@ fn run() -> Result<bool, String> {
     }
     if !missing_from_current.is_empty() || !missing_from_baseline.is_empty() {
         println!(
-            "bench gate: metric names diverged — {} in baseline only {:?}, \
-             {} in bench output only {:?}; refresh with --update and commit",
+            "bench gate: metric names diverged — {} in baseline only \
+             {missing_from_current:?}, {} in bench output only {missing_from_baseline:?}; \
+             refresh with --update and commit",
             missing_from_current.len(),
-            missing_from_current,
             missing_from_baseline.len(),
-            missing_from_baseline,
         );
+    }
+    if loose > 0 {
+        println!("bench gate: {loose} loose baseline ceiling(s) — consider --update");
     }
     if failed {
         println!("bench gate: FAILED");
@@ -256,8 +269,12 @@ fn main() -> ExitCode {
 mod tests {
     use super::*;
 
-    fn map(pairs: &[(&str, f64)]) -> BTreeMap<String, f64> {
-        pairs.iter().map(|&(k, v)| (k.to_string(), v)).collect()
+    fn map(pairs: &[(&str, f64)]) -> BTreeMap<String, MetricDist> {
+        pairs.iter().map(|&(k, v)| (k.to_string(), MetricDist::point(v))).collect()
+    }
+
+    fn dist(median: f64, iqr: f64) -> MetricDist {
+        MetricDist { median, iqr, min: median - iqr, max: median + iqr, n: 3 }
     }
 
     #[test]
@@ -265,7 +282,7 @@ mod tests {
         let base = map(&[("a/x_ms", 100.0), ("a/y_j", 50.0)]);
         let cur = map(&[("a/x_ms", 109.0), ("a/y_j", 20.0)]);
         let rows = gate(&base, &cur, 0.10);
-        assert!(rows.iter().all(|(_, v)| matches!(v, Verdict::Ok(_))), "{rows:?}");
+        assert!(rows.iter().all(|(_, v)| matches!(v, Verdict::Ok(..))), "{rows:?}");
     }
 
     #[test]
@@ -275,9 +292,29 @@ mod tests {
         let rows = gate(&base, &cur, 0.10);
         assert!(matches!(
             rows.iter().find(|(k, _)| k == "a/x_ms").unwrap().1,
-            Verdict::Regressed(_)
+            Verdict::Regressed(..)
         ));
-        assert_eq!(rows.iter().find(|(k, _)| k == "a/gone").unwrap().1, Verdict::Missing);
+        assert!(matches!(
+            rows.iter().find(|(k, _)| k == "a/gone").unwrap().1,
+            Verdict::Missing
+        ));
+    }
+
+    #[test]
+    fn spread_widens_the_tolerance() {
+        // 11% over a zero-spread baseline regresses at 10% flat...
+        let tight_base: BTreeMap<String, MetricDist> =
+            [("a/x_ms".to_string(), dist(100.0, 0.0))].into_iter().collect();
+        let cur: BTreeMap<String, MetricDist> =
+            [("a/x_ms".to_string(), dist(111.0, 0.0))].into_iter().collect();
+        assert!(matches!(gate(&tight_base, &cur, 0.10)[0].1, Verdict::Regressed(..)));
+        // ...but passes when either side's IQR shows ≥1% seed noise.
+        let noisy_base: BTreeMap<String, MetricDist> =
+            [("a/x_ms".to_string(), dist(100.0, 5.0))].into_iter().collect();
+        assert!(matches!(gate(&noisy_base, &cur, 0.10)[0].1, Verdict::Ok(..)));
+        let noisy_cur: BTreeMap<String, MetricDist> =
+            [("a/x_ms".to_string(), dist(111.0, 5.0))].into_iter().collect();
+        assert!(matches!(gate(&tight_base, &noisy_cur, 0.10)[0].1, Verdict::Ok(..)));
     }
 
     #[test]
@@ -297,17 +334,6 @@ mod tests {
     }
 
     #[test]
-    fn summaries_flatten_to_namespaced_keys() {
-        let v = Json::parse(r#"{"bench": "b1", "metrics": {"p95_ms": 1.5, "total_j": 2}}"#)
-            .unwrap();
-        let mut out = BTreeMap::new();
-        collect_summary(&v, &mut out).unwrap();
-        assert_eq!(out.get("b1/p95_ms"), Some(&1.5));
-        assert_eq!(out.get("b1/total_j"), Some(&2.0));
-        assert!(collect_summary(&Json::parse("{}").unwrap(), &mut out).is_err());
-    }
-
-    #[test]
     fn baseline_update_round_trips_and_keeps_extra_keys() {
         let dir = std::env::temp_dir().join("bench_gate_test");
         std::fs::create_dir_all(&dir).unwrap();
@@ -317,11 +343,12 @@ mod tests {
             r#"{"_note": "docs live here", "tolerance_frac": 0.2, "metrics": {"old/x": 1}}"#,
         )
         .unwrap();
-        let metrics = map(&[("a/x_ms", 123.5), ("b/y_j", 4.0)]);
+        let mut metrics = map(&[("a/x_ms", 123.5)]);
+        metrics.insert("b/y_j".to_string(), dist(4.0, 0.5));
         write_baseline(&path, &metrics).unwrap();
-        let (tol, back) = read_baseline(&path).unwrap();
+        let (tol, back) = read_baseline(&path, DEFAULT_TOLERANCE_FRAC).unwrap();
         assert_eq!(tol, 0.2, "existing tolerance survives --update");
-        assert_eq!(back, metrics, "metrics are replaced wholesale");
+        assert_eq!(back, metrics, "distributions round-trip wholesale");
         let text = std::fs::read_to_string(&path).unwrap();
         let v = Json::parse(&text).unwrap();
         assert_eq!(
@@ -332,7 +359,7 @@ mod tests {
         // a fresh file gets the default tolerance
         std::fs::remove_file(&path).ok();
         write_baseline(&path, &metrics).unwrap();
-        let (tol, _) = read_baseline(&path).unwrap();
+        let (tol, _) = read_baseline(&path, DEFAULT_TOLERANCE_FRAC).unwrap();
         assert_eq!(tol, DEFAULT_TOLERANCE_FRAC);
         std::fs::remove_file(&path).ok();
     }

@@ -1,0 +1,192 @@
+//! Render the bench summaries in `$BENCH_OUT_DIR` as a markdown
+//! comparison table against `BENCH_BASELINE.json`.
+//!
+//! Companion to `bench_gate`: the gate decides pass/fail, this binary
+//! produces the human-readable artifact — one table per bench, one row
+//! per metric, showing the baseline median, the current median ± IQR
+//! over the bench seeds, the relative delta, and a status glyph.  CI
+//! appends the output to `$GITHUB_STEP_SUMMARY` and uploads it with
+//! the raw JSON summaries, so every run carries its own perf report.
+//!
+//! ```sh
+//! BENCH_OUT_DIR=bench_out cargo bench --bench fleet_autoscale
+//! cargo run --bin bench_report -- --bench-out bench_out --out bench_out/BENCH_REPORT.md
+//! ```
+//!
+//! Metrics absent from the baseline render with an em-dash baseline
+//! column rather than failing — reporting is informative, gating is
+//! `bench_gate`'s job.  Exit codes: 0 rendered, 2 operational error.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::process::ExitCode;
+
+use mobile_convnet::util::bench::{read_baseline, read_bench_out, MetricDist};
+use mobile_convnet::util::cli::Args;
+
+fn fmt_val(v: f64) -> String {
+    if v.abs() >= 1000.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+fn fmt_dist(d: &MetricDist) -> String {
+    if d.n <= 1 || d.iqr == 0.0 {
+        fmt_val(d.median)
+    } else {
+        format!("{} ± {} (n={})", fmt_val(d.median), fmt_val(d.iqr), d.n)
+    }
+}
+
+/// One markdown table row for a metric, against its (optional)
+/// baseline distribution.  Deltas are on medians, lower is better.
+fn render_row(metric: &str, base: Option<&MetricDist>, cur: &MetricDist) -> String {
+    match base {
+        None => format!("| `{metric}` | — | {} | — | 🆕 ungated |", fmt_dist(cur)),
+        Some(b) => {
+            let (delta, status) = if b.median.abs() < 1e-12 {
+                (None, "—")
+            } else {
+                let d = (cur.median - b.median) / b.median;
+                let glyph = if d <= 0.0 {
+                    "✅"
+                } else if d <= 0.10 {
+                    "✅ (within tol)"
+                } else {
+                    "⚠️ above flat tol"
+                };
+                (Some(d), glyph)
+            };
+            let delta_cell =
+                delta.map_or_else(|| "—".to_string(), |d| format!("{:+.1}%", d * 100.0));
+            format!(
+                "| `{metric}` | {} | {} | {delta_cell} | {status} |",
+                fmt_val(b.median),
+                fmt_dist(cur)
+            )
+        }
+    }
+}
+
+/// Render the full report: one section per bench (the `bench/` prefix
+/// of the flattened metric keys), rows sorted by metric name.
+fn render(
+    baseline: &BTreeMap<String, MetricDist>,
+    current: &BTreeMap<String, MetricDist>,
+) -> String {
+    let mut by_bench: BTreeMap<&str, Vec<(&str, &MetricDist)>> = BTreeMap::new();
+    for (key, dist) in current {
+        let (bench, metric) = key.split_once('/').unwrap_or(("(unnamed)", key));
+        by_bench.entry(bench).or_default().push((metric, dist));
+    }
+    let mut out = String::from("## Bench report\n\n");
+    out.push_str(
+        "Medians over the bench seeds; baseline from `BENCH_BASELINE.json`. \
+         Lower is better; ± is the interquartile range across seeds. \
+         The pass/fail verdict (with spread-aware tolerance) is `bench_gate`'s.\n",
+    );
+    for (bench, rows) in &by_bench {
+        out.push_str(&format!("\n### `{bench}`\n\n"));
+        out.push_str("| metric | baseline | current (median ± IQR) | delta | status |\n");
+        out.push_str("|---|---:|---:|---:|---|\n");
+        for &(metric, cur) in rows {
+            let key = format!("{bench}/{metric}");
+            out.push_str(&render_row(metric, baseline.get(&key), cur));
+            out.push('\n');
+        }
+    }
+    let stale: Vec<&String> =
+        baseline.keys().filter(|k| !current.contains_key(*k)).collect();
+    if !stale.is_empty() {
+        out.push_str(&format!(
+            "\nBaseline metrics not produced by this run: {}.\n",
+            stale.iter().map(|k| format!("`{k}`")).collect::<Vec<_>>().join(", ")
+        ));
+    }
+    out
+}
+
+fn run() -> Result<(), String> {
+    let args = Args::from_env()?;
+    let baseline_path = args.get_or("baseline", "../BENCH_BASELINE.json").to_string();
+    let bench_out = args.get_or("bench-out", "bench_out").to_string();
+    let current = read_bench_out(Path::new(&bench_out))?;
+    if current.is_empty() {
+        return Err(format!(
+            "no bench summaries in {bench_out}/ — run the benches with BENCH_OUT_DIR set first"
+        ));
+    }
+    // A missing baseline is fine for reporting — render with empty
+    // baseline columns instead of failing.
+    let baseline = match read_baseline(Path::new(&baseline_path), 0.10) {
+        Ok((_, b)) => b,
+        Err(_) => BTreeMap::new(),
+    };
+    let report = render(&baseline, &current);
+    print!("{report}");
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, &report).map_err(|e| format!("writing {path}: {e}"))?;
+        eprintln!("bench_report: wrote {path}");
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("bench_report: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dist(median: f64, iqr: f64, n: usize) -> MetricDist {
+        MetricDist { median, iqr, min: median - iqr, max: median + iqr, n }
+    }
+
+    #[test]
+    fn report_groups_by_bench_and_marks_status() {
+        let baseline: BTreeMap<String, MetricDist> = [
+            ("fleet_qos/qos_total_j".to_string(), MetricDist::point(10.0)),
+            ("fleet_qos/qos_hi_p95_ms".to_string(), MetricDist::point(100.0)),
+            ("fleet_routing/gone_j".to_string(), MetricDist::point(1.0)),
+        ]
+        .into_iter()
+        .collect();
+        let current: BTreeMap<String, MetricDist> = [
+            ("fleet_qos/qos_total_j".to_string(), dist(9.0, 0.2, 3)),
+            ("fleet_qos/qos_hi_p95_ms".to_string(), dist(120.0, 4.0, 3)),
+            ("fleet_routing/fresh_j".to_string(), dist(2.0, 0.0, 3)),
+        ]
+        .into_iter()
+        .collect();
+        let md = render(&baseline, &current);
+        assert!(md.contains("### `fleet_qos`"), "{md}");
+        assert!(md.contains("### `fleet_routing`"), "{md}");
+        // improvement, regression past flat tol, and ungated rows
+        assert!(
+            md.contains("| `qos_total_j` | 10.000 | 9.000 ± 0.200 (n=3) | -10.0% | ✅ |"),
+            "{md}"
+        );
+        assert!(md.contains("+20.0%"), "{md}");
+        assert!(md.contains("above flat tol"), "{md}");
+        assert!(md.contains("🆕 ungated"), "{md}");
+        // baseline-only metric listed as not produced
+        assert!(md.contains("`fleet_routing/gone_j`"), "{md}");
+    }
+
+    #[test]
+    fn point_and_distribution_cells_render_distinctly() {
+        let cur = dist(5.0, 0.0, 1);
+        assert_eq!(fmt_dist(&cur), "5.000");
+        let spread = dist(5.0, 0.5, 3);
+        assert_eq!(fmt_dist(&spread), "5.000 ± 0.500 (n=3)");
+    }
+}

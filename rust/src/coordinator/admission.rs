@@ -32,6 +32,8 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
+use crate::telemetry::metrics::Counter;
+
 /// Shared admission state.
 #[derive(Debug)]
 pub struct AdmissionControl {
@@ -127,6 +129,18 @@ pub enum GateDecision {
     ShedQueue,
 }
 
+/// Registry counters mirroring the gate's internal tallies — wired by
+/// the fleet so `{"cmd":"metrics"}` exposes the front-door decisions
+/// as `gate_*_total` series.  Optional: a bare `FleetGate::new` (unit
+/// tests, standalone use) carries none and pays nothing.
+#[derive(Debug)]
+pub struct GateMetrics {
+    pub admitted: Arc<Counter>,
+    pub shed_saturated: Arc<Counter>,
+    pub shed_queue: Arc<Counter>,
+    pub evicted: Arc<Counter>,
+}
+
 /// Front-door admission for the fleet dispatch path.  Lives inside the
 /// fleet's state lock (dispatch is already serialized there), so plain
 /// fields suffice; the autoscaler resizes the cap and flips the
@@ -143,6 +157,8 @@ pub struct FleetGate {
     shed_queue: u64,
     /// Queued riders dropped to admit a more urgent arrival.
     evicted: u64,
+    /// Mirrored registry counters (see [`GateMetrics`]).
+    metrics: Option<GateMetrics>,
 }
 
 impl FleetGate {
@@ -155,7 +171,13 @@ impl FleetGate {
             shed_saturated: 0,
             shed_queue: 0,
             evicted: 0,
+            metrics: None,
         }
+    }
+
+    /// Mirror every gate decision into registry counters.
+    pub fn set_metrics(&mut self, metrics: GateMetrics) {
+        self.metrics = Some(metrics);
     }
 
     /// Decide admission given the fleet's current total queue depth
@@ -163,7 +185,7 @@ impl FleetGate {
     /// this arrival (`can_evict`) — priority shedding: under queue
     /// pressure the cheapest rider goes, not the newest.
     pub fn admit(&mut self, queued: usize, can_evict: bool) -> GateDecision {
-        if self.saturated {
+        let decision = if self.saturated {
             self.shed_saturated += 1;
             GateDecision::ShedSaturated
         } else if queued >= self.max_queue {
@@ -178,7 +200,19 @@ impl FleetGate {
         } else {
             self.admitted += 1;
             GateDecision::Admit
+        };
+        if let Some(m) = &self.metrics {
+            match decision {
+                GateDecision::Admit => m.admitted.inc(),
+                GateDecision::AdmitEvict => {
+                    m.admitted.inc();
+                    m.evicted.inc();
+                }
+                GateDecision::ShedSaturated => m.shed_saturated.inc(),
+                GateDecision::ShedQueue => m.shed_queue.inc(),
+            }
         }
+        decision
     }
 
     /// Resize the queue cap as the autoscaler adds or drains replicas.

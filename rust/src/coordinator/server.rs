@@ -7,7 +7,8 @@
 //!            "deadline_ms": 500, "model": "squeezenet"}`
 //!          or `{"image": [ ...150528 floats... ], ...}`
 //!          or `{"cmd": "stats"}` / `{"cmd": "fleet_stats"}` /
-//!          `{"cmd": "autoscale_stats"}` / `{"cmd": "quit"}`
+//!          `{"cmd": "autoscale_stats"}` / `{"cmd": "metrics"}` /
+//!          `{"cmd": "trace_dump"}` / `{"cmd": "quit"}`
 //! response the [`InferResponse::to_json`] object (plus a `"fleet"`
 //!          placement object when the request set `"fleet": true`), or
 //!          `{"error": "..."}` / `{"stats": "..."}` /
@@ -69,6 +70,11 @@ enum Parsed {
     Stats,
     FleetStats,
     AutoscaleStats,
+    /// Fleet metrics-registry snapshot (`{"cmd":"metrics"}`).
+    Metrics,
+    /// Sampled request-trace export as Chrome trace-event JSON
+    /// (`{"cmd":"trace_dump"}`).
+    TraceDump,
     Quit,
 }
 
@@ -79,6 +85,8 @@ fn parse_request(line: &str, image_len: usize) -> Result<Parsed> {
             "stats" => Ok(Parsed::Stats),
             "fleet_stats" => Ok(Parsed::FleetStats),
             "autoscale_stats" => Ok(Parsed::AutoscaleStats),
+            "metrics" => Ok(Parsed::Metrics),
+            "trace_dump" => Ok(Parsed::TraceDump),
             "quit" => Ok(Parsed::Quit),
             other => anyhow::bail!("unknown cmd '{other}'"),
         };
@@ -223,6 +231,26 @@ fn handle_client(
                     // snapshot reflects long-finished requests.
                     f.run_to(started.elapsed().as_secs_f64() * 1e3);
                     Json::object(vec![("fleet_stats", f.stats().to_json())])
+                }
+                None => Json::object(vec![(
+                    "error",
+                    Json::str("no fleet configured (start the server with --fleet SPEC)"),
+                )]),
+            },
+            Ok(Parsed::Metrics) => match &fleet {
+                Some(f) => {
+                    f.run_to(started.elapsed().as_secs_f64() * 1e3);
+                    Json::object(vec![("metrics", f.metrics_snapshot())])
+                }
+                None => Json::object(vec![(
+                    "error",
+                    Json::str("no fleet configured (start the server with --fleet SPEC)"),
+                )]),
+            },
+            Ok(Parsed::TraceDump) => match &fleet {
+                Some(f) => {
+                    f.run_to(started.elapsed().as_secs_f64() * 1e3);
+                    Json::object(vec![("trace", f.trace_chrome_json())])
                 }
                 None => Json::object(vec![(
                     "error",
@@ -453,6 +481,21 @@ impl Client {
         v.get("autoscale_stats").cloned().context("reply missing autoscale_stats")
     }
 
+    /// Fetch the fleet's metrics-registry snapshot (errors when the
+    /// server has no fleet).
+    pub fn metrics(&mut self) -> Result<Json> {
+        let v = self.round_trip(Json::object(vec![("cmd", Json::str("metrics"))]))?;
+        v.get("metrics").cloned().context("reply missing metrics")
+    }
+
+    /// Fetch the sampled request traces as Chrome trace-event JSON
+    /// (errors when the server has no fleet; empty `traceEvents` when
+    /// sampling is off).
+    pub fn trace_dump(&mut self) -> Result<Json> {
+        let v = self.round_trip(Json::object(vec![("cmd", Json::str("trace_dump"))]))?;
+        v.get("trace").cloned().context("reply missing trace")
+    }
+
     /// Ask the server to stop.
     pub fn quit(&mut self) -> Result<()> {
         let _ = self.round_trip(Json::object(vec![("cmd", Json::str("quit"))]))?;
@@ -566,6 +609,11 @@ mod tests {
         assert!(matches!(
             parse_request(r#"{"cmd": "autoscale_stats"}"#, 3).unwrap(),
             Parsed::AutoscaleStats
+        ));
+        assert!(matches!(parse_request(r#"{"cmd": "metrics"}"#, 3).unwrap(), Parsed::Metrics));
+        assert!(matches!(
+            parse_request(r#"{"cmd": "trace_dump"}"#, 3).unwrap(),
+            Parsed::TraceDump
         ));
         assert!(matches!(parse_request(r#"{"cmd": "quit"}"#, 3).unwrap(), Parsed::Quit));
     }

@@ -259,6 +259,30 @@ pub struct FleetSample {
     pub committed_j: f64,
 }
 
+impl FleetSample {
+    /// The observation as named gauges, published to the fleet's
+    /// metrics registry at every control tick — the registry records
+    /// exactly what the scaling decision was made from.
+    pub fn gauges(&self) -> Vec<(&'static str, f64)> {
+        let mut g = vec![
+            ("fleet_sample_at_ms", self.at_ms),
+            ("fleet_active_replicas", self.active_replicas as f64),
+            ("fleet_parked_replicas", self.parked_replicas as f64),
+            ("fleet_pool_remaining", self.pool_remaining as f64),
+            ("fleet_queue_depth", self.queue_depth as f64),
+            ("fleet_interactive_in_flight", self.interactive_in_flight as f64),
+            ("fleet_committed_j", self.committed_j),
+        ];
+        if let Some(p95) = self.p95_ms {
+            g.push(("fleet_recent_p95_ms", p95));
+        }
+        if let Some(p95) = self.p95_hi_ms {
+            g.push(("fleet_recent_p95_hi_ms", p95));
+        }
+        g
+    }
+}
+
 /// What the controller asks the fleet to do this tick.  The fleet owns
 /// victim/spec selection (it prices replicas through its plan cache).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

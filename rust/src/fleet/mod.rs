@@ -126,11 +126,13 @@ pub use router::{Candidate, Policy, Router};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::coordinator::admission::{FleetGate, GateDecision};
+use crate::coordinator::admission::{FleetGate, GateDecision, GateMetrics};
 use crate::coordinator::trace::Trace;
 use crate::coordinator::{PlanCache, Qos};
 use crate::runtime::artifacts::{ModelCatalog, ModelId};
 use crate::simulator::device::Precision;
+use crate::telemetry::metrics::{labeled, Counter, Histogram, MetricsRegistry};
+use crate::telemetry::trace::{SpanRecord, Tracer};
 use crate::telemetry::LatencyRecorder;
 use crate::util::json::Json;
 
@@ -169,6 +171,10 @@ pub struct FleetConfig {
     pub affinity_aware: bool,
     /// Seed for the sampling policies' RNG.
     pub seed: u64,
+    /// Request-trace sampling: record lifecycle spans for 1 in
+    /// `trace_every` arrivals (0 = off, the default — the only cost on
+    /// the dispatch path is then one relaxed atomic load).
+    pub trace_every: u64,
 }
 
 /// Model-artifact tier configuration: the catalog of named weight
@@ -193,6 +199,7 @@ impl FleetConfig {
             cache: None,
             affinity_aware: true,
             seed: 0,
+            trace_every: 0,
         }
     }
 
@@ -245,6 +252,13 @@ impl FleetConfig {
 
     pub fn with_seed(mut self, seed: u64) -> FleetConfig {
         self.seed = seed;
+        self
+    }
+
+    /// Sample lifecycle spans for 1 in `every` arrivals (0 = off).
+    /// Also adjustable at runtime via [`Fleet::set_trace_sampling`].
+    pub fn with_trace_sampling(mut self, every: u64) -> FleetConfig {
+        self.trace_every = every;
         self
     }
 
@@ -314,6 +328,58 @@ impl FleetConfig {
 /// queued riders (synced at five call sites) is gone.
 type Victim = (usize, Rider, Precision);
 
+/// Pre-resolved registry handles for the fleet's conservation
+/// counters, updated at exactly the code points that maintain the
+/// [`FleetReport`] totals — so a `metrics_snapshot` always reconciles
+/// with the report (`fleet_arrivals_total == completed + shed + lost +
+/// expired`, enforced by `tests/telemetry_e2e.rs`).
+#[derive(Debug)]
+struct FleetMetrics {
+    registry: Arc<MetricsRegistry>,
+    arrivals: Arc<Counter>,
+    completed: Arc<Counter>,
+    expired: Arc<Counter>,
+    shed: Arc<Counter>,
+    lost: Arc<Counter>,
+    rerouted: Arc<Counter>,
+    evicted: Arc<Counter>,
+    /// Cumulative completion latency (the windowed recorders still
+    /// back the report percentiles; this one never forgets).
+    latency: Arc<Histogram>,
+    latency_hi: Arc<Histogram>,
+}
+
+impl FleetMetrics {
+    fn new(registry: Arc<MetricsRegistry>) -> FleetMetrics {
+        FleetMetrics {
+            arrivals: registry.counter("fleet_arrivals_total"),
+            completed: registry.counter("fleet_completed_total"),
+            expired: registry.counter("fleet_expired_total"),
+            shed: registry.counter("fleet_shed_total"),
+            lost: registry.counter("fleet_lost_total"),
+            rerouted: registry.counter("fleet_rerouted_total"),
+            evicted: registry.counter("fleet_evicted_total"),
+            latency: registry.histogram("fleet_latency_ms"),
+            latency_hi: registry.histogram(&labeled(
+                "fleet_latency_ms",
+                &[("class", "interactive")],
+            )),
+            registry,
+        }
+    }
+
+    /// Refresh the energy/clock gauges from the authoritative replica
+    /// meters (called at snapshot time, so gauges match the report's
+    /// joule totals bit-for-bit).
+    fn set_energy_gauges(&self, service_j: f64, idle_j: f64, load_j: f64, clock_ms: f64) {
+        self.registry.gauge("fleet_service_energy_j").set(service_j);
+        self.registry.gauge("fleet_idle_energy_j").set(idle_j);
+        self.registry.gauge("fleet_artifact_load_j").set(load_j);
+        self.registry.gauge("fleet_total_energy_j").set(service_j + idle_j + load_j);
+        self.registry.gauge("fleet_clock_ms").set(clock_ms);
+    }
+}
+
 /// Mutable fleet state, behind one lock (dispatch is queue math only —
 /// microseconds — so a single lock is not a bottleneck at trace rates).
 #[derive(Debug)]
@@ -371,6 +437,12 @@ struct FleetState {
     /// Front door for the fleet dispatch path (present iff autoscaling
     /// is on).
     gate: Option<FleetGate>,
+    /// Sampling request tracer, shared with every replica (spans land
+    /// in one ring).  Off by default.
+    tracer: Arc<Tracer>,
+    /// Conservation counters + registry, maintained alongside the
+    /// report totals.
+    metrics: FleetMetrics,
 }
 
 impl FleetState {
@@ -395,18 +467,50 @@ impl FleetState {
             self.clock_ms = t_ms;
         }
         let now = self.clock_ms;
+        let modeled = self.artifact_cache.is_some();
         for r in &mut self.replicas {
             if self.idle_on {
                 r.accrue_idle(now);
             }
             for o in r.collect(now) {
+                let class = if o.rider.is_interactive() { "interactive" } else { "bulk" };
                 if let Some(latency_ms) = o.latency_ms {
                     let d = Duration::from_secs_f64(latency_ms / 1e3);
                     self.fleet_latency.record(d);
                     self.recent_latency.record(d);
+                    self.metrics.completed.inc();
+                    self.metrics.latency.record_ms(latency_ms);
                     if o.rider.is_interactive() {
                         self.fleet_latency_hi.record(d);
                         self.recent_latency_hi.record(d);
+                        self.metrics.latency_hi.record_ms(latency_ms);
+                    }
+                    let mut labels = vec![("replica", r.name.as_str()), ("class", class)];
+                    let model_label;
+                    if modeled {
+                        model_label = format!("m{}", o.rider.model.index());
+                        labels.push(("model", model_label.as_str()));
+                    }
+                    self.metrics
+                        .registry
+                        .counter(&labeled("fleet_completed_by", &labels))
+                        .inc();
+                    if let Some(id) = o.rider.trace {
+                        let outcome =
+                            if o.missed_deadline { "completed (missed deadline)" } else { "completed" };
+                        self.tracer.event(
+                            id,
+                            "terminal",
+                            outcome,
+                            o.rider.anchor_ms + latency_ms,
+                            0.0,
+                            r.id as u32 + 1,
+                        );
+                    }
+                } else {
+                    self.metrics.expired.inc();
+                    if let Some(id) = o.rider.trace {
+                        self.tracer.event(id, "terminal", "expired", now, 0.0, r.id as u32 + 1);
                     }
                 }
             }
@@ -452,7 +556,68 @@ impl FleetState {
             Rider::plain(rider.anchor_ms).with_model(rider.model)
         };
         let idx = self.router.place(&candidates, &route_rider, now_ms)?;
+        if let Some(id) = rider.trace {
+            // Route decision: the winner plus every losing candidate's
+            // score inputs, so a trace shows *why* placement happened.
+            let losers: Vec<String> = candidates
+                .iter()
+                .filter(|c| c.replica != idx)
+                .map(|c| {
+                    format!(
+                        "r{} wait={:.1}ms e={:.2}J{}",
+                        c.replica,
+                        c.queue_wait_ms,
+                        c.energy_j,
+                        if c.model_resident { "" } else { " cold" }
+                    )
+                })
+                .collect();
+            self.tracer.event(
+                id,
+                "route",
+                format!(
+                    "{} <- {} (runners-up: {})",
+                    self.replicas[idx].name,
+                    self.router.policy.label(),
+                    if losers.is_empty() { "none".to_string() } else { losers.join(", ") }
+                ),
+                now_ms,
+                0.0,
+                0,
+            );
+        }
         let placement = self.replicas[idx].admit_rider(now_ms, rider);
+        if let Some(id) = rider.trace {
+            let track = idx as u32 + 1;
+            self.tracer.event(
+                id,
+                "queue",
+                format!("queued behind {} rider(s)", placement.batch_fill.saturating_sub(1)),
+                now_ms,
+                placement.queue_wait_ms,
+                track,
+            );
+            let mut exec_start = now_ms + placement.queue_wait_ms;
+            if placement.cold_load_ms > 0.0 {
+                self.tracer.event(
+                    id,
+                    "cold_load",
+                    placement.model.clone().unwrap_or_default(),
+                    exec_start,
+                    placement.cold_load_ms,
+                    track,
+                );
+                exec_start += placement.cold_load_ms;
+            }
+            self.tracer.event(
+                id,
+                "execute",
+                format!("predicted {:.1} ms @ {}", placement.service_ms, placement.precision.label()),
+                exec_start,
+                placement.service_ms,
+                track,
+            );
+        }
         if let Some(count) = self.model_placements.get_mut(rider.model.index()) {
             *count += 1;
         }
@@ -510,6 +675,18 @@ impl FleetState {
         if self.replicas[replica].evict_rider(rider.anchor_ms, precision, now_ms) {
             self.shed += 1;
             self.evicted += 1;
+            self.metrics.shed.inc();
+            self.metrics.evicted.inc();
+            if let Some(id) = rider.trace {
+                self.tracer.event(
+                    id,
+                    "terminal",
+                    "evicted (displaced by a more urgent arrival)",
+                    now_ms,
+                    0.0,
+                    replica as u32 + 1,
+                );
+            }
         }
     }
 
@@ -554,6 +731,11 @@ impl FleetState {
     fn autoscale_tick(&mut self, at_ms: f64) {
         let Some(mut asc) = self.autoscaler.take() else { return };
         let sample = self.sample(at_ms);
+        // Publish the controller's observation to the registry — the
+        // same numbers the scaling decision is about to be made from.
+        for (name, v) in sample.gauges() {
+            self.metrics.registry.gauge(name).set(v);
+        }
         for decision in asc.tick(&sample) {
             match decision {
                 ScaleDecision::ScaleUp => self.apply_scale_up(at_ms, &mut asc),
@@ -722,6 +904,7 @@ impl FleetState {
         if let Some(cc) = &self.artifact_cache {
             r.set_artifact_cache(cc.catalog.clone(), cc.capacity_bytes);
         }
+        r.set_tracer(self.tracer.clone());
         r.activate_at(at_ms);
         self.replicas.push(r);
         id
@@ -743,6 +926,10 @@ impl Fleet {
     pub fn new(config: FleetConfig) -> Fleet {
         let cache = PlanCache::new();
         let budget = config.budget_j.map(JouleBudget::new);
+        let tracer = Arc::new(Tracer::default());
+        tracer.set_sampling(config.trace_every);
+        let registry = Arc::new(MetricsRegistry::new());
+        let metrics = FleetMetrics::new(registry);
         let replicas: Vec<Replica> = config
             .replicas
             .iter()
@@ -753,6 +940,7 @@ impl Fleet {
                 if let Some(cc) = &config.cache {
                     r.set_artifact_cache(cc.catalog.clone(), cc.capacity_bytes);
                 }
+                r.set_tracer(tracer.clone());
                 r
             })
             .collect();
@@ -770,10 +958,16 @@ impl Fleet {
             }
             None => Vec::new(),
         };
-        let gate = config
-            .autoscale
-            .as_ref()
-            .map(|a| FleetGate::new((replicas.len() * a.queue_per_replica).max(1)));
+        let gate = config.autoscale.as_ref().map(|a| {
+            let mut g = FleetGate::new((replicas.len() * a.queue_per_replica).max(1));
+            g.set_metrics(GateMetrics {
+                admitted: metrics.registry.counter("gate_admitted_total"),
+                shed_saturated: metrics.registry.counter("gate_shed_saturated_total"),
+                shed_queue: metrics.registry.counter("gate_shed_queue_total"),
+                evicted: metrics.registry.counter("gate_evicted_total"),
+            });
+            g
+        });
         let autoscaler = config.autoscale.clone().map(Autoscaler::new);
         Fleet {
             state: Mutex::new(FleetState {
@@ -803,6 +997,8 @@ impl Fleet {
                 pool_cursor: 0,
                 autoscaler,
                 gate,
+                tracer,
+                metrics,
             }),
             config,
         }
@@ -853,6 +1049,9 @@ impl Fleet {
         let mut st = self.state.lock().unwrap();
         st.advance(arrival_ms);
         let now = st.clock_ms;
+        st.metrics.arrivals.inc();
+        // One relaxed atomic load when tracing is off.
+        let trace = st.tracer.sample();
         // Without a tier the model field is meaningless: normalize it
         // so tierless fleets behave identically whatever ids a trace
         // or caller carries (no phantom batch splits, no shed).
@@ -860,6 +1059,10 @@ impl Fleet {
             ModelId::DEFAULT
         } else if st.artifact_cache.as_ref().is_some_and(|cc| !cc.catalog.contains(model)) {
             st.shed += 1;
+            st.metrics.shed.inc();
+            if let Some(id) = trace {
+                st.tracer.event(id, "terminal", "shed (model outside the catalog)", now, 0.0, 0);
+            }
             return None;
         } else {
             model
@@ -867,7 +1070,7 @@ impl Fleet {
         // Latency stays anchored at the true arrival even when another
         // caller already advanced the clock past it (out-of-order
         // wall-clock dispatches must not lose their queue wait).
-        let rider = Rider::from_qos(arrival_ms.min(now), qos).with_model(model);
+        let rider = Rider::from_qos(arrival_ms.min(now), qos).with_model(model).with_trace(trace);
         // Front door: with autoscaling on, shed *before* enqueueing
         // when the gate's queue cap is full or the controller reported
         // saturation — queues past the SLO help nobody.
@@ -876,19 +1079,56 @@ impl Fleet {
             let victim = st.find_victim(&rider, queued, now);
             let gate = st.gate.as_mut().expect("checked above");
             match gate.admit(queued, victim.is_some()) {
-                GateDecision::Admit => {}
+                GateDecision::Admit => {
+                    if let Some(id) = trace {
+                        st.tracer.event(
+                            id,
+                            "admit",
+                            format!("gate open (queued={queued})"),
+                            now,
+                            0.0,
+                            0,
+                        );
+                    }
+                }
                 GateDecision::AdmitEvict => {
                     st.evict(victim.expect("gate evicts only when a victim exists"), now);
+                    if let Some(id) = trace {
+                        st.tracer.event(
+                            id,
+                            "admit",
+                            format!("gate full (queued={queued}), cheaper rider evicted"),
+                            now,
+                            0.0,
+                            0,
+                        );
+                    }
                 }
                 GateDecision::ShedSaturated | GateDecision::ShedQueue => {
+                    let saturated = gate.is_saturated();
                     st.shed += 1;
+                    st.metrics.shed.inc();
+                    if let Some(id) = trace {
+                        let why = if saturated {
+                            "shed (controller reported saturation)"
+                        } else {
+                            "shed (gate queue full, nothing cheaper queued)"
+                        };
+                        st.tracer.event(id, "terminal", why, now, 0.0, 0);
+                    }
                     return None;
                 }
             }
+        } else if let Some(id) = trace {
+            st.tracer.event(id, "admit", "no gate (static fleet)", now, 0.0, 0);
         }
         let placed = st.place_rider(now, rider);
         if placed.is_none() {
             st.shed += 1;
+            st.metrics.shed.inc();
+            if let Some(id) = trace {
+                st.tracer.event(id, "terminal", "shed (no replica available)", now, 0.0, 0);
+            }
         }
         placed
     }
@@ -999,8 +1239,20 @@ impl Fleet {
             if let Some(p) = st.place_rider(now, orphan) {
                 st.replicas[p.replica].note_rerouted(p.anchor_ms);
                 st.rerouted += 1;
+                st.metrics.rerouted.inc();
             } else {
                 st.lost += 1;
+                st.metrics.lost.inc();
+                if let Some(id) = orphan.trace {
+                    st.tracer.event(
+                        id,
+                        "terminal",
+                        "lost (replica failed, no healthy replica to re-place on)",
+                        now,
+                        0.0,
+                        replica as u32 + 1,
+                    );
+                }
             }
         }
     }
@@ -1027,6 +1279,37 @@ impl Fleet {
     pub fn stats(&self) -> FleetReport {
         let st = self.state.lock().unwrap();
         self.snapshot(&st)
+    }
+
+    /// Shared handle to the fleet's metrics registry.
+    pub fn metrics(&self) -> Arc<MetricsRegistry> {
+        self.state.lock().unwrap().metrics.registry.clone()
+    }
+
+    /// Registry snapshot with the energy/clock gauges refreshed from
+    /// the authoritative replica meters first, so the numbers always
+    /// reconcile with a [`FleetReport`] taken at the same instant.
+    pub fn metrics_snapshot(&self) -> Json {
+        let st = self.state.lock().unwrap();
+        let _ = self.snapshot(&st); // refreshes the gauges
+        st.metrics.registry.snapshot()
+    }
+
+    /// Change the request-trace sampling rate at runtime (1 = every
+    /// arrival, 0 = off).
+    pub fn set_trace_sampling(&self, every: u64) {
+        self.state.lock().unwrap().tracer.set_sampling(every);
+    }
+
+    /// Snapshot of the sampled lifecycle spans (oldest first).
+    pub fn trace_spans(&self) -> Vec<SpanRecord> {
+        self.state.lock().unwrap().tracer.spans()
+    }
+
+    /// Export the sampled spans as Chrome trace-event JSON (load in
+    /// `chrome://tracing` or Perfetto).
+    pub fn trace_chrome_json(&self) -> Json {
+        self.state.lock().unwrap().tracer.export_chrome()
     }
 
     /// Snapshot the control loop (`None` when autoscaling is off).
@@ -1098,6 +1381,7 @@ impl Fleet {
         let service_energy_j: f64 = replicas.iter().map(|r| r.energy_spent_j).sum();
         let idle_energy_j: f64 = replicas.iter().map(|r| r.idle_energy_j).sum();
         let artifact_load_j: f64 = replicas.iter().map(|r| r.artifact_load_j).sum();
+        st.metrics.set_energy_gauges(service_energy_j, idle_energy_j, artifact_load_j, st.clock_ms);
         FleetReport {
             policy: self.config.policy.label(),
             dispatched: replicas.iter().map(|r| r.placements).sum(),

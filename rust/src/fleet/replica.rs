@@ -54,6 +54,7 @@ use crate::simulator::cost::{
 };
 use crate::simulator::device::{DeviceProfile, Precision};
 use crate::simulator::power::{energy_joules, idle_power_w};
+use crate::telemetry::trace::{TraceId, Tracer};
 use crate::telemetry::LatencyRecorder;
 use crate::util::json::Json;
 
@@ -186,6 +187,10 @@ pub struct Rider {
     /// The model this request serves (catalog index; ignored — and
     /// [`ModelId::DEFAULT`] — on fleets without an artifact tier).
     pub model: ModelId,
+    /// Tracing identity when the request was sampled at the gate
+    /// (`None` on the untraced fast path; see
+    /// [`Tracer`](crate::telemetry::trace::Tracer)).
+    pub trace: Option<TraceId>,
 }
 
 impl Rider {
@@ -196,6 +201,7 @@ impl Rider {
             priority: Qos::DEFAULT_PRIORITY,
             deadline_at_ms: f64::INFINITY,
             model: ModelId::DEFAULT,
+            trace: None,
         }
     }
 
@@ -207,12 +213,19 @@ impl Rider {
             priority: qos.priority,
             deadline_at_ms: qos.deadline_ms.map_or(f64::INFINITY, |d| anchor_ms + d),
             model: ModelId::DEFAULT,
+            trace: None,
         }
     }
 
     /// The same rider serving a named catalog model.
     pub fn with_model(mut self, model: ModelId) -> Rider {
         self.model = model;
+        self
+    }
+
+    /// The same rider carrying a sampled trace identity.
+    pub fn with_trace(mut self, trace: Option<TraceId>) -> Rider {
+        self.trace = trace;
         self
     }
 
@@ -403,6 +416,10 @@ pub struct Replica {
     pub placements: u64,
     pub completed: u64,
     pub latency: LatencyRecorder,
+    /// Lifecycle tracer shared with the fleet (`None` until
+    /// [`Replica::set_tracer`]); records batch-seal spans for sampled
+    /// riders.  Checking it is one `Option` test on the flush path.
+    tracer: Option<Arc<Tracer>>,
 }
 
 /// Per-replica artifact-tier state: the shared catalog, this device's
@@ -481,7 +498,14 @@ impl Replica {
             placements: 0,
             completed: 0,
             latency: LatencyRecorder::new(4096),
+            tracer: None,
         }
+    }
+
+    /// Attach the fleet's lifecycle tracer (batch-seal spans for
+    /// sampled riders land on this replica's track).
+    pub fn set_tracer(&mut self, tracer: Arc<Tracer>) {
+        self.tracer = Some(tracer);
     }
 
     /// Attach the artifact tier: a shared model catalog and a
@@ -813,6 +837,20 @@ impl Replica {
                 energy_total_j: energy,
                 riders,
             };
+            if let Some(tracer) = &self.tracer {
+                for r in &batch.riders {
+                    if let Some(id) = r.trace {
+                        tracer.event(
+                            id,
+                            "batch_seal",
+                            format!("{} sealed b={b} at {at_ms:.1} ms", self.name),
+                            at_ms,
+                            0.0,
+                            self.id as u32 + 1,
+                        );
+                    }
+                }
+            }
             self.busy_until_ms = batch.finish_ms;
             self.scheduled.push_back(batch);
         }

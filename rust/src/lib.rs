@@ -42,6 +42,17 @@
 //!   weights are already resident.  Every later scaling layer
 //!   (multi-backend, predictive scaling) plugs into this dispatch
 //!   point.
+//!
+//! The whole stack is observable through [`telemetry`]: a fleet-wide
+//! [`MetricsRegistry`](telemetry::metrics::MetricsRegistry) (counters,
+//! gauges, log-bucketed histograms labeled by replica / QoS class /
+//! model, reconciled exactly against the fleet's own report) and a
+//! per-request [`Tracer`](telemetry::trace::Tracer) that records
+//! lifecycle spans — admit, route, queue, batch seal, cold load,
+//! execute, terminal — in virtual time behind a sampling knob that
+//! defaults to off, exportable as Chrome trace-event JSON
+//! (`--trace-out`, or `{"cmd":"trace_dump"}` / `{"cmd":"metrics"}`
+//! over the server wire).
 
 pub mod config;
 pub mod convnet;

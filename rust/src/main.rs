@@ -33,6 +33,7 @@ use mobile_convnet::model::{ImageCorpus, SqueezeNet};
 use mobile_convnet::simulator::device::{DeviceProfile, Precision};
 use mobile_convnet::simulator::{autotune, cost, tables};
 use mobile_convnet::util::cli::Args;
+use mobile_convnet::util::json::Json;
 
 const USAGE: &str = "\
 mobile-convnet — SqueezeNet inference coordinator (paper reproduction)
@@ -50,6 +51,7 @@ COMMANDS:
                                               [--budget-j J] [--burst]
                                               [--batch B] [--batch-wait-ms W]
                                               [--autoscale KV] [--cache-mb MB]
+                                              [--trace-out FILE] [--trace-sample K]
   serve       start the TCP JSON-lines server [--addr HOST:PORT] [--config FILE]
                                               [--fleet SPEC] [--fleet-policy P]
                                               [--fleet-batch B] [--fleet-batch-wait-ms W]
@@ -71,6 +73,13 @@ model-artifact tier: MB of per-replica artifact cache over the default
 two-model catalog (squeezenet + detector).  Requests pick a model with
 "model" on the serve wire protocol; cold loads cost virtual time and
 joules and placement becomes affinity-aware.
+
+--trace-out FILE writes sampled per-request lifecycle spans (admit,
+route, queue, cold load, execute, terminal outcome) as Chrome
+trace-event JSON — load in chrome://tracing or Perfetto.
+--trace-sample K samples 1 in K arrivals (default 1 = all).  The live
+server exposes the same data via {\"cmd\":\"metrics\"} and
+{\"cmd\":\"trace_dump\"}.
 
 --fleet-autoscale / --autoscale attach the closed-loop autoscaler
 (also via MCN_FLEET_AUTOSCALE): comma-separated key=value pairs, pool
@@ -288,6 +297,11 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         let autoscale = AutoscaleConfig::parse(kv).map_err(|e| anyhow::anyhow!(e))?;
         cfg = cfg.with_autoscale(autoscale);
     }
+    let trace_out = args.get("trace-out");
+    let trace_sample = args.get_u64("trace-sample", 1).map_err(|e| anyhow::anyhow!(e))?;
+    if trace_out.is_some() {
+        cfg = cfg.with_trace_sampling(trace_sample.max(1));
+    }
     let n = args.get_usize("requests", 240).map_err(|e| anyhow::anyhow!(e))?;
     let rate = args.get_f64("rate", 8.0).map_err(|e| anyhow::anyhow!(e))?;
     let arrival = if args.flag("burst") {
@@ -313,6 +327,17 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     println!("{}", report.render());
     if let Some(asc) = fleet.autoscale_report() {
         println!("{}", asc.render());
+    }
+    if let Some(path) = trace_out {
+        let chrome = fleet.trace_chrome_json();
+        let n = chrome.get("traceEvents").and_then(Json::as_array).map_or(0, Vec::len);
+        std::fs::write(path, format!("{chrome}\n"))
+            .with_context(|| format!("writing trace to {path}"))?;
+        println!(
+            "\nwrote {n} spans (1 in {} arrivals sampled) to {path} — load in \
+             chrome://tracing or Perfetto",
+            trace_sample.max(1)
+        );
     }
     Ok(())
 }

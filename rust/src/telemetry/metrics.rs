@@ -1,0 +1,364 @@
+//! Fleet-wide metrics registry: counters, gauges, and log-bucketed
+//! histograms with O(1) record and O(buckets) percentile queries.
+//!
+//! The registry is the quantitative half of the observability layer
+//! (the tracing half lives in [`crate::telemetry::trace`]).  Metrics
+//! are named strings, optionally labeled (`name{k="v",...}` via
+//! [`labeled`]) by replica, QoS class, and model; the fleet registers
+//! its conservation counters (`arrivals`, `completed`, `shed`, `lost`,
+//! `expired`, ...) at the same code points that maintain the
+//! `FleetReport` totals, so a snapshot always reconciles exactly with
+//! the report — that invariant is enforced by the seeded test in
+//! `tests/telemetry_e2e.rs`.
+//!
+//! ## Log-bucketed histograms
+//!
+//! Latency samples land in geometric buckets with
+//! [`BUCKETS_PER_OCTAVE`] buckets per factor-of-two, so recording is a
+//! single increment and a percentile query is one pass over the bucket
+//! array — no sorting, no sample retention.  The relative width of a
+//! bucket is `2^(1/256) - 1 ≈ 0.27%`, and the reported value is the
+//! geometric midpoint of the winning bucket, so any percentile is
+//! within ~0.14% of the exact sample statistic — far inside every
+//! latency tolerance in the repo while removing the
+//! clone-and-sort-under-a-mutex cost the previous recorder paid per
+//! query.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Geometric buckets per factor-of-two of latency.
+pub const BUCKETS_PER_OCTAVE: usize = 256;
+/// Lower edge of the first real bucket (everything at or below lands
+/// in bucket 0).
+pub const MIN_BUCKET_MS: f64 = 1e-3;
+/// Total bucket count: bucket 0 (underflow), ~32 octaves of range
+/// (1 µs .. ~70 min of virtual time), and a top overflow bucket.
+pub const NUM_BUCKETS: usize = 2 + 32 * BUCKETS_PER_OCTAVE;
+
+/// Bucket index for a sample in milliseconds.  NaN and non-positive
+/// values land in the underflow bucket.
+pub fn bucket_of(ms: f64) -> usize {
+    if !(ms > MIN_BUCKET_MS) {
+        return 0;
+    }
+    let idx = ((ms / MIN_BUCKET_MS).log2() * BUCKETS_PER_OCTAVE as f64).floor() as usize + 1;
+    idx.min(NUM_BUCKETS - 1)
+}
+
+/// Representative value (geometric bucket midpoint) in milliseconds.
+pub fn bucket_value_ms(idx: usize) -> f64 {
+    if idx == 0 {
+        return MIN_BUCKET_MS;
+    }
+    MIN_BUCKET_MS * 2f64.powf((idx as f64 - 0.5) / BUCKETS_PER_OCTAVE as f64)
+}
+
+/// Monotone event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value-wins float gauge (f64 bits in an atomic).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+#[derive(Debug)]
+struct HistInner {
+    counts: Vec<u32>,
+    total: u64,
+    sum_ms: f64,
+}
+
+/// Cumulative log-bucketed latency histogram (no sliding window; for
+/// windowed semantics see
+/// [`LatencyRecorder`](crate::telemetry::LatencyRecorder), which
+/// shares the bucket layout).
+#[derive(Debug)]
+pub struct Histogram {
+    inner: Mutex<HistInner>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            inner: Mutex::new(HistInner {
+                counts: vec![0; NUM_BUCKETS],
+                total: 0,
+                sum_ms: 0.0,
+            }),
+        }
+    }
+
+    /// O(1): one bucket increment.
+    pub fn record_ms(&self, ms: f64) {
+        let mut h = self.inner.lock().unwrap();
+        h.counts[bucket_of(ms)] += 1;
+        h.total += 1;
+        h.sum_ms += ms;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.inner.lock().unwrap().total
+    }
+
+    pub fn mean_ms(&self) -> Option<f64> {
+        let h = self.inner.lock().unwrap();
+        if h.total == 0 {
+            return None;
+        }
+        Some(h.sum_ms / h.total as f64)
+    }
+
+    /// Percentile in milliseconds (p in [0,1], clamped); `None` when
+    /// empty.  O(buckets): one cumulative walk.
+    pub fn percentile_ms(&self, p: f64) -> Option<f64> {
+        let h = self.inner.lock().unwrap();
+        if h.total == 0 {
+            return None;
+        }
+        let rank = ((h.total - 1) as f64 * p.clamp(0.0, 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for (idx, &c) in h.counts.iter().enumerate() {
+            seen += c as u64;
+            if seen > rank {
+                return Some(bucket_value_ms(idx));
+            }
+        }
+        Some(bucket_value_ms(NUM_BUCKETS - 1))
+    }
+}
+
+/// Render a metric name with labels: `name{k="v",...}`.  Labels are
+/// part of the registry key, so the same base name with different
+/// labels is a distinct time series.
+pub fn labeled(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let body: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+    format!("{name}{{{}}}", body.join(","))
+}
+
+/// Named-metric registry.  `counter`/`gauge`/`histogram` return shared
+/// handles (get-or-register), so hot paths resolve a metric once and
+/// update it lock-free afterwards; `snapshot` serializes everything in
+/// deterministic (sorted) order.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.counters.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.gauges.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.histograms.lock().unwrap();
+        m.entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::new())).clone()
+    }
+
+    /// Current value of a counter, `None` if never registered.
+    pub fn counter_value(&self, name: &str) -> Option<u64> {
+        self.counters.lock().unwrap().get(name).map(|c| c.get())
+    }
+
+    /// Current value of a gauge, `None` if never registered.
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.gauges.lock().unwrap().get(name).map(|g| g.get())
+    }
+
+    /// Sum of every counter whose name starts with `prefix` — used to
+    /// roll labeled series (`completed{replica=...}`) up to a total.
+    pub fn counter_sum(&self, prefix: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(_, c)| c.get())
+            .sum()
+    }
+
+    /// Full registry snapshot as JSON (counters, gauges, histogram
+    /// summaries), keys sorted for deterministic output.
+    pub fn snapshot(&self) -> Json {
+        let counters: Vec<(String, Json)> = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, c)| (k.clone(), Json::num(c.get() as f64)))
+            .collect();
+        let gauges: Vec<(String, Json)> = self
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, g)| (k.clone(), Json::num(g.get())))
+            .collect();
+        let opt_num = |v: Option<f64>| v.map(Json::num).unwrap_or(Json::Null);
+        let histograms: Vec<(String, Json)> = self
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| {
+                (
+                    k.clone(),
+                    Json::object(vec![
+                        ("count", Json::num(h.count() as f64)),
+                        ("mean_ms", opt_num(h.mean_ms())),
+                        ("p50_ms", opt_num(h.percentile_ms(0.50))),
+                        ("p95_ms", opt_num(h.percentile_ms(0.95))),
+                        ("p99_ms", opt_num(h.percentile_ms(0.99))),
+                    ]),
+                )
+            })
+            .collect();
+        Json::Object(vec![
+            ("counters".to_string(), Json::Object(counters)),
+            ("gauges".to_string(), Json::Object(gauges)),
+            ("histograms".to_string(), Json::Object(histograms)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_monotone_and_tight() {
+        // Every sample's representative value is within 0.2% of the
+        // sample itself (the histogram's whole accuracy story).
+        for &ms in &[0.002, 0.5, 1.0, 7.3, 55.8, 812.0, 12_345.6] {
+            let idx = bucket_of(ms);
+            let rep = bucket_value_ms(idx);
+            assert!(
+                (rep - ms).abs() / ms < 2e-3,
+                "rep {rep} too far from sample {ms}"
+            );
+        }
+        // Monotone: bigger samples never land in earlier buckets.
+        assert!(bucket_of(1.0) < bucket_of(2.0));
+        assert!(bucket_of(2.0) < bucket_of(1000.0));
+        // Degenerate inputs stay in range.
+        assert_eq!(bucket_of(f64::NAN), 0);
+        assert_eq!(bucket_of(-5.0), 0);
+        assert_eq!(bucket_of(f64::INFINITY), NUM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_percentiles_track_samples() {
+        let h = Histogram::new();
+        for i in 1..=1000 {
+            h.record_ms(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.percentile_ms(0.50).unwrap();
+        let p95 = h.percentile_ms(0.95).unwrap();
+        let p99 = h.percentile_ms(0.99).unwrap();
+        assert!((p50 - 500.0).abs() / 500.0 < 0.01, "p50 {p50}");
+        assert!((p95 - 950.0).abs() / 950.0 < 0.01, "p95 {p95}");
+        assert!((p99 - 990.0).abs() / 990.0 < 0.01, "p99 {p99}");
+        assert!(p50 < p95 && p95 < p99);
+        assert!((h.mean_ms().unwrap() - 500.5).abs() < 1e-9);
+        assert!(Histogram::new().percentile_ms(0.5).is_none());
+    }
+
+    #[test]
+    fn registry_handles_are_shared() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("fleet_arrivals_total");
+        let b = reg.counter("fleet_arrivals_total");
+        a.inc();
+        b.add(2);
+        assert_eq!(reg.counter_value("fleet_arrivals_total"), Some(3));
+        assert_eq!(reg.counter_value("never_registered"), None);
+        reg.gauge("fleet_active_replicas").set(4.0);
+        assert_eq!(reg.gauge_value("fleet_active_replicas"), Some(4.0));
+    }
+
+    #[test]
+    fn labeled_series_are_distinct_and_summable() {
+        let reg = MetricsRegistry::new();
+        reg.counter(&labeled("completed", &[("replica", "r0"), ("class", "hi")])).add(3);
+        reg.counter(&labeled("completed", &[("replica", "r1"), ("class", "lo")])).add(4);
+        assert_eq!(reg.counter_sum("completed"), 7);
+        assert_eq!(
+            labeled("x", &[("a", "1")]),
+            "x{a=\"1\"}"
+        );
+        assert_eq!(labeled("x", &[]), "x");
+    }
+
+    #[test]
+    fn snapshot_is_deterministic_json() {
+        let reg = MetricsRegistry::new();
+        reg.counter("b_total").inc();
+        reg.counter("a_total").inc();
+        reg.gauge("g").set(1.5);
+        reg.histogram("lat_ms").record_ms(10.0);
+        let snap = reg.snapshot();
+        let counters = snap.get("counters").unwrap();
+        // BTreeMap iteration: sorted keys regardless of insert order.
+        match counters {
+            Json::Object(pairs) => {
+                assert_eq!(pairs[0].0, "a_total");
+                assert_eq!(pairs[1].0, "b_total");
+            }
+            _ => panic!("counters must be an object"),
+        }
+        let hist = snap.get("histograms").unwrap().get("lat_ms").unwrap();
+        assert_eq!(hist.get("count").unwrap().as_f64(), Some(1.0));
+        let p50 = hist.get("p50_ms").unwrap().as_f64().unwrap();
+        assert!((p50 - 10.0).abs() / 10.0 < 0.01);
+    }
+}

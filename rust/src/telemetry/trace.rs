@@ -1,0 +1,261 @@
+//! Per-request lifecycle tracing for the fleet dispatch spine, in
+//! virtual time.
+//!
+//! A sampled request gets a [`TraceId`] at the front door and leaves a
+//! trail of [`SpanRecord`]s as it moves through the system: gate
+//! decision (`admit` / terminal `shed`), route decision (chosen
+//! replica plus the losing candidates' scores), queue wait, batch
+//! seal, cold artifact load, the scheduled execute window, and exactly
+//! one terminal span (`completed` / `expired` / `lost` / `evicted` /
+//! `shed`).  Spans land in a bounded ring and export as Chrome
+//! trace-event JSON (`chrome://tracing` / Perfetto's legacy loader)
+//! via [`Tracer::export_chrome`], surfaced by the server's
+//! `{"cmd":"trace_dump"}` and the `--trace-out` flag on the `fleet`
+//! subcommand and `trace_replay` example.
+//!
+//! Sampling defaults to **off**: the only cost on the dispatch path is
+//! one relaxed atomic load per arrival ([`Tracer::sample`] returns
+//! `None` immediately), which is what keeps the fleet benches
+//! regression-free with observability compiled in.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// Identity of one sampled request, assigned at the admission gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TraceId(pub u64);
+
+/// One lifecycle span in virtual time.  `track` groups spans per
+/// replica in the exported view (0 = the gate/router track).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRecord {
+    pub trace: TraceId,
+    /// Span kind: `admit`, `route`, `queue`, `batch_seal`,
+    /// `cold_load`, `execute`, or `terminal`.
+    pub name: &'static str,
+    /// Human detail (chosen replica, losing scores, outcome, ...).
+    pub detail: String,
+    pub start_ms: f64,
+    pub dur_ms: f64,
+    pub track: u32,
+}
+
+/// Default span-ring capacity (oldest spans drop first).
+pub const DEFAULT_RING_CAP: usize = 16_384;
+
+/// Sampling tracer with a bounded span ring.
+#[derive(Debug)]
+pub struct Tracer {
+    /// Sample 1 in `every` arrivals; 0 = tracing off.
+    every: AtomicU64,
+    seen: AtomicU64,
+    next_id: AtomicU64,
+    cap: usize,
+    ring: Mutex<VecDeque<SpanRecord>>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new(DEFAULT_RING_CAP, 0)
+    }
+}
+
+impl Tracer {
+    pub fn new(cap: usize, every: u64) -> Tracer {
+        Tracer {
+            every: AtomicU64::new(every),
+            seen: AtomicU64::new(0),
+            next_id: AtomicU64::new(0),
+            cap: cap.max(1),
+            ring: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// A tracer with sampling disabled (the default posture).
+    pub fn off() -> Tracer {
+        Tracer::default()
+    }
+
+    /// Change the sampling rate (1 = every request, 0 = off).
+    pub fn set_sampling(&self, every: u64) {
+        self.every.store(every, Ordering::Relaxed);
+    }
+
+    /// One relaxed load — the entire cost when tracing is off.
+    pub fn enabled(&self) -> bool {
+        self.every.load(Ordering::Relaxed) != 0
+    }
+
+    /// Per-arrival sampling decision: `Some(id)` for 1 in `every`
+    /// arrivals, `None` otherwise (and always when off).
+    pub fn sample(&self) -> Option<TraceId> {
+        let every = self.every.load(Ordering::Relaxed);
+        if every == 0 {
+            return None;
+        }
+        let n = self.seen.fetch_add(1, Ordering::Relaxed);
+        if n % every != 0 {
+            return None;
+        }
+        Some(TraceId(self.next_id.fetch_add(1, Ordering::Relaxed) + 1))
+    }
+
+    /// Record a span for a sampled request (caller already holds a
+    /// `TraceId`, so this is never reached on the untraced path).
+    pub fn record(&self, span: SpanRecord) {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() == self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(span);
+    }
+
+    /// Convenience: build + record.
+    #[allow(clippy::too_many_arguments)]
+    pub fn event(
+        &self,
+        trace: TraceId,
+        name: &'static str,
+        detail: impl Into<String>,
+        start_ms: f64,
+        dur_ms: f64,
+        track: u32,
+    ) {
+        self.record(SpanRecord {
+            trace,
+            name,
+            detail: detail.into(),
+            start_ms,
+            dur_ms: dur_ms.max(0.0),
+            track,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&self) {
+        self.ring.lock().unwrap().clear();
+    }
+
+    /// Snapshot of the span ring (oldest first).
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Export the ring as Chrome trace-event JSON: complete events
+    /// (`ph:"X"`), timestamps in microseconds of virtual time, one
+    /// `tid` per replica track.  Load the result in `chrome://tracing`
+    /// or Perfetto.
+    pub fn export_chrome(&self) -> Json {
+        let events: Vec<Json> = self
+            .ring
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|s| {
+                Json::object(vec![
+                    ("name", Json::str(s.name)),
+                    ("cat", Json::str("fleet")),
+                    ("ph", Json::str("X")),
+                    ("ts", Json::num(s.start_ms * 1e3)),
+                    ("dur", Json::num(s.dur_ms * 1e3)),
+                    ("pid", Json::num(1.0)),
+                    ("tid", Json::num(s.track as f64)),
+                    (
+                        "args",
+                        Json::object(vec![
+                            ("trace", Json::num(s.trace.0 as f64)),
+                            ("detail", Json::str(s.detail.clone())),
+                        ]),
+                    ),
+                ])
+            })
+            .collect();
+        Json::object(vec![
+            ("displayTimeUnit", Json::str("ms")),
+            ("traceEvents", Json::Array(events)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_off_is_the_default_and_free() {
+        let t = Tracer::off();
+        assert!(!t.enabled());
+        for _ in 0..100 {
+            assert!(t.sample().is_none());
+        }
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn sampling_rate_picks_one_in_k() {
+        let t = Tracer::new(64, 4);
+        assert!(t.enabled());
+        let ids: Vec<_> = (0..20).filter_map(|_| t.sample()).collect();
+        assert_eq!(ids.len(), 5, "1 in 4 of 20 arrivals");
+        // IDs are unique and dense.
+        for (i, id) in ids.iter().enumerate() {
+            assert_eq!(id.0, i as u64 + 1);
+        }
+        t.set_sampling(0);
+        assert!(t.sample().is_none());
+    }
+
+    #[test]
+    fn ring_bounds_span_count() {
+        let t = Tracer::new(4, 1);
+        for i in 0..10 {
+            t.event(TraceId(i), "terminal", "completed", i as f64, 0.0, 0);
+        }
+        let spans = t.spans();
+        assert_eq!(spans.len(), 4);
+        // Oldest dropped first.
+        assert_eq!(spans[0].trace, TraceId(6));
+        assert_eq!(spans[3].trace, TraceId(9));
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let t = Tracer::new(16, 1);
+        let id = t.sample().unwrap();
+        t.event(id, "route", "r0/s7@fp32 (runner-up r1 score 1.2)", 10.0, 0.0, 0);
+        t.event(id, "execute", "", 12.5, 55.8, 1);
+        let out = t.export_chrome();
+        let events = out.get("traceEvents").unwrap().as_array().unwrap();
+        assert_eq!(events.len(), 2);
+        let exec = &events[1];
+        assert_eq!(exec.get("ph").unwrap().as_str(), Some("X"));
+        // ms -> µs
+        assert_eq!(exec.get("ts").unwrap().as_f64(), Some(12_500.0));
+        assert_eq!(exec.get("dur").unwrap().as_f64(), Some(55_800.0));
+        assert_eq!(exec.get("tid").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            exec.get("args").unwrap().get("trace").unwrap().as_f64(),
+            Some(id.0 as f64)
+        );
+        // The export round-trips through the parser.
+        let text = out.to_string();
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn negative_durations_clamp_to_zero() {
+        let t = Tracer::new(4, 1);
+        t.event(TraceId(1), "queue", "", 5.0, -1.0, 0);
+        assert_eq!(t.spans()[0].dur_ms, 0.0);
+    }
+}

@@ -11,10 +11,12 @@
 //! `$BENCH_OUT_DIR` as a workflow artifact and `bench_gate` compares
 //! them against the checked-in `BENCH_BASELINE.json`.
 
-use std::path::PathBuf;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use crate::util::json::Json;
+use crate::util::stats;
 
 /// Statistics for one benchmarked operation.
 #[derive(Debug, Clone)]
@@ -160,6 +162,180 @@ pub fn write_json_summary(
     Ok(Some(path))
 }
 
+/// Publish a multi-seed bench's metrics as distributions: each metric
+/// records `{"median", "iqr", "min", "max", "n"}` over its per-seed
+/// samples (see [`bench_seeds`]).  Same `$BENCH_OUT_DIR` contract as
+/// [`write_json_summary`]; `Ok(None)` when the env is unset.  Panics
+/// if any metric has no samples — a missing value must fail loudly,
+/// not publish a perfect zero.
+pub fn write_json_distributions(
+    bench: &str,
+    metrics: &[(&str, &[f64])],
+) -> std::io::Result<Option<PathBuf>> {
+    let Some(dir) = std::env::var_os("BENCH_OUT_DIR") else {
+        return Ok(None);
+    };
+    let dir = PathBuf::from(dir);
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{bench}.json"));
+    let seeds = metrics.first().map(|(_, xs)| xs.len()).unwrap_or(0);
+    let json = Json::object(vec![
+        ("bench", Json::str(bench)),
+        ("seeds", Json::num(seeds as f64)),
+        (
+            "metrics",
+            Json::object(
+                metrics
+                    .iter()
+                    .map(|&(k, xs)| (k, MetricDist::from_samples(xs).to_json()))
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(&path, format!("{json}\n"))?;
+    println!("bench summary ({seeds} seeds) -> {}", path.display());
+    Ok(Some(path))
+}
+
+/// Primary seed for claim-check benches: the seed the `assert!`ed
+/// headline claims are tuned against (always first in [`bench_seeds`]).
+pub const PRIMARY_BENCH_SEED: u64 = 42;
+
+/// Seeds for multi-seed claim-check benches: `PRIMARY_BENCH_SEED`,
+/// `PRIMARY+1`, ... for `MOBILE_CONVNET_BENCH_SEEDS` seeds (default 3,
+/// floor 1).  The primary seed comes first — benches run their claim
+/// asserts on it alone and record metrics across all seeds, so the
+/// published summary is a distribution instead of a point estimate.
+pub fn bench_seeds() -> Vec<u64> {
+    let n = std::env::var("MOBILE_CONVNET_BENCH_SEEDS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(3)
+        .max(1);
+    (0..n as u64).map(|i| PRIMARY_BENCH_SEED + i).collect()
+}
+
+/// One metric's distribution across bench seeds — the unit `bench_gate`
+/// and `bench_report` operate on.  A legacy point value parses as a
+/// zero-spread distribution (`n = 1`, `iqr = 0`), so old baselines and
+/// single-run benches keep working.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricDist {
+    pub median: f64,
+    pub iqr: f64,
+    pub min: f64,
+    pub max: f64,
+    pub n: usize,
+}
+
+impl MetricDist {
+    /// A single-run point estimate.
+    pub fn point(v: f64) -> MetricDist {
+        MetricDist { median: v, iqr: 0.0, min: v, max: v, n: 1 }
+    }
+
+    /// Summarize per-seed samples (panics on an empty slice).
+    pub fn from_samples(xs: &[f64]) -> MetricDist {
+        let d = stats::distribution(xs).expect("metric needs at least one sample");
+        MetricDist { median: d.median, iqr: d.iqr(), min: d.min, max: d.max, n: d.n }
+    }
+
+    /// Parse a metric value: a bare number (legacy point) or a
+    /// distribution object with at least `"median"`.
+    pub fn from_json(v: &Json) -> Result<MetricDist, String> {
+        if let Some(n) = v.as_f64() {
+            return Ok(MetricDist::point(n));
+        }
+        let median = v
+            .get("median")
+            .and_then(|m| m.as_f64())
+            .ok_or_else(|| format!("metric must be a number or {{median,...}}: {v}"))?;
+        let f = |k: &str, d: f64| v.get(k).and_then(|x| x.as_f64()).unwrap_or(d);
+        Ok(MetricDist {
+            median,
+            iqr: f("iqr", 0.0),
+            min: f("min", median),
+            max: f("max", median),
+            n: v.get("n").and_then(|x| x.as_usize()).unwrap_or(1),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("median", Json::num(self.median)),
+            ("iqr", Json::num(self.iqr)),
+            ("min", Json::num(self.min)),
+            ("max", Json::num(self.max)),
+            ("n", Json::num(self.n as f64)),
+        ])
+    }
+}
+
+/// Flatten one parsed summary (`{"bench": ..., "metrics": {...}}`) into
+/// `bench/metric -> MetricDist` entries.
+pub fn flatten_summary(
+    doc: &Json,
+    into: &mut BTreeMap<String, MetricDist>,
+) -> Result<(), String> {
+    let bench = doc
+        .get("bench")
+        .and_then(|b| b.as_str())
+        .ok_or("summary missing \"bench\"")?;
+    let Json::Object(metrics) = doc.get("metrics").ok_or("summary missing \"metrics\"")?
+    else {
+        return Err(format!("{bench}: \"metrics\" must be an object"));
+    };
+    for (name, value) in metrics {
+        let dist = MetricDist::from_json(value).map_err(|e| format!("{bench}/{name}: {e}"))?;
+        into.insert(format!("{bench}/{name}"), dist);
+    }
+    Ok(())
+}
+
+/// Read every `*.json` summary in a bench-out directory into a flat
+/// `bench/metric -> MetricDist` map.
+pub fn read_bench_out(dir: &Path) -> Result<BTreeMap<String, MetricDist>, String> {
+    let mut out = BTreeMap::new();
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| format!("cannot read bench-out dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let path = entry.map_err(|e| e.to_string())?.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let doc = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        flatten_summary(&doc, &mut out).map_err(|e| format!("{}: {e}", path.display()))?;
+    }
+    Ok(out)
+}
+
+/// Parse a baseline file: `(tolerance_frac, bench/metric -> MetricDist)`.
+/// Metric values may be legacy numbers or distribution objects.
+pub fn read_baseline(
+    path: &Path,
+    default_tolerance: f64,
+) -> Result<(f64, BTreeMap<String, MetricDist>), String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read baseline {}: {e}", path.display()))?;
+    let doc = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+    let tol = doc
+        .get("tolerance_frac")
+        .and_then(|t| t.as_f64())
+        .unwrap_or(default_tolerance);
+    let Some(Json::Object(metrics)) = doc.get("metrics") else {
+        return Err(format!("{}: missing \"metrics\" object", path.display()));
+    };
+    let mut out = BTreeMap::new();
+    for (name, value) in metrics {
+        let dist =
+            MetricDist::from_json(value).map_err(|e| format!("{}/{name}: {e}", path.display()))?;
+        out.insert(name.clone(), dist);
+    }
+    Ok((tol, out))
+}
+
 /// Render an ASCII table: header row + rows of cells, column-aligned.
 /// Shared by the table benches and the CLI report commands.
 pub fn render_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
@@ -221,6 +397,50 @@ mod tests {
             let out = write_json_summary("noop_bench", &[("x_ms", 1.5)]).unwrap();
             assert!(out.is_none());
         }
+    }
+
+    #[test]
+    fn seeds_default_and_start_at_primary() {
+        if std::env::var_os("MOBILE_CONVNET_BENCH_SEEDS").is_none() {
+            let seeds = bench_seeds();
+            assert_eq!(seeds.len(), 3);
+            assert_eq!(seeds[0], PRIMARY_BENCH_SEED);
+            assert_eq!(seeds[2], PRIMARY_BENCH_SEED + 2);
+        }
+    }
+
+    #[test]
+    fn metric_dist_round_trips_and_accepts_points() {
+        let d = MetricDist::from_samples(&[3.0, 1.0, 2.0, 4.0]);
+        assert!((d.median - 2.5).abs() < 1e-12);
+        assert!((d.iqr - 1.5).abs() < 1e-12);
+        assert_eq!((d.min, d.max, d.n), (1.0, 4.0, 4));
+        let back = MetricDist::from_json(&d.to_json()).unwrap();
+        assert_eq!(back, d);
+        // legacy bare number -> zero-spread point
+        let p = MetricDist::from_json(&Json::num(7.5)).unwrap();
+        assert_eq!(p, MetricDist::point(7.5));
+        assert_eq!(p.iqr, 0.0);
+        // garbage fails loudly
+        assert!(MetricDist::from_json(&Json::str("nope")).is_err());
+        assert!(MetricDist::from_json(&Json::object(vec![("iqr", Json::num(1.0))])).is_err());
+    }
+
+    #[test]
+    fn summaries_flatten_both_shapes() {
+        let mut map = BTreeMap::new();
+        let legacy = Json::parse(r#"{"bench":"b1","metrics":{"x_ms":2.0}}"#).unwrap();
+        flatten_summary(&legacy, &mut map).unwrap();
+        let dist = Json::parse(
+            r#"{"bench":"b2","seeds":3,"metrics":{"y_j":{"median":5.0,"iqr":0.4,"min":4.8,"max":5.6,"n":3}}}"#,
+        )
+        .unwrap();
+        flatten_summary(&dist, &mut map).unwrap();
+        assert_eq!(map["b1/x_ms"], MetricDist::point(2.0));
+        assert_eq!(map["b2/y_j"].median, 5.0);
+        assert_eq!(map["b2/y_j"].n, 3);
+        let bad = Json::parse(r#"{"metrics":{}}"#).unwrap();
+        assert!(flatten_summary(&bad, &mut map).is_err());
     }
 
     #[test]

@@ -37,6 +37,54 @@ pub fn percentile(xs: &[f64], p: f64) -> Option<f64> {
     Some(sorted[((sorted.len() - 1) as f64 * p.clamp(0.0, 1.0)) as usize])
 }
 
+/// Robust distribution summary: representative (median) + spread
+/// (quartiles / IQR) + range.  This is what the multi-seed bench
+/// pipeline records per metric — the median is what `bench_gate`
+/// compares and the IQR is its noise tolerance (servo
+/// perf-analysis-tools pattern).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Distribution {
+    pub n: usize,
+    pub median: f64,
+    pub q1: f64,
+    pub q3: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Distribution {
+    /// Interquartile range (q3 - q1), the spread measure.
+    pub fn iqr(&self) -> f64 {
+        self.q3 - self.q1
+    }
+}
+
+/// Linearly interpolated quantile of a *sorted* sample.
+fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    let rank = (sorted.len() - 1) as f64 * q.clamp(0.0, 1.0);
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * (rank - lo as f64)
+}
+
+/// Median/quartiles/range of an unsorted sample (interpolated
+/// quantiles).  Returns `None` for an empty sample.
+pub fn distribution(xs: &[f64]) -> Option<Distribution> {
+    if xs.is_empty() {
+        return None;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Some(Distribution {
+        n: sorted.len(),
+        median: quantile_sorted(&sorted, 0.5),
+        q1: quantile_sorted(&sorted, 0.25),
+        q3: quantile_sorted(&sorted, 0.75),
+        min: sorted[0],
+        max: *sorted.last().unwrap(),
+    })
+}
+
 /// Pearson correlation of two equal-length samples.
 pub fn correlation(xs: &[f64], ys: &[f64]) -> Option<f64> {
     if xs.len() != ys.len() || xs.len() < 2 {
@@ -86,6 +134,21 @@ mod tests {
         assert_eq!(percentile(&xs, 1.0), Some(100.0));
         let p50 = percentile(&xs, 0.5).unwrap();
         assert!((49.0..=51.0).contains(&p50));
+    }
+
+    #[test]
+    fn distribution_known_values() {
+        let d = distribution(&[4.0, 1.0, 3.0, 2.0]).unwrap();
+        assert_eq!(d.n, 4);
+        assert!((d.median - 2.5).abs() < 1e-12);
+        assert!((d.q1 - 1.75).abs() < 1e-12);
+        assert!((d.q3 - 3.25).abs() < 1e-12);
+        assert!((d.iqr() - 1.5).abs() < 1e-12);
+        assert_eq!((d.min, d.max), (1.0, 4.0));
+        // a single sample degenerates to a zero-spread point
+        let p = distribution(&[7.0]).unwrap();
+        assert_eq!((p.median, p.iqr(), p.min, p.max), (7.0, 0.0, 7.0, 7.0));
+        assert!(distribution(&[]).is_none());
     }
 
     #[test]

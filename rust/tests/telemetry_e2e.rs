@@ -1,0 +1,258 @@
+//! End-to-end reconciliation of the observability layer against the
+//! fleet's own accounting: the metrics registry and the request
+//! tracer are *derived* views, so every number they publish must agree
+//! exactly with the `FleetReport` the simulation computes — across the
+//! gate/autoscale, QoS-deadline, and multi-model scenarios.  Virtual
+//! time makes every assertion deterministic and exact (the gauges are
+//! set from the very same f64 sums the report carries).
+
+use mobile_convnet::coordinator::trace::{Arrival, Trace};
+use mobile_convnet::coordinator::Qos;
+use mobile_convnet::fleet::{
+    autoscaler, run_trace, AutoscaleConfig, Fleet, FleetConfig, FleetReport, Policy,
+};
+use mobile_convnet::runtime::artifacts::{ModelCatalog, ModelId};
+use mobile_convnet::telemetry::metrics::MetricsRegistry;
+use mobile_convnet::util::json::Json;
+
+const POLICY: Policy = Policy::EnergyAware { lambda_j_per_ms: None };
+
+/// The conservation law every scenario must satisfy, stated over the
+/// *registry*, then reconciled counter-by-counter with the report.
+fn reconcile(registry: &MetricsRegistry, report: &FleetReport, n: u64, scenario: &str) {
+    let counter = |name: &str| registry.counter_value(name).unwrap_or(0);
+    let arrivals = counter("fleet_arrivals_total");
+    assert_eq!(arrivals, n, "{scenario}: every trace entry is an arrival");
+    assert_eq!(
+        arrivals,
+        counter("fleet_completed_total")
+            + counter("fleet_shed_total")
+            + counter("fleet_lost_total")
+            + counter("fleet_expired_total"),
+        "{scenario}: conservation over the registry"
+    );
+    assert_eq!(counter("fleet_completed_total"), report.completed, "{scenario}: completed");
+    assert_eq!(counter("fleet_shed_total"), report.shed, "{scenario}: shed");
+    assert_eq!(counter("fleet_expired_total"), report.expired, "{scenario}: expired");
+    assert_eq!(counter("fleet_lost_total"), report.lost, "{scenario}: lost");
+    assert_eq!(counter("fleet_rerouted_total"), report.rerouted, "{scenario}: rerouted");
+    assert_eq!(counter("fleet_evicted_total"), report.evicted, "{scenario}: evicted");
+
+    // Energy gauges are set inside the same snapshot that produced the
+    // report, from the same sums — exact equality, not approximate.
+    let gauge = |name: &str| registry.gauge_value(name).unwrap_or(f64::NAN);
+    assert_eq!(gauge("fleet_service_energy_j"), report.service_energy_j, "{scenario}");
+    assert_eq!(gauge("fleet_idle_energy_j"), report.idle_energy_j, "{scenario}");
+    assert_eq!(gauge("fleet_artifact_load_j"), report.artifact_load_j, "{scenario}");
+    assert_eq!(gauge("fleet_total_energy_j"), report.total_energy_j, "{scenario}");
+
+    // The latency histogram saw exactly the completions.
+    assert_eq!(
+        registry.histogram("fleet_latency_ms").count(),
+        report.completed,
+        "{scenario}: latency histogram count"
+    );
+
+    // Per-(replica, class[, model]) completion counters partition the
+    // completions.
+    assert_eq!(
+        registry.counter_sum("fleet_completed_by"),
+        report.completed,
+        "{scenario}: labeled completions partition the total"
+    );
+}
+
+fn autoscale_cfg() -> AutoscaleConfig {
+    let mut a = AutoscaleConfig::new(800.0)
+        .with_warm_pool(autoscaler::parse_pool("2xn5@fp16,1x6p@fp16").unwrap());
+    a.min_replicas = 1;
+    a.max_replicas = 4;
+    a.tick_ms = 250.0;
+    a.scale_up_after = 1;
+    a.scale_down_after = 4;
+    a.cooldown_ticks = 1;
+    a.queue_per_replica = 2;
+    a
+}
+
+fn spike_trace(seed: u64) -> Trace {
+    Trace::phases(
+        &[
+            (20, Arrival::Poisson { rate_per_s: 2.0 }),
+            (100, Arrival::Poisson { rate_per_s: 14.0 }),
+            (60, Arrival::Poisson { rate_per_s: 2.0 }),
+        ],
+        0.0,
+        seed,
+    )
+}
+
+#[test]
+fn registry_reconciles_with_report_under_autoscale_gate() {
+    let trace = spike_trace(42);
+    let n = trace.entries.len() as u64;
+    let cfg = FleetConfig::parse_spec("1xn5@fp16", POLICY)
+        .unwrap()
+        .with_autoscale(autoscale_cfg())
+        .with_seed(42);
+    let fleet = Fleet::new(cfg);
+    let report = run_trace(&fleet, &trace, &[]);
+    let registry = fleet.metrics();
+    reconcile(&registry, &report, n, "autoscale+gate");
+
+    // The gate's own counters reconcile with the fleet-level sheds:
+    // everything shed at this fleet's front door went through the gate
+    // (no unknown models, and a placement always exists post-gate).
+    let c = |name: &str| registry.counter_value(name).unwrap_or(0);
+    assert_eq!(
+        c("gate_shed_saturated_total") + c("gate_shed_queue_total") + c("gate_evicted_total"),
+        report.shed,
+        "gate sheds + evictions account for every front-door rejection"
+    );
+    assert_eq!(c("gate_evicted_total"), report.evicted);
+    assert_eq!(
+        c("gate_admitted_total"),
+        n - report.shed + report.evicted,
+        "admitted = arrivals - gate sheds (evicted riders were admitted first)"
+    );
+
+    // Autoscaler ticks published the control-loop gauges.
+    assert!(registry.gauge_value("fleet_active_replicas").is_some());
+    assert!(registry.gauge_value("fleet_queue_depth").is_some());
+}
+
+#[test]
+fn registry_reconciles_under_qos_deadlines() {
+    // 2 cheap replicas at ~4x overload with tight interactive
+    // deadlines: the QoS spine sheds hopeless riders at dequeue
+    // (expired), which exercises the fourth conservation term.
+    let trace = Trace::generate(200, Arrival::Poisson { rate_per_s: 35.0 }, 0.0, 42)
+        .with_base_qos(Qos::bulk())
+        .with_qos_mix(0.5, Qos::interactive(2, 250.0));
+    let n = trace.entries.len() as u64;
+    let cfg = FleetConfig::parse_spec("2xn5@fp16", POLICY).unwrap().with_seed(42);
+    let fleet = Fleet::new(cfg);
+    let report = run_trace(&fleet, &trace, &[]);
+    assert!(report.expired > 0, "the overload must actually expire riders: {report:?}");
+    reconcile(&fleet.metrics(), &report, n, "qos-deadlines");
+}
+
+#[test]
+fn registry_reconciles_under_multimodel() {
+    let catalog = ModelCatalog::two_model_zoo();
+    let capacity = (catalog.models()[1].total_bytes as f64 * 1.2) as u64;
+    let trace = Trace::generate(120, Arrival::Poisson { rate_per_s: 4.0 }, 0.0, 42)
+        .with_model_mix(0.5, ModelId(1));
+    let n = trace.entries.len() as u64;
+    let cfg = FleetConfig::parse_spec("2xn5@fp16", POLICY)
+        .unwrap()
+        .with_catalog(catalog, capacity)
+        .with_seed(42);
+    let fleet = Fleet::new(cfg);
+    assert!(fleet.prewarm(0, ModelId::DEFAULT));
+    assert!(fleet.prewarm(1, ModelId(1)));
+    let report = run_trace(&fleet, &trace, &[]);
+    assert!(report.artifact_loads > 0, "mixed traffic must cold-load: {report:?}");
+    reconcile(&fleet.metrics(), &report, n, "multimodel");
+    // Cold loads burned joules, and the gauge carries them exactly.
+    assert!(fleet.metrics().gauge_value("fleet_artifact_load_j").unwrap() > 0.0);
+}
+
+#[test]
+fn every_sampled_request_gets_exactly_one_terminal_span() {
+    use std::collections::BTreeMap;
+    // Sample everything through the gate/autoscale scenario — it
+    // produces completed, shed, and evicted terminals in one run.
+    let trace = spike_trace(42);
+    let n = trace.entries.len();
+    let cfg = FleetConfig::parse_spec("1xn5@fp16", POLICY)
+        .unwrap()
+        .with_autoscale(autoscale_cfg())
+        .with_seed(42)
+        .with_trace_sampling(1);
+    let fleet = Fleet::new(cfg);
+    let report = run_trace(&fleet, &trace, &[]);
+    let spans = fleet.trace_spans();
+    assert!(!spans.is_empty());
+
+    let mut terminals: BTreeMap<u64, Vec<String>> = BTreeMap::new();
+    for s in &spans {
+        assert!(
+            ["admit", "route", "queue", "batch_seal", "cold_load", "execute", "terminal"]
+                .contains(&s.name),
+            "unknown span kind {:?}",
+            s.name
+        );
+        assert!(s.dur_ms >= 0.0, "negative duration: {s:?}");
+        if s.name == "terminal" {
+            terminals.entry(s.trace.0).or_default().push(s.detail.clone());
+        }
+    }
+    assert_eq!(
+        terminals.len(),
+        n,
+        "at sampling 1, every arrival's lifecycle ends in a terminal span"
+    );
+    for (id, t) in &terminals {
+        assert_eq!(t.len(), 1, "trace {id} has {} terminal spans: {t:?}", t.len());
+    }
+    // Terminal details partition into the same outcome counts the
+    // report carries (evictions read "evicted ...", other gate sheds
+    // "shed ...").
+    let count = |pred: &dyn Fn(&str) -> bool| {
+        terminals.values().filter(|t| pred(&t[0])).count() as u64
+    };
+    assert_eq!(count(&|d| d.starts_with("completed")), report.completed);
+    assert_eq!(
+        count(&|d| d.starts_with("shed") || d.starts_with("evicted")),
+        report.shed
+    );
+    assert_eq!(count(&|d| d.starts_with("evicted")), report.evicted);
+    assert_eq!(count(&|d| d.starts_with("expired")), report.expired);
+}
+
+#[test]
+fn tracing_is_off_by_default_and_chrome_export_is_well_formed() {
+    let trace = Trace::generate(40, Arrival::Poisson { rate_per_s: 5.0 }, 0.0, 42);
+    // Default config: no sampling, no spans, no ring growth.
+    let silent = Fleet::new(FleetConfig::parse_spec("2xn5@fp16", POLICY).unwrap().with_seed(42));
+    run_trace(&silent, &trace, &[]);
+    assert!(silent.trace_spans().is_empty(), "sampling defaults to off");
+
+    // Runtime enablement (the server's knob) + Chrome export shape.
+    let traced = Fleet::new(FleetConfig::parse_spec("2xn5@fp16", POLICY).unwrap().with_seed(42));
+    traced.set_trace_sampling(1);
+    run_trace(&traced, &trace, &[]);
+    let spans = traced.trace_spans();
+    assert!(!spans.is_empty());
+    let chrome = traced.trace_chrome_json();
+    assert_eq!(chrome.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+    let events = chrome.get("traceEvents").and_then(Json::as_array).unwrap();
+    assert_eq!(events.len(), spans.len());
+    for e in events {
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+        assert!(e.get("name").and_then(Json::as_str).is_some());
+        assert!(e.get("ts").and_then(Json::as_f64).is_some());
+        assert!(e.get("dur").and_then(Json::as_f64).is_some());
+        assert!(e.get("pid").and_then(Json::as_usize).is_some());
+        assert!(e.get("tid").and_then(Json::as_usize).is_some());
+        assert!(e.get("args").and_then(|a| a.get("trace")).is_some());
+    }
+}
+
+#[test]
+fn metrics_snapshot_is_a_complete_json_view() {
+    let trace = Trace::generate(60, Arrival::Poisson { rate_per_s: 6.0 }, 0.0, 42);
+    let fleet = Fleet::new(FleetConfig::parse_spec("2xn5@fp16", POLICY).unwrap().with_seed(42));
+    run_trace(&fleet, &trace, &[]);
+    let snap = fleet.metrics_snapshot();
+    let counters = snap.get("counters").and_then(Json::as_map).unwrap();
+    assert!(counters.contains_key("fleet_arrivals_total"));
+    assert_eq!(counters["fleet_arrivals_total"].as_usize(), Some(60));
+    let gauges = snap.get("gauges").and_then(Json::as_map).unwrap();
+    assert!(gauges.contains_key("fleet_total_energy_j"));
+    let hists = snap.get("histograms").and_then(Json::as_map).unwrap();
+    let lat = hists.get("fleet_latency_ms").expect("latency histogram registered");
+    assert_eq!(lat.get("count").and_then(Json::as_usize), Some(60));
+    assert!(lat.get("p95_ms").and_then(Json::as_f64).unwrap() > 0.0);
+}
