@@ -1,0 +1,160 @@
+//! Lint: **bench/baseline coherence**.
+//!
+//! The CI bench gate compares every metric a bench writes through
+//! [`crate::util::bench::write_json_summary`] /
+//! [`write_json_distributions`](crate::util::bench::write_json_distributions)
+//! against `BENCH_BASELINE.json` and fails on a name-set mismatch —
+//! but only *after* the full multi-seed bench run.  This lint does the
+//! same comparison statically: it extracts the `"bench/metric"` keys
+//! from the writer call sites under `benches/` and diffs them against
+//! the baseline in both directions, so a renamed metric fails in
+//! seconds at lint time instead of twenty minutes into a bench job.
+//!
+//! Extraction keys on bracket shape, not just "string after `(`": a
+//! metric name is a string literal opening a tuple directly inside the
+//! writer's metrics slice (`(call -> [ -> (`), which skips unrelated
+//! literals like device names in helper calls.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+use super::lexer::Tok;
+use super::{Finding, Lint, SourceFile, SourceTree};
+
+/// The `util::bench` writer functions whose call sites define the
+/// written metric set.
+pub const WRITERS: &[&str] = &["write_json_summary", "write_json_distributions"];
+
+/// One `bench/metric` key written by a bench, with its call site.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MetricRef {
+    pub key: String,
+    pub file: String,
+    pub line: usize,
+}
+
+/// Extract every metric key written by files under `benches/`.
+pub fn written_metrics(tree: &SourceTree) -> Vec<MetricRef> {
+    let mut out = Vec::new();
+    for f in &tree.files {
+        if !f.rel.starts_with("benches/") {
+            continue;
+        }
+        let t = &f.scan.tokens;
+        let mut k = 0usize;
+        while k < t.len() {
+            let is_writer_call = t[k].ident().map(|w| WRITERS.contains(&w)).unwrap_or(false)
+                && t.get(k + 1).map(|n| n.is_punct('(')).unwrap_or(false);
+            if is_writer_call {
+                k = parse_call(f, k + 1, &mut out);
+            } else {
+                k += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Walk one writer call starting at its opening paren; returns the
+/// index just past the call.
+fn parse_call(f: &SourceFile, open: usize, out: &mut Vec<MetricRef>) -> usize {
+    let t = &f.scan.tokens;
+    let mut stack: Vec<char> = vec!['('];
+    let mut bench: Option<String> = None;
+    let mut k = open + 1;
+    while k < t.len() && !stack.is_empty() {
+        match &t[k].tok {
+            Tok::Punct(c @ ('(' | '[' | '{')) => stack.push(*c),
+            Tok::Punct(')' | ']' | '}') => {
+                stack.pop();
+            }
+            Tok::Str(s) => {
+                if stack.len() == 1 && bench.is_none() {
+                    bench = Some(s.clone());
+                } else if stack.as_slice() == ['(', '[', '(']
+                    && t[k - 1].is_punct('(')
+                {
+                    let b = bench.as_deref().unwrap_or("?");
+                    out.push(MetricRef {
+                        key: format!("{b}/{s}"),
+                        file: f.rel.clone(),
+                        line: t[k].line,
+                    });
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    k
+}
+
+/// See the module docs.
+pub struct BenchCoherence {
+    /// `bench/metric` keys present in the baseline.
+    pub baseline_keys: BTreeSet<String>,
+    /// Display label for baseline-side findings (usually the path).
+    pub baseline_label: String,
+}
+
+impl BenchCoherence {
+    pub fn new(baseline_keys: BTreeSet<String>, baseline_label: &str) -> BenchCoherence {
+        BenchCoherence { baseline_keys, baseline_label: baseline_label.to_string() }
+    }
+
+    /// Load the key set from `BENCH_BASELINE.json` (its `metrics`
+    /// object; non-metric keys like `_note` live outside it).
+    pub fn from_baseline(path: &Path) -> Result<BenchCoherence, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        let metrics = j
+            .get("metrics")
+            .and_then(|m| m.as_map())
+            .ok_or_else(|| format!("{}: no \"metrics\" object", path.display()))?;
+        let keys = metrics.keys().map(|k| k.to_string()).collect();
+        Ok(BenchCoherence::new(keys, &path.display().to_string()))
+    }
+}
+
+impl Lint for BenchCoherence {
+    fn name(&self) -> &'static str {
+        "bench-coherence"
+    }
+
+    fn check(&self, tree: &SourceTree) -> Vec<Finding> {
+        let written = written_metrics(tree);
+        let written_keys: BTreeSet<&str> = written.iter().map(|m| m.key.as_str()).collect();
+        let mut out = Vec::new();
+        for m in &written {
+            if !self.baseline_keys.contains(&m.key) {
+                out.push(Finding {
+                    lint: self.name(),
+                    file: m.file.clone(),
+                    line: m.line,
+                    message: format!(
+                        "bench writes metric `{}` that is absent from the \
+                         baseline — bench_gate would fail; add it to {}",
+                        m.key, self.baseline_label
+                    ),
+                });
+            }
+        }
+        for key in &self.baseline_keys {
+            if !written_keys.contains(key.as_str()) {
+                out.push(Finding {
+                    lint: self.name(),
+                    file: self.baseline_label.clone(),
+                    line: 1,
+                    message: format!(
+                        "baseline metric `{key}` is never written by any bench \
+                         under benches/ — stale entry or renamed metric"
+                    ),
+                });
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,278 @@
+//! Lint: **conservation-site completeness**.
+//!
+//! The fleet's headline invariant is
+//! `arrivals == completed + shed + lost + expired` (with `evicted` a
+//! sub-population of `shed`).  Every terminal outcome therefore lives
+//! in three places at once: a [`FleetReport`](crate::fleet::FleetReport)
+//! counter field, a mirrored `FleetMetrics` registry counter
+//! (`fleet_<name>_total`), and the assertion sites that state the law.
+//! PR 6 reconciled these by hand; this lint makes the triple-entry
+//! bookkeeping a static check, driven by one explicit declaration in
+//! `src/fleet/mod.rs`:
+//!
+//! ```text
+//! pub const TERMINAL_OUTCOMES: &[(&str, bool)] = &[
+//!     ("completed", true),   // bool: participates in the sum
+//!     ...
+//! ];
+//! ```
+//!
+//! Checks, in order:
+//! 1. the declaration exists and is non-empty;
+//! 2. every declared outcome is a `FleetReport` field, a `FleetMetrics`
+//!    field, and has a `"fleet_<name>_total"` registry literal;
+//! 3. every marked conservation site (a `// lint: conservation-site`
+//!    comment directly above the assertion) names every sum outcome,
+//!    and each site file has at least one marker;
+//! 4. every `u64` counter field of `FleetReport` is either a declared
+//!    outcome or on the known non-terminal allowlist — so adding a new
+//!    outcome without classifying it is a lint error, not a PR-6-style
+//!    reconciliation hunt.
+
+use std::collections::BTreeSet;
+
+use super::lexer::Scanned;
+use super::{Finding, Lint, SourceTree};
+
+/// Marker comment that designates the statement below it as a
+/// conservation assertion site.
+pub const SITE_MARKER: &str = "lint: conservation-site";
+
+/// `FleetReport` `u64` counters that are *not* terminal outcomes:
+/// flow counters (a request can be dispatched, then rerouted, then
+/// still complete) and artifact-tier aggregates.
+pub const NON_TERMINAL_COUNTERS: &[&str] = &[
+    "dispatched",
+    "rerouted",
+    "deadline_riders",
+    "deadline_missed",
+    "artifact_loads",
+    "cache_hits",
+    "cache_misses",
+    "cache_evictions",
+];
+
+/// See the module docs.
+pub struct ConservationCompleteness {
+    /// File declaring `TERMINAL_OUTCOMES`, `FleetReport`, and
+    /// `FleetMetrics` (crate-relative).
+    pub report_file: String,
+    /// Files that must each carry at least one marked site.
+    pub site_files: Vec<String>,
+}
+
+impl Default for ConservationCompleteness {
+    fn default() -> Self {
+        ConservationCompleteness {
+            report_file: "src/fleet/mod.rs".to_string(),
+            site_files: vec![
+                "src/fleet/mod.rs".to_string(),
+                "tests/telemetry_e2e.rs".to_string(),
+            ],
+        }
+    }
+}
+
+/// Parse the `TERMINAL_OUTCOMES` table: `("name", bool)` pairs between
+/// the declaration and its terminating `;`.  Returns the pairs and the
+/// declaration's line.
+pub fn parse_terminal_outcomes(scan: &Scanned) -> Option<(Vec<(String, bool)>, usize)> {
+    let t = &scan.tokens;
+    let k = t.iter().position(|x| x.is_ident("TERMINAL_OUTCOMES"))?;
+    let line = t[k].line;
+    let mut out = Vec::new();
+    let mut j = k + 1;
+    while j < t.len() && !t[j].is_punct(';') {
+        if let Some(s) = t[j].str_val() {
+            let flag = match t.get(j + 2).and_then(|x| x.ident()) {
+                Some("true") => true,
+                Some("false") => false,
+                _ => {
+                    j += 1;
+                    continue;
+                }
+            };
+            if t[j + 1].is_punct(',') {
+                out.push((s.to_string(), flag));
+            }
+        }
+        j += 1;
+    }
+    if out.is_empty() {
+        None
+    } else {
+        Some((out, line))
+    }
+}
+
+/// Field names (with the first type identifier and the line) of
+/// `struct <name> { ... }`.
+pub fn struct_fields(scan: &Scanned, name: &str) -> Vec<(String, String, usize)> {
+    let t = &scan.tokens;
+    let mut out = Vec::new();
+    let Some(k) = (0..t.len().saturating_sub(1))
+        .find(|&k| t[k].is_ident("struct") && t[k + 1].is_ident(name))
+    else {
+        return out;
+    };
+    let mut j = k + 2;
+    while j < t.len() && !t[j].is_punct('{') {
+        if t[j].is_punct(';') {
+            return out; // unit/tuple struct
+        }
+        j += 1;
+    }
+    let mut depth = 0i64;
+    while j < t.len() {
+        if t[j].is_punct('{') || t[j].is_punct('(') || t[j].is_punct('[') {
+            depth += 1;
+        } else if t[j].is_punct('}') || t[j].is_punct(')') || t[j].is_punct(']') {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        } else if depth == 1 && t[j + 1..].first().map(|n| n.is_punct(':')).unwrap_or(false) {
+            if let Some(field) = t[j].ident() {
+                // First identifier after the `:` is the head of the
+                // type (`u64`, `Vec`, `Arc`, ...).
+                let ty = t[j + 2..]
+                    .iter()
+                    .take_while(|x| !x.is_punct(',') && !x.is_punct('}'))
+                    .find_map(|x| x.ident())
+                    .unwrap_or("")
+                    .to_string();
+                out.push((field.to_string(), ty, t[j].line));
+            }
+        }
+        j += 1;
+    }
+    out
+}
+
+/// The marked site's text: lines after the marker up to and including
+/// the first line containing `;` or `}` (max 12 lines).
+fn site_text(raw: &str, marker_idx: usize) -> String {
+    let mut taken = Vec::new();
+    for l in raw.lines().skip(marker_idx + 1).take(12) {
+        taken.push(l);
+        if l.contains(';') || l.contains('}') {
+            break;
+        }
+    }
+    taken.join("\n")
+}
+
+impl Lint for ConservationCompleteness {
+    fn name(&self) -> &'static str {
+        "conservation-completeness"
+    }
+
+    fn check(&self, tree: &SourceTree) -> Vec<Finding> {
+        let mut out = Vec::new();
+        let finding = |file: &str, line: usize, message: String| Finding {
+            lint: "conservation-completeness",
+            file: file.to_string(),
+            line,
+            message,
+        };
+        let Some(f) = tree.file(&self.report_file) else {
+            return vec![finding(&self.report_file, 1, "file not found in source tree".into())];
+        };
+        let Some((outcomes, decl_line)) = parse_terminal_outcomes(&f.scan) else {
+            return vec![finding(
+                &self.report_file,
+                1,
+                "no TERMINAL_OUTCOMES declaration found — the conservation lint \
+                 is driven by it"
+                    .into(),
+            )];
+        };
+
+        let report_fields = struct_fields(&f.scan, "FleetReport");
+        let metrics_fields = struct_fields(&f.scan, "FleetMetrics");
+        let report_names: BTreeSet<&str> =
+            report_fields.iter().map(|(n, _, _)| n.as_str()).collect();
+        let metric_names: BTreeSet<&str> =
+            metrics_fields.iter().map(|(n, _, _)| n.as_str()).collect();
+        let literals: BTreeSet<&str> = f.scan.tokens.iter().filter_map(|t| t.str_val()).collect();
+
+        for (name, _) in &outcomes {
+            if !report_names.contains(name.as_str()) {
+                out.push(finding(
+                    &self.report_file,
+                    decl_line,
+                    format!("terminal outcome `{name}` has no FleetReport counter field"),
+                ));
+            }
+            if !metric_names.contains(name.as_str()) {
+                out.push(finding(
+                    &self.report_file,
+                    decl_line,
+                    format!("terminal outcome `{name}` has no mirrored FleetMetrics handle"),
+                ));
+            }
+            let lit = format!("fleet_{name}_total");
+            if !literals.contains(lit.as_str()) {
+                out.push(finding(
+                    &self.report_file,
+                    decl_line,
+                    format!("terminal outcome `{name}` has no `{lit}` registry literal"),
+                ));
+            }
+        }
+
+        for (fname, ty, line) in &report_fields {
+            if ty == "u64"
+                && !outcomes.iter().any(|(n, _)| n == fname)
+                && !NON_TERMINAL_COUNTERS.contains(&fname.as_str())
+            {
+                out.push(finding(
+                    &self.report_file,
+                    *line,
+                    format!(
+                        "FleetReport counter `{fname}` is neither a declared terminal \
+                         outcome nor a known non-terminal flow counter — classify it \
+                         in TERMINAL_OUTCOMES or NON_TERMINAL_COUNTERS"
+                    ),
+                ));
+            }
+        }
+
+        let sum: Vec<&str> = outcomes
+            .iter()
+            .filter(|(_, in_sum)| *in_sum)
+            .map(|(n, _)| n.as_str())
+            .collect();
+        for sf in &self.site_files {
+            let Some(file) = tree.file(sf) else {
+                out.push(finding(sf, 1, "conservation site file not found".into()));
+                continue;
+            };
+            let mut markers = 0usize;
+            for (idx, l) in file.raw.lines().enumerate() {
+                if !l.contains(SITE_MARKER) {
+                    continue;
+                }
+                markers += 1;
+                let text = site_text(&file.raw, idx);
+                for name in &sum {
+                    if !text.contains(name) {
+                        out.push(finding(
+                            sf,
+                            idx + 1,
+                            format!("conservation site does not name sum outcome `{name}`"),
+                        ));
+                    }
+                }
+            }
+            if markers == 0 {
+                out.push(finding(
+                    sf,
+                    1,
+                    format!("no `{SITE_MARKER}` marker — the law must be asserted here"),
+                ));
+            }
+        }
+        out
+    }
+}

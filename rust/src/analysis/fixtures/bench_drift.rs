@@ -1,0 +1,24 @@
+//! Lint fixture: a bench whose written metric names drift from the
+//! baseline key set the test supplies.  The device-name literal in
+//! the helper call must not be mistaken for a metric name.
+
+fn emit_distributions() {
+    write_json_distributions(
+        "fixture_bench",
+        &[
+            ("known_metric", &[1.0][..]),
+            ("drifted_metric", &[2.0][..]),
+        ],
+    );
+}
+
+fn emit_summary() {
+    write_json_summary(
+        "fixture_sum",
+        &[("sum_metric", helper("Galaxy S7"))],
+    );
+}
+
+fn helper(device: &str) -> f64 {
+    device.len() as f64
+}

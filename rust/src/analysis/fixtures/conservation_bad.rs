@@ -1,0 +1,35 @@
+//! Lint fixture: a conservation declaration whose `dropped` outcome
+//! is missing its FleetReport field, FleetMetrics mirror, and
+//! registry literal — plus an unclassified report counter and an
+//! assertion site that does not name the new outcome.
+
+pub const TERMINAL_OUTCOMES: &[(&str, bool)] = &[
+    ("completed", true),
+    ("shed", true),
+    ("lost", true),
+    ("dropped", true),
+];
+
+pub struct FleetReport {
+    pub completed: u64,
+    pub shed: u64,
+    pub lost: u64,
+    pub orphaned: u64,
+    pub total_energy_j: f64,
+}
+
+struct FleetMetrics {
+    completed: u64,
+    shed: u64,
+    lost: u64,
+}
+
+pub fn wire(m: &FleetMetrics) -> (&str, &str, &str) {
+    let _ = m;
+    ("fleet_completed_total", "fleet_shed_total", "fleet_lost_total")
+}
+
+pub fn check(r: &FleetReport) -> bool {
+    // lint: conservation-site
+    r.completed + r.shed + r.lost == 0
+}

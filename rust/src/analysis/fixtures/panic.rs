@@ -1,0 +1,35 @@
+//! Lint fixture: panic-capable sites for the panic-budget lint.
+//! Scanned as data under a spine-relative path by the analysis
+//! tests; a .unwrap() in these comments is not a site.
+
+pub fn sites(v: &[u64], o: Option<u64>) -> u64 {
+    let a = o.unwrap();
+    let b = v.first().copied().expect("non-empty");
+    if v.len() > 3 {
+        panic!("too many");
+    }
+    match a {
+        0 => unreachable!(),
+        _ => {}
+    }
+    let c = v[0];
+    let d = v[1..].len() as u64;
+    a + b + c + d
+}
+
+pub fn not_sites(o: Option<u64>) -> u64 {
+    let s = "v[0].unwrap() in a string is not a site";
+    let arr = [1u64, 2];
+    let first = arr.first().copied().unwrap_or(s.len() as u64);
+    o.unwrap_or(first)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt() {
+        let v = vec![1u64, 2, 3];
+        assert_eq!(super::sites(&v[..], Some(9)), 0);
+        let _ = Some(1u64).unwrap();
+    }
+}

@@ -1,0 +1,27 @@
+//! Lint fixture: deliberate wall-clock reads.  This file is data for
+//! the analysis tests (never compiled into the crate); the tests scan
+//! it under a fleet-relative path.  Instant::now or SystemTime in
+//! these doc lines must NOT be findings.
+
+pub fn bad_instant() -> u64 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_millis() as u64
+}
+
+pub fn not_findings() -> usize {
+    // A comment mentioning Instant::now is fine.
+    let s = "and SystemTime in a string is fine too";
+    s.len()
+}
+
+pub fn bad_wall() -> std::time::SystemTime {
+    std::time::SystemTime::now()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn wall_clock_in_tests_is_still_flagged() {
+        let _ = std::time::Instant::now();
+    }
+}

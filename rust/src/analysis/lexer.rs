@@ -1,0 +1,298 @@
+//! Comment- and string-aware scanner for Rust source.
+//!
+//! This is deliberately *not* a Rust parser: the lints in this module
+//! need exactly three things a regex can't give them reliably —
+//! (1) knowing when text sits inside a comment or string literal,
+//! (2) a token stream with source lines for adjacency rules like
+//! `.unwrap(` vs `.unwrap_or(`, and (3) a per-line map of
+//! `#[cfg(test)] mod` regions so test code is exempt from the panic
+//! budget.  A ~200-line byte machine covers all three in the same
+//! hand-rolled spirit as [`crate::util::json`].
+
+/// One lexical token.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    /// Identifier or keyword.
+    Ident(String),
+    /// String literal body (quotes stripped, escapes left raw).
+    Str(String),
+    /// Numeric literal text.
+    Num(String),
+    /// Any other single ASCII character.
+    Punct(char),
+}
+
+/// A token plus the 1-based line it starts on.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub line: usize,
+    pub tok: Tok,
+}
+
+impl Token {
+    pub fn is_punct(&self, c: char) -> bool {
+        matches!(&self.tok, Tok::Punct(p) if *p == c)
+    }
+
+    pub fn is_ident(&self, w: &str) -> bool {
+        matches!(&self.tok, Tok::Ident(s) if s == w)
+    }
+
+    pub fn ident(&self) -> Option<&str> {
+        match &self.tok {
+            Tok::Ident(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn str_val(&self) -> Option<&str> {
+        match &self.tok {
+            Tok::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Scan result: token stream, per-line text with comments stripped and
+/// literal bodies blanked, and a per-line `#[cfg(test)] mod` mask.
+#[derive(Debug)]
+pub struct Scanned {
+    pub tokens: Vec<Token>,
+    pub scrubbed: Vec<String>,
+    pub test_mask: Vec<bool>,
+}
+
+impl Scanned {
+    /// Is this 1-based line inside a `#[cfg(test)] mod` region?
+    pub fn in_test(&self, line: usize) -> bool {
+        line >= 1 && self.test_mask.get(line - 1).copied().unwrap_or(false)
+    }
+}
+
+fn take_ident(b: &[u8], start: usize) -> (String, usize) {
+    let mut j = start;
+    while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+        j += 1;
+    }
+    (String::from_utf8_lossy(&b[start..j]).into_owned(), j)
+}
+
+/// Scan a source file into tokens, scrubbed lines, and the test mask.
+pub fn scan(text: &str) -> Scanned {
+    let b = text.as_bytes();
+    let n = b.len();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut tokens: Vec<Token> = Vec::new();
+    let mut scrubbed: Vec<String> = Vec::new();
+    let mut cur = String::new();
+
+    macro_rules! end_line {
+        () => {{
+            scrubbed.push(std::mem::take(&mut cur));
+            line += 1;
+        }};
+    }
+
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            end_line!();
+            i += 1;
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            // Line comment (including /// and //! docs): skip to EOL.
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            // Block comment, nestable.
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'\n' {
+                    end_line!();
+                    i += 1;
+                } else if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+        } else if c == b'r' && i + 1 < n && (b[i + 1] == b'"' || b[i + 1] == b'#') {
+            // Raw string literal r"..." / r#"..."#, else an identifier
+            // that merely starts with `r`.
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && b[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == b'"' {
+                j += 1;
+                let start = j;
+                let start_line = line;
+                let mut end = n;
+                while j < n {
+                    if b[j] == b'"' {
+                        let mut h = 0usize;
+                        while h < hashes && j + 1 + h < n && b[j + 1 + h] == b'#' {
+                            h += 1;
+                        }
+                        if h == hashes {
+                            end = j;
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                let body = String::from_utf8_lossy(&b[start..end]).into_owned();
+                for _ in 0..body.matches('\n').count() {
+                    end_line!();
+                }
+                tokens.push(Token { line: start_line, tok: Tok::Str(body) });
+                cur.push_str("\"\"");
+                i = (end + 1 + hashes).min(n);
+            } else {
+                let (w, j2) = take_ident(b, i);
+                cur.push_str(&w);
+                tokens.push(Token { line, tok: Tok::Ident(w) });
+                i = j2;
+            }
+        } else if c == b'"' {
+            let start_line = line;
+            let mut body = String::new();
+            let mut j = i + 1;
+            while j < n {
+                if b[j] == b'\\' && j + 1 < n {
+                    body.push(b[j] as char);
+                    body.push(b[j + 1] as char);
+                    j += 2;
+                } else if b[j] == b'"' {
+                    break;
+                } else {
+                    if b[j] == b'\n' {
+                        end_line!();
+                    }
+                    body.push(b[j] as char);
+                    j += 1;
+                }
+            }
+            tokens.push(Token { line: start_line, tok: Tok::Str(body) });
+            cur.push_str("\"\"");
+            i = j + 1;
+        } else if c == b'\'' {
+            // Char literal vs lifetime.
+            if i + 1 < n && b[i + 1] == b'\\' {
+                let mut j = i + 2;
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+                cur.push(' ');
+                i = (j + 1).min(n);
+            } else if i + 2 < n && b[i + 2] == b'\'' && b[i + 1] != b'\'' {
+                cur.push(' ');
+                i += 3;
+            } else {
+                // Lifetime marker: emit the quote, let the name lex as
+                // an ordinary (harmless) identifier.
+                tokens.push(Token { line, tok: Tok::Punct('\'') });
+                cur.push('\'');
+                i += 1;
+            }
+        } else if c.is_ascii_alphabetic() || c == b'_' {
+            let (w, j) = take_ident(b, i);
+            cur.push_str(&w);
+            tokens.push(Token { line, tok: Tok::Ident(w) });
+            i = j;
+        } else if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n {
+                let d = b[j];
+                if d.is_ascii_alphanumeric() || d == b'_' {
+                    j += 1;
+                } else if d == b'.' && j + 1 < n && b[j + 1].is_ascii_digit() {
+                    // `2.0` continues the number; `1..5` does not.
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            let w = String::from_utf8_lossy(&b[i..j]).into_owned();
+            cur.push_str(&w);
+            tokens.push(Token { line, tok: Tok::Num(w) });
+            i = j;
+        } else if c.is_ascii() {
+            if !c.is_ascii_whitespace() {
+                tokens.push(Token { line, tok: Tok::Punct(c as char) });
+            }
+            cur.push(c as char);
+            i += 1;
+        } else {
+            // Non-ASCII outside comments/strings: opaque filler.
+            cur.push('.');
+            i += 1;
+        }
+    }
+    scrubbed.push(cur);
+    let test_mask = compute_test_mask(&tokens, scrubbed.len());
+    Scanned { tokens, scrubbed, test_mask }
+}
+
+fn is_cfg_test(t: &[Token], k: usize) -> bool {
+    k + 6 < t.len()
+        && t[k].is_punct('#')
+        && t[k + 1].is_punct('[')
+        && t[k + 2].is_ident("cfg")
+        && t[k + 3].is_punct('(')
+        && t[k + 4].is_ident("test")
+        && t[k + 5].is_punct(')')
+        && t[k + 6].is_punct(']')
+}
+
+/// Mark every line spanned by a `#[cfg(test)] mod ... { ... }` item
+/// (the test shape used throughout this crate).  Brace matching runs
+/// over tokens, so braces inside strings or comments can't desync it.
+fn compute_test_mask(tokens: &[Token], nlines: usize) -> Vec<bool> {
+    let mut mask = vec![false; nlines.max(1)];
+    let mut k = 0usize;
+    while k < tokens.len() {
+        if is_cfg_test(tokens, k) {
+            let mut j = k + 7;
+            while j < tokens.len() && tokens[j].is_ident("pub") {
+                j += 1;
+            }
+            if j < tokens.len() && tokens[j].is_ident("mod") {
+                let mut open = j;
+                while open < tokens.len() && !tokens[open].is_punct('{') {
+                    open += 1;
+                }
+                let mut depth = 0i64;
+                let mut close = open;
+                while close < tokens.len() {
+                    if tokens[close].is_punct('{') {
+                        depth += 1;
+                    } else if tokens[close].is_punct('}') {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    close += 1;
+                }
+                let lo = tokens[k].line;
+                let hi = tokens.get(close).map(|t| t.line).unwrap_or(nlines);
+                for l in lo..=hi.min(nlines) {
+                    mask[l - 1] = true;
+                }
+                k = close + 1;
+                continue;
+            }
+        }
+        k += 1;
+    }
+    mask
+}

@@ -1,0 +1,254 @@
+//! Lint: **panic budget** for the dispatch spine.
+//!
+//! `fleet/` and `coordinator/` sit on the request path: a panic there
+//! doesn't fail one request, it poisons the fleet lock and takes the
+//! whole coordinator down.  This lint counts panic-capable patterns in
+//! non-test spine code — `.unwrap()`, `.expect(...)`, panic-family
+//! macros, and `x[...]` indexing — against a checked-in ratchet file
+//! (`rust/analyze_budget.json`).  The count may go *down* freely
+//! (refresh with `cargo run --bin analyze -- --update-budget`); any
+//! growth is a finding, so new panic sites must be consciously
+//! budgeted instead of accreting silently.
+//!
+//! `assert!`/`assert_eq!` are deliberately *not* counted: invariant
+//! assertions are the repo's specification style, and the conservation
+//! law depends on them.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+use super::{Finding, Lint, SourceFile, SourceTree};
+
+/// Crate-relative prefixes of the dispatch spine.
+pub const SPINE_PREFIXES: &[&str] = &["src/fleet/", "src/coordinator/"];
+
+/// Budget categories, in report order.
+pub const CATEGORIES: &[&str] = &["unwrap", "expect", "panic", "index"];
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// Keywords that may directly precede `[` without it being an index
+/// expression (`let [a, b] = ...`, `for x in [..]`, `impl [T]`, ...).
+const KEYWORDS: &[&str] = &[
+    "as", "async", "await", "box", "break", "const", "continue", "crate", "dyn",
+    "else", "enum", "fn", "for", "if", "impl", "in", "let", "loop", "match",
+    "mod", "move", "mut", "pub", "ref", "return", "static", "struct", "super",
+    "trait", "type", "unsafe", "use", "where", "while",
+];
+
+/// One panic-capable site in non-test spine code.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PanicSite {
+    pub file: String,
+    pub line: usize,
+    pub category: &'static str,
+}
+
+/// Scan the spine files of `tree` for panic-capable sites.
+pub fn panic_sites(tree: &SourceTree) -> Vec<PanicSite> {
+    let mut out = Vec::new();
+    for f in &tree.files {
+        if SPINE_PREFIXES.iter().any(|p| f.rel.starts_with(p)) {
+            scan_file(f, &mut out);
+        }
+    }
+    out
+}
+
+fn scan_file(f: &SourceFile, out: &mut Vec<PanicSite>) {
+    use super::lexer::Tok;
+    let t = &f.scan.tokens;
+    for k in 0..t.len() {
+        let line = t[k].line;
+        if f.scan.in_test(line) {
+            continue;
+        }
+        let category = match &t[k].tok {
+            Tok::Ident(w) if w == "unwrap" || w == "expect" => {
+                let method_call = k > 0
+                    && t[k - 1].is_punct('.')
+                    && t.get(k + 1).map(|n| n.is_punct('(')).unwrap_or(false);
+                if method_call {
+                    if w == "unwrap" {
+                        Some("unwrap")
+                    } else {
+                        Some("expect")
+                    }
+                } else {
+                    None
+                }
+            }
+            Tok::Ident(w) if PANIC_MACROS.contains(&w.as_str()) => {
+                if t.get(k + 1).map(|n| n.is_punct('!')).unwrap_or(false) {
+                    Some("panic")
+                } else {
+                    None
+                }
+            }
+            Tok::Punct('[') if k > 0 => match &t[k - 1].tok {
+                Tok::Ident(w) if !KEYWORDS.contains(&w.as_str()) => Some("index"),
+                Tok::Punct(')') | Tok::Punct(']') | Tok::Punct('?') => Some("index"),
+                _ => None,
+            },
+            _ => None,
+        };
+        if let Some(category) = category {
+            out.push(PanicSite { file: f.rel.clone(), line, category });
+        }
+    }
+}
+
+/// Per-file, per-category allowed counts — the ratchet.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PanicBudget {
+    pub per_file: BTreeMap<String, BTreeMap<String, u64>>,
+}
+
+impl PanicBudget {
+    /// Aggregate observed sites into per-file category counts.
+    pub fn from_sites(sites: &[PanicSite]) -> PanicBudget {
+        let mut per_file: BTreeMap<String, BTreeMap<String, u64>> = BTreeMap::new();
+        for s in sites {
+            *per_file
+                .entry(s.file.clone())
+                .or_default()
+                .entry(s.category.to_string())
+                .or_insert(0) += 1;
+        }
+        PanicBudget { per_file }
+    }
+
+    pub fn allowed(&self, file: &str, category: &str) -> u64 {
+        self.per_file
+            .get(file)
+            .and_then(|c| c.get(category))
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Total across every file and category.
+    pub fn total(&self) -> u64 {
+        self.per_file.values().flat_map(|c| c.values()).sum()
+    }
+
+    pub fn from_json(j: &Json) -> Result<PanicBudget, String> {
+        let files = j
+            .get("files")
+            .and_then(|f| f.as_map())
+            .ok_or("budget file has no \"files\" object")?;
+        let mut per_file = BTreeMap::new();
+        for (file, cats) in files {
+            let cats = cats
+                .as_map()
+                .ok_or_else(|| format!("budget entry for {file} is not an object"))?;
+            let mut by_cat = BTreeMap::new();
+            for (cat, v) in cats {
+                let n = v
+                    .as_f64()
+                    .ok_or_else(|| format!("budget {file}/{cat} is not a number"))?;
+                by_cat.insert(cat.to_string(), n as u64);
+            }
+            per_file.insert(file.to_string(), by_cat);
+        }
+        Ok(PanicBudget { per_file })
+    }
+
+    pub fn load(path: &Path) -> Result<PanicBudget, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        PanicBudget::from_json(&j)
+    }
+
+    /// Pretty JSON for the checked-in ratchet file (stable key order,
+    /// trailing newline).
+    pub fn to_json_string(&self) -> String {
+        let mut s = String::from("{\n");
+        s.push_str(
+            "  \"_note\": \"Panic-pattern ratchet for the dispatch spine \
+             (src/fleet/, src/coordinator/): non-test unwrap/expect/panic-macro/\
+             index counts per file, enforced by `cargo run --bin analyze`. \
+             Counts may only go down; refresh with `cargo run --bin analyze -- \
+             --update-budget` after removing sites. See rust/src/analysis/.\",\n",
+        );
+        s.push_str("  \"files\": {\n");
+        let nfiles = self.per_file.len();
+        for (fi, (file, cats)) in self.per_file.iter().enumerate() {
+            s.push_str(&format!("    \"{file}\": {{"));
+            let ncats = cats.len();
+            for (ci, (cat, n)) in cats.iter().enumerate() {
+                s.push_str(&format!("\"{cat}\": {n}"));
+                if ci + 1 < ncats {
+                    s.push_str(", ");
+                }
+            }
+            s.push('}');
+            if fi + 1 < nfiles {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("  }\n}\n");
+        s
+    }
+}
+
+/// Entries where the budget is looser than reality — harmless, but
+/// worth ratcheting down (reported as warnings, not findings).
+pub fn loose_entries(budget: &PanicBudget, current: &PanicBudget) -> Vec<String> {
+    let mut out = Vec::new();
+    for (file, cats) in &budget.per_file {
+        for (cat, &allowed) in cats {
+            let actual = current.allowed(file, cat);
+            if allowed > actual {
+                out.push(format!(
+                    "{file}: {cat} budget {allowed} but only {actual} found — \
+                     ratchet down with --update-budget"
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// See the module docs.
+pub struct PanicBudgetLint {
+    pub budget: PanicBudget,
+}
+
+impl Lint for PanicBudgetLint {
+    fn name(&self) -> &'static str {
+        "panic-budget"
+    }
+
+    fn check(&self, tree: &SourceTree) -> Vec<Finding> {
+        let sites = panic_sites(tree);
+        let current = PanicBudget::from_sites(&sites);
+        let mut out = Vec::new();
+        for (file, cats) in &current.per_file {
+            for (cat, &count) in cats {
+                let allowed = self.budget.allowed(file, cat);
+                if count > allowed {
+                    let first_line = sites
+                        .iter()
+                        .find(|s| &s.file == file && s.category == *cat)
+                        .map(|s| s.line)
+                        .unwrap_or(1);
+                    out.push(Finding {
+                        lint: self.name(),
+                        file: file.clone(),
+                        line: first_line,
+                        message: format!(
+                            "{count} `{cat}` panic site(s) exceed the ratcheted \
+                             budget of {allowed} — remove the new site or \
+                             consciously raise it via --update-budget"
+                        ),
+                    });
+                }
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,58 @@
+//! Lint: **virtual-time purity**.
+//!
+//! The fleet, the device simulator, and the telemetry layer measure
+//! *simulated* milliseconds and joules; a single `Instant::now()` in
+//! those modules silently mixes wall-clock time into virtual-time
+//! accounting (the exact bug class PRs 2–4 fixed by hand).  Wall-clock
+//! reads belong only in the layers that genuinely face the host:
+//! `coordinator/` (TCP deadlines), `runtime/` (real execution), and
+//! `util/bench.rs` (self-measurement).
+//!
+//! The check is textual over comment/string-scrubbed lines, so a
+//! mention in a doc comment or an error message is not a finding —
+//! but any *code* use, including in `#[cfg(test)]` code (fleet tests
+//! must be deterministic too), is.
+
+use super::{Finding, Lint, SourceTree};
+
+/// Path prefixes (relative to the crate root) that must never read the
+/// wall clock.
+pub const FORBIDDEN_PREFIXES: &[&str] = &["src/fleet/", "src/simulator/", "src/telemetry/"];
+
+/// Wall-clock constructs the virtual-time layers must not touch.
+pub const PATTERNS: &[&str] = &["Instant::now", "SystemTime"];
+
+/// See the module docs.
+pub struct VirtualTimePurity;
+
+impl Lint for VirtualTimePurity {
+    fn name(&self) -> &'static str {
+        "virtual-time-purity"
+    }
+
+    fn check(&self, tree: &SourceTree) -> Vec<Finding> {
+        let mut out = Vec::new();
+        for f in &tree.files {
+            if !FORBIDDEN_PREFIXES.iter().any(|p| f.rel.starts_with(p)) {
+                continue;
+            }
+            for (idx, l) in f.scan.scrubbed.iter().enumerate() {
+                for pat in PATTERNS {
+                    if l.contains(pat) {
+                        out.push(Finding {
+                            lint: self.name(),
+                            file: f.rel.clone(),
+                            line: idx + 1,
+                            message: format!(
+                                "wall-clock `{pat}` in a virtual-time module \
+                                 (allowed only in coordinator/, runtime/, and \
+                                 util/bench.rs)"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,129 @@
+//! Repo-native static analysis runner (CI `analyze` job).
+//!
+//! ```text
+//! cargo run --bin analyze                     # lint the tree, exit 1 on findings
+//! cargo run --bin analyze -- --update-budget  # rewrite rust/analyze_budget.json
+//! ```
+//!
+//! Runs the four lints in [`mobile_convnet::analysis`] over `src/`,
+//! `tests/`, and `benches/`: virtual-time purity, conservation-site
+//! completeness, the ratcheted panic budget, and bench/baseline
+//! coherence.  Findings print as `file:line: [lint] message`; a loose
+//! (over-generous) panic budget prints warnings but exits 0.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use mobile_convnet::analysis::bench_coherence::BenchCoherence;
+use mobile_convnet::analysis::conservation::ConservationCompleteness;
+use mobile_convnet::analysis::panic_budget::{self, PanicBudget, PanicBudgetLint};
+use mobile_convnet::analysis::purity::VirtualTimePurity;
+use mobile_convnet::analysis::{Finding, Lint, SourceTree};
+
+const USAGE: &str = "usage: analyze [--update-budget]\n\
+  Lints the crate's own source tree (see rust/src/analysis/).\n\
+  --update-budget  rewrite rust/analyze_budget.json from current panic-site counts";
+
+/// The crate root: the cwd itself, `rust/` under the repo root, or —
+/// when invoked from somewhere else entirely — the build-time manifest
+/// directory.
+fn find_rust_root() -> Option<PathBuf> {
+    if let Ok(cwd) = std::env::current_dir() {
+        for cand in [cwd.clone(), cwd.join("rust")] {
+            if cand.join("src").join("analysis").is_dir() && cand.join("Cargo.toml").is_file() {
+                return Some(cand);
+            }
+        }
+    }
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    if manifest.join("src").join("analysis").is_dir() {
+        return Some(manifest);
+    }
+    None
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        println!("{USAGE}");
+        return ExitCode::SUCCESS;
+    }
+    if let Some(bad) = args.iter().find(|a| a.as_str() != "--update-budget") {
+        eprintln!("analyze: unknown argument `{bad}`\n{USAGE}");
+        return ExitCode::FAILURE;
+    }
+    let update_budget = args.iter().any(|a| a == "--update-budget");
+
+    let Some(rust_root) = find_rust_root() else {
+        eprintln!("analyze: cannot locate the crate root (run from rust/ or the repo root)");
+        return ExitCode::FAILURE;
+    };
+    let tree = match SourceTree::load(&rust_root) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("analyze: failed to load source tree under {}: {e}", rust_root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+
+    let mut findings: Vec<Finding> = Vec::new();
+    findings.extend(VirtualTimePurity.check(&tree));
+    findings.extend(ConservationCompleteness::default().check(&tree));
+
+    let baseline_path = rust_root.join("..").join("BENCH_BASELINE.json");
+    match BenchCoherence::from_baseline(&baseline_path) {
+        Ok(lint) => findings.extend(lint.check(&tree)),
+        Err(e) => findings.push(Finding {
+            lint: "bench-coherence",
+            file: baseline_path.display().to_string(),
+            line: 1,
+            message: e,
+        }),
+    }
+
+    let budget_path = rust_root.join("analyze_budget.json");
+    let sites = panic_budget::panic_sites(&tree);
+    let current = PanicBudget::from_sites(&sites);
+    if update_budget {
+        if let Err(e) = std::fs::write(&budget_path, current.to_json_string()) {
+            eprintln!("analyze: cannot write {}: {e}", budget_path.display());
+            return ExitCode::FAILURE;
+        }
+        println!(
+            "analyze: wrote {} ({} panic sites across {} spine files)",
+            budget_path.display(),
+            current.total(),
+            current.per_file.len()
+        );
+    } else {
+        match PanicBudget::load(&budget_path) {
+            Ok(budget) => {
+                findings.extend(PanicBudgetLint { budget: budget.clone() }.check(&tree));
+                for warning in panic_budget::loose_entries(&budget, &current) {
+                    println!("analyze: warning: {warning}");
+                }
+            }
+            Err(e) => findings.push(Finding {
+                lint: "panic-budget",
+                file: budget_path.display().to_string(),
+                line: 1,
+                message: format!("{e} (bootstrap with --update-budget)"),
+            }),
+        }
+    }
+
+    for f in &findings {
+        println!("{f}");
+    }
+    println!(
+        "analyze: {} files scanned, {} panic sites counted, {} finding(s)",
+        tree.files.len(),
+        current.total(),
+        findings.len()
+    );
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -11,6 +11,7 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::model::graph::SqueezeNet;
+use crate::util::sync::lock_unpoisoned;
 use crate::simulator::autotune::{autotune_network, NetworkPlan};
 use crate::simulator::device::{DeviceProfile, Precision};
 
@@ -41,11 +42,11 @@ impl PlanCache {
     /// discarded — autotuning is deterministic, so both are identical).
     pub fn plan(&self, device: &DeviceProfile, precision: Precision) -> NetworkPlan {
         let key = (device.id, precision.label());
-        if let Some(plan) = self.plans.lock().unwrap().get(&key) {
+        if let Some(plan) = lock_unpoisoned(&self.plans).get(&key) {
             return plan.clone();
         }
         let plan = autotune_network(&self.net, precision, device);
-        let mut plans = self.plans.lock().unwrap();
+        let mut plans = lock_unpoisoned(&self.plans);
         plans.entry(key).or_insert(plan).clone()
     }
 
@@ -56,7 +57,7 @@ impl PlanCache {
 
     /// Number of cached plans (for tests).
     pub fn cached(&self) -> usize {
-        self.plans.lock().unwrap().len()
+        lock_unpoisoned(&self.plans).len()
     }
 }
 

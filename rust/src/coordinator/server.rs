@@ -55,6 +55,12 @@ use crate::util::json::Json;
 use super::engine::Coordinator;
 use super::request::{InferResponse, Qos};
 
+/// Upper bound on one request line.  The largest legitimate request is
+/// an inline `"image"` array (150528 floats, ~2.5 MB as text); 8 MiB
+/// clears that with room while still bounding what one connection can
+/// make the handler buffer.
+const MAX_REQUEST_BYTES: usize = 8 << 20;
+
 /// Parse a request line into an inference (image, precision, sim/fleet
 /// flags, QoS class) or a command.
 enum Parsed {
@@ -198,7 +204,27 @@ fn handle_client(
         // Accumulate into `line` across timeouts until a full line is in.
         match reader.read_line(&mut line) {
             Ok(0) => break, // EOF
-            Ok(_) if !line.ends_with('\n') => continue,
+            Ok(_) if !line.ends_with('\n') => {
+                // A client streaming bytes without a newline would grow
+                // `line` without bound; cap the request and hang up.
+                if line.len() > MAX_REQUEST_BYTES {
+                    writeln!(
+                        writer,
+                        "{}",
+                        Json::object(vec![("error", Json::str("request line too long"))])
+                    )?;
+                    break;
+                }
+                continue;
+            }
+            Ok(_) if line.len() > MAX_REQUEST_BYTES => {
+                writeln!(
+                    writer,
+                    "{}",
+                    Json::object(vec![("error", Json::str("request line too long"))])
+                )?;
+                break;
+            }
             Ok(_) => {}
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
@@ -597,6 +623,47 @@ mod tests {
         assert!(parse_request(r#"{"image": [1.0]}"#, 3).is_err());
         assert!(parse_request(r#"{"precision": "half"}"#, 3).is_err());
         assert!(parse_request(r#"{"cmd": "dance"}"#, 3).is_err());
+    }
+
+    /// Seeded corruption of valid requests: every mutant must come
+    /// back `Ok` or `Err` — a panic here is a crashed handler thread
+    /// in production.  The LCG makes failures reproducible.
+    #[test]
+    fn seeded_bad_input_is_an_error_never_a_panic() {
+        const ROUNDS: usize = 500;
+        let seeds = [
+            r#"{"image_seed": 3, "precision": "imprecise"}"#,
+            r#"{"image_seed": 1, "fleet": true, "priority": 2, "deadline_ms": 500, "model": "m"}"#,
+            r#"{"image": [0.1, 0.2, 0.3]}"#,
+            r#"{"cmd": "metrics"}"#,
+        ];
+        let pool: Vec<char> = "{}[]\",:0123456789.eE+-truefalsnm ".chars().collect();
+        let mut state: u64 = 0x00c0ffee;
+        let mut rand = move |m: usize| -> usize {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as usize) % m.max(1)
+        };
+        for _ in 0..ROUNDS {
+            let base: Vec<char> = seeds[rand(seeds.len())].chars().collect();
+            let mut mutant = base.clone();
+            match rand(3) {
+                0 => mutant.truncate(rand(base.len() + 1)),
+                1 => {
+                    let i = rand(base.len());
+                    mutant[i] = pool[rand(pool.len())];
+                }
+                _ => {
+                    let i = rand(base.len() + 1);
+                    mutant.insert(i, pool[rand(pool.len())]);
+                }
+            }
+            let text: String = mutant.into_iter().collect();
+            let _ = parse_request(&text, 3); // Ok or Err both fine
+        }
+        // Known nasties are errors, not aborts: a bracket bomb burns
+        // one parser stack frame per `[` without the depth guard.
+        let bomb = format!("{{\"image\": {}", "[".repeat(100_000));
+        assert!(parse_request(&bomb, 3).is_err(), "deep nesting is a visible error");
     }
 
     #[test]

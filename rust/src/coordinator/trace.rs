@@ -224,7 +224,7 @@ pub fn replay(coordinator: &Arc<Coordinator>, trace: &Trace, corpus: &ImageCorpu
         }
     }
     let wall = start.elapsed();
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    latencies.sort_by(f64::total_cmp);
     Ok(ReplayReport {
         completed: latencies.len(),
         errors,

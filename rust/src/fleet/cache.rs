@@ -80,12 +80,15 @@ impl ArtifactCache {
                 .iter()
                 .enumerate()
                 .min_by(|(_, a), (_, b)| {
-                    (a.last_used_ms, a.bytes)
-                        .partial_cmp(&(b.last_used_ms, b.bytes))
-                        .expect("recency is never NaN")
+                    a.last_used_ms
+                        .total_cmp(&b.last_used_ms)
+                        .then(a.bytes.cmp(&b.bytes))
                 })
-                .map(|(i, _)| i)
-                .expect("over capacity implies at least one resident entry");
+                .map(|(i, _)| i);
+            // Over capacity implies a resident entry; if that ever
+            // breaks, stop evicting rather than loop or panic — the
+            // insert below keeps the cache serving.
+            let Some(victim) = victim else { break };
             self.entries.swap_remove(victim);
             self.evictions += 1;
         }

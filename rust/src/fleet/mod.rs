@@ -104,6 +104,11 @@
 //! weights-already-on-device assumption).  Cold loads cost joules and
 //! time, never requests, so conservation is unchanged.
 
+// The dispatch spine holds a ratcheted panic budget (see
+// `rust/src/analysis/panic_budget.rs`); unwrap is denied outright in
+// fleet code (tests are exempt via clippy.toml).
+#![deny(clippy::unwrap_used)]
+
 pub mod autoscaler;
 pub mod budget;
 pub mod cache;
@@ -128,6 +133,7 @@ use std::time::Duration;
 
 use crate::coordinator::admission::{FleetGate, GateDecision, GateMetrics};
 use crate::coordinator::trace::Trace;
+use crate::util::sync::lock_unpoisoned;
 use crate::coordinator::{PlanCache, Qos};
 use crate::runtime::artifacts::{ModelCatalog, ModelId};
 use crate::simulator::device::Precision;
@@ -773,9 +779,7 @@ impl FleetState {
             .iter()
             .filter(|r| r.parked && r.in_flight() == 0)
             .min_by(|a, b| {
-                a.energy_per_request_j()
-                    .partial_cmp(&b.energy_per_request_j())
-                    .unwrap()
+                a.energy_per_request_j().total_cmp(&b.energy_per_request_j())
             })
             .map(|r| r.id);
         if let Some(id) = parked {
@@ -858,13 +862,12 @@ impl FleetState {
             .min_by(|a, b| {
                 // least loaded first; among equals, highest keep-alive
                 // cost drains first (idle rail, then service joules)
-                (a.in_flight() as f64, -a.idle_power_w(), -a.energy_per_request_j())
-                    .partial_cmp(&(
-                        b.in_flight() as f64,
-                        -b.idle_power_w(),
-                        -b.energy_per_request_j(),
-                    ))
-                    .unwrap()
+                (a.in_flight() as f64)
+                    .total_cmp(&(b.in_flight() as f64))
+                    .then((-a.idle_power_w()).total_cmp(&-b.idle_power_w()))
+                    .then(
+                        (-a.energy_per_request_j()).total_cmp(&-b.energy_per_request_j()),
+                    )
             })
             .map(|r| r.id);
         let Some(id) = victim else { return };
@@ -953,7 +956,7 @@ impl Fleet {
             Some(a) => {
                 let mut priced: Vec<(f64, ReplicaSpec)> =
                     a.warm_pool.iter().map(|s| (price(s), s.clone())).collect();
-                priced.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+                priced.sort_by(|x, y| x.0.total_cmp(&y.0));
                 priced.into_iter().map(|(_, s)| s).collect()
             }
             None => Vec::new(),
@@ -1010,7 +1013,7 @@ impl Fleet {
 
     /// Current replica count (provisioned replicas included).
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().replicas.len()
+        lock_unpoisoned(&self.state).replicas.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -1019,7 +1022,7 @@ impl Fleet {
 
     /// Advance virtual time to `t_ms`, completing finished requests.
     pub fn run_to(&self, t_ms: f64) {
-        self.state.lock().unwrap().advance(t_ms);
+        lock_unpoisoned(&self.state).advance(t_ms);
     }
 
     /// Dispatch one default-class request arriving at `arrival_ms`
@@ -1046,7 +1049,7 @@ impl Fleet {
     /// outside the catalog cannot be served and is shed (counted, so
     /// conservation holds).
     pub fn dispatch_model(&self, arrival_ms: f64, qos: Qos, model: ModelId) -> Option<Placement> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         st.advance(arrival_ms);
         let now = st.clock_ms;
         st.metrics.arrivals.inc();
@@ -1077,8 +1080,12 @@ impl Fleet {
         if st.gate.is_some() {
             let queued: usize = st.replicas.iter().map(Replica::in_flight).sum();
             let victim = st.find_victim(&rider, queued, now);
-            let gate = st.gate.as_mut().expect("checked above");
-            match gate.admit(queued, victim.is_some()) {
+            let decision = st
+                .gate
+                .as_mut()
+                .map(|gate| gate.admit(queued, victim.is_some()))
+                .unwrap_or(GateDecision::Admit);
+            match decision {
                 GateDecision::Admit => {
                     if let Some(id) = trace {
                         st.tracer.event(
@@ -1092,7 +1099,9 @@ impl Fleet {
                     }
                 }
                 GateDecision::AdmitEvict => {
-                    st.evict(victim.expect("gate evicts only when a victim exists"), now);
+                    if let Some(victim) = victim {
+                        st.evict(victim, now);
+                    }
                     if let Some(id) = trace {
                         st.tracer.event(
                             id,
@@ -1105,11 +1114,10 @@ impl Fleet {
                     }
                 }
                 GateDecision::ShedSaturated | GateDecision::ShedQueue => {
-                    let saturated = gate.is_saturated();
                     st.shed += 1;
                     st.metrics.shed.inc();
                     if let Some(id) = trace {
-                        let why = if saturated {
+                        let why = if matches!(decision, GateDecision::ShedSaturated) {
                             "shed (controller reported saturation)"
                         } else {
                             "shed (gate queue full, nothing cheaper queued)"
@@ -1139,7 +1147,7 @@ impl Fleet {
     /// Artifact-load joules the admission triggered are *not*
     /// refunded: the model genuinely became resident.
     pub fn retract(&self, placement: &Placement) -> bool {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         match st.replicas.get_mut(placement.replica) {
             Some(r) => r.retract_last(placement),
             None => false,
@@ -1159,7 +1167,7 @@ impl Fleet {
     /// fleet has no artifact tier, the replica does not exist, or the
     /// model is outside the catalog.
     pub fn prewarm(&self, replica: usize, model: ModelId) -> bool {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         if !st.artifact_cache.as_ref().is_some_and(|cc| cc.catalog.contains(model)) {
             return false;
         }
@@ -1182,7 +1190,7 @@ impl Fleet {
     /// Unconditional — operator override; prefer [`Fleet::try_drain`]
     /// when a failed peer's queue may have just re-routed here.
     pub fn drain(&self, replica: usize) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         let now = st.clock_ms;
         let idle_on = st.idle_on;
         if let Some(r) = st.replicas.get_mut(replica) {
@@ -1200,7 +1208,7 @@ impl Fleet {
     /// landed on.  Returns whether the drain was applied; a refusal is
     /// a deferral — retry once the orphans complete.
     pub fn try_drain(&self, replica: usize) -> bool {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         let now = st.clock_ms;
         let idle_on = st.idle_on;
         match st.replicas.get_mut(replica) {
@@ -1222,7 +1230,7 @@ impl Fleet {
     /// fail no longer double-books the request as both rerouted and
     /// shed, and `dispatched == arrivals - shed + rerouted` holds.
     pub fn fail(&self, replica: usize) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         if replica >= st.replicas.len() {
             return;
         }
@@ -1259,7 +1267,7 @@ impl Fleet {
 
     /// Return a drained/failed replica to rotation.
     pub fn revive(&self, replica: usize) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         let now = st.clock_ms;
         if let Some(r) = st.replicas.get_mut(replica) {
             r.revive(now);
@@ -1277,20 +1285,20 @@ impl Fleet {
 
     /// Snapshot the fleet without advancing time.
     pub fn stats(&self) -> FleetReport {
-        let st = self.state.lock().unwrap();
+        let st = lock_unpoisoned(&self.state);
         self.snapshot(&st)
     }
 
     /// Shared handle to the fleet's metrics registry.
     pub fn metrics(&self) -> Arc<MetricsRegistry> {
-        self.state.lock().unwrap().metrics.registry.clone()
+        lock_unpoisoned(&self.state).metrics.registry.clone()
     }
 
     /// Registry snapshot with the energy/clock gauges refreshed from
     /// the authoritative replica meters first, so the numbers always
     /// reconcile with a [`FleetReport`] taken at the same instant.
     pub fn metrics_snapshot(&self) -> Json {
-        let st = self.state.lock().unwrap();
+        let st = lock_unpoisoned(&self.state);
         let _ = self.snapshot(&st); // refreshes the gauges
         st.metrics.registry.snapshot()
     }
@@ -1298,23 +1306,23 @@ impl Fleet {
     /// Change the request-trace sampling rate at runtime (1 = every
     /// arrival, 0 = off).
     pub fn set_trace_sampling(&self, every: u64) {
-        self.state.lock().unwrap().tracer.set_sampling(every);
+        lock_unpoisoned(&self.state).tracer.set_sampling(every);
     }
 
     /// Snapshot of the sampled lifecycle spans (oldest first).
     pub fn trace_spans(&self) -> Vec<SpanRecord> {
-        self.state.lock().unwrap().tracer.spans()
+        lock_unpoisoned(&self.state).tracer.spans()
     }
 
     /// Export the sampled spans as Chrome trace-event JSON (load in
     /// `chrome://tracing` or Perfetto).
     pub fn trace_chrome_json(&self) -> Json {
-        self.state.lock().unwrap().tracer.export_chrome()
+        lock_unpoisoned(&self.state).tracer.export_chrome()
     }
 
     /// Snapshot the control loop (`None` when autoscaling is off).
     pub fn autoscale_report(&self) -> Option<AutoscaleReport> {
-        let st = self.state.lock().unwrap();
+        let st = lock_unpoisoned(&self.state);
         let sample = st.sample(st.clock_ms);
         let gate = st.gate.as_ref().map(FleetGate::stats);
         st.autoscaler.as_ref().map(|a| a.report(&sample, gate))
@@ -1323,7 +1331,7 @@ impl Fleet {
     /// Drain scaling events pending delivery (the server attaches them
     /// to the next fleet-backed infer reply).
     pub fn take_autoscale_events(&self) -> Vec<ScaleEvent> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         match &mut st.autoscaler {
             Some(a) => a.take_pending(),
             None => Vec::new(),
@@ -1334,7 +1342,7 @@ impl Fleet {
     /// flush at their deadlines first, so the final clock is the exact
     /// virtual time of the last completion.
     pub fn finish(&self) -> FleetReport {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         for r in &mut st.replicas {
             r.force_flush();
         }
@@ -1507,7 +1515,31 @@ fn opt_ms(v: Option<f64>) -> String {
     v.map(|x| format!("{x:.1}")).unwrap_or_else(|| "-".into())
 }
 
+/// Every terminal outcome a request can reach, with whether it
+/// participates in the conservation sum
+/// `arrivals == completed + shed + lost + expired` (`evicted` is a
+/// sub-population of `shed`: it mirrors a counter but is not a sum
+/// term).  The `analyze` binary's conservation lint is driven by this
+/// table: each entry must have a [`FleetReport`] counter field, a
+/// `FleetMetrics` registry mirror (`fleet_<name>_total`), and every
+/// `// lint: conservation-site` assertion must name every sum
+/// participant — so a new outcome cannot ship half-wired.
+pub const TERMINAL_OUTCOMES: &[(&str, bool)] = &[
+    ("completed", true),
+    ("shed", true),
+    ("lost", true),
+    ("expired", true),
+    ("evicted", false),
+];
+
 impl FleetReport {
+    /// The conservation sum: every arrival ends in exactly one of
+    /// these terminal outcomes, so this always equals arrivals.
+    // lint: conservation-site
+    pub fn conserved_total(&self) -> u64 {
+        self.completed + self.shed + self.lost + self.expired
+    }
+
     /// Completed requests per virtual second (for equal-throughput
     /// policy comparisons).
     pub fn throughput_rps(&self) -> f64 {
@@ -1695,12 +1727,12 @@ impl FleetReport {
 /// without an artifact tier).
 pub fn run_trace(fleet: &Fleet, trace: &Trace, events: &[HealthEvent]) -> FleetReport {
     let mut events: Vec<HealthEvent> = events.to_vec();
-    events.sort_by(|a, b| a.at_ms.partial_cmp(&b.at_ms).unwrap());
+    events.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
     let mut events = events.into_iter().peekable();
     for entry in &trace.entries {
         let at_ms = entry.at.as_secs_f64() * 1e3;
-        while events.peek().is_some_and(|e| e.at_ms <= at_ms) {
-            fleet.apply(events.next().unwrap());
+        while let Some(e) = events.next_if(|e| e.at_ms <= at_ms) {
+            fleet.apply(e);
         }
         fleet.dispatch_model(at_ms, entry.qos, entry.model);
     }

@@ -1014,11 +1014,8 @@ impl Replica {
             .drain(..)
             .map(|rider| Outcome { rider, latency_ms: None, missed_deadline: true })
             .collect();
-        while let Some(front) = self.scheduled.front() {
-            if front.finish_ms > now_ms {
-                break;
-            }
-            let b = self.scheduled.pop_front().unwrap();
+        while self.scheduled.front().is_some_and(|front| front.finish_ms <= now_ms) {
+            let Some(b) = self.scheduled.pop_front() else { break };
             for rider in &b.riders {
                 let latency_ms = (b.finish_ms - rider.anchor_ms).max(0.0);
                 self.latency.record(Duration::from_secs_f64(latency_ms / 1e3));
@@ -1180,10 +1177,11 @@ impl Replica {
             let last = idx + 1 == self.scheduled.len();
             self.scheduled[idx].riders.remove(pos);
             if self.scheduled[idx].riders.is_empty() {
-                let b = self.scheduled.remove(idx).unwrap();
-                self.energy_queued_j = (self.energy_queued_j - b.energy_total_j).max(0.0);
-                if last {
-                    self.busy_until_ms = b.prev_busy_ms;
+                if let Some(b) = self.scheduled.remove(idx) {
+                    self.energy_queued_j = (self.energy_queued_j - b.energy_total_j).max(0.0);
+                    if last {
+                        self.busy_until_ms = b.prev_busy_ms;
+                    }
                 }
             } else {
                 let m_ms = self.scheduled[idx].marginal_ms;

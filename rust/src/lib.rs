@@ -53,7 +53,24 @@
 //! defaults to off, exportable as Chrome trace-event JSON
 //! (`--trace-out`, or `{"cmd":"trace_dump"}` / `{"cmd":"metrics"}`
 //! over the server wire).
+//!
+//! ## Static analysis
+//!
+//! The invariants above are enforced by tooling, not discipline:
+//! [`analysis`] is a self-contained static-analysis pass over this
+//! crate's own source (`cargo run --bin analyze`, CI's `analyze` job)
+//! with four repo-native lints — **virtual-time purity** (no
+//! `Instant::now`/`SystemTime` in `fleet/`, `simulator/`,
+//! `telemetry/`), **conservation-site completeness** (every terminal
+//! outcome declared in [`fleet::TERMINAL_OUTCOMES`] must have its
+//! `FleetReport` field, `FleetMetrics` mirror, and assertion-site
+//! mentions), a ratcheted **panic budget** for the dispatch spine
+//! (`rust/analyze_budget.json` refuses to grow), and **bench/baseline
+//! coherence** (metric names written by benches must match
+//! `BENCH_BASELINE.json`, statically).  See the [`analysis`] module
+//! docs for the ratchet workflow and how to add a lint.
 
+pub mod analysis;
 pub mod config;
 pub mod convnet;
 pub mod coordinator;

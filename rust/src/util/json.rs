@@ -85,7 +85,7 @@ impl Json {
 
     /// Parse JSON text.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -111,9 +111,17 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
+/// Maximum container nesting the parser accepts.  Recursive descent
+/// burns one stack frame per `[`/`{`, so an adversarial request like
+/// 100k opening brackets would otherwise overflow the handler thread's
+/// stack — an abort, not a catchable error.  128 is far beyond any
+/// legitimate payload in this repo (requests nest < 10).
+pub const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -159,8 +167,8 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> Result<Json, JsonError> {
         match self.peek().ok_or_else(|| self.err("unexpected end"))? {
-            b'{' => self.object(),
-            b'[' => self.array(),
+            b'{' => self.nested(Parser::object),
+            b'[' => self.nested(Parser::array),
             b'"' => Ok(Json::Str(self.string()?)),
             b't' => self.literal("true", Json::Bool(true)),
             b'f' => self.literal("false", Json::Bool(false)),
@@ -168,6 +176,20 @@ impl<'a> Parser<'a> {
             b'-' | b'0'..=b'9' => self.number(),
             c => Err(self.err(&format!("unexpected character '{}'", c as char))),
         }
+    }
+
+    /// Run one recursive production with the depth guard held.
+    fn nested(
+        &mut self,
+        f: fn(&mut Parser<'a>) -> Result<Json, JsonError>,
+    ) -> Result<Json, JsonError> {
+        if self.depth >= MAX_DEPTH {
+            return Err(self.err("nesting deeper than MAX_DEPTH"));
+        }
+        self.depth += 1;
+        let v = f(self);
+        self.depth -= 1;
+        v
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
@@ -282,7 +304,8 @@ impl<'a> Parser<'a> {
         while matches!(self.peek(), Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')) {
             self.pos += 1;
         }
-        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| JsonError { pos: start, msg: "bad number".to_string() })?;
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| JsonError { pos: start, msg: format!("bad number '{text}'") })
@@ -396,6 +419,33 @@ mod tests {
     fn unicode_and_escapes() {
         let v = Json::parse(r#""Aéß😀""#).unwrap();
         assert_eq!(v.as_str().unwrap(), "Aéß😀");
+    }
+
+    #[test]
+    fn deep_nesting_errors_instead_of_overflowing() {
+        // One recursion frame per bracket: without the depth guard this
+        // input aborts the process on stack overflow.
+        let bomb = "[".repeat(100_000);
+        let err = Json::parse(&bomb).unwrap_err();
+        assert!(err.to_string().contains("nesting deeper"), "got: {err}");
+        let obj_bomb = "{\"a\":".repeat(100_000);
+        assert!(Json::parse(&obj_bomb).is_err());
+    }
+
+    #[test]
+    fn nesting_at_the_limit_still_parses() {
+        let depth = MAX_DEPTH;
+        let text = format!("{}{}", "[".repeat(depth), "]".repeat(depth));
+        assert!(Json::parse(&text).is_ok(), "depth {depth} is within the budget");
+        let text = format!("{}{}", "[".repeat(depth + 1), "]".repeat(depth + 1));
+        assert!(Json::parse(&text).is_err(), "depth {} is over", depth + 1);
+    }
+
+    #[test]
+    fn malformed_numbers_are_errors_not_panics() {
+        for bad in ["-", "1e", "1e+", ".5", "+1", "--3", "1.2.3", "1-2"] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should not parse");
+        }
     }
 
     #[test]

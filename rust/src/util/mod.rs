@@ -4,8 +4,8 @@
 //! closure, so the pieces a networked project would pull from crates.io
 //! are implemented here: a deterministic RNG ([`rng`]), a scoped
 //! data-parallel helper ([`par`]), a JSON parser/serializer ([`json`]),
-//! a micro-benchmark harness ([`bench`]), and a small CLI argument
-//! parser ([`cli`]).
+//! a micro-benchmark harness ([`bench`]), a small CLI argument
+//! parser ([`cli`]), and poison-tolerant locking ([`sync`]).
 
 pub mod bench;
 pub mod cli;
@@ -13,3 +13,4 @@ pub mod json;
 pub mod par;
 pub mod rng;
 pub mod stats;
+pub mod sync;

@@ -58,8 +58,14 @@ fn serve_infer_stats_quit() {
         use std::io::{BufRead, BufReader, Write};
         let mut raw = std::net::TcpStream::connect(&addr).unwrap();
         writeln!(raw, "this is not json").unwrap();
+        let mut reader = BufReader::new(raw.try_clone().unwrap());
         let mut line = String::new();
-        BufReader::new(raw.try_clone().unwrap()).read_line(&mut line).unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("error"), "got: {line}");
+        // a nesting bomb is an error reply too, not a handler crash
+        writeln!(raw, "{}", "[".repeat(100_000)).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
         assert!(line.contains("error"), "got: {line}");
     }
 

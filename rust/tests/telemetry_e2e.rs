@@ -23,6 +23,7 @@ fn reconcile(registry: &MetricsRegistry, report: &FleetReport, n: u64, scenario:
     let counter = |name: &str| registry.counter_value(name).unwrap_or(0);
     let arrivals = counter("fleet_arrivals_total");
     assert_eq!(arrivals, n, "{scenario}: every trace entry is an arrival");
+    // lint: conservation-site
     assert_eq!(
         arrivals,
         counter("fleet_completed_total")
@@ -30,6 +31,11 @@ fn reconcile(registry: &MetricsRegistry, report: &FleetReport, n: u64, scenario:
             + counter("fleet_lost_total")
             + counter("fleet_expired_total"),
         "{scenario}: conservation over the registry"
+    );
+    assert_eq!(
+        report.conserved_total(),
+        arrivals,
+        "{scenario}: the report's own conservation sum matches the registry"
     );
     assert_eq!(counter("fleet_completed_total"), report.completed, "{scenario}: completed");
     assert_eq!(counter("fleet_shed_total"), report.shed, "{scenario}: shed");
