@@ -13,6 +13,7 @@
 //! cargo run --release --example fleet_sim -- \
 //!     --autoscale "slo=800,pool=3xn5@fp16+2x6p@fp16,max=6"       # traffic ramp + spike
 //! cargo run --release --example fleet_sim -- --multimodel        # artifact cache tier
+//! cargo run --release --example fleet_sim -- --shards 4          # sharded front door
 //! ```
 //!
 //! `--autoscale KV` switches to the closed-loop scenario: a calm ->
@@ -166,6 +167,110 @@ fn multimodel_scenario(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The `--shards` scenario: the sharded front door.  One seeded
+/// multi-tenant trace dispatches through M coordinator shards behind
+/// the consistent-hash router; a shard joins at 1/3 of the trace and
+/// shard 0 retires at 2/3 (its queue drains in place); then the
+/// claims are checked: request conservation summed across shards
+/// through both re-partitions, and bounded key movement on the ring
+/// (a join moves only the keys the joiner takes — zero collateral).
+fn sharded_scenario(args: &Args, shards: usize) -> Result<()> {
+    use mobile_convnet::coordinator::{HashRing, ShardedFleet};
+    use mobile_convnet::fleet::Arrival as FleetArrival;
+
+    anyhow::ensure!(shards >= 1, "--shards must be >= 1");
+    let spec = args.get_or("spec", "2xs7,2x6p,2xn5");
+    let n = args.get_usize("requests", 240).map_err(|e| anyhow::anyhow!(e))?;
+    let rate = args.get_f64("rate", 8.0).map_err(|e| anyhow::anyhow!(e))?;
+    let seed = args.get_u64("seed", 77).map_err(|e| anyhow::anyhow!(e))?;
+    let tenants = args.get_usize("tenants", 12).map_err(|e| anyhow::anyhow!(e))?.max(1);
+
+    let trace = Trace::generate(n, Arrival::Poisson { rate_per_s: rate }, 0.0, seed);
+    let cfg = config::fleet_from(spec, args.get("policy"), None, None, None, None)?
+        .with_seed(seed);
+    let sf = ShardedFleet::new(cfg, shards);
+    println!(
+        "sharded front door: fleet '{spec}' split across {} shard(s), {n} arrivals at \
+         {:.1} req/s, {tenants} tenants\n",
+        sf.active_shards(),
+        trace.offered_rate()
+    );
+
+    let join_at = n / 3;
+    let leave_at = 2 * n / 3;
+    for (i, entry) in trace.entries.iter().enumerate() {
+        if i == join_at {
+            let id = sf.join();
+            println!("... shard s{id} joined at arrival {i} (re-partition #1)");
+        }
+        if i == leave_at && sf.active_shards() > 1 && sf.leave(0) {
+            println!("... shard s0 retired at arrival {i} (re-partition #2, queue drains)");
+        }
+        let at_ms = entry.at.as_secs_f64() * 1e3;
+        let tenant = format!("tenant-{}", i % tenants);
+        let _ = sf.dispatch(
+            FleetArrival::at(at_ms)
+                .with_qos(entry.qos)
+                .with_model(entry.model)
+                .with_tenant(tenant),
+        );
+    }
+    let report = sf.finish();
+    for (i, shard) in report.shards.iter().enumerate() {
+        println!("shard s{i}:\n{}", shard.render());
+    }
+    println!(
+        "router: {} arrivals -> {} completed + {} shed + {} lost + {} expired across \
+         {} shard(s), {} retired",
+        report.arrivals,
+        report.completed(),
+        report.shed(),
+        report.lost(),
+        report.expired(),
+        report.shards.len() - report.retired,
+        report.retired,
+    );
+    assert!(
+        report.conserved(),
+        "claim: conservation across shards through join/leave: {report:?}"
+    );
+    println!(
+        "claim check: arrivals == completed + shed + lost + expired across re-partitions ... OK"
+    );
+
+    // Ring redistribution on a standalone ring (same hash as the
+    // router): a join moves only the keys the joiner takes.
+    let m = shards.max(2);
+    let keys: Vec<(String, ModelId)> =
+        (0..10_000).map(|k| (format!("tenant-{}", k % 997), ModelId((k % 2) as u16))).collect();
+    let mut ring = HashRing::new(m, 64);
+    let before: Vec<Option<usize>> =
+        keys.iter().map(|(t, model)| ring.shard_for(Some(t.as_str()), *model)).collect();
+    ring.add_shard(m);
+    let mut moved = 0usize;
+    let mut collateral = 0usize;
+    for ((t, model), old) in keys.iter().zip(&before) {
+        let new = ring.shard_for(Some(t.as_str()), *model);
+        if new != *old {
+            moved += 1;
+            if new != Some(m) {
+                collateral += 1;
+            }
+        }
+    }
+    let frac = moved as f64 / keys.len() as f64;
+    println!(
+        "ring: joining shard s{m} moved {moved}/{} keys ({:.1}%), {collateral} to a \
+         non-joining shard",
+        keys.len(),
+        frac * 100.0,
+    );
+    assert_eq!(collateral, 0, "claim: a join moves keys only onto the joiner");
+    assert!(frac < 0.05 + 1.0 / (m as f64 + 1.0), "claim: join movement stays near 1/M");
+    println!("claim check: join moves < 5% beyond the joiner's 1/M share, 0 collateral ... OK");
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
     if let Some(kv) = args.get("autoscale") {
@@ -173,6 +278,9 @@ fn main() -> Result<()> {
     }
     if args.flag("multimodel") {
         return multimodel_scenario(&args);
+    }
+    if let Some(m) = args.get_usize_opt("shards").map_err(|e| anyhow::anyhow!(e))? {
+        return sharded_scenario(&args, m);
     }
     let spec = args.get_or("spec", "2xs7,2x6p,2xn5");
     let n = args.get_usize("requests", 240).map_err(|e| anyhow::anyhow!(e))?;

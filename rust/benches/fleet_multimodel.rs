@@ -28,10 +28,10 @@
 //! seed a distribution sample) and feeds the CI regression gate via
 //! `BENCH_OUT_DIR`.
 
-use mobile_convnet::coordinator::trace::{Arrival, Trace};
-use mobile_convnet::coordinator::{PlanCache, Qos};
+use mobile_convnet::coordinator::trace::{Arrival as ArrivalProcess, Trace};
+use mobile_convnet::coordinator::PlanCache;
 use mobile_convnet::fleet::{
-    run_trace, Fleet, FleetBatch, FleetConfig, FleetReport, Policy, Replica, ReplicaSpec,
+    run_trace, Arrival, Fleet, FleetBatch, FleetConfig, FleetReport, Policy, Replica, ReplicaSpec,
 };
 use mobile_convnet::runtime::artifacts::{ModelCatalog, ModelId};
 use mobile_convnet::simulator::device::{DeviceProfile, Precision};
@@ -53,7 +53,7 @@ struct SeedMetrics {
 fn run_seed(spec: &str, rate: f64, capacity_bytes: u64, seed: u64) -> SeedMetrics {
     let primary = seed == PRIMARY_BENCH_SEED;
     let n = 240usize;
-    let trace = Trace::generate(n, Arrival::Poisson { rate_per_s: rate }, 0.0, seed)
+    let trace = Trace::generate(n, ArrivalProcess::Poisson { rate_per_s: rate }, 0.0, seed)
         .with_model_mix(DETECTOR_FRAC, ModelId(1));
     let det_n = trace.entries.iter().filter(|e| e.model == ModelId(1)).count();
     if primary {
@@ -221,6 +221,6 @@ fn main() {
     b.bench("fleet/dispatch_model_mixed", || {
         t += 10.0;
         let model = if (t as u64 / 10) % 2 == 0 { ModelId::DEFAULT } else { ModelId(1) };
-        fleet.dispatch_model(t, Qos::default(), model)
+        fleet.dispatch(Arrival::at(t).with_model(model))
     });
 }

@@ -28,10 +28,10 @@
 //! counters, per-class p95) but never acted on — i.e. the exact
 //! pre-QoS dispatch behavior.
 
-use mobile_convnet::coordinator::trace::{Arrival, Trace};
+use mobile_convnet::coordinator::trace::{Arrival as ArrivalProcess, Trace};
 use mobile_convnet::coordinator::{PlanCache, Qos};
 use mobile_convnet::fleet::{
-    run_trace, Fleet, FleetBatch, FleetConfig, FleetReport, Policy, Replica, ReplicaSpec,
+    run_trace, Arrival, Fleet, FleetBatch, FleetConfig, FleetReport, Policy, Replica, ReplicaSpec,
 };
 use mobile_convnet::simulator::device::{DeviceProfile, Precision};
 use mobile_convnet::util::bench::{
@@ -70,9 +70,9 @@ fn run_seed(sc: &Scenario, seed: u64) -> SeedMetrics {
     let primary = seed == PRIMARY_BENCH_SEED;
     let trace = Trace::phases(
         &[
-            (30, Arrival::Poisson { rate_per_s: sc.calm_rps }),
-            (150, Arrival::Poisson { rate_per_s: sc.surge_rps }),
-            (60, Arrival::Poisson { rate_per_s: sc.calm_rps }),
+            (30, ArrivalProcess::Poisson { rate_per_s: sc.calm_rps }),
+            (150, ArrivalProcess::Poisson { rate_per_s: sc.surge_rps }),
+            (60, ArrivalProcess::Poisson { rate_per_s: sc.calm_rps }),
         ],
         0.0,
         seed,
@@ -247,8 +247,8 @@ fn main() {
     let mut b = Bencher::from_env();
     let fleet = Fleet::new(FleetConfig::parse_spec(&sc.spec, policy).unwrap());
     let mut t = 0.0f64;
-    b.bench("fleet/dispatch_qos_interactive", || {
+    b.bench("fleet/dispatch_interactive", || {
         t += 10.0;
-        fleet.dispatch_qos(t, Qos::interactive(2, 500.0))
+        fleet.dispatch(Arrival::at(t).with_qos(Qos::interactive(2, 500.0)))
     });
 }

@@ -194,9 +194,26 @@ mod tests {
 
     #[test]
     fn purity_ignores_allowed_areas() {
-        for rel in ["src/coordinator/fixture.rs", "src/runtime/fixture.rs", "src/util/bench.rs"] {
+        for rel in ["src/coordinator/server.rs", "src/runtime/fixture.rs", "src/util/bench.rs"] {
             let tree = fixture_tree(rel, include_str!("fixtures/purity.rs"));
             assert!(VirtualTimePurity.check(&tree).is_empty(), "{rel}");
+        }
+    }
+
+    /// The coordinator carve-out is per file: the sharded front
+    /// door's virtual-time layers (ring/shard) are in scope even
+    /// though they live under `src/coordinator/`, while the
+    /// socket-facing server (checked above) stays exempt.
+    #[test]
+    fn purity_scopes_the_coordinators_virtual_time_layers() {
+        for rel in ["src/coordinator/ring.rs", "src/coordinator/shard.rs"] {
+            let tree = fixture_tree(rel, include_str!("fixtures/purity.rs"));
+            let findings = VirtualTimePurity.check(&tree);
+            assert_eq!(
+                findings.iter().map(|f| f.line).collect::<Vec<_>>(),
+                vec![7, 17, 18, 25],
+                "{rel}: {findings:?}"
+            );
         }
     }
 

@@ -8,6 +8,15 @@
 //! `coordinator/` (TCP deadlines), `runtime/` (real execution), and
 //! `util/bench.rs` (self-measurement).
 //!
+//! The coordinator carve-out is *per file*, not blanket: the sharded
+//! front door's routing and accounting layers
+//! ([`ring`](crate::coordinator::ring), [`shard`](crate::coordinator::shard))
+//! are virtual-time — they route by hash and sum simulated joules — so
+//! they sit inside the lint's scope even though they live under
+//! `src/coordinator/`.  Only the socket-facing `server.rs` (accept
+//! deadlines, uptime) and the engine's host-facing paths may read the
+//! wall clock.
+//!
 //! The check is textual over comment/string-scrubbed lines, so a
 //! mention in a doc comment or an error message is not a finding —
 //! but any *code* use, including in `#[cfg(test)]` code (fleet tests
@@ -16,8 +25,15 @@
 use super::{Finding, Lint, SourceTree};
 
 /// Path prefixes (relative to the crate root) that must never read the
-/// wall clock.
-pub const FORBIDDEN_PREFIXES: &[&str] = &["src/fleet/", "src/simulator/", "src/telemetry/"];
+/// wall clock.  The two file-exact entries scope the coordinator: its
+/// ring/shard layers are virtual-time, its socket layer is not.
+pub const FORBIDDEN_PREFIXES: &[&str] = &[
+    "src/fleet/",
+    "src/simulator/",
+    "src/telemetry/",
+    "src/coordinator/ring.rs",
+    "src/coordinator/shard.rs",
+];
 
 /// Wall-clock constructs the virtual-time layers must not touch.
 pub const PATTERNS: &[&str] = &["Instant::now", "SystemTime"];
@@ -45,8 +61,8 @@ impl Lint for VirtualTimePurity {
                             line: idx + 1,
                             message: format!(
                                 "wall-clock `{pat}` in a virtual-time module \
-                                 (allowed only in coordinator/, runtime/, and \
-                                 util/bench.rs)"
+                                 (allowed only in the coordinator's socket \
+                                 layer, runtime/, and util/bench.rs)"
                             ),
                         });
                     }

@@ -28,11 +28,15 @@
 //!
 //! The fleet topology can also come from the environment
 //! (`MCN_FLEET`, `MCN_FLEET_POLICY`, `MCN_FLEET_BUDGET_J`,
-//! `MCN_FLEET_BATCH`, `MCN_FLEET_BATCH_WAIT_MS`, `MCN_FLEET_CACHE`)
-//! or the CLI
+//! `MCN_FLEET_BATCH`, `MCN_FLEET_BATCH_WAIT_MS`, `MCN_FLEET_CACHE`,
+//! `MCN_FLEET_SHARDS`) or the CLI
 //! (`--fleet SPEC --fleet-policy P --fleet-budget-j J --fleet-batch B
-//! --fleet-batch-wait-ms W --fleet-cache MB`); CLI wins over env, env
-//! over file.
+//! --fleet-batch-wait-ms W --fleet-cache MB --fleet-shards M`); CLI
+//! wins over env, env over file.
+//! `fleet_shards` (default 1) partitions the fleet's replicas across
+//! M coordinator shards behind the consistent-hash front door
+//! ([`crate::coordinator::ShardedFleet`]); it requires a fleet when
+//! M > 1.
 //! `fleet_policy` accepts `energy:<λ>` (J/ms) to pin the energy-aware
 //! latency price explicitly; a plain `energy` uses the fixed default,
 //! which `fleet_autoscale` re-derives from `slo_p95_ms`
@@ -77,6 +81,10 @@ pub struct AppConfig {
     pub precisions: Vec<Precision>,
     /// Simulated device fleet behind the server (None = single-path).
     pub fleet: Option<FleetConfig>,
+    /// Coordinator shards for the fleet front door (1 = the classic
+    /// single-fleet server; M > 1 partitions the replicas across M
+    /// shards behind the consistent-hash router).
+    pub fleet_shards: usize,
 }
 
 impl Default for AppConfig {
@@ -89,6 +97,7 @@ impl Default for AppConfig {
             batches: vec![1, 2, 4, 8],
             precisions: vec![Precision::Precise, Precision::Imprecise],
             fleet: None,
+            fleet_shards: 1,
         }
     }
 }
@@ -313,6 +322,17 @@ impl AppConfig {
                 None => anyhow::bail!("config: fleet_autoscale requires a fleet"),
             }
         }
+        if let Some(m) = v.get("fleet_shards") {
+            let m = m
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("config: fleet_shards must be an integer"))?;
+            anyhow::ensure!(m >= 1, "config: fleet_shards must be >= 1");
+            anyhow::ensure!(
+                m == 1 || cfg.fleet.is_some(),
+                "config: fleet_shards > 1 requires a fleet"
+            );
+            cfg.fleet_shards = m;
+        }
         Ok(cfg)
     }
 
@@ -365,6 +385,17 @@ impl AppConfig {
                 Some(f) => self.fleet = Some(f.with_autoscale(autoscale)),
                 None => anyhow::bail!("MCN_FLEET_AUTOSCALE requires a fleet (MCN_FLEET or config)"),
             }
+        }
+        if let Ok(v) = std::env::var("MCN_FLEET_SHARDS") {
+            let m = v
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("MCN_FLEET_SHARDS: bad count '{v}'"))?;
+            anyhow::ensure!(m >= 1, "MCN_FLEET_SHARDS must be >= 1");
+            anyhow::ensure!(
+                m == 1 || self.fleet.is_some(),
+                "MCN_FLEET_SHARDS > 1 requires a fleet (MCN_FLEET or config)"
+            );
+            self.fleet_shards = m;
         }
         Ok(())
     }
@@ -440,6 +471,18 @@ mod tests {
         assert!(AppConfig::default().fleet.is_none());
         assert!(AppConfig::from_json(r#"{"fleet": "9xpixel"}"#).is_err());
         assert!(AppConfig::from_json(r#"{"fleet": "s7", "fleet_policy": "rand"}"#).is_err());
+    }
+
+    #[test]
+    fn parses_fleet_shards() {
+        assert_eq!(AppConfig::default().fleet_shards, 1);
+        let c = AppConfig::from_json(r#"{"fleet": "4xs7", "fleet_shards": 4}"#).unwrap();
+        assert_eq!(c.fleet_shards, 4);
+        // a single shard never needs a fleet; more than one does
+        assert_eq!(AppConfig::from_json(r#"{"fleet_shards": 1}"#).unwrap().fleet_shards, 1);
+        assert!(AppConfig::from_json(r#"{"fleet_shards": 4}"#).is_err());
+        assert!(AppConfig::from_json(r#"{"fleet": "4xs7", "fleet_shards": 0}"#).is_err());
+        assert!(AppConfig::from_json(r#"{"fleet": "4xs7", "fleet_shards": "many"}"#).is_err());
     }
 
     #[test]

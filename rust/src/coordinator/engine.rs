@@ -133,7 +133,7 @@ impl Coordinator {
     /// [`submit`](Self::submit) with an explicit QoS class.  The
     /// single-device path records the class on the request (QoS is
     /// *enforced* on the fleet path; see
-    /// [`Fleet::dispatch_qos`](crate::fleet::Fleet::dispatch_qos)).
+    /// [`Fleet::dispatch`](crate::fleet::Fleet::dispatch)).
     pub fn submit_qos(
         &self,
         image: Vec<f32>,

@@ -21,11 +21,15 @@ pub mod admission;
 pub mod batcher;
 pub mod engine;
 pub mod request;
+pub mod ring;
 pub mod scheduler;
 pub mod server;
+pub mod shard;
 pub mod trace;
 
 pub use batcher::{plan_batches, BatcherConfig};
 pub use engine::{Coordinator, CoordinatorConfig};
 pub use request::{InferRequest, InferResponse, Qos, SimEstimate};
+pub use ring::HashRing;
 pub use scheduler::PlanCache;
+pub use shard::{Routed, ShardedFleet, ShardedReport};

@@ -1,52 +1,60 @@
 //! JSON-lines TCP front end and matching client.
 //!
-//! Wire protocol (one JSON object per line):
+//! Wire protocol v2 (one JSON object per line; see
+//! `rust/docs/WIRE_PROTOCOL.md` for the full contract):
 //!
-//! request  `{"image_seed": 7, "image_index": 0, "precision": "precise",
-//!            "sim": true, "fleet": true, "priority": 2,
-//!            "deadline_ms": 500, "model": "squeezenet"}`
-//!          or `{"image": [ ...150528 floats... ], ...}`
-//!          or `{"cmd": "stats"}` / `{"cmd": "fleet_stats"}` /
-//!          `{"cmd": "autoscale_stats"}` / `{"cmd": "metrics"}` /
-//!          `{"cmd": "trace_dump"}` / `{"cmd": "quit"}`
-//! response the [`InferResponse::to_json`] object (plus a `"fleet"`
-//!          placement object when the request set `"fleet": true`), or
-//!          `{"error": "..."}` / `{"stats": "..."}` /
-//!          `{"fleet_stats": {...}}` / `{"autoscale_stats": {...}}`.
+//! request  `{"v": 2, "cmd": "<name>", "args": {...}}` where `<name>`
+//!          is one of `infer`, `stats`, `fleet_stats`,
+//!          `autoscale_stats`, `metrics`, `trace_dump`, `quit`
+//! response `{"ok": true, ...payload}` on success, or
+//!          `{"ok": false, "error": {"code": "<stable_snake_case>",
+//!          "msg": "..."}}` on failure
+//!
+//! The v1 forms — bare infer objects (`{"image_seed": 7, ...}` /
+//! `{"image": [...]}`) and `{"cmd": "stats"}`-style commands — still
+//! parse through the same command table; their replies keep the
+//! legacy shape (`{"error": "..."}` on failure) plus a `"deprecated"`
+//! note pointing at the v2 envelope.
+//!
+//! The server is a sharded front door: one nonblocking IO loop owns
+//! every connection (no thread per socket), inference runs on
+//! per-shard worker threads fed by bounded queues (a full queue sheds
+//! with `shard_overloaded` instead of buffering without bound), and
+//! `"fleet": true` requests route through the consistent-hash ring to
+//! the shard that owns the `(tenant, model)` key (see
+//! [`ShardedFleet`]).
 //!
 //! With `"fleet": true` the request is first routed through the
-//! configured device fleet (see [`crate::fleet`]): the energy-aware (or
-//! other) policy places it on a simulated Adreno replica, whose
+//! configured device fleet (see [`crate::fleet`]): the energy-aware
+//! (or other) policy places it on a simulated Adreno replica, whose
 //! predicted queue wait / latency / joules — and, when per-replica
-//! batching is on (`--fleet-batch`), the size of the batch the request
-//! rides in (`"batch_fill"`) — ride back on the response while the
-//! real PJRT runtime computes the answer.  `"priority"` (0 = bulk,
-//! default 1, higher = more urgent) and `"deadline_ms"` (latency
-//! budget from arrival, wall clock) set the request's QoS class on
-//! the fleet path: priority-aware shedding at the gate,
-//! deadline-aware placement, early batch flush, and expiry at
-//! dequeue.  When the fleet autoscaler
-//! is on (`--fleet-autoscale`), scaling events that fired since the
-//! last fleet-backed reply ride back too (`"autoscale_events"`), and
-//! `{"cmd": "autoscale_stats"}` snapshots the whole control loop.
-//! `"model"` (with `"fleet": true`) names a catalog model when the
-//! fleet serves an artifact tier (`--fleet-cache`): placement becomes
-//! affinity-aware, the reply's placement object reports the model and
-//! any `"cold_load_ms"` the request triggered, and an unknown model
-//! name is an error.
+//! batching is on (`--fleet-batch`), the size of the batch the
+//! request rides in (`"batch_fill"`) — ride back on the response
+//! while the real PJRT runtime computes the answer.  `"priority"`
+//! (0 = bulk, default 1, higher = more urgent) and `"deadline_ms"`
+//! (latency budget from arrival, wall clock) set the request's QoS
+//! class on the fleet path.  When the fleet autoscaler is on
+//! (`--fleet-autoscale`), scaling events that fired since the last
+//! fleet-backed reply on that shard ride back too
+//! (`"autoscale_events"`).  `"model"` (with `"fleet": true`) names a
+//! catalog model when the fleet serves an artifact tier
+//! (`--fleet-cache`); `"tenant"` (with `"fleet": true`) sets the
+//! routing key's tenant half.
 //!
-//! Seed-addressed images keep the wire small for load generation: both
-//! ends derive the pixels from the shared deterministic corpus.
+//! Seed-addressed images keep the wire small for load generation:
+//! both ends derive the pixels from the shared deterministic corpus.
 
-use std::io::{BufRead, BufReader, Write};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::fleet::Fleet;
+use crate::fleet::{Arrival, Fleet};
 use crate::model::ImageCorpus;
 use crate::runtime::artifacts::ModelId;
 use crate::simulator::device::Precision;
@@ -54,15 +62,66 @@ use crate::util::json::Json;
 
 use super::engine::Coordinator;
 use super::request::{InferResponse, Qos};
+use super::shard::ShardedFleet;
 
 /// Upper bound on one request line.  The largest legitimate request is
 /// an inline `"image"` array (150528 floats, ~2.5 MB as text); 8 MiB
 /// clears that with room while still bounding what one connection can
-/// make the handler buffer.
+/// make the server buffer.
 const MAX_REQUEST_BYTES: usize = 8 << 20;
 
-/// Parse a request line into an inference (image, precision, sim/fleet
-/// flags, QoS class) or a command.
+/// Write-buffer cap per connection: a client that stops reading past
+/// this much buffered reply data is dropped (slow-client protection —
+/// the IO loop must never buffer one peer's replies without bound).
+const MAX_WRITE_BUFFER_BYTES: usize = 8 << 20;
+
+/// Depth of each shard worker's bounded job queue.  A full queue sheds
+/// the request with `shard_overloaded` instead of blocking the IO
+/// loop — backpressure is a visible error, never a stall.
+const SHARD_QUEUE_DEPTH: usize = 256;
+
+/// Deprecation note attached to every v1-shaped success reply.
+const V1_DEPRECATION: &str = "v1 wire format is deprecated: send \
+     {\"v\":2,\"cmd\":...,\"args\":{...}} (see rust/docs/WIRE_PROTOCOL.md)";
+
+/// A wire error with a stable machine-readable code (the
+/// `error.code` of a v2 reply).  Codes are part of the protocol
+/// contract; see `rust/docs/WIRE_PROTOCOL.md` for the taxonomy.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError {
+    pub code: &'static str,
+    pub msg: String,
+}
+
+impl WireError {
+    fn new(code: &'static str, msg: impl Into<String>) -> WireError {
+        WireError { code, msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] {}", self.code, self.msg)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+fn bad_args(msg: impl Into<String>) -> WireError {
+    WireError::new("bad_args", msg)
+}
+
+fn no_fleet() -> WireError {
+    WireError::new("no_fleet", "no fleet configured (start the server with --fleet SPEC)")
+}
+
+fn too_long() -> WireError {
+    WireError::new("request_too_long", "request line too long")
+}
+
+/// A request line parsed into an inference (image, precision,
+/// sim/fleet flags, QoS class, routing key) or a command.
+#[derive(Debug)]
 enum Parsed {
     Infer {
         image: Vec<f32>,
@@ -72,86 +131,580 @@ enum Parsed {
         qos: Qos,
         /// Catalog model name (fleet path only).
         model: Option<String>,
+        /// Routing-key tenant (fleet path only).
+        tenant: Option<String>,
     },
     Stats,
     FleetStats,
     AutoscaleStats,
-    /// Fleet metrics-registry snapshot (`{"cmd":"metrics"}`).
+    /// Fleet metrics-registry snapshot (`metrics`).
     Metrics,
     /// Sampled request-trace export as Chrome trace-event JSON
-    /// (`{"cmd":"trace_dump"}`).
+    /// (`trace_dump`).
     TraceDump,
     Quit,
 }
 
-fn parse_request(line: &str, image_len: usize) -> Result<Parsed> {
-    let v = Json::parse(line).context("request is not valid JSON")?;
-    if let Some(cmd) = v.get("cmd").and_then(Json::as_str) {
-        return match cmd {
-            "stats" => Ok(Parsed::Stats),
-            "fleet_stats" => Ok(Parsed::FleetStats),
-            "autoscale_stats" => Ok(Parsed::AutoscaleStats),
-            "metrics" => Ok(Parsed::Metrics),
-            "trace_dump" => Ok(Parsed::TraceDump),
-            "quit" => Ok(Parsed::Quit),
-            other => anyhow::bail!("unknown cmd '{other}'"),
-        };
-    }
-    let precision = match v.get("precision").and_then(Json::as_str).unwrap_or("precise") {
+/// A parsed request plus the wire dialect it arrived in, so the reply
+/// can match the client's version.
+#[derive(Debug)]
+struct ParsedRequest {
+    v: u8,
+    parsed: Parsed,
+}
+
+type ArgParser = fn(&Json, usize) -> Result<Parsed, WireError>;
+
+/// The full command taxonomy — one table drives dispatch for both
+/// wire dialects (v1 command forms route through the same entries,
+/// and a bare v1 infer object routes to `infer` with itself as args).
+const COMMANDS: &[(&str, ArgParser)] = &[
+    ("infer", parse_infer),
+    ("stats", parse_stats),
+    ("fleet_stats", parse_fleet_stats),
+    ("autoscale_stats", parse_autoscale_stats),
+    ("metrics", parse_metrics),
+    ("trace_dump", parse_trace_dump),
+    ("quit", parse_quit),
+];
+
+fn parse_stats(_: &Json, _: usize) -> Result<Parsed, WireError> {
+    Ok(Parsed::Stats)
+}
+
+fn parse_fleet_stats(_: &Json, _: usize) -> Result<Parsed, WireError> {
+    Ok(Parsed::FleetStats)
+}
+
+fn parse_autoscale_stats(_: &Json, _: usize) -> Result<Parsed, WireError> {
+    Ok(Parsed::AutoscaleStats)
+}
+
+fn parse_metrics(_: &Json, _: usize) -> Result<Parsed, WireError> {
+    Ok(Parsed::Metrics)
+}
+
+fn parse_trace_dump(_: &Json, _: usize) -> Result<Parsed, WireError> {
+    Ok(Parsed::TraceDump)
+}
+
+fn parse_quit(_: &Json, _: usize) -> Result<Parsed, WireError> {
+    Ok(Parsed::Quit)
+}
+
+fn parse_infer(args: &Json, image_len: usize) -> Result<Parsed, WireError> {
+    let precision = match args.get("precision").and_then(Json::as_str).unwrap_or("precise") {
         "precise" => Precision::Precise,
         "imprecise" => Precision::Imprecise,
-        other => anyhow::bail!("unknown precision '{other}'"),
+        other => return Err(bad_args(format!("unknown precision '{other}'"))),
     };
-    let with_sim = v.get("sim").and_then(Json::as_bool).unwrap_or(false);
-    let with_fleet = v.get("fleet").and_then(Json::as_bool).unwrap_or(false);
-    let priority = match v.get("priority") {
+    let with_sim = args.get("sim").and_then(Json::as_bool).unwrap_or(false);
+    let with_fleet = args.get("fleet").and_then(Json::as_bool).unwrap_or(false);
+    let priority = match args.get("priority") {
         None => Qos::DEFAULT_PRIORITY,
         Some(p) => {
-            let n = p.as_usize().context("priority must be an integer")?;
-            anyhow::ensure!(n <= u8::MAX as usize, "priority must be 0..=255");
+            let n = p.as_usize().ok_or_else(|| bad_args("priority must be an integer"))?;
+            if n > u8::MAX as usize {
+                return Err(bad_args("priority must be 0..=255"));
+            }
             n as u8
         }
     };
-    let deadline_ms = match v.get("deadline_ms") {
+    let deadline_ms = match args.get("deadline_ms") {
         None => None,
-        Some(d) => Some(d.as_f64().context("deadline_ms must be a number")?),
+        Some(d) => Some(d.as_f64().ok_or_else(|| bad_args("deadline_ms must be a number"))?),
     };
     let qos = Qos { priority, deadline_ms };
-    qos.validate().map_err(|e| anyhow::anyhow!(e))?;
-    let model = match v.get("model") {
+    qos.validate().map_err(bad_args)?;
+    let model = match args.get("model") {
         None => None,
-        Some(m) => Some(m.as_str().context("model must be a string")?.to_string()),
+        Some(m) => Some(m.as_str().ok_or_else(|| bad_args("model must be a string"))?.to_string()),
     };
-    anyhow::ensure!(
-        model.is_none() || with_fleet,
-        "\"model\" requires \"fleet\": true (models are served by the fleet's artifact tier)"
-    );
-    let image = if let Some(raw) = v.get("image").and_then(Json::as_array) {
+    if model.is_some() && !with_fleet {
+        return Err(bad_args(
+            "\"model\" requires \"fleet\": true (models are served by the fleet's artifact tier)",
+        ));
+    }
+    let tenant = match args.get("tenant") {
+        None => None,
+        Some(t) => {
+            Some(t.as_str().ok_or_else(|| bad_args("tenant must be a string"))?.to_string())
+        }
+    };
+    if tenant.is_some() && !with_fleet {
+        return Err(bad_args(
+            "\"tenant\" requires \"fleet\": true (tenancy is a fleet routing key)",
+        ));
+    }
+    let image = if let Some(raw) = args.get("image").and_then(Json::as_array) {
         let img: Vec<f32> = raw.iter().filter_map(|x| x.as_f64()).map(|x| x as f32).collect();
-        anyhow::ensure!(img.len() == image_len, "image must have {image_len} values");
+        if img.len() != image_len {
+            return Err(bad_args(format!("image must have {image_len} values")));
+        }
         img
     } else {
-        let seed = v.get("image_seed").and_then(Json::as_usize).unwrap_or(0) as u64;
-        let index = v.get("image_index").and_then(Json::as_usize).unwrap_or(0) as u64;
+        let seed = args.get("image_seed").and_then(Json::as_usize).unwrap_or(0) as u64;
+        let index = args.get("image_index").and_then(Json::as_usize).unwrap_or(0) as u64;
         ImageCorpus::new(seed).image(index)
     };
-    Ok(Parsed::Infer { image, precision, with_sim, with_fleet, qos, model })
+    Ok(Parsed::Infer { image, precision, with_sim, with_fleet, qos, model, tenant })
 }
 
-/// Serve until `stop` is set (checked between connections) or a client
-/// sends `{"cmd":"quit"}`. Returns the bound address via the callback.
+/// Parse one request line in either wire dialect.  Errors carry the
+/// dialect the request arrived in so the error reply can match it.
+fn parse_request(line: &str, image_len: usize) -> Result<ParsedRequest, (u8, WireError)> {
+    let v = Json::parse(line)
+        .map_err(|e| (1, WireError::new("bad_json", format!("request is not valid JSON: {e}"))))?;
+    let version = match v.get("v") {
+        None => 1,
+        Some(n) => match n.as_usize() {
+            Some(1) => 1,
+            Some(2) => 2,
+            _ => return Err((2, WireError::new("bad_version", "\"v\" must be 1 or 2"))),
+        },
+    };
+    let (cmd, args) = if version >= 2 {
+        let Some(cmd) = v.get("cmd").and_then(Json::as_str) else {
+            return Err((2, bad_args("a v2 envelope requires a \"cmd\" string")));
+        };
+        let args = match v.get("args") {
+            None => Json::object(vec![]),
+            Some(a @ Json::Object(_)) => a.clone(),
+            Some(_) => return Err((2, bad_args("\"args\" must be an object"))),
+        };
+        (cmd, args)
+    } else if let Some(cmd) = v.get("cmd").and_then(Json::as_str) {
+        (cmd, Json::object(vec![]))
+    } else {
+        // bare v1 infer object: the whole request is the args
+        ("infer", v.clone())
+    };
+    let Some((_, parse)) = COMMANDS.iter().find(|(name, _)| *name == cmd) else {
+        return Err((version, WireError::new("unknown_cmd", format!("unknown cmd '{cmd}'"))));
+    };
+    let parsed = parse(&args, image_len).map_err(|e| (version, e))?;
+    Ok(ParsedRequest { v: version, parsed })
+}
+
+/// Wrap a payload in the versioned success envelope: v2 replies lead
+/// with `"ok": true`; v1 replies keep the legacy shape plus a
+/// deprecation note.
+fn reply_ok(v: u8, payload: Json) -> Json {
+    let mut pairs = match payload {
+        Json::Object(pairs) => pairs,
+        other => vec![("result".to_string(), other)],
+    };
+    if v >= 2 {
+        pairs.insert(0, ("ok".to_string(), Json::Bool(true)));
+    } else {
+        pairs.push(("deprecated".to_string(), Json::str(V1_DEPRECATION)));
+    }
+    Json::Object(pairs)
+}
+
+/// The versioned error envelope: v2 gets `{"ok": false, "error":
+/// {"code", "msg"}}`; v1 keeps the legacy `{"error": "..."}` string
+/// (plus the stable code and the deprecation note as new keys).
+fn reply_err(v: u8, e: &WireError) -> Json {
+    if v >= 2 {
+        Json::object(vec![
+            ("ok", Json::Bool(false)),
+            (
+                "error",
+                Json::object(vec![("code", Json::str(e.code)), ("msg", Json::str(e.msg.clone()))]),
+            ),
+        ])
+    } else {
+        Json::object(vec![
+            ("error", Json::str(e.msg.clone())),
+            ("error_code", Json::str(e.code)),
+            ("deprecated", Json::str(V1_DEPRECATION)),
+        ])
+    }
+}
+
+/// One inference in flight between the IO loop and a shard worker.
+struct InferJob {
+    conn: u64,
+    v: u8,
+    image: Vec<f32>,
+    precision: Precision,
+    with_sim: bool,
+    qos: Qos,
+    /// `Some` = fleet path with the resolved catalog model.
+    model: Option<ModelId>,
+    tenant: Option<String>,
+    arrival_ms: f64,
+}
+
+/// One client connection owned by the IO loop: nonblocking socket plus
+/// read/write buffers and the count of replies still owed by workers.
+struct Conn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    inflight: usize,
+    read_closed: bool,
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            inflight: 0,
+            read_closed: false,
+            dead: false,
+        }
+    }
+
+    /// Drain readable bytes into `rbuf`; returns true on progress.
+    fn pump_reads(&mut self) -> bool {
+        let mut progressed = false;
+        let mut chunk = [0u8; 16384];
+        while !self.read_closed && !self.dead {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => self.read_closed = true,
+                Ok(n) => {
+                    if let Some(part) = chunk.get(..n) {
+                        self.rbuf.extend_from_slice(part);
+                    }
+                    progressed = true;
+                    if self.overflowed() {
+                        break;
+                    }
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => self.dead = true,
+            }
+        }
+        progressed
+    }
+
+    /// A client streaming bytes without a newline would grow `rbuf`
+    /// without bound; past the cap the caller replies with
+    /// `request_too_long` and hangs up.
+    fn overflowed(&self) -> bool {
+        self.rbuf.len() > MAX_REQUEST_BYTES && !self.rbuf.contains(&b'\n')
+    }
+
+    fn next_line(&mut self) -> Option<String> {
+        let pos = self.rbuf.iter().position(|&b| b == b'\n')?;
+        let mut raw: Vec<u8> = self.rbuf.drain(..=pos).collect();
+        raw.pop();
+        if raw.last() == Some(&b'\r') {
+            raw.pop();
+        }
+        Some(String::from_utf8_lossy(&raw).into_owned())
+    }
+
+    fn push_reply(&mut self, reply: &Json) {
+        self.push_reply_line(&reply.to_string());
+    }
+
+    fn push_reply_line(&mut self, line: &str) {
+        self.wbuf.extend_from_slice(line.as_bytes());
+        self.wbuf.push(b'\n');
+        if self.wbuf.len() > MAX_WRITE_BUFFER_BYTES {
+            self.dead = true;
+        }
+    }
+
+    /// Flush what the socket will take; returns true on progress.
+    fn pump_writes(&mut self) -> bool {
+        let mut progressed = false;
+        while !self.dead && !self.wbuf.is_empty() {
+            match self.stream.write(&self.wbuf) {
+                Ok(0) => self.dead = true,
+                Ok(n) => {
+                    self.wbuf.drain(..n);
+                    progressed = true;
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => self.dead = true,
+            }
+        }
+        progressed
+    }
+
+    /// A connection stays until it errors, or the peer closed its
+    /// half and every owed reply has been flushed.
+    fn alive(&self) -> bool {
+        !self.dead && !(self.read_closed && self.wbuf.is_empty() && self.inflight == 0)
+    }
+}
+
+/// Everything the IO loop needs to answer a parsed line.
+struct ServerCtx {
+    coordinator: Arc<Coordinator>,
+    fleet: Option<Arc<ShardedFleet>>,
+    started: Instant,
+    stop: Arc<AtomicBool>,
+    job_txs: Vec<SyncSender<InferJob>>,
+}
+
+impl ServerCtx {
+    /// Catch the fleet's virtual clock up to wall time so snapshots
+    /// reflect long-finished requests.
+    fn catch_up(&self) -> Option<&Arc<ShardedFleet>> {
+        let f = self.fleet.as_ref()?;
+        f.run_to(self.started.elapsed().as_secs_f64() * 1e3);
+        Some(f)
+    }
+
+    fn command_payload(&self, parsed: &Parsed) -> Result<Json, WireError> {
+        match parsed {
+            Parsed::Stats => {
+                Ok(Json::object(vec![("stats", Json::str(self.coordinator.telemetry.report()))]))
+            }
+            Parsed::FleetStats => {
+                let f = self.catch_up().ok_or_else(no_fleet)?;
+                Ok(Json::object(vec![("fleet_stats", f.stats_json())]))
+            }
+            Parsed::Metrics => {
+                let f = self.catch_up().ok_or_else(no_fleet)?;
+                Ok(Json::object(vec![("metrics", f.metrics_snapshot())]))
+            }
+            Parsed::TraceDump => {
+                let f = self.catch_up().ok_or_else(no_fleet)?;
+                Ok(Json::object(vec![("trace", f.trace_chrome_json())]))
+            }
+            Parsed::AutoscaleStats => {
+                let f = self.catch_up().ok_or_else(no_fleet)?;
+                let report = f.autoscale_json().ok_or_else(|| {
+                    WireError::new(
+                        "no_autoscaler",
+                        "no autoscaler configured (start the server with --fleet-autoscale KV)",
+                    )
+                })?;
+                Ok(Json::object(vec![("autoscale_stats", report)]))
+            }
+            // infer and quit never reach here (routed in handle_line)
+            Parsed::Infer { .. } | Parsed::Quit => Err(bad_args("not a command")),
+        }
+    }
+
+    fn handle_line(&self, id: u64, line: &str, conn: &mut Conn) {
+        let line = line.trim();
+        if line.is_empty() {
+            return;
+        }
+        if line.len() > MAX_REQUEST_BYTES {
+            conn.push_reply(&reply_err(1, &too_long()));
+            conn.read_closed = true;
+            return;
+        }
+        let ParsedRequest { v, parsed } =
+            match parse_request(line, self.coordinator.image_len()) {
+                Ok(pr) => pr,
+                Err((v, e)) => {
+                    conn.push_reply(&reply_err(v, &e));
+                    return;
+                }
+            };
+        match parsed {
+            Parsed::Quit => {
+                self.stop.store(true, Ordering::Relaxed);
+                let payload = if v >= 2 {
+                    Json::object(vec![])
+                } else {
+                    Json::object(vec![("ok", Json::Bool(true))])
+                };
+                conn.push_reply(&reply_ok(v, payload));
+            }
+            Parsed::Infer { image, precision, with_sim, with_fleet, qos, model, tenant } => {
+                self.submit_infer(
+                    id,
+                    v,
+                    conn,
+                    InferParams { image, precision, with_sim, with_fleet, qos, model, tenant },
+                );
+            }
+            other => {
+                let reply = match self.command_payload(&other) {
+                    Ok(payload) => reply_ok(v, payload),
+                    Err(e) => reply_err(v, &e),
+                };
+                conn.push_reply(&reply);
+            }
+        }
+    }
+
+    /// Resolve the fleet/model half of an infer on the IO thread (so
+    /// routing errors answer immediately), then hand the work to the
+    /// worker that owns the target shard.
+    fn submit_infer(&self, id: u64, v: u8, conn: &mut Conn, p: InferParams) {
+        let model = match (p.with_fleet, self.fleet.as_deref()) {
+            (false, _) => None,
+            (true, None) => {
+                conn.push_reply(&reply_err(v, &no_fleet()));
+                return;
+            }
+            (true, Some(sf)) => {
+                let model_id = match &p.model {
+                    None => ModelId::DEFAULT,
+                    Some(name) => match sf.resolve_model(name) {
+                        Some(m) => m,
+                        None => {
+                            let e = if sf.has_catalog() {
+                                WireError::new(
+                                    "unknown_model",
+                                    format!("unknown model '{name}' (not in the artifact catalog)"),
+                                )
+                            } else {
+                                WireError::new(
+                                    "no_catalog",
+                                    "no model catalog configured (start the server with \
+                                     --fleet-cache MB)",
+                                )
+                            };
+                            conn.push_reply(&reply_err(v, &e));
+                            return;
+                        }
+                    },
+                };
+                Some(model_id)
+            }
+        };
+        // The worker that owns the target shard gets the job, so one
+        // shard's traffic queues behind its own work, not a neighbor's.
+        let widx = match (model, self.fleet.as_deref()) {
+            (Some(m), Some(sf)) => {
+                sf.route(p.tenant.as_deref(), m).unwrap_or(0) % self.job_txs.len().max(1)
+            }
+            _ => 0,
+        };
+        let arrival_ms = self.started.elapsed().as_secs_f64() * 1e3;
+        let job = InferJob {
+            conn: id,
+            v,
+            image: p.image,
+            precision: p.precision,
+            with_sim: p.with_sim,
+            qos: p.qos,
+            model,
+            tenant: p.tenant,
+            arrival_ms,
+        };
+        let Some(tx) = self.job_txs.get(widx) else {
+            conn.push_reply(&reply_err(v, &WireError::new("infer_failed", "no worker available")));
+            return;
+        };
+        match tx.try_send(job) {
+            Ok(()) => conn.inflight += 1,
+            Err(TrySendError::Full(j)) => conn.push_reply(&reply_err(
+                j.v,
+                &WireError::new("shard_overloaded", "shard worker queue full: request shed"),
+            )),
+            Err(TrySendError::Disconnected(j)) => conn.push_reply(&reply_err(
+                j.v,
+                &WireError::new("infer_failed", "server shutting down"),
+            )),
+        }
+    }
+}
+
+struct InferParams {
+    image: Vec<f32>,
+    precision: Precision,
+    with_sim: bool,
+    with_fleet: bool,
+    qos: Qos,
+    model: Option<String>,
+    tenant: Option<String>,
+}
+
+fn worker_loop(
+    rx: Receiver<InferJob>,
+    coordinator: Arc<Coordinator>,
+    fleet: Option<Arc<ShardedFleet>>,
+    replies: Sender<(u64, String)>,
+) {
+    while let Ok(job) = rx.recv() {
+        let conn = job.conn;
+        let reply = run_infer(&coordinator, fleet.as_deref(), job);
+        if replies.send((conn, reply.to_string())).is_err() {
+            break;
+        }
+    }
+}
+
+/// Fleet admission runs *before* the real inference, so an overload
+/// shed costs nothing; if the inference then fails, the placement is
+/// retracted so the fleet never meters joules for an answer that was
+/// not served.
+fn run_infer(coordinator: &Coordinator, fleet: Option<&ShardedFleet>, job: InferJob) -> Json {
+    let InferJob { conn: _, v, image, precision, with_sim, qos, model, tenant, arrival_ms } = job;
+    let routed = match (model, fleet) {
+        (Some(m), Some(sf)) => {
+            let mut arrival = Arrival::at(arrival_ms).with_qos(qos).with_model(m);
+            if let Some(t) = tenant {
+                arrival = arrival.with_tenant(t);
+            }
+            match sf.dispatch(arrival) {
+                Some(r) => Some(r),
+                None => {
+                    return reply_err(
+                        v,
+                        &WireError::new("fleet_overloaded", "fleet overloaded: request shed"),
+                    )
+                }
+            }
+        }
+        _ => None,
+    };
+    match coordinator.infer_qos(image, precision, with_sim, qos) {
+        Ok(resp) => {
+            let mut reply = resp.to_json();
+            if let (Some(r), Json::Object(pairs)) = (&routed, &mut reply) {
+                let mut pj = r.placement.to_json();
+                if let Json::Object(ppairs) = &mut pj {
+                    ppairs.push(("shard".to_string(), Json::num(r.shard as f64)));
+                    // Scaling events since the last fleet reply on this
+                    // shard ride back on the placement, so load
+                    // generators see scale-up/down as it happens.
+                    if let Some(sf) = fleet {
+                        let events = sf.take_autoscale_events(r.shard);
+                        if !events.is_empty() {
+                            ppairs.push((
+                                "autoscale_events".to_string(),
+                                Json::Array(events.iter().map(|e| e.to_json()).collect()),
+                            ));
+                        }
+                    }
+                }
+                pairs.push(("fleet".to_string(), pj));
+            }
+            reply_ok(v, reply)
+        }
+        Err(e) => {
+            if let (Some(r), Some(sf)) = (&routed, fleet) {
+                sf.retract(r);
+            }
+            reply_err(v, &WireError::new("infer_failed", format!("{e:#}")))
+        }
+    }
+}
+
+/// Serve until `stop` is set or a client sends `quit`.  Returns the
+/// bound address via the callback.  No fleet: the `"fleet": true`
+/// path answers `no_fleet`.
 pub fn serve(
     coordinator: Arc<Coordinator>,
     addr: &str,
     stop: Arc<AtomicBool>,
     on_bound: impl FnOnce(std::net::SocketAddr),
 ) -> Result<()> {
-    serve_with_fleet(coordinator, None, addr, stop, on_bound)
+    serve_sharded(coordinator, None, addr, stop, on_bound)
 }
 
-/// [`serve`] with an optional device fleet backing the `"fleet": true`
-/// infer path and the `fleet_stats` command.  Wall-clock arrival times
-/// (ms since server start) drive the fleet's virtual clock.
+/// [`serve`] with a single-fleet back end: the fleet is wrapped in a
+/// one-shard [`ShardedFleet`], which keeps every wire payload
+/// identical to the pre-shard server.
 pub fn serve_with_fleet(
     coordinator: Arc<Coordinator>,
     fleet: Option<Arc<Fleet>>,
@@ -159,231 +712,270 @@ pub fn serve_with_fleet(
     stop: Arc<AtomicBool>,
     on_bound: impl FnOnce(std::net::SocketAddr),
 ) -> Result<()> {
+    let sharded = fleet.map(|f| Arc::new(ShardedFleet::single(f)));
+    serve_sharded(coordinator, sharded, addr, stop, on_bound)
+}
+
+/// The sharded front door: one nonblocking IO loop owns every
+/// connection; inference runs on one worker thread per shard, fed by
+/// bounded queues keyed off the fleet's consistent-hash ring.
+/// Wall-clock arrival times (ms since server start) drive the fleet's
+/// virtual clock.
+pub fn serve_sharded(
+    coordinator: Arc<Coordinator>,
+    fleet: Option<Arc<ShardedFleet>>,
+    addr: &str,
+    stop: Arc<AtomicBool>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     listener.set_nonblocking(true)?;
     on_bound(listener.local_addr()?);
-    let started = Instant::now();
-    let mut handles = Vec::new();
+
+    let workers = fleet.as_ref().map_or(1, |f| f.active_shards().max(1));
+    let (reply_tx, reply_rx) = std::sync::mpsc::channel::<(u64, String)>();
+    let mut job_txs = Vec::with_capacity(workers);
+    let mut worker_handles = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let (tx, rx) = sync_channel::<InferJob>(SHARD_QUEUE_DEPTH);
+        job_txs.push(tx);
+        let c = Arc::clone(&coordinator);
+        let f = fleet.clone();
+        let r = reply_tx.clone();
+        worker_handles.push(std::thread::spawn(move || worker_loop(rx, c, f, r)));
+    }
+    drop(reply_tx);
+
+    let ctx = ServerCtx {
+        coordinator,
+        fleet,
+        started: Instant::now(),
+        stop: Arc::clone(&stop),
+        job_txs,
+    };
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_id: u64 = 0;
+
     while !stop.load(Ordering::Relaxed) {
-        match listener.accept() {
-            Ok((stream, _)) => {
-                let c = coordinator.clone();
-                let f = fleet.clone();
-                let s = stop.clone();
-                handles.push(std::thread::spawn(move || {
-                    let _ = handle_client(c, f, started, stream, s);
-                }));
+        let mut busy = false;
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(true).ok();
+                    stream.set_nodelay(true).ok();
+                    conns.insert(next_id, Conn::new(stream));
+                    next_id += 1;
+                    busy = true;
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e).context("accept"),
             }
-            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        for (&id, conn) in conns.iter_mut() {
+            busy |= conn.pump_reads();
+            while let Some(line) = conn.next_line() {
+                busy = true;
+                ctx.handle_line(id, &line, conn);
             }
-            Err(e) => return Err(e).context("accept"),
+            if conn.overflowed() {
+                conn.push_reply(&reply_err(1, &too_long()));
+                conn.rbuf.clear();
+                conn.read_closed = true;
+            }
+        }
+        while let Ok((id, line)) = reply_rx.try_recv() {
+            busy = true;
+            if let Some(conn) = conns.get_mut(&id) {
+                conn.inflight = conn.inflight.saturating_sub(1);
+                conn.push_reply_line(&line);
+            }
+        }
+        for conn in conns.values_mut() {
+            busy |= conn.pump_writes();
+        }
+        conns.retain(|_, c| c.alive());
+        if !busy {
+            std::thread::sleep(std::time::Duration::from_millis(1));
         }
     }
-    for h in handles {
+
+    // Shutdown: dropping the job queues ends the workers; flush any
+    // replies they already computed so quitting clients get answers.
+    drop(ctx);
+    for h in worker_handles {
         let _ = h.join();
     }
-    Ok(())
-}
-
-fn handle_client(
-    coordinator: Arc<Coordinator>,
-    fleet: Option<Arc<Fleet>>,
-    started: Instant,
-    stream: TcpStream,
-    stop: Arc<AtomicBool>,
-) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    // Read with a timeout so idle handler threads notice `stop` and
-    // exit — otherwise server shutdown would block on open connections.
-    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
-    let mut writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    loop {
-        // Accumulate into `line` across timeouts until a full line is in.
-        match reader.read_line(&mut line) {
-            Ok(0) => break, // EOF
-            Ok(_) if !line.ends_with('\n') => {
-                // A client streaming bytes without a newline would grow
-                // `line` without bound; cap the request and hang up.
-                if line.len() > MAX_REQUEST_BYTES {
-                    writeln!(
-                        writer,
-                        "{}",
-                        Json::object(vec![("error", Json::str("request line too long"))])
-                    )?;
-                    break;
-                }
-                continue;
-            }
-            Ok(_) if line.len() > MAX_REQUEST_BYTES => {
-                writeln!(
-                    writer,
-                    "{}",
-                    Json::object(vec![("error", Json::str("request line too long"))])
-                )?;
-                break;
-            }
-            Ok(_) => {}
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                if stop.load(Ordering::Relaxed) {
-                    break;
-                }
-                continue;
-            }
-            Err(e) => return Err(e.into()),
+    while let Ok((id, line)) = reply_rx.try_recv() {
+        if let Some(conn) = conns.get_mut(&id) {
+            conn.push_reply_line(&line);
         }
-        let request = std::mem::take(&mut line);
-        let request = request.trim();
-        if request.is_empty() {
-            continue;
-        }
-        let reply = match parse_request(request, coordinator.image_len()) {
-            Ok(Parsed::Quit) => {
-                stop.store(true, Ordering::Relaxed);
-                writeln!(writer, "{}", Json::object(vec![("ok", Json::Bool(true))]))?;
-                break;
-            }
-            Ok(Parsed::Stats) => {
-                Json::object(vec![("stats", Json::str(coordinator.telemetry.report()))])
-            }
-            Ok(Parsed::FleetStats) => match &fleet {
-                Some(f) => {
-                    // Catch the virtual clock up to wall time so the
-                    // snapshot reflects long-finished requests.
-                    f.run_to(started.elapsed().as_secs_f64() * 1e3);
-                    Json::object(vec![("fleet_stats", f.stats().to_json())])
-                }
-                None => Json::object(vec![(
-                    "error",
-                    Json::str("no fleet configured (start the server with --fleet SPEC)"),
-                )]),
-            },
-            Ok(Parsed::Metrics) => match &fleet {
-                Some(f) => {
-                    f.run_to(started.elapsed().as_secs_f64() * 1e3);
-                    Json::object(vec![("metrics", f.metrics_snapshot())])
-                }
-                None => Json::object(vec![(
-                    "error",
-                    Json::str("no fleet configured (start the server with --fleet SPEC)"),
-                )]),
-            },
-            Ok(Parsed::TraceDump) => match &fleet {
-                Some(f) => {
-                    f.run_to(started.elapsed().as_secs_f64() * 1e3);
-                    Json::object(vec![("trace", f.trace_chrome_json())])
-                }
-                None => Json::object(vec![(
-                    "error",
-                    Json::str("no fleet configured (start the server with --fleet SPEC)"),
-                )]),
-            },
-            Ok(Parsed::AutoscaleStats) => match &fleet {
-                Some(f) => {
-                    f.run_to(started.elapsed().as_secs_f64() * 1e3);
-                    match f.autoscale_report() {
-                        Some(report) => {
-                            Json::object(vec![("autoscale_stats", report.to_json())])
-                        }
-                        None => Json::object(vec![(
-                            "error",
-                            Json::str(
-                                "no autoscaler configured (start the server with \
-                                 --fleet-autoscale KV)",
-                            ),
-                        )]),
-                    }
-                }
-                None => Json::object(vec![(
-                    "error",
-                    Json::str("no fleet configured (start the server with --fleet SPEC)"),
-                )]),
-            },
-            Ok(Parsed::Infer { image, precision, with_sim, with_fleet, qos, model }) => {
-                // Fleet admission runs *before* the real inference, so
-                // an overload shed costs nothing; if the inference then
-                // fails, the placement is retracted so the fleet never
-                // meters joules for an answer that was not served.
-                let placement = match (with_fleet, &fleet) {
-                    (false, _) => Ok(None),
-                    (true, None) => {
-                        Err("no fleet configured (start the server with --fleet SPEC)".to_string())
-                    }
-                    (true, Some(f)) => {
-                        let model_id = match &model {
-                            None => Ok(ModelId::DEFAULT),
-                            Some(name) => f.resolve_model(name).ok_or_else(|| {
-                                if f.has_catalog() {
-                                    format!("unknown model '{name}' (not in the artifact catalog)")
-                                } else {
-                                    "no model catalog configured (start the server with \
-                                     --fleet-cache MB)"
-                                        .to_string()
-                                }
-                            }),
-                        };
-                        model_id.and_then(|m| {
-                            let arrival_ms = started.elapsed().as_secs_f64() * 1e3;
-                            f.dispatch_model(arrival_ms, qos, m)
-                                .map(Some)
-                                .ok_or_else(|| "fleet overloaded: request shed".to_string())
-                        })
-                    }
-                };
-                match placement {
-                    Err(e) => Json::object(vec![("error", Json::str(e))]),
-                    Ok(placement) => match coordinator.infer_qos(image, precision, with_sim, qos)
-                    {
-                        Ok(resp) => {
-                            let mut reply = resp.to_json();
-                            if let (Some(p), Json::Object(pairs)) = (placement, &mut reply) {
-                                let mut pj = p.to_json();
-                                // Scaling events since the last fleet
-                                // reply ride back on the placement, so
-                                // load generators see scale-up/down as
-                                // it happens.
-                                if let Some(f) = &fleet {
-                                    let events = f.take_autoscale_events();
-                                    if !events.is_empty() {
-                                        if let Json::Object(ppairs) = &mut pj {
-                                            ppairs.push((
-                                                "autoscale_events".to_string(),
-                                                Json::Array(
-                                                    events
-                                                        .iter()
-                                                        .map(|e| e.to_json())
-                                                        .collect(),
-                                                ),
-                                            ));
-                                        }
-                                    }
-                                }
-                                pairs.push(("fleet".to_string(), pj));
-                            }
-                            reply
-                        }
-                        Err(e) => {
-                            if let (Some(p), Some(f)) = (&placement, &fleet) {
-                                f.retract(p);
-                            }
-                            Json::object(vec![("error", Json::str(format!("{e:#}")))])
-                        }
-                    },
-                }
-            }
-            Err(e) => Json::object(vec![("error", Json::str(format!("{e:#}")))]),
-        };
-        writeln!(writer, "{reply}")?;
+    }
+    for conn in conns.values_mut() {
+        conn.pump_writes();
     }
     Ok(())
 }
 
-/// Minimal blocking client for the JSON-lines protocol.
+/// One v2 request: the seven commands of the wire taxonomy.  Build
+/// inference requests with [`InferBuilder`] and send any request with
+/// [`Client::call`].
+#[derive(Debug, Clone)]
+pub enum Request {
+    Infer(InferBuilder),
+    Stats,
+    FleetStats,
+    AutoscaleStats,
+    Metrics,
+    TraceDump,
+    Quit,
+}
+
+impl Request {
+    fn cmd(&self) -> &'static str {
+        match self {
+            Request::Infer(_) => "infer",
+            Request::Stats => "stats",
+            Request::FleetStats => "fleet_stats",
+            Request::AutoscaleStats => "autoscale_stats",
+            Request::Metrics => "metrics",
+            Request::TraceDump => "trace_dump",
+            Request::Quit => "quit",
+        }
+    }
+
+    fn args(&self) -> Json {
+        match self {
+            Request::Infer(b) => b.args_json(),
+            _ => Json::object(vec![]),
+        }
+    }
+}
+
+/// Builder for the `infer` command's args.  Start from
+/// [`InferBuilder::seed`] (corpus-addressed image — keeps the wire
+/// small) or [`InferBuilder::image`] (inline pixels), then chain the
+/// optional knobs; `.model()` and `.tenant()` imply the fleet path.
+#[derive(Debug, Clone)]
+pub struct InferBuilder {
+    seed: u64,
+    index: u64,
+    image: Option<Vec<f32>>,
+    precision: Precision,
+    sim: bool,
+    fleet: bool,
+    qos: Qos,
+    model: Option<String>,
+    tenant: Option<String>,
+}
+
+impl Default for InferBuilder {
+    fn default() -> InferBuilder {
+        InferBuilder {
+            seed: 0,
+            index: 0,
+            image: None,
+            precision: Precision::Precise,
+            sim: false,
+            fleet: false,
+            qos: Qos::default(),
+            model: None,
+            tenant: None,
+        }
+    }
+}
+
+impl InferBuilder {
+    /// Corpus-addressed image: both ends derive the pixels from the
+    /// shared deterministic corpus.
+    pub fn seed(seed: u64, index: u64) -> InferBuilder {
+        InferBuilder { seed, index, ..InferBuilder::default() }
+    }
+
+    /// Inline pixels (must match the model's input length).
+    pub fn image(pixels: Vec<f32>) -> InferBuilder {
+        InferBuilder { image: Some(pixels), ..InferBuilder::default() }
+    }
+
+    pub fn precision(mut self, precision: Precision) -> InferBuilder {
+        self.precision = precision;
+        self
+    }
+
+    pub fn sim(mut self, on: bool) -> InferBuilder {
+        self.sim = on;
+        self
+    }
+
+    pub fn fleet(mut self, on: bool) -> InferBuilder {
+        self.fleet = on;
+        self
+    }
+
+    pub fn priority(mut self, priority: u8) -> InferBuilder {
+        self.qos.priority = priority;
+        self
+    }
+
+    pub fn deadline_ms(mut self, deadline_ms: f64) -> InferBuilder {
+        self.qos.deadline_ms = Some(deadline_ms);
+        self
+    }
+
+    pub fn qos(mut self, qos: Qos) -> InferBuilder {
+        self.qos = qos;
+        self
+    }
+
+    /// Catalog model name; implies `"fleet": true`.
+    pub fn model(mut self, name: &str) -> InferBuilder {
+        self.model = Some(name.to_string());
+        self.fleet = true;
+        self
+    }
+
+    /// Routing-key tenant; implies `"fleet": true`.
+    pub fn tenant(mut self, name: &str) -> InferBuilder {
+        self.tenant = Some(name.to_string());
+        self.fleet = true;
+        self
+    }
+
+    fn args_json(&self) -> Json {
+        let mut pairs = Vec::new();
+        if let Some(img) = &self.image {
+            pairs.push((
+                "image",
+                Json::Array(img.iter().map(|&x| Json::num(f64::from(x))).collect()),
+            ));
+        } else {
+            pairs.push(("image_seed", Json::num(self.seed as f64)));
+            pairs.push(("image_index", Json::num(self.index as f64)));
+        }
+        pairs.push(("precision", Json::str(self.precision.label())));
+        if self.sim {
+            pairs.push(("sim", Json::Bool(true)));
+        }
+        if self.fleet {
+            pairs.push(("fleet", Json::Bool(true)));
+        }
+        pairs.push(("priority", Json::num(f64::from(self.qos.priority))));
+        if let Some(d) = self.qos.deadline_ms {
+            pairs.push(("deadline_ms", Json::num(d)));
+        }
+        if let Some(m) = &self.model {
+            pairs.push(("model", Json::str(m.clone())));
+        }
+        if let Some(t) = &self.tenant {
+            pairs.push(("tenant", Json::str(t.clone())));
+        }
+        Json::object(pairs)
+    }
+}
+
+/// Minimal blocking client for the JSON-lines protocol.  Every
+/// request goes through [`Client::call`] as a v2 envelope; the legacy
+/// per-command methods are thin wrappers kept for ergonomics.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -405,15 +997,53 @@ impl Client {
         Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
     }
 
-    fn round_trip(&mut self, req: Json) -> Result<Json> {
-        writeln!(self.writer, "{req}")?;
+    /// Send one request as a v2 envelope and return the reply payload.
+    /// Server failures surface as errors carrying the stable wire code
+    /// (`server error [code]: msg`); v1-shaped replies from an older
+    /// server are accepted too.
+    pub fn call(&mut self, req: &Request) -> Result<Json> {
+        let envelope = Json::object(vec![
+            ("v", Json::num(2.0)),
+            ("cmd", Json::str(req.cmd())),
+            ("args", req.args()),
+        ]);
+        writeln!(self.writer, "{envelope}")?;
         let mut line = String::new();
         self.reader.read_line(&mut line).context("reading reply")?;
         let v = Json::parse(line.trim()).context("parsing reply")?;
-        if let Some(err) = v.get("error").and_then(Json::as_str) {
-            anyhow::bail!("server error: {err}");
+        match v.get("ok").and_then(Json::as_bool) {
+            Some(true) => Ok(v),
+            Some(false) => {
+                let code = v
+                    .get("error")
+                    .and_then(|e| e.get("code"))
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown")
+                    .to_string();
+                let msg = v
+                    .get("error")
+                    .and_then(|e| e.get("msg"))
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string();
+                anyhow::bail!("server error [{code}]: {msg}")
+            }
+            None => match v.get("error").and_then(Json::as_str) {
+                Some(err) => anyhow::bail!("server error: {err}"),
+                None => Ok(v),
+            },
         }
-        Ok(v)
+    }
+
+    /// Run one inference described by the builder.
+    pub fn infer(&mut self, req: InferBuilder) -> Result<ClientReply> {
+        let v = self.call(&Request::Infer(req))?;
+        Ok(ClientReply {
+            top1: v.get("top1").and_then(Json::as_usize).context("reply missing top1")?,
+            latency_ms: v.get("latency_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            batch_size: v.get("batch_size").and_then(Json::as_usize).unwrap_or(1),
+            raw: v,
+        })
     }
 
     /// Infer on a corpus-addressed image.
@@ -424,7 +1054,7 @@ impl Client {
         precision: Precision,
         with_sim: bool,
     ) -> Result<ClientReply> {
-        self.infer_seed_qos(seed, index, precision, with_sim, Qos::default())
+        self.infer(InferBuilder::seed(seed, index).precision(precision).sim(with_sim))
     }
 
     /// [`infer_seed`](Self::infer_seed) with an explicit QoS class
@@ -437,23 +1067,7 @@ impl Client {
         with_sim: bool,
         qos: Qos,
     ) -> Result<ClientReply> {
-        let mut pairs = vec![
-            ("image_seed", Json::num(seed as f64)),
-            ("image_index", Json::num(index as f64)),
-            ("precision", Json::str(precision.label())),
-            ("sim", Json::Bool(with_sim)),
-            ("priority", Json::num(f64::from(qos.priority))),
-        ];
-        if let Some(d) = qos.deadline_ms {
-            pairs.push(("deadline_ms", Json::num(d)));
-        }
-        let v = self.round_trip(Json::object(pairs))?;
-        Ok(ClientReply {
-            top1: v.get("top1").and_then(Json::as_usize).context("reply missing top1")?,
-            latency_ms: v.get("latency_ms").and_then(Json::as_f64).unwrap_or(0.0),
-            batch_size: v.get("batch_size").and_then(Json::as_usize).unwrap_or(1),
-            raw: v,
-        })
+        self.infer(InferBuilder::seed(seed, index).precision(precision).sim(with_sim).qos(qos))
     }
 
     /// Fleet-backed inference for a named catalog model: sets
@@ -468,49 +1082,32 @@ impl Client {
         model: &str,
         qos: Qos,
     ) -> Result<ClientReply> {
-        let mut pairs = vec![
-            ("image_seed", Json::num(seed as f64)),
-            ("image_index", Json::num(index as f64)),
-            ("precision", Json::str(precision.label())),
-            ("fleet", Json::Bool(true)),
-            ("model", Json::str(model)),
-            ("priority", Json::num(f64::from(qos.priority))),
-        ];
-        if let Some(d) = qos.deadline_ms {
-            pairs.push(("deadline_ms", Json::num(d)));
-        }
-        let v = self.round_trip(Json::object(pairs))?;
-        Ok(ClientReply {
-            top1: v.get("top1").and_then(Json::as_usize).context("reply missing top1")?,
-            latency_ms: v.get("latency_ms").and_then(Json::as_f64).unwrap_or(0.0),
-            batch_size: v.get("batch_size").and_then(Json::as_usize).unwrap_or(1),
-            raw: v,
-        })
+        self.infer(InferBuilder::seed(seed, index).precision(precision).model(model).qos(qos))
     }
 
     /// Fetch the server's telemetry report.
     pub fn stats(&mut self) -> Result<String> {
-        let v = self.round_trip(Json::object(vec![("cmd", Json::str("stats"))]))?;
+        let v = self.call(&Request::Stats)?;
         Ok(v.get("stats").and_then(Json::as_str).unwrap_or("").to_string())
     }
 
     /// Fetch the fleet report (errors when the server has no fleet).
     pub fn fleet_stats(&mut self) -> Result<Json> {
-        let v = self.round_trip(Json::object(vec![("cmd", Json::str("fleet_stats"))]))?;
+        let v = self.call(&Request::FleetStats)?;
         v.get("fleet_stats").cloned().context("reply missing fleet_stats")
     }
 
     /// Fetch the autoscaler report (errors when the server has no
     /// fleet or no autoscaler).
     pub fn autoscale_stats(&mut self) -> Result<Json> {
-        let v = self.round_trip(Json::object(vec![("cmd", Json::str("autoscale_stats"))]))?;
+        let v = self.call(&Request::AutoscaleStats)?;
         v.get("autoscale_stats").cloned().context("reply missing autoscale_stats")
     }
 
     /// Fetch the fleet's metrics-registry snapshot (errors when the
     /// server has no fleet).
     pub fn metrics(&mut self) -> Result<Json> {
-        let v = self.round_trip(Json::object(vec![("cmd", Json::str("metrics"))]))?;
+        let v = self.call(&Request::Metrics)?;
         v.get("metrics").cloned().context("reply missing metrics")
     }
 
@@ -518,13 +1115,13 @@ impl Client {
     /// (errors when the server has no fleet; empty `traceEvents` when
     /// sampling is off).
     pub fn trace_dump(&mut self) -> Result<Json> {
-        let v = self.round_trip(Json::object(vec![("cmd", Json::str("trace_dump"))]))?;
+        let v = self.call(&Request::TraceDump)?;
         v.get("trace").cloned().context("reply missing trace")
     }
 
     /// Ask the server to stop.
     pub fn quit(&mut self) -> Result<()> {
-        let _ = self.round_trip(Json::object(vec![("cmd", Json::str("quit"))]))?;
+        let _ = self.call(&Request::Quit)?;
         Ok(())
     }
 }
@@ -540,15 +1137,17 @@ mod tests {
 
     #[test]
     fn parses_seed_request() {
-        let p = parse_request(r#"{"image_seed": 3, "precision": "imprecise"}"#, 12).unwrap();
-        match p {
-            Parsed::Infer { image, precision, with_sim, with_fleet, qos, model } => {
+        let pr = parse_request(r#"{"image_seed": 3, "precision": "imprecise"}"#, 12).unwrap();
+        assert_eq!(pr.v, 1);
+        match pr.parsed {
+            Parsed::Infer { image, precision, with_sim, with_fleet, qos, model, tenant } => {
                 assert_eq!(image.len(), crate::model::images::IMAGE_LEN);
                 assert_eq!(precision, Precision::Imprecise);
                 assert!(!with_sim);
                 assert!(!with_fleet);
                 assert_eq!(qos, Qos::default());
                 assert_eq!(model, None);
+                assert_eq!(tenant, None);
             }
             _ => panic!("expected infer"),
         }
@@ -556,9 +1155,9 @@ mod tests {
 
     #[test]
     fn parses_model_field() {
-        let p = parse_request(r#"{"image_seed": 1, "fleet": true, "model": "detector"}"#, 12)
+        let pr = parse_request(r#"{"image_seed": 1, "fleet": true, "model": "detector"}"#, 12)
             .unwrap();
-        match p {
+        match pr.parsed {
             Parsed::Infer { model, with_fleet, .. } => {
                 assert_eq!(model.as_deref(), Some("detector"));
                 assert!(with_fleet);
@@ -572,9 +1171,23 @@ mod tests {
     }
 
     #[test]
+    fn parses_tenant_field() {
+        let pr = parse_request(r#"{"image_seed": 1, "fleet": true, "tenant": "acme"}"#, 12)
+            .unwrap();
+        match pr.parsed {
+            Parsed::Infer { tenant, .. } => assert_eq!(tenant.as_deref(), Some("acme")),
+            _ => panic!("expected infer"),
+        }
+        // tenancy is a fleet routing key: without the fleet path it is
+        // a visible error, as is a non-string tenant
+        assert!(parse_request(r#"{"image_seed": 1, "tenant": "acme"}"#, 12).is_err());
+        assert!(parse_request(r#"{"image_seed": 1, "fleet": true, "tenant": 7}"#, 12).is_err());
+    }
+
+    #[test]
     fn parses_fleet_request() {
-        let p = parse_request(r#"{"image_seed": 1, "fleet": true}"#, 12).unwrap();
-        match p {
+        let pr = parse_request(r#"{"image_seed": 1, "fleet": true}"#, 12).unwrap();
+        match pr.parsed {
             Parsed::Infer { with_fleet, .. } => assert!(with_fleet),
             _ => panic!("expected infer"),
         }
@@ -582,12 +1195,12 @@ mod tests {
 
     #[test]
     fn parses_qos_fields() {
-        let p = parse_request(
+        let pr = parse_request(
             r#"{"image_seed": 1, "fleet": true, "priority": 3, "deadline_ms": 450.5}"#,
             12,
         )
         .unwrap();
-        match p {
+        match pr.parsed {
             Parsed::Infer { qos, .. } => {
                 assert_eq!(qos.priority, 3);
                 assert_eq!(qos.deadline_ms, Some(450.5));
@@ -596,8 +1209,8 @@ mod tests {
             _ => panic!("expected infer"),
         }
         // bulk is priority 0, no deadline
-        let p = parse_request(r#"{"image_seed": 1, "priority": 0}"#, 12).unwrap();
-        match p {
+        let pr = parse_request(r#"{"image_seed": 1, "priority": 0}"#, 12).unwrap();
+        match pr.parsed {
             Parsed::Infer { qos, .. } => assert_eq!(qos, Qos::bulk()),
             _ => panic!("expected infer"),
         }
@@ -610,8 +1223,8 @@ mod tests {
 
     #[test]
     fn parses_raw_image_request() {
-        let p = parse_request(r#"{"image": [0.1, 0.2, 0.3]}"#, 3).unwrap();
-        match p {
+        let pr = parse_request(r#"{"image": [0.1, 0.2, 0.3]}"#, 3).unwrap();
+        match pr.parsed {
             Parsed::Infer { image, .. } => assert_eq!(image, vec![0.1, 0.2, 0.3]),
             _ => panic!("expected infer"),
         }
@@ -625,9 +1238,143 @@ mod tests {
         assert!(parse_request(r#"{"cmd": "dance"}"#, 3).is_err());
     }
 
+    #[test]
+    fn v2_envelope_parses_via_the_command_table() {
+        let pr = parse_request(
+            r#"{"v": 2, "cmd": "infer", "args": {"image_seed": 3, "fleet": true, "tenant": "acme"}}"#,
+            12,
+        )
+        .unwrap();
+        assert_eq!(pr.v, 2);
+        match pr.parsed {
+            Parsed::Infer { with_fleet, tenant, .. } => {
+                assert!(with_fleet);
+                assert_eq!(tenant.as_deref(), Some("acme"));
+            }
+            _ => panic!("expected infer"),
+        }
+        let pr = parse_request(r#"{"v": 2, "cmd": "stats"}"#, 12).unwrap();
+        assert_eq!(pr.v, 2);
+        assert!(matches!(pr.parsed, Parsed::Stats));
+        // every command name in the table is reachable through v2
+        for (name, _) in COMMANDS {
+            let line = format!("{{\"v\": 2, \"cmd\": \"{name}\"}}");
+            assert!(parse_request(&line, 12).is_ok(), "cmd '{name}' must parse");
+        }
+        // non-object args are a visible error
+        assert!(parse_request(r#"{"v": 2, "cmd": "stats", "args": 3}"#, 12).is_err());
+    }
+
+    #[test]
+    fn v2_errors_carry_stable_codes() {
+        let code = |line: &str| parse_request(line, 12).unwrap_err().1.code;
+        assert_eq!(code("not json"), "bad_json");
+        assert_eq!(code(r#"{"v": 3, "cmd": "stats"}"#), "bad_version");
+        assert_eq!(code(r#"{"v": 2}"#), "bad_args");
+        assert_eq!(code(r#"{"v": 2, "cmd": "dance"}"#), "unknown_cmd");
+        assert_eq!(code(r#"{"v": 2, "cmd": "infer", "args": {"priority": 300}}"#), "bad_args");
+        // the dialect of the failing request rides back so the error
+        // reply can match the client's version
+        assert_eq!(parse_request("not json", 12).unwrap_err().0, 1);
+        assert_eq!(parse_request(r#"{"v": 2, "cmd": "dance"}"#, 12).unwrap_err().0, 2);
+        assert_eq!(parse_request(r#"{"cmd": "dance"}"#, 12).unwrap_err().0, 1);
+    }
+
+    /// The wire-compat contract: every documented v1 request form
+    /// still parses, in the v1 dialect, through the v2 command table.
+    #[test]
+    fn v1_wire_forms_still_round_trip() {
+        let forms = [
+            r#"{"image_seed": 7, "image_index": 0, "precision": "precise", "sim": true}"#,
+            r#"{"image_seed": 1, "fleet": true, "priority": 2, "deadline_ms": 500}"#,
+            r#"{"image_seed": 1, "fleet": true, "model": "squeezenet"}"#,
+            r#"{"image": [0.1, 0.2, 0.3]}"#,
+            r#"{"cmd": "stats"}"#,
+            r#"{"cmd": "fleet_stats"}"#,
+            r#"{"cmd": "autoscale_stats"}"#,
+            r#"{"cmd": "metrics"}"#,
+            r#"{"cmd": "trace_dump"}"#,
+            r#"{"cmd": "quit"}"#,
+        ];
+        for form in forms {
+            let pr = parse_request(form, 3)
+                .unwrap_or_else(|e| panic!("v1 form {form} broke: {e:?}"));
+            assert_eq!(pr.v, 1, "v1 form {form} must keep its dialect");
+        }
+        // an explicit "v": 1 also maps to the legacy dialect
+        assert_eq!(parse_request(r#"{"v": 1, "cmd": "stats"}"#, 3).unwrap().v, 1);
+    }
+
+    #[test]
+    fn reply_envelopes_are_versioned() {
+        let ok2 = reply_ok(2, Json::object(vec![("x", Json::num(1.0))]));
+        assert_eq!(ok2.get("ok").and_then(Json::as_bool), Some(true));
+        assert!(ok2.get("x").is_some());
+        assert!(ok2.get("deprecated").is_none());
+
+        let ok1 = reply_ok(1, Json::object(vec![("x", Json::num(1.0))]));
+        assert!(ok1.get("ok").is_none(), "v1 replies keep the legacy shape");
+        assert!(ok1.get("x").is_some());
+        assert!(ok1.get("deprecated").and_then(Json::as_str).is_some());
+
+        let err2 = reply_err(2, &WireError::new("bad_args", "nope"));
+        assert_eq!(err2.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(
+            err2.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("bad_args")
+        );
+        assert_eq!(
+            err2.get("error").and_then(|e| e.get("msg")).and_then(Json::as_str),
+            Some("nope")
+        );
+
+        let err1 = reply_err(1, &WireError::new("bad_args", "nope"));
+        assert_eq!(err1.get("error").and_then(Json::as_str), Some("nope"));
+        assert_eq!(err1.get("error_code").and_then(Json::as_str), Some("bad_args"));
+    }
+
+    #[test]
+    fn infer_builder_emits_the_documented_args() {
+        let b = InferBuilder::seed(3, 1)
+            .precision(Precision::Imprecise)
+            .sim(true)
+            .priority(2)
+            .deadline_ms(450.0)
+            .model("detector")
+            .tenant("acme");
+        let args = b.args_json();
+        assert_eq!(args.get("image_seed").and_then(Json::as_usize), Some(3));
+        assert_eq!(args.get("image_index").and_then(Json::as_usize), Some(1));
+        assert_eq!(args.get("precision").and_then(Json::as_str), Some("imprecise"));
+        // .model() implies the fleet path
+        assert_eq!(args.get("fleet").and_then(Json::as_bool), Some(true));
+        assert_eq!(args.get("model").and_then(Json::as_str), Some("detector"));
+        assert_eq!(args.get("tenant").and_then(Json::as_str), Some("acme"));
+        assert_eq!(args.get("priority").and_then(Json::as_usize), Some(2));
+        assert_eq!(args.get("deadline_ms").and_then(Json::as_f64), Some(450.0));
+        // and the emitted args re-parse as the same request
+        let line = Json::object(vec![
+            ("v", Json::num(2.0)),
+            ("cmd", Json::str("infer")),
+            ("args", args),
+        ])
+        .to_string();
+        let pr = parse_request(&line, 12).unwrap();
+        assert_eq!(pr.v, 2);
+        match pr.parsed {
+            Parsed::Infer { qos, model, tenant, with_fleet, .. } => {
+                assert_eq!(qos, Qos { priority: 2, deadline_ms: Some(450.0) });
+                assert_eq!(model.as_deref(), Some("detector"));
+                assert_eq!(tenant.as_deref(), Some("acme"));
+                assert!(with_fleet);
+            }
+            _ => panic!("expected infer"),
+        }
+    }
+
     /// Seeded corruption of valid requests: every mutant must come
-    /// back `Ok` or `Err` — a panic here is a crashed handler thread
-    /// in production.  The LCG makes failures reproducible.
+    /// back `Ok` or `Err` — a panic here is a crashed server loop in
+    /// production.  The LCG makes failures reproducible.
     #[test]
     fn seeded_bad_input_is_an_error_never_a_panic() {
         const ROUNDS: usize = 500;
@@ -636,6 +1383,7 @@ mod tests {
             r#"{"image_seed": 1, "fleet": true, "priority": 2, "deadline_ms": 500, "model": "m"}"#,
             r#"{"image": [0.1, 0.2, 0.3]}"#,
             r#"{"cmd": "metrics"}"#,
+            r#"{"v": 2, "cmd": "infer", "args": {"image_seed": 1, "fleet": true, "tenant": "t"}}"#,
         ];
         let pool: Vec<char> = "{}[]\",:0123456789.eE+-truefalsnm ".chars().collect();
         let mut state: u64 = 0x00c0ffee;
@@ -668,20 +1416,12 @@ mod tests {
 
     #[test]
     fn parses_commands() {
-        assert!(matches!(parse_request(r#"{"cmd": "stats"}"#, 3).unwrap(), Parsed::Stats));
-        assert!(matches!(
-            parse_request(r#"{"cmd": "fleet_stats"}"#, 3).unwrap(),
-            Parsed::FleetStats
-        ));
-        assert!(matches!(
-            parse_request(r#"{"cmd": "autoscale_stats"}"#, 3).unwrap(),
-            Parsed::AutoscaleStats
-        ));
-        assert!(matches!(parse_request(r#"{"cmd": "metrics"}"#, 3).unwrap(), Parsed::Metrics));
-        assert!(matches!(
-            parse_request(r#"{"cmd": "trace_dump"}"#, 3).unwrap(),
-            Parsed::TraceDump
-        ));
-        assert!(matches!(parse_request(r#"{"cmd": "quit"}"#, 3).unwrap(), Parsed::Quit));
+        let parsed = |line: &str| parse_request(line, 3).unwrap().parsed;
+        assert!(matches!(parsed(r#"{"cmd": "stats"}"#), Parsed::Stats));
+        assert!(matches!(parsed(r#"{"cmd": "fleet_stats"}"#), Parsed::FleetStats));
+        assert!(matches!(parsed(r#"{"cmd": "autoscale_stats"}"#), Parsed::AutoscaleStats));
+        assert!(matches!(parsed(r#"{"cmd": "metrics"}"#), Parsed::Metrics));
+        assert!(matches!(parsed(r#"{"cmd": "trace_dump"}"#), Parsed::TraceDump));
+        assert!(matches!(parsed(r#"{"cmd": "quit"}"#), Parsed::Quit));
     }
 }

@@ -1,0 +1,558 @@
+//! Sharded front door: M coordinator shards behind a stateless router.
+//!
+//! The single-coordinator front door serializes every request on one
+//! fleet-state mutex; past ~10K RPS the *lock*, not the replicas, is
+//! the bottleneck (the ROADMAP's top open item).  This module splits
+//! the fleet into M shards — each owning a partition of the replicas
+//! with its **own** [`Fleet`] (and therefore its own
+//! [`FleetGate`](crate::coordinator::admission::FleetGate), batcher,
+//! and autoscaler view) — behind a thin router that consistent-hashes
+//! each request's `(tenant, model)` key onto a virtual-node
+//! [`HashRing`].  The router holds its `RwLock` only for the ring
+//! lookup (reads, in the common case), so concurrent dispatches to
+//! different shards proceed in parallel on the per-shard fleet locks.
+//!
+//! Elasticity: [`ShardedFleet::join`] brings up a new shard (ring
+//! redistribution moves only the keys the joiner captures — ≈`1/M_new`
+//! of them, the minimum; collateral movement between existing shards
+//! is zero, far under the <5% budget — see [`super::ring`]).
+//! [`ShardedFleet::leave`] retires a shard from the ring but **keeps
+//! its fleet draining**, so riders already queued there still reach a
+//! terminal outcome and the fleet-wide conservation law
+//!
+//! ```text
+//! router arrivals == Σ_shards (completed + shed + lost + expired)
+//! ```
+//!
+//! holds *through* a mid-trace re-partition, not just at rest
+//! ([`ShardedReport::conserved`]).
+//!
+//! Telemetry: the router owns its own [`MetricsRegistry`] with a
+//! fleet-wide `router_arrivals_total` and per-shard
+//! `router_routed_total{shard="s<i>"}` counters, and its own sampled
+//! [`Tracer`] emitting a `shard_route` span per sampled request.
+//! Shard fleets keep their full per-fleet metrics/trace surface;
+//! [`ShardedFleet::metrics_snapshot`] composes both.
+//!
+//! Virtual-time note: like the rest of `coordinator/`, this file may
+//! touch the wall clock (it lives on the socket path); the fleet math
+//! itself stays in virtual time — callers supply `Arrival::at_ms`.
+
+use std::sync::{Arc, RwLock};
+
+use crate::fleet::{Arrival, Fleet, FleetConfig, FleetReport, Placement, ScaleEvent};
+use crate::runtime::artifacts::ModelId;
+use crate::telemetry::metrics::{labeled, Counter, MetricsRegistry};
+use crate::telemetry::trace::Tracer;
+use crate::util::json::Json;
+use crate::util::sync::{read_unpoisoned, write_unpoisoned};
+
+use super::ring::{HashRing, DEFAULT_VNODES};
+
+/// A placement plus the shard that made it — the handle
+/// [`ShardedFleet::retract`] and autoscale-event pickup need to reach
+/// the right shard again.
+#[derive(Debug, Clone)]
+pub struct Routed {
+    pub shard: usize,
+    pub placement: Placement,
+}
+
+struct Shard {
+    fleet: Arc<Fleet>,
+    /// Router-side routed counter (`router_routed_total{shard=...}`).
+    routed: Arc<Counter>,
+    /// False once the shard left the ring; the fleet stays alive to
+    /// drain its queue, and its counters stay in the conservation sum.
+    active: bool,
+}
+
+struct Topology {
+    ring: HashRing,
+    shards: Vec<Shard>,
+}
+
+/// See the module docs.
+pub struct ShardedFleet {
+    topo: RwLock<Topology>,
+    metrics: Arc<MetricsRegistry>,
+    arrivals: Arc<Counter>,
+    tracer: Tracer,
+    /// Full (unpartitioned) config; [`ShardedFleet::join`] provisions
+    /// new shards from its replica list.
+    template: FleetConfig,
+    /// Shard count at construction — the modulus of the round-robin
+    /// replica partition.
+    initial_shards: usize,
+}
+
+impl ShardedFleet {
+    /// Partition `cfg.replicas` round-robin across `shards` fleets
+    /// (shard `i` takes replicas `i, i+M, i+2M, ...`).  Each shard
+    /// clones the rest of the config — policy, budget, batching,
+    /// autoscaling, artifact tier — so it is a complete fleet of its
+    /// own; seeds are offset per shard to decorrelate tie-breaking.
+    /// `shards` is clamped to at least 1.
+    pub fn new(cfg: FleetConfig, shards: usize) -> ShardedFleet {
+        let m = shards.max(1);
+        let fleets = (0..m).map(|i| {
+            let mut part = cfg.clone();
+            part.replicas = cfg
+                .replicas
+                .iter()
+                .enumerate()
+                .filter(|(k, _)| k % m == i)
+                .map(|(_, r)| r.clone())
+                .collect();
+            part.seed = cfg.seed.wrapping_add(i as u64);
+            Arc::new(Fleet::new(part))
+        });
+        ShardedFleet::assemble(cfg, fleets.collect(), m)
+    }
+
+    /// Wrap one existing fleet as a single-shard front door (the
+    /// `--fleet-shards 1` / legacy server path: routing is the
+    /// identity, behavior matches the unsharded coordinator).
+    pub fn single(fleet: Arc<Fleet>) -> ShardedFleet {
+        let cfg = fleet.config().clone();
+        ShardedFleet::assemble(cfg, vec![fleet], 1)
+    }
+
+    fn assemble(template: FleetConfig, fleets: Vec<Arc<Fleet>>, m: usize) -> ShardedFleet {
+        let metrics = Arc::new(MetricsRegistry::new());
+        let arrivals = metrics.counter("router_arrivals_total");
+        let tracer = Tracer::new(4096, template.trace_every);
+        let shards = fleets
+            .into_iter()
+            .enumerate()
+            .map(|(i, fleet)| Shard {
+                fleet,
+                routed: metrics
+                    .counter(&labeled("router_routed_total", &[("shard", &format!("s{i}"))])),
+                active: true,
+            })
+            .collect();
+        ShardedFleet {
+            topo: RwLock::new(Topology { ring: HashRing::new(m, DEFAULT_VNODES), shards }),
+            metrics,
+            arrivals,
+            tracer,
+            template,
+            initial_shards: m,
+        }
+    }
+
+    /// Shards currently on the ring.
+    pub fn active_shards(&self) -> usize {
+        read_unpoisoned(&self.topo).shards.iter().filter(|s| s.active).count()
+    }
+
+    /// All shards ever created (retired ones included — they still
+    /// drain and report).
+    pub fn total_shards(&self) -> usize {
+        read_unpoisoned(&self.topo).shards.len()
+    }
+
+    /// The shard the ring routes this key to right now.
+    pub fn route(&self, tenant: Option<&str>, model: ModelId) -> Option<usize> {
+        read_unpoisoned(&self.topo).ring.shard_for(tenant, model)
+    }
+
+    /// Shard `i`'s fleet (retired shards included).
+    pub fn shard_fleet(&self, shard: usize) -> Option<Arc<Fleet>> {
+        read_unpoisoned(&self.topo).shards.get(shard).map(|s| Arc::clone(&s.fleet))
+    }
+
+    /// Route by `(tenant, model)` and dispatch on the owning shard's
+    /// fleet.  Returns `None` when that shard sheds the request (its
+    /// gate, its capacity — exactly [`Fleet::dispatch`] semantics,
+    /// counted on that shard so conservation sums fleet-wide).
+    pub fn dispatch(&self, arrival: impl Into<Arrival>) -> Option<Routed> {
+        let arrival = arrival.into();
+        self.arrivals.inc();
+        let trace = self.tracer.sample();
+        let routed = {
+            let topo = read_unpoisoned(&self.topo);
+            topo.ring
+                .shard_for(arrival.tenant.as_deref(), arrival.model)
+                .and_then(|idx| topo.shards.get(idx).map(|s| (idx, s)))
+                .map(|(idx, s)| {
+                    s.routed.inc();
+                    (idx, Arc::clone(&s.fleet))
+                })
+        };
+        // The ring is never empty (constructors make ≥1 shard and
+        // `leave` refuses the last), so `routed` is always `Some`;
+        // the guard keeps the router total even if that ever changes.
+        let (shard, fleet) = routed?;
+        if let Some(id) = trace {
+            self.tracer.event(
+                id,
+                "shard_route",
+                format!(
+                    "(tenant={}, model={}) -> s{shard}",
+                    arrival.tenant.as_deref().unwrap_or("-"),
+                    arrival.model.index()
+                ),
+                arrival.at_ms,
+                0.0,
+                shard as u32,
+            );
+        }
+        fleet.dispatch(arrival).map(|placement| Routed { shard, placement })
+    }
+
+    /// Undo a routed placement whose real work failed (see
+    /// [`Fleet::retract`]).
+    pub fn retract(&self, routed: &Routed) -> bool {
+        match self.shard_fleet(routed.shard) {
+            Some(f) => f.retract(&routed.placement),
+            None => false,
+        }
+    }
+
+    /// Autoscale events that fired on `shard` since last asked.
+    pub fn take_autoscale_events(&self, shard: usize) -> Vec<ScaleEvent> {
+        self.shard_fleet(shard).map(|f| f.take_autoscale_events()).unwrap_or_default()
+    }
+
+    /// Bring up one new shard, provisioned with the template replica
+    /// mix of partition `id % initial_shards`, and place it on the
+    /// ring.  Returns the new shard's id.  Keys move only *to* the
+    /// joiner (see the module docs).
+    pub fn join(&self) -> usize {
+        let mut topo = write_unpoisoned(&self.topo);
+        let id = topo.shards.len();
+        let m = self.initial_shards;
+        let mut part = self.template.clone();
+        part.replicas = self
+            .template
+            .replicas
+            .iter()
+            .enumerate()
+            .filter(|(k, _)| k % m == id % m)
+            .map(|(_, r)| r.clone())
+            .collect();
+        part.seed = self.template.seed.wrapping_add(id as u64);
+        let routed = self
+            .metrics
+            .counter(&labeled("router_routed_total", &[("shard", &format!("s{id}"))]));
+        topo.shards.push(Shard { fleet: Arc::new(Fleet::new(part)), routed, active: true });
+        topo.ring.add_shard(id);
+        id
+    }
+
+    /// Retire `shard` from the ring.  Its fleet keeps draining (and
+    /// reporting) so no queued rider is dropped from the conservation
+    /// sum.  Refuses (`false`) for an unknown or already-retired
+    /// shard, and for the last active one — the ring must stay
+    /// non-empty so every arrival keeps a route.
+    pub fn leave(&self, shard: usize) -> bool {
+        let mut topo = write_unpoisoned(&self.topo);
+        let active = topo.shards.iter().filter(|s| s.active).count();
+        let Some(s) = topo.shards.get_mut(shard) else {
+            return false;
+        };
+        if !s.active || active <= 1 {
+            return false;
+        }
+        s.active = false;
+        topo.ring.remove_shard(shard);
+        true
+    }
+
+    /// Advance every shard's virtual clock to `t_ms` (retired shards
+    /// too — they are still draining).
+    pub fn run_to(&self, t_ms: f64) {
+        for f in self.fleets() {
+            f.run_to(t_ms);
+        }
+    }
+
+    /// Non-destructive snapshot across all shards.
+    pub fn stats(&self) -> ShardedReport {
+        self.report(Fleet::stats)
+    }
+
+    /// Run every shard's queue dry and aggregate the final reports.
+    pub fn finish(&self) -> ShardedReport {
+        self.report(Fleet::finish)
+    }
+
+    fn fleets(&self) -> Vec<Arc<Fleet>> {
+        read_unpoisoned(&self.topo).shards.iter().map(|s| Arc::clone(&s.fleet)).collect()
+    }
+
+    fn report(&self, snap: impl Fn(&Fleet) -> FleetReport) -> ShardedReport {
+        let shards: Vec<FleetReport> = self.fleets().iter().map(|f| snap(f.as_ref())).collect();
+        let retired = {
+            let topo = read_unpoisoned(&self.topo);
+            topo.shards.iter().filter(|s| !s.active).count()
+        };
+        ShardedReport { arrivals: self.arrivals.get(), retired, shards }
+    }
+
+    /// The router's own registry (`router_arrivals_total`,
+    /// `router_routed_total{shard=...}`); shard fleets keep theirs.
+    pub fn metrics(&self) -> Arc<MetricsRegistry> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Router snapshot plus every shard fleet's snapshot.  A
+    /// single-shard front door stays wire-identical to the unsharded
+    /// server (the shard fleet's snapshot alone); router counters are
+    /// still reachable via [`ShardedFleet::metrics`].
+    pub fn metrics_snapshot(&self) -> Json {
+        let fleets = self.fleets();
+        match (fleets.first(), fleets.len()) {
+            (Some(f), 1) => f.metrics_snapshot(),
+            _ => Json::object(vec![
+                ("router", self.metrics.snapshot()),
+                ("shards", Json::Array(fleets.iter().map(|f| f.metrics_snapshot()).collect())),
+            ]),
+        }
+    }
+
+    /// Fleet-stats wire payload: a single shard reports wire-identical
+    /// to the unsharded [`FleetReport`](crate::fleet::FleetReport);
+    /// M > 1 reports the sharded aggregate ([`ShardedReport::to_json`]).
+    pub fn stats_json(&self) -> Json {
+        let fleets = self.fleets();
+        match (fleets.first(), fleets.len()) {
+            (Some(f), 1) => f.stats().to_json(),
+            _ => self.stats().to_json(),
+        }
+    }
+
+    /// Chrome-trace export.  A single-shard front door stays
+    /// wire-identical to the unsharded server (the shard fleet's
+    /// spans); with M > 1 the router's `shard_route` spans are the
+    /// story and are exported instead (per-shard spans remain
+    /// reachable via [`ShardedFleet::shard_fleet`]).
+    pub fn trace_chrome_json(&self) -> Json {
+        let fleets = self.fleets();
+        match (fleets.first(), fleets.len()) {
+            (Some(f), 1) => f.trace_chrome_json(),
+            _ => self.tracer.export_chrome(),
+        }
+    }
+
+    /// Autoscaler snapshot: `None` when no shard has an autoscaler; a
+    /// single shard reports wire-identically to the unsharded server,
+    /// M > 1 reports `{"shards": [report-or-null, ...]}`.
+    pub fn autoscale_json(&self) -> Option<Json> {
+        let fleets = self.fleets();
+        let reports: Vec<Option<Json>> =
+            fleets.iter().map(|f| f.autoscale_report().map(|r| r.to_json())).collect();
+        if reports.iter().all(Option::is_none) {
+            return None;
+        }
+        if reports.len() == 1 {
+            return reports.into_iter().next().flatten();
+        }
+        Some(Json::object(vec![(
+            "shards",
+            Json::Array(reports.into_iter().map(|r| r.unwrap_or(Json::Null)).collect()),
+        )]))
+    }
+
+    /// Resolve a catalog model name (every shard shares the template
+    /// catalog, so shard 0 answers for all).
+    pub fn resolve_model(&self, name: &str) -> Option<ModelId> {
+        self.fleets().first().and_then(|f| f.resolve_model(name))
+    }
+
+    pub fn has_catalog(&self) -> bool {
+        self.fleets().first().is_some_and(|f| f.has_catalog())
+    }
+}
+
+/// Fleet-wide aggregate over every shard (retired ones included).
+#[derive(Debug, Clone)]
+pub struct ShardedReport {
+    /// Requests the *router* observed ([`ShardedFleet::dispatch`]
+    /// calls) — the left side of the conservation law.
+    pub arrivals: u64,
+    /// Shards that have left the ring but are still counted.
+    pub retired: usize,
+    /// Per-shard reports, by shard id.
+    pub shards: Vec<FleetReport>,
+}
+
+impl ShardedReport {
+    fn sum(&self, f: impl Fn(&FleetReport) -> u64) -> u64 {
+        self.shards.iter().map(f).sum()
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.sum(|r| r.completed)
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.sum(|r| r.shed)
+    }
+
+    pub fn lost(&self) -> u64 {
+        self.sum(|r| r.lost)
+    }
+
+    pub fn expired(&self) -> u64 {
+        self.sum(|r| r.expired)
+    }
+
+    /// `service + idle + artifact` joules across all shards.
+    pub fn total_energy_j(&self) -> f64 {
+        self.shards.iter().map(|r| r.total_energy_j).sum()
+    }
+
+    /// Upper bound on the fleet-wide p99: the worst per-shard p99.
+    /// (Percentiles do not merge exactly; the max is conservative, so
+    /// "sharded p99 ≤ single p99" claims are, if anything, understated.)
+    pub fn p99_upper_ms(&self) -> Option<f64> {
+        self.shards.iter().filter_map(|r| r.p99_ms).fold(None, |acc, x| {
+            Some(match acc {
+                Some(a) if a >= x => a,
+                _ => x,
+            })
+        })
+    }
+
+    /// The conservation law, summed across shards — `true` iff every
+    /// router arrival reached exactly one terminal outcome
+    /// (`completed`, `shed`, `lost`, or `expired`) on exactly one
+    /// shard.  Holds during and after join/leave re-partitioning
+    /// because retired shards keep draining into this sum.
+    pub fn conserved(&self) -> bool {
+        self.arrivals == self.completed() + self.shed() + self.lost() + self.expired()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("arrivals", Json::num(self.arrivals as f64)),
+            ("completed", Json::num(self.completed() as f64)),
+            ("shed", Json::num(self.shed() as f64)),
+            ("lost", Json::num(self.lost() as f64)),
+            ("expired", Json::num(self.expired() as f64)),
+            ("conserved", Json::Bool(self.conserved())),
+            ("retired_shards", Json::num(self.retired as f64)),
+            ("total_energy_j", Json::num(self.total_energy_j())),
+            (
+                "p99_upper_ms",
+                self.p99_upper_ms().map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("shards", Json::Array(self.shards.iter().map(FleetReport::to_json).collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::Policy;
+
+    fn cfg(spec: &str) -> FleetConfig {
+        FleetConfig::parse_spec(spec, Policy::LeastLoaded).unwrap()
+    }
+
+    #[test]
+    fn partitions_replicas_round_robin() {
+        let sf = ShardedFleet::new(cfg("4xs7,2x6p"), 4);
+        assert_eq!(sf.active_shards(), 4);
+        let sizes: Vec<usize> =
+            (0..4).map(|i| sf.shard_fleet(i).unwrap().len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 6, "every replica lands somewhere");
+        assert_eq!(sizes, vec![2, 2, 1, 1]);
+    }
+
+    #[test]
+    fn single_shard_routes_everything_to_the_wrapped_fleet() {
+        let fleet = Arc::new(Fleet::new(cfg("1xs7")));
+        let sf = ShardedFleet::single(Arc::clone(&fleet));
+        for i in 0..5 {
+            assert_eq!(sf.dispatch(i as f64).map(|r| r.shard), Some(0));
+        }
+        let report = sf.finish();
+        assert_eq!(report.arrivals, 5);
+        assert!(report.conserved(), "{report:?}");
+        assert_eq!(fleet.stats().completed, 5);
+    }
+
+    #[test]
+    fn tenants_spread_across_shards_and_conservation_sums() {
+        let sf = ShardedFleet::new(cfg("4xs7"), 4);
+        let mut seen = std::collections::BTreeSet::new();
+        for i in 0..200u64 {
+            let a = Arrival::at(i as f64).with_tenant(format!("t{}", i % 31));
+            let shard = sf.route(a.tenant.as_deref(), a.model).unwrap();
+            let routed = sf.dispatch(a);
+            if let Some(r) = &routed {
+                assert_eq!(r.shard, shard, "dispatch must follow the ring");
+            }
+            seen.insert(shard);
+        }
+        assert!(seen.len() >= 3, "31 tenants should spread across shards: {seen:?}");
+        let report = sf.finish();
+        assert_eq!(report.arrivals, 200);
+        assert!(report.conserved(), "{report:?}");
+        // router metrics mirror the split
+        let routed_sum = sf.metrics().counter_sum("router_routed_total");
+        assert_eq!(routed_sum, 200);
+        assert_eq!(sf.metrics().counter_value("router_arrivals_total"), Some(200));
+    }
+
+    #[test]
+    fn leave_refuses_the_last_active_shard() {
+        let sf = ShardedFleet::new(cfg("2xs7"), 2);
+        assert!(sf.leave(0));
+        assert!(!sf.leave(0), "already retired");
+        assert!(!sf.leave(1), "last active shard must stay");
+        assert!(!sf.leave(9), "unknown shard");
+        assert_eq!(sf.active_shards(), 1);
+        assert_eq!(sf.total_shards(), 2);
+    }
+
+    #[test]
+    fn conservation_holds_through_a_mid_trace_repartition() {
+        let sf = ShardedFleet::new(cfg("4xs7"), 2);
+        let mut t = 0.0;
+        let mut sent = 0u64;
+        let mut send = |sf: &ShardedFleet, n: usize, t: &mut f64| {
+            for k in 0..n {
+                *t += 2.0;
+                sf.dispatch(
+                    Arrival::at(*t).with_tenant(format!("tenant-{}", k % 17)),
+                );
+            }
+        };
+        send(&sf, 50, &mut t);
+        sent += 50;
+        let id = sf.join();
+        assert_eq!(id, 2);
+        send(&sf, 50, &mut t);
+        sent += 50;
+        assert!(sf.leave(0), "retire a founding shard mid-trace");
+        send(&sf, 50, &mut t);
+        sent += 50;
+        let report = sf.finish();
+        assert_eq!(report.arrivals, sent);
+        assert!(report.conserved(), "{report:?}");
+        assert_eq!(report.retired, 1);
+        // the retired shard finished what it had queued
+        assert!(report.shards.first().is_some_and(|r| r.completed > 0));
+        // nothing routes to shard 0 after it left
+        assert_ne!(sf.route(Some("anyone"), ModelId::DEFAULT), Some(0));
+    }
+
+    #[test]
+    fn shard_route_spans_are_sampled() {
+        let mut c = cfg("2xs7");
+        c.trace_every = 1;
+        let sf = ShardedFleet::new(c, 2);
+        for i in 0..4 {
+            sf.dispatch(i as f64);
+        }
+        let trace = sf.trace_chrome_json();
+        let events = trace.get("traceEvents").and_then(Json::as_array).unwrap();
+        assert!(!events.is_empty(), "shard_route spans must be exported");
+    }
+}

@@ -61,7 +61,7 @@
 //!
 //! **Deadline-aware QoS** threads a per-request class
 //! ([`Qos`](crate::coordinator::Qos): priority + optional deadline)
-//! through the whole dispatch spine ([`Fleet::dispatch_qos`]):
+//! through the whole dispatch spine ([`Fleet::dispatch`]):
 //!
 //! - the [`FleetGate`](crate::coordinator::admission::FleetGate) sheds
 //!   *cheapest-to-drop first* under queue pressure — a full gate
@@ -1025,32 +1025,34 @@ impl Fleet {
         lock_unpoisoned(&self.state).advance(t_ms);
     }
 
-    /// Dispatch one default-class request arriving at `arrival_ms`
-    /// (virtual or wall-clock milliseconds; the clock is monotone
-    /// either way).  See [`Fleet::dispatch_qos`].
-    pub fn dispatch(&self, arrival_ms: f64) -> Option<Placement> {
-        self.dispatch_qos(arrival_ms, Qos::default())
-    }
-
-    /// Dispatch one request with an explicit QoS class.  `None` means
-    /// the request was shed — the front-door gate closed it out
-    /// (autoscaled fleets), or no replica is available.  Under queue
-    /// pressure the gate sheds cheapest-to-drop first: a queued rider
-    /// with lower priority (then more deadline slack) than this
+    /// Dispatch one request.  [`Arrival`] says when it arrived and
+    /// what it asks for (QoS class, catalog model, routing tenant); a
+    /// bare `f64` timestamp coerces to the default arrival, so the
+    /// pre-QoS call shape still reads naturally:
+    ///
+    /// ```
+    /// use mobile_convnet::coordinator::Qos;
+    /// use mobile_convnet::fleet::{Arrival, Fleet, FleetConfig, Policy};
+    ///
+    /// let fleet = Fleet::new(FleetConfig::parse_spec("2xs7", Policy::RoundRobin).unwrap());
+    /// fleet.dispatch(0.0); // default class, default model
+    /// fleet.dispatch(Arrival::at(5.0).with_qos(Qos::interactive(2, 50.0)));
+    /// ```
+    ///
+    /// `None` means the request was shed — the front-door gate closed
+    /// it out (autoscaled fleets), no replica is available, or (with
+    /// an artifact tier) the model is outside the catalog.  Under
+    /// queue pressure the gate sheds cheapest-to-drop first: a queued
+    /// rider with lower priority (then more deadline slack) than this
     /// arrival is evicted to make room, instead of shedding
-    /// newest-first.
-    pub fn dispatch_qos(&self, arrival_ms: f64, qos: Qos) -> Option<Placement> {
-        self.dispatch_model(arrival_ms, qos, ModelId::DEFAULT)
-    }
-
-    /// [`dispatch_qos`](Self::dispatch_qos) for a named catalog model
-    /// (resolve names with [`Fleet::resolve_model`]).  Without an
-    /// artifact tier the model is ignored; with one, a model id
-    /// outside the catalog cannot be served and is shed (counted, so
-    /// conservation holds).
-    pub fn dispatch_model(&self, arrival_ms: f64, qos: Qos, model: ModelId) -> Option<Placement> {
+    /// newest-first.  Resolve catalog model names with
+    /// [`Fleet::resolve_model`]; the `tenant` field is inert here (one
+    /// fleet serves every tenant identically) — it exists for the
+    /// sharded front door's consistent-hash routing.
+    pub fn dispatch(&self, arrival: impl Into<Arrival>) -> Option<Placement> {
+        let Arrival { at_ms, qos, model, tenant: _ } = arrival.into();
         let mut st = lock_unpoisoned(&self.state);
-        st.advance(arrival_ms);
+        st.advance(at_ms);
         let now = st.clock_ms;
         st.metrics.arrivals.inc();
         // One relaxed atomic load when tracing is off.
@@ -1073,7 +1075,7 @@ impl Fleet {
         // Latency stays anchored at the true arrival even when another
         // caller already advanced the clock past it (out-of-order
         // wall-clock dispatches must not lose their queue wait).
-        let rider = Rider::from_qos(arrival_ms.min(now), qos).with_model(model).with_trace(trace);
+        let rider = Rider::from_qos(at_ms.min(now), qos).with_model(model).with_trace(trace);
         // Front door: with autoscaling on, shed *before* enqueueing
         // when the gate's queue cap is full or the controller reported
         // saturation — queues past the SLO help nobody.
@@ -1139,6 +1141,18 @@ impl Fleet {
             }
         }
         placed
+    }
+
+    /// Pre-v2 call shape; [`Fleet::dispatch`] absorbed it.
+    #[deprecated(note = "use Fleet::dispatch(Arrival::at(ms).with_qos(qos))")]
+    pub fn dispatch_qos(&self, arrival_ms: f64, qos: Qos) -> Option<Placement> {
+        self.dispatch(Arrival::at(arrival_ms).with_qos(qos))
+    }
+
+    /// Pre-v2 call shape; [`Fleet::dispatch`] absorbed it.
+    #[deprecated(note = "use Fleet::dispatch(Arrival::at(ms).with_qos(qos).with_model(model))")]
+    pub fn dispatch_model(&self, arrival_ms: f64, qos: Qos, model: ModelId) -> Option<Placement> {
+        self.dispatch(Arrival::at(arrival_ms).with_qos(qos).with_model(model))
     }
 
     /// Undo a placement whose real work failed before being served
@@ -1721,6 +1735,60 @@ impl FleetReport {
     }
 }
 
+/// One dispatch-ready request: when it arrived and what it asks for.
+///
+/// This is the single argument of [`Fleet::dispatch`] — the v2 shape
+/// that collapsed the old `dispatch` / `dispatch_qos` /
+/// `dispatch_model` trio.  `Default` (and a bare `f64` timestamp, via
+/// `From<f64>`) reproduces the pre-QoS behavior exactly: default
+/// class, default model, no tenant.
+///
+/// `tenant` does not change placement inside one fleet — it exists so
+/// the sharded front door
+/// ([`ShardedFleet`](crate::coordinator::shard::ShardedFleet)) can
+/// consistent-hash the request by `(tenant, model)` before it reaches
+/// a shard's fleet.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Arrival {
+    /// Arrival timestamp in milliseconds (virtual or wall-clock; the
+    /// fleet clock is monotone either way).
+    pub at_ms: f64,
+    /// Priority class and optional deadline.
+    pub qos: Qos,
+    /// Catalog model (ignored by fleets without an artifact tier).
+    pub model: ModelId,
+    /// Routing tenant for the sharded front door.
+    pub tenant: Option<String>,
+}
+
+impl Arrival {
+    /// A default-class, default-model arrival at `at_ms`.
+    pub fn at(at_ms: f64) -> Arrival {
+        Arrival { at_ms, ..Arrival::default() }
+    }
+
+    pub fn with_qos(mut self, qos: Qos) -> Arrival {
+        self.qos = qos;
+        self
+    }
+
+    pub fn with_model(mut self, model: ModelId) -> Arrival {
+        self.model = model;
+        self
+    }
+
+    pub fn with_tenant(mut self, tenant: impl Into<String>) -> Arrival {
+        self.tenant = Some(tenant.into());
+        self
+    }
+}
+
+impl From<f64> for Arrival {
+    fn from(at_ms: f64) -> Arrival {
+        Arrival::at(at_ms)
+    }
+}
+
 /// Drive a whole trace through the fleet in virtual time, applying
 /// scripted health events at their timestamps, then run the queues dry.
 /// Entries carry their QoS class *and* their model (ignored on fleets
@@ -1734,7 +1802,7 @@ pub fn run_trace(fleet: &Fleet, trace: &Trace, events: &[HealthEvent]) -> FleetR
         while let Some(e) = events.next_if(|e| e.at_ms <= at_ms) {
             fleet.apply(e);
         }
-        fleet.dispatch_model(at_ms, entry.qos, entry.model);
+        fleet.dispatch(Arrival::at(at_ms).with_qos(entry.qos).with_model(entry.model));
     }
     for e in events {
         fleet.apply(e);
@@ -1745,10 +1813,10 @@ pub fn run_trace(fleet: &Fleet, trace: &Trace, events: &[HealthEvent]) -> FleetR
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::trace::Arrival;
+    use crate::coordinator::trace::Arrival as ArrivalProcess;
 
     fn trace(n: usize, rate: f64, seed: u64) -> Trace {
-        Trace::generate(n, Arrival::Poisson { rate_per_s: rate }, 0.0, seed)
+        Trace::generate(n, ArrivalProcess::Poisson { rate_per_s: rate }, 0.0, seed)
     }
 
     #[test]
@@ -1975,7 +2043,7 @@ mod tests {
             .unwrap()
             .with_budget_j(Some(5.0));
         let fleet = Fleet::new(cfg);
-        let t = Trace::generate(20, Arrival::Uniform { rate_per_s: 1.0 }, 0.0, 1);
+        let t = Trace::generate(20, ArrivalProcess::Uniform { rate_per_s: 1.0 }, 0.0, 1);
         let report = run_trace(&fleet, &t, &[]);
         assert!(report.shed > 0, "exhausted budget must shed: {report:?}");
         assert!(report.completed >= 5, "some requests complete before exhaustion");
@@ -2069,9 +2137,9 @@ mod tests {
     fn spike_trace(seed: u64) -> Trace {
         Trace::phases(
             &[
-                (20, Arrival::Poisson { rate_per_s: 1.5 }),
-                (80, Arrival::Poisson { rate_per_s: 12.0 }),
-                (40, Arrival::Poisson { rate_per_s: 1.5 }),
+                (20, ArrivalProcess::Poisson { rate_per_s: 1.5 }),
+                (80, ArrivalProcess::Poisson { rate_per_s: 12.0 }),
+                (40, ArrivalProcess::Poisson { rate_per_s: 1.5 }),
             ],
             0.0,
             seed,
@@ -2135,7 +2203,7 @@ mod tests {
         for seed in [3u64, 11, 29] {
             let t = Trace::generate(
                 120,
-                Arrival::Bursty {
+                ArrivalProcess::Bursty {
                     rate_per_s: 4.0,
                     burst_every: 30,
                     burst_len: 10,
@@ -2281,9 +2349,10 @@ mod tests {
             .with_autoscale(asc);
         let fleet = Fleet::new(cfg);
         for i in 0..6 {
-            fleet.dispatch_qos(1.0 + i as f64, Qos::bulk()); // 4 admit, 2 shed
+            fleet.dispatch(Arrival::at(1.0 + i as f64).with_qos(Qos::bulk())); // 4 admit, 2 shed
         }
-        let placed = fleet.dispatch_qos(10.0, Qos { priority: 3, deadline_ms: None });
+        let urgent = Qos { priority: 3, deadline_ms: None };
+        let placed = fleet.dispatch(Arrival::at(10.0).with_qos(urgent));
         assert!(placed.is_some(), "the urgent arrival must ride an eviction");
         let report = fleet.finish();
         // 7 arrivals: 4 bulk completed... minus the evicted one, plus
@@ -2304,9 +2373,10 @@ mod tests {
                 FleetConfig::parse_spec("1xs7", Policy::LeastLoaded).unwrap().with_autoscale(asc),
             )
         };
-        fleet2.dispatch_qos(1.0, Qos::bulk());
-        fleet2.dispatch_qos(2.0, Qos::bulk());
-        assert!(fleet2.dispatch_qos(3.0, Qos::bulk()).is_none(), "equal class: no eviction");
+        fleet2.dispatch(Arrival::at(1.0).with_qos(Qos::bulk()));
+        fleet2.dispatch(Arrival::at(2.0).with_qos(Qos::bulk()));
+        let third = fleet2.dispatch(Arrival::at(3.0).with_qos(Qos::bulk()));
+        assert!(third.is_none(), "equal class: no eviction");
         assert_eq!(fleet2.stats().evicted, 0);
     }
 
@@ -2323,9 +2393,9 @@ mod tests {
             }
             let fleet = Fleet::new(cfg);
             for i in 0..3 {
-                fleet.dispatch_qos(i as f64, Qos::bulk());
+                fleet.dispatch(Arrival::at(i as f64).with_qos(Qos::bulk()));
             }
-            fleet.dispatch_qos(5.0, Qos::interactive(2, 10.0));
+            fleet.dispatch(Arrival::at(5.0).with_qos(Qos::interactive(2, 10.0)));
             fleet.finish()
         };
         let aware = run(false);
@@ -2407,7 +2477,7 @@ mod tests {
             let fleet = Fleet::new(cfg);
             let t = Trace::generate(
                 100,
-                Arrival::Bursty {
+                ArrivalProcess::Bursty {
                     rate_per_s: 5.0,
                     burst_every: 25,
                     burst_len: 10,
@@ -2534,7 +2604,7 @@ mod tests {
         let det = fleet.resolve_model("detector").expect("zoo has a detector");
         fleet.drain(1); // pin the detector queue onto r0
         for i in 0..4 {
-            assert!(fleet.dispatch_model(i as f64, Qos::default(), det).is_some());
+            assert!(fleet.dispatch(Arrival::at(i as f64).with_model(det)).is_some());
         }
         fleet.revive(1);
         fleet.fail(0);
@@ -2561,12 +2631,12 @@ mod tests {
         let fleet = Fleet::new(cfg);
         let det = fleet.resolve_model("detector").unwrap();
         fleet.drain(1);
-        assert!(fleet.dispatch_model(0.0, Qos::default(), det).is_some());
+        assert!(fleet.dispatch(Arrival::at(0.0).with_model(det)).is_some());
         // r0 gracefully drains: its queued rider still completes, but
         // new detector traffic can only land on r1 — a fresh cold load.
         fleet.drain(0);
         fleet.revive(1);
-        let p = fleet.dispatch_model(10.0, Qos::default(), det).expect("placed on r1");
+        let p = fleet.dispatch(Arrival::at(10.0).with_model(det)).expect("placed on r1");
         assert_eq!(p.replica, 1);
         assert!(p.cold_load_ms > 0.0, "the only warm copy is draining away: {p:?}");
         assert_eq!(p.model.as_deref(), Some("detector"));
@@ -2586,7 +2656,7 @@ mod tests {
         assert_eq!(fleet.resolve_model("squeezenet"), Some(ModelId::DEFAULT));
         assert!(fleet.resolve_model("nope").is_none());
         assert!(
-            fleet.dispatch_model(0.0, Qos::default(), ModelId(9)).is_none(),
+            fleet.dispatch(Arrival::at(0.0).with_model(ModelId(9))).is_none(),
             "a model outside the catalog cannot be served"
         );
         let report = fleet.finish();
@@ -2595,7 +2665,7 @@ mod tests {
         let plain = Fleet::new(FleetConfig::parse_spec("1xs7", Policy::LeastLoaded).unwrap());
         assert!(!plain.has_catalog());
         assert!(plain.resolve_model("squeezenet").is_none());
-        assert!(plain.dispatch_model(0.0, Qos::default(), ModelId(9)).is_some());
+        assert!(plain.dispatch(Arrival::at(0.0).with_model(ModelId(9))).is_some());
         let report = plain.finish();
         assert_eq!(report.completed, 1);
         assert_eq!(report.artifact_loads, 0);
@@ -2608,11 +2678,33 @@ mod tests {
                 .unwrap()
                 .with_batching(4, 50.0),
         );
-        batched.dispatch_model(0.0, Qos::default(), ModelId(0));
-        let p = batched.dispatch_model(1.0, Qos::default(), ModelId(9)).unwrap();
+        batched.dispatch(Arrival::at(0.0).with_model(ModelId(0)));
+        let p = batched.dispatch(Arrival::at(1.0).with_model(ModelId(9))).unwrap();
         assert_eq!(p.batch_fill, 2, "tierless fleets must not split batches by model");
         let report = batched.finish();
         assert_eq!(report.completed, 2);
+    }
+
+    /// The pre-v2 shims must stay behaviorally identical to the
+    /// collapsed [`Fleet::dispatch`] until external callers migrate.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_dispatch_shims_match_the_collapsed_api() {
+        let mk = || Fleet::new(FleetConfig::parse_spec("1xs7", Policy::LeastLoaded).unwrap());
+        let old = mk();
+        old.dispatch_qos(0.0, Qos::interactive(2, 500.0));
+        old.dispatch_model(1.0, Qos::bulk(), ModelId::DEFAULT);
+        let new = mk();
+        new.dispatch(Arrival::at(0.0).with_qos(Qos::interactive(2, 500.0)));
+        new.dispatch(Arrival::at(1.0).with_qos(Qos::bulk()));
+        let (o, n) = (old.finish(), new.finish());
+        assert_eq!(o.completed, n.completed);
+        assert_eq!(o.total_energy_j, n.total_energy_j);
+        assert_eq!(o.p95_ms, n.p95_ms);
+        // a bare timestamp still coerces to the default arrival
+        let plain = mk();
+        assert!(plain.dispatch(3.0).is_some());
+        assert_eq!(plain.finish().completed, 1);
     }
 
     #[test]

@@ -27,7 +27,7 @@ use anyhow::{Context, Result};
 
 use mobile_convnet::config::{self, AppConfig};
 use mobile_convnet::coordinator::trace::{Arrival, Trace};
-use mobile_convnet::coordinator::{server, Coordinator};
+use mobile_convnet::coordinator::{server, Coordinator, ShardedFleet};
 use mobile_convnet::fleet::{self, AutoscaleConfig, Fleet};
 use mobile_convnet::model::{ImageCorpus, SqueezeNet};
 use mobile_convnet::simulator::device::{DeviceProfile, Precision};
@@ -56,6 +56,7 @@ COMMANDS:
                                               [--fleet SPEC] [--fleet-policy P]
                                               [--fleet-batch B] [--fleet-batch-wait-ms W]
                                               [--fleet-autoscale KV] [--fleet-cache MB]
+                                              [--fleet-shards M]
   info        artifact & model summary
 
 Fleet specs are comma-separated [COUNTx]DEVICE[@fp32|fp16] atoms, e.g.
@@ -67,6 +68,13 @@ explicitly (otherwise an autoscale SLO derives it).  Requests carry a
 QoS class on the fleet path: "priority" (0 = bulk, default 1) and
 "deadline_ms" on the serve wire protocol — priority-aware shedding,
 deadline-aware placement, early batch flush, expiry at dequeue.
+
+--fleet-shards M (also MCN_FLEET_SHARDS) partitions the fleet's
+replicas across M coordinator shards behind a consistent-hash front
+door: requests route by (tenant, model) on a vnode ring, each shard
+runs its own dispatch/batch/autoscale loop on its own worker thread,
+and fleet_stats/metrics aggregate across shards.  Requests pick their
+routing key with "tenant" on the serve wire protocol.
 
 --fleet-cache / --cache-mb (also MCN_FLEET_CACHE) attach the
 model-artifact tier: MB of per-replica artifact cache over the default
@@ -136,6 +144,14 @@ fn app_config(args: &Args) -> Result<AppConfig> {
             Some(f) => cfg.fleet = Some(f.with_autoscale(autoscale)),
             None => anyhow::bail!("--fleet-autoscale requires a fleet (--fleet or config)"),
         }
+    }
+    if let Some(m) = args.get_usize_opt("fleet-shards").map_err(|e| anyhow::anyhow!(e))? {
+        anyhow::ensure!(m >= 1, "--fleet-shards must be >= 1");
+        anyhow::ensure!(
+            m == 1 || cfg.fleet.is_some(),
+            "--fleet-shards > 1 requires a fleet (--fleet or config)"
+        );
+        cfg.fleet_shards = m;
     }
     Ok(cfg)
 }
@@ -346,15 +362,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = app_config(args)?;
     println!("loading artifacts from {} ...", cfg.artifacts_dir.display());
     let coordinator = Arc::new(Coordinator::start(cfg.coordinator_config())?);
+    let shards = cfg.fleet_shards;
     let fleet = cfg.fleet.clone().map(|f| {
         println!(
-            "fleet: {} replicas, policy {} (fleet-backed infer via {{\"fleet\":true}})",
+            "fleet: {} replicas across {} shard(s), policy {} \
+             (fleet-backed infer via {{\"fleet\":true}})",
             f.replicas.len(),
+            shards,
             f.policy.label()
         );
         if let Some(a) = &f.autoscale {
             println!(
-                "autoscale: slo p95 {} ms, warm pool {} specs, {}..={} replicas \
+                "autoscale: slo p95 {} ms, warm pool {} specs, {}..={} replicas per shard \
                  ({{\"cmd\":\"autoscale_stats\"}} for the control loop)",
                 a.slo_p95_ms,
                 a.warm_pool.len(),
@@ -362,10 +381,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 a.max_replicas
             );
         }
-        Arc::new(Fleet::new(f))
+        Arc::new(ShardedFleet::new(f, shards))
     });
     let stop = Arc::new(AtomicBool::new(false));
-    server::serve_with_fleet(coordinator, fleet, &cfg.server_addr, stop, |addr| {
+    server::serve_sharded(coordinator, fleet, &cfg.server_addr, stop, |addr| {
         println!("listening on {addr} (JSON lines; {{\"cmd\":\"quit\"}} to stop)");
     })
 }

@@ -198,7 +198,7 @@ impl Manifest {
 /// fleet `Rider`s and trace entries; id 0 ([`ModelId::DEFAULT`]) is
 /// always the catalog's default model, and a fleet with no catalog
 /// treats every request as the default model.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
 pub struct ModelId(pub u16);
 
 impl ModelId {

@@ -1,0 +1,131 @@
+//! Property tests for the sharded front door, driven entirely through
+//! the public API: the consistent-hash ring's redistribution bound
+//! (a join or leave moves < 5% of keys beyond the unavoidable 1/M
+//! share, with zero collateral movement), and request conservation
+//! summed across shards while the topology changes mid-trace.
+
+use mobile_convnet::coordinator::trace::{Arrival as ArrivalProcess, Trace};
+use mobile_convnet::coordinator::{HashRing, ShardedFleet};
+use mobile_convnet::fleet::{Arrival, FleetConfig, Policy};
+use mobile_convnet::runtime::artifacts::ModelId;
+
+/// A deterministic multi-tenant key population: enough distinct
+/// (tenant, model) pairs that per-key hash accidents average out.
+fn keys() -> Vec<(String, ModelId)> {
+    (0..8_000u64).map(|k| (format!("tenant-{}", k % 997), ModelId((k % 3) as u16))).collect()
+}
+
+#[test]
+fn join_moves_keys_only_onto_the_joiner_across_seeds() {
+    // "Seeds" here vary the ring shape: shard count and vnode budget.
+    for (shards, vnodes) in [(2usize, 64usize), (4, 64), (4, 128), (8, 32), (5, 64)] {
+        let keys = keys();
+        let mut ring = HashRing::new(shards, vnodes);
+        let before: Vec<Option<usize>> =
+            keys.iter().map(|(t, m)| ring.shard_for(Some(t.as_str()), *m)).collect();
+
+        ring.add_shard(shards);
+        let mut moved = 0usize;
+        let mut collateral = 0usize;
+        for ((t, m), old) in keys.iter().zip(&before) {
+            let new = ring.shard_for(Some(t.as_str()), *m);
+            if new != *old {
+                moved += 1;
+                if new != Some(shards) {
+                    collateral += 1;
+                }
+            }
+        }
+        let frac = moved as f64 / keys.len() as f64;
+        // Consistent hashing's contract: the joiner takes ~1/(M+1) of
+        // the keyspace and nothing else moves.  The satellite budget
+        // is "< 5% beyond that share".
+        assert_eq!(collateral, 0, "({shards}x{vnodes}): keys moved between old shards");
+        let share = 1.0 / (shards as f64 + 1.0);
+        assert!(
+            frac < share + 0.05,
+            "({shards}x{vnodes}): join moved {:.1}% of keys (share {:.1}% + 5% budget)",
+            frac * 100.0,
+            share * 100.0
+        );
+        assert!(frac > 0.0, "({shards}x{vnodes}): a join must take some keys");
+
+        // Leave inverts: removing the joiner restores every key to its
+        // pre-join shard — surviving keys never move.
+        ring.remove_shard(shards);
+        for ((t, m), old) in keys.iter().zip(&before) {
+            assert_eq!(
+                ring.shard_for(Some(t.as_str()), *m),
+                *old,
+                "({shards}x{vnodes}): leave must restore the pre-join mapping"
+            );
+        }
+    }
+}
+
+#[test]
+fn leave_moves_only_the_leavers_keys() {
+    for shards in [3usize, 4, 6] {
+        let keys = keys();
+        let mut ring = HashRing::new(shards, 64);
+        let before: Vec<Option<usize>> =
+            keys.iter().map(|(t, m)| ring.shard_for(Some(t.as_str()), *m)).collect();
+        ring.remove_shard(0);
+        for ((t, m), old) in keys.iter().zip(&before) {
+            let new = ring.shard_for(Some(t.as_str()), *m);
+            if *old != Some(0) {
+                assert_eq!(new, *old, "(M={shards}): a survivor's keys must not move on leave");
+            } else {
+                assert_ne!(new, Some(0), "(M={shards}): the leaver's keys must re-home");
+            }
+        }
+    }
+}
+
+/// The router-level conservation law — `arrivals == completed + shed
+/// + lost + expired` summed across every shard (retired ones
+/// included) — must hold while the shard set changes mid-trace, on
+/// every seed.
+#[test]
+fn conservation_holds_across_mid_trace_repartition_on_every_seed() {
+    for seed in [1u64, 42, 1337] {
+        let trace = Trace::generate(180, ArrivalProcess::Poisson { rate_per_s: 40.0 }, 0.0, seed);
+        let policy = Policy::EnergyAware { lambda_j_per_ms: None };
+        let cfg =
+            FleetConfig::parse_spec("4xs7,2x6p", policy).expect("spec parses").with_seed(seed);
+        let sf = ShardedFleet::new(cfg, 3);
+
+        let n = trace.entries.len();
+        for (i, entry) in trace.entries.iter().enumerate() {
+            // join at one third, retire shard 0 at two thirds
+            if i == n / 3 {
+                sf.join();
+            }
+            if i == 2 * n / 3 {
+                assert!(sf.leave(0), "seed {seed}: shard 0 should retire");
+            }
+            let at_ms = entry.at.as_secs_f64() * 1e3;
+            let _ = sf.dispatch(
+                Arrival::at(at_ms)
+                    .with_qos(entry.qos)
+                    .with_model(entry.model)
+                    .with_tenant(format!("tenant-{}", i % 17)),
+            );
+        }
+
+        let report = sf.finish();
+        assert_eq!(report.arrivals, n as u64, "seed {seed}: every dispatch counted");
+        assert!(
+            report.conserved(),
+            "seed {seed}: arrivals {} != completed {} + shed {} + lost {} + expired {}",
+            report.arrivals,
+            report.completed(),
+            report.shed(),
+            report.lost(),
+            report.expired()
+        );
+        // the retired shard kept its history (drained, not dropped)
+        assert_eq!(report.retired, 1, "seed {seed}");
+        assert_eq!(report.shards.len(), 4, "seed {seed}: 3 initial + 1 joined");
+    }
+}
