@@ -200,6 +200,22 @@ mod tests {
         }
     }
 
+    /// The fleet carve-out is file-exact: `src/fleet/native.rs` (the
+    /// wall-clock-measuring native replica engine) is exempt, but any
+    /// *other* file under `src/fleet/` — including a neighbor with a
+    /// nearly identical name — stays in scope.
+    #[test]
+    fn purity_exempts_only_the_native_engine_file() {
+        let tree = fixture_tree("src/fleet/native.rs", include_str!("fixtures/purity.rs"));
+        assert!(VirtualTimePurity.check(&tree).is_empty(), "native.rs must be exempt");
+        let tree = fixture_tree("src/fleet/native_extra.rs", include_str!("fixtures/purity.rs"));
+        assert_eq!(
+            VirtualTimePurity.check(&tree).iter().map(|f| f.line).collect::<Vec<_>>(),
+            vec![7, 17, 18, 25],
+            "exemption must be file-exact, not a prefix"
+        );
+    }
+
     /// The coordinator carve-out is per file: the sharded front
     /// door's virtual-time layers (ring/shard) are in scope even
     /// though they live under `src/coordinator/`, while the

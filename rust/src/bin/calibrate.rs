@@ -1,0 +1,105 @@
+//! Host calibration CLI: measure SqueezeNet on this machine, fit a
+//! [`DeviceProfile`] against the Galaxy S7 cost-model template, and
+//! write the fitted profile as loadable JSON.
+//!
+//! ```sh
+//! cargo run --release --bin calibrate -- --quick --out host_profile.json
+//! cargo run --release --bin calibrate -- --reps 10 --report report.json
+//! ```
+//!
+//! `--quick` runs the 56x56 configuration (seconds — the CI lane);
+//! the default is the paper-sized 224x224 input.  The emitted profile
+//! loads back through `DeviceProfile::from_json` /
+//! `register_profile`, e.g. via `mobile-convnet --device-profile
+//! host_profile.json`, so the simulator can be driven as "a device
+//! that behaves like this host" and its per-layer prediction error is
+//! a number you can watch (printed below, gated in the
+//! `native_vs_simulated` bench).
+//!
+//! [`DeviceProfile`]: mobile_convnet::simulator::DeviceProfile
+
+use std::process::ExitCode;
+
+use mobile_convnet::runtime::calibrate::{calibrate, CalibrationConfig, CalibrationReport};
+use mobile_convnet::util::cli::Args;
+
+const USAGE: &str = "usage: calibrate [--quick] [--reps N] [--seed N] \
+[--out PROFILE.json] [--report REPORT.json]
+
+  --quick    56x56 input, 5 reps (CI-sized); default is 224x224, 10 reps
+  --reps N   override the timed repetition count
+  --seed N   synthetic weight/image seed (default 42)
+  --out      where to write the fitted DeviceProfile JSON
+             (default host_profile.json)
+  --report   also write the full calibration report (per-layer rows)";
+
+fn render(report: &CalibrationReport) {
+    println!(
+        "calibrated host profile ({}x{} input, {} reps, vs galaxy_s7 template)",
+        report.input_hw, report.input_hw, report.reps
+    );
+    println!("  alpha (median measured/template ratio): {:.4}", report.alpha);
+    println!("  fitted dispatch_setup_ms:               {:.4}", report.dispatch_setup_ms);
+    println!("  measured whole-net median:              {:.3} ms", report.native_net_ms);
+    println!();
+    println!(
+        "  {:<8} {:>12} {:>12} {:>12} {:>9}",
+        "layer", "measured", "template", "fitted", "err%"
+    );
+    for row in &report.rows {
+        println!(
+            "  {:<8} {:>9.3} ms {:>9.3} ms {:>9.3} ms {:>8.2}%",
+            row.label, row.measured_ms, row.template_ms, row.fitted_ms, row.error_pct
+        );
+    }
+    println!();
+    println!(
+        "  per-layer prediction error: median {:.2}%  max {:.2}%",
+        report.median_error_pct, report.max_error_pct
+    );
+}
+
+fn run() -> Result<(), String> {
+    let args = Args::from_env()?;
+    if args.flag("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let mut cfg = if args.flag("quick") {
+        CalibrationConfig::quick()
+    } else {
+        CalibrationConfig::full()
+    };
+    cfg.reps = args.get_usize("reps", cfg.reps)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    let out = args.get_or("out", "host_profile.json").to_string();
+    let report_path = args.get("report").map(|s| s.to_string());
+
+    eprintln!(
+        "measuring SqueezeNet at {}x{} for {} reps (+1 warmup)...",
+        cfg.input_hw, cfg.input_hw, cfg.reps
+    );
+    let report = calibrate(&cfg).map_err(|e| format!("calibration failed: {e:#}"))?;
+    render(&report);
+
+    std::fs::write(&out, report.profile.to_json().to_string())
+        .map_err(|e| format!("writing {out}: {e}"))?;
+    println!("  wrote fitted profile -> {out}");
+    if let Some(path) = report_path {
+        std::fs::write(&path, report.to_json().to_string())
+            .map_err(|e| format!("writing {path}: {e}"))?;
+        println!("  wrote full report    -> {path}");
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{USAGE}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -474,6 +474,23 @@ mod tests {
     }
 
     #[test]
+    fn parses_native_fleet_atoms() {
+        // The `native` atom (real host inference) rides every config
+        // surface the simulated atoms do: config file, fleet_from, and
+        // mixed specs; precision selects the charged power rail only.
+        let c = AppConfig::from_json(r#"{"fleet": "native,2xs7"}"#).unwrap();
+        let fleet = c.fleet.unwrap();
+        assert_eq!(fleet.replicas.len(), 3);
+        assert_eq!(fleet.replicas[0].kind, crate::fleet::ReplicaKind::Native);
+        assert_eq!(fleet.replicas[0].device.id, "host");
+        assert_eq!(fleet.replicas[1].kind, crate::fleet::ReplicaKind::Simulated);
+        let f = fleet_from("2xnative@fp16", Some("rr"), None, None, None, None).unwrap();
+        assert_eq!(f.replicas.len(), 2);
+        assert_eq!(f.replicas[0].precision, Precision::Imprecise);
+        assert!(AppConfig::from_json(r#"{"fleet": "native@int8"}"#).is_err());
+    }
+
+    #[test]
     fn parses_fleet_shards() {
         assert_eq!(AppConfig::default().fleet_shards, 1);
         let c = AppConfig::from_json(r#"{"fleet": "4xs7", "fleet_shards": 4}"#).unwrap();

@@ -21,5 +21,7 @@ pub mod tensor;
 pub mod vectorized;
 
 pub use layout::{Chw4Index, Layout};
-pub use network::{run_squeezenet, ConvImpl, NetworkOutput};
+pub use network::{
+    run_squeezenet, run_squeezenet_timed, ConvImpl, MacroLayerTiming, NetworkOutput,
+};
 pub use tensor::Tensor3;

@@ -6,10 +6,11 @@
 //! cross-checked on identical inputs.
 
 use std::collections::HashMap;
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::model::graph::{LayerKind, SqueezeNet};
+use crate::model::graph::{LayerKind, MacroLayer, SqueezeNet};
 use crate::model::weights::WeightStore;
 
 use super::layout::Layout;
@@ -40,12 +41,59 @@ pub struct NetworkOutput {
     pub top1: usize,
 }
 
+/// Measured wall-clock time of one macro layer (Conv1, Fire2..9,
+/// Conv10, Head) during a [`run_squeezenet_timed`] pass — the raw
+/// sample the calibration harness fits device profiles against.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MacroLayerTiming {
+    pub layer: MacroLayer,
+    /// Wall-clock milliseconds spent in this macro layer's nodes
+    /// (convs plus any pool attributed to the same macro layer).
+    pub ms: f64,
+}
+
 /// Run SqueezeNet on one HWC image (`hw*hw*3` f32 values).
 pub fn run_squeezenet(
     net: &SqueezeNet,
     weights: &WeightStore,
     image_hwc: &[f32],
     conv_impl: &ConvImpl,
+) -> Result<NetworkOutput> {
+    run_with_hook(net, weights, image_hwc, conv_impl, |_, _| {})
+}
+
+/// [`run_squeezenet`] with per-macro-layer wall-clock timing: returns
+/// the network output plus one timing entry per macro layer in
+/// Table IV order (Head last).  This is a *measurement* path — the
+/// timings are host wall-clock and vary by machine; simulated replicas
+/// never call it.
+pub fn run_squeezenet_timed(
+    net: &SqueezeNet,
+    weights: &WeightStore,
+    image_hwc: &[f32],
+    conv_impl: &ConvImpl,
+) -> Result<(NetworkOutput, Vec<MacroLayerTiming>)> {
+    let mut acc: HashMap<MacroLayer, f64> = HashMap::new();
+    let out = run_with_hook(net, weights, image_hwc, conv_impl, |ml, ms| {
+        *acc.entry(ml).or_insert(0.0) += ms;
+    })?;
+    let mut order = MacroLayer::table_iv_order();
+    order.push(MacroLayer::Head);
+    let timings = order
+        .into_iter()
+        .filter_map(|ml| acc.get(&ml).map(|&ms| MacroLayerTiming { layer: ml, ms }))
+        .collect();
+    Ok((out, timings))
+}
+
+/// Shared walker: runs the network, reporting each node's wall-clock
+/// milliseconds to `on_layer` keyed by macro layer.
+fn run_with_hook(
+    net: &SqueezeNet,
+    weights: &WeightStore,
+    image_hwc: &[f32],
+    conv_impl: &ConvImpl,
+    mut on_layer: impl FnMut(MacroLayer, f64),
 ) -> Result<NetworkOutput> {
     let input_hw = match &net.layers[0].kind {
         LayerKind::Conv(c) => c.hw_in,
@@ -82,6 +130,7 @@ pub fn run_squeezenet(
     let mut pending_expand1: Option<Tensor3> = None;
 
     for layer in &net.layers {
+        let t0 = Instant::now();
         match &layer.kind {
             LayerKind::Conv(spec) => {
                 let w = weights
@@ -131,6 +180,7 @@ pub fn run_squeezenet(
             }
             LayerKind::Softmax { .. } => {}
         }
+        on_layer(layer.macro_layer, t0.elapsed().as_secs_f64() * 1e3);
     }
 
     let logits = logits.context("network produced no logits")?;
@@ -229,6 +279,25 @@ mod tests {
         assert!(d2 < 1e-3, "planned diff {d2}");
         assert_eq!(seq.top1, vec1.top1);
         assert_eq!(seq.top1, vec2.top1);
+    }
+
+    #[test]
+    fn timed_run_matches_untimed_and_covers_every_macro_layer() {
+        let net = SqueezeNet::with_input(56);
+        let weights = toy_weights(&net, 5);
+        let image: Vec<f32> = Rng::new(11).vec_f32(56 * 56 * 3, 0.0, 1.0);
+        let plain = run_squeezenet(&net, &weights, &image, &ConvImpl::Sequential).unwrap();
+        let (timed, timings) =
+            run_squeezenet_timed(&net, &weights, &image, &ConvImpl::Sequential).unwrap();
+        assert_eq!(plain.logits, timed.logits, "timing must not change the math");
+        // Conv1 + Fire2..9 + Conv10 + Head, in Table IV order.
+        assert_eq!(timings.len(), 11);
+        assert_eq!(timings[0].layer, MacroLayer::Conv1);
+        assert_eq!(timings[9].layer, MacroLayer::Conv10);
+        assert_eq!(timings[10].layer, MacroLayer::Head);
+        for t in &timings {
+            assert!(t.ms >= 0.0 && t.ms.is_finite(), "{:?}", t.layer);
+        }
     }
 
     #[test]

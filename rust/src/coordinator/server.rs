@@ -1306,6 +1306,26 @@ mod tests {
     }
 
     #[test]
+    fn fleet_stats_wire_rows_carry_the_replica_kind() {
+        // A native (real-compute) replica is declared with the same
+        // spec grammar the config/wire already speak ("native" atom);
+        // its fleet_stats row must say what services it, so a client
+        // can tell measured wall-clock rows from cost-model rows.
+        let cfg = crate::fleet::FleetConfig::parse_spec(
+            "native,1xn5",
+            crate::fleet::Policy::RoundRobin,
+        )
+        .unwrap();
+        let sharded = ShardedFleet::new(cfg, 1);
+        let stats = sharded.stats_json();
+        let rows = stats.get("replicas").and_then(Json::as_array).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("kind").and_then(Json::as_str), Some("native"));
+        assert_eq!(rows[0].get("device").and_then(Json::as_str), Some("Host CPU"));
+        assert_eq!(rows[1].get("kind").and_then(Json::as_str), Some("simulated"));
+    }
+
+    #[test]
     fn reply_envelopes_are_versioned() {
         let ok2 = reply_ok(2, Json::object(vec![("x", Json::num(1.0))]));
         assert_eq!(ok2.get("ok").and_then(Json::as_bool), Some(true));

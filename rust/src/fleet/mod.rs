@@ -113,6 +113,7 @@ pub mod autoscaler;
 pub mod budget;
 pub mod cache;
 pub mod health;
+pub mod native;
 pub mod replica;
 pub mod router;
 
@@ -123,8 +124,9 @@ pub use autoscaler::{
 pub use budget::{BudgetState, JouleBudget};
 pub use cache::ArtifactCache;
 pub use health::{Health, HealthAction, HealthEvent};
+pub use native::NativeEngine;
 pub use replica::{
-    max_request_energy_j, FleetBatch, Outcome, Placement, Replica, ReplicaSpec, Rider,
+    max_request_energy_j, FleetBatch, Outcome, Placement, Replica, ReplicaKind, ReplicaSpec, Rider,
 };
 pub use router::{Candidate, Policy, Router};
 
@@ -1379,6 +1381,7 @@ impl Fleet {
                 ReplicaStats {
                     name: r.name.clone(),
                     device: r.spec.device.name,
+                    kind: r.kind().label(),
                     precision: r.effective_precision().label(),
                     health: r.health.label(),
                     degraded: r.degraded,
@@ -1438,6 +1441,10 @@ impl Fleet {
 pub struct ReplicaStats {
     pub name: String,
     pub device: &'static str,
+    /// What services this replica's dispatches: `"simulated"` (the
+    /// cost-model path) or `"native"` (real host inference, measured
+    /// wall-clock — see [`ReplicaKind`]).
+    pub kind: &'static str,
     /// Effective serving precision (reflects budget degradation).
     pub precision: &'static str,
     pub health: &'static str,
@@ -1708,6 +1715,7 @@ impl FleetReport {
                             Json::object(vec![
                                 ("name", Json::str(r.name.clone())),
                                 ("device", Json::str(r.device)),
+                                ("kind", Json::str(r.kind)),
                                 ("precision", Json::str(r.precision)),
                                 ("health", Json::str(r.health)),
                                 ("degraded", Json::Bool(r.degraded)),
@@ -1993,6 +2001,50 @@ mod tests {
                 assert_eq!(sum, 90, "seed {seed} cap {cap}: double-served");
                 assert!(report.replicas.iter().all(|r| r.in_flight == 0));
             }
+        }
+    }
+
+    #[test]
+    fn mixed_fleet_conserves_outcomes_across_kinds() {
+        // The tentpole invariant across kinds: a fleet mixing a native
+        // (real-compute) replica with simulated ones obeys the same
+        // terminal-outcome conservation under fail/drain/revive, with
+        // the dead native replica's queue re-routed onto simulated
+        // peers.  Only counters are asserted — native service times
+        // are real wall-clock, so latencies vary run to run, but
+        // conservation must not.
+        for seed in [3u64, 19] {
+            let cfg = FleetConfig::parse_spec("native,1xs7,1xn5", Policy::LeastLoaded)
+                .unwrap()
+                .with_seed(seed);
+            let fleet = Fleet::new(cfg);
+            let t = trace(60, 6.0, seed);
+            let span_ms = t.span().as_secs_f64() * 1e3;
+            let events = vec![
+                HealthEvent::fail(0, span_ms * 0.3), // kill the native replica
+                HealthEvent::drain(1, span_ms * 0.5),
+                HealthEvent::revive(1, span_ms * 0.8),
+            ];
+            let report = run_trace(&fleet, &t, &events);
+            assert_eq!(report.conserved_total(), 60, "seed {seed}: {report:?}");
+            assert_eq!(
+                report.dispatched,
+                60 - report.shed + report.rerouted,
+                "seed {seed}: dispatch accounting broke: {report:?}"
+            );
+            assert_eq!(report.replicas[0].kind, "native");
+            assert_eq!(report.replicas[0].device, "Host CPU");
+            assert_eq!(report.replicas[0].health, "failed");
+            assert!(report.replicas[1..].iter().all(|r| r.kind == "simulated"));
+            assert!(
+                report.replicas[0].placements > 0,
+                "seed {seed}: the native replica must serve before it fails"
+            );
+            // The kind label rides the fleet_stats wire row.
+            let rows = report.to_json();
+            let rows = rows.get("replicas").and_then(Json::as_array).unwrap();
+            assert_eq!(rows[0].get("kind").and_then(Json::as_str), Some("native"));
+            assert_eq!(rows[1].get("kind").and_then(Json::as_str), Some("simulated"));
         }
     }
 

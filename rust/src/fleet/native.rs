@@ -1,0 +1,203 @@
+//! The native replica engine: real SqueezeNet inference on the host
+//! CPU, measured in wall-clock milliseconds.
+//!
+//! This is the one file under `src/fleet/` allowed to read the wall
+//! clock (see the file-exact exemption in
+//! [`crate::analysis::purity::EXEMPT_FILES`]): everything else in the
+//! fleet runs in virtual time, and this engine is the bridge — a
+//! [`Replica`](super::replica::Replica) of kind
+//! [`Native`](super::replica::ReplicaKind::Native) asks it for the
+//! *measured* service time of each flushed batch, while queueing,
+//! batching, and energy metering stay on the shared virtual-time
+//! spine.
+//!
+//! Construction benchmarks the engine itself — median-of-3 timings of
+//! one and two back-to-back inferences — and decomposes them into a
+//! per-image marginal and a per-dispatch overhead, the same
+//! `overhead + b·marginal` shape the cost model prices simulated
+//! replicas with.  Those construction-measured numbers seed the
+//! replica's *predictive* accessors (routing estimates, energy
+//! commitments); each real dispatch then reports its own measured
+//! wall time, so predicted and measured service can be compared
+//! request by request.
+//!
+//! The engine must never panic (it sits on the dispatch spine, inside
+//! the panic budget): inference errors are impossible by construction
+//! — synthetic weights and a synthetic image are generated from the
+//! network's own contract — but if one ever occurs, the engine falls
+//! back to its predicted service time instead of unwinding.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::convnet::network::{run_squeezenet, ConvImpl};
+use crate::model::graph::SqueezeNet;
+use crate::model::weights::WeightStore;
+use crate::runtime::cpu::midpoint_plan;
+use crate::util::rng::Rng;
+
+/// Input side native replicas run at.  56 keeps a real dispatch in the
+/// low milliseconds (CI-friendly) while exercising the full topology;
+/// 28 would underflow the pool chain.
+pub const NATIVE_INPUT_HW: usize = 56;
+
+/// Floor for measured times: a clamped clock readout must never
+/// produce a zero or negative service time (virtual time would stall).
+const MIN_MS: f64 = 1e-3;
+
+/// Median of three — branch-free, no allocation, no indexing.
+fn median3(a: f64, b: f64, c: f64) -> f64 {
+    a.min(b).max(a.max(b).min(c))
+}
+
+/// A resident, runnable SqueezeNet instance plus its construction-time
+/// performance decomposition.
+#[derive(Debug)]
+pub struct NativeEngine {
+    net: SqueezeNet,
+    weights: WeightStore,
+    conv_impl: ConvImpl,
+    image: Vec<f32>,
+    /// Construction-measured per-image marginal (ms).
+    marginal_ms: f64,
+    /// Construction-measured per-dispatch overhead (ms).
+    overhead_ms: f64,
+    /// Real dispatches executed so far.
+    pub runs: u64,
+    /// Images inferred across all dispatches.
+    pub images: u64,
+    /// Sum of measured dispatch times (ms) — `measured_ms_total /
+    /// images` is the observed per-image rate, comparable against
+    /// `marginal_ms`.
+    pub measured_ms_total: f64,
+}
+
+impl NativeEngine {
+    /// Build the engine and benchmark it: synthetic weights + image
+    /// from `seed`, one warmup, then median-of-3 timings at batch 1
+    /// and batch 2 decomposed into marginal and overhead.
+    pub fn new(seed: u64) -> Result<NativeEngine> {
+        let net = SqueezeNet::with_input(NATIVE_INPUT_HW);
+        let weights = WeightStore::synthetic(&net, seed);
+        let conv_impl = ConvImpl::Vectorized { plan: midpoint_plan(&net), parallel: true };
+        // Decorrelate the image stream from the weight stream.
+        let image =
+            Rng::new(seed ^ 0x1AB_C0DE).vec_f32(NATIVE_INPUT_HW * NATIVE_INPUT_HW * 3, 0.0, 1.0);
+        let mut engine = NativeEngine {
+            net,
+            weights,
+            conv_impl,
+            image,
+            marginal_ms: MIN_MS,
+            overhead_ms: 0.0,
+            runs: 0,
+            images: 0,
+            measured_ms_total: 0.0,
+        };
+        // Warmup: page in weights, spin up the thread pool.
+        engine.timed_images(1)?;
+        let t1 = median3(
+            engine.timed_images(1)?,
+            engine.timed_images(1)?,
+            engine.timed_images(1)?,
+        );
+        let t2 = median3(
+            engine.timed_images(2)?,
+            engine.timed_images(2)?,
+            engine.timed_images(2)?,
+        );
+        engine.marginal_ms = (t2 - t1).max(MIN_MS);
+        engine.overhead_ms = (t1 - engine.marginal_ms).max(0.0);
+        Ok(engine)
+    }
+
+    /// Wall-clock ms for `n` back-to-back inferences.
+    fn timed_images(&self, n: usize) -> Result<f64> {
+        let t0 = Instant::now();
+        for _ in 0..n {
+            run_squeezenet(&self.net, &self.weights, &self.image, &self.conv_impl)?;
+        }
+        Ok((t0.elapsed().as_secs_f64() * 1e3).max(MIN_MS))
+    }
+
+    /// Construction-measured per-image marginal (ms).
+    pub fn marginal_ms(&self) -> f64 {
+        self.marginal_ms
+    }
+
+    /// Construction-measured per-dispatch overhead (ms).
+    pub fn overhead_ms(&self) -> f64 {
+        self.overhead_ms
+    }
+
+    /// Predicted service time for a `b`-image dispatch (ms) — the
+    /// same `overhead + b·marginal` shape the cost model uses.
+    pub fn predicted_batch_ms(&self, b: usize) -> f64 {
+        self.overhead_ms + b as f64 * self.marginal_ms
+    }
+
+    /// Execute a `b`-image dispatch for real and return its measured
+    /// wall-clock ms.  On an (unreachable by construction) inference
+    /// error, returns the predicted time instead of panicking.
+    pub fn run_batch(&mut self, b: usize) -> f64 {
+        let b = b.max(1);
+        match self.timed_images(b) {
+            Ok(ms) => {
+                self.runs += 1;
+                self.images += b as u64;
+                self.measured_ms_total += ms;
+                ms
+            }
+            Err(_) => self.predicted_batch_ms(b),
+        }
+    }
+
+    /// Observed per-image rate across all real dispatches (ms), or the
+    /// construction-time marginal before any dispatch ran.
+    pub fn observed_per_image_ms(&self) -> f64 {
+        if self.images == 0 {
+            self.marginal_ms
+        } else {
+            self.measured_ms_total / self.images as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_measures_positive_decomposed_times() {
+        let engine = NativeEngine::new(42).unwrap();
+        assert!(engine.marginal_ms() >= MIN_MS);
+        assert!(engine.overhead_ms() >= 0.0);
+        assert!(engine.predicted_batch_ms(2) > engine.predicted_batch_ms(1));
+        assert_eq!(engine.runs, 0, "construction timings are not dispatches");
+    }
+
+    #[test]
+    fn run_batch_returns_measured_wall_time_and_counts() {
+        let mut engine = NativeEngine::new(42).unwrap();
+        let ms1 = engine.run_batch(1);
+        let ms3 = engine.run_batch(3);
+        assert!(ms1 >= MIN_MS && ms3 >= MIN_MS);
+        assert_eq!(engine.runs, 2);
+        assert_eq!(engine.images, 4);
+        assert!((engine.measured_ms_total - (ms1 + ms3)).abs() < 1e-9);
+        assert!(engine.observed_per_image_ms() > 0.0);
+        // a zero-sized dispatch still runs one image (a batch never
+        // has zero riders; clamping keeps the engine total-ordered)
+        engine.run_batch(0);
+        assert_eq!(engine.images, 5);
+    }
+
+    #[test]
+    fn median3_is_the_middle_element() {
+        assert_eq!(median3(1.0, 2.0, 3.0), 2.0);
+        assert_eq!(median3(3.0, 1.0, 2.0), 2.0);
+        assert_eq!(median3(2.0, 3.0, 1.0), 2.0);
+        assert_eq!(median3(5.0, 5.0, 1.0), 5.0);
+    }
+}

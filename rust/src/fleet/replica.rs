@@ -61,35 +61,77 @@ use crate::util::json::Json;
 use super::budget::{BudgetState, JouleBudget};
 use super::cache::ArtifactCache;
 use super::health::Health;
+use super::native::NativeEngine;
 
-/// Static description of one replica: device profile + serving precision.
+/// What actually services a replica's dispatches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReplicaKind {
+    /// The cost-model path: service times priced by the autotuned
+    /// [`NetworkPlan`](crate::simulator::autotune::NetworkPlan) in
+    /// virtual milliseconds (today's default — numbers unchanged).
+    Simulated,
+    /// Real inference on the host CPU ([`NativeEngine`]): each flushed
+    /// dispatch runs SqueezeNet for real and reports its measured
+    /// wall-clock service time through the same queueing spine.
+    Native,
+}
+
+impl ReplicaKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ReplicaKind::Simulated => "simulated",
+            ReplicaKind::Native => "native",
+        }
+    }
+}
+
+/// Seed for a native engine's synthetic weights/image — fixed so every
+/// native replica in a fleet is bit-identical and runs agree across
+/// replicas.
+const NATIVE_SEED: u64 = 42;
+
+/// Static description of one replica: device profile + serving
+/// precision + what executes it ([`ReplicaKind`]).
 #[derive(Debug, Clone)]
 pub struct ReplicaSpec {
     pub device: DeviceProfile,
     pub precision: Precision,
+    pub kind: ReplicaKind,
 }
 
 impl ReplicaSpec {
     pub fn new(device: DeviceProfile, precision: Precision) -> ReplicaSpec {
-        ReplicaSpec { device, precision }
+        ReplicaSpec { device, precision, kind: ReplicaKind::Simulated }
     }
 
-    /// Parse one spec atom: `s7`, `s7@fp32`, `6p@fp16`, `n5@imprecise`.
-    /// `fp32`/`precise` is the IEEE path, `fp16`/`imprecise` the relaxed
-    /// RenderScript-style path (§IV-B).
+    /// A native (real-compute) replica.  Its energy meter prices the
+    /// measured times through the calibrated
+    /// [`DeviceProfile::host`] power model; the precision only selects
+    /// which power rail is charged (the engine itself runs f32).
+    pub fn native(precision: Precision) -> ReplicaSpec {
+        ReplicaSpec { device: DeviceProfile::host(), precision, kind: ReplicaKind::Native }
+    }
+
+    /// Parse one spec atom: `s7`, `s7@fp32`, `6p@fp16`, `n5@imprecise`,
+    /// `native`.  `fp32`/`precise` is the IEEE path, `fp16`/`imprecise`
+    /// the relaxed RenderScript-style path (§IV-B); `native` runs real
+    /// host inference (kind [`ReplicaKind::Native`]).
     pub fn parse(atom: &str) -> Result<ReplicaSpec, String> {
         let (dev, prec) = match atom.split_once('@') {
             Some((d, p)) => (d.trim(), Some(p.trim())),
             None => (atom.trim(), None),
         };
-        let device = DeviceProfile::by_id(dev)
-            .ok_or_else(|| format!("unknown device '{dev}' (s7|6p|n5)"))?;
         let precision = match prec {
             None | Some("fp32") | Some("precise") => Precision::Precise,
             Some("fp16") | Some("imprecise") => Precision::Imprecise,
             Some(other) => return Err(format!("unknown precision '{other}' (fp32|fp16)")),
         };
-        Ok(ReplicaSpec { device, precision })
+        if dev == "native" {
+            return Ok(ReplicaSpec::native(precision));
+        }
+        let device = DeviceProfile::by_id(dev)
+            .ok_or_else(|| format!("unknown device '{dev}' (s7|6p|n5|native)"))?;
+        Ok(ReplicaSpec { device, precision, kind: ReplicaKind::Simulated })
     }
 }
 
@@ -413,6 +455,10 @@ pub struct Replica {
     pub artifact_load_j: f64,
     /// Cold artifact loads performed.
     pub artifact_loads: u64,
+    /// Real-compute engine (`Some` iff `spec.kind` is
+    /// [`ReplicaKind::Native`] and the engine built successfully);
+    /// flushed dispatches run through it and use measured wall time.
+    native: Option<NativeEngine>,
     pub placements: u64,
     pub completed: u64,
     pub latency: LatencyRecorder,
@@ -458,6 +504,30 @@ impl Replica {
             overhead_j[i] = energy_joules(&spec.device, mode, overhead_ms[i]);
             marginal_j[i] = energy_joules(&spec.device, mode, marginal_ms[i]);
         }
+        // A native replica replaces the cost-model prediction with its
+        // own construction-time measurement (both precision slots get
+        // the same numbers — the engine runs f32 regardless), and its
+        // joules price those measured times through the device's
+        // calibrated power model.  If the engine cannot be built the
+        // replica degrades to the simulated pricing of its profile.
+        let native = match spec.kind {
+            ReplicaKind::Simulated => None,
+            ReplicaKind::Native => NativeEngine::new(NATIVE_SEED).ok(),
+        };
+        if let Some(engine) = &native {
+            let m = engine.marginal_ms();
+            let o = engine.overhead_ms();
+            marginal_ms = [m, m];
+            overhead_ms = [o, o];
+            marginal_j = [
+                energy_joules(&spec.device, RunMode::Parallel(Precision::Precise), m),
+                energy_joules(&spec.device, RunMode::Parallel(Precision::Imprecise), m),
+            ];
+            overhead_j = [
+                energy_joules(&spec.device, RunMode::Parallel(Precision::Precise), o),
+                energy_joules(&spec.device, RunMode::Parallel(Precision::Imprecise), o),
+            ];
+        }
         let name = format!("r{id}/{}@{}", spec.device.id, spec.precision.label());
         let idle_w = idle_power_w(&spec.device);
         Replica {
@@ -495,6 +565,7 @@ impl Replica {
             artifact: None,
             artifact_load_j: 0.0,
             artifact_loads: 0,
+            native,
             placements: 0,
             completed: 0,
             latency: LatencyRecorder::new(4096),
@@ -634,6 +705,29 @@ impl Replica {
     /// absorbed a failed peer's queue — the autoscaler defers instead.
     pub fn holds_rerouted(&self) -> bool {
         !self.rerouted_anchors.is_empty()
+    }
+
+    /// What services this replica's dispatches.  `Native` with a dead
+    /// engine (construction failed) reports `Simulated`, because that
+    /// is how it actually behaves.
+    pub fn kind(&self) -> ReplicaKind {
+        if self.native.is_some() {
+            ReplicaKind::Native
+        } else {
+            ReplicaKind::Simulated
+        }
+    }
+
+    /// Real dispatches the native engine has executed (0 for
+    /// simulated replicas).
+    pub fn native_runs(&self) -> u64 {
+        self.native.as_ref().map_or(0, |e| e.runs)
+    }
+
+    /// Measured per-image service rate (ms) across the native
+    /// engine's real dispatches; `None` for simulated replicas.
+    pub fn native_observed_per_image_ms(&self) -> Option<f64> {
+        self.native.as_ref().map(|e| e.observed_per_image_ms())
     }
 
     /// Configured precision, unless the budget degraded us to fp16.
@@ -824,7 +918,15 @@ impl Replica {
             let riders = self.open[offset..offset + b].to_vec();
             offset += b;
             let start = self.busy_until_ms.max(at_ms);
-            let service = self.overhead_ms[i] + b as f64 * self.marginal_ms[i];
+            // A native replica executes the dispatch for real and its
+            // measured wall time becomes the service time; simulated
+            // replicas keep the cost-model price.  Energy stays the
+            // committed calibrated joules either way, so the budget
+            // meter's exactness invariants hold across kinds.
+            let service = match self.native.as_mut() {
+                Some(engine) => engine.run_batch(b),
+                None => self.overhead_ms[i] + b as f64 * self.marginal_ms[i],
+            };
             let energy = self.overhead_j[i] + b as f64 * self.marginal_j[i];
             self.energy_queued_j -= (b - 1) as f64 * self.overhead_j[i];
             let batch = Batch {
@@ -1278,10 +1380,54 @@ mod tests {
         let r = ReplicaSpec::parse("s7").unwrap();
         assert_eq!(r.device.id, "s7");
         assert_eq!(r.precision, Precision::Precise);
+        assert_eq!(r.kind, ReplicaKind::Simulated);
         assert_eq!(ReplicaSpec::parse("6p@fp16").unwrap().precision, Precision::Imprecise);
         assert_eq!(ReplicaSpec::parse("n5@precise").unwrap().device.id, "n5");
         assert!(ReplicaSpec::parse("pixel").is_err());
         assert!(ReplicaSpec::parse("s7@int8").is_err());
+        // the native atom: host profile, Native kind, precision rails
+        let n = ReplicaSpec::parse("native").unwrap();
+        assert_eq!(n.kind, ReplicaKind::Native);
+        assert_eq!(n.device.id, "host");
+        assert_eq!(n.precision, Precision::Precise);
+        assert_eq!(ReplicaSpec::parse("native@fp16").unwrap().precision, Precision::Imprecise);
+        assert!(ReplicaSpec::parse("native@int8").is_err());
+        assert_eq!(ReplicaKind::Native.label(), "native");
+        assert_eq!(ReplicaKind::Simulated.label(), "simulated");
+    }
+
+    #[test]
+    fn native_replica_serves_with_measured_wall_time() {
+        let cache = PlanCache::new();
+        let spec = ReplicaSpec::parse("native").unwrap();
+        let mut r = Replica::new(0, spec, None, FleetBatch::single(), &cache);
+        assert_eq!(r.kind(), ReplicaKind::Native);
+        assert_eq!(r.name, "r0/host@precise");
+        assert_eq!(r.native_runs(), 0);
+        let s = r.service_ms();
+        assert!(s > 0.0, "construction-measured service must be positive");
+        // single-image batching flushes at admit: the dispatch runs
+        // for real and its measured time schedules the batch
+        let p = r.admit(0.0, 0.0);
+        assert_eq!(r.native_runs(), 1);
+        assert!(p.predicted_latency_ms > 0.0);
+        let finish = r.last_finish_ms().unwrap();
+        assert!(finish > 0.0, "measured service time must advance virtual time");
+        let done = r.collect(finish + 1.0);
+        assert_eq!(done.len(), 1);
+        assert!(done[0].latency_ms.unwrap() > 0.0);
+        assert_eq!(r.completed, 1);
+        // energy is the committed calibrated joules (host power model
+        // over construction-measured times) — the meter zeroes out
+        // exactly, same invariant as the simulated kind
+        assert!((r.energy_spent_j - r.energy_per_request_j()).abs() < 1e-9);
+        assert!(r.energy_queued_j.abs() < 1e-9);
+        assert!(r.native_observed_per_image_ms().unwrap() > 0.0);
+        // a simulated replica reports no native state
+        let sim = s7_precise();
+        assert_eq!(sim.kind(), ReplicaKind::Simulated);
+        assert_eq!(sim.native_runs(), 0);
+        assert!(sim.native_observed_per_image_ms().is_none());
     }
 
     #[test]

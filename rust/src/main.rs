@@ -97,6 +97,12 @@ keys: slo (p95 ms, required), pool, min, max, budget (fleet J), tick
 adds/parks replicas against the SLO and budget, degrades the fleet to
 fp16 under joule pressure, and sheds at the front door when saturated.
 
+--device-profile FILE registers an extra DeviceProfile from JSON (as
+written by `cargo run --bin calibrate`) before the command runs, so
+--device and fleet spec atoms can name it by id — e.g. --device host.
+A fleet atom of `native` runs *real* host inference per dispatch
+(measured wall-clock service, same queueing/energy spine).
+
 Common options: --config FILE (JSON), --artifacts DIR";
 
 fn precision_of(args: &Args) -> Result<Precision> {
@@ -110,6 +116,23 @@ fn precision_of(args: &Args) -> Result<Precision> {
 fn device_of(args: &Args) -> Result<DeviceProfile> {
     let id = args.get_or("device", "n5");
     DeviceProfile::by_id(id).with_context(|| format!("unknown device '{id}' (s7|6p|n5)"))
+}
+
+/// Load and register a device profile from a `--device-profile` JSON
+/// file (as written by the `calibrate` binary), so `--device` and
+/// fleet spec atoms can name it — e.g. `--device host` after
+/// `calibrate --out host_profile.json --quick`.
+fn load_device_profile(args: &Args) -> Result<()> {
+    let Some(path) = args.get("device-profile") else { return Ok(()) };
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading device profile {path}"))?;
+    let json = Json::parse(&text)
+        .with_context(|| format!("parsing device profile {path}"))?;
+    let profile = DeviceProfile::from_json(&json)
+        .with_context(|| format!("loading device profile {path}"))?;
+    eprintln!("registered device profile '{}' ({}) from {path}", profile.id, profile.name);
+    mobile_convnet::simulator::device::register_profile(profile);
+    Ok(())
 }
 
 fn app_config(args: &Args) -> Result<AppConfig> {
@@ -175,6 +198,7 @@ fn main() {
 }
 
 fn run(args: &Args) -> Result<()> {
+    load_device_profile(args)?;
     match args.command() {
         Some("tables") => cmd_tables(args),
         Some("autotune") => cmd_autotune(args),

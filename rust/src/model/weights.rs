@@ -97,6 +97,34 @@ impl WeightStore {
         Ok(Self { params, by_name })
     }
 
+    /// Seeded synthetic parameters matching a network's contract
+    /// exactly: He-scaled uniform conv weights, zero biases.  Built
+    /// in-memory (no byte round-trip) and deterministic per seed —
+    /// what native replicas and the calibration harness run when no
+    /// `weights.bin` artifact exists.
+    pub fn synthetic(net: &SqueezeNet, seed: u64) -> Self {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let specs = net.param_specs();
+        let mut params = Vec::with_capacity(specs.len());
+        let mut by_name = HashMap::with_capacity(specs.len());
+        for (i, (name, shape)) in specs.into_iter().enumerate() {
+            let n: usize = shape.iter().product();
+            let fan_in: usize = shape[..shape.len().saturating_sub(1)].iter().product();
+            let scale = if name.ends_with("_b") {
+                0.0
+            } else {
+                (2.0 / fan_in.max(1) as f32).sqrt()
+            };
+            let mut data = Vec::with_capacity(n);
+            for _ in 0..n {
+                data.push(rng.range_f32(-1.0, 1.0) * scale);
+            }
+            by_name.insert(name.clone(), i);
+            params.push(Param { name, shape, data });
+        }
+        Self { params, by_name }
+    }
+
     /// Parameters in AOT argument order.
     pub fn params(&self) -> &[Param] {
         &self.params
@@ -269,6 +297,24 @@ mod tests {
         // conv10 (512 -> 1000 channels, 1x1) is the biggest shard.
         let max = shards.iter().max_by_key(|s| s.bytes).unwrap();
         assert_eq!(max.name, "Conv 10");
+    }
+
+    #[test]
+    fn synthetic_weights_satisfy_the_contract_and_are_deterministic() {
+        let net = SqueezeNet::with_input(56);
+        let a = WeightStore::synthetic(&net, 7);
+        a.validate(&net).unwrap();
+        assert_eq!(a.total_scalars(), net.total_params());
+        // biases are zero, weights are not all zero
+        let conv1_b = a.get("conv1_b").unwrap();
+        assert!(conv1_b.data.iter().all(|&v| v == 0.0));
+        let conv1_w = a.get("conv1_w").unwrap();
+        assert!(conv1_w.data.iter().any(|&v| v != 0.0));
+        // same seed -> same stream; different seed -> different stream
+        let b = WeightStore::synthetic(&net, 7);
+        assert_eq!(a.get("conv1_w").unwrap().data, b.get("conv1_w").unwrap().data);
+        let c = WeightStore::synthetic(&net, 8);
+        assert_ne!(a.get("conv1_w").unwrap().data, c.get("conv1_w").unwrap().data);
     }
 
     #[test]

@@ -1,0 +1,440 @@
+//! Calibration harness: fits a simulated [`DeviceProfile`] to the host
+//! CPU from measured SqueezeNet runs — the paper's per-device autotune
+//! loop (measure, then synthesize a model) applied to our own silicon.
+//!
+//! The pipeline has two halves so the fit is testable without a clock:
+//!
+//! 1. **Measure** ([`measure_host`]): run the vectorized network
+//!    [`reps`](CalibrationConfig::reps) times through
+//!    [`run_squeezenet_timed`], taking per-macro-layer and whole-net
+//!    medians (medians, not means — CI runners have noisy tails).
+//! 2. **Fit** ([`fit_profile`]): compare measurements against a
+//!    template device's cost-model predictions, take the median
+//!    per-layer ratio α, and rescale the template so every cost-model
+//!    component (compute, memory, dispatch) scales by exactly α:
+//!    `clock_ghz /= α`, `mem_bw_gb_s /= α`, `kernel_launch_us *= α`,
+//!    `dispatch_us_per_wave *= α`, `cycles_per_mac *= α`.  The
+//!    leftover `whole_net − Σ per-layer` wall time becomes the fitted
+//!    `dispatch_setup_ms`.
+//!
+//! The fitted profile loads as a simulated device next to the three
+//! paper phones (`DeviceProfile::from_json` + `register_profile`), so
+//! the simulator's per-layer prediction error against the same host is
+//! a measurable number — reported per layer in
+//! [`CalibrationReport::rows`].
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::convnet::network::{run_squeezenet_timed, ConvImpl};
+use crate::model::graph::{LayerKind, MacroLayer, SqueezeNet};
+use crate::model::weights::WeightStore;
+use crate::simulator::autotune::autotune_network;
+use crate::simulator::cost::{aux_layer_time, conv_gpu_time, RunMode};
+use crate::simulator::device::{DeviceProfile, Precision};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::cpu::midpoint_plan;
+
+/// Knobs for one calibration run.
+#[derive(Debug, Clone)]
+pub struct CalibrationConfig {
+    /// Square input side the measured network runs at.  `--quick` uses
+    /// 56 (same topology, 1/16 the spatial work); the full run uses the
+    /// paper's 224.
+    pub input_hw: usize,
+    /// Timed repetitions per measurement (after one warmup run).
+    pub reps: usize,
+    /// Seed for the synthetic weights and input image.
+    pub seed: u64,
+}
+
+impl CalibrationConfig {
+    /// CI-friendly: 56x56 input, few reps — seconds, not minutes.
+    pub fn quick() -> Self {
+        CalibrationConfig { input_hw: 56, reps: 5, seed: 42 }
+    }
+
+    /// The paper-faithful measurement: full 224x224 input.
+    pub fn full() -> Self {
+        CalibrationConfig { input_hw: 224, reps: 10, seed: 42 }
+    }
+}
+
+/// Median wall-clock measurements of one host (the fit's input).
+#[derive(Debug, Clone)]
+pub struct HostMeasurement {
+    /// Median ms per macro layer, Table IV order (Conv1..Conv10; the
+    /// Head's small tail is folded into the dispatch residue).
+    pub per_layer: Vec<(MacroLayer, f64)>,
+    /// Median ms of one whole inference call.
+    pub whole_net_ms: f64,
+    pub reps: usize,
+    pub input_hw: usize,
+}
+
+/// One fitted layer: measurement vs the template and fitted models.
+#[derive(Debug, Clone)]
+pub struct LayerRow {
+    pub label: String,
+    pub measured_ms: f64,
+    /// Template device's cost-model prediction (pre-fit).
+    pub template_ms: f64,
+    /// Fitted profile's cost-model prediction (post-fit).
+    pub fitted_ms: f64,
+    /// `|fitted/measured - 1|` in percent — the simulator's per-layer
+    /// prediction error against this host.
+    pub error_pct: f64,
+}
+
+/// The calibration result: a loadable profile plus the fit quality.
+#[derive(Debug, Clone)]
+pub struct CalibrationReport {
+    pub profile: DeviceProfile,
+    pub rows: Vec<LayerRow>,
+    /// Median measured/template ratio the fit scaled by.
+    pub alpha: f64,
+    /// `max(whole_net − Σ per-layer, 0)` — the fitted per-dispatch
+    /// host-side overhead.
+    pub dispatch_setup_ms: f64,
+    pub median_error_pct: f64,
+    pub max_error_pct: f64,
+    /// Median measured whole-net latency on this host.
+    pub native_net_ms: f64,
+    pub reps: usize,
+    pub input_hw: usize,
+}
+
+impl CalibrationReport {
+    /// Full report as JSON (the profile object is the loadable part).
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("profile", self.profile.to_json()),
+            ("alpha", Json::num(self.alpha)),
+            ("dispatch_setup_ms", Json::num(self.dispatch_setup_ms)),
+            ("median_error_pct", Json::num(self.median_error_pct)),
+            ("max_error_pct", Json::num(self.max_error_pct)),
+            ("native_net_ms", Json::num(self.native_net_ms)),
+            ("reps", Json::num(self.reps as f64)),
+            ("input_hw", Json::num(self.input_hw as f64)),
+            (
+                "layers",
+                Json::Array(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::object(vec![
+                                ("layer", Json::str(r.label.clone())),
+                                ("measured_ms", Json::num(r.measured_ms)),
+                                ("template_ms", Json::num(r.template_ms)),
+                                ("fitted_ms", Json::num(r.fitted_ms)),
+                                ("error_pct", Json::num(r.error_pct)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+fn median(samples: &mut [f64]) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let n = samples.len();
+    if n % 2 == 1 {
+        samples[n / 2]
+    } else {
+        (samples[n / 2 - 1] + samples[n / 2]) / 2.0
+    }
+}
+
+/// Cost-model prediction per macro layer (Table IV order) for one
+/// device: autotuned granularities, parallel mode — exactly how the
+/// fleet prices a simulated replica of this device.
+pub fn predicted_macro_ms(
+    net: &SqueezeNet,
+    device: &DeviceProfile,
+    precision: Precision,
+) -> Vec<(MacroLayer, f64)> {
+    let plan = autotune_network(net, precision, device);
+    let mode = RunMode::Parallel(precision);
+    MacroLayer::table_iv_order()
+        .into_iter()
+        .map(|ml| {
+            let ms: f64 = net
+                .layers
+                .iter()
+                .filter(|l| l.macro_layer == ml)
+                .map(|l| match &l.kind {
+                    LayerKind::Conv(spec) => {
+                        conv_gpu_time(spec, plan.optimal_g(&spec.name), precision, &device.gpu)
+                            .total_ms()
+                    }
+                    kind => aux_layer_time(kind, mode, device),
+                })
+                .sum();
+            (ml, ms)
+        })
+        .collect()
+}
+
+/// Measure the host: N timed runs of the vectorized network on
+/// synthetic weights, medians per macro layer and whole-net.
+pub fn measure_host(cfg: &CalibrationConfig) -> Result<HostMeasurement> {
+    if cfg.reps == 0 {
+        bail!("calibration needs at least one rep");
+    }
+    if cfg.input_hw < 56 {
+        bail!("input_hw must be >= 56 (smaller inputs collapse the pool chain)");
+    }
+    let net = SqueezeNet::with_input(cfg.input_hw);
+    let weights = WeightStore::synthetic(&net, cfg.seed);
+    // Decorrelate the input image stream from the weight stream.
+    let image: Vec<f32> =
+        Rng::new(cfg.seed ^ 0x1AB_C0DE).vec_f32(cfg.input_hw * cfg.input_hw * 3, 0.0, 1.0);
+    let conv_impl = ConvImpl::Vectorized { plan: midpoint_plan(&net), parallel: true };
+
+    // Warmup: page in weights, spin up the thread pool.
+    run_squeezenet_timed(&net, &weights, &image, &conv_impl)?;
+
+    let order = MacroLayer::table_iv_order();
+    let mut layer_samples: Vec<Vec<f64>> = vec![Vec::with_capacity(cfg.reps); order.len()];
+    let mut whole_samples = Vec::with_capacity(cfg.reps);
+    for _ in 0..cfg.reps {
+        let t0 = Instant::now();
+        let (_, timings) = run_squeezenet_timed(&net, &weights, &image, &conv_impl)?;
+        whole_samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        for (i, ml) in order.iter().enumerate() {
+            let ms: f64 =
+                timings.iter().filter(|t| t.layer == *ml).map(|t| t.ms).sum();
+            layer_samples[i].push(ms);
+        }
+    }
+    let per_layer = order
+        .iter()
+        .zip(layer_samples.iter_mut())
+        .map(|(ml, samples)| (*ml, median(samples)))
+        .collect();
+    Ok(HostMeasurement {
+        per_layer,
+        whole_net_ms: median(&mut whole_samples),
+        reps: cfg.reps,
+        input_hw: cfg.input_hw,
+    })
+}
+
+/// Fit a device profile from measurements against a template device.
+/// Pure — no clock — so the round-trip property tests can feed it
+/// synthetic measurements generated from the cost model itself.
+pub fn fit_profile(
+    net: &SqueezeNet,
+    measured: &HostMeasurement,
+    template: &DeviceProfile,
+) -> Result<CalibrationReport> {
+    let predicted = predicted_macro_ms(net, template, Precision::Precise);
+    if measured.per_layer.len() != predicted.len() {
+        bail!(
+            "measurement has {} macro layers, template predicts {}",
+            measured.per_layer.len(),
+            predicted.len()
+        );
+    }
+    let mut ratios = Vec::with_capacity(predicted.len());
+    for ((ml_m, m_ms), (ml_p, p_ms)) in measured.per_layer.iter().zip(&predicted) {
+        if ml_m != ml_p {
+            bail!("macro-layer order mismatch: {} vs {}", ml_m.label(), ml_p.label());
+        }
+        if *m_ms <= 0.0 || !m_ms.is_finite() || *p_ms <= 0.0 || !p_ms.is_finite() {
+            bail!(
+                "{}: non-positive timing (measured {m_ms} ms, predicted {p_ms} ms)",
+                ml_m.label()
+            );
+        }
+        ratios.push(m_ms / p_ms);
+    }
+    let alpha = median(&mut ratios);
+    if !(alpha.is_finite() && alpha > 0.0) {
+        bail!("degenerate fit: alpha = {alpha}");
+    }
+
+    // Rescale the template so every cost-model term scales by exactly α.
+    let host_meta = DeviceProfile::host();
+    let mut profile = template.clone();
+    profile.name = "Calibrated Host";
+    profile.id = "host";
+    profile.soc = host_meta.soc;
+    profile.gpu_name = "host CPU (calibrated)";
+    profile.gpu.clock_ghz /= alpha;
+    profile.gpu.mem_bw_gb_s /= alpha;
+    profile.gpu.kernel_launch_us *= alpha;
+    profile.gpu.dispatch_us_per_wave *= alpha;
+    profile.cpu.cycles_per_mac *= alpha;
+    profile.power = host_meta.power;
+    let measured_sum: f64 = measured.per_layer.iter().map(|(_, ms)| ms).sum();
+    let dispatch_setup_ms = (measured.whole_net_ms - measured_sum).max(0.0);
+    profile.gpu.dispatch_setup_ms = dispatch_setup_ms;
+
+    // Re-predict through the cost model on the fitted profile — the
+    // honest per-layer error, not the algebraic α·template shortcut.
+    let fitted = predicted_macro_ms(net, &profile, Precision::Precise);
+    let mut rows = Vec::with_capacity(predicted.len());
+    for (((ml, m_ms), (_, t_ms)), (_, f_ms)) in
+        measured.per_layer.iter().zip(&predicted).zip(&fitted)
+    {
+        rows.push(LayerRow {
+            label: ml.label(),
+            measured_ms: *m_ms,
+            template_ms: *t_ms,
+            fitted_ms: *f_ms,
+            error_pct: (f_ms / m_ms - 1.0).abs() * 100.0,
+        });
+    }
+    let mut errs: Vec<f64> = rows.iter().map(|r| r.error_pct).collect();
+    let median_error_pct = median(&mut errs);
+    let max_error_pct = errs.iter().cloned().fold(0.0, f64::max);
+    Ok(CalibrationReport {
+        profile,
+        rows,
+        alpha,
+        dispatch_setup_ms,
+        median_error_pct,
+        max_error_pct,
+        native_net_ms: measured.whole_net_ms,
+        reps: measured.reps,
+        input_hw: measured.input_hw,
+    })
+}
+
+/// Measure this host and fit a profile against the Galaxy S7 template
+/// (the paper's fastest device — the closest cost-model shape to a
+/// host CPU's flat memory hierarchy).
+pub fn calibrate(cfg: &CalibrationConfig) -> Result<CalibrationReport> {
+    let net = SqueezeNet::with_input(cfg.input_hw);
+    let measured = measure_host(cfg)?;
+    fit_profile(&net, &measured, &DeviceProfile::galaxy_s7())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic measurement: the template's own predictions scaled by
+    /// a constant, plus a known dispatch residue.
+    fn synthetic_measurement(
+        net: &SqueezeNet,
+        device: &DeviceProfile,
+        scale: f64,
+        residue_ms: f64,
+    ) -> HostMeasurement {
+        let per_layer: Vec<(MacroLayer, f64)> = predicted_macro_ms(net, device, Precision::Precise)
+            .into_iter()
+            .map(|(ml, ms)| (ml, ms * scale))
+            .collect();
+        let whole: f64 = per_layer.iter().map(|(_, ms)| ms).sum::<f64>() + residue_ms;
+        HostMeasurement { per_layer, whole_net_ms: whole, reps: 1, input_hw: 224 }
+    }
+
+    #[test]
+    fn fit_recovers_a_scaled_template_exactly() {
+        // Round-trip property: measurements that ARE the template's
+        // predictions (times 2) must fit with α=2 and ~zero per-layer
+        // error once re-predicted through the cost model.
+        let net = SqueezeNet::v1_0();
+        let s7 = DeviceProfile::galaxy_s7();
+        let m = synthetic_measurement(&net, &s7, 2.0, 7.0);
+        let report = fit_profile(&net, &m, &s7).unwrap();
+        assert!((report.alpha - 2.0).abs() < 1e-12, "alpha {}", report.alpha);
+        assert!((report.dispatch_setup_ms - 7.0).abs() < 1e-9);
+        assert_eq!(report.rows.len(), 10);
+        for row in &report.rows {
+            assert!(
+                row.error_pct < 0.01,
+                "{}: fitted {} vs measured {} ({}%)",
+                row.label,
+                row.fitted_ms,
+                row.measured_ms,
+                row.error_pct
+            );
+        }
+        assert!(report.median_error_pct < 0.01);
+        assert!(report.max_error_pct < 0.01);
+        // the fitted profile survives the JSON round trip
+        let text = report.profile.to_json().to_string();
+        let back = DeviceProfile::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.gpu.dispatch_setup_ms, report.profile.gpu.dispatch_setup_ms);
+        assert_eq!(back.gpu.clock_ghz, report.profile.gpu.clock_ghz);
+    }
+
+    #[test]
+    fn fit_from_another_devices_measurements_stays_in_tolerance() {
+        // A host that behaves like a Nexus 6P, fitted against the S7
+        // template: per-layer ratios are no longer constant, but the
+        // median-α fit must keep the median error well under the CI
+        // gate's 50% bound.
+        let net = SqueezeNet::v1_0();
+        let m = synthetic_measurement(&net, &DeviceProfile::nexus_6p(), 1.0, 3.0);
+        let report = fit_profile(&net, &m, &DeviceProfile::galaxy_s7()).unwrap();
+        assert!(report.alpha > 0.0 && report.alpha.is_finite());
+        assert!(
+            report.median_error_pct < 50.0,
+            "median error {}%",
+            report.median_error_pct
+        );
+        for row in &report.rows {
+            assert!(row.error_pct.is_finite(), "{}", row.label);
+        }
+    }
+
+    #[test]
+    fn dispatch_residue_clamps_at_zero() {
+        let net = SqueezeNet::v1_0();
+        let s7 = DeviceProfile::galaxy_s7();
+        let mut m = synthetic_measurement(&net, &s7, 1.0, 0.0);
+        m.whole_net_ms *= 0.5; // whole-net below the per-layer sum
+        let report = fit_profile(&net, &m, &s7).unwrap();
+        assert_eq!(report.dispatch_setup_ms, 0.0);
+    }
+
+    #[test]
+    fn fit_rejects_degenerate_measurements() {
+        let net = SqueezeNet::v1_0();
+        let s7 = DeviceProfile::galaxy_s7();
+        let mut m = synthetic_measurement(&net, &s7, 1.0, 0.0);
+        m.per_layer[3].1 = 0.0;
+        assert!(fit_profile(&net, &m, &s7).is_err());
+        let mut m = synthetic_measurement(&net, &s7, 1.0, 0.0);
+        m.per_layer.pop();
+        assert!(fit_profile(&net, &m, &s7).is_err());
+    }
+
+    #[test]
+    fn report_json_has_the_loadable_profile_inside() {
+        let net = SqueezeNet::v1_0();
+        let s7 = DeviceProfile::galaxy_s7();
+        let m = synthetic_measurement(&net, &s7, 1.5, 2.0);
+        let report = fit_profile(&net, &m, &s7).unwrap();
+        let j = report.to_json();
+        let text = j.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let profile = DeviceProfile::from_json(parsed.get("profile").unwrap()).unwrap();
+        assert_eq!(profile.id, "host");
+        assert_eq!(parsed.get("layers").unwrap().as_array().unwrap().len(), 10);
+        assert!(parsed.get("alpha").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn quick_config_is_small_and_full_is_paper_sized() {
+        let q = CalibrationConfig::quick();
+        let f = CalibrationConfig::full();
+        assert_eq!(q.input_hw, 56);
+        assert_eq!(f.input_hw, 224);
+        assert!(q.reps >= 3, "medians need a few samples");
+        assert!(measure_host(&CalibrationConfig { input_hw: 8, reps: 1, seed: 1 }).is_err());
+        assert!(measure_host(&CalibrationConfig { input_hw: 56, reps: 0, seed: 1 }).is_err());
+    }
+}

@@ -1,0 +1,224 @@
+//! Pure-Rust CPU runtime engine — the default implementation of the
+//! [`RuntimeEngine`] surface (the PJRT-backed twin lives in
+//! `executor.rs` behind the `xla` cargo feature).
+//!
+//! Executes the in-tree vectorized SqueezeNet
+//! ([`crate::convnet::vectorized`]) on the host CPU from the same
+//! `weights.bin` parameters the PJRT path uploads, so the coordinator,
+//! tests, and benches run unmodified without an XLA toolchain.  This
+//! is also the engine the native fleet replicas and the `calibrate`
+//! binary time: wall-clock numbers from this path are what the
+//! calibration harness fits device profiles against.
+//!
+//! Precision note: the host CPU has no fp16 rail, so `Precise` and
+//! `Imprecise` executors run identical f32 math here — precision
+//! degradation is a simulated-device concept that the native path
+//! accepts as a no-op (documented in `rust/docs/NATIVE_REPLICAS.md`).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::convnet::network::{run_squeezenet, ConvImpl};
+use crate::convnet::vectorized::valid_gs;
+use crate::model::graph::{SqueezeNet, INPUT_CHANNELS};
+use crate::model::weights::WeightStore;
+use crate::simulator::device::Precision;
+
+use super::artifacts::Manifest;
+
+/// Mid-range granularity plan for the vectorized engine: every conv
+/// layer runs at the middle entry of its valid-`g` ladder, mirroring
+/// the non-trivial plan the convnet cross-check tests use.
+pub fn midpoint_plan(net: &SqueezeNet) -> HashMap<String, usize> {
+    let mut plan = HashMap::new();
+    for c in net.conv_layers() {
+        let gs = valid_gs(c.cout);
+        if let Some(&g) = gs.get(gs.len() / 2) {
+            plan.insert(c.name.clone(), g);
+        }
+    }
+    plan
+}
+
+/// A ready-to-run full-model engine for one (precision, batch) pair.
+///
+/// "Compilation" on the CPU path is just plan construction; weights
+/// stay in the shared [`WeightStore`] and are reordered into float4
+/// filter banks per call by the vectorized kernels.
+pub struct ModelExecutor {
+    net: SqueezeNet,
+    weights: Arc<WeightStore>,
+    conv_impl: ConvImpl,
+    pub precision: Precision,
+    pub batch: usize,
+    pub input_hw: usize,
+    pub num_classes: usize,
+    /// Wall-clock spent preparing the executor (startup cost; the CPU
+    /// path has no artifact compile, so this is plan-building time).
+    pub compile_time: std::time::Duration,
+}
+
+impl ModelExecutor {
+    /// Elements per input image.
+    pub fn image_len(&self) -> usize {
+        self.input_hw * self.input_hw * INPUT_CHANNELS
+    }
+
+    /// Run one batch. `input` must contain exactly `batch` images in
+    /// NHWC order; returns `batch` logit vectors.
+    pub fn infer(&self, input: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let expected = self.batch * self.image_len();
+        if input.len() != expected {
+            bail!(
+                "cpu executor(batch={}): input has {} values, expected {expected}",
+                self.batch,
+                input.len()
+            );
+        }
+        let mut out = Vec::with_capacity(self.batch);
+        for image in input.chunks_exact(self.image_len()) {
+            let r = run_squeezenet(&self.net, &self.weights, image, &self.conv_impl)?;
+            if r.logits.len() != self.num_classes {
+                bail!("logits length {} != classes {}", r.logits.len(), self.num_classes);
+            }
+            out.push(r.logits);
+        }
+        Ok(out)
+    }
+}
+
+/// Single-layer kernel executor.  The CPU engine does not load Pallas
+/// kernel artifacts (that is the `xla` feature's job), so this type
+/// only exists to keep the runtime surface identical; see
+/// [`RuntimeEngine::load_layer_kernel`].
+pub struct KernelExecutor {
+    pub input_dims: Vec<usize>,
+}
+
+impl KernelExecutor {
+    /// Run the kernel on one input tensor (dims fixed at load time).
+    pub fn run(&self, _input: &[f32]) -> Result<Vec<f32>> {
+        bail!("layer kernels require the `xla` feature (PJRT/Pallas artifacts)")
+    }
+}
+
+/// The default runtime: manifest + weights + per-(precision, batch)
+/// CPU executors, loaded at startup.
+pub struct RuntimeEngine {
+    pub manifest: Manifest,
+    pub weights: Arc<WeightStore>,
+    executors: HashMap<(Precision, usize), ModelExecutor>,
+}
+
+impl RuntimeEngine {
+    /// Load manifest + weights from an artifacts directory and prepare
+    /// the requested hot-path executors.
+    pub fn load(dir: &Path, precisions: &[Precision], batches: &[usize]) -> Result<RuntimeEngine> {
+        let manifest = Manifest::load(dir)?;
+        let net = SqueezeNet::v1_0();
+        manifest.validate_against(&net).context("manifest/model contract")?;
+        let weights = WeightStore::load(&dir.join("weights.bin"))?;
+        weights.validate(&net).context("weights/model contract")?;
+
+        let mut engine =
+            RuntimeEngine { manifest, weights: Arc::new(weights), executors: HashMap::new() };
+        for &precision in precisions {
+            for &batch in batches {
+                engine.ensure_executor(precision, batch)?;
+            }
+        }
+        Ok(engine)
+    }
+
+    /// Prepare (if not yet prepared) the executor for (precision, batch).
+    pub fn ensure_executor(&mut self, precision: Precision, batch: usize) -> Result<()> {
+        if self.executors.contains_key(&(precision, batch)) {
+            return Ok(());
+        }
+        if batch == 0 {
+            bail!("batch size must be >= 1");
+        }
+        let t0 = Instant::now();
+        let net = SqueezeNet::with_input(self.manifest.input_hw);
+        let plan = midpoint_plan(&net);
+        self.executors.insert(
+            (precision, batch),
+            ModelExecutor {
+                net,
+                weights: Arc::clone(&self.weights),
+                conv_impl: ConvImpl::Vectorized { plan, parallel: true },
+                precision,
+                batch,
+                input_hw: self.manifest.input_hw,
+                num_classes: self.manifest.num_classes,
+                compile_time: t0.elapsed(),
+            },
+        );
+        Ok(())
+    }
+
+    /// Executor for (precision, batch), if prepared.
+    pub fn executor(&self, precision: Precision, batch: usize) -> Option<&ModelExecutor> {
+        self.executors.get(&(precision, batch))
+    }
+
+    /// Batch sizes prepared for a precision, ascending.
+    pub fn batches_for(&self, precision: Precision) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .executors
+            .keys()
+            .filter(|(p, _)| *p == precision)
+            .map(|(_, b)| *b)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// The full-model **Pallas** artifact requires the PJRT client;
+    /// always an error on the CPU engine (callers skip gracefully).
+    pub fn load_pallas_model(&self) -> Result<ModelExecutor> {
+        bail!("pallas model artifacts require the `xla` feature (PJRT client)")
+    }
+
+    /// Single-layer kernel artifacts require the PJRT client; always an
+    /// error on the CPU engine (callers skip gracefully).
+    pub fn load_layer_kernel(&self, layer: &str) -> Result<KernelExecutor> {
+        bail!("kernel artifact for layer {layer} requires the `xla` feature (PJRT client)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn midpoint_plan_covers_every_conv_layer() {
+        let net = SqueezeNet::with_input(56);
+        let plan = midpoint_plan(&net);
+        assert_eq!(plan.len(), net.conv_layers().len());
+        for c in net.conv_layers() {
+            let g = plan[&c.name];
+            assert!(valid_gs(c.cout).contains(&g), "{}: g={g}", c.name);
+        }
+    }
+
+    #[test]
+    fn kernel_and_pallas_paths_error_cleanly() {
+        let k = KernelExecutor { input_dims: vec![224, 224, 3] };
+        assert!(k.run(&[0.0; 4]).is_err());
+    }
+
+    #[test]
+    fn load_requires_a_manifest() {
+        let err = RuntimeEngine::load(
+            Path::new("/nonexistent-artifacts-dir"),
+            &[Precision::Precise],
+            &[1],
+        );
+        assert!(err.is_err());
+    }
+}

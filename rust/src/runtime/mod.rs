@@ -1,14 +1,27 @@
-//! The PJRT runtime: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! The model runtime: artifact manifests, the inference engine, and
+//! the calibration harness.
 //!
-//! This is the only place Python output crosses into the Rust process,
-//! and it happens entirely at startup: artifacts are compiled once,
-//! weights are uploaded to device buffers once, and the request path is
-//! pure `execute_b` calls (no Python, no recompilation, no weight
-//! re-upload).
+//! Two interchangeable engines share one public surface
+//! ([`RuntimeEngine`] / [`ModelExecutor`] / [`KernelExecutor`]):
+//!
+//! - **`cpu`** (default) — pure-Rust engine that runs the in-tree
+//!   vectorized SqueezeNet (`convnet::vectorized`) on the host CPU.
+//!   No external dependencies; this is what native fleet replicas and
+//!   the `calibrate` binary execute.
+//! - **`executor`** (behind the `xla` cargo feature) — loads the AOT
+//!   HLO-text artifacts produced by `python/compile/aot.py` and
+//!   executes them on the CPU PJRT client.  Requires an XLA/PJRT
+//!   crate the workspace does not vendor, so it is opt-in.
 
 pub mod artifacts;
+pub mod calibrate;
+pub mod cpu;
+#[cfg(feature = "xla")]
 pub mod executor;
 
 pub use artifacts::{ArtifactInfo, Manifest, ModelArtifact, ModelCatalog, ModelId};
+
+#[cfg(feature = "xla")]
 pub use executor::{KernelExecutor, ModelExecutor, RuntimeEngine};
+#[cfg(not(feature = "xla"))]
+pub use cpu::{KernelExecutor, ModelExecutor, RuntimeEngine};

@@ -15,6 +15,12 @@
 //! calibrated against microbenchmarks.  The *shape* claims (U-curves,
 //! per-layer optima, speedup bands) are emergent, not fitted per layer.
 
+use std::sync::RwLock;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
 /// Floating-point execution mode (§IV-B).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Precision {
@@ -251,20 +257,202 @@ impl DeviceProfile {
         }
     }
 
-    /// All three devices in the paper's row order.
+    /// Nominal host-CPU profile backing **native** replicas: used for
+    /// naming, idle/artifact pricing, and committed per-request energy
+    /// (service *time* on a native replica is measured, never taken
+    /// from this model).  The numbers are deliberately round
+    /// placeholders — the `calibrate` binary fits a measured profile
+    /// for the actual host and registers it at runtime.  Not part of
+    /// [`all()`]: the paper's tables are three phones, not a server.
+    pub fn host() -> Self {
+        DeviceProfile {
+            name: "Host CPU",
+            id: "host",
+            soc: "host",
+            gpu_name: "host SIMD (vectorized conv_g)",
+            gpu: GpuModel {
+                clock_ghz: 3.0,
+                vec4_units: 32.0,
+                dot_cycles_precise: 8.0,
+                // no fp16 rail on the host: both modes run f32 math
+                dot_cycles_imprecise: 8.0,
+                thread_setup_cycles: 400.0,
+                latency_hiding_threads: 64.0,
+                full_occupancy_g: 8.0,
+                reg_pressure_slope: 0.05,
+                mem_bw_gb_s: 12.0,
+                tex_cache_cap: 8.0,
+                weight_cache_reuse: 32.0,
+                kernel_launch_us: 5.0,
+                dispatch_us_per_wave: 0.010,
+                wave_size: 8.0,
+                dispatch_setup_ms: 0.5,
+            },
+            cpu: SeqCpuModel { clock_ghz: 3.0, cycles_per_mac: 10.0 },
+            power: PowerModel {
+                // ~1.5 W idle, ~15 W under load — small-server rails.
+                baseline_mw: 1500.0,
+                seq_diff_mw: 6000.0,
+                precise_par_diff_mw: 13_500.0,
+                imprecise_par_diff_mw: 13_500.0,
+            },
+        }
+    }
+
+    /// All three devices in the paper's row order (builtins only;
+    /// runtime-registered profiles are a separate namespace so the
+    /// paper-table benches never pick up a calibrated host).
     pub fn all() -> Vec<DeviceProfile> {
         vec![Self::galaxy_s7(), Self::nexus_6p(), Self::nexus_5()]
     }
 
-    /// Lookup by CLI id or name fragment (case-insensitive).
+    /// Lookup by CLI id or name fragment (case-insensitive).  Searches
+    /// the builtins first, then any profiles registered at runtime via
+    /// [`register_profile`] (e.g. a calibrated host profile loaded from
+    /// JSON).
     pub fn by_id(id: &str) -> Option<DeviceProfile> {
         let id = id.to_lowercase().replace([' ', '-', '_'], "");
-        Self::all().into_iter().find(|d| {
+        let matches = |d: &DeviceProfile| {
             d.id == id
                 || d.name.to_lowercase().replace(' ', "") == id
                 || d.name.to_lowercase().replace(' ', "").contains(&id)
+        };
+        if let Some(d) = Self::all().into_iter().find(&matches) {
+            return Some(d);
+        }
+        registered_profiles().into_iter().find(&matches)
+    }
+
+    /// Serialize to the profile-JSON schema the `calibrate` binary
+    /// emits (see `rust/docs/NATIVE_REPLICAS.md`).
+    pub fn to_json(&self) -> Json {
+        let g = &self.gpu;
+        Json::object(vec![
+            ("name", Json::str(self.name)),
+            ("id", Json::str(self.id)),
+            ("soc", Json::str(self.soc)),
+            ("gpu_name", Json::str(self.gpu_name)),
+            (
+                "gpu",
+                Json::object(vec![
+                    ("clock_ghz", Json::num(g.clock_ghz)),
+                    ("vec4_units", Json::num(g.vec4_units)),
+                    ("dot_cycles_precise", Json::num(g.dot_cycles_precise)),
+                    ("dot_cycles_imprecise", Json::num(g.dot_cycles_imprecise)),
+                    ("thread_setup_cycles", Json::num(g.thread_setup_cycles)),
+                    ("latency_hiding_threads", Json::num(g.latency_hiding_threads)),
+                    ("full_occupancy_g", Json::num(g.full_occupancy_g)),
+                    ("reg_pressure_slope", Json::num(g.reg_pressure_slope)),
+                    ("mem_bw_gb_s", Json::num(g.mem_bw_gb_s)),
+                    ("tex_cache_cap", Json::num(g.tex_cache_cap)),
+                    ("weight_cache_reuse", Json::num(g.weight_cache_reuse)),
+                    ("kernel_launch_us", Json::num(g.kernel_launch_us)),
+                    ("dispatch_us_per_wave", Json::num(g.dispatch_us_per_wave)),
+                    ("wave_size", Json::num(g.wave_size)),
+                    ("dispatch_setup_ms", Json::num(g.dispatch_setup_ms)),
+                ]),
+            ),
+            (
+                "cpu",
+                Json::object(vec![
+                    ("clock_ghz", Json::num(self.cpu.clock_ghz)),
+                    ("cycles_per_mac", Json::num(self.cpu.cycles_per_mac)),
+                ]),
+            ),
+            (
+                "power",
+                Json::object(vec![
+                    ("baseline_mw", Json::num(self.power.baseline_mw)),
+                    ("seq_diff_mw", Json::num(self.power.seq_diff_mw)),
+                    ("precise_par_diff_mw", Json::num(self.power.precise_par_diff_mw)),
+                    ("imprecise_par_diff_mw", Json::num(self.power.imprecise_par_diff_mw)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Parse a profile from the JSON schema [`to_json`] emits.
+    ///
+    /// The profile's identity fields are `&'static str` (builtins are
+    /// literals), so parsed strings are interned with `Box::leak` — a
+    /// bounded leak: profiles are loaded a handful of times per
+    /// process, never per request.
+    pub fn from_json(v: &Json) -> Result<DeviceProfile> {
+        fn intern(v: &Json, key: &str) -> Result<&'static str> {
+            let s = v
+                .get(key)
+                .and_then(Json::as_str)
+                .with_context(|| format!("device profile: missing string '{key}'"))?;
+            Ok(Box::leak(s.to_string().into_boxed_str()))
+        }
+        fn num(v: &Json, section: &str, key: &str) -> Result<f64> {
+            let n = v
+                .get(key)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("device profile: missing number '{section}.{key}'"))?;
+            if !n.is_finite() {
+                anyhow::bail!("device profile: '{section}.{key}' is not finite");
+            }
+            Ok(n)
+        }
+        let g = v.get("gpu").context("device profile: missing 'gpu'")?;
+        let c = v.get("cpu").context("device profile: missing 'cpu'")?;
+        let p = v.get("power").context("device profile: missing 'power'")?;
+        Ok(DeviceProfile {
+            name: intern(v, "name")?,
+            id: intern(v, "id")?,
+            soc: intern(v, "soc")?,
+            gpu_name: intern(v, "gpu_name")?,
+            gpu: GpuModel {
+                clock_ghz: num(g, "gpu", "clock_ghz")?,
+                vec4_units: num(g, "gpu", "vec4_units")?,
+                dot_cycles_precise: num(g, "gpu", "dot_cycles_precise")?,
+                dot_cycles_imprecise: num(g, "gpu", "dot_cycles_imprecise")?,
+                thread_setup_cycles: num(g, "gpu", "thread_setup_cycles")?,
+                latency_hiding_threads: num(g, "gpu", "latency_hiding_threads")?,
+                full_occupancy_g: num(g, "gpu", "full_occupancy_g")?,
+                reg_pressure_slope: num(g, "gpu", "reg_pressure_slope")?,
+                mem_bw_gb_s: num(g, "gpu", "mem_bw_gb_s")?,
+                tex_cache_cap: num(g, "gpu", "tex_cache_cap")?,
+                weight_cache_reuse: num(g, "gpu", "weight_cache_reuse")?,
+                kernel_launch_us: num(g, "gpu", "kernel_launch_us")?,
+                dispatch_us_per_wave: num(g, "gpu", "dispatch_us_per_wave")?,
+                wave_size: num(g, "gpu", "wave_size")?,
+                dispatch_setup_ms: num(g, "gpu", "dispatch_setup_ms")?,
+            },
+            cpu: SeqCpuModel {
+                clock_ghz: num(c, "cpu", "clock_ghz")?,
+                cycles_per_mac: num(c, "cpu", "cycles_per_mac")?,
+            },
+            power: PowerModel {
+                baseline_mw: num(p, "power", "baseline_mw")?,
+                seq_diff_mw: num(p, "power", "seq_diff_mw")?,
+                precise_par_diff_mw: num(p, "power", "precise_par_diff_mw")?,
+                imprecise_par_diff_mw: num(p, "power", "imprecise_par_diff_mw")?,
+            },
         })
     }
+}
+
+/// Profiles registered at runtime (calibrated profiles loaded from
+/// JSON via `--device-profile` / `MCN_DEVICE_PROFILE`).  A separate
+/// namespace from [`DeviceProfile::all`]: registering never changes
+/// the paper-table device set.
+static REGISTERED: RwLock<Vec<DeviceProfile>> = RwLock::new(Vec::new());
+
+/// Register (or replace, by id) a runtime device profile so
+/// [`DeviceProfile::by_id`] — and with it fleet spec atoms — can
+/// resolve it.
+pub fn register_profile(profile: DeviceProfile) {
+    if let Ok(mut reg) = REGISTERED.write() {
+        reg.retain(|d| d.id != profile.id);
+        reg.push(profile);
+    }
+}
+
+/// Snapshot of the runtime-registered profiles.
+pub fn registered_profiles() -> Vec<DeviceProfile> {
+    REGISTERED.read().map(|reg| reg.clone()).unwrap_or_default()
 }
 
 #[cfg(test)]
@@ -277,6 +465,61 @@ mod tests {
         assert_eq!(DeviceProfile::by_id("Nexus 5").unwrap().id, "n5");
         assert_eq!(DeviceProfile::by_id("nexus-6p").unwrap().id, "6p");
         assert!(DeviceProfile::by_id("pixel").is_none());
+    }
+
+    #[test]
+    fn profile_json_round_trips() {
+        for d in DeviceProfile::all().into_iter().chain([DeviceProfile::host()]) {
+            let text = d.to_json().to_string();
+            let back = DeviceProfile::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.name, d.name);
+            assert_eq!(back.id, d.id);
+            assert_eq!(back.gpu.clock_ghz, d.gpu.clock_ghz);
+            assert_eq!(back.gpu.dispatch_setup_ms, d.gpu.dispatch_setup_ms);
+            assert_eq!(back.cpu.cycles_per_mac, d.cpu.cycles_per_mac);
+            assert_eq!(back.power.imprecise_par_diff_mw, d.power.imprecise_par_diff_mw);
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_missing_fields() {
+        let v = Json::parse(r#"{"name": "x", "id": "x", "soc": "x", "gpu_name": "x"}"#).unwrap();
+        assert!(DeviceProfile::from_json(&v).is_err());
+        let mut d = DeviceProfile::host().to_json();
+        if let Json::Object(pairs) = &mut d {
+            pairs.retain(|(k, _)| k != "power");
+        }
+        assert!(DeviceProfile::from_json(&d).is_err());
+    }
+
+    #[test]
+    fn registered_profiles_resolve_without_entering_all() {
+        let mut p = DeviceProfile::host();
+        p.id = "calibtest";
+        p.name = "Calib Test Host";
+        register_profile(p);
+        assert_eq!(DeviceProfile::by_id("calibtest").unwrap().name, "Calib Test Host");
+        assert_eq!(DeviceProfile::all().len(), 3, "all() must stay builtin-only");
+        // registering again with the same id replaces, not duplicates
+        let mut p2 = DeviceProfile::host();
+        p2.id = "calibtest";
+        p2.name = "Calib Test Host v2";
+        register_profile(p2);
+        assert_eq!(DeviceProfile::by_id("calibtest").unwrap().name, "Calib Test Host v2");
+        assert_eq!(
+            registered_profiles().iter().filter(|d| d.id == "calibtest").count(),
+            1
+        );
+    }
+
+    #[test]
+    fn host_profile_is_not_a_paper_device() {
+        let h = DeviceProfile::host();
+        assert_eq!(h.id, "host");
+        assert!(DeviceProfile::all().iter().all(|d| d.id != "host"));
+        // no fp16 rail: both precision modes cost the same per dot
+        assert_eq!(h.gpu.dot_cycles_precise, h.gpu.dot_cycles_imprecise);
+        assert_eq!(h.power.precise_par_diff_mw, h.power.imprecise_par_diff_mw);
     }
 
     #[test]

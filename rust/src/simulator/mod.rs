@@ -26,5 +26,7 @@ pub mod tables;
 
 pub use autotune::{autotune_layer, autotune_network, GranularityCurve, NetworkPlan};
 pub use cost::{conv_gpu_time, conv_seq_time, network_time, LayerTime, RunMode};
-pub use device::{DeviceProfile, GpuModel, Precision, SeqCpuModel};
+pub use device::{
+    register_profile, registered_profiles, DeviceProfile, GpuModel, Precision, SeqCpuModel,
+};
 pub use power::{energy_joules, RunPower};
