@@ -5,6 +5,12 @@
 //! baseline rails) than a statically over-provisioned topology sized
 //! for the peak, while still meeting the SLO.
 //!
+//! A second scenario gates the **degrade chain**: under a tight fleet
+//! joule budget the posture walks fp32 -> fp16 -> int8, and the full
+//! chain must finish the trace with *lower total joules* than a fleet
+//! capped at fp16 (`max_degrade_steps = 1`), at a p95 no worse —
+//! quantization pays for itself in both axes, as a gated number.
+//!
 //! Everything runs in virtual time, so every asserted number is
 //! deterministic across machines.  The scenario runs once per seed in
 //! [`bench_seeds`]; claim asserts fire on the primary seed, every seed
@@ -166,12 +172,114 @@ fn run_seed(seed: u64) -> SeedMetrics {
     }
 }
 
+/// Steady trace for the degrade-chain scenario: long enough that the
+/// fleet budget thresholds fire mid-trace, light enough (~50% fp32
+/// utilization on the two-replica fleet) that nothing sheds.
+fn chain_trace(seed: u64) -> Trace {
+    Trace::phases(&[(300, Arrival::Poisson { rate_per_s: 2.0 })], 0.0, seed)
+}
+
+/// Run the joule-pressured trace on a two-replica fp32 fleet whose
+/// budget posture may walk `max_steps` tiers down the precision chain.
+fn run_pressured(
+    seed: u64,
+    budget_j: f64,
+    max_steps: u8,
+) -> (mobile_convnet::fleet::FleetReport, u8) {
+    let trace = chain_trace(seed);
+    let n = trace.entries.len() as u64;
+    let mut asc = AutoscaleConfig::new(SLO_P95_MS);
+    asc.fleet_budget_j = Some(budget_j);
+    asc.min_replicas = 2;
+    asc.tick_ms = 250.0;
+    asc.cooldown_ticks = 1;
+    asc.max_degrade_steps = max_steps;
+    let cfg = FleetConfig::parse_spec("1xs7,1xn5", Policy::LeastLoaded)
+        .unwrap()
+        .with_autoscale(asc)
+        .with_seed(seed);
+    let fleet = Fleet::new(cfg);
+    let report = run_trace(&fleet, &trace, &[]);
+    assert_eq!(
+        report.completed + report.shed + report.lost + report.expired,
+        n,
+        "degrade-chain conservation (seed {seed}, max_steps {max_steps}): {report:?}"
+    );
+    let posture = fleet.autoscale_report().expect("autoscaler on").posture_steps;
+    (report, posture)
+}
+
+struct ChainMetrics {
+    chain_total_j: f64,
+    chain_over_fp16_j: f64,
+    chain_p95_over_fp16: f64,
+}
+
+fn run_chain_seed(seed: u64) -> ChainMetrics {
+    let primary = seed == PRIMARY_BENCH_SEED;
+    // Size the joule pressure off the fleet's own appetite: a dry run
+    // with no autoscaler prices the whole trace at fp32, and the
+    // budget is set at 85% of that — enough headroom that the chain
+    // finishes inside it, tight enough that both degrade thresholds
+    // fire mid-trace.
+    let dry = {
+        let cfg = FleetConfig::parse_spec("1xs7,1xn5", Policy::LeastLoaded)
+            .unwrap()
+            .with_seed(seed);
+        run_trace(&Fleet::new(cfg), &chain_trace(seed), &[])
+    };
+    let budget_j = 0.85 * dry.total_energy_j;
+    let (chain, chain_posture) = run_pressured(seed, budget_j, 2);
+    let (fp16_only, fp16_posture) = run_pressured(seed, budget_j, 1);
+    let chain_p95 = chain.p95_ms.expect("completions exist");
+    let fp16_p95 = fp16_only.p95_ms.expect("completions exist");
+    if primary {
+        println!(
+            "degrade chain: full chain {:.1} J p95 {:.0} ms (posture {chain_posture}) vs \
+             fp16-only {:.1} J p95 {:.0} ms (posture {fp16_posture})",
+            chain.total_energy_j, chain_p95, fp16_only.total_energy_j, fp16_p95
+        );
+        // The budget must actually walk the postures: the full chain
+        // reaches int8, the capped fleet stops at fp16.
+        assert_eq!(chain_posture, 2, "the chain fleet must end quantized");
+        assert_eq!(fp16_posture, 1, "the capped fleet must stop at fp16");
+        // "Completes the trace" is literal: the chain's int8 tail
+        // stretches the budget far enough that the front door never
+        // closes and nothing is dropped.
+        assert_eq!(
+            chain.shed + chain.lost + chain.expired,
+            0,
+            "the chain fleet must complete the pressured trace: {chain:?}"
+        );
+        // The chain claim: finishing the trace on the quantized tier
+        // costs fewer joules than stopping at fp16, at a p95 no worse.
+        assert!(
+            chain.total_energy_j < fp16_only.total_energy_j,
+            "chain {:.1} J must be strictly below fp16-only {:.1} J",
+            chain.total_energy_j,
+            fp16_only.total_energy_j
+        );
+        assert!(
+            chain_p95 <= fp16_p95,
+            "chain p95 {chain_p95:.1} ms must be no worse than fp16-only {fp16_p95:.1} ms"
+        );
+    }
+    ChainMetrics {
+        chain_total_j: chain.total_energy_j,
+        chain_over_fp16_j: chain.total_energy_j / fp16_only.total_energy_j,
+        chain_p95_over_fp16: chain_p95 / fp16_p95.max(1e-9),
+    }
+}
+
 fn main() {
     let mut p95 = Vec::new();
     let mut auto_j = Vec::new();
     let mut shed = Vec::new();
     let mut static_j = Vec::new();
     let mut ratio = Vec::new();
+    let mut chain_j = Vec::new();
+    let mut chain_ratio_j = Vec::new();
+    let mut chain_ratio_p95 = Vec::new();
     for seed in bench_seeds() {
         let m = run_seed(seed);
         p95.push(m.autoscaled_p95_ms);
@@ -179,6 +287,10 @@ fn main() {
         shed.push(m.autoscaled_shed);
         static_j.push(m.static_total_j);
         ratio.push(m.autoscaled_total_j / m.static_total_j);
+        let c = run_chain_seed(seed);
+        chain_j.push(c.chain_total_j);
+        chain_ratio_j.push(c.chain_over_fp16_j);
+        chain_ratio_p95.push(c.chain_p95_over_fp16);
     }
     println!("\ncollected {} seed sample(s) per metric", p95.len());
 
@@ -192,6 +304,9 @@ fn main() {
             ("autoscaled_shed", &shed),
             ("static_total_j", &static_j),
             ("autoscaled_over_static_j", &ratio),
+            ("chain_total_j", &chain_j),
+            ("chain_over_fp16_j", &chain_ratio_j),
+            ("chain_p95_over_fp16", &chain_ratio_p95),
         ],
     )
     .expect("bench summary write");

@@ -3,12 +3,17 @@
 //! SqueezeNet wall-clock, then report the simulator's per-layer
 //! prediction error as a number the CI gate can watch.
 //!
-//! - **median per-layer error < 50%** — the quick (56x56) calibration
-//!   fits the Galaxy S7 template by a single median ratio α; after the
-//!   fit, re-predicting every macro layer through the cost model must
-//!   land within 50% of the measurement at the median layer.  This is
-//!   the headline acceptance number: "simulator error" stops being a
-//!   matter of opinion and becomes a gated metric;
+//! - **median per-layer error < 50%, per tier** — the quick (56x56)
+//!   calibration fits the Galaxy S7 template by a single median ratio
+//!   α, once for the vectorized fp32 path and once for the quantized
+//!   int8 kernels; after each fit, re-predicting every macro layer
+//!   through the cost model must land within 50% of the measurement
+//!   at the median layer.  This is the headline acceptance number:
+//!   "simulator error" stops being a matter of opinion and becomes a
+//!   gated metric;
+//! - **int8 is actually faster** — the quantized whole-net median must
+//!   beat the fp32 whole-net median on the primary seed, so the int8
+//!   tier's speedup claim is a gated number, not a comment;
 //! - **native fleet conservation** — a replica of kind `Native` runs
 //!   real inference per dispatch; the terminal-outcome sum must hold
 //!   exactly even though its service times are measured, not modeled.
@@ -23,7 +28,7 @@
 //! oversight (see `_note` in `BENCH_BASELINE.json`).
 
 use mobile_convnet::fleet::{Arrival, Fleet, FleetConfig, Policy};
-use mobile_convnet::runtime::calibrate::{calibrate, CalibrationConfig};
+use mobile_convnet::runtime::calibrate::{calibrate_tiers, CalibrationConfig};
 use mobile_convnet::util::bench::{bench_seeds, write_json_distributions, PRIMARY_BENCH_SEED};
 
 /// The acceptance bound on the quick profile's median per-layer error.
@@ -34,13 +39,18 @@ fn main() {
     let mut max_err = Vec::new();
     let mut setup_ms = Vec::new();
     let mut net_ms = Vec::new();
+    let mut i8_median_err = Vec::new();
+    let mut i8_max_err = Vec::new();
+    let mut i8_net_ms = Vec::new();
+    let mut i8_over_fp32 = Vec::new();
 
     for seed in bench_seeds() {
         let mut cfg = CalibrationConfig::quick();
         cfg.seed = seed;
-        let report = calibrate(&cfg).expect("quick calibration runs");
+        let tiers = calibrate_tiers(&cfg).expect("quick calibration runs");
+        let report = &tiers.fp32;
         println!(
-            "seed {seed}: alpha {:.4}, net {:.3} ms, per-layer error median {:.2}% max {:.2}%, \
+            "seed {seed}: fp32 alpha {:.4}, net {:.3} ms, per-layer error median {:.2}% max {:.2}%, \
              dispatch setup {:.4} ms",
             report.alpha,
             report.native_net_ms,
@@ -48,22 +58,53 @@ fn main() {
             report.max_error_pct,
             report.dispatch_setup_ms
         );
+        println!(
+            "seed {seed}: int8 alpha {:.4}, net {:.3} ms, per-layer error median {:.2}% max {:.2}%, \
+             speedup over fp32 {:.2}x",
+            tiers.int8.alpha,
+            tiers.int8.native_net_ms,
+            tiers.int8.median_error_pct,
+            tiers.int8.max_error_pct,
+            report.native_net_ms / tiers.int8.native_net_ms.max(1e-9)
+        );
         if seed == PRIMARY_BENCH_SEED {
             // The headline claim: after the α fit, the simulator
             // predicts this host's per-layer times to within 50% at
-            // the median layer.
+            // the median layer — on both precision tiers.
             assert!(
                 report.median_error_pct < MAX_MEDIAN_ERROR_PCT,
-                "median per-layer prediction error {:.2}% must stay under {MAX_MEDIAN_ERROR_PCT}%",
+                "fp32 median per-layer prediction error {:.2}% must stay under {MAX_MEDIAN_ERROR_PCT}%",
                 report.median_error_pct
             );
             assert!(report.alpha > 0.0 && report.alpha.is_finite());
             assert_eq!(report.profile.id, "host", "the fitted profile is loadable by id");
+            assert!(
+                tiers.int8.median_error_pct < MAX_MEDIAN_ERROR_PCT,
+                "int8 median per-layer prediction error {:.2}% must stay under {MAX_MEDIAN_ERROR_PCT}%",
+                tiers.int8.median_error_pct
+            );
+            assert!(tiers.int8.alpha > 0.0 && tiers.int8.alpha.is_finite());
+            assert_eq!(
+                tiers.int8.profile.id, "host-int8",
+                "the fitted int8 profile registers beside the fp32 one"
+            );
+            // The quantized tier must actually be faster than the
+            // vectorized fp32 path on the primary seed.
+            assert!(
+                tiers.int8.native_net_ms < report.native_net_ms,
+                "int8 whole-net median {:.3} ms must beat fp32 {:.3} ms",
+                tiers.int8.native_net_ms,
+                report.native_net_ms
+            );
         }
         median_err.push(report.median_error_pct);
         max_err.push(report.max_error_pct);
         setup_ms.push(report.dispatch_setup_ms);
         net_ms.push(report.native_net_ms);
+        i8_median_err.push(tiers.int8.median_error_pct);
+        i8_max_err.push(tiers.int8.max_error_pct);
+        i8_net_ms.push(tiers.int8.native_net_ms);
+        i8_over_fp32.push(tiers.int8.native_net_ms / report.native_net_ms.max(1e-9));
     }
     println!("collected {} seed sample(s) per metric", median_err.len());
 
@@ -105,6 +146,10 @@ fn main() {
             ("per_layer_error_max_pct", &max_err),
             ("dispatch_setup_ms", &setup_ms),
             ("native_net_ms", &net_ms),
+            ("int8_per_layer_error_median_pct", &i8_median_err),
+            ("int8_per_layer_error_max_pct", &i8_max_err),
+            ("int8_net_ms", &i8_net_ms),
+            ("int8_over_fp32_net", &i8_over_fp32),
         ],
     )
     .expect("bench summary write");

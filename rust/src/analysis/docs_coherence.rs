@@ -1,0 +1,256 @@
+//! Lint: **docs/tree coherence**.
+//!
+//! The prose under `rust/docs/` is the crate's architecture record:
+//! it names files (`src/fleet/native.rs`), directories (`src/fleet/`),
+//! and symbols (`Precision::Int8`) that readers will grep for.  Those
+//! references rot silently — a rename leaves the docs pointing at
+//! nothing, and no test notices.  This lint makes the references
+//! load-bearing: every backticked *path claim* in a doc must exist on
+//! disk, and every backticked *symbol claim* must name an identifier
+//! that actually appears somewhere in the scanned source tree.
+//!
+//! Claim extraction is deliberately conservative (prose must stay
+//! writable):
+//!
+//! - only inline single-backtick spans count; fenced code blocks are
+//!   skipped wholesale (they hold shell transcripts and JSON, not
+//!   reference claims);
+//! - a **path claim** is a whitespace-free span containing `/` that
+//!   starts with one of [`PATH_PREFIXES`] — `bench_out/foo.json`,
+//!   `fleet_autoscale/chain_total_j`, and `n5@fp16` are not claims;
+//! - a **symbol claim** is a whitespace-free span shaped like
+//!   `Ident::Ident(::Ident)*`, optionally ending in `()`; only its
+//!   last segment is resolved (the qualifier may be a module alias or
+//!   `std`), so `WeightStore::synthetic` holds while a span with
+//!   arguments or generics inside is prose, not a claim.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use super::{Finding, Lint, SourceTree};
+
+/// A backticked span starting with one of these (and containing `/`)
+/// claims a repo path.  Checked both repo-relative and `rust/`-crate
+/// relative, file or directory.
+pub const PATH_PREFIXES: &[&str] =
+    &["src/", "rust/", "benches/", "tests/", "docs/", "examples/", ".github/", "python/"];
+
+/// Directories never walked for the existence set.
+const SKIP_DIRS: &[&str] = &[".git", "target", "bench_out", "node_modules"];
+
+/// What a backticked span claims about the tree.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ClaimKind {
+    /// A file or directory path that must exist on disk.
+    Path,
+    /// A `Qualifier::name` symbol whose last segment must appear as an
+    /// identifier in the scanned source tree.
+    Symbol,
+}
+
+/// One reference claim extracted from a doc, with its line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Claim {
+    pub kind: ClaimKind,
+    pub text: String,
+    pub line: usize,
+}
+
+/// One markdown file under lint, with its display path.
+pub struct DocFile {
+    /// Repo-relative path with forward slashes (`rust/docs/FOO.md`).
+    pub rel: String,
+    pub text: String,
+}
+
+fn is_ident(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Classify one inline-code span; `None` means "prose, not a claim".
+fn classify(span: &str) -> Option<ClaimKind> {
+    if span.is_empty() || span.chars().any(|c| c.is_whitespace()) {
+        return None;
+    }
+    if span.contains("::") {
+        let body = span.strip_suffix("()").unwrap_or(span);
+        let segments: Vec<&str> = body.split("::").collect();
+        if segments.len() >= 2 && segments.iter().all(|s| is_ident(s)) {
+            return Some(ClaimKind::Symbol);
+        }
+        return None;
+    }
+    if span.contains('/') && PATH_PREFIXES.iter().any(|p| span.starts_with(p)) {
+        return Some(ClaimKind::Path);
+    }
+    None
+}
+
+/// Extract every path/symbol claim from one markdown text.
+pub fn doc_claims(text: &str) -> Vec<Claim> {
+    let mut out = Vec::new();
+    let mut in_fence = false;
+    for (idx, line) in text.lines().enumerate() {
+        if line.trim_start().starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if in_fence {
+            continue;
+        }
+        let mut rest = line;
+        while let Some(open) = rest.find('`') {
+            let after = &rest[open + 1..];
+            let Some(close) = after.find('`') else { break };
+            let span = &after[..close];
+            if let Some(kind) = classify(span) {
+                out.push(Claim { kind, text: span.to_string(), line: idx + 1 });
+            }
+            rest = &after[close + 1..];
+        }
+    }
+    out
+}
+
+/// See the module docs.
+pub struct DocsCoherence {
+    pub docs: Vec<DocFile>,
+    /// Repo-relative file paths that exist (forward slashes).
+    pub files: BTreeSet<String>,
+    /// Repo-relative directory paths that exist (no trailing slash).
+    pub dirs: BTreeSet<String>,
+}
+
+impl DocsCoherence {
+    pub fn new(docs: Vec<DocFile>, files: BTreeSet<String>, dirs: BTreeSet<String>) -> Self {
+        DocsCoherence { docs, files, dirs }
+    }
+
+    /// Load every `rust/docs/*.md` and the repo's path-existence sets.
+    pub fn load(repo_root: &Path) -> Result<DocsCoherence, String> {
+        let docs_dir = repo_root.join("rust").join("docs");
+        let mut docs = Vec::new();
+        if docs_dir.is_dir() {
+            let mut entries: Vec<std::path::PathBuf> = std::fs::read_dir(&docs_dir)
+                .map_err(|e| format!("cannot read {}: {e}", docs_dir.display()))?
+                .map(|e| e.map(|e| e.path()))
+                .collect::<Result<_, _>>()
+                .map_err(|e| format!("cannot read {}: {e}", docs_dir.display()))?;
+            entries.sort();
+            for p in entries {
+                if p.extension().and_then(|e| e.to_str()) != Some("md") {
+                    continue;
+                }
+                let text = std::fs::read_to_string(&p)
+                    .map_err(|e| format!("cannot read {}: {e}", p.display()))?;
+                let rel = p
+                    .strip_prefix(repo_root)
+                    .unwrap_or(p.as_path())
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                docs.push(DocFile { rel, text });
+            }
+        }
+        let mut files = BTreeSet::new();
+        let mut dirs = BTreeSet::new();
+        collect_paths(repo_root, repo_root, &mut files, &mut dirs)
+            .map_err(|e| format!("walking {}: {e}", repo_root.display()))?;
+        Ok(DocsCoherence { docs, files, dirs })
+    }
+
+    /// Does a claimed path exist — as a file or directory, repo- or
+    /// crate-relative?
+    fn path_exists(&self, claim: &str) -> bool {
+        let q = claim.trim_end_matches('/');
+        let crate_rel = format!("rust/{q}");
+        self.files.contains(q)
+            || self.files.contains(&crate_rel)
+            || self.dirs.contains(q)
+            || self.dirs.contains(&crate_rel)
+    }
+}
+
+fn collect_paths(
+    dir: &Path,
+    root: &Path,
+    files: &mut BTreeSet<String>,
+    dirs: &mut BTreeSet<String>,
+) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let p = entry?.path();
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p.as_path())
+            .to_string_lossy()
+            .replace('\\', "/");
+        if p.is_dir() {
+            let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if SKIP_DIRS.contains(&name) {
+                continue;
+            }
+            dirs.insert(rel);
+            collect_paths(&p, root, files, dirs)?;
+        } else {
+            files.insert(rel);
+        }
+    }
+    Ok(())
+}
+
+impl Lint for DocsCoherence {
+    fn name(&self) -> &'static str {
+        "docs-coherence"
+    }
+
+    fn check(&self, tree: &SourceTree) -> Vec<Finding> {
+        let idents: BTreeSet<&str> = tree
+            .files
+            .iter()
+            .flat_map(|f| f.scan.tokens.iter())
+            .filter_map(|t| t.ident())
+            .collect();
+        let mut out = Vec::new();
+        for doc in &self.docs {
+            for claim in doc_claims(&doc.text) {
+                match claim.kind {
+                    ClaimKind::Path => {
+                        if !self.path_exists(&claim.text) {
+                            out.push(Finding {
+                                lint: self.name(),
+                                file: doc.rel.clone(),
+                                line: claim.line,
+                                message: format!(
+                                    "doc references path `{}` which does not exist \
+                                     in the repo",
+                                    claim.text
+                                ),
+                            });
+                        }
+                    }
+                    ClaimKind::Symbol => {
+                        let body = claim.text.strip_suffix("()").unwrap_or(&claim.text);
+                        let last = body.rsplit("::").next().unwrap_or(body);
+                        if !idents.contains(last) {
+                            out.push(Finding {
+                                lint: self.name(),
+                                file: doc.rel.clone(),
+                                line: claim.line,
+                                message: format!(
+                                    "doc references symbol `{}` but `{last}` appears \
+                                     nowhere in the source tree",
+                                    claim.text
+                                ),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}

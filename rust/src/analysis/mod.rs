@@ -6,7 +6,7 @@
 //! was previously guarded only at runtime, by tests that had to happen
 //! to exercise the broken path.  This module is the tooling layer that
 //! checks those invariants *at lint time*, on every commit, before a
-//! single bench runs: a lightweight lexer ([`lexer`]) plus four
+//! single bench runs: a lightweight lexer ([`lexer`]) plus five
 //! repo-native lints, each grounded in a real past bug class:
 //!
 //! | lint | module | guards against |
@@ -15,6 +15,7 @@
 //! | `conservation-completeness` | [`conservation`] | a new terminal outcome added to `FleetReport` without its `FleetMetrics` mirror and assertion-site updates |
 //! | `panic-budget` | [`panic_budget`] | panic-capable patterns (`unwrap`/`expect`/panic macros/indexing) accreting in the dispatch spine; ratcheted by `rust/analyze_budget.json` |
 //! | `bench-coherence` | [`bench_coherence`] | bench metric names drifting from `BENCH_BASELINE.json` (caught statically instead of twenty minutes into a bench run) |
+//! | `docs-coherence` | [`docs_coherence`] | file paths and `Qualifier::symbol` references in `rust/docs/*.md` rotting as the tree they describe moves on |
 //!
 //! The analyzer is self-contained (no dependencies beyond the crate's
 //! own hand-rolled JSON) and runs as `cargo run --bin analyze`; CI
@@ -39,6 +40,7 @@
 
 pub mod bench_coherence;
 pub mod conservation;
+pub mod docs_coherence;
 pub mod lexer;
 pub mod panic_budget;
 pub mod purity;
@@ -150,6 +152,7 @@ mod tests {
 
     use super::bench_coherence::{self, BenchCoherence};
     use super::conservation::ConservationCompleteness;
+    use super::docs_coherence::{doc_claims, ClaimKind, DocFile, DocsCoherence};
     use super::panic_budget::{self, PanicBudget, PanicBudgetLint};
     use super::purity::VirtualTimePurity;
     use super::{lexer, Lint, SourceFile, SourceTree};
@@ -341,6 +344,54 @@ mod tests {
             .any(|f| f.message.contains("`fixture_bench/stale_metric`") && f.file == "BASELINE"));
     }
 
+    #[test]
+    fn docs_fixture_claims_and_findings() {
+        let good = include_str!("fixtures/docs_good.md");
+        let bad = include_str!("fixtures/docs_bad.md");
+
+        // Extraction: four claims from the good doc, fenced block and
+        // prose spans excluded.
+        let claims = doc_claims(good);
+        assert_eq!(claims.len(), 4, "{claims:?}");
+        assert_eq!(claims[0].text, "src/fleet/fixture.rs");
+        assert_eq!(claims[0].kind, ClaimKind::Path);
+        assert_eq!(claims[0].line, 3);
+        assert_eq!(claims[1].text, "src/fleet/");
+        assert_eq!(claims[2].text, "Widget::build()");
+        assert_eq!(claims[2].kind, ClaimKind::Symbol);
+        assert_eq!(claims[3].text, "fixture::tier_label");
+        assert!(claims.iter().all(|c| c.line < 9), "fence leaked a claim: {claims:?}");
+
+        let tree = fixture_tree(
+            "src/fleet/fixture.rs",
+            "pub struct Widget;\nimpl Widget { pub fn build() {} }\npub fn tier_label() {}\n",
+        );
+        let files = ["rust/src/fleet/fixture.rs"].iter().map(|s| s.to_string()).collect();
+        let dirs = ["rust/src/fleet"].iter().map(|s| s.to_string()).collect();
+        let lint = DocsCoherence::new(
+            vec![
+                DocFile { rel: "rust/docs/GOOD.md".to_string(), text: good.to_string() },
+                DocFile { rel: "rust/docs/BAD.md".to_string(), text: bad.to_string() },
+            ],
+            files,
+            dirs,
+        );
+        let findings = lint.check(&tree);
+        let got: Vec<(usize, &str)> =
+            findings.iter().map(|f| (f.line, f.file.as_str())).collect();
+        assert_eq!(
+            got,
+            vec![
+                (4, "rust/docs/BAD.md"),
+                (5, "rust/docs/BAD.md"),
+                (7, "rust/docs/BAD.md"),
+                (8, "rust/docs/BAD.md"),
+            ],
+            "{findings:?}"
+        );
+        assert!(findings[2].message.contains("`Widget::vanished()`"), "{findings:?}");
+    }
+
     /// The committed tree is clean under every lint — no false
     /// positives, and the checked-in budget matches reality.  This is
     /// the same pass CI's `analyze` job runs via the binary.
@@ -360,6 +411,11 @@ mod tests {
         let coherence = BenchCoherence::from_baseline(&baseline).expect("baseline parses");
         let bc = coherence.check(&tree);
         assert!(bc.is_empty(), "{bc:?}");
+
+        let docs = DocsCoherence::load(&root.join("..")).expect("docs load");
+        assert!(!docs.docs.is_empty(), "rust/docs must hold the architecture record");
+        let dc = docs.check(&tree);
+        assert!(dc.is_empty(), "{dc:?}");
 
         let budget = PanicBudget::load(&root.join("analyze_budget.json")).expect("budget parses");
         let pb = PanicBudgetLint { budget: budget.clone() }.check(&tree);

@@ -5,10 +5,11 @@
 //! cargo run --bin analyze -- --update-budget  # rewrite rust/analyze_budget.json
 //! ```
 //!
-//! Runs the four lints in [`mobile_convnet::analysis`] over `src/`,
+//! Runs the five lints in [`mobile_convnet::analysis`] over `src/`,
 //! `tests/`, and `benches/`: virtual-time purity, conservation-site
-//! completeness, the ratcheted panic budget, and bench/baseline
-//! coherence.  Findings print as `file:line: [lint] message`; a loose
+//! completeness, the ratcheted panic budget, bench/baseline
+//! coherence, and docs/tree coherence over `rust/docs/*.md`.
+//! Findings print as `file:line: [lint] message`; a loose
 //! (over-generous) panic budget prints warnings but exits 0.
 
 use std::path::PathBuf;
@@ -16,6 +17,7 @@ use std::process::ExitCode;
 
 use mobile_convnet::analysis::bench_coherence::BenchCoherence;
 use mobile_convnet::analysis::conservation::ConservationCompleteness;
+use mobile_convnet::analysis::docs_coherence::DocsCoherence;
 use mobile_convnet::analysis::panic_budget::{self, PanicBudget, PanicBudgetLint};
 use mobile_convnet::analysis::purity::VirtualTimePurity;
 use mobile_convnet::analysis::{Finding, Lint, SourceTree};
@@ -76,6 +78,16 @@ fn main() -> ExitCode {
         Err(e) => findings.push(Finding {
             lint: "bench-coherence",
             file: baseline_path.display().to_string(),
+            line: 1,
+            message: e,
+        }),
+    }
+
+    match DocsCoherence::load(&rust_root.join("..")) {
+        Ok(lint) => findings.extend(lint.check(&tree)),
+        Err(e) => findings.push(Finding {
+            lint: "docs-coherence",
+            file: "rust/docs".to_string(),
             line: 1,
             message: e,
         }),

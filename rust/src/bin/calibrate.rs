@@ -1,6 +1,7 @@
-//! Host calibration CLI: measure SqueezeNet on this machine, fit a
-//! [`DeviceProfile`] against the Galaxy S7 cost-model template, and
-//! write the fitted profile as loadable JSON.
+//! Host calibration CLI: measure SqueezeNet on this machine — the
+//! fp32 vectorized path **and** the quantized int8 kernels — fit one
+//! [`DeviceProfile`] per tier against the Galaxy S7 cost-model
+//! template, and write the fitted profiles as loadable JSON.
 //!
 //! ```sh
 //! cargo run --release --bin calibrate -- --quick --out host_profile.json
@@ -8,35 +9,40 @@
 //! ```
 //!
 //! `--quick` runs the 56x56 configuration (seconds — the CI lane);
-//! the default is the paper-sized 224x224 input.  The emitted profile
+//! the default is the paper-sized 224x224 input.  Each emitted profile
 //! loads back through `DeviceProfile::from_json` /
 //! `register_profile`, e.g. via `mobile-convnet --device-profile
 //! host_profile.json`, so the simulator can be driven as "a device
-//! that behaves like this host" and its per-layer prediction error is
-//! a number you can watch (printed below, gated in the
+//! that behaves like this host" (`host` for fp32, `host-int8` for the
+//! quantized tier) and its per-layer prediction error is a number you
+//! can watch (printed below, gated per tier in the
 //! `native_vs_simulated` bench).
 //!
 //! [`DeviceProfile`]: mobile_convnet::simulator::DeviceProfile
 
 use std::process::ExitCode;
 
-use mobile_convnet::runtime::calibrate::{calibrate, CalibrationConfig, CalibrationReport};
+use mobile_convnet::runtime::calibrate::{calibrate_tiers, CalibrationConfig, CalibrationReport};
 use mobile_convnet::util::cli::Args;
+use mobile_convnet::util::json::Json;
 
 const USAGE: &str = "usage: calibrate [--quick] [--reps N] [--seed N] \
-[--out PROFILE.json] [--report REPORT.json]
+[--out PROFILE.json] [--out-int8 PROFILE.json] [--report REPORT.json]
 
-  --quick    56x56 input, 5 reps (CI-sized); default is 224x224, 10 reps
-  --reps N   override the timed repetition count
-  --seed N   synthetic weight/image seed (default 42)
-  --out      where to write the fitted DeviceProfile JSON
-             (default host_profile.json)
-  --report   also write the full calibration report (per-layer rows)";
+  --quick     56x56 input, 5 reps (CI-sized); default is 224x224, 10 reps
+  --reps N    override the timed repetition count
+  --seed N    synthetic weight/image seed (default 42)
+  --out       where to write the fitted fp32 DeviceProfile JSON
+              (default host_profile.json)
+  --out-int8  where to write the fitted int8 DeviceProfile JSON
+              (default host_profile_int8.json)
+  --report    also write the full two-tier calibration report
+              (per-layer rows for fp32 and int8)";
 
 fn render(report: &CalibrationReport) {
     println!(
-        "calibrated host profile ({}x{} input, {} reps, vs galaxy_s7 template)",
-        report.input_hw, report.input_hw, report.reps
+        "calibrated host profile '{}' ({} tier, {}x{} input, {} reps, vs galaxy_s7 template)",
+        report.profile.id, report.precision, report.input_hw, report.input_hw, report.reps
     );
     println!("  alpha (median measured/template ratio): {:.4}", report.alpha);
     println!("  fitted dispatch_setup_ms:               {:.4}", report.dispatch_setup_ms);
@@ -73,22 +79,36 @@ fn run() -> Result<(), String> {
     cfg.reps = args.get_usize("reps", cfg.reps)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     let out = args.get_or("out", "host_profile.json").to_string();
+    let out_int8 = args.get_or("out-int8", "host_profile_int8.json").to_string();
     let report_path = args.get("report").map(|s| s.to_string());
 
     eprintln!(
-        "measuring SqueezeNet at {}x{} for {} reps (+1 warmup)...",
+        "measuring SqueezeNet at {}x{} for {} reps (+1 warmup) per tier (fp32, int8)...",
         cfg.input_hw, cfg.input_hw, cfg.reps
     );
-    let report = calibrate(&cfg).map_err(|e| format!("calibration failed: {e:#}"))?;
-    render(&report);
+    let tiers = calibrate_tiers(&cfg).map_err(|e| format!("calibration failed: {e:#}"))?;
+    render(&tiers.fp32);
+    println!();
+    render(&tiers.int8);
+    println!(
+        "  int8 whole-net speedup over fp32: {:.2}x",
+        tiers.fp32.native_net_ms / tiers.int8.native_net_ms.max(1e-9)
+    );
 
-    std::fs::write(&out, report.profile.to_json().to_string())
+    std::fs::write(&out, tiers.fp32.profile.to_json().to_string())
         .map_err(|e| format!("writing {out}: {e}"))?;
-    println!("  wrote fitted profile -> {out}");
+    println!("  wrote fitted fp32 profile -> {out}");
+    std::fs::write(&out_int8, tiers.int8.profile.to_json().to_string())
+        .map_err(|e| format!("writing {out_int8}: {e}"))?;
+    println!("  wrote fitted int8 profile -> {out_int8}");
     if let Some(path) = report_path {
-        std::fs::write(&path, report.to_json().to_string())
+        let combined = Json::object(vec![
+            ("fp32", tiers.fp32.to_json()),
+            ("int8", tiers.int8.to_json()),
+        ]);
+        std::fs::write(&path, combined.to_string())
             .map_err(|e| format!("writing {path}: {e}"))?;
-        println!("  wrote full report    -> {path}");
+        println!("  wrote full report         -> {path}");
     }
     Ok(())
 }

@@ -169,7 +169,7 @@ pub fn autoscale_from_json(v: &Json) -> Result<AutoscaleConfig> {
     }
     // A typoed knob must be an error, not a silent default (the
     // compact-string parser already rejects unknown keys).
-    const KNOWN: [&str; 12] = [
+    const KNOWN: [&str; 13] = [
         "slo_p95_ms",
         "warm_pool",
         "min_replicas",
@@ -182,6 +182,7 @@ pub fn autoscale_from_json(v: &Json) -> Result<AutoscaleConfig> {
         "queue_per_replica",
         "calm_frac",
         "degrade_frac",
+        "max_degrade_steps",
     ];
     if let Json::Object(pairs) = v {
         for (k, _) in pairs {
@@ -250,6 +251,9 @@ pub fn autoscale_from_json(v: &Json) -> Result<AutoscaleConfig> {
     if let Some(f) = num("degrade_frac")? {
         cfg.degrade_frac = f;
     }
+    if let Some(n) = count("max_degrade_steps")? {
+        cfg.max_degrade_steps = n.min(u8::MAX as usize) as u8;
+    }
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     Ok(cfg)
 }
@@ -258,7 +262,8 @@ fn parse_precision(s: &str) -> Result<Precision> {
     match s {
         "precise" => Ok(Precision::Precise),
         "imprecise" => Ok(Precision::Imprecise),
-        other => anyhow::bail!("unknown precision '{other}' (precise|imprecise)"),
+        "int8" | "i8" => Ok(Precision::Int8),
+        other => anyhow::bail!("unknown precision '{other}' (precise|imprecise|int8)"),
     }
 }
 
@@ -441,6 +446,12 @@ mod tests {
         assert_eq!(c.max_wait, Duration::from_micros(2500));
         assert_eq!(c.batches, vec![1, 2]);
         assert_eq!(c.precisions, vec![Precision::Imprecise]);
+        // the quantized tier and its short alias
+        let c = AppConfig::from_json(r#"{"precisions": ["precise", "int8", "i8"]}"#).unwrap();
+        assert_eq!(
+            c.precisions,
+            vec![Precision::Precise, Precision::Int8, Precision::Int8]
+        );
     }
 
     #[test]
@@ -487,7 +498,8 @@ mod tests {
         let f = fleet_from("2xnative@fp16", Some("rr"), None, None, None, None).unwrap();
         assert_eq!(f.replicas.len(), 2);
         assert_eq!(f.replicas[0].precision, Precision::Imprecise);
-        assert!(AppConfig::from_json(r#"{"fleet": "native@int8"}"#).is_err());
+        let c = AppConfig::from_json(r#"{"fleet": "native@int8"}"#).unwrap();
+        assert_eq!(c.fleet.unwrap().replicas[0].precision, Precision::Int8);
     }
 
     #[test]
@@ -611,6 +623,17 @@ mod tests {
         let a = c.fleet.unwrap().autoscale.unwrap();
         assert_eq!(a.calm_frac, 0.4);
         assert_eq!(a.degrade_frac, 0.9);
+        // the degrade-chain depth knob parses and validates
+        let c = AppConfig::from_json(
+            r#"{"fleet": "1xn5", "fleet_autoscale": {
+                "slo_p95_ms": 500.0, "max_degrade_steps": 1}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.fleet.unwrap().autoscale.unwrap().max_degrade_steps, 1);
+        assert!(AppConfig::from_json(
+            r#"{"fleet": "1xn5", "fleet_autoscale": {"slo_p95_ms": 500.0, "max_degrade_steps": 0}}"#
+        )
+        .is_err());
         assert!(AppConfig::from_json(
             r#"{"fleet": "1xn5", "fleet_autoscale": {"slo_p95_ms": 500.0, "calm_frac": 1.5}}"#
         )

@@ -314,7 +314,7 @@ fn runtime_thread(
 fn build_sim_table() -> HashMap<Precision, Vec<SimEstimate>> {
     let net = SqueezeNet::v1_0();
     let mut out: HashMap<Precision, Vec<SimEstimate>> = HashMap::new();
-    for precision in [Precision::Precise, Precision::Imprecise] {
+    for precision in Precision::all() {
         let mut v = Vec::new();
         for device in DeviceProfile::all() {
             let plan = autotune_network(&net, precision, &device);

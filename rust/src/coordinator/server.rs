@@ -196,6 +196,7 @@ fn parse_infer(args: &Json, image_len: usize) -> Result<Parsed, WireError> {
     let precision = match args.get("precision").and_then(Json::as_str).unwrap_or("precise") {
         "precise" => Precision::Precise,
         "imprecise" => Precision::Imprecise,
+        "int8" | "i8" => Precision::Int8,
         other => return Err(bad_args(format!("unknown precision '{other}'"))),
     };
     let with_sim = args.get("sim").and_then(Json::as_bool).unwrap_or(false);

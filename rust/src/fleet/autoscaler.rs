@@ -26,9 +26,14 @@
 //!   capacity collapse.
 //! - **degrade** — once committed joules pass `degrade_frac` of the
 //!   fleet budget, or a breach cannot be answered with more capacity
-//!   (pool empty or `max_replicas` reached), the whole fleet drops to
-//!   the imprecise (fp16) posture: Table V's energy ratio stretches the
-//!   remaining budget and the faster path adds capacity.
+//!   (pool empty or `max_replicas` reached), the fleet walks one step
+//!   down the precision chain **fp32 → fp16 → int8**: Table V's energy
+//!   ratio stretches the remaining budget and the faster path adds
+//!   capacity.  Deeper budget pressure (past the midpoint of the
+//!   remaining headroom) or a second unanswerable breach escalates to
+//!   the quantized int8 tier, up to `max_degrade_steps`.  Posture steps
+//!   only ever increase; each Degrade event's reason names the target
+//!   precision.
 //!
 //! Hysteresis: breach/calm streaks reset each other, and any action
 //! starts a `cooldown_ticks` window in which no further action fires —
@@ -77,6 +82,9 @@ pub struct AutoscaleConfig {
     pub calm_frac: f64,
     /// Fraction of the fleet budget at which the posture degrades.
     pub degrade_frac: f64,
+    /// How far down the fp32 -> fp16 -> int8 chain the posture may
+    /// walk (1 stops at fp16, 2 reaches int8).
+    pub max_degrade_steps: u8,
 }
 
 impl AutoscaleConfig {
@@ -97,6 +105,7 @@ impl AutoscaleConfig {
             queue_per_replica: 16,
             calm_frac: 0.5,
             degrade_frac: 0.8,
+            max_degrade_steps: 2,
         }
     }
 
@@ -115,7 +124,8 @@ impl AutoscaleConfig {
     /// joined by `+` (commas already separate the pairs), e.g.
     /// `"slo=600,pool=2xn5@fp16+1x6p@fp16,min=1,max=6,budget=300"`.
     /// Keys: `slo` (ms, required), `pool`, `min`, `max`, `budget` (J),
-    /// `tick` (ms), `up`, `down`, `cooldown`, `queue`.
+    /// `tick` (ms), `up`, `down`, `cooldown`, `queue`,
+    /// `degrade_steps` (chain depth, 1 = fp16 only, 2 = down to int8).
     pub fn parse(s: &str) -> Result<AutoscaleConfig, String> {
         let mut slo = None;
         let mut cfg = AutoscaleConfig::new(0.0);
@@ -152,6 +162,7 @@ impl AutoscaleConfig {
                 "down" => cfg.scale_down_after = count()?,
                 "cooldown" => cfg.cooldown_ticks = count()?,
                 "queue" => cfg.queue_per_replica = count()?,
+                "degrade_steps" => cfg.max_degrade_steps = count()?.min(u8::MAX as usize) as u8,
                 other => return Err(format!("autoscale: unknown key '{other}'")),
             }
         }
@@ -190,6 +201,9 @@ impl AutoscaleConfig {
         }
         if !(0.0..=1.0).contains(&self.degrade_frac) {
             return Err("autoscale: degrade_frac must be in [0, 1]".into());
+        }
+        if !(1..=8).contains(&self.max_degrade_steps) {
+            return Err("autoscale: degrade_steps must be in 1..=8".into());
         }
         Ok(())
     }
@@ -291,8 +305,18 @@ pub enum ScaleDecision {
     ScaleUp,
     /// Drain the most expensive idle replica back into the pool.
     ScaleDown,
-    /// Force the fleet-wide imprecise (fp16) posture.
+    /// Walk the fleet posture down the fp32 -> fp16 -> int8 chain to
+    /// the given number of degrade steps (1 = fp16, 2 = int8).
     Degrade,
+}
+
+/// Human label for a posture depth on the fp32 -> fp16 -> int8 chain.
+pub fn posture_label(steps: u8) -> &'static str {
+    match steps {
+        0 => "nominal",
+        1 => "fp16",
+        _ => "int8",
+    }
 }
 
 /// Kinds of entries in the scaling-event log.
@@ -365,8 +389,9 @@ pub struct Autoscaler {
     cooldown_left: usize,
     /// Front-door saturation, mirrored into the fleet gate.
     pub saturated: bool,
-    /// Sticky fleet-wide fp16 posture.
-    pub degraded_posture: bool,
+    /// Sticky fleet-wide posture depth on the fp32 -> fp16 -> int8
+    /// chain: 0 = nominal, 1 = fp16, 2 = int8.  Only ever increases.
+    pub posture_steps: u8,
     ticks: u64,
     scale_ups: u64,
     scale_downs: u64,
@@ -389,7 +414,7 @@ impl Autoscaler {
             calm_ticks: 0,
             cooldown_left: 0,
             saturated: false,
-            degraded_posture: false,
+            posture_steps: 0,
             ticks: 0,
             scale_ups: 0,
             scale_downs: 0,
@@ -413,11 +438,27 @@ impl Autoscaler {
         self.cfg.fleet_budget_j.is_some_and(|b| committed_j >= b)
     }
 
-    /// Is committed spend past the degrade threshold?
-    fn budget_degraded(&self, committed_j: f64) -> bool {
-        self.cfg
-            .fleet_budget_j
-            .is_some_and(|b| committed_j >= self.cfg.degrade_frac * b)
+    /// Has the fleet ever degraded its precision posture?
+    pub fn degraded_posture(&self) -> bool {
+        self.posture_steps > 0
+    }
+
+    /// Posture depth the budget alone demands: one step past
+    /// `degrade_frac`, two once committed spend crosses the midpoint
+    /// of the remaining headroom — the chain's last resort before the
+    /// budget exhausts and the front door closes.
+    fn budget_posture_target(&self, committed_j: f64) -> u8 {
+        let Some(b) = self.cfg.fleet_budget_j else { return 0 };
+        let soft = self.cfg.degrade_frac * b;
+        let deep = (self.cfg.degrade_frac + (1.0 - self.cfg.degrade_frac) * 0.5) * b;
+        let target = if committed_j >= deep {
+            2
+        } else if committed_j >= soft {
+            1
+        } else {
+            0
+        };
+        target.min(self.cfg.max_degrade_steps)
     }
 
     /// Evaluate one control tick.  Returns the decisions for the fleet
@@ -504,10 +545,12 @@ impl Autoscaler {
 
         let mut decisions = Vec::new();
 
-        // Posture: once near the fleet budget, run everything on the
-        // cheap path to stretch what is left (Table V's energy ratio).
-        if !self.degraded_posture && self.budget_degraded(s.committed_j) {
-            self.degraded_posture = true;
+        // Posture: once near the fleet budget, walk the fp32 -> fp16 ->
+        // int8 chain to stretch what is left (Table V's energy ratio);
+        // deeper pressure walks further.  Steps only ever increase.
+        let budget_target = self.budget_posture_target(s.committed_j);
+        if budget_target > self.posture_steps {
+            self.posture_steps = budget_target;
             decisions.push(ScaleDecision::Degrade);
         }
 
@@ -525,10 +568,11 @@ impl Autoscaler {
                 decisions.push(ScaleDecision::ScaleUp);
                 self.breach_ticks = 0;
                 self.cooldown_left = self.cfg.cooldown_ticks;
-            } else if !self.degraded_posture {
-                // No capacity to add: answer the breach with the
-                // faster, cheaper fp16 posture instead.
-                self.degraded_posture = true;
+            } else if self.posture_steps < self.cfg.max_degrade_steps {
+                // No capacity to add: answer the breach by walking one
+                // step further down the faster, cheaper precision
+                // chain (fp16, then int8).
+                self.posture_steps += 1;
                 decisions.push(ScaleDecision::Degrade);
                 self.breach_ticks = 0;
                 self.cooldown_left = self.cfg.cooldown_ticks;
@@ -582,7 +626,8 @@ impl Autoscaler {
             pool_remaining: sample.pool_remaining,
             queue_depth: sample.queue_depth,
             saturated: self.saturated,
-            degraded_posture: self.degraded_posture,
+            degraded_posture: self.degraded_posture(),
+            posture_steps: self.posture_steps,
             ticks: self.ticks,
             scale_ups: self.scale_ups,
             scale_downs: self.scale_downs,
@@ -613,6 +658,8 @@ pub struct AutoscaleReport {
     pub queue_depth: usize,
     pub saturated: bool,
     pub degraded_posture: bool,
+    /// Posture depth on the fp32 -> fp16 -> int8 chain (0 = nominal).
+    pub posture_steps: u8,
     pub ticks: u64,
     pub scale_ups: u64,
     pub scale_downs: u64,
@@ -640,6 +687,8 @@ impl AutoscaleReport {
             ("queue_depth", Json::num(self.queue_depth as f64)),
             ("saturated", Json::Bool(self.saturated)),
             ("degraded_posture", Json::Bool(self.degraded_posture)),
+            ("posture_steps", Json::num(self.posture_steps as f64)),
+            ("posture", Json::str(posture_label(self.posture_steps))),
             ("ticks", Json::num(self.ticks as f64)),
             ("scale_ups", Json::num(self.scale_ups as f64)),
             ("scale_downs", Json::num(self.scale_downs as f64)),
@@ -687,7 +736,7 @@ impl AutoscaleReport {
             self.deferred_drains,
             self.degrades,
             self.saturated,
-            if self.degraded_posture { "fp16" } else { "nominal" },
+            posture_label(self.posture_steps),
             match self.fleet_budget_j {
                 Some(b) => format!(" budget {:.1}/{b:.1} J", self.committed_j),
                 None => String::new(),
@@ -745,7 +794,7 @@ mod tests {
     fn parse_kv_round_trip() {
         let c = AutoscaleConfig::parse(
             "slo=600, pool=2xn5@fp16+1x6p, min=1, max=6, budget=300, tick=250, \
-             up=2, down=3, cooldown=1, queue=8",
+             up=2, down=3, cooldown=1, queue=8, degrade_steps=1",
         )
         .unwrap();
         assert_eq!(c.slo_p95_ms, 600.0);
@@ -764,6 +813,7 @@ mod tests {
         assert_eq!(c.scale_down_after, 3);
         assert_eq!(c.cooldown_ticks, 1);
         assert_eq!(c.queue_per_replica, 8);
+        assert_eq!(c.max_degrade_steps, 1);
     }
 
     #[test]
@@ -776,6 +826,8 @@ mod tests {
         assert!(AutoscaleConfig::parse("slo=400,pool=9xwatch").is_err());
         assert!(AutoscaleConfig::parse("slo=400,frobnicate=1").is_err());
         assert!(AutoscaleConfig::parse("slo=nope").is_err());
+        assert!(AutoscaleConfig::parse("slo=400,degrade_steps=0").is_err());
+        assert!(AutoscaleConfig::parse("slo=400,degrade_steps=9").is_err());
     }
 
     #[test]
@@ -880,17 +932,47 @@ mod tests {
     }
 
     #[test]
-    fn pool_exhaustion_degrades_instead_of_adding() {
+    fn pool_exhaustion_walks_the_degrade_chain_then_stops() {
         let mut a = Autoscaler::new(cfg());
         let mut s = sample(500.0);
         s.p95_ms = Some(900.0);
         s.pool_remaining = 0;
         s.parked_replicas = 0;
+        // first unanswerable breach: fp32 -> fp16
         assert_eq!(a.tick(&s), vec![ScaleDecision::Degrade]);
-        assert!(a.degraded_posture);
-        // degrade is sticky: the next breach with no capacity is a no-op
+        assert_eq!(a.posture_steps, 1);
+        assert!(a.degraded_posture());
+        // second: fp16 -> int8, the chain's last step
         s.at_ms = 1000.0;
+        assert_eq!(a.tick(&s), vec![ScaleDecision::Degrade]);
+        assert_eq!(a.posture_steps, 2);
+        // the chain is exhausted: further breaches are a no-op
+        s.at_ms = 1500.0;
         assert!(a.tick(&s).is_empty());
+        assert_eq!(a.posture_steps, 2);
+    }
+
+    #[test]
+    fn max_degrade_steps_caps_the_chain_at_fp16() {
+        let mut c = cfg();
+        c.max_degrade_steps = 1;
+        let mut a = Autoscaler::new(c);
+        let mut s = sample(500.0);
+        s.p95_ms = Some(900.0);
+        s.pool_remaining = 0;
+        s.parked_replicas = 0;
+        assert_eq!(a.tick(&s), vec![ScaleDecision::Degrade]);
+        s.at_ms = 1000.0;
+        assert!(a.tick(&s).is_empty(), "a capped chain must not reach int8");
+        assert_eq!(a.posture_steps, 1);
+    }
+
+    #[test]
+    fn posture_labels_name_the_chain() {
+        assert_eq!(posture_label(0), "nominal");
+        assert_eq!(posture_label(1), "fp16");
+        assert_eq!(posture_label(2), "int8");
+        assert_eq!(posture_label(7), "int8");
     }
 
     #[test]
@@ -899,13 +981,18 @@ mod tests {
         c.fleet_budget_j = Some(100.0);
         let mut a = Autoscaler::new(c);
         let mut s = sample(500.0);
-        s.committed_j = 85.0; // past degrade_frac * budget
+        s.committed_j = 85.0; // past degrade_frac * budget, under the midpoint
         assert_eq!(a.tick(&s), vec![ScaleDecision::Degrade]);
-        assert!(a.degraded_posture);
+        assert_eq!(a.posture_steps, 1, "soft pressure degrades one step (fp16)");
         s.at_ms = 1000.0;
         s.committed_j = 105.0; // past the budget entirely
         s.p95_ms = Some(900.0); // breach, but no joules left to add with
-        assert!(a.tick(&s).is_empty());
+        assert_eq!(
+            a.tick(&s),
+            vec![ScaleDecision::Degrade],
+            "deep budget pressure escalates the posture to int8"
+        );
+        assert_eq!(a.posture_steps, 2);
         assert!(a.saturated, "exhausted budget must close the front door");
     }
 

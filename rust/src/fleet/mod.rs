@@ -118,8 +118,8 @@ pub mod replica;
 pub mod router;
 
 pub use autoscaler::{
-    AutoscaleConfig, AutoscaleReport, Autoscaler, FleetSample, ScaleDecision, ScaleEvent,
-    ScaleKind,
+    posture_label, AutoscaleConfig, AutoscaleReport, Autoscaler, FleetSample, ScaleDecision,
+    ScaleEvent, ScaleKind,
 };
 pub use budget::{BudgetState, JouleBudget};
 pub use cache::ArtifactCache;
@@ -749,14 +749,15 @@ impl FleetState {
                 ScaleDecision::ScaleUp => self.apply_scale_up(at_ms, &mut asc),
                 ScaleDecision::ScaleDown => self.apply_scale_down(at_ms, &mut asc),
                 ScaleDecision::Degrade => {
+                    let steps = asc.posture_steps;
                     for r in &mut self.replicas {
-                        r.degraded = true;
+                        r.degrade_to(steps);
                     }
                     asc.note(ScaleEvent {
                         at_ms,
                         kind: ScaleKind::Degrade,
                         replica: None,
-                        reason: "fleet posture -> fp16".into(),
+                        reason: format!("fleet posture -> {}", posture_label(steps)),
                     });
                 }
             }
@@ -787,9 +788,10 @@ impl FleetState {
         if let Some(id) = parked {
             self.replicas[id].revive(at_ms);
             // A degraded fleet posture outlives individual replicas:
-            // capacity added after the degrade serves fp16 too.
-            if asc.degraded_posture {
-                self.replicas[id].degraded = true;
+            // capacity added after the degrade serves at the degraded
+            // tier (fp16 or int8) too.
+            if asc.posture_steps > 0 {
+                self.replicas[id].degrade_to(asc.posture_steps);
             }
             let prewarmed = self.prewarm_hot(id, at_ms);
             let name = self.replicas[id].name.clone();
@@ -808,8 +810,8 @@ impl FleetState {
             let spec = self.pool[self.pool_cursor].clone();
             self.pool_cursor += 1;
             let id = self.add_replica(spec, at_ms);
-            if asc.degraded_posture {
-                self.replicas[id].degraded = true;
+            if asc.posture_steps > 0 {
+                self.replicas[id].degrade_to(asc.posture_steps);
             }
             let prewarmed = self.prewarm_hot(id, at_ms);
             let name = self.replicas[id].name.clone();
@@ -1384,7 +1386,7 @@ impl Fleet {
                     kind: r.kind().label(),
                     precision: r.effective_precision().label(),
                     health: r.health.label(),
-                    degraded: r.degraded,
+                    degraded: r.degraded(),
                     parked: r.parked,
                     placements: r.placements,
                     completed: r.completed,
@@ -1672,7 +1674,11 @@ impl FleetReport {
                 r.energy_spent_j,
                 opt_ms(r.p50_ms),
                 opt_ms(r.p99_ms),
-                if r.degraded { "  [degraded->fp16]" } else { "" },
+                if r.degraded {
+                    format!("  [degraded->{}]", r.precision)
+                } else {
+                    String::new()
+                },
                 if r.parked { "  [parked]" } else { "" },
             ));
         }
@@ -2297,6 +2303,52 @@ mod tests {
                 "seed {seed}: the 60 J fleet budget must degrade the posture: {asc:?}"
             );
             assert!(asc.degrades >= 1, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn degrade_chain_conserves_riders_all_the_way_to_int8() {
+        // Sustained joule pressure walks the fleet posture down the
+        // whole fp32 -> fp16 -> int8 chain (budget thresholds first,
+        // then unanswerable breaches once the budget exhausts); the
+        // conservation invariant must hold across both steps and the
+        // surviving replicas must end on the quantized tier.
+        for seed in [5u64, 23] {
+            let t = Trace::generate(
+                150,
+                ArrivalProcess::Uniform { rate_per_s: 6.0 },
+                0.0,
+                seed,
+            );
+            let mut asc = AutoscaleConfig::new(600.0).with_fleet_budget_j(Some(30.0));
+            asc.tick_ms = 250.0;
+            asc.cooldown_ticks = 1;
+            let cfg = FleetConfig::parse_spec("1xs7,1xn5", Policy::LeastLoaded)
+                .unwrap()
+                .with_autoscale(asc)
+                .with_seed(seed);
+            let fleet = Fleet::new(cfg);
+            let report = run_trace(&fleet, &t, &[]);
+            assert_eq!(
+                report.completed + report.shed + report.lost + report.expired,
+                150,
+                "seed {seed}: conservation broke under the degrade chain: {report:?}"
+            );
+            let asc = fleet.autoscale_report().unwrap();
+            assert_eq!(
+                asc.posture_steps, 2,
+                "seed {seed}: the 30 J budget must walk the chain to int8: {asc:?}"
+            );
+            assert!(
+                report.replicas.iter().all(|r| r.precision == "int8"),
+                "seed {seed}: every replica must end quantized: {report:?}"
+            );
+            assert!(
+                asc.events
+                    .iter()
+                    .any(|e| e.kind == ScaleKind::Degrade && e.reason.contains("int8")),
+                "seed {seed}: the Degrade event must narrate the int8 target: {asc:?}"
+            );
         }
     }
 

@@ -11,8 +11,21 @@
 //! batching, and energy metering stay on the shared virtual-time
 //! spine.
 //!
-//! Construction benchmarks the engine itself — median-of-3 timings of
-//! one and two back-to-back inferences — and decomposes them into a
+//! The engine serves **two real execution tiers** (the int8 kernel
+//! contract is specified in `docs/NATIVE_REPLICAS.md`):
+//!
+//! - `fp32` — the vectorized `conv_g` reference path.  The host CPU
+//!   has no fp16 rail, so [`Precision::Precise`] and
+//!   [`Precision::Imprecise`] dispatch the same f32 computation; they
+//!   differ only in which calibrated power rail prices the joules.
+//! - `int8` — the quantized
+//!   [`QuantizedSqueezeNet`](crate::runtime::kernels::QuantizedSqueezeNet)
+//!   path (symmetric per-layer scales, i32 accumulators, requantize at
+//!   layer boundaries), prepared once at construction against the
+//!   engine's own synthetic image.
+//!
+//! Construction benchmarks *each tier* — median-of-3 timings of one
+//! and two back-to-back inferences — and decomposes them into a
 //! per-image marginal and a per-dispatch overhead, the same
 //! `overhead + b·marginal` shape the cost model prices simulated
 //! replicas with.  Those construction-measured numbers seed the
@@ -35,6 +48,8 @@ use crate::convnet::network::{run_squeezenet, ConvImpl};
 use crate::model::graph::SqueezeNet;
 use crate::model::weights::WeightStore;
 use crate::runtime::cpu::midpoint_plan;
+use crate::runtime::kernels::QuantizedSqueezeNet;
+use crate::simulator::device::Precision;
 use crate::util::rng::Rng;
 
 /// Input side native replicas run at.  56 keeps a real dispatch in the
@@ -51,18 +66,41 @@ fn median3(a: f64, b: f64, c: f64) -> f64 {
     a.min(b).max(a.max(b).min(c))
 }
 
-/// A resident, runnable SqueezeNet instance plus its construction-time
-/// performance decomposition.
+/// The two real execution tiers the engine dispatches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Tier {
+    Fp32,
+    Int8,
+}
+
+fn tier_of(precision: Precision) -> Tier {
+    match precision {
+        // No fp16 rail on the host: both float precisions run f32.
+        Precision::Precise | Precision::Imprecise => Tier::Fp32,
+        Precision::Int8 => Tier::Int8,
+    }
+}
+
+/// One tier's construction-time performance decomposition.
+#[derive(Debug, Clone, Copy)]
+struct TierTiming {
+    /// Construction-measured per-image marginal (ms).
+    marginal_ms: f64,
+    /// Construction-measured per-dispatch overhead (ms).
+    overhead_ms: f64,
+}
+
+/// A resident, runnable SqueezeNet instance (fp32 and int8) plus its
+/// per-tier construction-time performance decomposition.
 #[derive(Debug)]
 pub struct NativeEngine {
     net: SqueezeNet,
     weights: WeightStore,
     conv_impl: ConvImpl,
+    quant: QuantizedSqueezeNet,
     image: Vec<f32>,
-    /// Construction-measured per-image marginal (ms).
-    marginal_ms: f64,
-    /// Construction-measured per-dispatch overhead (ms).
-    overhead_ms: f64,
+    fp32: TierTiming,
+    int8: TierTiming,
     /// Real dispatches executed so far.
     pub runs: u64,
     /// Images inferred across all dispatches.
@@ -75,7 +113,8 @@ pub struct NativeEngine {
 
 impl NativeEngine {
     /// Build the engine and benchmark it: synthetic weights + image
-    /// from `seed`, one warmup, then median-of-3 timings at batch 1
+    /// from `seed`, int8 quantization calibrated against that image,
+    /// then per tier one warmup and median-of-3 timings at batch 1
     /// and batch 2 decomposed into marginal and overhead.
     pub fn new(seed: u64) -> Result<NativeEngine> {
         let net = SqueezeNet::with_input(NATIVE_INPUT_HW);
@@ -84,80 +123,105 @@ impl NativeEngine {
         // Decorrelate the image stream from the weight stream.
         let image =
             Rng::new(seed ^ 0x1AB_C0DE).vec_f32(NATIVE_INPUT_HW * NATIVE_INPUT_HW * 3, 0.0, 1.0);
+        let quant = QuantizedSqueezeNet::prepare(&net, &weights, &image)?;
         let mut engine = NativeEngine {
             net,
             weights,
             conv_impl,
+            quant,
             image,
-            marginal_ms: MIN_MS,
-            overhead_ms: 0.0,
+            fp32: TierTiming { marginal_ms: MIN_MS, overhead_ms: 0.0 },
+            int8: TierTiming { marginal_ms: MIN_MS, overhead_ms: 0.0 },
             runs: 0,
             images: 0,
             measured_ms_total: 0.0,
         };
-        // Warmup: page in weights, spin up the thread pool.
-        engine.timed_images(1)?;
-        let t1 = median3(
-            engine.timed_images(1)?,
-            engine.timed_images(1)?,
-            engine.timed_images(1)?,
-        );
-        let t2 = median3(
-            engine.timed_images(2)?,
-            engine.timed_images(2)?,
-            engine.timed_images(2)?,
-        );
-        engine.marginal_ms = (t2 - t1).max(MIN_MS);
-        engine.overhead_ms = (t1 - engine.marginal_ms).max(0.0);
+        engine.fp32 = engine.measure_tier(Tier::Fp32)?;
+        engine.int8 = engine.measure_tier(Tier::Int8)?;
         Ok(engine)
     }
 
-    /// Wall-clock ms for `n` back-to-back inferences.
-    fn timed_images(&self, n: usize) -> Result<f64> {
+    /// Benchmark one tier: warmup, then median-of-3 at batch 1 and 2
+    /// decomposed into `overhead + b·marginal`.
+    fn measure_tier(&self, tier: Tier) -> Result<TierTiming> {
+        // Warmup: page in weights, spin up the thread pool.
+        self.timed_images(1, tier)?;
+        let t1 = median3(
+            self.timed_images(1, tier)?,
+            self.timed_images(1, tier)?,
+            self.timed_images(1, tier)?,
+        );
+        let t2 = median3(
+            self.timed_images(2, tier)?,
+            self.timed_images(2, tier)?,
+            self.timed_images(2, tier)?,
+        );
+        let marginal_ms = (t2 - t1).max(MIN_MS);
+        Ok(TierTiming { marginal_ms, overhead_ms: (t1 - marginal_ms).max(0.0) })
+    }
+
+    /// Wall-clock ms for `n` back-to-back inferences on one tier.
+    fn timed_images(&self, n: usize, tier: Tier) -> Result<f64> {
         let t0 = Instant::now();
         for _ in 0..n {
-            run_squeezenet(&self.net, &self.weights, &self.image, &self.conv_impl)?;
+            match tier {
+                Tier::Fp32 => {
+                    run_squeezenet(&self.net, &self.weights, &self.image, &self.conv_impl)?;
+                }
+                Tier::Int8 => {
+                    self.quant.infer(&self.image)?;
+                }
+            }
         }
         Ok((t0.elapsed().as_secs_f64() * 1e3).max(MIN_MS))
     }
 
-    /// Construction-measured per-image marginal (ms).
-    pub fn marginal_ms(&self) -> f64 {
-        self.marginal_ms
+    fn timing(&self, precision: Precision) -> TierTiming {
+        match tier_of(precision) {
+            Tier::Fp32 => self.fp32,
+            Tier::Int8 => self.int8,
+        }
     }
 
-    /// Construction-measured per-dispatch overhead (ms).
-    pub fn overhead_ms(&self) -> f64 {
-        self.overhead_ms
+    /// Construction-measured per-image marginal at a precision (ms).
+    pub fn marginal_ms(&self, precision: Precision) -> f64 {
+        self.timing(precision).marginal_ms
+    }
+
+    /// Construction-measured per-dispatch overhead at a precision (ms).
+    pub fn overhead_ms(&self, precision: Precision) -> f64 {
+        self.timing(precision).overhead_ms
     }
 
     /// Predicted service time for a `b`-image dispatch (ms) — the
     /// same `overhead + b·marginal` shape the cost model uses.
-    pub fn predicted_batch_ms(&self, b: usize) -> f64 {
-        self.overhead_ms + b as f64 * self.marginal_ms
+    pub fn predicted_batch_ms(&self, b: usize, precision: Precision) -> f64 {
+        let t = self.timing(precision);
+        t.overhead_ms + b as f64 * t.marginal_ms
     }
 
-    /// Execute a `b`-image dispatch for real and return its measured
-    /// wall-clock ms.  On an (unreachable by construction) inference
-    /// error, returns the predicted time instead of panicking.
-    pub fn run_batch(&mut self, b: usize) -> f64 {
+    /// Execute a `b`-image dispatch for real at the batch's precision
+    /// and return its measured wall-clock ms.  On an (unreachable by
+    /// construction) inference error, returns the predicted time
+    /// instead of panicking.
+    pub fn run_batch(&mut self, b: usize, precision: Precision) -> f64 {
         let b = b.max(1);
-        match self.timed_images(b) {
+        match self.timed_images(b, tier_of(precision)) {
             Ok(ms) => {
                 self.runs += 1;
                 self.images += b as u64;
                 self.measured_ms_total += ms;
                 ms
             }
-            Err(_) => self.predicted_batch_ms(b),
+            Err(_) => self.predicted_batch_ms(b, precision),
         }
     }
 
     /// Observed per-image rate across all real dispatches (ms), or the
-    /// construction-time marginal before any dispatch ran.
+    /// construction-time fp32 marginal before any dispatch ran.
     pub fn observed_per_image_ms(&self) -> f64 {
         if self.images == 0 {
-            self.marginal_ms
+            self.fp32.marginal_ms
         } else {
             self.measured_ms_total / self.images as f64
         }
@@ -169,19 +233,28 @@ mod tests {
     use super::*;
 
     #[test]
-    fn engine_measures_positive_decomposed_times() {
+    fn engine_measures_positive_decomposed_times_per_tier() {
         let engine = NativeEngine::new(42).unwrap();
-        assert!(engine.marginal_ms() >= MIN_MS);
-        assert!(engine.overhead_ms() >= 0.0);
-        assert!(engine.predicted_batch_ms(2) > engine.predicted_batch_ms(1));
+        for precision in Precision::all() {
+            assert!(engine.marginal_ms(precision) >= MIN_MS, "{precision:?}");
+            assert!(engine.overhead_ms(precision) >= 0.0, "{precision:?}");
+            assert!(
+                engine.predicted_batch_ms(2, precision) > engine.predicted_batch_ms(1, precision)
+            );
+        }
+        // fp16 has no host rail: both float tiers share one timing
+        assert_eq!(
+            engine.marginal_ms(Precision::Precise),
+            engine.marginal_ms(Precision::Imprecise)
+        );
         assert_eq!(engine.runs, 0, "construction timings are not dispatches");
     }
 
     #[test]
     fn run_batch_returns_measured_wall_time_and_counts() {
         let mut engine = NativeEngine::new(42).unwrap();
-        let ms1 = engine.run_batch(1);
-        let ms3 = engine.run_batch(3);
+        let ms1 = engine.run_batch(1, Precision::Precise);
+        let ms3 = engine.run_batch(3, Precision::Int8);
         assert!(ms1 >= MIN_MS && ms3 >= MIN_MS);
         assert_eq!(engine.runs, 2);
         assert_eq!(engine.images, 4);
@@ -189,7 +262,7 @@ mod tests {
         assert!(engine.observed_per_image_ms() > 0.0);
         // a zero-sized dispatch still runs one image (a batch never
         // has zero riders; clamping keeps the engine total-ordered)
-        engine.run_batch(0);
+        engine.run_batch(0, Precision::Int8);
         assert_eq!(engine.images, 5);
     }
 

@@ -106,16 +106,19 @@ impl ReplicaSpec {
 
     /// A native (real-compute) replica.  Its energy meter prices the
     /// measured times through the calibrated
-    /// [`DeviceProfile::host`] power model; the precision only selects
-    /// which power rail is charged (the engine itself runs f32).
+    /// [`DeviceProfile::host`] power model; `int8` batches execute the
+    /// quantized kernel path, both float precisions execute the same
+    /// f32 path (the host has no fp16 rail) and differ only in which
+    /// power rail is charged.
     pub fn native(precision: Precision) -> ReplicaSpec {
         ReplicaSpec { device: DeviceProfile::host(), precision, kind: ReplicaKind::Native }
     }
 
     /// Parse one spec atom: `s7`, `s7@fp32`, `6p@fp16`, `n5@imprecise`,
-    /// `native`.  `fp32`/`precise` is the IEEE path, `fp16`/`imprecise`
-    /// the relaxed RenderScript-style path (§IV-B); `native` runs real
-    /// host inference (kind [`ReplicaKind::Native`]).
+    /// `s7@int8`, `native@i8`.  `fp32`/`precise` is the IEEE path,
+    /// `fp16`/`imprecise` the relaxed RenderScript-style path (§IV-B),
+    /// `int8`/`i8` the quantized tier; `native` runs real host
+    /// inference (kind [`ReplicaKind::Native`]).
     pub fn parse(atom: &str) -> Result<ReplicaSpec, String> {
         let (dev, prec) = match atom.split_once('@') {
             Some((d, p)) => (d.trim(), Some(p.trim())),
@@ -124,7 +127,8 @@ impl ReplicaSpec {
         let precision = match prec {
             None | Some("fp32") | Some("precise") => Precision::Precise,
             Some("fp16") | Some("imprecise") => Precision::Imprecise,
-            Some(other) => return Err(format!("unknown precision '{other}' (fp32|fp16)")),
+            Some("int8") | Some("i8") => Precision::Int8,
+            Some(other) => return Err(format!("unknown precision '{other}' (fp32|fp16|int8)")),
         };
         if dev == "native" {
             return Ok(ReplicaSpec::native(precision));
@@ -347,11 +351,12 @@ fn precision_index(p: Precision) -> usize {
     match p {
         Precision::Precise => 0,
         Precision::Imprecise => 1,
+        Precision::Int8 => 2,
     }
 }
 
 /// The largest single-request committed energy anywhere in the device
-/// zoo (every profile at both precisions, dispatch overhead included).
+/// zoo (every profile at every precision, dispatch overhead included).
 /// This is the bound on how far a replica's committed energy can
 /// overshoot its joule budget: [`Replica::available`] re-checks the
 /// budget before every admit, so at most one request can be committed
@@ -363,7 +368,7 @@ pub fn max_request_energy_j() -> f64 {
         let cache = PlanCache::new();
         let mut max = 0.0f64;
         for device in DeviceProfile::all() {
-            for precision in [Precision::Precise, Precision::Imprecise] {
+            for precision in Precision::all() {
                 let spec = ReplicaSpec::new(device.clone(), precision);
                 let r = Replica::new(0, spec, None, FleetBatch::single(), &cache);
                 max = max.max(r.energy_per_request_j());
@@ -382,19 +387,24 @@ pub struct Replica {
     pub name: String,
     pub spec: ReplicaSpec,
     pub health: Health,
-    /// Budget-forced fp16 fallback (sticky once the soft threshold is hit).
-    pub degraded: bool,
+    /// Degrade steps applied down the fp32 → fp16 → int8 chain (see
+    /// [`Precision::degrade_by`]): 0 = nominal, 1 = one precision tier
+    /// down, 2+ = two tiers down (saturating at int8).  Set sticky by
+    /// the budget's soft threshold (one step) and raised by the
+    /// autoscaler's posture.
+    degrade_steps: u8,
     /// Drained by the autoscaler and returned to the warm pool (idle,
     /// revivable instantly, accruing no idle energy).
     pub parked: bool,
     pub budget: Option<JouleBudget>,
     batch: FleetBatch,
-    /// Autotuned per-image marginal cost, indexed `[precise, imprecise]`.
-    marginal_ms: [f64; 2],
-    /// Fixed per-dispatch overhead, indexed `[precise, imprecise]`.
-    overhead_ms: [f64; 2],
-    marginal_j: [f64; 2],
-    overhead_j: [f64; 2],
+    /// Autotuned per-image marginal cost, indexed
+    /// `[precise, imprecise, int8]` (see [`precision_index`]).
+    marginal_ms: [f64; 3],
+    /// Fixed per-dispatch overhead, same indexing.
+    overhead_ms: [f64; 3],
+    marginal_j: [f64; 3],
+    overhead_j: [f64; 3],
     busy_until_ms: f64,
     /// Accumulating (not yet scheduled) batch.
     open: Vec<Rider>,
@@ -490,11 +500,11 @@ impl Replica {
         cache: &PlanCache,
     ) -> Replica {
         let net = SqueezeNet::v1_0();
-        let mut marginal_ms = [0.0f64; 2];
-        let mut overhead_ms = [0.0f64; 2];
-        let mut marginal_j = [0.0f64; 2];
-        let mut overhead_j = [0.0f64; 2];
-        for precision in [Precision::Precise, Precision::Imprecise] {
+        let mut marginal_ms = [0.0f64; 3];
+        let mut overhead_ms = [0.0f64; 3];
+        let mut marginal_j = [0.0f64; 3];
+        let mut overhead_j = [0.0f64; 3];
+        for precision in Precision::all() {
             let plan = cache.plan(&spec.device, precision);
             let g = |s: &ConvSpec| plan.optimal_g(&s.name);
             let mode = RunMode::Parallel(precision);
@@ -505,27 +515,32 @@ impl Replica {
             marginal_j[i] = energy_joules(&spec.device, mode, marginal_ms[i]);
         }
         // A native replica replaces the cost-model prediction with its
-        // own construction-time measurement (both precision slots get
-        // the same numbers — the engine runs f32 regardless), and its
-        // joules price those measured times through the device's
-        // calibrated power model.  If the engine cannot be built the
+        // own construction-time measurements — the fp32 engine timing
+        // fills both float slots (the host has no fp16 rail) and the
+        // quantized engine timing fills the int8 slot — and its joules
+        // price those measured times through the device's calibrated
+        // per-rail power model.  If the engine cannot be built the
         // replica degrades to the simulated pricing of its profile.
         let native = match spec.kind {
             ReplicaKind::Simulated => None,
             ReplicaKind::Native => NativeEngine::new(NATIVE_SEED).ok(),
         };
         if let Some(engine) = &native {
-            let m = engine.marginal_ms();
-            let o = engine.overhead_ms();
-            marginal_ms = [m, m];
-            overhead_ms = [o, o];
+            let m32 = engine.marginal_ms(Precision::Precise);
+            let o32 = engine.overhead_ms(Precision::Precise);
+            let m8 = engine.marginal_ms(Precision::Int8);
+            let o8 = engine.overhead_ms(Precision::Int8);
+            marginal_ms = [m32, m32, m8];
+            overhead_ms = [o32, o32, o8];
             marginal_j = [
-                energy_joules(&spec.device, RunMode::Parallel(Precision::Precise), m),
-                energy_joules(&spec.device, RunMode::Parallel(Precision::Imprecise), m),
+                energy_joules(&spec.device, RunMode::Parallel(Precision::Precise), m32),
+                energy_joules(&spec.device, RunMode::Parallel(Precision::Imprecise), m32),
+                energy_joules(&spec.device, RunMode::Parallel(Precision::Int8), m8),
             ];
             overhead_j = [
-                energy_joules(&spec.device, RunMode::Parallel(Precision::Precise), o),
-                energy_joules(&spec.device, RunMode::Parallel(Precision::Imprecise), o),
+                energy_joules(&spec.device, RunMode::Parallel(Precision::Precise), o32),
+                energy_joules(&spec.device, RunMode::Parallel(Precision::Imprecise), o32),
+                energy_joules(&spec.device, RunMode::Parallel(Precision::Int8), o8),
             ];
         }
         let name = format!("r{id}/{}@{}", spec.device.id, spec.precision.label());
@@ -535,7 +550,7 @@ impl Replica {
             name,
             spec,
             health: Health::Healthy,
-            degraded: false,
+            degrade_steps: 0,
             parked: false,
             budget,
             batch,
@@ -730,13 +745,29 @@ impl Replica {
         self.native.as_ref().map(|e| e.observed_per_image_ms())
     }
 
-    /// Configured precision, unless the budget degraded us to fp16.
+    /// Configured precision, walked `degrade_steps` tiers down the
+    /// fp32 → fp16 → int8 chain (budget soft threshold, autoscaler
+    /// posture).
     pub fn effective_precision(&self) -> Precision {
-        if self.degraded {
-            Precision::Imprecise
-        } else {
-            self.spec.precision
-        }
+        self.spec.precision.degrade_by(self.degrade_steps)
+    }
+
+    /// Is any degrade step applied?
+    pub fn degraded(&self) -> bool {
+        self.degrade_steps > 0
+    }
+
+    /// Degrade steps currently applied (0 = nominal).
+    pub fn degrade_steps(&self) -> u8 {
+        self.degrade_steps
+    }
+
+    /// Raise the degrade posture to at least `steps` tiers down the
+    /// precision chain (never *undoes* a budget-forced step: postures
+    /// only max in, they do not reset — the budget's stickiness
+    /// invariant survives autoscaler churn).
+    pub fn degrade_to(&mut self, steps: u8) {
+        self.degrade_steps = self.degrade_steps.max(steps);
     }
 
     /// Single-image dispatch cost at the effective precision (ms):
@@ -857,11 +888,11 @@ impl Replica {
         }
     }
 
-    /// Sticky fp16 fallback once committed energy passes the soft
+    /// Sticky one-tier fallback once committed energy passes the soft
     /// threshold (checked after every admit/collect/fail transition).
     fn refresh_budget(&mut self) {
-        if !self.degraded && self.budget_state() != BudgetState::Nominal {
-            self.degraded = true;
+        if self.degrade_steps == 0 && self.budget_state() != BudgetState::Nominal {
+            self.degrade_steps = 1;
         }
     }
 
@@ -924,7 +955,7 @@ impl Replica {
             // committed calibrated joules either way, so the budget
             // meter's exactness invariants hold across kinds.
             let service = match self.native.as_mut() {
-                Some(engine) => engine.run_batch(b),
+                Some(engine) => engine.run_batch(b, self.open_precision),
                 None => self.overhead_ms[i] + b as f64 * self.marginal_ms[i],
             };
             let energy = self.overhead_j[i] + b as f64 * self.marginal_j[i];
@@ -1384,14 +1415,17 @@ mod tests {
         assert_eq!(ReplicaSpec::parse("6p@fp16").unwrap().precision, Precision::Imprecise);
         assert_eq!(ReplicaSpec::parse("n5@precise").unwrap().device.id, "n5");
         assert!(ReplicaSpec::parse("pixel").is_err());
-        assert!(ReplicaSpec::parse("s7@int8").is_err());
+        // the quantized tier and its short alias
+        assert_eq!(ReplicaSpec::parse("s7@int8").unwrap().precision, Precision::Int8);
+        assert_eq!(ReplicaSpec::parse("n5@i8").unwrap().precision, Precision::Int8);
+        assert!(ReplicaSpec::parse("s7@int4").is_err());
         // the native atom: host profile, Native kind, precision rails
         let n = ReplicaSpec::parse("native").unwrap();
         assert_eq!(n.kind, ReplicaKind::Native);
         assert_eq!(n.device.id, "host");
         assert_eq!(n.precision, Precision::Precise);
         assert_eq!(ReplicaSpec::parse("native@fp16").unwrap().precision, Precision::Imprecise);
-        assert!(ReplicaSpec::parse("native@int8").is_err());
+        assert_eq!(ReplicaSpec::parse("native@int8").unwrap().precision, Precision::Int8);
         assert_eq!(ReplicaKind::Native.label(), "native");
         assert_eq!(ReplicaKind::Simulated.label(), "simulated");
     }
@@ -1477,26 +1511,53 @@ mod tests {
     }
 
     #[test]
-    fn imprecise_serves_faster_and_cheaper() {
+    fn each_degrade_tier_serves_faster_and_cheaper() {
         let cache = PlanCache::new();
-        let fp32 = Replica::new(
-            0,
-            ReplicaSpec::new(DeviceProfile::nexus_5(), Precision::Precise),
-            None,
-            FleetBatch::single(),
-            &cache,
-        );
-        let fp16 = Replica::new(
-            1,
-            ReplicaSpec::new(DeviceProfile::nexus_5(), Precision::Imprecise),
-            None,
-            FleetBatch::single(),
-            &cache,
-        );
+        let replica = |id, precision| {
+            Replica::new(
+                id,
+                ReplicaSpec::new(DeviceProfile::nexus_5(), precision),
+                None,
+                FleetBatch::single(),
+                &cache,
+            )
+        };
+        let fp32 = replica(0, Precision::Precise);
+        let fp16 = replica(1, Precision::Imprecise);
+        let int8 = replica(2, Precision::Int8);
         assert!(fp16.service_ms() < fp32.service_ms());
         assert!(fp16.energy_per_request_j() < fp32.energy_per_request_j());
-        // both precisions came from one autotune pass each
-        assert_eq!(cache.cached(), 2);
+        assert!(int8.service_ms() < fp16.service_ms());
+        assert!(int8.energy_per_request_j() < fp16.energy_per_request_j());
+        assert_eq!(int8.name, "r2/n5@int8");
+        // every precision came from one autotune pass each
+        assert_eq!(cache.cached(), 3);
+    }
+
+    #[test]
+    fn degrade_chain_walks_fp32_to_fp16_to_int8() {
+        let mut r = s7_precise();
+        assert_eq!(r.effective_precision(), Precision::Precise);
+        assert!(!r.degraded());
+        r.degrade_to(1);
+        assert_eq!(r.effective_precision(), Precision::Imprecise);
+        r.degrade_to(2);
+        assert_eq!(r.effective_precision(), Precision::Int8);
+        assert_eq!(r.degrade_steps(), 2);
+        // postures max in: a later one-step posture does not undo int8
+        r.degrade_to(1);
+        assert_eq!(r.effective_precision(), Precision::Int8);
+        // saturation: absurd step counts still land on int8
+        r.degrade_to(200);
+        assert_eq!(r.effective_precision(), Precision::Int8);
+        // each tier down is cheaper than the one above
+        let mut fresh = s7_precise();
+        let j32 = fresh.energy_per_request_j();
+        fresh.degrade_to(1);
+        let j16 = fresh.energy_per_request_j();
+        fresh.degrade_to(2);
+        let j8 = fresh.energy_per_request_j();
+        assert!(j8 < j16 && j16 < j32, "chain must be monotone: {j32} {j16} {j8}");
     }
 
     #[test]
@@ -1689,7 +1750,8 @@ mod tests {
         r.admit(0.0, 0.0);
         r.admit(0.0, 0.0);
         r.collect(2.0 * s + 1.0);
-        assert!(r.degraded, "soft threshold should degrade to fp16");
+        assert!(r.degraded(), "soft threshold should degrade to fp16");
+        assert_eq!(r.degrade_steps(), 1, "the budget forces exactly one step");
         assert_eq!(r.effective_precision(), Precision::Imprecise);
         assert!(r.available());
         // burn the rest on the cheaper path until exhausted
@@ -1742,7 +1804,7 @@ mod tests {
         );
         let _p1 = r.admit(0.0, 0.0);
         let p2 = r.admit(10.0, 10.0);
-        assert!(r.degraded, "second admit must trip the soft threshold");
+        assert!(r.degraded(), "second admit must trip the soft threshold");
         // a third admit lands on the degraded fp16 path: different
         // service/energy fingerprint than p2's
         let p3 = r.admit(20.0, 20.0);
@@ -1769,7 +1831,7 @@ mod tests {
         assert!(bound > 0.3 && bound < 3.0, "bound {bound} J out of plausible band");
         let cache = PlanCache::new();
         for device in DeviceProfile::all() {
-            for precision in [Precision::Precise, Precision::Imprecise] {
+            for precision in Precision::all() {
                 let r = Replica::new(
                     0,
                     ReplicaSpec::new(device.clone(), precision),

@@ -14,8 +14,8 @@
 //!   (Adreno 530/430/330 device models), the granularity autotuner, and
 //!   the power/energy model that regenerates the paper's tables.
 //! - **Layer 3.5 ([`fleet`])**: the heterogeneous device fleet — N
-//!   simulated Adreno replicas (530/430/330 at fp32/fp16) behind one
-//!   dispatch API, with pluggable placement policies (`RoundRobin`,
+//!   simulated Adreno replicas (530/430/330 at fp32/fp16/int8) behind
+//!   one dispatch API, with pluggable placement policies (`RoundRobin`,
 //!   `LeastLoaded`, `EnergyAware`, `PowerOfTwoChoices`), per-replica
 //!   dynamic batching (amortizing the per-dispatch overhead across
 //!   multi-image dispatches), replica draining / failure injection
@@ -54,21 +54,34 @@
 //! (`--trace-out`, or `{"cmd":"trace_dump"}` / `{"cmd":"metrics"}`
 //! over the server wire).
 //!
+//! Alongside the simulated tiers, [`runtime::kernels`] is the **fast
+//! native tier**: a cache-blocked fp32 SqueezeNet and a quantized
+//! **int8** path (symmetric per-layer scales, i32 accumulators,
+//! requantize at layer boundaries), executed per dispatch by native
+//! fleet replicas and calibrated per precision into fitted
+//! `DeviceProfile`s ([`runtime::calibrate`]).
+//!
+//! A guided tour of the whole crate — module map, request lifecycle,
+//! and the conservation invariant — lives in
+//! `rust/docs/ARCHITECTURE.md`.
+//!
 //! ## Static analysis
 //!
 //! The invariants above are enforced by tooling, not discipline:
 //! [`analysis`] is a self-contained static-analysis pass over this
 //! crate's own source (`cargo run --bin analyze`, CI's `analyze` job)
-//! with four repo-native lints — **virtual-time purity** (no
+//! with five repo-native lints — **virtual-time purity** (no
 //! `Instant::now`/`SystemTime` in `fleet/`, `simulator/`,
 //! `telemetry/`), **conservation-site completeness** (every terminal
 //! outcome declared in [`fleet::TERMINAL_OUTCOMES`] must have its
 //! `FleetReport` field, `FleetMetrics` mirror, and assertion-site
 //! mentions), a ratcheted **panic budget** for the dispatch spine
-//! (`rust/analyze_budget.json` refuses to grow), and **bench/baseline
+//! (`rust/analyze_budget.json` refuses to grow), **bench/baseline
 //! coherence** (metric names written by benches must match
-//! `BENCH_BASELINE.json`, statically).  See the [`analysis`] module
-//! docs for the ratchet workflow and how to add a lint.
+//! `BENCH_BASELINE.json`, statically), and **docs/tree coherence**
+//! (every file path and `Type::symbol` reference in `rust/docs/*.md`
+//! must exist in the tree).  See the [`analysis`] module docs for the
+//! ratchet workflow and how to add a lint.
 
 pub mod analysis;
 pub mod config;

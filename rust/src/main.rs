@@ -93,9 +93,10 @@ server exposes the same data via {\"cmd\":\"metrics\"} and
 (also via MCN_FLEET_AUTOSCALE): comma-separated key=value pairs, pool
 atoms joined by '+', e.g. slo=600,pool=2xn5@fp16+1x6p@fp16,max=6 —
 keys: slo (p95 ms, required), pool, min, max, budget (fleet J), tick
-(ms), up, down, cooldown, queue (slots per replica).  The controller
-adds/parks replicas against the SLO and budget, degrades the fleet to
-fp16 under joule pressure, and sheds at the front door when saturated.
+(ms), up, down, cooldown, queue (slots per replica), degrade_steps
+(chain depth).  The controller adds/parks replicas against the SLO and
+budget, walks the fleet down the fp32 -> fp16 -> int8 precision chain
+under joule pressure, and sheds at the front door when saturated.
 
 --device-profile FILE registers an extra DeviceProfile from JSON (as
 written by `cargo run --bin calibrate`) before the command runs, so
@@ -109,7 +110,8 @@ fn precision_of(args: &Args) -> Result<Precision> {
     match args.get_or("precision", "precise") {
         "precise" => Ok(Precision::Precise),
         "imprecise" => Ok(Precision::Imprecise),
-        other => anyhow::bail!("unknown precision '{other}'"),
+        "int8" | "i8" => Ok(Precision::Int8),
+        other => anyhow::bail!("unknown precision '{other}' (precise|imprecise|int8)"),
     }
 }
 

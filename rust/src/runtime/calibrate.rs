@@ -22,12 +22,20 @@
 //! the simulator's per-layer prediction error against the same host is
 //! a measurable number — reported per layer in
 //! [`CalibrationReport::rows`].
+//!
+//! The pipeline is **per-precision**: [`measure_host`] times the fp32
+//! vectorized path, [`measure_host_int8`] times the quantized
+//! [`QuantizedSqueezeNet`] kernels, and [`fit_profile`] fits against
+//! the template's cost-model predictions *at that precision* — so
+//! [`calibrate_tiers`] emits one loadable profile per real execution
+//! tier (`host` for fp32, `host-int8` for int8), each with its own α
+//! and dispatch residue.
 
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::convnet::network::{run_squeezenet_timed, ConvImpl};
+use crate::convnet::network::{run_squeezenet_timed, ConvImpl, MacroLayerTiming};
 use crate::model::graph::{LayerKind, MacroLayer, SqueezeNet};
 use crate::model::weights::WeightStore;
 use crate::simulator::autotune::autotune_network;
@@ -37,6 +45,7 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::cpu::midpoint_plan;
+use super::kernels::QuantizedSqueezeNet;
 
 /// Knobs for one calibration run.
 #[derive(Debug, Clone)]
@@ -93,6 +102,9 @@ pub struct LayerRow {
 #[derive(Debug, Clone)]
 pub struct CalibrationReport {
     pub profile: DeviceProfile,
+    /// Which precision tier this fit models (`"precise"` /
+    /// `"imprecise"` / `"int8"`).
+    pub precision: &'static str,
     pub rows: Vec<LayerRow>,
     /// Median measured/template ratio the fit scaled by.
     pub alpha: f64,
@@ -112,6 +124,7 @@ impl CalibrationReport {
     pub fn to_json(&self) -> Json {
         Json::object(vec![
             ("profile", self.profile.to_json()),
+            ("precision", Json::str(self.precision)),
             ("alpha", Json::num(self.alpha)),
             ("dispatch_setup_ms", Json::num(self.dispatch_setup_ms)),
             ("median_error_pct", Json::num(self.median_error_pct)),
@@ -183,9 +196,11 @@ pub fn predicted_macro_ms(
         .collect()
 }
 
-/// Measure the host: N timed runs of the vectorized network on
-/// synthetic weights, medians per macro layer and whole-net.
-pub fn measure_host(cfg: &CalibrationConfig) -> Result<HostMeasurement> {
+/// Shared validation + synthetic inputs for a measurement run: the
+/// network, He-scaled weights, and a decorrelated input image.
+fn measurement_setup(
+    cfg: &CalibrationConfig,
+) -> Result<(SqueezeNet, WeightStore, Vec<f32>)> {
     if cfg.reps == 0 {
         bail!("calibration needs at least one rep");
     }
@@ -197,17 +212,22 @@ pub fn measure_host(cfg: &CalibrationConfig) -> Result<HostMeasurement> {
     // Decorrelate the input image stream from the weight stream.
     let image: Vec<f32> =
         Rng::new(cfg.seed ^ 0x1AB_C0DE).vec_f32(cfg.input_hw * cfg.input_hw * 3, 0.0, 1.0);
-    let conv_impl = ConvImpl::Vectorized { plan: midpoint_plan(&net), parallel: true };
+    Ok((net, weights, image))
+}
 
-    // Warmup: page in weights, spin up the thread pool.
-    run_squeezenet_timed(&net, &weights, &image, &conv_impl)?;
-
+/// Run `reps` timed inferences through `run` and reduce to medians per
+/// macro layer (Table IV order) and whole-net — the shape both the
+/// fp32 and int8 measurement paths share.
+fn measure_with<F>(cfg: &CalibrationConfig, mut run: F) -> Result<HostMeasurement>
+where
+    F: FnMut() -> Result<Vec<MacroLayerTiming>>,
+{
     let order = MacroLayer::table_iv_order();
     let mut layer_samples: Vec<Vec<f64>> = vec![Vec::with_capacity(cfg.reps); order.len()];
     let mut whole_samples = Vec::with_capacity(cfg.reps);
     for _ in 0..cfg.reps {
         let t0 = Instant::now();
-        let (_, timings) = run_squeezenet_timed(&net, &weights, &image, &conv_impl)?;
+        let timings = run()?;
         whole_samples.push(t0.elapsed().as_secs_f64() * 1e3);
         for (i, ml) in order.iter().enumerate() {
             let ms: f64 =
@@ -228,15 +248,43 @@ pub fn measure_host(cfg: &CalibrationConfig) -> Result<HostMeasurement> {
     })
 }
 
-/// Fit a device profile from measurements against a template device.
+/// Measure the host's fp32 tier: N timed runs of the vectorized
+/// network on synthetic weights, medians per macro layer and whole-net.
+pub fn measure_host(cfg: &CalibrationConfig) -> Result<HostMeasurement> {
+    let (net, weights, image) = measurement_setup(cfg)?;
+    let conv_impl = ConvImpl::Vectorized { plan: midpoint_plan(&net), parallel: true };
+    // Warmup: page in weights, spin up the thread pool.
+    run_squeezenet_timed(&net, &weights, &image, &conv_impl)?;
+    measure_with(cfg, || {
+        run_squeezenet_timed(&net, &weights, &image, &conv_impl).map(|(_, t)| t)
+    })
+}
+
+/// Measure the host's int8 tier: the same medians, but each rep runs
+/// the quantized [`QuantizedSqueezeNet`] kernels (prepared once, with
+/// the measurement image doubling as the calibration image).
+pub fn measure_host_int8(cfg: &CalibrationConfig) -> Result<HostMeasurement> {
+    let (net, weights, image) = measurement_setup(cfg)?;
+    let quant = QuantizedSqueezeNet::prepare(&net, &weights, &image)?;
+    // Warmup: page in the packed weights, spin up the thread pool.
+    quant.infer_timed(&image)?;
+    measure_with(cfg, || quant.infer_timed(&image).map(|(_, t)| t))
+}
+
+/// Fit a device profile from measurements against a template device at
+/// one precision tier: the template's predictions, the α ratio, and
+/// the re-prediction error are all computed *at that precision*, and
+/// the emitted profile's identity names the tier (`host` for the float
+/// tiers, `host-int8` for int8) so both can register side by side.
 /// Pure — no clock — so the round-trip property tests can feed it
 /// synthetic measurements generated from the cost model itself.
 pub fn fit_profile(
     net: &SqueezeNet,
     measured: &HostMeasurement,
     template: &DeviceProfile,
+    precision: Precision,
 ) -> Result<CalibrationReport> {
-    let predicted = predicted_macro_ms(net, template, Precision::Precise);
+    let predicted = predicted_macro_ms(net, template, precision);
     if measured.per_layer.len() != predicted.len() {
         bail!(
             "measurement has {} macro layers, template predicts {}",
@@ -265,10 +313,13 @@ pub fn fit_profile(
     // Rescale the template so every cost-model term scales by exactly α.
     let host_meta = DeviceProfile::host();
     let mut profile = template.clone();
-    profile.name = "Calibrated Host";
-    profile.id = "host";
+    (profile.id, profile.name, profile.gpu_name) = match precision {
+        Precision::Int8 => {
+            ("host-int8", "Calibrated Host (int8)", "host CPU (calibrated, int8 kernels)")
+        }
+        _ => ("host", "Calibrated Host", "host CPU (calibrated)"),
+    };
     profile.soc = host_meta.soc;
-    profile.gpu_name = "host CPU (calibrated)";
     profile.gpu.clock_ghz /= alpha;
     profile.gpu.mem_bw_gb_s /= alpha;
     profile.gpu.kernel_launch_us *= alpha;
@@ -281,7 +332,7 @@ pub fn fit_profile(
 
     // Re-predict through the cost model on the fitted profile — the
     // honest per-layer error, not the algebraic α·template shortcut.
-    let fitted = predicted_macro_ms(net, &profile, Precision::Precise);
+    let fitted = predicted_macro_ms(net, &profile, precision);
     let mut rows = Vec::with_capacity(predicted.len());
     for (((ml, m_ms), (_, t_ms)), (_, f_ms)) in
         measured.per_layer.iter().zip(&predicted).zip(&fitted)
@@ -299,6 +350,7 @@ pub fn fit_profile(
     let max_error_pct = errs.iter().cloned().fold(0.0, f64::max);
     Ok(CalibrationReport {
         profile,
+        precision: precision.label(),
         rows,
         alpha,
         dispatch_setup_ms,
@@ -316,22 +368,45 @@ pub fn fit_profile(
 pub fn calibrate(cfg: &CalibrationConfig) -> Result<CalibrationReport> {
     let net = SqueezeNet::with_input(cfg.input_hw);
     let measured = measure_host(cfg)?;
-    fit_profile(&net, &measured, &DeviceProfile::galaxy_s7())
+    fit_profile(&net, &measured, &DeviceProfile::galaxy_s7(), Precision::Precise)
+}
+
+/// Both real execution tiers' calibration reports.
+#[derive(Debug, Clone)]
+pub struct TierReports {
+    /// The fp32 vectorized path fitted at [`Precision::Precise`]
+    /// (profile id `host`).
+    pub fp32: CalibrationReport,
+    /// The quantized kernel path fitted at [`Precision::Int8`]
+    /// (profile id `host-int8`).
+    pub int8: CalibrationReport,
+}
+
+/// Measure and fit *both* real tiers against the Galaxy S7 template:
+/// the fp32 vectorized path and the quantized int8 kernels, each with
+/// its own α and dispatch residue.
+pub fn calibrate_tiers(cfg: &CalibrationConfig) -> Result<TierReports> {
+    let net = SqueezeNet::with_input(cfg.input_hw);
+    let s7 = DeviceProfile::galaxy_s7();
+    let fp32 = fit_profile(&net, &measure_host(cfg)?, &s7, Precision::Precise)?;
+    let int8 = fit_profile(&net, &measure_host_int8(cfg)?, &s7, Precision::Int8)?;
+    Ok(TierReports { fp32, int8 })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    /// Synthetic measurement: the template's own predictions scaled by
-    /// a constant, plus a known dispatch residue.
+    /// Synthetic measurement: the template's own predictions (at one
+    /// precision) scaled by a constant, plus a known dispatch residue.
     fn synthetic_measurement(
         net: &SqueezeNet,
         device: &DeviceProfile,
+        precision: Precision,
         scale: f64,
         residue_ms: f64,
     ) -> HostMeasurement {
-        let per_layer: Vec<(MacroLayer, f64)> = predicted_macro_ms(net, device, Precision::Precise)
+        let per_layer: Vec<(MacroLayer, f64)> = predicted_macro_ms(net, device, precision)
             .into_iter()
             .map(|(ml, ms)| (ml, ms * scale))
             .collect();
@@ -346,8 +421,8 @@ mod tests {
         // error once re-predicted through the cost model.
         let net = SqueezeNet::v1_0();
         let s7 = DeviceProfile::galaxy_s7();
-        let m = synthetic_measurement(&net, &s7, 2.0, 7.0);
-        let report = fit_profile(&net, &m, &s7).unwrap();
+        let m = synthetic_measurement(&net, &s7, Precision::Precise, 2.0, 7.0);
+        let report = fit_profile(&net, &m, &s7, Precision::Precise).unwrap();
         assert!((report.alpha - 2.0).abs() < 1e-12, "alpha {}", report.alpha);
         assert!((report.dispatch_setup_ms - 7.0).abs() < 1e-9);
         assert_eq!(report.rows.len(), 10);
@@ -377,8 +452,8 @@ mod tests {
         // median-α fit must keep the median error well under the CI
         // gate's 50% bound.
         let net = SqueezeNet::v1_0();
-        let m = synthetic_measurement(&net, &DeviceProfile::nexus_6p(), 1.0, 3.0);
-        let report = fit_profile(&net, &m, &DeviceProfile::galaxy_s7()).unwrap();
+        let m = synthetic_measurement(&net, &DeviceProfile::nexus_6p(), Precision::Precise, 1.0, 3.0);
+        let report = fit_profile(&net, &m, &DeviceProfile::galaxy_s7(), Precision::Precise).unwrap();
         assert!(report.alpha > 0.0 && report.alpha.is_finite());
         assert!(
             report.median_error_pct < 50.0,
@@ -394,9 +469,9 @@ mod tests {
     fn dispatch_residue_clamps_at_zero() {
         let net = SqueezeNet::v1_0();
         let s7 = DeviceProfile::galaxy_s7();
-        let mut m = synthetic_measurement(&net, &s7, 1.0, 0.0);
+        let mut m = synthetic_measurement(&net, &s7, Precision::Precise, 1.0, 0.0);
         m.whole_net_ms *= 0.5; // whole-net below the per-layer sum
-        let report = fit_profile(&net, &m, &s7).unwrap();
+        let report = fit_profile(&net, &m, &s7, Precision::Precise).unwrap();
         assert_eq!(report.dispatch_setup_ms, 0.0);
     }
 
@@ -404,20 +479,46 @@ mod tests {
     fn fit_rejects_degenerate_measurements() {
         let net = SqueezeNet::v1_0();
         let s7 = DeviceProfile::galaxy_s7();
-        let mut m = synthetic_measurement(&net, &s7, 1.0, 0.0);
+        let mut m = synthetic_measurement(&net, &s7, Precision::Precise, 1.0, 0.0);
         m.per_layer[3].1 = 0.0;
-        assert!(fit_profile(&net, &m, &s7).is_err());
-        let mut m = synthetic_measurement(&net, &s7, 1.0, 0.0);
+        assert!(fit_profile(&net, &m, &s7, Precision::Precise).is_err());
+        let mut m = synthetic_measurement(&net, &s7, Precision::Precise, 1.0, 0.0);
         m.per_layer.pop();
-        assert!(fit_profile(&net, &m, &s7).is_err());
+        assert!(fit_profile(&net, &m, &s7, Precision::Precise).is_err());
+    }
+
+    #[test]
+    fn int8_fit_recovers_its_own_scale_and_names_the_tier() {
+        // The same round-trip property at the quantized tier: int8
+        // predictions times 3 must fit with α=3 at ~zero error, and
+        // the emitted profile must carry the int8 identity so it can
+        // register beside the fp32 `host` profile.
+        let net = SqueezeNet::v1_0();
+        let s7 = DeviceProfile::galaxy_s7();
+        let m = synthetic_measurement(&net, &s7, Precision::Int8, 3.0, 2.0);
+        let report = fit_profile(&net, &m, &s7, Precision::Int8).unwrap();
+        assert!((report.alpha - 3.0).abs() < 1e-12, "alpha {}", report.alpha);
+        assert!(report.median_error_pct < 0.01);
+        assert_eq!(report.precision, "int8");
+        assert_eq!(report.profile.id, "host-int8");
+        assert_eq!(report.profile.name, "Calibrated Host (int8)");
+        assert_eq!(
+            report.to_json().get("precision").and_then(Json::as_str),
+            Some("int8")
+        );
+        // fitting fp32 measurements against int8 predictions is NOT a
+        // round trip: int8 layers are faster, so α comes out larger
+        let m32 = synthetic_measurement(&net, &s7, Precision::Precise, 1.0, 0.0);
+        let cross = fit_profile(&net, &m32, &s7, Precision::Int8).unwrap();
+        assert!(cross.alpha > 1.0, "fp32 times over int8 predictions: α {}", cross.alpha);
     }
 
     #[test]
     fn report_json_has_the_loadable_profile_inside() {
         let net = SqueezeNet::v1_0();
         let s7 = DeviceProfile::galaxy_s7();
-        let m = synthetic_measurement(&net, &s7, 1.5, 2.0);
-        let report = fit_profile(&net, &m, &s7).unwrap();
+        let m = synthetic_measurement(&net, &s7, Precision::Precise, 1.5, 2.0);
+        let report = fit_profile(&net, &m, &s7, Precision::Precise).unwrap();
         let j = report.to_json();
         let text = j.to_string();
         let parsed = Json::parse(&text).unwrap();
@@ -425,6 +526,7 @@ mod tests {
         assert_eq!(profile.id, "host");
         assert_eq!(parsed.get("layers").unwrap().as_array().unwrap().len(), 10);
         assert!(parsed.get("alpha").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(parsed.get("precision").and_then(Json::as_str), Some("precise"));
     }
 
     #[test]

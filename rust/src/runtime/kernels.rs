@@ -1,0 +1,730 @@
+//! Fast native kernels: packed cache-blocked fp32 convolution and a
+//! CMSIS-NN-style quantized int8 SqueezeNet path.
+//!
+//! The vectorized reference path (`convnet::vectorized`) optimizes for
+//! fidelity to the paper's `conv_g` algorithm: it re-packs the filter
+//! bank on every call and walks CHW4 tensors through getter/setter
+//! indirection.  This module optimizes for *throughput on the host
+//! CPU*, which is what native fleet replicas and the calibration
+//! harness actually dispatch:
+//!
+//! - **Packing is hoisted to prepare time.**  [`Fp32SqueezeNet::prepare`]
+//!   / [`QuantizedSqueezeNet::prepare`] transpose every HWIO filter
+//!   bank once into row-major `[cout][k*k*cin]` rows; per-inference
+//!   work is pure patch-gather + dot products over contiguous memory.
+//! - **Activations are HWC.**  One output pixel's input patch is a
+//!   concatenation of contiguous channel vectors, so the gather is
+//!   `k*k` slice copies and the inner dot product never strides.
+//! - **The GEMV is cache-blocked.**  Each gathered patch is reused
+//!   across a tile of [`COUT_TILE`] filter rows before the next pixel
+//!   is gathered, keeping the patch hot in L1 while filter rows
+//!   stream through.
+//! - **The int8 path quantizes à la CMSIS-NN** (symmetric per-layer
+//!   scales, i8 weights and activations, i32 accumulators, one
+//!   requantize at each layer boundary), moving 4x fewer activation
+//!   and weight bytes than fp32 — the memory-bound fire layers are
+//!   where the measured speedup comes from.
+//!
+//! ## Quantization scheme
+//!
+//! Everything is *symmetric, per layer* (one scale per tensor, zero
+//! point 0):
+//!
+//! - weight scale `s_w = max|w| / 127`, quantized once at prepare time;
+//! - activation scales come from one fp32 calibration pass over the
+//!   prepare-time image, recording each conv's post-ReLU `max|out|`;
+//!   the two expand layers of a fire module share one output scale
+//!   (the max of their ranges) so the channel concat stays uniform;
+//! - bias is folded into the accumulator as
+//!   `bias_q = round(b / (s_in * s_w))`;
+//! - each accumulator requantizes through a single f32 multiplier
+//!   `m = s_in * s_w / s_out`, and the ReLU is folded into the
+//!   `[0, 127]` output clamp.
+//!
+//! Max-pool runs directly on i8 (monotonic, scale-preserving); the
+//! global average pool accumulates in i32 and dequantizes once into
+//! the fp32 logits, so fp32 and int8 inference return comparable
+//! outputs.  Quantization error bounds are documented and tested —
+//! see `docs/NATIVE_REPLICAS.md` and the agreement test below.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::graph::{ConvSpec, LayerKind, MacroLayer, SqueezeNet};
+use crate::model::weights::WeightStore;
+use crate::util::par::{num_threads, parallel_chunks};
+
+pub use crate::convnet::network::MacroLayerTiming;
+
+/// Filter rows processed per gathered patch before moving to the next
+/// output pixel — the cache-blocking tile of the GEMV.
+const COUT_TILE: usize = 32;
+
+/// Guard against a degenerate (all-zero) calibration range: a scale of
+/// exactly zero would make every multiplier non-finite.
+const MIN_RANGE: f32 = 1e-6;
+
+fn scale_for(max_abs: f32) -> f32 {
+    max_abs.max(MIN_RANGE) / 127.0
+}
+
+/// Row chunk size for parallelizing one conv over its output rows.
+fn row_chunk(hw_out: usize) -> usize {
+    hw_out.div_ceil(num_threads()).max(1)
+}
+
+/// One conv layer packed for the fp32 fast path: HWIO weights
+/// transposed to row-major `[cout][k*k*cin]`.
+#[derive(Debug, Clone)]
+struct PackedConv {
+    spec: ConvSpec,
+    rows: Vec<f32>,
+    bias: Vec<f32>,
+}
+
+impl PackedConv {
+    fn pack(spec: &ConvSpec, w_hwio: &[f32], bias: &[f32]) -> PackedConv {
+        let (k, cin, cout) = (spec.k, spec.cin, spec.cout);
+        let row_len = k * k * cin;
+        let mut rows = vec![0.0f32; cout * row_len];
+        for patch in 0..k * k {
+            for ci in 0..cin {
+                let src = (patch * cin + ci) * cout;
+                for (co, row) in rows.chunks_exact_mut(row_len).enumerate() {
+                    row[patch * cin + ci] = w_hwio[src + co];
+                }
+            }
+        }
+        PackedConv { spec: spec.clone(), rows, bias: bias.to_vec() }
+    }
+}
+
+/// Gather the `k*k*cin` input patch feeding output pixel `(oh, ow)`
+/// from an HWC activation, zero-filling out-of-range taps.
+fn gather_patch<T: Copy + Default>(
+    input: &[T],
+    hw_in: usize,
+    cin: usize,
+    spec: &ConvSpec,
+    oh: usize,
+    ow: usize,
+    patch: &mut [T],
+) {
+    let (k, stride, pad) = (spec.k, spec.stride, spec.pad);
+    for kh in 0..k {
+        let ih = (oh * stride + kh) as isize - pad as isize;
+        for kw in 0..k {
+            let iw = (ow * stride + kw) as isize - pad as isize;
+            let dst = ((kh * k + kw) * cin)..((kh * k + kw) * cin + cin);
+            if ih >= 0 && (ih as usize) < hw_in && iw >= 0 && (iw as usize) < hw_in {
+                let src = ((ih as usize) * hw_in + iw as usize) * cin;
+                patch[dst].copy_from_slice(&input[src..src + cin]);
+            } else {
+                patch[dst].fill(T::default());
+            }
+        }
+    }
+}
+
+/// fp32 convolution over an HWC activation: per-pixel patch gather,
+/// cache-blocked GEMV over packed filter rows, fused bias + ReLU.
+/// Parallel over output rows; deterministic regardless of thread
+/// count (each output value is reduced by exactly one worker).
+fn conv2d_f32(input: &[f32], conv: &PackedConv) -> Vec<f32> {
+    let spec = &conv.spec;
+    let (hw_in, hw_out, cin, cout) = (spec.hw_in, spec.hw_out, spec.cin, spec.cout);
+    let row_len = spec.k * spec.k * cin;
+    let chunks = parallel_chunks(hw_out, row_chunk(hw_out), |r0, r1| {
+        let mut out = vec![0.0f32; (r1 - r0) * hw_out * cout];
+        let mut patch = vec![0.0f32; row_len];
+        for oh in r0..r1 {
+            for ow in 0..hw_out {
+                gather_patch(input, hw_in, cin, spec, oh, ow, &mut patch);
+                let base = ((oh - r0) * hw_out + ow) * cout;
+                for tile in (0..cout).step_by(COUT_TILE) {
+                    for co in tile..(tile + COUT_TILE).min(cout) {
+                        let row = &conv.rows[co * row_len..(co + 1) * row_len];
+                        let mut acc = conv.bias[co];
+                        for (a, b) in patch.iter().zip(row) {
+                            acc += a * b;
+                        }
+                        out[base + co] = acc.max(0.0);
+                    }
+                }
+            }
+        }
+        out
+    });
+    let mut out = Vec::with_capacity(hw_out * hw_out * cout);
+    for (_, chunk) in chunks {
+        out.extend_from_slice(&chunk);
+    }
+    out
+}
+
+/// 3x3 stride-2 max pool over an HWC activation (any scalar with an
+/// ordering; used for both f32 and i8).
+fn maxpool_hwc<T: Copy + PartialOrd>(input: &[T], hw_in: usize, c: usize) -> (Vec<T>, usize) {
+    let hw_out = (hw_in - 3) / 2 + 1;
+    let mut out = Vec::with_capacity(hw_out * hw_out * c);
+    for oh in 0..hw_out {
+        for ow in 0..hw_out {
+            for ch in 0..c {
+                let mut best = input[((oh * 2) * hw_in + ow * 2) * c + ch];
+                for kh in 0..3 {
+                    for kw in 0..3 {
+                        let v = input[((oh * 2 + kh) * hw_in + ow * 2 + kw) * c + ch];
+                        if v > best {
+                            best = v;
+                        }
+                    }
+                }
+                out.push(best);
+            }
+        }
+    }
+    (out, hw_out)
+}
+
+/// Concat two HWC activations along the channel axis (fire module:
+/// `[expand1 ; expand3]` per pixel).
+fn concat_hwc<T: Copy>(a: &[T], ca: usize, b: &[T], cb: usize, pixels: usize) -> Vec<T> {
+    let mut out = Vec::with_capacity(pixels * (ca + cb));
+    for p in 0..pixels {
+        out.extend_from_slice(&a[p * ca..(p + 1) * ca]);
+        out.extend_from_slice(&b[p * cb..(p + 1) * cb]);
+    }
+    out
+}
+
+/// A SqueezeNet instance packed for the fp32 fast path.
+#[derive(Debug, Clone)]
+pub struct Fp32SqueezeNet {
+    net: SqueezeNet,
+    convs: HashMap<String, PackedConv>,
+    input_hw: usize,
+}
+
+impl Fp32SqueezeNet {
+    /// Pack every filter bank once.  Fails only if `weights` does not
+    /// satisfy the network's parameter contract.
+    pub fn prepare(net: &SqueezeNet, weights: &WeightStore) -> Result<Fp32SqueezeNet> {
+        let input_hw = input_hw_of(net)?;
+        let mut convs = HashMap::new();
+        for spec in net.conv_layers() {
+            let w = weights
+                .get(&format!("{}_w", spec.name))
+                .with_context(|| format!("missing weights for {}", spec.name))?;
+            let b = weights
+                .get(&format!("{}_b", spec.name))
+                .with_context(|| format!("missing bias for {}", spec.name))?;
+            convs.insert(spec.name.clone(), PackedConv::pack(spec, &w.data, &b.data));
+        }
+        Ok(Fp32SqueezeNet { net: net.clone(), convs, input_hw })
+    }
+
+    /// Run one HWC image to logits.
+    pub fn infer(&self, image_hwc: &[f32]) -> Result<Vec<f32>> {
+        self.run(image_hwc, &mut |_, _| {})
+    }
+
+    /// [`Fp32SqueezeNet::infer`] plus per-conv post-ReLU `max|out|` —
+    /// the activation-range observation the int8 path calibrates from.
+    pub fn infer_with_ranges(&self, image_hwc: &[f32]) -> Result<(Vec<f32>, HashMap<String, f32>)> {
+        let mut ranges = HashMap::new();
+        let logits = self.run(image_hwc, &mut |name, out| {
+            let max = out.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            ranges.insert(name.to_string(), max);
+        })?;
+        Ok((logits, ranges))
+    }
+
+    fn run(
+        &self,
+        image_hwc: &[f32],
+        on_conv: &mut dyn FnMut(&str, &[f32]),
+    ) -> Result<Vec<f32>> {
+        check_image(image_hwc.len(), self.input_hw)?;
+        let mut act = image_hwc.to_vec();
+        let mut hw = self.input_hw;
+        let mut channels = 3usize;
+        let mut pending_expand1: Option<Vec<f32>> = None;
+        let mut logits = None;
+        for layer in &self.net.layers {
+            match &layer.kind {
+                LayerKind::Conv(spec) => {
+                    let conv = self
+                        .convs
+                        .get(&spec.name)
+                        .with_context(|| format!("unpacked conv {}", spec.name))?;
+                    let out = conv2d_f32(&act, conv);
+                    on_conv(&spec.name, &out);
+                    stitch(&mut act, &mut hw, &mut channels, &mut pending_expand1, spec, out)?;
+                }
+                LayerKind::MaxPool { .. } => {
+                    let (out, hw_out) = maxpool_hwc(&act, hw, channels);
+                    act = out;
+                    hw = hw_out;
+                }
+                LayerKind::GlobalAvgPool { .. } => {
+                    logits = Some(global_avgpool_hwc(&act, hw, channels));
+                }
+                LayerKind::Softmax { .. } => {}
+            }
+        }
+        logits.context("network produced no logits")
+    }
+}
+
+/// fp32 HWC global average pool to the logit vector.
+fn global_avgpool_hwc(act: &[f32], hw: usize, c: usize) -> Vec<f32> {
+    let denom = (hw * hw) as f32;
+    let mut out = vec![0.0f32; c];
+    for p in 0..hw * hw {
+        for (o, v) in out.iter_mut().zip(&act[p * c..(p + 1) * c]) {
+            *o += v;
+        }
+    }
+    for o in &mut out {
+        *o /= denom;
+    }
+    out
+}
+
+/// Fire-module stitching shared by both precisions: expand1 output is
+/// stashed (the squeeze activation stays live for expand3), expand3
+/// concatenates, every other conv replaces the activation.
+fn stitch<T: Copy>(
+    act: &mut Vec<T>,
+    hw: &mut usize,
+    channels: &mut usize,
+    pending_expand1: &mut Option<Vec<T>>,
+    spec: &ConvSpec,
+    out: Vec<T>,
+) -> Result<()> {
+    if spec.name.ends_with("expand1") {
+        *pending_expand1 = Some(out);
+    } else if spec.name.ends_with("expand3") {
+        let e1 = pending_expand1.take().context("expand1 must precede expand3")?;
+        let e1_c = e1.len() / (spec.hw_out * spec.hw_out);
+        *act = concat_hwc(&e1, e1_c, &out, spec.cout, spec.hw_out * spec.hw_out);
+        *hw = spec.hw_out;
+        *channels = e1_c + spec.cout;
+    } else {
+        *act = out;
+        *hw = spec.hw_out;
+        *channels = spec.cout;
+    }
+    Ok(())
+}
+
+fn input_hw_of(net: &SqueezeNet) -> Result<usize> {
+    match net.layers.first().map(|l| &l.kind) {
+        Some(LayerKind::Conv(c)) => Ok(c.hw_in),
+        _ => bail!("network must start with a conv layer"),
+    }
+}
+
+fn check_image(len: usize, input_hw: usize) -> Result<()> {
+    if len != input_hw * input_hw * 3 {
+        bail!(
+            "image must be {0}x{0}x3 = {1} values, got {2}",
+            input_hw,
+            input_hw * 3 * input_hw,
+            len
+        );
+    }
+    Ok(())
+}
+
+/// One conv layer quantized for the int8 path.
+#[derive(Debug, Clone)]
+struct QuantConv {
+    spec: ConvSpec,
+    /// Row-major `[cout][k*k*cin]` i8 filter rows.
+    rows: Vec<i8>,
+    /// `round(bias / (s_in * s_w))`, added to the i32 accumulator.
+    bias: Vec<i32>,
+    /// Requantization multiplier `s_in * s_w / s_out`.
+    m: f32,
+    /// Output activation scale (shared across a fire's expand pair).
+    s_out: f32,
+}
+
+/// int8 convolution: i8 patch gather, i32 accumulate, fused bias,
+/// single f32 requantize with the ReLU folded into the `[0, 127]`
+/// clamp.  Same cache blocking and parallel-row determinism as
+/// [`conv2d_f32`].
+fn conv2d_i8(input: &[i8], conv: &QuantConv) -> Vec<i8> {
+    let spec = &conv.spec;
+    let (hw_in, hw_out, cin, cout) = (spec.hw_in, spec.hw_out, spec.cin, spec.cout);
+    let row_len = spec.k * spec.k * cin;
+    let chunks = parallel_chunks(hw_out, row_chunk(hw_out), |r0, r1| {
+        let mut out = vec![0i8; (r1 - r0) * hw_out * cout];
+        let mut patch = vec![0i8; row_len];
+        for oh in r0..r1 {
+            for ow in 0..hw_out {
+                gather_patch(input, hw_in, cin, spec, oh, ow, &mut patch);
+                let base = ((oh - r0) * hw_out + ow) * cout;
+                for tile in (0..cout).step_by(COUT_TILE) {
+                    for co in tile..(tile + COUT_TILE).min(cout) {
+                        let row = &conv.rows[co * row_len..(co + 1) * row_len];
+                        let mut acc: i32 = conv.bias[co];
+                        for (a, b) in patch.iter().zip(row) {
+                            acc += (*a as i32) * (*b as i32);
+                        }
+                        out[base + co] = requantize(acc, conv.m);
+                    }
+                }
+            }
+        }
+        out
+    });
+    let mut out = Vec::with_capacity(hw_out * hw_out * cout);
+    for (_, chunk) in chunks {
+        out.extend_from_slice(&chunk);
+    }
+    out
+}
+
+/// i32 accumulator -> i8 activation: scale by the layer's multiplier,
+/// round to nearest, clamp to `[0, 127]` (the clamp at 0 *is* the
+/// ReLU under a symmetric scale).
+fn requantize(acc: i32, m: f32) -> i8 {
+    (acc as f32 * m).round().clamp(0.0, 127.0) as i8
+}
+
+/// A SqueezeNet instance quantized to int8 and ready to run.
+#[derive(Debug, Clone)]
+pub struct QuantizedSqueezeNet {
+    net: SqueezeNet,
+    convs: HashMap<String, QuantConv>,
+    input_hw: usize,
+    /// Input activation scale (image f32 -> i8).
+    input_scale: f32,
+    /// Scale of the conv10 output feeding the average pool (i8 ->
+    /// logits f32).
+    logit_scale: f32,
+}
+
+impl QuantizedSqueezeNet {
+    /// Quantize the network: one fp32 calibration pass over
+    /// `calib_image` fixes every activation scale, then weights and
+    /// biases are quantized per layer.
+    pub fn prepare(
+        net: &SqueezeNet,
+        weights: &WeightStore,
+        calib_image: &[f32],
+    ) -> Result<QuantizedSqueezeNet> {
+        let input_hw = input_hw_of(net)?;
+        check_image(calib_image.len(), input_hw)?;
+        let fp32 = Fp32SqueezeNet::prepare(net, weights)?;
+        let (_, ranges) = fp32.infer_with_ranges(calib_image)?;
+
+        // Fire expand pairs share one output scale so the channel
+        // concat is uniform in i8.
+        let out_scale = |name: &str| -> Result<f32> {
+            let own = *ranges.get(name).with_context(|| format!("no range for {name}"))?;
+            let shared = if let Some(fire) = name.strip_suffix("_expand1") {
+                own.max(*ranges.get(&format!("{fire}_expand3")).unwrap_or(&0.0))
+            } else if let Some(fire) = name.strip_suffix("_expand3") {
+                own.max(*ranges.get(&format!("{fire}_expand1")).unwrap_or(&0.0))
+            } else {
+                own
+            };
+            Ok(scale_for(shared))
+        };
+
+        let input_scale =
+            scale_for(calib_image.iter().fold(0.0f32, |m, &v| m.max(v.abs())));
+        let mut convs = HashMap::new();
+        let mut s_act = input_scale;
+        let mut logit_scale = input_scale;
+        for layer in &net.layers {
+            match &layer.kind {
+                LayerKind::Conv(spec) => {
+                    let w = weights
+                        .get(&format!("{}_w", spec.name))
+                        .with_context(|| format!("missing weights for {}", spec.name))?;
+                    let b = weights
+                        .get(&format!("{}_b", spec.name))
+                        .with_context(|| format!("missing bias for {}", spec.name))?;
+                    let s_in = s_act;
+                    let s_out = out_scale(&spec.name)?;
+                    let s_w =
+                        scale_for(w.data.iter().fold(0.0f32, |m, &v| m.max(v.abs())));
+                    let row_len = spec.k * spec.k * spec.cin;
+                    let mut rows = vec![0i8; spec.cout * row_len];
+                    for patch in 0..spec.k * spec.k {
+                        for ci in 0..spec.cin {
+                            let src = (patch * spec.cin + ci) * spec.cout;
+                            for (co, row) in rows.chunks_exact_mut(row_len).enumerate() {
+                                row[patch * spec.cin + ci] =
+                                    (w.data[src + co] / s_w).round().clamp(-127.0, 127.0) as i8;
+                            }
+                        }
+                    }
+                    let bias = b
+                        .data
+                        .iter()
+                        .map(|&v| (v / (s_in * s_w)).round() as i32)
+                        .collect();
+                    convs.insert(
+                        spec.name.clone(),
+                        QuantConv { spec: spec.clone(), rows, bias, m: s_in * s_w / s_out, s_out },
+                    );
+                    // Track the live activation's scale the same way the
+                    // walker tracks the activation itself: expand1 leaves
+                    // the squeeze scale live for expand3.
+                    if !spec.name.ends_with("expand1") {
+                        s_act = s_out;
+                    }
+                }
+                LayerKind::MaxPool { .. } => {} // max is scale-preserving
+                LayerKind::GlobalAvgPool { .. } => logit_scale = s_act,
+                LayerKind::Softmax { .. } => {}
+            }
+        }
+        Ok(QuantizedSqueezeNet {
+            net: net.clone(),
+            convs,
+            input_hw,
+            input_scale,
+            logit_scale,
+        })
+    }
+
+    /// Quantize one HWC f32 image to the input scale.
+    fn quantize_input(&self, image_hwc: &[f32]) -> Vec<i8> {
+        image_hwc
+            .iter()
+            .map(|&v| (v / self.input_scale).round().clamp(-127.0, 127.0) as i8)
+            .collect()
+    }
+
+    /// Run one HWC image to fp32 logits through the int8 pipeline.
+    pub fn infer(&self, image_hwc: &[f32]) -> Result<Vec<f32>> {
+        self.run(image_hwc, |_, _| {})
+    }
+
+    /// [`QuantizedSqueezeNet::infer`] with per-macro-layer wall-clock
+    /// timing in Table IV order (Head last) — the measurement the int8
+    /// calibration lane fits device profiles against.  Mirrors
+    /// [`crate::convnet::network::run_squeezenet_timed`].
+    pub fn infer_timed(&self, image_hwc: &[f32]) -> Result<(Vec<f32>, Vec<MacroLayerTiming>)> {
+        let mut acc: HashMap<MacroLayer, f64> = HashMap::new();
+        let logits = self.run(image_hwc, |ml, ms| {
+            *acc.entry(ml).or_insert(0.0) += ms;
+        })?;
+        let mut order = MacroLayer::table_iv_order();
+        order.push(MacroLayer::Head);
+        let timings = order
+            .into_iter()
+            .filter_map(|ml| acc.get(&ml).map(|&ms| MacroLayerTiming { layer: ml, ms }))
+            .collect();
+        Ok((logits, timings))
+    }
+
+    fn run(
+        &self,
+        image_hwc: &[f32],
+        mut on_layer: impl FnMut(MacroLayer, f64),
+    ) -> Result<Vec<f32>> {
+        check_image(image_hwc.len(), self.input_hw)?;
+        let mut act = self.quantize_input(image_hwc);
+        let mut hw = self.input_hw;
+        let mut channels = 3usize;
+        let mut pending_expand1: Option<Vec<i8>> = None;
+        let mut logits = None;
+        for layer in &self.net.layers {
+            let t0 = Instant::now();
+            match &layer.kind {
+                LayerKind::Conv(spec) => {
+                    let conv = self
+                        .convs
+                        .get(&spec.name)
+                        .with_context(|| format!("unquantized conv {}", spec.name))?;
+                    let out = conv2d_i8(&act, conv);
+                    stitch(&mut act, &mut hw, &mut channels, &mut pending_expand1, spec, out)?;
+                }
+                LayerKind::MaxPool { .. } => {
+                    let (out, hw_out) = maxpool_hwc(&act, hw, channels);
+                    act = out;
+                    hw = hw_out;
+                }
+                LayerKind::GlobalAvgPool { .. } => {
+                    // Accumulate in i32, dequantize once.
+                    let denom = (hw * hw) as f32;
+                    let mut sums = vec![0i32; channels];
+                    for p in 0..hw * hw {
+                        for (s, v) in sums.iter_mut().zip(&act[p * channels..(p + 1) * channels]) {
+                            *s += *v as i32;
+                        }
+                    }
+                    logits = Some(
+                        sums.iter().map(|&s| s as f32 * self.logit_scale / denom).collect(),
+                    );
+                }
+                LayerKind::Softmax { .. } => {}
+            }
+            on_layer(layer.macro_layer, t0.elapsed().as_secs_f64() * 1e3);
+        }
+        logits.context("network produced no logits")
+    }
+
+    /// Input activation scale (exposed for the error-bound docs/tests).
+    pub fn input_scale(&self) -> f32 {
+        self.input_scale
+    }
+
+    /// Logit dequantization scale.
+    pub fn logit_scale(&self) -> f32 {
+        self.logit_scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convnet::network::{run_squeezenet, ConvImpl};
+    use crate::util::rng::Rng;
+    use std::collections::HashMap as Map;
+
+    const HW: usize = 56;
+
+    fn fixture(seed: u64) -> (SqueezeNet, WeightStore, Vec<f32>) {
+        let net = SqueezeNet::with_input(HW);
+        let weights = WeightStore::synthetic(&net, seed);
+        let image = Rng::new(seed ^ 0x1AB_C0DE).vec_f32(HW * HW * 3, 0.0, 1.0);
+        (net, weights, image)
+    }
+
+    #[test]
+    fn fp32_packed_matches_the_vectorized_reference() {
+        let (net, weights, image) = fixture(42);
+        let fast = Fp32SqueezeNet::prepare(&net, &weights).unwrap();
+        let got = fast.infer(&image).unwrap();
+        let reference = run_squeezenet(
+            &net,
+            &weights,
+            &image,
+            &ConvImpl::Vectorized { plan: Map::new(), parallel: false },
+        )
+        .unwrap();
+        assert_eq!(got.len(), reference.logits.len());
+        let max_diff = got
+            .iter()
+            .zip(&reference.logits)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-3, "packed fp32 diverged from reference: {max_diff}");
+    }
+
+    #[test]
+    fn int8_agrees_with_fp32_within_quantization_tolerance() {
+        // The satellite accuracy contract: on fixed seeds, the int8
+        // logits track the fp32 logits to within the accumulated
+        // per-layer quantization error.  Bounds verified numerically
+        // against an independent port of this quantization scheme.
+        for seed in [42u64, 7, 1234] {
+            let (net, weights, image) = fixture(seed);
+            let fp32 = Fp32SqueezeNet::prepare(&net, &weights).unwrap();
+            let q = QuantizedSqueezeNet::prepare(&net, &weights, &image).unwrap();
+            let a = fp32.infer(&image).unwrap();
+            let b = q.infer(&image).unwrap();
+            assert_eq!(a.len(), b.len());
+            let dot: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let cosine = dot / (na * nb).max(f32::MIN_POSITIVE);
+            let rel_l2 = a
+                .iter()
+                .zip(&b)
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum::<f32>()
+                .sqrt()
+                / na.max(f32::MIN_POSITIVE);
+            assert!(cosine > 0.99, "seed {seed}: cosine {cosine}");
+            assert!(rel_l2 < 0.15, "seed {seed}: relative L2 error {rel_l2}");
+        }
+    }
+
+    #[test]
+    fn int8_inference_is_deterministic_across_runs() {
+        // Parallel row chunks must not change a single output value.
+        let (net, weights, image) = fixture(42);
+        let q = QuantizedSqueezeNet::prepare(&net, &weights, &image).unwrap();
+        let a = q.infer(&image).unwrap();
+        let b = q.infer(&image).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn int8_timed_covers_every_macro_layer() {
+        let (net, weights, image) = fixture(42);
+        let q = QuantizedSqueezeNet::prepare(&net, &weights, &image).unwrap();
+        let (logits, timings) = q.infer_timed(&image).unwrap();
+        assert_eq!(logits, q.infer(&image).unwrap(), "timing must not change the math");
+        assert_eq!(timings.len(), 11);
+        assert_eq!(timings[0].layer, MacroLayer::Conv1);
+        assert_eq!(timings[9].layer, MacroLayer::Conv10);
+        assert_eq!(timings[10].layer, MacroLayer::Head);
+        for t in &timings {
+            assert!(t.ms >= 0.0 && t.ms.is_finite(), "{:?}", t.layer);
+        }
+    }
+
+    #[test]
+    fn degenerate_calibration_image_still_produces_finite_logits() {
+        // An all-zero calibration image drives every activation range
+        // to the MIN_RANGE guard; the network must stay finite.
+        let (net, weights, _) = fixture(42);
+        let zeros = vec![0.0f32; HW * HW * 3];
+        let q = QuantizedSqueezeNet::prepare(&net, &weights, &zeros).unwrap();
+        let logits = q.infer(&zeros).unwrap();
+        assert_eq!(logits.len(), 1000);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert!(q.input_scale() > 0.0 && q.logit_scale() > 0.0);
+    }
+
+    #[test]
+    fn expand_pair_shares_one_output_scale() {
+        // The fire concat is only well-defined in i8 if both expand
+        // outputs live on the same scale.
+        let (net, weights, image) = fixture(42);
+        let q = QuantizedSqueezeNet::prepare(&net, &weights, &image).unwrap();
+        for fire in 2..=9 {
+            let e1 = &q.convs[&format!("fire{fire}_expand1")];
+            let e3 = &q.convs[&format!("fire{fire}_expand3")];
+            assert_eq!(e1.s_out, e3.s_out, "fire{fire} expand pair scales differ");
+            // ...and the next squeeze requantizes *from* that shared
+            // scale: s_in embedded in m equals the pair's s_out.
+            if fire < 9 {
+                let next = &q.convs[&format!("fire{}_squeeze", fire + 1)];
+                let s_w = {
+                    let w = weights.get(&format!("fire{}_squeeze_w", fire + 1)).unwrap();
+                    scale_for(w.data.iter().fold(0.0f32, |m, &v| m.max(v.abs())))
+                };
+                let s_in = next.m * next.s_out / s_w;
+                assert!(
+                    (s_in - e1.s_out).abs() < 1e-9 * e1.s_out.max(1.0),
+                    "fire{}_squeeze s_in {} != fire{fire} expand s_out {}",
+                    fire + 1,
+                    s_in,
+                    e1.s_out
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_image_size() {
+        let (net, weights, image) = fixture(42);
+        let fp32 = Fp32SqueezeNet::prepare(&net, &weights).unwrap();
+        assert!(fp32.infer(&[0.0; 10]).is_err());
+        let q = QuantizedSqueezeNet::prepare(&net, &weights, &image).unwrap();
+        assert!(q.infer(&[0.0; 10]).is_err());
+    }
+}

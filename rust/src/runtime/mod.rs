@@ -12,14 +12,22 @@
 //!   HLO-text artifacts produced by `python/compile/aot.py` and
 //!   executes them on the CPU PJRT client.  Requires an XLA/PJRT
 //!   crate the workspace does not vendor, so it is opt-in.
+//!
+//! `kernels` holds the native fast path: packed, cache-blocked fp32
+//! convolution ([`Fp32SqueezeNet`]) and the CMSIS-NN-style quantized
+//! int8 network ([`QuantizedSqueezeNet`]) that native fleet replicas
+//! execute for `int8` batches.  `calibrate` fits per-precision host
+//! `DeviceProfile`s from both paths' measured per-layer times.
 
 pub mod artifacts;
 pub mod calibrate;
 pub mod cpu;
 #[cfg(feature = "xla")]
 pub mod executor;
+pub mod kernels;
 
 pub use artifacts::{ArtifactInfo, Manifest, ModelArtifact, ModelCatalog, ModelId};
+pub use kernels::{Fp32SqueezeNet, QuantizedSqueezeNet};
 
 #[cfg(feature = "xla")]
 pub use executor::{KernelExecutor, ModelExecutor, RuntimeEngine};

@@ -32,6 +32,7 @@ impl RunMode {
             RunMode::Sequential => "Sequential",
             RunMode::Parallel(Precision::Precise) => "Precise Parallel",
             RunMode::Parallel(Precision::Imprecise) => "Imprecise Parallel",
+            RunMode::Parallel(Precision::Int8) => "Int8 Parallel",
         }
     }
 }
@@ -65,6 +66,17 @@ fn cin_padded(cin: usize) -> f64 {
     (cin.div_ceil(4) * 4) as f64
 }
 
+/// Bytes per activation/weight element in a precision tier: fp32 and
+/// fp16 both move 4-byte storage (the relaxed mode changes ALU paths,
+/// not the allocation format), while the quantized tier stores i8 —
+/// a 4× cut in memory traffic, the second half of the CMSIS-NN win.
+pub fn element_bytes(precision: Precision) -> f64 {
+    match precision {
+        Precision::Precise | Precision::Imprecise => 4.0,
+        Precision::Int8 => 1.0,
+    }
+}
+
 /// Price one convolutional layer on the GPU at granularity `g`.
 pub fn conv_gpu_time(spec: &ConvSpec, g: usize, precision: Precision, gpu: &GpuModel) -> LayerTime {
     assert!(spec.cout % g == 0, "invalid granularity {g} for {}", spec.name);
@@ -86,12 +98,13 @@ pub fn conv_gpu_time(spec: &ConvSpec, g: usize, precision: Precision, gpu: &GpuM
     // times; adjacent threads' windows overlap spatially, absorbed by
     // the texture cache up to (K/S)².
     let tex_reuse = ((spec.k as f64 / spec.stride as f64).powi(2)).clamp(1.0, gpu.tex_cache_cap);
-    let input_bytes = threads * k2 * cin_padded(spec.cin) * 4.0 / tex_reuse;
+    let el_bytes = element_bytes(precision);
+    let input_bytes = threads * k2 * cin_padded(spec.cin) * el_bytes / tex_reuse;
     // Weights: g filter vectors per window position per thread; a wave's
     // threads share the same filters (same output-layer group).
     let weight_bytes =
-        threads * g as f64 * k2 * cin_padded(spec.cin) * 4.0 / gpu.weight_cache_reuse;
-    let output_bytes = spec.cout as f64 * spatial * 4.0;
+        threads * g as f64 * k2 * cin_padded(spec.cin) * el_bytes / gpu.weight_cache_reuse;
+    let output_bytes = spec.cout as f64 * spatial * el_bytes;
     let memory_ms = (input_bytes + weight_bytes + output_bytes) / (gpu.mem_bw_gb_s * 1e9) * 1e3;
 
     // ---- dispatch ----
@@ -121,8 +134,8 @@ pub fn aux_layer_time(kind: &LayerKind, mode: RunMode, device: &DeviceProfile) -
         RunMode::Sequential => {
             elements * ops_per_el * device.cpu.cycles_per_mac / (device.cpu.clock_ghz * 1e9) * 1e3
         }
-        RunMode::Parallel(_) => {
-            let bytes = elements * ops_per_el * 4.0;
+        RunMode::Parallel(precision) => {
+            let bytes = elements * ops_per_el * element_bytes(precision);
             bytes / (device.gpu.mem_bw_gb_s * 1e9) * 1e3 + device.gpu.kernel_launch_us / 1e3
         }
     }
@@ -279,13 +292,34 @@ mod tests {
     }
 
     #[test]
+    fn int8_is_faster_than_imprecise_on_compute_and_memory() {
+        // The quantized tier wins on both roofline axes: fewer issue
+        // cycles per dot AND a quarter of the bytes moved.
+        let spec = fire_expand_layer();
+        for device in DeviceProfile::all() {
+            let i = conv_gpu_time(&spec, 4, Precision::Imprecise, &device.gpu);
+            let q = conv_gpu_time(&spec, 4, Precision::Int8, &device.gpu);
+            assert!(q.compute_ms < i.compute_ms, "{}", device.name);
+            assert!(q.memory_ms < i.memory_ms, "{}", device.name);
+            assert!(q.total_ms() < i.total_ms(), "{}", device.name);
+        }
+    }
+
+    #[test]
+    fn element_bytes_per_tier() {
+        assert_eq!(element_bytes(Precision::Precise), 4.0);
+        assert_eq!(element_bytes(Precision::Imprecise), 4.0);
+        assert_eq!(element_bytes(Precision::Int8), 1.0);
+    }
+
+    #[test]
     fn dispatch_overhead_splits_cleanly_from_marginal_cost() {
         // overhead + marginal must reconstruct the single-image dispatch
         // cost (network_time + host setup), and a batch of b images must
         // be strictly cheaper than b single-image dispatches.
         let net = SqueezeNet::v1_0();
         for device in DeviceProfile::all() {
-            for precision in [Precision::Precise, Precision::Imprecise] {
+            for precision in Precision::all() {
                 let mode = RunMode::Parallel(precision);
                 let plan = super::super::autotune::autotune_network(&net, precision, &device);
                 let g = |spec: &ConvSpec| plan.optimal_g(&spec.name);

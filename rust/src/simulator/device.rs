@@ -21,7 +21,7 @@ use anyhow::{Context, Result};
 
 use crate::util::json::Json;
 
-/// Floating-point execution mode (§IV-B).
+/// Execution precision tier (§IV-B plus the quantized tier).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Precision {
     /// Strict IEEE-754 single precision.
@@ -29,6 +29,11 @@ pub enum Precision {
     /// RenderScript relaxed/imprecise mode: flush-to-zero, round toward
     /// zero, vendor SIMD fast paths enabled.
     Imprecise,
+    /// Quantized int8 execution (symmetric per-layer quantization, i32
+    /// accumulators, requantize at layer boundaries — the CMSIS-NN
+    /// recipe).  Fastest and cheapest tier; the bottom of the degrade
+    /// chain.
+    Int8,
 }
 
 impl Precision {
@@ -36,7 +41,31 @@ impl Precision {
         match self {
             Precision::Precise => "precise",
             Precision::Imprecise => "imprecise",
+            Precision::Int8 => "int8",
         }
+    }
+
+    /// Every tier, fastest-math last (the degrade chain's order).
+    pub fn all() -> [Precision; 3] {
+        [Precision::Precise, Precision::Imprecise, Precision::Int8]
+    }
+
+    /// One step down the fp32 → fp16 → int8 degrade chain; saturates
+    /// at [`Precision::Int8`].
+    pub fn degrade_once(self) -> Precision {
+        match self {
+            Precision::Precise => Precision::Imprecise,
+            Precision::Imprecise | Precision::Int8 => Precision::Int8,
+        }
+    }
+
+    /// `steps` applications of [`degrade_once`](Self::degrade_once).
+    pub fn degrade_by(self, steps: u8) -> Precision {
+        let mut p = self;
+        for _ in 0..steps {
+            p = p.degrade_once();
+        }
+        p
     }
 }
 
@@ -51,6 +80,9 @@ pub struct GpuModel {
     pub dot_cycles_precise: f64,
     /// Issue cycles per float4 dot with relaxed-FP SIMD fast paths.
     pub dot_cycles_imprecise: f64,
+    /// Issue cycles per 4-wide int8 dot (widening multiply into i32
+    /// accumulators — the quantized tier's inner loop).
+    pub dot_cycles_int8: f64,
     /// Fixed per-thread cycles: Eq. 7–9 index math, loop setup.
     pub thread_setup_cycles: f64,
     /// Threads that must be in flight to hide memory latency; below
@@ -88,6 +120,7 @@ impl GpuModel {
         match precision {
             Precision::Precise => self.dot_cycles_precise,
             Precision::Imprecise => self.dot_cycles_imprecise,
+            Precision::Int8 => self.dot_cycles_int8,
         }
     }
 
@@ -138,6 +171,11 @@ pub struct PowerModel {
     /// Differential power of the imprecise parallel run (GPU SIMD paths
     /// lit up — the highest instantaneous draw).
     pub imprecise_par_diff_mw: f64,
+    /// Differential power of the quantized int8 parallel run.  Its
+    /// instantaneous draw sits between the precise and imprecise rails;
+    /// the energy win comes from the shorter run, not a lower rail
+    /// (the CMSIS-NN observation).
+    pub int8_par_diff_mw: f64,
 }
 
 /// A complete simulated device (one row of Table II).
@@ -167,6 +205,7 @@ impl DeviceProfile {
                 vec4_units: 64.0,
                 dot_cycles_precise: 66.0,
                 dot_cycles_imprecise: 31.0,
+                dot_cycles_int8: 12.0,
                 thread_setup_cycles: 1100.0,
                 latency_hiding_threads: 3072.0,
                 full_occupancy_g: 6.0,
@@ -185,6 +224,7 @@ impl DeviceProfile {
                 seq_diff_mw: 1379.33,
                 precise_par_diff_mw: 2350.0,
                 imprecise_par_diff_mw: 2748.61,
+                int8_par_diff_mw: 2550.0,
             },
         }
     }
@@ -201,6 +241,7 @@ impl DeviceProfile {
                 vec4_units: 48.0,
                 dot_cycles_precise: 45.0,
                 dot_cycles_imprecise: 15.0,
+                dot_cycles_int8: 7.0,
                 thread_setup_cycles: 1200.0,
                 latency_hiding_threads: 2304.0,
                 full_occupancy_g: 4.0,
@@ -219,6 +260,7 @@ impl DeviceProfile {
                 seq_diff_mw: 518.15,
                 precise_par_diff_mw: 3100.0,
                 imprecise_par_diff_mw: 3980.92,
+                int8_par_diff_mw: 3550.0,
             },
         }
     }
@@ -235,6 +277,7 @@ impl DeviceProfile {
                 vec4_units: 32.0,
                 dot_cycles_precise: 33.0,
                 dot_cycles_imprecise: 8.0,
+                dot_cycles_int8: 4.0,
                 thread_setup_cycles: 1400.0,
                 latency_hiding_threads: 1536.0,
                 full_occupancy_g: 12.0,
@@ -253,6 +296,7 @@ impl DeviceProfile {
                 seq_diff_mw: 600.29,
                 precise_par_diff_mw: 700.0,
                 imprecise_par_diff_mw: 747.74,
+                int8_par_diff_mw: 720.0,
             },
         }
     }
@@ -274,8 +318,12 @@ impl DeviceProfile {
                 clock_ghz: 3.0,
                 vec4_units: 32.0,
                 dot_cycles_precise: 8.0,
-                // no fp16 rail on the host: both modes run f32 math
+                // no fp16 rail on the host: both fp modes run f32 math
                 dot_cycles_imprecise: 8.0,
+                // the host *does* have a real int8 rail: the quantized
+                // kernels in `runtime::kernels` (i8 weights, i32
+                // accumulators) genuinely run faster than f32
+                dot_cycles_int8: 4.0,
                 thread_setup_cycles: 400.0,
                 latency_hiding_threads: 64.0,
                 full_occupancy_g: 8.0,
@@ -295,6 +343,7 @@ impl DeviceProfile {
                 seq_diff_mw: 6000.0,
                 precise_par_diff_mw: 13_500.0,
                 imprecise_par_diff_mw: 13_500.0,
+                int8_par_diff_mw: 13_500.0,
             },
         }
     }
@@ -339,6 +388,7 @@ impl DeviceProfile {
                     ("vec4_units", Json::num(g.vec4_units)),
                     ("dot_cycles_precise", Json::num(g.dot_cycles_precise)),
                     ("dot_cycles_imprecise", Json::num(g.dot_cycles_imprecise)),
+                    ("dot_cycles_int8", Json::num(g.dot_cycles_int8)),
                     ("thread_setup_cycles", Json::num(g.thread_setup_cycles)),
                     ("latency_hiding_threads", Json::num(g.latency_hiding_threads)),
                     ("full_occupancy_g", Json::num(g.full_occupancy_g)),
@@ -366,6 +416,7 @@ impl DeviceProfile {
                     ("seq_diff_mw", Json::num(self.power.seq_diff_mw)),
                     ("precise_par_diff_mw", Json::num(self.power.precise_par_diff_mw)),
                     ("imprecise_par_diff_mw", Json::num(self.power.imprecise_par_diff_mw)),
+                    ("int8_par_diff_mw", Json::num(self.power.int8_par_diff_mw)),
                 ]),
             ),
         ])
@@ -395,9 +446,22 @@ impl DeviceProfile {
             }
             Ok(n)
         }
+        /// Optional number with a derived default: the int8 keys were
+        /// added after profiles started circulating, so a pre-int8
+        /// profile (no `dot_cycles_int8` / `int8_par_diff_mw`) still
+        /// loads, with the int8 tier derived from its fp16 fields (see
+        /// the schema table in `rust/docs/NATIVE_REPLICAS.md`).
+        fn num_or(v: &Json, section: &str, key: &str, default: f64) -> Result<f64> {
+            match v.get(key) {
+                None => Ok(default),
+                Some(_) => num(v, section, key),
+            }
+        }
         let g = v.get("gpu").context("device profile: missing 'gpu'")?;
         let c = v.get("cpu").context("device profile: missing 'cpu'")?;
         let p = v.get("power").context("device profile: missing 'power'")?;
+        let imprecise_dot = num(g, "gpu", "dot_cycles_imprecise")?;
+        let imprecise_mw = num(p, "power", "imprecise_par_diff_mw")?;
         Ok(DeviceProfile {
             name: intern(v, "name")?,
             id: intern(v, "id")?,
@@ -407,7 +471,8 @@ impl DeviceProfile {
                 clock_ghz: num(g, "gpu", "clock_ghz")?,
                 vec4_units: num(g, "gpu", "vec4_units")?,
                 dot_cycles_precise: num(g, "gpu", "dot_cycles_precise")?,
-                dot_cycles_imprecise: num(g, "gpu", "dot_cycles_imprecise")?,
+                dot_cycles_imprecise: imprecise_dot,
+                dot_cycles_int8: num_or(g, "gpu", "dot_cycles_int8", imprecise_dot / 2.0)?,
                 thread_setup_cycles: num(g, "gpu", "thread_setup_cycles")?,
                 latency_hiding_threads: num(g, "gpu", "latency_hiding_threads")?,
                 full_occupancy_g: num(g, "gpu", "full_occupancy_g")?,
@@ -428,7 +493,8 @@ impl DeviceProfile {
                 baseline_mw: num(p, "power", "baseline_mw")?,
                 seq_diff_mw: num(p, "power", "seq_diff_mw")?,
                 precise_par_diff_mw: num(p, "power", "precise_par_diff_mw")?,
-                imprecise_par_diff_mw: num(p, "power", "imprecise_par_diff_mw")?,
+                imprecise_par_diff_mw: imprecise_mw,
+                int8_par_diff_mw: num_or(p, "power", "int8_par_diff_mw", imprecise_mw)?,
             },
         })
     }
@@ -478,7 +544,28 @@ mod tests {
             assert_eq!(back.gpu.dispatch_setup_ms, d.gpu.dispatch_setup_ms);
             assert_eq!(back.cpu.cycles_per_mac, d.cpu.cycles_per_mac);
             assert_eq!(back.power.imprecise_par_diff_mw, d.power.imprecise_par_diff_mw);
+            assert_eq!(back.gpu.dot_cycles_int8, d.gpu.dot_cycles_int8);
+            assert_eq!(back.power.int8_par_diff_mw, d.power.int8_par_diff_mw);
         }
+    }
+
+    #[test]
+    fn pre_int8_profiles_load_with_derived_defaults() {
+        // A profile emitted before the int8 tier existed has neither
+        // `gpu.dot_cycles_int8` nor `power.int8_par_diff_mw`; it must
+        // still parse, with the int8 tier derived from its fp16 fields.
+        let mut j = DeviceProfile::galaxy_s7().to_json();
+        if let Json::Object(pairs) = &mut j {
+            for (k, v) in pairs.iter_mut() {
+                if let (true, Json::Object(inner)) = (k == "gpu" || k == "power", &mut *v) {
+                    inner.retain(|(ik, _)| ik != "dot_cycles_int8" && ik != "int8_par_diff_mw");
+                }
+            }
+        }
+        let back = DeviceProfile::from_json(&j).unwrap();
+        let s7 = DeviceProfile::galaxy_s7();
+        assert_eq!(back.gpu.dot_cycles_int8, s7.gpu.dot_cycles_imprecise / 2.0);
+        assert_eq!(back.power.int8_par_diff_mw, s7.power.imprecise_par_diff_mw);
     }
 
     #[test]
@@ -517,9 +604,11 @@ mod tests {
         let h = DeviceProfile::host();
         assert_eq!(h.id, "host");
         assert!(DeviceProfile::all().iter().all(|d| d.id != "host"));
-        // no fp16 rail: both precision modes cost the same per dot
+        // no fp16 rail: both fp precision modes cost the same per dot
         assert_eq!(h.gpu.dot_cycles_precise, h.gpu.dot_cycles_imprecise);
         assert_eq!(h.power.precise_par_diff_mw, h.power.imprecise_par_diff_mw);
+        // ...but the int8 rail is real (quantized host kernels)
+        assert!(h.gpu.dot_cycles_int8 < h.gpu.dot_cycles_precise);
     }
 
     #[test]
@@ -527,6 +616,29 @@ mod tests {
         for d in DeviceProfile::all() {
             assert!(d.gpu.dot_cycles_imprecise < d.gpu.dot_cycles_precise, "{}", d.name);
         }
+    }
+
+    #[test]
+    fn int8_is_the_fastest_and_coolest_tier_everywhere() {
+        for d in DeviceProfile::all() {
+            assert!(d.gpu.dot_cycles_int8 < d.gpu.dot_cycles_imprecise, "{}", d.name);
+            assert!(
+                d.power.int8_par_diff_mw <= d.power.imprecise_par_diff_mw,
+                "{}: the int8 rail must not out-draw the fp16 SIMD rail",
+                d.name
+            );
+        }
+    }
+
+    #[test]
+    fn degrade_chain_steps_and_saturates() {
+        assert_eq!(Precision::Precise.degrade_once(), Precision::Imprecise);
+        assert_eq!(Precision::Imprecise.degrade_once(), Precision::Int8);
+        assert_eq!(Precision::Int8.degrade_once(), Precision::Int8);
+        assert_eq!(Precision::Precise.degrade_by(0), Precision::Precise);
+        assert_eq!(Precision::Precise.degrade_by(2), Precision::Int8);
+        assert_eq!(Precision::Precise.degrade_by(200), Precision::Int8);
+        assert_eq!(Precision::all().map(|p| p.label()), ["precise", "imprecise", "int8"]);
     }
 
     #[test]

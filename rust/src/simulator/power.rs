@@ -22,6 +22,7 @@ pub fn run_power(device: &DeviceProfile, mode: RunMode) -> RunPower {
         RunMode::Sequential => device.power.seq_diff_mw,
         RunMode::Parallel(Precision::Precise) => device.power.precise_par_diff_mw,
         RunMode::Parallel(Precision::Imprecise) => device.power.imprecise_par_diff_mw,
+        RunMode::Parallel(Precision::Int8) => device.power.int8_par_diff_mw,
     };
     RunPower {
         baseline_mw: device.power.baseline_mw,
@@ -61,6 +62,7 @@ mod tests {
                 RunMode::Sequential,
                 RunMode::Parallel(Precision::Precise),
                 RunMode::Parallel(Precision::Imprecise),
+                RunMode::Parallel(Precision::Int8),
             ] {
                 let p = run_power(&d, mode);
                 assert!((p.total_mw - p.baseline_mw - p.differential_mw).abs() < 1e-9);
@@ -83,6 +85,23 @@ mod tests {
         let e1 = energy_joules(&d, RunMode::Sequential, 1000.0);
         let e2 = energy_joules(&d, RunMode::Sequential, 2000.0);
         assert!((e2 - 2.0 * e1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn int8_beats_imprecise_on_energy_per_inference() {
+        // The degrade chain's last step must actually save joules:
+        // int8's shorter run times the no-hotter rail.
+        let net = SqueezeNet::v1_0();
+        for d in DeviceProfile::all() {
+            let plan = autotune_network(&net, Precision::Int8, &d);
+            let g = |spec: &crate::model::graph::ConvSpec| plan.optimal_g(&spec.name);
+            let t_imp = network_time(&net, RunMode::Parallel(Precision::Imprecise), &d, &g);
+            let t_q = network_time(&net, RunMode::Parallel(Precision::Int8), &d, &g);
+            let e_imp = energy_joules(&d, RunMode::Parallel(Precision::Imprecise), t_imp);
+            let e_q = energy_joules(&d, RunMode::Parallel(Precision::Int8), t_q);
+            assert!(t_q < t_imp, "{}: int8 {t_q:.1} ms vs fp16 {t_imp:.1} ms", d.name);
+            assert!(e_q < e_imp, "{}: int8 {e_q:.3} J vs fp16 {e_imp:.3} J", d.name);
+        }
     }
 
     #[test]
